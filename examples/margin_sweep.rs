@@ -1,0 +1,37 @@
+//! Fig. 12 reproduction: sweep the SLO margin factors and show the smooth
+//! energy–latency tradeoff (§5.3) — tighter margins burn energy for
+//! latency, looser margins save energy while drifting toward the deadline.
+//!
+//! Run: `cargo run --release --example margin_sweep`
+
+use greenllm::bench::figures::{fig12a, fig12b};
+
+fn main() {
+    let duration = 240.0;
+    let a = fig12a(duration, 42);
+    let b = fig12b(duration, 42);
+
+    // Sanity narrative: energy should fall (weakly) as margins loosen.
+    let first = &a[0];
+    let last = &a[a.len() - 1];
+    println!(
+        "prefill: margin {:.2} -> {:.2}: energy {:.1} -> {:.1} kJ, P90 TTFT {:.0} -> {:.0} ms",
+        first.margin,
+        last.margin,
+        first.energy_j / 1e3,
+        last.energy_j / 1e3,
+        first.p90_ms,
+        last.p90_ms
+    );
+    let first = &b[0];
+    let last = &b[b.len() - 1];
+    println!(
+        "decode:  margin {:.2} -> {:.2}: energy {:.1} -> {:.1} kJ, P90 TBT {:.1} -> {:.1} ms",
+        first.margin,
+        last.margin,
+        first.energy_j / 1e3,
+        last.energy_j / 1e3,
+        first.p90_ms,
+        last.p90_ms
+    );
+}

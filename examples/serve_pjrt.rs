@@ -1,0 +1,97 @@
+//! End-to-end REAL serving driver (the DESIGN.md §4 validation run).
+//!
+//! Loads the AOT-compiled TinyLM artifacts through the PJRT CPU client and
+//! serves a batch of real prompts through the full stack — tokenize →
+//! length-batch → prefill (Pallas flash-attention kernel, lowered to HLO)
+//! → KV cache → batched decode (Pallas decode kernel) → detokenize —
+//! reporting latency and throughput percentiles. Python is not involved;
+//! the artifacts were built once by `make artifacts`.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_pjrt`
+
+use greenllm::server::{ServerConfig, ServerHandle};
+use std::time::Instant;
+
+const PROMPTS: &[&str] = &[
+    "How do I reduce GPU power draw while serving an LLM?",
+    "Summarize the prefill/decode asymmetry in one sentence.",
+    "Why is decode memory-bound on modern accelerators?",
+    "Explain dynamic voltage and frequency scaling briefly.",
+    "What is head-of-line blocking in request queues?",
+    "Give me a haiku about energy-efficient inference.",
+    "What does TTFT measure and why do users care?",
+    "When should a governor lower the SM clock?",
+    "Describe a dual-loop feedback controller.",
+    "What is a service-level objective?",
+    "How does continuous batching improve utilization?",
+    "Name one way to exploit SLO slack for energy.",
+    "What happens past the energy knee frequency?",
+    "Why pin memory clocks during SM frequency sweeps?",
+    "How large is a KV cache per token, roughly?",
+    "What makes long prompts expensive in prefill?",
+];
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    println!("loading + compiling artifacts from {dir}/ (PJRT CPU)...");
+    let t_load = Instant::now();
+    let server = ServerHandle::start(ServerConfig {
+        artifacts_dir: dir.into(),
+        ..Default::default()
+    })?;
+    println!("engine ready in {:.2}s\n", t_load.elapsed().as_secs_f64());
+
+    let max_new = 24;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = PROMPTS.iter().map(|p| server.submit(p, max_new)).collect();
+
+    let mut ttfts = Vec::new();
+    let mut tbts = Vec::new();
+    let mut total_tokens = 0usize;
+    for rx in rxs {
+        let c = rx.recv()?;
+        total_tokens += c.tokens.len();
+        ttfts.push(c.ttft_s * 1e3);
+        tbts.extend(c.tbts.iter().map(|t| t * 1e3));
+        let preview: String = c.prompt.chars().take(44).collect();
+        println!(
+            "  #{:<3} ttft {:7.1} ms | {} tok | {preview}",
+            c.id,
+            c.ttft_s * 1e3,
+            c.tokens.len()
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    tbts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |v: &[f64], q: f64| v[((q * v.len() as f64) as usize).min(v.len() - 1)];
+    println!(
+        "\nserved {} requests / {} tokens in {:.2}s  →  {:.0} tok/s",
+        PROMPTS.len(),
+        total_tokens,
+        wall,
+        total_tokens as f64 / wall
+    );
+    println!(
+        "TTFT  p50 {:7.1} ms   p90 {:7.1} ms   max {:7.1} ms",
+        pct(&ttfts, 0.50),
+        pct(&ttfts, 0.90),
+        ttfts.last().unwrap()
+    );
+    println!(
+        "TBT   p50 {:7.2} ms   p95 {:7.2} ms   max {:7.2} ms",
+        pct(&tbts, 0.50),
+        pct(&tbts, 0.95),
+        tbts.last().unwrap()
+    );
+    let stats = server.shutdown()?;
+    println!(
+        "batches {} | batched requests {} | mean batch {:.2}",
+        stats.batches,
+        stats.batched_requests,
+        stats.batched_requests as f64 / stats.batches.max(1) as f64
+    );
+    println!("\n(all three layers composed: Pallas kernels → JAX model → HLO → PJRT → Rust coordinator)");
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Fig. 1 reproduction: drive decoding with a sinusoidal TPS target and
+//! dump a CSV of (time, decode TPS, defaultNV clock, GreenLLM clock) —
+//! defaultNV sits in a narrow high band while GreenLLM tracks demand.
+//!
+//! Run: `cargo run --release --example sinusoid_tracking > fig1.csv`
+
+use greenllm::bench::figures::fig1;
+
+fn main() {
+    let out = fig1(360.0, 42);
+    eprintln!("--- CSV on stdout ---");
+    println!("t_s,decode_tps,defaultnv_mhz,greenllm_mhz");
+    let n = out.series[0].1.len().min(out.series[1].1.len());
+    for i in 0..n {
+        let (t, tps, f_nv) = out.series[0].1[i];
+        let (_, _, f_g) = out.series[1].1[i];
+        println!("{t:.1},{tps:.0},{f_nv},{f_g}");
+    }
+}

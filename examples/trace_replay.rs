@@ -1,0 +1,29 @@
+//! Replay one production-style trace under all three methods and print a
+//! Table-3-style comparison row.
+//!
+//! Run: `cargo run --release --example trace_replay [-- qps]`
+
+use greenllm::bench::{compare_methods, tables::render_rows};
+use greenllm::workload::alibaba::{generate, ChatParams};
+
+fn main() {
+    let qps: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5.0);
+    let trace = generate(&ChatParams::new(qps, 300.0), 42);
+    println!(
+        "trace {}: {} requests over {:.0}s ({:.0} decode tok/s demand)\n",
+        trace.name,
+        trace.requests.len(),
+        trace.duration_s,
+        trace.decode_tps()
+    );
+    let rows = compare_methods("qwen3-14b", &trace, 42);
+    render_rows(&format!("Table-3 row: {}", trace.name), &rows);
+    let green = &rows[2];
+    println!(
+        "GreenLLM: {:.1}% total energy saving, decode at {:.3}x defaultNV",
+        green.delta_energy_pct, green.rel_decode
+    );
+}

@@ -1,0 +1,146 @@
+"""AOT export: lower TinyLM prefill/decode to HLO *text* artifacts.
+
+Build-time only — Python never runs on the request path. The Rust runtime
+(`rust/src/runtime`) loads these artifacts via `HloModuleProto::from_text_file`
+on the PJRT CPU client.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly.
+
+Outputs (under --out, default ../artifacts):
+  prefill_s{S}.hlo.txt     one per prefill sequence bucket
+  decode_step.hlo.txt      single-token decode step
+  params.bin               f32 little-endian, concatenated in ABI order
+  manifest.json            config, param table, buckets, test vectors
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, decode_step, init_params, prefill, reference_generate
+
+# Prefill sequence-length buckets: requests are padded up to the nearest
+# bucket by the Rust batcher (mirrors production serving engines that
+# compile one executable per shape bucket).
+PREFILL_BUCKETS = (16, 32, 64)
+BATCH = 4  # static batch per executable; the batcher packs/pads to this
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir: str, cfg: ModelConfig, seed: int = 0) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    params = init_params(cfg, seed=seed)
+    specs = cfg.param_specs()
+
+    # --- params.bin: flat f32 LE in ABI order -------------------------------
+    flat = np.concatenate([np.asarray(p, np.float32).reshape(-1) for p in params])
+    params_path = os.path.join(out_dir, "params.bin")
+    flat.astype("<f4").tofile(params_path)
+    params_sha = hashlib.sha256(flat.astype("<f4").tobytes()).hexdigest()
+
+    param_specs = [
+        {"name": name, "shape": list(shape)} for (name, shape) in specs
+    ]
+
+    files = {}
+
+    # --- prefill buckets ----------------------------------------------------
+    buckets = [s for s in PREFILL_BUCKETS if s <= cfg.max_seq]
+    pspecs = [jax.ShapeDtypeStruct(tuple(s), jnp.float32) for _, s in specs]
+    for s_len in buckets:
+        tok_spec = jax.ShapeDtypeStruct((BATCH, s_len), jnp.int32)
+
+        def fn(params, tokens, _s=s_len):
+            return prefill(params, tokens, cfg)
+
+        lowered = jax.jit(fn).lower(pspecs, tok_spec)
+        text = to_hlo_text(lowered)
+        fname = f"prefill_s{s_len}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[f"prefill_s{s_len}"] = fname
+
+    # --- decode step ---------------------------------------------------------
+    kv_spec = jax.ShapeDtypeStruct(
+        (cfg.n_layers, BATCH, cfg.n_heads, cfg.max_seq, cfg.d_head), jnp.float32
+    )
+    tok1 = jax.ShapeDtypeStruct((BATCH,), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def dfn(params, token, kc, vc, pos):
+        return decode_step(params, token, kc, vc, pos, cfg)
+
+    lowered = jax.jit(dfn).lower(pspecs, tok1, kv_spec, kv_spec, pos_spec)
+    with open(os.path.join(out_dir, "decode_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    files["decode_step"] = "decode_step.hlo.txt"
+
+    # --- test vectors for the Rust integration tests -------------------------
+    s0 = PREFILL_BUCKETS[0]
+    toks = (np.arange(BATCH * s0, dtype=np.int32).reshape(BATCH, s0) * 7 + 3) % cfg.vocab
+    logits, kc, vc = prefill(params, jnp.asarray(toks), cfg)
+    last = np.asarray(logits)[:, s0 - 1, :]
+    prompt = [int(x) for x in toks[0][: min(8, s0)]]
+    greedy = reference_generate(params, cfg, prompt, n_new=8)
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "d_head": cfg.d_head,
+            "num_params": int(flat.size),
+        },
+        "batch": BATCH,
+        "prefill_buckets": buckets,
+        "files": files,
+        "params_file": "params.bin",
+        "params_sha256": params_sha,
+        "seed": seed,
+        "test_vectors": {
+            "prefill_tokens_formula": "tokens[i] = (i*7 + 3) % vocab, row-major [B,S0]",
+            "prefill_bucket": s0,
+            "last_logits_sum": float(np.sum(last)),
+            "last_logits_absmean": float(np.mean(np.abs(last))),
+            "last_logits_row0_head": [float(x) for x in last[0, :8]],
+            "greedy_prompt": prompt,
+            "greedy_next_tokens": greedy,
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    m = export(args.out, cfg, seed=args.seed)
+    total = m["model"]["num_params"]
+    print(f"exported TinyLM ({total} params) to {args.out}: {sorted(m['files'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Layer-1 Pallas kernel: blockwise causal flash-attention (prefill).
+
+This is the compute hot-spot of the *prefill* phase — the ``C n^2`` causal
+attention term of Eq. (1) in the GreenLLM paper. Prefill is compute-bound,
+which is precisely why its energy-optimal SM clock sits high (Takeaway #1);
+the decode kernel (``decode_attn.py``) is memory-bound and sits low.
+
+TPU hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+testbed runs TensorRT fused attention on A100s. Here the same computation
+is expressed as a Pallas kernel tiled for the MXU:
+
+  * grid over (batch*heads, Q blocks): each program owns one ``[BQ, D]``
+    query tile resident in VMEM,
+  * K/V are streamed block-by-block from HBM with an online-softmax
+    running (max, sum) pair — the standard flash recurrence — so VMEM
+    holds only O(BQ*D + BK*D) at any time,
+  * the causal triangle is exploited by stopping the K loop at the last
+    block that intersects the query tile (the ``alpha ~ 1/2`` factor in
+    Eq. (1)).
+
+MUST run ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO so the whole model
+AOT-exports to something the Rust runtime can load.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One (batch*head, q-block) program: stream K/V blocks, online softmax.
+
+    Shapes as seen by the kernel (leading grid dims already sliced away):
+      q_ref: [BQ, D]   query tile for this program
+      k_ref: [S,  D]   full K for this (b, h)
+      v_ref: [S,  D]   full V for this (b, h)
+      o_ref: [BQ, D]   output tile
+    """
+    block_q, d = q_ref.shape
+    seq = k_ref.shape[0]
+    q_blk = pl.program_id(1)
+    q_start = q_blk * block_q
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    # Online-softmax state: running max m, running denom l, accumulator acc.
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    # Causal: Q rows [q_start, q_start+BQ) attend keys <= row index, so only
+    # K blocks up to and including the diagonal block contribute. This is
+    # the alpha≈1/2 triangle saving of Eq. (1).
+    num_k_blocks = (q_start + block_q + block_k - 1) // block_k
+
+    def body(kb, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_start = kb * block_k
+        k = pl.load(k_ref, (pl.dslice(k_start, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(k_start, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # [BQ, BK] — MXU tile matmul
+
+        # Causal mask within the block.
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_new = acc_prev * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_k_blocks, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+    del seq  # shape bookkeeping only
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def causal_attention(q, k, v, block_q: int = 64, block_k: int = 64):
+    """Causal flash attention over ``[B, H, S, D]`` tensors.
+
+    ``block_q``/``block_k`` are the VMEM tile sizes; on a real TPU these
+    would be 128-aligned for the MXU — defaults shrink automatically for
+    short sequences so the kernel stays exact.
+    """
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q != 0 or s % block_k != 0:
+        raise ValueError(f"seq {s} must be divisible by blocks {block_q}/{block_k}")
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    grid = (b * h, s // block_q)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, qb: (bh, qb, 0)),
+            pl.BlockSpec((None, s, d), lambda bh, qb: (bh, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda bh, qb: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, qb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,94 @@
+"""Layer-1 Pallas kernel: single-token decode attention over a KV cache.
+
+The decode phase generates one token at a time: a single query row per
+(batch, head) attends over the whole KV cache. Arithmetic intensity is
+O(1) FLOP per byte of cache streamed from HBM — this is the memory-bound
+phase whose latency saturates with SM clock (GreenLLM §2.2.2, Takeaway #2)
+and therefore wants a *lower* energy-optimal frequency than prefill.
+
+TPU adaptation: the cache is streamed HBM→VMEM in ``block_t`` chunks via
+the BlockSpec/dslice schedule; there is no MXU-shaped matmul here, just
+VPU dot-products — which is exactly the structural reason the phase is
+clock-insensitive. ``interpret=True`` as everywhere (CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_t: int, scale: float):
+    """One (batch*head,) program: q [1, D] against cache [T, D].
+
+    len_ref is a scalar-prefetch style operand: number of valid cache rows.
+    """
+    t, d = k_ref.shape
+    length = len_ref[0]
+    q = q_ref[...].astype(jnp.float32) * scale  # [1, D]
+
+    m0 = jnp.full((1,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((1,), dtype=jnp.float32)
+    acc0 = jnp.zeros((1, d), dtype=jnp.float32)
+
+    num_blocks = t // block_t
+
+    def body(tb, carry):
+        m_prev, l_prev, acc_prev = carry
+        t_start = tb * block_t
+        k = pl.load(k_ref, (pl.dslice(t_start, block_t), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(t_start, block_t), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # [1, BT]
+        cols = t_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_t), 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_new = acc_prev * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_blocks, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def decode_attention(q, k_cache, v_cache, length, block_t: int = 64):
+    """Decode attention: ``q [B,H,D]`` over ``k/v_cache [B,H,T,D]``.
+
+    ``length`` (scalar int32) masks cache rows >= length. T must be a
+    multiple of ``block_t`` (cache capacity is allocated in blocks by the
+    Rust KV-cache manager, so this holds by construction).
+    """
+    b, h, d = q.shape
+    t = k_cache.shape[2]
+    block_t = min(block_t, t)
+    while t % block_t != 0:  # shrink to the largest divisor (cache capacities
+        block_t //= 2        # are block-allocated, so this terminates fast)
+    if block_t == 0:
+        raise ValueError(f"cannot tile cache capacity {t}")
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(b * h, 1, d)
+    kf = k_cache.reshape(b * h, t, d)
+    vf = v_cache.reshape(b * h, t, d)
+    length_arr = jnp.reshape(length, (1,)).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_t=block_t, scale=scale),
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh: (0,)),
+            pl.BlockSpec((None, 1, d), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda bh: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, d), lambda bh: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, 1, d), q.dtype),
+        interpret=True,
+    )(length_arr, qf, kf, vf)
+    return out.reshape(b, h, d)

@@ -1,0 +1,52 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: the Pallas kernels in
+``attention.py`` / ``decode_attn.py`` must match these to float32
+tolerance (pytest + hypothesis sweep shapes and seeds).
+"""
+
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v, scale=None):
+    """Reference causal attention (the prefill hot-spot).
+
+    Args:
+      q, k, v: ``[B, H, S, D]`` float32.
+      scale: optional softmax scale; defaults to ``1/sqrt(D)``.
+
+    Returns:
+      ``[B, H, S, D]`` attention output.
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    seq = q.shape[2]
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    s = jnp.where(mask[None, None, :, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length, scale=None):
+    """Reference single-token decode attention (the decode hot-spot).
+
+    Args:
+      q: ``[B, H, D]`` query for the new token.
+      k_cache, v_cache: ``[B, H, T, D]`` KV cache (capacity T).
+      length: number of valid cache entries (positions >= length are masked).
+      scale: optional softmax scale.
+
+    Returns:
+      ``[B, H, D]`` attention output.
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    s = jnp.einsum("bhd,bhtd->bht", q, k_cache) * scale
+    t = k_cache.shape[2]
+    valid = jnp.arange(t) < length
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bht,bhtd->bhd", p, v_cache)

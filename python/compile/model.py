@@ -1,0 +1,197 @@
+"""Layer-2 JAX model: TinyLM, a decoder-only transformer served by the
+Rust coordinator through PJRT.
+
+The trace-scale experiments model Qwen3-14B / Qwen3-30B-MoE analytically
+(rust/src/model); TinyLM is the *real* model that proves the serving code
+path end-to-end: tokenize → route → prefill (flash kernel) → KV handoff →
+batched decode (decode kernel) → stream. Architecture mirrors Qwen3's
+block structure at toy scale: RMSNorm → causal attention → RMSNorm →
+SwiGLU FFN, learned positional embeddings, weight-tied-free LM head.
+
+Two AOT entry points (both lowered to HLO text by ``aot.py``):
+
+  prefill(params, tokens[B,S])                -> (logits[B,S,V], K, V)
+  decode_step(params, token[B], K, V, pos)    -> (logits[B,V], K', V')
+
+K/V have layout ``[L, B, H, T, Dh]`` with static capacity T; ``pos`` is the
+number of tokens already in the cache (scalar int32).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import causal_attention
+from .kernels.decode_attn import decode_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """TinyLM hyperparameters. Defaults keep artifact build fast on 1 CPU."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 256
+    max_seq: int = 160  # KV-cache capacity (prefill bucket + decode budget)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_specs(self):
+        """Ordered (name, shape) list — the AOT calling convention.
+
+        The Rust runtime feeds parameters positionally in exactly this
+        order (recorded in artifacts/manifest.json), so the order is part
+        of the ABI: append only.
+        """
+        c = self
+        specs = [
+            ("embed", (c.vocab, c.d_model)),
+            ("pos_embed", (c.max_seq, c.d_model)),
+        ]
+        for i in range(c.n_layers):
+            specs += [
+                (f"l{i}.norm1", (c.d_model,)),
+                (f"l{i}.wq", (c.d_model, c.d_model)),
+                (f"l{i}.wk", (c.d_model, c.d_model)),
+                (f"l{i}.wv", (c.d_model, c.d_model)),
+                (f"l{i}.wo", (c.d_model, c.d_model)),
+                (f"l{i}.norm2", (c.d_model,)),
+                (f"l{i}.w_gate", (c.d_model, c.d_ff)),
+                (f"l{i}.w_up", (c.d_model, c.d_ff)),
+                (f"l{i}.w_down", (c.d_ff, c.d_model)),
+            ]
+        specs += [
+            ("final_norm", (c.d_model,)),
+            ("lm_head", (c.d_model, c.vocab)),
+        ]
+        return specs
+
+    def num_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_specs())
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic init — the same seed reproduces identical artifacts."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for i, (name, shape) in enumerate(cfg.param_specs()):
+        k = jax.random.fold_in(key, i)
+        if name.endswith(("norm1", "norm2", "final_norm")):
+            p = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else cfg.d_model
+            p = jax.random.normal(k, shape, jnp.float32) * (fan_in ** -0.5)
+        params.append(p)
+    return params
+
+
+def _rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _layer_params(params, cfg, i):
+    base = 2 + i * 9
+    return params[base : base + 9]
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    """Process the whole prompt; return logits and the populated KV cache.
+
+    tokens: [B, S] int32, S <= cfg.max_seq. The KV cache is returned at
+    full static capacity T=cfg.max_seq (rows >= S are zero) so decode can
+    append in place.
+    """
+    b, s = tokens.shape
+    c = cfg
+    x = params[0][tokens] + params[1][:s][None, :, :]
+
+    ks, vs = [], []
+    for i in range(c.n_layers):
+        norm1, wq, wk, wv, wo, norm2, wg, wu, wd = _layer_params(params, c, i)
+        h = _rms_norm(x, norm1)
+        q = _split_heads(h @ wq, c.n_heads)
+        k = _split_heads(h @ wk, c.n_heads)
+        v = _split_heads(h @ wv, c.n_heads)
+        attn = causal_attention(q, k, v)  # L1 Pallas flash kernel
+        x = x + _merge_heads(attn) @ wo
+
+        h2 = _rms_norm(x, norm2)
+        x = x + (jax.nn.silu(h2 @ wg) * (h2 @ wu)) @ wd
+
+        pad = c.max_seq - s
+        ks.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        vs.append(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))))
+
+    logits = _rms_norm(x, params[-2]) @ params[-1]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(params, token, k_cache, v_cache, pos, cfg: ModelConfig):
+    """One autoregressive step for a batch of streams sharing position pos.
+
+    token: [B] int32; k/v_cache: [L, B, H, T, Dh]; pos: scalar int32 =
+    number of valid cache rows (the new token is written at index pos).
+    Returns (logits[B, V], k_cache', v_cache').
+    """
+    c = cfg
+    b = token.shape[0]
+    x = params[0][token] + jax.lax.dynamic_index_in_dim(params[1], pos, 0, keepdims=False)
+    x = x[:, None, :]  # [B, 1, D]
+
+    new_ks, new_vs = [], []
+    for i in range(c.n_layers):
+        norm1, wq, wk, wv, wo, norm2, wg, wu, wd = _layer_params(params, c, i)
+        h = _rms_norm(x, norm1)
+        q = _split_heads(h @ wq, c.n_heads)[:, :, 0, :]  # [B, H, Dh]
+        k_new = _split_heads(h @ wk, c.n_heads)[:, :, 0, :]
+        v_new = _split_heads(h @ wv, c.n_heads)[:, :, 0, :]
+
+        # Append at index pos, then attend over pos+1 valid rows.
+        k_l = jax.lax.dynamic_update_slice(
+            k_cache[i], k_new[:, :, None, :], (0, 0, pos, 0)
+        )
+        v_l = jax.lax.dynamic_update_slice(
+            v_cache[i], v_new[:, :, None, :], (0, 0, pos, 0)
+        )
+        attn = decode_attention(q, k_l, v_l, pos + 1)  # L1 Pallas decode kernel
+        x = x + (attn.reshape(b, 1, c.d_model)) @ wo
+
+        h2 = _rms_norm(x, norm2)
+        x = x + (jax.nn.silu(h2 @ wg) * (h2 @ wu)) @ wd
+        new_ks.append(k_l)
+        new_vs.append(v_l)
+
+    logits = (_rms_norm(x, params[-2]) @ params[-1])[:, 0, :]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def reference_generate(params, cfg: ModelConfig, prompt, n_new: int):
+    """Greedy generation oracle used by python tests (prefill+decode loop)."""
+    tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+    logits, kc, vc = prefill(params, tokens, cfg)
+    out = []
+    nxt = jnp.argmax(logits[:, tokens.shape[1] - 1, :], axis=-1).astype(jnp.int32)
+    pos = tokens.shape[1]
+    for _ in range(n_new):
+        out.append(int(nxt[0]))
+        logits, kc, vc = decode_step(params, nxt, kc, vc, jnp.int32(pos), cfg)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos += 1
+    return out

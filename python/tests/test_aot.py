@@ -1,0 +1,93 @@
+"""AOT export tests: manifest round-trip, HLO text validity, ABI stability."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile.aot import BATCH, PREFILL_BUCKETS, export
+from compile.model import ModelConfig
+
+CFG = ModelConfig(vocab=64, d_model=32, n_heads=2, n_layers=1, d_ff=64, max_seq=32)
+
+
+@pytest.fixture(scope="module")
+def exported():
+    with tempfile.TemporaryDirectory() as d:
+        manifest = export(d, CFG, seed=0)
+        files = {name: open(os.path.join(d, f)).read()
+                 for name, f in manifest["files"].items()}
+        params = np.fromfile(os.path.join(d, "params.bin"), dtype="<f4")
+        on_disk = json.load(open(os.path.join(d, "manifest.json")))
+        yield manifest, files, params, on_disk
+
+
+class TestExport:
+    def test_manifest_roundtrip(self, exported):
+        manifest, _, _, on_disk = exported
+        assert on_disk == manifest
+
+    def test_all_buckets_exported(self, exported):
+        manifest, files, _, _ = exported
+        for s in PREFILL_BUCKETS:
+            if s <= CFG.max_seq:
+                assert f"prefill_s{s}" in files
+        assert manifest["prefill_buckets"] == [
+            s for s in PREFILL_BUCKETS if s <= CFG.max_seq
+        ]
+        assert "decode_step" in files
+
+    def test_hlo_text_is_parseable_hlo(self, exported):
+        """HLO text (not proto) is the interchange format; sanity-check the
+        header and that entry computations declare parameters."""
+        _, files, _, _ = exported
+        for name, text in files.items():
+            assert text.startswith("HloModule"), name
+            assert "parameter(0)" in text, name
+            assert "ROOT" in text, name
+
+    def test_params_bin_size(self, exported):
+        manifest, _, params, _ = exported
+        assert params.size == manifest["model"]["num_params"]
+        assert params.size == CFG.num_params()
+
+    def test_param_count_in_hlo(self, exported):
+        """Prefill entry takes len(param_specs) + 1 (tokens) parameters."""
+        _, files, _, _ = exported
+        n_params = len(CFG.param_specs())
+        text = files[f"prefill_s{PREFILL_BUCKETS[0]}"]
+        assert f"parameter({n_params})" in text  # tokens is the last param
+        assert f"parameter({n_params + 1})" not in text
+
+    def test_decode_param_count_in_hlo(self, exported):
+        """Decode entry: params + token + kc + vc + pos."""
+        _, files, _, _ = exported
+        n = len(CFG.param_specs())
+        text = files["decode_step"]
+        assert f"parameter({n + 3})" in text
+        assert f"parameter({n + 4})" not in text
+
+    def test_test_vectors_present(self, exported):
+        manifest, _, _, _ = exported
+        tv = manifest["test_vectors"]
+        assert len(tv["greedy_next_tokens"]) == 8
+        assert len(tv["last_logits_row0_head"]) == 8
+        assert np.isfinite(tv["last_logits_sum"])
+
+    def test_deterministic_across_exports(self):
+        with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+            m1 = export(d1, CFG, seed=0)
+            m2 = export(d2, CFG, seed=0)
+            assert m1["params_sha256"] == m2["params_sha256"]
+            assert m1["test_vectors"] == m2["test_vectors"]
+
+    def test_seed_changes_params_sha(self):
+        with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+            m1 = export(d1, CFG, seed=0)
+            m2 = export(d2, CFG, seed=1)
+            assert m1["params_sha256"] != m2["params_sha256"]
+
+    def test_batch_constant(self):
+        assert BATCH >= 1

@@ -1,0 +1,199 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer — hypothesis
+sweeps shapes, block sizes and seeds; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import causal_attention
+from compile.kernels.decode_attn import decode_attention
+from compile.kernels.ref import causal_attention_ref, decode_attention_ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (causal flash) kernel
+# ---------------------------------------------------------------------------
+
+class TestCausalAttention:
+    def test_matches_ref_basic(self):
+        q, k, v = (_rand(i, (2, 4, 64, 32)) for i in range(3))
+        np.testing.assert_allclose(
+            causal_attention(q, k, v), causal_attention_ref(q, k, v), **TOL
+        )
+
+    def test_single_head_single_batch(self):
+        q, k, v = (_rand(10 + i, (1, 1, 16, 8)) for i in range(3))
+        np.testing.assert_allclose(
+            causal_attention(q, k, v), causal_attention_ref(q, k, v), **TOL
+        )
+
+    def test_block_smaller_than_seq(self):
+        q, k, v = (_rand(20 + i, (1, 2, 128, 16)) for i in range(3))
+        out = causal_attention(q, k, v, block_q=32, block_k=32)
+        np.testing.assert_allclose(out, causal_attention_ref(q, k, v), **TOL)
+
+    def test_asymmetric_blocks(self):
+        q, k, v = (_rand(30 + i, (1, 2, 64, 16)) for i in range(3))
+        out = causal_attention(q, k, v, block_q=16, block_k=32)
+        np.testing.assert_allclose(out, causal_attention_ref(q, k, v), **TOL)
+
+    def test_causality_future_keys_ignored(self):
+        """Perturbing K/V at positions > t must not change output at t."""
+        q, k, v = (_rand(40 + i, (1, 1, 32, 8)) for i in range(3))
+        out1 = causal_attention(q, k, v)
+        k2 = k.at[:, :, 16:, :].set(99.0)
+        v2 = v.at[:, :, 16:, :].set(-99.0)
+        out2 = causal_attention(q, k2, v2)
+        np.testing.assert_allclose(out1[:, :, :16], out2[:, :, :16], **TOL)
+
+    def test_first_token_attends_only_itself(self):
+        q, k, v = (_rand(50 + i, (1, 1, 16, 8)) for i in range(3))
+        out = causal_attention(q, k, v)
+        np.testing.assert_allclose(out[:, :, 0, :], v[:, :, 0, :], **TOL)
+
+    def test_rejects_indivisible_blocks(self):
+        q, k, v = (_rand(60 + i, (1, 1, 48, 8)) for i in range(3))
+        with pytest.raises(ValueError):
+            causal_attention(q, k, v, block_q=32, block_k=32)
+
+    def test_scale_is_inv_sqrt_d(self):
+        """Uniform V ⇒ output == V regardless of scale correctness; use
+        structured Q/K to confirm softmax scaling matches the oracle."""
+        q = jnp.ones((1, 1, 8, 4)) * 3.0
+        k = _rand(70, (1, 1, 8, 4))
+        v = _rand(71, (1, 1, 8, 4))
+        np.testing.assert_allclose(
+            causal_attention(q, k, v), causal_attention_ref(q, k, v), **TOL
+        )
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 4),
+        s_pow=st.integers(3, 7),  # 8..128
+        d_pow=st.integers(2, 5),  # 4..32
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, b, h, s_pow, d_pow, seed):
+        s, d = 2 ** s_pow, 2 ** d_pow
+        key = jax.random.PRNGKey(seed)
+        q, k, v = (
+            jax.random.normal(jax.random.fold_in(key, i), (b, h, s, d), jnp.float32)
+            for i in range(3)
+        )
+        np.testing.assert_allclose(
+            causal_attention(q, k, v), causal_attention_ref(q, k, v), **TOL
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(scale_exp=st.integers(-2, 4), seed=st.integers(0, 2**16))
+    def test_hypothesis_magnitudes(self, scale_exp, seed):
+        """Online softmax must be stable across input magnitudes."""
+        key = jax.random.PRNGKey(seed)
+        mag = 10.0 ** scale_exp
+        q, k, v = (
+            mag * jax.random.normal(jax.random.fold_in(key, i), (1, 2, 32, 8))
+            for i in range(3)
+        )
+        out = causal_attention(q, k, v)
+        ref = causal_attention_ref(q, k, v)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Decode kernel
+# ---------------------------------------------------------------------------
+
+class TestDecodeAttention:
+    def test_matches_ref_basic(self):
+        q = _rand(0, (2, 4, 32))
+        kc = _rand(1, (2, 4, 128, 32))
+        vc = _rand(2, (2, 4, 128, 32))
+        np.testing.assert_allclose(
+            decode_attention(q, kc, vc, jnp.int32(77)),
+            decode_attention_ref(q, kc, vc, 77),
+            **TOL,
+        )
+
+    def test_length_one(self):
+        q = _rand(10, (1, 1, 8))
+        kc = _rand(11, (1, 1, 16, 8))
+        vc = _rand(12, (1, 1, 16, 8))
+        out = decode_attention(q, kc, vc, jnp.int32(1))
+        np.testing.assert_allclose(out, vc[:, :, 0, :], **TOL)
+
+    def test_full_cache(self):
+        q = _rand(20, (2, 2, 16))
+        kc = _rand(21, (2, 2, 64, 16))
+        vc = _rand(22, (2, 2, 64, 16))
+        np.testing.assert_allclose(
+            decode_attention(q, kc, vc, jnp.int32(64)),
+            decode_attention_ref(q, kc, vc, 64),
+            **TOL,
+        )
+
+    def test_masked_region_ignored(self):
+        """Garbage beyond `length` must not leak into the output."""
+        q = _rand(30, (1, 2, 8))
+        kc = _rand(31, (1, 2, 32, 8))
+        vc = _rand(32, (1, 2, 32, 8))
+        out1 = decode_attention(q, kc, vc, jnp.int32(10))
+        kc2 = kc.at[:, :, 10:, :].set(1e4)
+        vc2 = vc.at[:, :, 10:, :].set(-1e4)
+        out2 = decode_attention(q, kc2, vc2, jnp.int32(10))
+        np.testing.assert_allclose(out1, out2, **TOL)
+
+    def test_non_pow2_capacity(self):
+        """Capacity 160 (the model default) exercises block-size shrink."""
+        q = _rand(40, (1, 2, 8))
+        kc = _rand(41, (1, 2, 160, 8))
+        vc = _rand(42, (1, 2, 160, 8))
+        np.testing.assert_allclose(
+            decode_attention(q, kc, vc, jnp.int32(100)),
+            decode_attention_ref(q, kc, vc, 100),
+            **TOL,
+        )
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 4),
+        t_pow=st.integers(3, 7),
+        d_pow=st.integers(2, 5),
+        seed=st.integers(0, 2**16),
+        frac=st.floats(0.05, 1.0),
+    )
+    def test_hypothesis_shapes_lengths(self, b, h, t_pow, d_pow, seed, frac):
+        t, d = 2 ** t_pow, 2 ** d_pow
+        length = max(1, int(t * frac))
+        key = jax.random.PRNGKey(seed)
+        q = jax.random.normal(jax.random.fold_in(key, 0), (b, h, d))
+        kc = jax.random.normal(jax.random.fold_in(key, 1), (b, h, t, d))
+        vc = jax.random.normal(jax.random.fold_in(key, 2), (b, h, t, d))
+        np.testing.assert_allclose(
+            decode_attention(q, kc, vc, jnp.int32(length)),
+            decode_attention_ref(q, kc, vc, length),
+            **TOL,
+        )
+
+    def test_decode_equals_prefill_last_row(self):
+        """Decode over a cache == last row of causal attention over the
+        same sequence (phase-consistency: the two kernels implement the
+        same attention, split the GreenLLM way)."""
+        b, h, s, d = 1, 2, 32, 8
+        q, k, v = (_rand(50 + i, (b, h, s, d)) for i in range(3))
+        full = causal_attention_ref(q, k, v)[:, :, s - 1, :]
+        out = decode_attention(q[:, :, s - 1, :], k, v, jnp.int32(s))
+        np.testing.assert_allclose(out, full, **TOL)

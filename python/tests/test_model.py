@@ -1,0 +1,118 @@
+"""L2 model tests: shapes, causality, prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    decode_step,
+    init_params,
+    prefill,
+    reference_generate,
+)
+
+CFG = ModelConfig(vocab=64, d_model=32, n_heads=2, n_layers=2, d_ff=64, max_seq=48)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+def _toks(b, s, seed=0):
+    return (jnp.arange(b * s, dtype=jnp.int32).reshape(b, s) * 7 + 3 + seed) % CFG.vocab
+
+
+class TestPrefill:
+    def test_shapes(self, params):
+        logits, kc, vc = prefill(params, _toks(2, 16), CFG)
+        assert logits.shape == (2, 16, CFG.vocab)
+        assert kc.shape == (CFG.n_layers, 2, CFG.n_heads, CFG.max_seq, CFG.d_head)
+        assert vc.shape == kc.shape
+
+    def test_finite(self, params):
+        logits, _, _ = prefill(params, _toks(2, 16), CFG)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_causal_logits(self, params):
+        """Changing a suffix token must not change logits at earlier positions."""
+        t1 = _toks(1, 16)
+        t2 = t1.at[0, 12].set((t1[0, 12] + 5) % CFG.vocab)
+        l1, _, _ = prefill(params, t1, CFG)
+        l2, _, _ = prefill(params, t2, CFG)
+        np.testing.assert_allclose(l1[:, :12], l2[:, :12], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(l1[:, 12], l2[:, 12])
+
+    def test_kv_padding_zero(self, params):
+        _, kc, vc = prefill(params, _toks(1, 8), CFG)
+        assert float(jnp.abs(kc[:, :, :, 8:, :]).max()) == 0.0
+        assert float(jnp.abs(vc[:, :, :, 8:, :]).max()) == 0.0
+
+    def test_batch_independence(self, params):
+        """Row i of a batch must equal the same prompt run alone."""
+        t = _toks(3, 16)
+        lb, _, _ = prefill(params, t, CFG)
+        l0, _, _ = prefill(params, t[1:2], CFG)
+        np.testing.assert_allclose(lb[1], l0[0], rtol=1e-4, atol=1e-4)
+
+    def test_param_specs_abi_stable(self):
+        names = [n for n, _ in CFG.param_specs()]
+        assert names[0] == "embed" and names[1] == "pos_embed"
+        assert names[-1] == "lm_head" and names[-2] == "final_norm"
+        assert len(names) == 4 + 9 * CFG.n_layers
+
+
+class TestDecodeStep:
+    def test_shapes(self, params):
+        _, kc, vc = prefill(params, _toks(2, 16), CFG)
+        tok = jnp.array([1, 2], jnp.int32)
+        logits, kc2, vc2 = decode_step(params, tok, kc, vc, jnp.int32(16), CFG)
+        assert logits.shape == (2, CFG.vocab)
+        assert kc2.shape == kc.shape
+
+    def test_decode_matches_prefill(self, params):
+        """Teacher-forcing consistency: decode_step(t_n | prefill(t_0..t_{n-1}))
+        must reproduce prefill(t_0..t_n) logits at the last position."""
+        t = _toks(1, 9)
+        full_logits, _, _ = prefill(params, t, CFG)
+        _, kc, vc = prefill(params, t[:, :8], CFG)
+        logits, _, _ = decode_step(params, t[:, 8], kc, vc, jnp.int32(8), CFG)
+        np.testing.assert_allclose(
+            logits, full_logits[:, 8, :], rtol=5e-4, atol=5e-4
+        )
+
+    def test_multi_step_chain(self, params):
+        """3 chained decode steps == prefill over the extended sequence."""
+        t = _toks(1, 12)
+        full_logits, _, _ = prefill(params, t, CFG)
+        _, kc, vc = prefill(params, t[:, :9], CFG)
+        for i in range(9, 12):
+            logits, kc, vc = decode_step(params, t[:, i], kc, vc, jnp.int32(i), CFG)
+        np.testing.assert_allclose(
+            logits, full_logits[:, 11, :], rtol=1e-3, atol=1e-3
+        )
+
+    def test_reference_generate_deterministic(self, params):
+        g1 = reference_generate(params, CFG, [1, 2, 3, 4], n_new=6)
+        g2 = reference_generate(params, CFG, [1, 2, 3, 4], n_new=6)
+        assert g1 == g2
+        assert all(0 <= t < CFG.vocab for t in g1)
+
+
+class TestInit:
+    def test_deterministic(self):
+        p1 = init_params(CFG, seed=0)
+        p2 = init_params(CFG, seed=0)
+        for a, b in zip(p1, p2):
+            np.testing.assert_array_equal(a, b)
+
+    def test_seed_changes_params(self):
+        p1 = init_params(CFG, seed=0)
+        p2 = init_params(CFG, seed=1)
+        assert not np.allclose(p1[0], p2[0])
+
+    def test_num_params_matches_specs(self):
+        n = sum(int(np.prod(s)) for _, s in CFG.param_specs())
+        assert CFG.num_params() == n

@@ -1,0 +1,174 @@
+//! `cargo bench` target: L3 hot-path microbenchmarks (harness = false;
+//! warmup + median-of-runs, no criterion offline).
+//!
+//! Targets (DESIGN.md §6): replay ≥ 1 M sim-events/s; controller fine tick
+//! < 1 µs; router+queue op < 200 ns; histogram record ~ns.
+
+use greenllm::config::{Config, DecodeCtlConfig, Method};
+use greenllm::coordinator::engine::{run, RunOptions};
+use greenllm::coordinator::router::Router;
+use greenllm::dvfs::decode_ctl::DecodeController;
+use greenllm::dvfs::prefill_opt::{PrefillJobView, PrefillOptimizer};
+use greenllm::dvfs::profiler::Profiler;
+use greenllm::gpu::perf::PerfModel;
+use greenllm::gpu::power::PowerModel;
+use greenllm::metrics::Histogram;
+use greenllm::model::ModelSpec;
+use greenllm::sim::EventQueue;
+use greenllm::util::rng::Pcg64;
+use greenllm::workload::alibaba::{generate, ChatParams};
+use greenllm::workload::request::Request;
+use std::time::Instant;
+
+/// Median wall time of `runs` timed executions of `f(iter_count)`.
+fn bench(name: &str, iters: u64, runs: usize, mut f: impl FnMut(u64)) -> f64 {
+    f(iters.min(1000)); // warmup
+    let mut times: Vec<f64> = (0..runs)
+        .map(|_| {
+            let t0 = Instant::now();
+            f(iters);
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let per_op = times[runs / 2] / iters as f64;
+    let (val, unit) = if per_op < 1e-6 {
+        (per_op * 1e9, "ns")
+    } else if per_op < 1e-3 {
+        (per_op * 1e6, "us")
+    } else {
+        (per_op * 1e3, "ms")
+    };
+    println!("{name:<40} {val:>9.1} {unit}/op   ({iters} iters x {runs} runs)");
+    per_op
+}
+
+fn main() {
+    println!("# hotpath microbenchmarks (median of 5)\n");
+
+    // --- event queue -------------------------------------------------------
+    bench("event_queue schedule+pop", 1_000_000, 5, |n| {
+        let mut q = EventQueue::new();
+        let mut acc = 0u64;
+        for i in 0..n {
+            q.schedule(i as f64 * 1e-3, i);
+            if i % 4 == 3 {
+                for _ in 0..4 {
+                    acc += q.pop().map(|(_, e)| e).unwrap_or(0);
+                }
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    // --- router ------------------------------------------------------------
+    let router = Router::new(true, 2);
+    let reqs: Vec<Request> = (0..1024)
+        .map(|i| Request {
+            id: i,
+            arrival_s: 0.0,
+            prompt_len: ((i * 37) % 4096) as u32 + 1,
+            output_len: 10,
+        })
+        .collect();
+    bench("router queue_for", 10_000_000, 5, |n| {
+        let mut acc = 0usize;
+        for i in 0..n {
+            acc += router.queue_for(&reqs[(i % 1024) as usize]);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // --- decode controller fine tick ----------------------------------------
+    let mut profiler = Profiler::new(
+        PerfModel::new(ModelSpec::qwen3_14b()),
+        PowerModel::a100(),
+        0.02,
+        1,
+    );
+    let table = profiler.build_band_table(1600.0, 100.0, 600.0, 0.095, 200);
+    let mut ctl = DecodeController::new(DecodeCtlConfig::default(), table, 0.095);
+    let mut rng = Pcg64::new(1, 1);
+    for i in 0..256 {
+        ctl.on_tokens(i as f64 * 0.01, 8);
+        ctl.on_tbt(0.05 + 0.04 * rng.f64());
+    }
+    bench("decode_ctl fine_tick", 2_000_000, 5, |n| {
+        let mut acc = 0u64;
+        for i in 0..n {
+            acc += ctl.fine_tick(i as f64 * 0.02) as u64;
+        }
+        std::hint::black_box(acc);
+    });
+    bench("decode_ctl on_tbt+coarse_tick", 1_000_000, 5, |n| {
+        let mut acc = 0u64;
+        for i in 0..n {
+            ctl.on_tbt(0.05 + (i % 50) as f64 * 1e-3);
+            if i % 10 == 0 {
+                acc += ctl.coarse_tick(i as f64 * 0.02).is_some() as u64;
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    // --- prefill optimizer ---------------------------------------------------
+    let fitted = profiler.fit(1);
+    let mut opt = PrefillOptimizer::new(fitted, 210);
+    let jobs: Vec<PrefillJobView> = (0..16)
+        .map(|i| PrefillJobView {
+            prompt_len: 200 + i * 50,
+            deadline_s: 0.4 + i as f64 * 0.05,
+        })
+        .collect();
+    bench("prefill_opt optimal_clock (16 jobs)", 200_000, 5, |n| {
+        let mut acc = 0u64;
+        for i in 0..n {
+            acc += opt.optimal_clock(i as f64 * 1e-4, &jobs) as u64;
+        }
+        std::hint::black_box(acc);
+    });
+
+    // --- histogram ------------------------------------------------------------
+    let mut h = Histogram::latency();
+    bench("histogram record", 10_000_000, 5, |n| {
+        for i in 0..n {
+            h.record(1e-3 + (i % 1000) as f64 * 1e-5);
+        }
+        std::hint::black_box(h.count());
+    });
+
+    // --- end-to-end replay throughput ----------------------------------------
+    let trace = generate(&ChatParams::new(8.0, 120.0), 7);
+    let cfg = Config {
+        method: Method::GreenLlm,
+        seed: 7,
+        ..Config::default()
+    };
+    println!();
+    let mut events = 0u64;
+    let mut best_evps = 0.0f64;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let r = run(&cfg, &trace, &RunOptions::default());
+        let dt = t0.elapsed().as_secs_f64();
+        events = r.events_processed;
+        best_evps = best_evps.max(events as f64 / dt);
+    }
+    println!(
+        "replay GreenLLM chat8qps/120s: {events} events, best {:.2} M events/s",
+        best_evps / 1e6
+    );
+    let cfg_nv = Config {
+        method: Method::DefaultNv,
+        seed: 7,
+        ..Config::default()
+    };
+    let t0 = Instant::now();
+    let r = run(&cfg_nv, &trace, &RunOptions::default());
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "replay defaultNV chat8qps/120s: {} events, {:.2} M events/s",
+        r.events_processed,
+        r.events_processed as f64 / dt / 1e6
+    );
+}

@@ -1,0 +1,43 @@
+//! `cargo bench` target: regenerate every paper figure (shortened horizon)
+//! and report wall-clock per figure. `harness = false` (no criterion in
+//! the offline mirror).
+
+use greenllm::bench::figures;
+use std::time::Instant;
+
+fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!(">>> {name}: {:.2}s wall\n", t0.elapsed().as_secs_f64());
+    out
+}
+
+fn main() {
+    let seed = 42;
+
+    timed("fig1", || figures::fig1(240.0, seed));
+    let f3a = timed("fig3a", || figures::fig3a(40.0, seed));
+    let f3b = timed("fig3b", || figures::fig3b(40.0, seed));
+    let f3c = timed("fig3c", || figures::fig3c(90.0, seed));
+    let f5 = timed("fig5", || figures::fig5(180.0, seed));
+    let f7 = timed("fig7", || figures::fig7(seed));
+    let f8 = timed("fig8", || figures::fig8(seed));
+    timed("fig10", || figures::fig10(60.0, seed));
+    let f11 = timed("fig11", || figures::fig11(60.0, seed));
+    timed("fig12a", || figures::fig12a(120.0, seed));
+    timed("fig12b", || figures::fig12b(120.0, seed));
+
+    // Shape assertions mirroring the paper's takeaways.
+    assert!(f7.r2 > 0.98, "fig7 fit degraded");
+    assert!(f8.r2 > 0.98, "fig8 fit degraded");
+    let pre_knee = f3a[1].knee_mhz;
+    let dec_knee = f3b[1].knee_mhz;
+    assert!(dec_knee < pre_knee, "takeaway #2 violated");
+    assert!((400..=1100).contains(&f3c.knee_mhz), "fig3c knee drifted");
+    assert!(f5.slo_pct[1].1 >= f5.slo_pct[0].1 - 0.5, "routing stopped helping");
+    assert!(
+        f11[0].energy_saving_pct > f11.last().unwrap().energy_saving_pct,
+        "fig11 savings-vs-load shape broken"
+    );
+    println!("all figure shape-checks passed");
+}

@@ -1,0 +1,57 @@
+//! `cargo bench` target: regenerate Tables 3 & 4 end-to-end (shortened
+//! horizon) and report wall-clock per table. criterion is not in the
+//! offline mirror, so this is a `harness = false` timing main.
+
+use greenllm::bench::tables;
+use std::time::Instant;
+
+fn main() {
+    let duration_s = arg_f64("--duration", 180.0);
+    let seed = 42;
+
+    println!("# paper_tables bench: {duration_s}s trace horizon per workload\n");
+
+    let t0 = Instant::now();
+    let rows3 = tables::table3(duration_s, seed);
+    let t3 = t0.elapsed();
+
+    let t0 = Instant::now();
+    let rows4 = tables::table4(duration_s, seed);
+    let t4 = t0.elapsed();
+
+    // Headline assertions (shape, not absolutes — see EXPERIMENTS.md).
+    let green_rows3: Vec<_> = rows3
+        .iter()
+        .filter(|r| r.method == greenllm::config::Method::GreenLlm)
+        .collect();
+    let max_saving = green_rows3
+        .iter()
+        .map(|r| r.delta_energy_pct)
+        .fold(f64::MIN, f64::max);
+    let min_saving = green_rows3
+        .iter()
+        .map(|r| r.delta_energy_pct)
+        .fold(f64::MAX, f64::min);
+    println!(
+        "table3: {} rows in {:.1}s | GreenLLM dEn range {:.1}%..{:.1}% (paper: 6.8%..34.1%)",
+        rows3.len(),
+        t3.as_secs_f64(),
+        min_saving,
+        max_saving
+    );
+    println!(
+        "table4: {} rows in {:.1}s",
+        rows4.len(),
+        t4.as_secs_f64()
+    );
+    assert!(max_saving > 15.0, "headline savings collapsed: {max_saving}");
+}
+
+fn arg_f64(name: &str, default: f64) -> f64 {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}

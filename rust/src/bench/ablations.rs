@@ -1,0 +1,150 @@
+//! Ablations over GreenLLM's design choices (DESIGN.md §3 "expected
+//! shape" + the controller constants of §3.3): hysteresis depth, fine
+//! step size, band half-width, adaptation on/off, idle-clock parking.
+//!
+//! These are not in the paper's evaluation but answer the obvious
+//! reviewer questions: how much does each mechanism contribute, and how
+//! sensitive is the controller to its constants?
+
+use crate::bench::report::{fmt_f, fmt_pct, maybe_write_csv, Table};
+use crate::config::Config;
+use crate::config::Method;
+use crate::coordinator::engine::{run, RunOptions, RunResult};
+use crate::workload::alibaba::{self, ChatParams};
+use crate::workload::request::Trace;
+
+pub struct AblationRow {
+    pub variant: String,
+    pub delta_energy_pct: f64,
+    pub ttft_pct: f64,
+    pub tbt_pct: f64,
+    pub band_switches: u64,
+    pub adaptations: u64,
+}
+
+fn run_variant(name: &str, cfg: &Config, trace: &Trace, base: &RunResult) -> AblationRow {
+    let r = run(cfg, trace, &RunOptions::default());
+    AblationRow {
+        variant: name.to_string(),
+        delta_energy_pct: (1.0 - r.total_energy_j / base.total_energy_j) * 100.0,
+        ttft_pct: r.slo.ttft_pass_rate() * 100.0,
+        tbt_pct: r.slo.tbt_pass_rate() * 100.0,
+        band_switches: r.band_switches,
+        adaptations: r.adaptations,
+    }
+}
+
+/// Run the ablation grid on a mid-load chat trace. Energy deltas are
+/// relative to defaultNV on the same trace.
+pub fn ablations(duration_s: f64, seed: u64) -> Vec<AblationRow> {
+    let trace = alibaba::generate(&ChatParams::new(5.0, duration_s), seed);
+    let base_cfg = Config {
+        method: Method::DefaultNv,
+        seed,
+        ..Config::default()
+    };
+    let base = run(&base_cfg, &trace, &RunOptions::default());
+
+    let green = |f: &dyn Fn(&mut Config)| {
+        let mut c = Config {
+            method: Method::GreenLlm,
+            seed,
+            ..Config::default()
+        };
+        f(&mut c);
+        c
+    };
+
+    let mut rows = Vec::new();
+    rows.push(run_variant("greenllm (paper defaults)", &green(&|_| {}), &trace, &base));
+    rows.push(run_variant(
+        "no hysteresis (1 tick)",
+        &green(&|c| c.decode_ctl.hysteresis_ticks = 1),
+        &trace,
+        &base,
+    ));
+    rows.push(run_variant(
+        "deep hysteresis (6 ticks)",
+        &green(&|c| c.decode_ctl.hysteresis_ticks = 6),
+        &trace,
+        &base,
+    ));
+    rows.push(run_variant(
+        "coarse fine-step (60 MHz)",
+        &green(&|c| c.decode_ctl.fine_step_mhz = 60),
+        &trace,
+        &base,
+    ));
+    rows.push(run_variant(
+        "narrow band (1 step)",
+        &green(&|c| c.decode_ctl.band_halfwidth_steps = 1),
+        &trace,
+        &base,
+    ));
+    rows.push(run_variant(
+        "wide band (12 steps)",
+        &green(&|c| c.decode_ctl.band_halfwidth_steps = 12),
+        &trace,
+        &base,
+    ));
+    rows.push(run_variant(
+        "no adaptation",
+        &green(&|c| c.decode_ctl.adapt_interval_s = 1e9),
+        &trace,
+        &base,
+    ));
+    rows.push(run_variant(
+        "no idle parking (idle @1110)",
+        &green(&|c| c.prefill_opt.idle_clock_mhz = 1110),
+        &trace,
+        &base,
+    ));
+    rows.push(run_variant(
+        "slow fine loop (100 ms)",
+        &green(&|c| c.decode_ctl.fine_tick_s = 0.100),
+        &trace,
+        &base,
+    ));
+
+    let mut t = Table::new(&[
+        "Variant",
+        "dEn vs defaultNV(%)",
+        "TTFT(%)",
+        "TBT(%)",
+        "band switches",
+        "adaptations",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.variant.clone(),
+            fmt_f(r.delta_energy_pct, 2),
+            fmt_pct(r.ttft_pct),
+            fmt_pct(r.tbt_pct),
+            r.band_switches.to_string(),
+            r.adaptations.to_string(),
+        ]);
+    }
+    println!("== Ablations: GreenLLM design choices (Alibaba chat 5 QPS) ==");
+    t.print();
+    println!();
+    maybe_write_csv("ablations", &t);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_grid_runs_and_defaults_do_well() {
+        let rows = ablations(45.0, 3);
+        assert_eq!(rows.len(), 9);
+        let default = &rows[0];
+        // Paper defaults must be a sane point: real savings, high SLO.
+        assert!(default.delta_energy_pct > 10.0);
+        assert!(default.tbt_pct > 85.0);
+        // No-hysteresis must switch bands at least as often as default.
+        let no_hyst = &rows[1];
+        assert!(no_hyst.band_switches >= default.band_switches);
+    }
+}

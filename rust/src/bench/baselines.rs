@@ -1,0 +1,119 @@
+//! Baseline comparison beyond the paper's three methods: adds the
+//! throttLL'eM-lite predictive controller (related work, Kakolyris et al.)
+//! and the per-trace *best fixed clock* oracle (the strongest static
+//! policy, found by sweeping — an upper bound no online static policy can
+//! beat). Positions GreenLLM's dynamic, phase-aware control against both.
+
+use crate::bench::report::{fmt_f, fmt_pct, maybe_write_csv, Table};
+use crate::bench::run_method;
+use crate::config::Method;
+use crate::coordinator::engine::RunResult;
+use crate::gpu::freq::FreqLadder;
+use crate::workload::alibaba::{self, ChatParams};
+use crate::workload::request::Trace;
+
+pub struct BaselineRow {
+    pub workload: String,
+    pub method: String,
+    pub delta_energy_pct: f64,
+    pub ttft_pct: f64,
+    pub tbt_pct: f64,
+}
+
+/// Best fixed clock by coarse-to-fine sweep (energy-min subject to SLO
+/// pass-rates within 2 points of defaultNV's).
+pub fn best_fixed(model: &str, trace: &Trace, seed: u64, nv: &RunResult) -> (u32, RunResult) {
+    let ladder = FreqLadder::a100();
+    let mut best: Option<(u32, RunResult)> = None;
+    for mhz in ladder.iter().step_by(4) {
+        let r = run_method(model, Method::Fixed(mhz), trace, seed);
+        let slo_ok = r.slo.ttft_pass_rate() >= nv.slo.ttft_pass_rate() - 0.02
+            && r.slo.tbt_pass_rate() >= nv.slo.tbt_pass_rate() - 0.02;
+        if slo_ok && best.as_ref().map(|(_, b)| r.total_energy_j < b.total_energy_j).unwrap_or(true)
+        {
+            best = Some((mhz, r));
+        }
+    }
+    // Degenerate traces where no clock passes: fall back to max clock.
+    best.unwrap_or_else(|| (1410, run_method(model, Method::Fixed(1410), trace, seed)))
+}
+
+pub fn baselines(duration_s: f64, seed: u64) -> Vec<BaselineRow> {
+    let model = "qwen3-14b";
+    let mut rows = Vec::new();
+    let mut t = Table::new(&["Workload", "Method", "dEn(%)", "TTFT(%)", "TBT(%)"]);
+    for qps in [1.0, 5.0, 10.0] {
+        let trace = alibaba::generate(&ChatParams::new(qps, duration_s), seed);
+        let nv = run_method(model, Method::DefaultNv, &trace, seed);
+        let throttle = run_method(model, Method::Throttle, &trace, seed);
+        let green = run_method(model, Method::GreenLlm, &trace, seed);
+        let (best_mhz, fixed) = best_fixed(model, &trace, seed, &nv);
+        let entries = [
+            ("defaultNV".to_string(), &nv),
+            ("Throttle (1s)".to_string(), &throttle),
+            ("GreenLLM".to_string(), &green),
+            (format!("BestFixed@{best_mhz}"), &fixed),
+        ];
+        for (name, r) in entries {
+            let row = BaselineRow {
+                workload: trace.name.clone(),
+                method: name,
+                delta_energy_pct: (1.0 - r.total_energy_j / nv.total_energy_j) * 100.0,
+                ttft_pct: r.slo.ttft_pass_rate() * 100.0,
+                tbt_pct: r.slo.tbt_pass_rate() * 100.0,
+            };
+            t.row(&[
+                row.workload.clone(),
+                row.method.clone(),
+                fmt_f(row.delta_energy_pct, 2),
+                fmt_pct(row.ttft_pct),
+                fmt_pct(row.tbt_pct),
+            ]);
+            rows.push(row);
+        }
+    }
+    println!("== Baselines: defaultNV vs throttLL'eM-lite vs GreenLLM vs best fixed clock ==");
+    t.print();
+    println!();
+    maybe_write_csv("baselines", &t);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::run_method;
+
+    #[test]
+    fn throttle_between_defaultnv_and_greenllm() {
+        let trace = alibaba::generate(&ChatParams::new(3.0, 90.0), 3);
+        let nv = run_method("qwen3-14b", Method::DefaultNv, &trace, 3);
+        let th = run_method("qwen3-14b", Method::Throttle, &trace, 3);
+        let gr = run_method("qwen3-14b", Method::GreenLlm, &trace, 3);
+        // Predictive throttling saves vs defaultNV...
+        assert!(
+            th.total_energy_j < 0.98 * nv.total_energy_j,
+            "throttle {} vs nv {}",
+            th.total_energy_j,
+            nv.total_energy_j
+        );
+        // ...but phase-aware dual-loop control saves at least as much
+        // (GreenLLM also routes + exploits prefill slack the throttle
+        // baseline's feasibility-only policy cannot).
+        assert!(gr.total_energy_j <= th.total_energy_j * 1.02);
+        // The throttle baseline holds TBT (its decode prediction is sound)
+        // but leaks TTFT violations: no routing (HoL blocking) and no
+        // feedback around its feasibility-exact prefill clocks — exactly
+        // the gap the paper positions GreenLLM against.
+        assert!(th.slo.tbt_pass_rate() > 0.9);
+        assert!(th.slo.ttft_pass_rate() > 0.75);
+        assert!(gr.slo.ttft_pass_rate() > th.slo.ttft_pass_rate());
+    }
+
+    #[test]
+    fn throttle_completes_everything() {
+        let trace = alibaba::generate(&ChatParams::new(5.0, 60.0), 9);
+        let r = run_method("qwen3-14b", Method::Throttle, &trace, 9);
+        assert_eq!(r.completed as usize, trace.requests.len());
+    }
+}

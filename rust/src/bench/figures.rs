@@ -1,0 +1,585 @@
+//! Figure drivers: regenerate every figure of the paper's evaluation.
+//!
+//! Fig. 1  — SM clock vs decode TPS under a sinusoidal workload.
+//! Fig. 3a — normalized prefill energy vs SM frequency (per TPS level).
+//! Fig. 3b — normalized decode energy vs SM frequency (per TPS level).
+//! Fig. 3c — normalized total energy vs fixed frequency on a real trace.
+//! Fig. 5  — TTFT distribution before/after length-based routing.
+//! Fig. 7  — prefill latency vs prompt length + quadratic fit.
+//! Fig. 8  — power vs frequency + cubic fit.
+//! Fig. 10 — prefill TTFT vs load per class, defaultNV vs GreenLLM.
+//! Fig. 11 — decode TBT vs TPS, defaultNV vs GreenLLM + energy savings.
+//! Fig. 12 — SLO-margin sensitivity (prefill & decode).
+
+use crate::bench::report::{fmt_f, fmt_ms, maybe_write_csv, Table};
+use crate::bench::{run_method, run_method_opts};
+use crate::config::Method;
+use crate::coordinator::engine::RunOptions;
+use crate::dvfs::profiler::Profiler;
+use crate::gpu::freq::FreqLadder;
+use crate::gpu::perf::PerfModel;
+use crate::gpu::power::PowerModel;
+use crate::model::ModelSpec;
+use crate::util::polyfit::polyval;
+use crate::util::stats::r_squared;
+use crate::workload::alibaba::{self, ChatParams};
+use crate::workload::request::PromptClass;
+use crate::workload::synthetic;
+
+const MODEL: &str = "qwen3-14b";
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — sinusoidal tracking
+// ---------------------------------------------------------------------------
+
+pub struct Fig1 {
+    /// (t, tps, clock MHz) series per method.
+    pub series: Vec<(String, Vec<(f64, f64, u32)>)>,
+    pub p99_tbt_ms: Vec<(String, f64)>,
+    pub decode_energy_j: Vec<(String, f64)>,
+}
+
+pub fn fig1(duration_s: f64, seed: u64) -> Fig1 {
+    let trace = synthetic::sinusoid_decode(400.0, 2600.0, 120.0, duration_s, seed);
+    let opts = RunOptions {
+        record_freq_trace: true,
+        record_tps_series: true,
+        ..Default::default()
+    };
+    let mut out = Fig1 {
+        series: Vec::new(),
+        p99_tbt_ms: Vec::new(),
+        decode_energy_j: Vec::new(),
+    };
+    for method in [Method::DefaultNv, Method::GreenLlm] {
+        let r = run_method_opts(MODEL, method, &trace, seed, &opts, 0.95, 0.95);
+        // Join the TPS series with the step-wise clock trace.
+        let mut joined = Vec::new();
+        let mut clock = 1410u32;
+        let mut ti = 0usize;
+        for &(t, tps) in &r.decode_tps_series {
+            while ti < r.decode_freq_trace.len() && r.decode_freq_trace[ti].0 <= t {
+                clock = r.decode_freq_trace[ti].1;
+                ti += 1;
+            }
+            joined.push((t, tps, clock));
+        }
+        out.p99_tbt_ms
+            .push((method.name(), r.slo.tbt_hist.p99() * 1000.0));
+        out.decode_energy_j.push((method.name(), r.decode_energy_j));
+        out.series.push((method.name(), joined));
+    }
+
+    let mut t = Table::new(&["t(s)", "TPS", "defaultNV MHz", "GreenLLM MHz"]);
+    let n = out.series[0].1.len().min(out.series[1].1.len());
+    for i in (0..n).step_by((n / 40).max(1)) {
+        let (ts, tps, f_nv) = out.series[0].1[i];
+        let (_, _, f_g) = out.series[1].1[i];
+        t.row(&[
+            fmt_f(ts, 1),
+            fmt_f(tps, 0),
+            f_nv.to_string(),
+            f_g.to_string(),
+        ]);
+    }
+    println!("== Fig. 1: GPU frequency vs decode TPS (sinusoidal workload) ==");
+    t.print();
+    let e_nv = out.decode_energy_j[0].1;
+    let e_g = out.decode_energy_j[1].1;
+    println!(
+        "p99 TBT: defaultNV {:.1} ms vs GreenLLM {:.1} ms | decode energy saving {:.1}%\n",
+        out.p99_tbt_ms[0].1,
+        out.p99_tbt_ms[1].1,
+        (1.0 - e_g / e_nv) * 100.0
+    );
+    maybe_write_csv("fig1", &t);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3a/3b — phase energy vs frequency
+// ---------------------------------------------------------------------------
+
+pub struct EnergyCurve {
+    pub tps: f64,
+    /// (MHz, normalized energy E/E_min).
+    pub points: Vec<(u32, f64)>,
+    pub knee_mhz: u32,
+}
+
+fn freq_sweep() -> Vec<u32> {
+    FreqLadder::a100().iter().step_by(5).collect() // 75 MHz grid
+}
+
+pub fn fig3a(duration_s: f64, seed: u64) -> Vec<EnergyCurve> {
+    let tps_levels = [2000.0, 8000.0, 16000.0, 24000.0];
+    let mut curves = Vec::new();
+    for &tps in &tps_levels {
+        let trace = synthetic::prefill_microbench(tps, 256, 1024, duration_s, seed);
+        let mut pts = Vec::new();
+        for mhz in freq_sweep() {
+            let r = run_method(MODEL, Method::Fixed(mhz), &trace, seed);
+            pts.push((mhz, r.prefill_energy_j));
+        }
+        curves.push(normalize(tps, pts));
+    }
+    print_energy_curves("Fig. 3a: normalized prefill energy vs SM frequency", "fig3a", &curves);
+    curves
+}
+
+pub fn fig3b(duration_s: f64, seed: u64) -> Vec<EnergyCurve> {
+    let tps_levels = [200.0, 1000.0, 2000.0, 3000.0];
+    let mut curves = Vec::new();
+    for &tps in &tps_levels {
+        let trace = synthetic::decode_microbench(tps, duration_s, seed);
+        let mut pts = Vec::new();
+        for mhz in freq_sweep() {
+            let r = run_method(MODEL, Method::Fixed(mhz), &trace, seed);
+            pts.push((mhz, r.decode_energy_j));
+        }
+        curves.push(normalize(tps, pts));
+    }
+    print_energy_curves("Fig. 3b: normalized decode energy vs SM frequency", "fig3b", &curves);
+    curves
+}
+
+pub fn fig3c(duration_s: f64, seed: u64) -> EnergyCurve {
+    let trace = alibaba::generate(&ChatParams::new(5.0, duration_s), seed);
+    let mut pts = Vec::new();
+    for mhz in freq_sweep() {
+        let r = run_method(MODEL, Method::Fixed(mhz), &trace, seed);
+        pts.push((mhz, r.total_energy_j));
+    }
+    let curve = normalize(5.0, pts);
+    print_energy_curves(
+        "Fig. 3c: normalized total energy vs fixed SM frequency (Alibaba chat 5 QPS)",
+        "fig3c",
+        std::slice::from_ref(&curve),
+    );
+    let e_max_clock = curve.points.last().unwrap().1;
+    println!(
+        "knee at {} MHz; capping at the knee saves {:.1}% vs running at 1410 MHz\n",
+        curve.knee_mhz,
+        (1.0 - 1.0 / e_max_clock) * 100.0
+    );
+    curve
+}
+
+fn normalize(tps: f64, pts: Vec<(u32, f64)>) -> EnergyCurve {
+    let e_min = pts.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    let knee = pts
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+        .0;
+    EnergyCurve {
+        tps,
+        points: pts.into_iter().map(|(f, e)| (f, e / e_min)).collect(),
+        knee_mhz: knee,
+    }
+}
+
+fn print_energy_curves(title: &str, csv: &str, curves: &[EnergyCurve]) {
+    let mut headers: Vec<String> = vec!["MHz".into()];
+    headers.extend(curves.iter().map(|c| format!("E/Emin @{}tps", c.tps)));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    for i in 0..curves[0].points.len() {
+        let mut row = vec![curves[0].points[i].0.to_string()];
+        row.extend(curves.iter().map(|c| fmt_f(c.points[i].1, 3)));
+        t.row(&row);
+    }
+    println!("== {title} ==");
+    t.print();
+    for c in curves {
+        println!("  TPS {:>7.0}: knee at {} MHz", c.tps, c.knee_mhz);
+    }
+    println!();
+    maybe_write_csv(csv, &t);
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — routing ablation TTFT distribution
+// ---------------------------------------------------------------------------
+
+pub struct Fig5 {
+    /// (method, class, p50 ms, p90 ms, p99 ms)
+    pub rows: Vec<(String, String, f64, f64, f64)>,
+    pub slo_pct: Vec<(String, f64)>,
+}
+
+pub fn fig5(duration_s: f64, seed: u64) -> Fig5 {
+    let trace = alibaba::generate(&ChatParams::new(8.0, duration_s), seed);
+    let opts = RunOptions {
+        keep_outcomes: true,
+        ..Default::default()
+    };
+    let mut out = Fig5 {
+        rows: Vec::new(),
+        slo_pct: Vec::new(),
+    };
+    let mut t = Table::new(&["Method", "Class", "p50(ms)", "p90(ms)", "p99(ms)"]);
+    for method in [Method::DefaultNv, Method::PrefillSplit] {
+        let r = run_method_opts(MODEL, method, &trace, seed, &opts, 0.95, 0.95);
+        for (label, class) in [
+            ("short", PromptClass::Short),
+            ("medium", PromptClass::Medium),
+            ("long", PromptClass::Long),
+        ] {
+            let mut ttfts: Vec<f64> = r
+                .slo
+                .outcomes
+                .iter()
+                .filter(|o| o.prompt_class() == class)
+                .map(|o| o.ttft_s)
+                .collect();
+            ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pct = |q: f64| {
+                if ttfts.is_empty() {
+                    0.0
+                } else {
+                    ttfts[((q * ttfts.len() as f64) as usize).min(ttfts.len() - 1)] * 1000.0
+                }
+            };
+            let (p50, p90, p99) = (pct(0.50), pct(0.90), pct(0.99));
+            t.row(&[
+                method.name(),
+                label.into(),
+                fmt_f(p50, 1),
+                fmt_f(p90, 1),
+                fmt_f(p99, 1),
+            ]);
+            out.rows
+                .push((method.name(), label.into(), p50, p90, p99));
+        }
+        out.slo_pct
+            .push((method.name(), r.slo.ttft_pass_rate() * 100.0));
+    }
+    println!("== Fig. 5: TTFT distribution before/after length-based routing (chat 8 QPS) ==");
+    t.print();
+    println!(
+        "TTFT SLO pass: {} {:.1}% -> {} {:.1}%\n",
+        out.slo_pct[0].0, out.slo_pct[0].1, out.slo_pct[1].0, out.slo_pct[1].1
+    );
+    maybe_write_csv("fig5", &t);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7 / Fig. 8 — model fits
+// ---------------------------------------------------------------------------
+
+pub struct FitReport {
+    pub r2: f64,
+    pub coeffs: Vec<f64>,
+    pub rows: Vec<(f64, f64, f64)>, // (x, measured, fit)
+}
+
+pub fn fig7(seed: u64) -> FitReport {
+    let mut profiler = Profiler::new(
+        PerfModel::new(ModelSpec::qwen3_14b()),
+        PowerModel::a100(),
+        0.03,
+        seed,
+    );
+    let (a, b, c) = profiler.fit_prefill_quad(3);
+    let mut rows = Vec::new();
+    let mut meas = Vec::new();
+    let mut fit = Vec::new();
+    let mut t = Table::new(&["L(tokens)", "measured(ms)", "fit(ms)"]);
+    let mut len = 64u32;
+    while len <= 8192 {
+        let m = profiler.measure_prefill(len, 1410);
+        let f = a * (len as f64).powi(2) + b * len as f64 + c;
+        rows.push((len as f64, m, f));
+        meas.push(m);
+        fit.push(f);
+        t.row(&[len.to_string(), fmt_ms(m), fmt_ms(f)]);
+        len *= 2;
+    }
+    let r2 = r_squared(&meas, &fit);
+    println!("== Fig. 7: prefill latency vs prompt length, quadratic fit (Qwen3-14B) ==");
+    t.print();
+    println!("t(L) = {a:.3e}·L² + {b:.3e}·L + {c:.4}   R² = {r2:.4}\n");
+    maybe_write_csv("fig7", &t);
+    FitReport {
+        r2,
+        coeffs: vec![c, b, a],
+        rows,
+    }
+}
+
+pub fn fig8(seed: u64) -> FitReport {
+    let mut profiler = Profiler::new(
+        PerfModel::new(ModelSpec::qwen3_14b()),
+        PowerModel::a100(),
+        0.03,
+        seed,
+    );
+    let coeffs = profiler.fit_power_cubic(3);
+    let mut rows = Vec::new();
+    let mut meas = Vec::new();
+    let mut fit = Vec::new();
+    let mut t = Table::new(&["MHz", "measured(W)", "fit(W)"]);
+    for mhz in FreqLadder::a100().iter().step_by(8) {
+        let m = profiler.measure_power(mhz);
+        let f = polyval(&coeffs, mhz as f64 / 1000.0);
+        rows.push((mhz as f64, m, f));
+        meas.push(m);
+        fit.push(f);
+        t.row(&[mhz.to_string(), fmt_f(m, 1), fmt_f(f, 1)]);
+    }
+    let r2 = r_squared(&meas, &fit);
+    println!("== Fig. 8: GPU power vs SM frequency, cubic fit (saturating prefill) ==");
+    t.print();
+    println!(
+        "P(f) = {:.1} + {:.1}f + {:.1}f² + {:.1}f³ (f in GHz)   R² = {r2:.4}\n",
+        coeffs[0], coeffs[1], coeffs[2], coeffs[3]
+    );
+    maybe_write_csv("fig8", &t);
+    FitReport {
+        r2,
+        coeffs: coeffs.to_vec(),
+        rows,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10 — prefill microbenchmarks per class
+// ---------------------------------------------------------------------------
+
+pub struct Fig10Row {
+    pub class: String,
+    pub tps: f64,
+    pub ttft_nv_ms: f64,
+    pub ttft_green_ms: f64,
+    pub energy_saving_pct: f64,
+    pub ttft_slo_ms: f64,
+}
+
+pub fn fig10(duration_s: f64, seed: u64) -> Vec<Fig10Row> {
+    let classes = [
+        ("Short", 64u32, 256u32, 400.0),
+        ("Medium", 256, 1024, 400.0),
+        ("Long", 1024, 4096, 2000.0),
+    ];
+    let mut rows = Vec::new();
+    let mut t = Table::new(&[
+        "Class",
+        "TPS",
+        "defaultNV P90 TTFT(ms)",
+        "GreenLLM P90 TTFT(ms)",
+        "energy saving(%)",
+        "SLO(ms)",
+    ]);
+    for (name, lo, hi, slo_ms) in classes {
+        for mult in [1.0, 2.0, 4.0, 8.0, 12.0] {
+            let tps = 1000.0 * mult;
+            let trace = synthetic::prefill_microbench(tps, lo, hi, duration_s, seed);
+            let nv = run_method(MODEL, Method::DefaultNv, &trace, seed);
+            let green = run_method(MODEL, Method::GreenLlm, &trace, seed);
+            let saving = (1.0 - green.prefill_energy_j / nv.prefill_energy_j) * 100.0;
+            let row = Fig10Row {
+                class: name.into(),
+                tps,
+                ttft_nv_ms: nv.slo.ttft_hist.p90() * 1000.0,
+                ttft_green_ms: green.slo.ttft_hist.p90() * 1000.0,
+                energy_saving_pct: saving,
+                ttft_slo_ms: slo_ms,
+            };
+            t.row(&[
+                row.class.clone(),
+                fmt_f(row.tps, 0),
+                fmt_f(row.ttft_nv_ms, 1),
+                fmt_f(row.ttft_green_ms, 1),
+                fmt_f(row.energy_saving_pct, 1),
+                fmt_f(row.ttft_slo_ms, 0),
+            ]);
+            rows.push(row);
+        }
+    }
+    println!("== Fig. 10: prefill microbenchmarks (TTFT vs load, per class) ==");
+    t.print();
+    println!();
+    maybe_write_csv("fig10", &t);
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11 — decode microbenchmarks
+// ---------------------------------------------------------------------------
+
+pub struct Fig11Row {
+    pub tps: f64,
+    pub tbt_nv_ms: f64,
+    pub tbt_green_ms: f64,
+    pub energy_saving_pct: f64,
+}
+
+pub fn fig11(duration_s: f64, seed: u64) -> Vec<Fig11Row> {
+    let mut rows = Vec::new();
+    let mut t = Table::new(&[
+        "TPS",
+        "defaultNV P90 TBT(ms)",
+        "GreenLLM P90 TBT(ms)",
+        "decode energy saving(%)",
+    ]);
+    for tps in [200.0, 600.0, 1000.0, 1400.0, 1800.0, 2200.0, 2600.0, 3000.0] {
+        let trace = synthetic::decode_microbench(tps, duration_s, seed);
+        let nv = run_method(MODEL, Method::DefaultNv, &trace, seed);
+        let green = run_method(MODEL, Method::GreenLlm, &trace, seed);
+        let row = Fig11Row {
+            tps,
+            tbt_nv_ms: nv.slo.tbt_hist.p90() * 1000.0,
+            tbt_green_ms: green.slo.tbt_hist.p90() * 1000.0,
+            energy_saving_pct: (1.0 - green.decode_energy_j / nv.decode_energy_j) * 100.0,
+        };
+        t.row(&[
+            fmt_f(tps, 0),
+            fmt_f(row.tbt_nv_ms, 1),
+            fmt_f(row.tbt_green_ms, 1),
+            fmt_f(row.energy_saving_pct, 1),
+        ]);
+        rows.push(row);
+    }
+    println!("== Fig. 11: decode microbenchmarks (P90 TBT vs TPS) ==");
+    t.print();
+    println!();
+    maybe_write_csv("fig11", &t);
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 12 — margin sensitivity
+// ---------------------------------------------------------------------------
+
+pub struct MarginRow {
+    pub margin: f64,
+    pub energy_j: f64,
+    pub p90_ms: f64,
+}
+
+pub const MARGINS: [f64; 6] = [0.2, 0.6, 0.85, 0.95, 1.2, 2.0];
+
+pub fn fig12a(duration_s: f64, seed: u64) -> Vec<MarginRow> {
+    let trace = alibaba::generate(&ChatParams::new(10.0, duration_s), seed);
+    let mut rows = Vec::new();
+    let mut t = Table::new(&["prefill margin", "prefill energy(kJ)", "P90 TTFT(ms)"]);
+    for &m in &MARGINS {
+        let r = run_method_opts(
+            MODEL,
+            Method::GreenLlm,
+            &trace,
+            seed,
+            &RunOptions::default(),
+            m,
+            0.95,
+        );
+        let row = MarginRow {
+            margin: m,
+            energy_j: r.prefill_energy_j,
+            p90_ms: r.slo.ttft_hist.p90() * 1000.0,
+        };
+        t.row(&[
+            fmt_f(m, 2),
+            fmt_f(row.energy_j / 1000.0, 2),
+            fmt_f(row.p90_ms, 0),
+        ]);
+        rows.push(row);
+    }
+    println!("== Fig. 12a: prefill margin sweep (decode margin 0.95, chat 10 QPS) ==");
+    t.print();
+    println!();
+    maybe_write_csv("fig12a", &t);
+    rows
+}
+
+pub fn fig12b(duration_s: f64, seed: u64) -> Vec<MarginRow> {
+    let trace = alibaba::generate(&ChatParams::new(10.0, duration_s), seed);
+    let mut rows = Vec::new();
+    let mut t = Table::new(&["decode margin", "decode energy(kJ)", "P90 TBT(ms)"]);
+    for &m in &MARGINS {
+        let r = run_method_opts(
+            MODEL,
+            Method::GreenLlm,
+            &trace,
+            seed,
+            &RunOptions::default(),
+            0.95,
+            m,
+        );
+        let row = MarginRow {
+            margin: m,
+            energy_j: r.decode_energy_j,
+            p90_ms: r.slo.tbt_hist.p90() * 1000.0,
+        };
+        t.row(&[
+            fmt_f(m, 2),
+            fmt_f(row.energy_j / 1000.0, 2),
+            fmt_f(row.p90_ms, 1),
+        ]);
+        rows.push(row);
+    }
+    println!("== Fig. 12b: decode margin sweep (prefill margin 0.95, chat 10 QPS) ==");
+    t.print();
+    println!();
+    maybe_write_csv("fig12b", &t);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Short-horizon shape checks — full horizons run via `cargo bench` /
+    // the CLI. Durations chosen so each test stays ~seconds.
+
+    #[test]
+    fn fig3b_decode_knee_below_prefill_knee() {
+        let pre = fig3a(20.0, 2);
+        let dec = fig3b(20.0, 2);
+        // Takeaway #2: decode's optimal band is clearly lower than
+        // prefill's at comparable relative load.
+        let pre_knee = pre[1].knee_mhz; // mid-load prefill
+        let dec_knee = dec[1].knee_mhz; // mid-load decode
+        assert!(
+            dec_knee < pre_knee,
+            "decode knee {dec_knee} !< prefill knee {pre_knee}"
+        );
+    }
+
+    #[test]
+    fn fig3c_total_energy_u_shaped() {
+        let c = fig3c(30.0, 2);
+        let first = c.points.first().unwrap().1;
+        let last = c.points.last().unwrap().1;
+        // Both extremes cost more than the knee (normalized min = 1).
+        assert!(first > 1.02, "low-clock end {first}");
+        assert!(last > 1.02, "high-clock end {last}");
+        assert!((400..=1100).contains(&c.knee_mhz), "knee {}", c.knee_mhz);
+    }
+
+    #[test]
+    fn fig5_routing_tightens_short_tail() {
+        let f = fig5(90.0, 2);
+        // SLO pass must improve with routing (paper: 89.9 → 96.4).
+        assert!(f.slo_pct[1].1 >= f.slo_pct[0].1 - 0.5);
+    }
+
+    #[test]
+    fn fig7_fig8_fits_are_good() {
+        assert!(fig7(2).r2 > 0.98);
+        assert!(fig8(2).r2 > 0.98);
+    }
+
+    #[test]
+    fn fig11_green_holds_slo_and_saves() {
+        let rows = fig11(20.0, 2);
+        for r in &rows {
+            assert!(r.tbt_green_ms < 110.0, "TBT {} at {} TPS", r.tbt_green_ms, r.tps);
+        }
+        // Energy savings largest at low TPS (paper: 20–25 % → 8–12 %).
+        assert!(rows[0].energy_saving_pct > rows.last().unwrap().energy_saving_pct);
+        assert!(rows[0].energy_saving_pct > 10.0);
+    }
+}

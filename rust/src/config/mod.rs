@@ -1,0 +1,402 @@
+//! Typed configuration for the serving system, loadable from TOML.
+//!
+//! Defaults reproduce the paper's deployment: a DGX-A100 node with a
+//! prefill pool of 2 workers × 2 GPUs and a decode pool of 4 workers ×
+//! 1 GPU, Azure-style SLO targets, and the §3.3 controller constants
+//! (200 ms coarse window, 20 ms fine tick, 15 MHz steps, 0.65/1.0
+//! hysteresis thresholds, 6 s adaptation).
+
+use crate::slo::SloTargets;
+use crate::util::toml::Document;
+
+/// Which serving policy to run (§4.2.2 comparison set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// NVIDIA default governor, single mixed prefill queue.
+    DefaultNv,
+    /// Length-based routing only (ablation).
+    PrefillSplit,
+    /// Routing + prefill optimizer + dual-loop decode controller.
+    GreenLlm,
+    /// Fixed SM clock on all pools (Fig. 3c sweeps).
+    Fixed(u32),
+    /// throttLL'eM-lite (Kakolyris et al.): coarse 1 s predictive
+    /// throttling — pick the lowest clock whose *predicted* load is
+    /// SLO-feasible; no phase split, no fine loop, no hysteresis. The
+    /// related-work comparator the paper positions against.
+    Throttle,
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::DefaultNv => "defaultNV".into(),
+            Method::PrefillSplit => "PrefillSplit".into(),
+            Method::GreenLlm => "GreenLLM".into(),
+            Method::Fixed(mhz) => format!("Fixed{mhz}"),
+            Method::Throttle => "Throttle".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "defaultnv" | "default" | "nv" => Some(Method::DefaultNv),
+            "prefillsplit" | "split" => Some(Method::PrefillSplit),
+            "greenllm" | "green" => Some(Method::GreenLlm),
+            "throttle" | "throttllem" => Some(Method::Throttle),
+            other => other
+                .strip_prefix("fixed")
+                .and_then(|mhz| mhz.parse().ok())
+                .map(Method::Fixed),
+        }
+    }
+
+    /// Routing enabled? (defaultNV/Throttle use one mixed prefill queue.)
+    pub fn routing(&self) -> bool {
+        !matches!(self, Method::DefaultNv | Method::Fixed(_) | Method::Throttle)
+    }
+
+    /// Phase-specific DVFS enabled?
+    pub fn dvfs(&self) -> bool {
+        matches!(self, Method::GreenLlm)
+    }
+}
+
+/// Pool shapes (paper Fig. 4: 2×2-GPU prefill, 4×1-GPU decode).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolConfig {
+    pub prefill_workers: usize,
+    pub gpus_per_prefill_worker: usize,
+    pub decode_workers: usize,
+    pub gpus_per_decode_worker: usize,
+    /// Continuous-batching cap per decode worker (KV memory bound).
+    pub max_streams_per_decode_worker: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            prefill_workers: 2,
+            gpus_per_prefill_worker: 2,
+            decode_workers: 4,
+            gpus_per_decode_worker: 1,
+            max_streams_per_decode_worker: 128,
+        }
+    }
+}
+
+/// Decode dual-loop controller constants (§3.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeCtlConfig {
+    /// Coarse TPS sliding window (s).
+    pub tps_window_s: f64,
+    /// Coarse loop tick (s).
+    pub coarse_tick_s: f64,
+    /// Consecutive coarse intervals required before a band switch.
+    pub hysteresis_ticks: u32,
+    /// Fine loop tick (s).
+    pub fine_tick_s: f64,
+    /// Fine frequency step (MHz).
+    pub fine_step_mhz: u32,
+    /// Raise clock when p95 TBT / target > this.
+    pub margin_hi: f64,
+    /// Lower clock when p95 TBT / target < this.
+    pub margin_lo: f64,
+    /// TBT samples in the fine-loop window.
+    pub tbt_window: usize,
+    /// Band adaptation interval (s).
+    pub adapt_interval_s: f64,
+    /// Fraction of pinned-at-bound adjustments that triggers a band shift.
+    pub adapt_bias: f64,
+    /// TPS bucket width of the lookup table.
+    pub tps_bucket: f64,
+    /// Band half-width in ladder steps around the table frequency.
+    pub band_halfwidth_steps: u32,
+}
+
+impl Default for DecodeCtlConfig {
+    fn default() -> Self {
+        DecodeCtlConfig {
+            tps_window_s: 0.200,
+            coarse_tick_s: 0.200,
+            hysteresis_ticks: 3,
+            fine_tick_s: 0.020,
+            fine_step_mhz: 15,
+            margin_hi: 1.0,
+            margin_lo: 0.65,
+            tbt_window: 128,
+            adapt_interval_s: 6.0,
+            adapt_bias: 0.8,
+            tps_bucket: 100.0,
+            band_halfwidth_steps: 4,
+        }
+    }
+}
+
+/// Prefill optimizer constants (§3.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefillOptConfig {
+    /// Re-optimization tick (s).
+    pub tick_s: f64,
+    /// Idle clock when the queue is empty (MHz).
+    pub idle_clock_mhz: u32,
+    /// Profiling noise assumed when fitting models (σ of log-normal).
+    pub fit_noise: f64,
+}
+
+impl Default for PrefillOptConfig {
+    fn default() -> Self {
+        PrefillOptConfig {
+            tick_s: 0.100,
+            idle_clock_mhz: 210,
+            fit_noise: 0.02,
+        }
+    }
+}
+
+/// Top-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub model: String,
+    pub method: Method,
+    pub pools: PoolConfig,
+    pub slo: SloTargets,
+    pub decode_ctl: DecodeCtlConfig,
+    pub prefill_opt: PrefillOptConfig,
+    /// SLO margin factors (§5.3 sensitivity): scale the *controller's*
+    /// deadline targets, not the reported SLOs.
+    pub prefill_margin: f64,
+    pub decode_margin: f64,
+    /// Measurement noise of the simulated GPU (σ, log-normal).
+    pub sim_noise: f64,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            model: "qwen3-14b".into(),
+            method: Method::GreenLlm,
+            pools: PoolConfig::default(),
+            slo: SloTargets::default(),
+            decode_ctl: DecodeCtlConfig::default(),
+            prefill_opt: PrefillOptConfig::default(),
+            prefill_margin: 0.95,
+            decode_margin: 0.95,
+            sim_noise: 0.03,
+            seed: 0,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML document, starting from defaults. Unknown keys are
+    /// rejected (typo safety).
+    pub fn from_toml(doc: &Document) -> Result<Config, String> {
+        let mut c = Config::default();
+        for key in doc.values.keys() {
+            let known = matches!(
+                key.as_str(),
+                "model"
+                    | "method"
+                    | "seed"
+                    | "sim_noise"
+                    | "prefill_margin"
+                    | "decode_margin"
+                    | "pools.prefill_workers"
+                    | "pools.gpus_per_prefill_worker"
+                    | "pools.decode_workers"
+                    | "pools.gpus_per_decode_worker"
+                    | "pools.max_streams_per_decode_worker"
+                    | "slo.ttft_short_medium_ms"
+                    | "slo.ttft_long_ms"
+                    | "slo.tbt_p95_ms"
+                    | "decode_ctl.fine_tick_ms"
+                    | "decode_ctl.coarse_tick_ms"
+                    | "decode_ctl.fine_step_mhz"
+                    | "decode_ctl.margin_hi"
+                    | "decode_ctl.margin_lo"
+                    | "decode_ctl.hysteresis_ticks"
+                    | "decode_ctl.adapt_interval_s"
+                    | "prefill_opt.tick_ms"
+                    | "prefill_opt.idle_clock_mhz"
+            );
+            if !known {
+                return Err(format!("unknown config key: {key}"));
+            }
+        }
+        if let Some(m) = doc.str("model") {
+            c.model = m.to_string();
+        }
+        if let Some(m) = doc.str("method") {
+            c.method = Method::parse(m).ok_or_else(|| format!("bad method {m:?}"))?;
+        }
+        if let Some(s) = doc.i64("seed") {
+            c.seed = s as u64;
+        }
+        if let Some(v) = doc.f64("sim_noise") {
+            c.sim_noise = v;
+        }
+        if let Some(v) = doc.f64("prefill_margin") {
+            c.prefill_margin = v;
+        }
+        if let Some(v) = doc.f64("decode_margin") {
+            c.decode_margin = v;
+        }
+        if let Some(v) = doc.i64("pools.prefill_workers") {
+            c.pools.prefill_workers = v as usize;
+        }
+        if let Some(v) = doc.i64("pools.gpus_per_prefill_worker") {
+            c.pools.gpus_per_prefill_worker = v as usize;
+        }
+        if let Some(v) = doc.i64("pools.decode_workers") {
+            c.pools.decode_workers = v as usize;
+        }
+        if let Some(v) = doc.i64("pools.gpus_per_decode_worker") {
+            c.pools.gpus_per_decode_worker = v as usize;
+        }
+        if let Some(v) = doc.i64("pools.max_streams_per_decode_worker") {
+            c.pools.max_streams_per_decode_worker = v as usize;
+        }
+        if let Some(v) = doc.f64("slo.ttft_short_medium_ms") {
+            c.slo.ttft_short_medium_s = v / 1000.0;
+        }
+        if let Some(v) = doc.f64("slo.ttft_long_ms") {
+            c.slo.ttft_long_s = v / 1000.0;
+        }
+        if let Some(v) = doc.f64("slo.tbt_p95_ms") {
+            c.slo.tbt_p95_s = v / 1000.0;
+        }
+        if let Some(v) = doc.f64("decode_ctl.fine_tick_ms") {
+            c.decode_ctl.fine_tick_s = v / 1000.0;
+        }
+        if let Some(v) = doc.f64("decode_ctl.coarse_tick_ms") {
+            c.decode_ctl.coarse_tick_s = v / 1000.0;
+        }
+        if let Some(v) = doc.i64("decode_ctl.fine_step_mhz") {
+            c.decode_ctl.fine_step_mhz = v as u32;
+        }
+        if let Some(v) = doc.f64("decode_ctl.margin_hi") {
+            c.decode_ctl.margin_hi = v;
+        }
+        if let Some(v) = doc.f64("decode_ctl.margin_lo") {
+            c.decode_ctl.margin_lo = v;
+        }
+        if let Some(v) = doc.i64("decode_ctl.hysteresis_ticks") {
+            c.decode_ctl.hysteresis_ticks = v as u32;
+        }
+        if let Some(v) = doc.f64("decode_ctl.adapt_interval_s") {
+            c.decode_ctl.adapt_interval_s = v;
+        }
+        if let Some(v) = doc.f64("prefill_opt.tick_ms") {
+            c.prefill_opt.tick_s = v / 1000.0;
+        }
+        if let Some(v) = doc.i64("prefill_opt.idle_clock_mhz") {
+            c.prefill_opt.idle_clock_mhz = v as u32;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let doc = Document::parse(&text).map_err(|e| e.to_string())?;
+        Config::from_toml(&doc)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pools.prefill_workers == 0 || self.pools.decode_workers == 0 {
+            return Err("pool sizes must be >= 1".into());
+        }
+        if self.decode_ctl.margin_lo >= self.decode_ctl.margin_hi {
+            return Err("decode margin_lo must be < margin_hi".into());
+        }
+        if !(0.0..=1.0).contains(&self.sim_noise) {
+            return Err("sim_noise must be in [0,1]".into());
+        }
+        if self.prefill_margin <= 0.0 || self.decode_margin <= 0.0 {
+            return Err("margins must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let c = Config::default();
+        assert_eq!(c.pools.prefill_workers, 2);
+        assert_eq!(c.pools.gpus_per_prefill_worker, 2);
+        assert_eq!(c.pools.decode_workers, 4);
+        assert_eq!(c.decode_ctl.fine_tick_s, 0.020);
+        assert_eq!(c.decode_ctl.fine_step_mhz, 15);
+        assert_eq!(c.decode_ctl.margin_lo, 0.65);
+        assert_eq!(c.decode_ctl.hysteresis_ticks, 3);
+        assert_eq!(c.decode_ctl.adapt_interval_s, 6.0);
+        assert_eq!(c.slo.ttft_short_medium_s, 0.4);
+        assert_eq!(c.slo.ttft_long_s, 2.0);
+        assert_eq!(c.slo.tbt_p95_s, 0.1);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = Document::parse(
+            r#"
+            model = "qwen3-30b-moe"
+            method = "PrefillSplit"
+            [slo]
+            tbt_p95_ms = 80
+            [decode_ctl]
+            fine_step_mhz = 30
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.model, "qwen3-30b-moe");
+        assert_eq!(c.method, Method::PrefillSplit);
+        assert_eq!(c.slo.tbt_p95_s, 0.08);
+        assert_eq!(c.decode_ctl.fine_step_mhz, 30);
+        // Untouched defaults survive.
+        assert_eq!(c.decode_ctl.fine_tick_s, 0.020);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = Document::parse("mdoel = \"typo\"").unwrap();
+        assert!(Config::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("defaultNV"), Some(Method::DefaultNv));
+        assert_eq!(Method::parse("greenllm"), Some(Method::GreenLlm));
+        assert_eq!(Method::parse("fixed750"), Some(Method::Fixed(750)));
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn method_capabilities() {
+        assert!(!Method::DefaultNv.routing());
+        assert!(Method::PrefillSplit.routing());
+        assert!(!Method::PrefillSplit.dvfs());
+        assert!(Method::GreenLlm.routing() && Method::GreenLlm.dvfs());
+        assert!(!Method::Fixed(750).dvfs());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = Config::default();
+        c.decode_ctl.margin_lo = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.pools.decode_workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.prefill_margin = 0.0;
+        assert!(c.validate().is_err());
+    }
+}

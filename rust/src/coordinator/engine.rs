@@ -1,0 +1,932 @@
+//! The discrete-event serving engine: replays a trace against the
+//! simulated DGX-A100 node under a given method (defaultNV / PrefillSplit /
+//! GreenLLM / fixed clock) and produces energy + SLO results.
+//!
+//! Topology (paper Fig. 4): requests arrive → router → per-class prefill
+//! queues → prefill pool (default 2 workers × 2 GPUs, one job at a time per
+//! worker) → decode pool (default 4 workers × 1 GPU, continuous batching) →
+//! token stream. Telemetry feeds the per-phase DVFS controllers, which set
+//! NVML-style application clocks on the workers' GPUs.
+
+use crate::config::{Config, Method};
+use crate::coordinator::router::Router;
+use crate::dvfs::decode_ctl::DecodeController;
+use crate::dvfs::governor::DefaultNvGovernor;
+use crate::dvfs::prefill_opt::{PrefillJobView, PrefillOptimizer};
+use crate::dvfs::profiler::Profiler;
+use crate::gpu::device::SimGpu;
+use crate::gpu::perf::PerfModel;
+use crate::gpu::power::PowerModel;
+use crate::metrics::TpsWindow;
+use crate::model::ModelSpec;
+use crate::sim::EventQueue;
+use crate::slo::{RequestOutcome, SloTracker};
+use crate::util::rng::Pcg64;
+use crate::util::stats::percentile_exact;
+use crate::workload::request::Trace;
+
+use std::collections::VecDeque;
+
+/// Run options (figure-specific recording).
+#[derive(Debug, Clone, Default)]
+pub struct RunOptions {
+    /// Record (t, MHz) for decode worker 0's GPU and prefill worker 0's GPU.
+    pub record_freq_trace: bool,
+    /// Record aggregate decode TPS every 200 ms.
+    pub record_tps_series: bool,
+    /// Keep per-request outcomes (Fig. 5 distributions).
+    pub keep_outcomes: bool,
+}
+
+/// Results of one replay.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub trace_name: String,
+    pub method: Method,
+    pub slo: SloTracker,
+    pub prefill_energy_j: f64,
+    pub decode_energy_j: f64,
+    pub total_energy_j: f64,
+    pub generated_tokens: u64,
+    pub completed: u64,
+    pub sim_duration_s: f64,
+    pub events_processed: u64,
+    pub decode_freq_trace: Vec<(f64, u32)>,
+    pub prefill_freq_trace: Vec<(f64, u32)>,
+    pub decode_tps_series: Vec<(f64, f64)>,
+    /// Mean decode batch occupancy (diagnostics).
+    pub mean_decode_batch: f64,
+    /// Controller diagnostics (GreenLLM only; zeros otherwise): coarse-band
+    /// switches, table adaptations, fine ticks across the decode pool.
+    pub band_switches: u64,
+    pub adaptations: u64,
+    pub fine_ticks: u64,
+}
+
+impl RunResult {
+    /// Throughput in generated tokens/s over the run.
+    pub fn throughput_tps(&self) -> f64 {
+        if self.sim_duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.sim_duration_s
+    }
+
+    pub fn total_energy_wh(&self) -> f64 {
+        self.total_energy_j / 3600.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Internal state
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrive(usize),
+    PrefillDone { worker: usize, seq: u64 },
+    DecodeRound { worker: usize, seq: u64 },
+    FineTick,
+    CoarseTick,
+    AdaptTick,
+    PrefillTick,
+    GovernorTick,
+    SampleTick,
+}
+
+#[derive(Debug)]
+struct QueuedJob {
+    req_idx: usize,
+}
+
+#[derive(Debug)]
+struct PrefillWorker {
+    gpus: Vec<usize>,
+    queue: usize,
+    /// (req_idx, completion event seq) of the in-flight job.
+    current: Option<(usize, u64)>,
+    seq: u64,
+}
+
+#[derive(Debug)]
+struct Stream {
+    req_idx: usize,
+    remaining: u32,
+    ctx: f64,
+    last_token_t: f64,
+    joined_t: f64,
+    tbts: Vec<f64>,
+}
+
+#[derive(Debug)]
+struct DecodeWorker {
+    gpu: usize,
+    streams: Vec<Stream>,
+    round_active: bool,
+    round_start: f64,
+    seq: u64,
+    batch_samples: u64,
+    batch_sum: u64,
+}
+
+struct Engine<'a> {
+    cfg: &'a Config,
+    trace: &'a Trace,
+    opts: &'a RunOptions,
+    perf: PerfModel,
+    router: Router,
+    q: EventQueue<Ev>,
+    gpus: Vec<SimGpu>,
+    prefill_queues: Vec<VecDeque<QueuedJob>>,
+    prefill_workers: Vec<PrefillWorker>,
+    decode_workers: Vec<DecodeWorker>,
+    decode_wait: VecDeque<Stream>,
+    // Governors (populated per method).
+    prefill_opts: Vec<PrefillOptimizer>,
+    decode_ctls: Vec<DecodeController>,
+    nv_prefill: Vec<DefaultNvGovernor>,
+    nv_decode: Vec<DefaultNvGovernor>,
+    /// throttLL'eM-lite state: the prefill feasibility model (decode uses
+    /// model-predicted step times directly — per-query load prediction).
+    throttle: Option<PrefillOptimizer>,
+    slo: SloTracker,
+    rng: Pcg64,
+    completed: u64,
+    generated_tokens: u64,
+    global_tps: TpsWindow,
+    tps_series: Vec<(f64, f64)>,
+    /// Reusable buffer for the optimizer's queue view (hot path: every
+    /// prefill tick × worker — §Perf).
+    jobs_scratch: Vec<PrefillJobView>,
+    /// Prefill deadline target per route class (SLO × margin).
+    ttft_target_sm: f64,
+    ttft_target_long: f64,
+}
+
+/// Mean context length assumed when building the decode band table.
+const TABLE_AVG_CTX: f64 = 600.0;
+
+/// Replay `trace` under `cfg`.
+pub fn run(cfg: &Config, trace: &Trace, opts: &RunOptions) -> RunResult {
+    let spec = ModelSpec::by_name(&cfg.model)
+        .unwrap_or_else(|| panic!("unknown model {:?}", cfg.model));
+    let perf = PerfModel::new(spec);
+    let power = PowerModel::a100();
+    let router = Router::new(cfg.method.routing(), cfg.pools.prefill_workers);
+
+    // --- GPUs -------------------------------------------------------------
+    let n_prefill_gpus = cfg.pools.prefill_workers * cfg.pools.gpus_per_prefill_worker;
+    let n_gpus = n_prefill_gpus + cfg.pools.decode_workers * cfg.pools.gpus_per_decode_worker;
+    let mut gpus: Vec<SimGpu> = (0..n_gpus).map(SimGpu::new).collect();
+    if opts.record_freq_trace {
+        gpus[0].record_trace = true; // prefill worker 0, gpu 0
+        gpus[n_prefill_gpus].record_trace = true; // decode worker 0
+    }
+
+    // --- Workers ------------------------------------------------------------
+    let prefill_workers: Vec<PrefillWorker> = (0..cfg.pools.prefill_workers)
+        .map(|w| PrefillWorker {
+            gpus: (0..cfg.pools.gpus_per_prefill_worker)
+                .map(|g| w * cfg.pools.gpus_per_prefill_worker + g)
+                .collect(),
+            queue: router.queue_of_worker(w),
+            current: None,
+            seq: 0,
+        })
+        .collect();
+    let decode_workers: Vec<DecodeWorker> = (0..cfg.pools.decode_workers)
+        .map(|w| DecodeWorker {
+            gpu: n_prefill_gpus + w * cfg.pools.gpus_per_decode_worker,
+            streams: Vec::new(),
+            round_active: false,
+            round_start: 0.0,
+            seq: 0,
+            batch_samples: 0,
+            batch_sum: 0,
+        })
+        .collect();
+
+    // --- Governors ----------------------------------------------------------
+    let mut prefill_opts = Vec::new();
+    let mut decode_ctls = Vec::new();
+    let mut nv_prefill = Vec::new();
+    let mut nv_decode = Vec::new();
+    match cfg.method {
+        Method::GreenLlm => {
+            let mut profiler =
+                Profiler::new(perf.clone(), power.clone(), cfg.sim_noise, cfg.seed ^ 0xF17);
+            let fitted = profiler.fit(3);
+            let table = profiler.build_band_table(
+                1600.0,
+                cfg.decode_ctl.tps_bucket,
+                TABLE_AVG_CTX,
+                cfg.slo.tbt_p95_s * cfg.decode_margin,
+                cfg.pools.max_streams_per_decode_worker,
+            );
+            for _ in 0..cfg.pools.prefill_workers {
+                prefill_opts.push(PrefillOptimizer::new(
+                    fitted.clone(),
+                    cfg.prefill_opt.idle_clock_mhz,
+                ));
+            }
+            for _ in 0..cfg.pools.decode_workers {
+                decode_ctls.push(DecodeController::new(
+                    cfg.decode_ctl.clone(),
+                    table.clone(),
+                    cfg.slo.tbt_p95_s * cfg.decode_margin,
+                ));
+            }
+        }
+        Method::DefaultNv | Method::PrefillSplit => {
+            for w in 0..cfg.pools.prefill_workers {
+                nv_prefill.push(DefaultNvGovernor::new(cfg.seed ^ (w as u64)));
+            }
+            for w in 0..cfg.pools.decode_workers {
+                nv_decode.push(DefaultNvGovernor::new(cfg.seed ^ (0x100 + w as u64)));
+            }
+        }
+        Method::Fixed(mhz) => {
+            for g in gpus.iter_mut() {
+                g.set_app_clock(0.0, mhz);
+            }
+        }
+        Method::Throttle => {} // built after the struct (needs profiler)
+    }
+    let throttle = if cfg.method == Method::Throttle {
+        let mut profiler =
+            Profiler::new(perf.clone(), power.clone(), cfg.sim_noise, cfg.seed ^ 0x7417);
+        let fitted = profiler.fit(3);
+        Some(PrefillOptimizer::new(fitted, cfg.prefill_opt.idle_clock_mhz))
+    } else {
+        None
+    };
+
+    let mut engine = Engine {
+        cfg,
+        trace,
+        opts,
+        perf,
+        router,
+        q: EventQueue::new(),
+        gpus,
+        prefill_queues: vec![VecDeque::new(), VecDeque::new()],
+        prefill_workers,
+        decode_workers,
+        decode_wait: VecDeque::new(),
+        prefill_opts,
+        decode_ctls,
+        nv_prefill,
+        nv_decode,
+        throttle,
+        slo: {
+            let mut t = SloTracker::new(cfg.slo.clone());
+            t.keep_outcomes = opts.keep_outcomes;
+            t
+        },
+        rng: Pcg64::new(cfg.seed, 0xE2617E),
+        completed: 0,
+        generated_tokens: 0,
+        global_tps: TpsWindow::new(0.2),
+        tps_series: Vec::new(),
+        jobs_scratch: Vec::new(),
+        ttft_target_sm: cfg.slo.ttft_short_medium_s * cfg.prefill_margin,
+        ttft_target_long: cfg.slo.ttft_long_s * cfg.prefill_margin,
+    };
+    engine.run_loop()
+}
+
+impl<'a> Engine<'a> {
+    fn run_loop(&mut self) -> RunResult {
+        // Seed arrivals + ticks.
+        for i in 0..self.trace.requests.len() {
+            self.q.schedule(self.trace.requests[i].arrival_s, Ev::Arrive(i));
+        }
+        match self.cfg.method {
+            Method::GreenLlm => {
+                self.q
+                    .schedule(self.cfg.decode_ctl.fine_tick_s, Ev::FineTick);
+                self.q
+                    .schedule(self.cfg.decode_ctl.coarse_tick_s, Ev::CoarseTick);
+                self.q
+                    .schedule(self.cfg.decode_ctl.adapt_interval_s, Ev::AdaptTick);
+                self.q.schedule(self.cfg.prefill_opt.tick_s, Ev::PrefillTick);
+            }
+            Method::DefaultNv | Method::PrefillSplit => {
+                self.q.schedule(0.2, Ev::GovernorTick);
+            }
+            Method::Throttle => {
+                self.q.schedule(1.0, Ev::GovernorTick); // coarse 1 s throttling
+            }
+            Method::Fixed(_) => {}
+        }
+        if self.opts.record_tps_series {
+            self.q.schedule(0.2, Ev::SampleTick);
+        }
+
+        let total = self.trace.requests.len() as u64;
+        while self.completed < total {
+            let Some((t, ev)) = self.q.pop() else { break };
+            match ev {
+                Ev::Arrive(i) => self.on_arrive(t, i),
+                Ev::PrefillDone { worker, seq } => self.on_prefill_done(t, worker, seq),
+                Ev::DecodeRound { worker, seq } => self.on_decode_round(t, worker, seq),
+                Ev::FineTick => {
+                    for w in 0..self.decode_workers.len() {
+                        let mhz = self.decode_ctls[w].fine_tick(t);
+                        let gpu = self.decode_workers[w].gpu;
+                        self.set_worker_clock(t, gpu, 1, mhz);
+                    }
+                    if self.completed < total {
+                        self.q.schedule_in(self.cfg.decode_ctl.fine_tick_s, Ev::FineTick);
+                    }
+                }
+                Ev::CoarseTick => {
+                    for ctl in self.decode_ctls.iter_mut() {
+                        ctl.coarse_tick(t);
+                    }
+                    if self.completed < total {
+                        self.q
+                            .schedule_in(self.cfg.decode_ctl.coarse_tick_s, Ev::CoarseTick);
+                    }
+                }
+                Ev::AdaptTick => {
+                    for ctl in self.decode_ctls.iter_mut() {
+                        ctl.adapt_tick(t);
+                    }
+                    if self.completed < total {
+                        self.q
+                            .schedule_in(self.cfg.decode_ctl.adapt_interval_s, Ev::AdaptTick);
+                    }
+                }
+                Ev::PrefillTick => {
+                    for w in 0..self.prefill_workers.len() {
+                        self.update_prefill_clock(t, w);
+                    }
+                    if self.completed < total {
+                        self.q.schedule_in(self.cfg.prefill_opt.tick_s, Ev::PrefillTick);
+                    }
+                }
+                Ev::GovernorTick => {
+                    if self.throttle.is_some() {
+                        self.throttle_tick(t);
+                        if self.completed < total {
+                            self.q.schedule_in(1.0, Ev::GovernorTick);
+                        }
+                    } else {
+                        self.nv_tick(t);
+                        if self.completed < total {
+                            self.q.schedule_in(0.2, Ev::GovernorTick);
+                        }
+                    }
+                }
+                Ev::SampleTick => {
+                    let tps = self.global_tps.tps(t);
+                    self.tps_series.push((t, tps));
+                    if self.completed < total {
+                        self.q.schedule_in(0.2, Ev::SampleTick);
+                    }
+                }
+            }
+        }
+
+        // Final energy integration.
+        let end_t = self.q.now().max(self.trace.duration_s);
+        for g in self.gpus.iter_mut() {
+            g.advance(end_t);
+        }
+        let n_prefill_gpus =
+            self.cfg.pools.prefill_workers * self.cfg.pools.gpus_per_prefill_worker;
+        let prefill_energy: f64 = self.gpus[..n_prefill_gpus]
+            .iter()
+            .map(|g| g.energy_j())
+            .sum();
+        let decode_energy: f64 = self.gpus[n_prefill_gpus..]
+            .iter()
+            .map(|g| g.energy_j())
+            .sum();
+        let (bsum, bsamp) = self
+            .decode_workers
+            .iter()
+            .fold((0u64, 0u64), |(s, n), w| (s + w.batch_sum, n + w.batch_samples));
+
+        RunResult {
+            trace_name: self.trace.name.clone(),
+            method: self.cfg.method,
+            slo: std::mem::replace(&mut self.slo, SloTracker::new(self.cfg.slo.clone())),
+            prefill_energy_j: prefill_energy,
+            decode_energy_j: decode_energy,
+            total_energy_j: prefill_energy + decode_energy,
+            generated_tokens: self.generated_tokens,
+            completed: self.completed,
+            sim_duration_s: end_t,
+            events_processed: self.q.popped,
+            decode_freq_trace: self.gpus[n_prefill_gpus].freq_trace.clone(),
+            prefill_freq_trace: self.gpus[0].freq_trace.clone(),
+            decode_tps_series: std::mem::take(&mut self.tps_series),
+            mean_decode_batch: if bsamp == 0 {
+                0.0
+            } else {
+                bsum as f64 / bsamp as f64
+            },
+            band_switches: self.decode_ctls.iter().map(|c| c.band_switches).sum(),
+            adaptations: self.decode_ctls.iter().map(|c| c.adaptations).sum(),
+            fine_ticks: self.decode_ctls.iter().map(|c| c.fine_ticks).sum(),
+        }
+    }
+
+    // -- helpers -------------------------------------------------------------
+
+    fn set_worker_clock(&mut self, t: f64, first_gpu: usize, n: usize, mhz: u32) {
+        for g in first_gpu..first_gpu + n {
+            self.gpus[g].set_app_clock(t, mhz);
+        }
+    }
+
+    fn prefill_clock(&self, worker: usize) -> u32 {
+        self.gpus[self.prefill_workers[worker].gpus[0]].sm_clock()
+    }
+
+    /// Deadline for a request's first token under the controller margin.
+    fn deadline_of(&self, req_idx: usize) -> f64 {
+        let r = &self.trace.requests[req_idx];
+        let slo = match r.route_class() {
+            crate::workload::request::RouteClass::Long => self.ttft_target_long,
+            _ => self.ttft_target_sm,
+        };
+        r.arrival_s + slo
+    }
+
+    fn update_prefill_clock(&mut self, t: f64, worker: usize) {
+        if self.prefill_opts.is_empty() {
+            return;
+        }
+        let queue = self.prefill_workers[worker].queue;
+        // The in-flight job heads the FIFO view (its remaining work is
+        // over-approximated by its full t_ref — conservative). Reuses the
+        // scratch buffer: this runs every prefill tick × worker.
+        let mut jobs = std::mem::take(&mut self.jobs_scratch);
+        jobs.clear();
+        if let Some((req_idx, _)) = self.prefill_workers[worker].current {
+            jobs.push(PrefillJobView {
+                prompt_len: self.trace.requests[req_idx].prompt_len,
+                deadline_s: self.deadline_of(req_idx),
+            });
+        }
+        jobs.extend(self.prefill_queues[queue].iter().map(|j| PrefillJobView {
+            prompt_len: self.trace.requests[j.req_idx].prompt_len,
+            deadline_s: self.deadline_of(j.req_idx),
+        }));
+        let mhz = self.prefill_opts[worker].optimal_clock(t, &jobs);
+        self.jobs_scratch = jobs;
+        let (g0, n) = (
+            self.prefill_workers[worker].gpus[0],
+            self.prefill_workers[worker].gpus.len(),
+        );
+        self.set_worker_clock(t, g0, n, mhz);
+    }
+
+    /// throttLL'eM-lite (1 Hz + dispatch boundaries): per-query load
+    /// prediction → lowest *predicted-feasible* clock per pool. No
+    /// phase-aware energy optimization, no feedback fine loop — the
+    /// predictive-throttling baseline the paper's related work describes.
+    fn throttle_tick(&mut self, t: f64) {
+        for w in 0..self.prefill_workers.len() {
+            self.throttle_prefill_update(t, w);
+        }
+        // Decode: predict the step time for the *current* batch from the
+        // model and pick the lowest clock that holds the TBT target. Open
+        // loop: joiners and noise between ticks are not corrected, so a
+        // fixed safety margin (7 %) stands in for the feedback GreenLLM's
+        // fine loop provides.
+        let target = self.cfg.slo.tbt_p95_s * self.cfg.decode_margin / 1.07;
+        for w in 0..self.decode_workers.len() {
+            let b = self.decode_workers[w].streams.len();
+            if b == 0 {
+                continue;
+            }
+            let avg_ctx = self.decode_workers[w].streams.iter().map(|s| s.ctx).sum::<f64>()
+                / b as f64;
+            let ladder = crate::gpu::freq::FreqLadder::a100();
+            let mut chosen = ladder.max_mhz;
+            for mhz in ladder.iter() {
+                if self.perf.decode_step_time(b, avg_ctx, mhz) <= target {
+                    chosen = mhz;
+                    break;
+                }
+            }
+            let gpu = self.decode_workers[w].gpu;
+            self.gpus[gpu].set_app_clock(t, chosen);
+        }
+    }
+
+    /// Prefill half of the throttle baseline — also invoked at dispatch
+    /// boundaries (throttLL'eM predicts per query, not per interval).
+    fn throttle_prefill_update(&mut self, t: f64, w: usize) {
+        if self.throttle.is_none() {
+            return;
+        }
+        let mut jobs = std::mem::take(&mut self.jobs_scratch);
+        jobs.clear();
+        let queue = self.prefill_workers[w].queue;
+        let in_flight = self.prefill_workers[w].current.map(|(req_idx, _)| req_idx);
+        for req_idx in in_flight
+            .into_iter()
+            .chain(self.prefill_queues[queue].iter().map(|j| j.req_idx))
+        {
+            jobs.push(PrefillJobView {
+                prompt_len: self.trace.requests[req_idx].prompt_len,
+                deadline_s: self.deadline_of(req_idx),
+            });
+        }
+        let mhz = self
+            .throttle
+            .as_mut()
+            .unwrap()
+            .min_feasible_clock(t, &jobs);
+        self.jobs_scratch = jobs;
+        let (g0, n) = (
+            self.prefill_workers[w].gpus[0],
+            self.prefill_workers[w].gpus.len(),
+        );
+        for g in g0..g0 + n {
+            self.gpus[g].set_app_clock(t, mhz);
+        }
+    }
+
+    fn nv_tick(&mut self, t: f64) {
+        for w in 0..self.prefill_workers.len() {
+            let busy = self.prefill_workers[w].current.is_some();
+            let mhz = self.nv_prefill[w].tick(t, busy);
+            let (g0, n) = (
+                self.prefill_workers[w].gpus[0],
+                self.prefill_workers[w].gpus.len(),
+            );
+            self.set_worker_clock(t, g0, n, mhz);
+        }
+        for w in 0..self.decode_workers.len() {
+            let busy = !self.decode_workers[w].streams.is_empty();
+            let mhz = self.nv_decode[w].tick(t, busy);
+            let gpu = self.decode_workers[w].gpu;
+            self.set_worker_clock(t, gpu, 1, mhz);
+        }
+    }
+
+    // -- prefill -------------------------------------------------------------
+
+    fn on_arrive(&mut self, t: f64, req_idx: usize) {
+        let queue = self.router.queue_for(&self.trace.requests[req_idx]);
+        self.prefill_queues[queue].push_back(QueuedJob { req_idx });
+        // Kick an idle worker serving (or allowed to steal from) this queue.
+        let workers = self.router.candidate_workers(queue);
+        if let Some(&w) = workers
+            .iter()
+            .find(|&&w| self.prefill_workers[w].current.is_none())
+        {
+            self.dispatch_prefill(t, w);
+        } else if !self.prefill_opts.is_empty() {
+            // Queue grew: let the optimizer react immediately for busy
+            // workers too (clock applies to subsequent jobs).
+            for w in workers {
+                self.update_prefill_clock(t, w);
+            }
+        }
+    }
+
+    fn dispatch_prefill(&mut self, t: f64, worker: usize) {
+        let queue = self.prefill_workers[worker].queue;
+        let job = self.prefill_queues[queue].pop_front().or_else(|| {
+            // Own queue drained: steal if the router allows it.
+            self.router
+                .steal_queue_of_worker(worker)
+                .and_then(|q| self.prefill_queues[q].pop_front())
+        });
+        let Some(job) = job else {
+            // Nothing to do: park util at 0 (and clock, for GreenLLM).
+            let (g0, n) = (
+                self.prefill_workers[worker].gpus[0],
+                self.prefill_workers[worker].gpus.len(),
+            );
+            for g in g0..g0 + n {
+                self.gpus[g].set_util(t, 0.0);
+            }
+            if !self.prefill_opts.is_empty() {
+                self.update_prefill_clock(t, worker);
+            }
+            return;
+        };
+        // Mark the job in flight *before* the clock decision so the
+        // optimizer accounts for its work (then overwrite seq below).
+        self.prefill_workers[worker].seq += 1;
+        let seq = self.prefill_workers[worker].seq;
+        self.prefill_workers[worker].current = Some((job.req_idx, seq));
+        // Refresh the clock decision at the dispatch boundary.
+        if !self.prefill_opts.is_empty() {
+            self.update_prefill_clock(t, worker);
+        } else if self.throttle.is_some() {
+            self.throttle_prefill_update(t, worker);
+        } else if !self.nv_prefill.is_empty() {
+            let mhz = self.nv_prefill[worker].tick(t, true);
+            let (g0, n) = (
+                self.prefill_workers[worker].gpus[0],
+                self.prefill_workers[worker].gpus.len(),
+            );
+            self.set_worker_clock(t, g0, n, mhz);
+        }
+        let mhz = self.prefill_clock(worker);
+        let len = self.trace.requests[job.req_idx].prompt_len;
+        let dt = self.perf.prefill_time(len as usize, mhz) * self.rng.noise(self.cfg.sim_noise);
+        let (g0, n) = (
+            self.prefill_workers[worker].gpus[0],
+            self.prefill_workers[worker].gpus.len(),
+        );
+        for g in g0..g0 + n {
+            self.gpus[g].set_util(t, 1.0);
+        }
+        self.q.schedule(t + dt, Ev::PrefillDone { worker, seq });
+    }
+
+    fn on_prefill_done(&mut self, t: f64, worker: usize, seq: u64) {
+        let Some((req_idx, cur_seq)) = self.prefill_workers[worker].current else {
+            return;
+        };
+        if cur_seq != seq {
+            return; // stale event
+        }
+        self.prefill_workers[worker].current = None;
+        let req = &self.trace.requests[req_idx];
+        let ttft = t - req.arrival_s;
+        self.generated_tokens += 1; // prefill emits the first token
+        self.global_tps.record(t, 1);
+
+        if req.output_len <= 1 {
+            // Prefill-only request (microbenchmarks): complete now.
+            let outcome = RequestOutcome {
+                id: req.id,
+                prompt_len: req.prompt_len,
+                output_len: req.output_len,
+                arrival_s: req.arrival_s,
+                ttft_s: ttft,
+                tbt_p95_s: 0.0,
+                finish_s: t,
+            };
+            self.slo.record(outcome);
+            self.completed += 1;
+        } else {
+            let stream = Stream {
+                req_idx,
+                remaining: req.output_len - 1,
+                ctx: req.prompt_len as f64 + 1.0,
+                last_token_t: t,
+                joined_t: t,
+                tbts: Vec::with_capacity(req.output_len as usize),
+            };
+            self.admit_stream(t, stream, ttft);
+        }
+        // Next job (or park).
+        self.dispatch_prefill(t, worker);
+    }
+
+    // -- decode ----------------------------------------------------------------
+
+    fn admit_stream(&mut self, t: f64, stream: Stream, _ttft: f64) {
+        // TTFT is recorded at completion together with TBT stats; stash it
+        // via the stream's joined_t (= prefill done time).
+        let cap = self.cfg.pools.max_streams_per_decode_worker;
+        let best = (0..self.decode_workers.len())
+            .filter(|&w| self.decode_workers[w].streams.len() < cap)
+            .min_by_key(|&w| self.decode_workers[w].streams.len());
+        match best {
+            Some(w) => {
+                self.decode_workers[w].streams.push(stream);
+                if !self.decode_workers[w].round_active {
+                    self.start_round(t, w);
+                }
+            }
+            None => self.decode_wait.push_back(stream),
+        }
+    }
+
+    fn start_round(&mut self, t: f64, worker: usize) {
+        let w = &mut self.decode_workers[worker];
+        if w.streams.is_empty() {
+            w.round_active = false;
+            let gpu = w.gpu;
+            self.gpus[gpu].set_util(t, 0.0);
+            return;
+        }
+        w.round_active = true;
+        w.round_start = t;
+        w.seq += 1;
+        let seq = w.seq;
+        let batch = w.streams.len();
+        let avg_ctx = w.streams.iter().map(|s| s.ctx).sum::<f64>() / batch as f64;
+        w.batch_samples += 1;
+        w.batch_sum += batch as u64;
+        let gpu = w.gpu;
+        let mhz = self.gpus[gpu].sm_clock();
+        let util = self.perf.decode_util(batch);
+        self.gpus[gpu].set_util(t, util);
+        let dt =
+            self.perf.decode_step_time(batch, avg_ctx, mhz) * self.rng.noise(self.cfg.sim_noise);
+        self.q.schedule(t + dt, Ev::DecodeRound { worker, seq });
+    }
+
+    fn on_decode_round(&mut self, t: f64, worker: usize, seq: u64) {
+        if self.decode_workers[worker].seq != seq || !self.decode_workers[worker].round_active {
+            return; // stale
+        }
+        let round_start = self.decode_workers[worker].round_start;
+        let mut emitted: u32 = 0;
+        let mut finished: Vec<Stream> = Vec::new();
+        let mut steady: u32 = 0;
+        {
+            // Single fused pass: emit tokens AND feed the controller's TBT
+            // window (split borrows keep this allocation-free). Steady
+            // streams (last token at round start) all observe the same
+            // round-duration TBT, fed as ONE weighted sample below — §Perf.
+            let w = &mut self.decode_workers[worker];
+            let mut ctl = self.decode_ctls.get_mut(worker);
+            let mut i = 0;
+            while i < w.streams.len() {
+                // Streams that joined mid-round wait for the next one.
+                if w.streams[i].joined_t > round_start {
+                    i += 1;
+                    continue;
+                }
+                let s = &mut w.streams[i];
+                let tbt = t - s.last_token_t;
+                s.tbts.push(tbt);
+                if s.last_token_t == round_start {
+                    steady += 1;
+                } else if let Some(c) = ctl.as_deref_mut() {
+                    c.on_tbt(tbt); // fresh joiner: distinct first-token TBT
+                }
+                s.last_token_t = t;
+                s.ctx += 1.0;
+                s.remaining -= 1;
+                emitted += 1;
+                if s.remaining == 0 {
+                    finished.push(w.streams.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        self.generated_tokens += emitted as u64;
+        self.global_tps.record(t, emitted);
+        if let Some(ctl) = self.decode_ctls.get_mut(worker) {
+            ctl.on_tbt_weighted(t - round_start, steady);
+            ctl.on_tokens(t, emitted);
+        }
+        for s in finished {
+            self.finish_stream(t, s);
+        }
+        // Backfill from the wait queue.
+        let cap = self.cfg.pools.max_streams_per_decode_worker;
+        while self.decode_workers[worker].streams.len() < cap {
+            match self.decode_wait.pop_front() {
+                Some(s) => self.decode_workers[worker].streams.push(s),
+                None => break,
+            }
+        }
+        self.start_round(t, worker);
+    }
+
+    fn finish_stream(&mut self, t: f64, s: Stream) {
+        let req = &self.trace.requests[s.req_idx];
+        let ttft = s.joined_t - req.arrival_s;
+        let tbt_p95 = percentile_exact(&s.tbts, 0.95);
+        self.slo.record(RequestOutcome {
+            id: req.id,
+            prompt_len: req.prompt_len,
+            output_len: req.output_len,
+            arrival_s: req.arrival_s,
+            ttft_s: ttft,
+            tbt_p95_s: tbt_p95,
+            finish_s: t,
+        });
+        self.completed += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::request::Request;
+
+    fn tiny_trace(n: usize, qps: f64, prompt: u32, output: u32) -> Trace {
+        Trace {
+            name: "test".into(),
+            duration_s: n as f64 / qps,
+            requests: (0..n)
+                .map(|i| Request {
+                    id: i as u64,
+                    arrival_s: i as f64 / qps,
+                    prompt_len: prompt,
+                    output_len: output,
+                })
+                .collect(),
+        }
+    }
+
+    fn cfg(method: Method) -> Config {
+        Config {
+            method,
+            sim_noise: 0.0,
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn all_requests_complete_exactly_once() {
+        for method in [Method::DefaultNv, Method::GreenLlm, Method::Fixed(900)] {
+            let trace = tiny_trace(50, 5.0, 400, 20);
+            let r = run(&cfg(method), &trace, &RunOptions::default());
+            assert_eq!(r.completed, 50, "{method:?}");
+            assert_eq!(r.slo.completed, 50);
+        }
+    }
+
+    #[test]
+    fn token_accounting_exact() {
+        let trace = tiny_trace(20, 4.0, 300, 16);
+        let r = run(&cfg(Method::GreenLlm), &trace, &RunOptions::default());
+        assert_eq!(r.generated_tokens, 20 * 16);
+    }
+
+    #[test]
+    fn prefill_only_requests_complete_at_prefill() {
+        let trace = tiny_trace(10, 2.0, 512, 1);
+        let r = run(&cfg(Method::DefaultNv), &trace, &RunOptions::default());
+        assert_eq!(r.completed, 10);
+        assert_eq!(r.generated_tokens, 10);
+        // TTFT ≈ prefill time at boost clocks (~60 ms), way under SLO.
+        assert_eq!(r.slo.ttft_pass_rate(), 1.0);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let trace = tiny_trace(40, 5.0, 400, 30);
+        let a = run(&cfg(Method::GreenLlm), &trace, &RunOptions::default());
+        let b = run(&cfg(Method::GreenLlm), &trace, &RunOptions::default());
+        assert_eq!(a.total_energy_j, b.total_energy_j);
+        assert_eq!(a.generated_tokens, b.generated_tokens);
+        assert_eq!(a.slo.ttft_pass_rate(), b.slo.ttft_pass_rate());
+    }
+
+    #[test]
+    fn energy_positive_and_split_by_pool() {
+        let trace = tiny_trace(20, 4.0, 400, 20);
+        let r = run(&cfg(Method::DefaultNv), &trace, &RunOptions::default());
+        assert!(r.prefill_energy_j > 0.0);
+        assert!(r.decode_energy_j > 0.0);
+        assert!((r.total_energy_j - r.prefill_energy_j - r.decode_energy_j).abs() < 1e-9);
+        // Lower bound: every GPU at least idles for the duration.
+        let idle_floor = 8.0 * 40.0 * r.sim_duration_s;
+        assert!(r.total_energy_j > idle_floor);
+    }
+
+    #[test]
+    fn greenllm_saves_energy_at_light_load() {
+        let trace = tiny_trace(60, 2.0, 400, 60);
+        let nv = run(&cfg(Method::DefaultNv), &trace, &RunOptions::default());
+        let green = run(&cfg(Method::GreenLlm), &trace, &RunOptions::default());
+        assert!(
+            green.total_energy_j < 0.95 * nv.total_energy_j,
+            "green={} nv={}",
+            green.total_energy_j,
+            nv.total_energy_j
+        );
+        // ... without tanking SLOs.
+        assert!(green.slo.ttft_pass_rate() > 0.9);
+        assert!(green.slo.tbt_pass_rate() > 0.9);
+    }
+
+    #[test]
+    fn slo_pass_rates_high_at_moderate_load() {
+        let trace = tiny_trace(100, 5.0, 400, 40);
+        let r = run(&cfg(Method::GreenLlm), &trace, &RunOptions::default());
+        assert!(r.slo.ttft_pass_rate() > 0.95, "{}", r.slo.ttft_pass_rate());
+        assert!(r.slo.tbt_pass_rate() > 0.9, "{}", r.slo.tbt_pass_rate());
+    }
+
+    #[test]
+    fn freq_trace_recorded_when_requested() {
+        let trace = tiny_trace(30, 5.0, 400, 30);
+        let opts = RunOptions {
+            record_freq_trace: true,
+            record_tps_series: true,
+            ..Default::default()
+        };
+        let r = run(&cfg(Method::GreenLlm), &trace, &opts);
+        assert!(!r.decode_freq_trace.is_empty());
+        assert!(!r.decode_tps_series.is_empty());
+    }
+
+    #[test]
+    fn decode_batch_occupancy_reported() {
+        let trace = tiny_trace(40, 8.0, 300, 50);
+        let r = run(&cfg(Method::DefaultNv), &trace, &RunOptions::default());
+        assert!(r.mean_decode_batch >= 1.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! The Layer-3 coordinator: adaptive prompt routing, per-class queues,
+//! continuous-batching decode pools, and the discrete-event serving engine
+//! that binds workers, governors and telemetry together.
+//!
+//! The same routing/queue/controller logic drives both the simulated
+//! DGX-A100 node (trace experiments, `engine`) and the real PJRT serving
+//! path (`crate::server`).
+
+pub mod cluster;
+pub mod engine;
+pub mod router;
+
+pub use engine::{run, RunOptions, RunResult};
+pub use router::Router;

@@ -1,0 +1,181 @@
+//! Adaptive prompt routing (§3.1): length-based queue selection.
+//!
+//! With routing enabled, short/medium prompts (< 1024 tokens) go to the
+//! short-context queue and long prompts to the long-context queue, so a
+//! rare long prefill can never head-of-line-block the common short ones.
+//! Without routing (the defaultNV baseline) everything shares one mixed
+//! queue and any idle prefill worker serves it.
+
+use crate::workload::request::{Request, RouteClass};
+
+/// Queue index constants.
+pub const Q_SHORT_MEDIUM: usize = 0;
+pub const Q_LONG: usize = 1;
+
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub routing: bool,
+    pub prefill_workers: usize,
+}
+
+impl Router {
+    pub fn new(routing: bool, prefill_workers: usize) -> Self {
+        assert!(prefill_workers >= 1);
+        Router {
+            routing,
+            prefill_workers,
+        }
+    }
+
+    /// Number of prefill queues (2 with routing, 1 mixed without).
+    pub fn num_queues(&self) -> usize {
+        if self.routing && self.prefill_workers >= 2 {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Queue a request is routed to.
+    pub fn queue_for(&self, req: &Request) -> usize {
+        if self.num_queues() == 1 {
+            return Q_SHORT_MEDIUM;
+        }
+        match req.route_class() {
+            RouteClass::ShortMedium => Q_SHORT_MEDIUM,
+            RouteClass::Long => Q_LONG,
+        }
+    }
+
+    /// Queue served by a given prefill worker. With routing, the *last*
+    /// worker is the long-context worker (§3.1: dedicated heavy track) and
+    /// all others serve the short queue; without routing all workers share
+    /// the mixed queue.
+    pub fn queue_of_worker(&self, worker: usize) -> usize {
+        debug_assert!(worker < self.prefill_workers);
+        if self.num_queues() == 1 {
+            return Q_SHORT_MEDIUM;
+        }
+        if worker == self.prefill_workers - 1 {
+            Q_LONG
+        } else {
+            Q_SHORT_MEDIUM
+        }
+    }
+
+    /// Workers serving a given queue (used when work arrives).
+    pub fn workers_of_queue(&self, queue: usize) -> Vec<usize> {
+        (0..self.prefill_workers)
+            .filter(|&w| self.queue_of_worker(w) == queue)
+            .collect()
+    }
+
+    /// Work stealing: a worker whose own queue is empty may take the head
+    /// of the other queue. Stealing only-when-idle keeps §3.1's HoL
+    /// protection in expectation: the dedicated short worker still serves
+    /// shorts first, and a stolen long job can delay at most the shorts
+    /// arriving during its execution (rare, bounded) — matching the
+    /// paper's small PrefillSplit TTFT dip on long-heavy Azure code
+    /// slices, while avoiding a stranded half-pool when one class
+    /// dominates.
+    pub fn steal_queue_of_worker(&self, worker: usize) -> Option<usize> {
+        if self.num_queues() != 2 {
+            return None;
+        }
+        match self.queue_of_worker(worker) {
+            Q_LONG => Some(Q_SHORT_MEDIUM),
+            _ => Some(Q_LONG),
+        }
+    }
+
+    /// Candidate workers for newly arrived work on `queue`: its dedicated
+    /// workers plus any worker allowed to steal from it.
+    pub fn candidate_workers(&self, queue: usize) -> Vec<usize> {
+        (0..self.prefill_workers)
+            .filter(|&w| {
+                self.queue_of_worker(w) == queue || self.steal_queue_of_worker(w) == Some(queue)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(len: u32) -> Request {
+        Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_len: len,
+            output_len: 1,
+        }
+    }
+
+    #[test]
+    fn mixed_queue_without_routing() {
+        let r = Router::new(false, 2);
+        assert_eq!(r.num_queues(), 1);
+        assert_eq!(r.queue_for(&req(5000)), Q_SHORT_MEDIUM);
+        assert_eq!(r.queue_of_worker(0), Q_SHORT_MEDIUM);
+        assert_eq!(r.queue_of_worker(1), Q_SHORT_MEDIUM);
+        assert_eq!(r.workers_of_queue(Q_SHORT_MEDIUM), vec![0, 1]);
+    }
+
+    #[test]
+    fn split_queues_with_routing() {
+        let r = Router::new(true, 2);
+        assert_eq!(r.num_queues(), 2);
+        assert_eq!(r.queue_for(&req(100)), Q_SHORT_MEDIUM);
+        assert_eq!(r.queue_for(&req(1023)), Q_SHORT_MEDIUM);
+        assert_eq!(r.queue_for(&req(1024)), Q_LONG);
+        assert_eq!(r.queue_of_worker(0), Q_SHORT_MEDIUM);
+        assert_eq!(r.queue_of_worker(1), Q_LONG);
+    }
+
+    #[test]
+    fn routing_with_single_worker_degrades_to_mixed() {
+        let r = Router::new(true, 1);
+        assert_eq!(r.num_queues(), 1);
+        assert_eq!(r.queue_for(&req(4096)), Q_SHORT_MEDIUM);
+    }
+
+    #[test]
+    fn extra_workers_join_short_queue() {
+        let r = Router::new(true, 3);
+        assert_eq!(r.workers_of_queue(Q_SHORT_MEDIUM), vec![0, 1]);
+        assert_eq!(r.workers_of_queue(Q_LONG), vec![2]);
+    }
+
+    #[test]
+    fn symmetric_stealing_when_idle() {
+        let r = Router::new(true, 2);
+        assert_eq!(r.steal_queue_of_worker(0), Some(Q_LONG));
+        assert_eq!(r.steal_queue_of_worker(1), Some(Q_SHORT_MEDIUM));
+        // Arrivals of either class may wake either worker.
+        assert_eq!(r.candidate_workers(Q_SHORT_MEDIUM), vec![0, 1]);
+        assert_eq!(r.candidate_workers(Q_LONG), vec![0, 1]);
+    }
+
+    #[test]
+    fn no_stealing_without_routing() {
+        let r = Router::new(false, 2);
+        assert_eq!(r.steal_queue_of_worker(0), None);
+        assert_eq!(r.steal_queue_of_worker(1), None);
+    }
+
+    #[test]
+    fn every_worker_serves_exactly_one_queue() {
+        for routing in [false, true] {
+            for n in 1..5 {
+                let r = Router::new(routing, n);
+                let mut covered = vec![];
+                for q in 0..r.num_queues() {
+                    covered.extend(r.workers_of_queue(q));
+                }
+                covered.sort();
+                assert_eq!(covered, (0..n).collect::<Vec<_>>());
+            }
+        }
+    }
+}

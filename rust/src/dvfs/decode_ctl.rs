@@ -1,0 +1,360 @@
+//! The dual-loop decode controller (§3.3) — GreenLLM's runtime heart.
+//!
+//! Coarse loop (every 200 ms): map sliding-window TPS to a bucket of the
+//! profiled TPS→frequency table; switch the allowed frequency *band*
+//! (table value ± a few ladder steps) only after the TPS stays in the new
+//! bucket for 3 consecutive intervals (hysteresis).
+//!
+//! Fine loop (every 20 ms): compare the sliding P95 TBT against the SLO
+//! target; margin > 1.0 ⇒ +15 MHz (≤ band top), margin < 0.65 ⇒ −15 MHz
+//! (≥ band bottom), else hold.
+//!
+//! Adaptation loop (every 6 s): if > 80 % of the fine adjustments in the
+//! window were pinned at a band bound, shift the table entry for the
+//! current bucket one step in that direction (handles model drift).
+
+use crate::config::DecodeCtlConfig;
+use crate::dvfs::profiler::BandTable;
+use crate::gpu::freq::FreqLadder;
+use crate::metrics::{SlidingP95, TpsWindow};
+
+/// Frequency band: [lo, hi] in MHz, ladder-aligned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Band {
+    pub lo: u32,
+    pub hi: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodeController {
+    pub cfg: DecodeCtlConfig,
+    pub ladder: FreqLadder,
+    pub table: BandTable,
+    /// TBT SLO target × margin (s).
+    pub tbt_target_s: f64,
+    tps_window: TpsWindow,
+    tbt_window: SlidingP95,
+    cur_mhz: u32,
+    band: Band,
+    cur_bucket: usize,
+    /// (candidate bucket, consecutive intervals seen) for hysteresis.
+    pending: Option<(usize, u32)>,
+    // Adaptation counters over the current 6 s window.
+    adjusts_total: u32,
+    adjusts_pinned_hi: u32,
+    adjusts_pinned_lo: u32,
+    /// Counters for diagnostics/benches.
+    pub fine_ticks: u64,
+    pub band_switches: u64,
+    pub adaptations: u64,
+}
+
+impl DecodeController {
+    pub fn new(cfg: DecodeCtlConfig, table: BandTable, tbt_target_s: f64) -> Self {
+        let ladder = FreqLadder::a100();
+        let f0 = table.freqs[0];
+        let mut ctl = DecodeController {
+            tps_window: TpsWindow::new(cfg.tps_window_s),
+            tbt_window: SlidingP95::new(cfg.tbt_window),
+            cfg,
+            ladder,
+            table,
+            tbt_target_s,
+            cur_mhz: f0,
+            band: Band { lo: f0, hi: f0 },
+            cur_bucket: 0,
+            pending: None,
+            adjusts_total: 0,
+            adjusts_pinned_hi: 0,
+            adjusts_pinned_lo: 0,
+            fine_ticks: 0,
+            band_switches: 0,
+            adaptations: 0,
+        };
+        ctl.band = ctl.band_for_bucket(0);
+        ctl.cur_mhz = ctl.table.freqs[0];
+        ctl
+    }
+
+    /// §3.3.2: the fine loop's set point is constrained to the selected
+    /// band *and its two neighboring bands* — so the usable range spans
+    /// from the bucket-below's center to the bucket-above's center, padded
+    /// by the half-width.
+    fn band_for_bucket(&self, bucket: usize) -> Band {
+        let center = self.table.freqs[bucket];
+        let lo_c = self.table.freqs[bucket.saturating_sub(1)].min(center);
+        let hi_c = self.table.freqs[(bucket + 1).min(self.table.freqs.len() - 1)].max(center);
+        let half = self.cfg.band_halfwidth_steps * self.ladder.step_mhz;
+        Band {
+            lo: lo_c.saturating_sub(half).max(self.ladder.min_mhz),
+            hi: (hi_c + half).min(self.ladder.max_mhz),
+        }
+    }
+
+    /// Feed emitted tokens (decode rounds report batch size).
+    pub fn on_tokens(&mut self, now: f64, tokens: u32) {
+        self.tps_window.record(now, tokens);
+    }
+
+    /// Feed one per-stream TBT sample.
+    pub fn on_tbt(&mut self, tbt_s: f64) {
+        self.tbt_window.record(tbt_s);
+    }
+
+    /// Feed `count` identical TBT samples at once (all steady streams of a
+    /// decode round observe the same round duration — §Perf).
+    pub fn on_tbt_weighted(&mut self, tbt_s: f64, count: u32) {
+        self.tbt_window.record_weighted(tbt_s, count);
+    }
+
+    /// Coarse loop (§3.3.1). Returns the new band if it switched.
+    pub fn coarse_tick(&mut self, now: f64) -> Option<Band> {
+        let tps = self.tps_window.tps(now);
+        let bucket = self.table.bucket_of(tps);
+        if bucket == self.cur_bucket {
+            self.pending = None;
+            return None;
+        }
+        let count = match self.pending {
+            Some((b, c)) if b == bucket => c + 1,
+            _ => 1,
+        };
+        if count >= self.cfg.hysteresis_ticks {
+            self.pending = None;
+            self.cur_bucket = bucket;
+            self.band = self.band_for_bucket(bucket);
+            self.cur_mhz = self.cur_mhz.clamp(self.band.lo, self.band.hi);
+            self.band_switches += 1;
+            Some(self.band)
+        } else {
+            self.pending = Some((bucket, count));
+            None
+        }
+    }
+
+    /// Fine loop (§3.3.2). Returns the clock to apply now.
+    pub fn fine_tick(&mut self, _now: f64) -> u32 {
+        self.fine_ticks += 1;
+        if self.tbt_window.is_empty() {
+            // No tokens flowing: drop toward the band floor to save energy.
+            self.cur_mhz = self.band.lo;
+            return self.cur_mhz;
+        }
+        let margin = self.tbt_window.p95() / self.tbt_target_s;
+        self.adjusts_total += 1;
+        if margin > self.cfg.margin_hi {
+            if self.cur_mhz >= self.band.hi {
+                self.adjusts_pinned_hi += 1;
+            }
+            self.cur_mhz =
+                self.ladder
+                    .step(self.cur_mhz, true, self.band.lo, self.band.hi);
+        } else if margin < self.cfg.margin_lo {
+            if self.cur_mhz <= self.band.lo {
+                self.adjusts_pinned_lo += 1;
+            }
+            self.cur_mhz =
+                self.ladder
+                    .step(self.cur_mhz, false, self.band.lo, self.band.hi);
+        }
+        self.cur_mhz
+    }
+
+    /// Adaptation loop (§3.3.3): shift the table under sustained bias.
+    pub fn adapt_tick(&mut self, _now: f64) {
+        if self.adjusts_total >= 10 {
+            let frac_hi = self.adjusts_pinned_hi as f64 / self.adjusts_total as f64;
+            let frac_lo = self.adjusts_pinned_lo as f64 / self.adjusts_total as f64;
+            if frac_hi > self.cfg.adapt_bias {
+                self.table.shift(self.cur_bucket, 1, &self.ladder);
+                self.band = self.band_for_bucket(self.cur_bucket);
+                self.adaptations += 1;
+            } else if frac_lo > self.cfg.adapt_bias {
+                self.table.shift(self.cur_bucket, -1, &self.ladder);
+                self.band = self.band_for_bucket(self.cur_bucket);
+                self.adaptations += 1;
+            }
+            self.cur_mhz = self.cur_mhz.clamp(self.band.lo, self.band.hi);
+        }
+        self.adjusts_total = 0;
+        self.adjusts_pinned_hi = 0;
+        self.adjusts_pinned_lo = 0;
+    }
+
+    pub fn current_clock(&self) -> u32 {
+        self.cur_mhz
+    }
+
+    pub fn current_band(&self) -> Band {
+        self.band
+    }
+
+    pub fn current_tps(&mut self, now: f64) -> f64 {
+        self.tps_window.tps(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> BandTable {
+        // 0..1000 TPS in 100-TPS buckets, 300→1200 MHz linearly.
+        BandTable {
+            bucket_width: 100.0,
+            freqs: (0..11).map(|i| 300 + i * 90).map(|f| f / 15 * 15).collect(),
+        }
+    }
+
+    fn ctl() -> DecodeController {
+        DecodeController::new(DecodeCtlConfig::default(), table(), 0.100)
+    }
+
+    #[test]
+    fn band_switch_requires_hysteresis() {
+        let mut c = ctl();
+        // Jump TPS into bucket 5 (≈ 500 TPS): needs 3 consecutive intervals.
+        for i in 0..2 {
+            c.on_tokens(i as f64 * 0.2, 100);
+            assert_eq!(c.coarse_tick(i as f64 * 0.2 + 0.01), None, "tick {i}");
+        }
+        c.on_tokens(0.4, 100);
+        let band = c.coarse_tick(0.41);
+        assert!(band.is_some(), "third interval must switch");
+        assert_eq!(c.band_switches, 1);
+    }
+
+    #[test]
+    fn tps_flapping_does_not_switch() {
+        let mut c = ctl();
+        // Alternate between buckets so no 3-run forms.
+        for i in 0..12 {
+            let t = i as f64 * 0.2;
+            let tokens = if i % 2 == 0 { 100 } else { 20 };
+            c.on_tokens(t, tokens);
+            c.coarse_tick(t + 0.01);
+        }
+        assert_eq!(c.band_switches, 0, "flapping must be filtered");
+    }
+
+    #[test]
+    fn fine_loop_raises_on_high_margin() {
+        let mut c = ctl();
+        // Force a wide band for the test.
+        c.band = Band { lo: 300, hi: 600 };
+        c.cur_mhz = 450;
+        c.on_tbt(0.120); // margin 1.2 > 1.0
+        let f = c.fine_tick(0.0);
+        assert_eq!(f, 465);
+        // Repeated ticks keep climbing to the band top, never past it.
+        for _ in 0..20 {
+            c.fine_tick(0.0);
+        }
+        assert_eq!(c.current_clock(), 600);
+    }
+
+    #[test]
+    fn fine_loop_lowers_on_low_margin() {
+        let mut c = ctl();
+        c.band = Band { lo: 300, hi: 600 };
+        c.cur_mhz = 450;
+        c.on_tbt(0.050); // margin 0.5 < 0.65
+        assert_eq!(c.fine_tick(0.0), 435);
+        for _ in 0..20 {
+            c.fine_tick(0.0);
+        }
+        assert_eq!(c.current_clock(), 300);
+    }
+
+    #[test]
+    fn fine_loop_holds_in_deadband() {
+        let mut c = ctl();
+        c.band = Band { lo: 300, hi: 600 };
+        c.cur_mhz = 450;
+        c.on_tbt(0.080); // margin 0.8 ∈ [0.65, 1.0]: hold
+        assert_eq!(c.fine_tick(0.0), 450);
+    }
+
+    #[test]
+    fn rate_limited_to_one_step_per_tick() {
+        let mut c = ctl();
+        c.band = Band { lo: 300, hi: 1410 };
+        c.cur_mhz = 300;
+        c.on_tbt(10.0); // wildly over target
+        let f1 = c.fine_tick(0.0);
+        assert_eq!(f1, 315, "one 15 MHz step per tick, not a jump");
+    }
+
+    #[test]
+    fn adaptation_shifts_table_up_under_sustained_hi_pin() {
+        let mut c = ctl();
+        let bucket = c.cur_bucket;
+        let before = c.table.freqs[bucket];
+        c.on_tbt(0.200); // persistent violation
+        // Pin at band top for a whole adaptation window.
+        for _ in 0..100 {
+            c.fine_tick(0.0);
+        }
+        c.adapt_tick(6.0);
+        assert_eq!(c.table.freqs[bucket], before + 15);
+        assert_eq!(c.adaptations, 1);
+    }
+
+    #[test]
+    fn adaptation_shifts_table_down_under_sustained_lo_pin() {
+        let mut c = ctl();
+        let bucket = c.cur_bucket;
+        // Move table entry up first so there is room to shift down.
+        c.table.freqs[bucket] = 600;
+        c.band = c.band_for_bucket(bucket);
+        c.cur_mhz = c.band.lo;
+        c.on_tbt(0.010); // far below target: wants to go lower
+        for _ in 0..100 {
+            c.fine_tick(0.0);
+        }
+        c.adapt_tick(6.0);
+        assert_eq!(c.table.freqs[bucket], 585);
+    }
+
+    #[test]
+    fn no_adaptation_without_bias() {
+        let mut c = ctl();
+        c.band = Band { lo: 300, hi: 900 };
+        c.cur_mhz = 600;
+        c.on_tbt(0.080); // deadband: no adjustments pinned
+        for _ in 0..50 {
+            c.fine_tick(0.0);
+        }
+        let before = c.table.freqs.clone();
+        c.adapt_tick(6.0);
+        assert_eq!(c.table.freqs, before);
+    }
+
+    #[test]
+    fn idle_worker_drops_to_band_floor() {
+        let mut c = ctl();
+        c.band = Band { lo: 300, hi: 900 };
+        c.cur_mhz = 700;
+        // No TBT samples at all.
+        assert_eq!(c.fine_tick(0.0), 300);
+    }
+
+    #[test]
+    fn clock_always_on_ladder_and_in_band() {
+        let mut c = ctl();
+        let ladder = FreqLadder::a100();
+        for i in 0..500 {
+            let t = i as f64 * 0.02;
+            if i % 3 == 0 {
+                c.on_tokens(t, (i % 40) as u32);
+            }
+            c.on_tbt(0.03 + 0.09 * ((i as f64 * 0.37).sin().abs()));
+            if i % 10 == 0 {
+                c.coarse_tick(t);
+            }
+            let f = c.fine_tick(t);
+            assert!(ladder.contains(f), "off-ladder clock {f}");
+            assert!(f >= c.current_band().lo && f <= c.current_band().hi);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Baseline governors: NVIDIA's default behaviour and fixed clocks.
+//!
+//! `defaultNV` models what the paper measures in Fig. 1a: the stock
+//! governor drives the SM clock in a narrow high band (~1.1–1.4 GHz)
+//! whenever there is work, with small dithering, and is completely blind
+//! to token throughput. It only sags when the GPU has been idle a while.
+
+use crate::gpu::freq::FreqLadder;
+use crate::util::rng::Pcg64;
+
+/// NVIDIA-default-like governor (per worker).
+#[derive(Debug, Clone)]
+pub struct DefaultNvGovernor {
+    ladder: FreqLadder,
+    rng: Pcg64,
+    last_busy_t: f64,
+    cur_mhz: u32,
+    /// Busy-band low edge (boost clocks wander in [busy_lo, max]).
+    busy_lo_mhz: u32,
+    /// Clock after the idle-sag timeout.
+    idle_mhz: u32,
+    idle_timeout_s: f64,
+}
+
+impl DefaultNvGovernor {
+    pub fn new(seed: u64) -> Self {
+        let ladder = FreqLadder::a100();
+        DefaultNvGovernor {
+            cur_mhz: ladder.max_mhz,
+            ladder,
+            rng: Pcg64::new(seed, 0xDEFA),
+            last_busy_t: 0.0,
+            busy_lo_mhz: 1290,
+            idle_mhz: 1110,
+            idle_timeout_s: 0.5,
+        }
+    }
+
+    /// Called at work boundaries and control ticks; returns the SM clock
+    /// the governor wants now. `busy` = does the worker have work.
+    pub fn tick(&mut self, now: f64, busy: bool) -> u32 {
+        if busy {
+            self.last_busy_t = now;
+            // Narrow high boost band with thermal-style dither (Fig. 1a).
+            let span = (self.ladder.max_mhz - self.busy_lo_mhz) / self.ladder.step_mhz;
+            let dither = (self.rng.next_u64() % (span as u64 + 1)) as u32;
+            self.cur_mhz = self.busy_lo_mhz + dither * self.ladder.step_mhz;
+        } else if now - self.last_busy_t > self.idle_timeout_s {
+            self.cur_mhz = self.idle_mhz;
+        }
+        self.cur_mhz
+    }
+
+    pub fn current(&self) -> u32 {
+        self.cur_mhz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_stays_in_high_band() {
+        let mut g = DefaultNvGovernor::new(1);
+        for i in 0..200 {
+            let f = g.tick(i as f64 * 0.02, true);
+            assert!((1290..=1410).contains(&f), "f={f}");
+        }
+    }
+
+    #[test]
+    fn sags_only_after_idle_timeout() {
+        let mut g = DefaultNvGovernor::new(2);
+        g.tick(10.0, true);
+        // Immediately idle: still boosted.
+        let f = g.tick(10.1, false);
+        assert!(f >= 1290);
+        // Past the timeout: sagged.
+        let f = g.tick(10.8, false);
+        assert_eq!(f, 1110);
+    }
+
+    #[test]
+    fn blind_to_load_level() {
+        // The governor gets no TPS input at all — that's the point.
+        let mut g = DefaultNvGovernor::new(3);
+        let light: Vec<u32> = (0..50).map(|i| g.tick(i as f64, true)).collect();
+        let mut g2 = DefaultNvGovernor::new(3);
+        let heavy: Vec<u32> = (0..50).map(|i| g2.tick(i as f64, true)).collect();
+        assert_eq!(light, heavy);
+    }
+
+    #[test]
+    fn dither_lands_on_ladder() {
+        let mut g = DefaultNvGovernor::new(4);
+        let l = FreqLadder::a100();
+        for i in 0..100 {
+            assert!(l.contains(g.tick(i as f64, true)));
+        }
+    }
+}

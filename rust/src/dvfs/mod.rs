@@ -1,0 +1,24 @@
+//! Phase-specific DVFS — the paper's core contribution.
+//!
+//! * [`governor`] — the `defaultNV` baseline (clock pinned high while
+//!   busy, blind to TPS — Fig. 1a) and fixed-clock policies.
+//! * [`profiler`] — the offline/online profiling pass: sweeps prompt
+//!   lengths and SM clocks against the (noisy) GPU, fits the Eq. (2)
+//!   latency quadratic and the Eq. (7) power cubic, and builds the
+//!   decode TPS → frequency lookup table (§3.3.1).
+//! * [`prefill_opt`] — the queueing-aware prefill optimizer: pick the
+//!   energy-minimal clock such that all queued prefills meet their
+//!   deadlines (Eq. 12–13).
+//! * [`decode_ctl`] — the dual-loop decode controller: coarse TPS band
+//!   selection with hysteresis + fine ±15 MHz TBT tracking every 20 ms +
+//!   6 s band adaptation (§3.3).
+
+pub mod decode_ctl;
+pub mod governor;
+pub mod prefill_opt;
+pub mod profiler;
+
+pub use decode_ctl::DecodeController;
+pub use governor::DefaultNvGovernor;
+pub use prefill_opt::{PrefillJobView, PrefillOptimizer};
+pub use profiler::{BandTable, FittedModels, Profiler};

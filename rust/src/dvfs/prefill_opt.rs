@@ -1,0 +1,242 @@
+//! Queueing-aware prefill frequency optimizer (§3.2, Eq. 12–13).
+//!
+//! Every tick the optimizer looks at the worker's queue, predicts per-job
+//! prefill work from the fitted quadratic, and picks the ladder frequency
+//! minimizing
+//!
+//!   E_total(f) = P(f) · busy(f) + P_idle · [D − busy(f)],
+//!   busy(f)   = (f_ref / f) · Σ t_ref(L_k),
+//!
+//! subject to every queued job finishing by its deadline. Uniform FIFO
+//! scaling makes the feasibility constraint exact:
+//!
+//!   f ≥ f_ref · max_k ( cumT_k / (deadline_k − now) ).
+
+use crate::dvfs::profiler::FittedModels;
+use crate::gpu::freq::FreqLadder;
+
+/// What the optimizer sees of one queued prefill job.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillJobView {
+    pub prompt_len: u32,
+    /// Absolute deadline for this job's TTFT (arrival + SLO × margin).
+    pub deadline_s: f64,
+}
+
+/// Per-worker prefill optimizer.
+#[derive(Debug, Clone)]
+pub struct PrefillOptimizer {
+    pub models: FittedModels,
+    pub ladder: FreqLadder,
+    /// Clock to park at when the queue is empty.
+    pub idle_clock_mhz: u32,
+    /// Decision log: (time, chosen clock, queue depth) for diagnostics.
+    pub decisions: u64,
+}
+
+impl PrefillOptimizer {
+    pub fn new(models: FittedModels, idle_clock_mhz: u32) -> Self {
+        PrefillOptimizer {
+            models,
+            ladder: FreqLadder::a100(),
+            idle_clock_mhz,
+            decisions: 0,
+        }
+    }
+
+    /// Pick the clock for the current queue state (jobs in FIFO order,
+    /// including the remaining work of the in-flight job as jobs[0] when
+    /// applicable). Returns the idle clock for an empty queue.
+    pub fn optimal_clock(&mut self, now: f64, jobs: &[PrefillJobView]) -> u32 {
+        self.decisions += 1;
+        if jobs.is_empty() {
+            return self.idle_clock_mhz;
+        }
+        let f_ref = self.models.f_ref_mhz as f64;
+
+        // Feasibility: minimum frequency meeting every cumulative deadline.
+        let mut cum_t = 0.0;
+        let mut f_req: f64 = self.ladder.min_mhz as f64;
+        let mut horizon: f64 = 0.0;
+        for j in jobs {
+            cum_t += self.models.prefill_t_ref(j.prompt_len);
+            let slack = (j.deadline_s - now).max(1e-3);
+            f_req = f_req.max(f_ref * cum_t / slack);
+            horizon = horizon.max(slack);
+        }
+        let t_ref_total = cum_t;
+        let f_lo = self.ladder.snap_up(f_req);
+        if f_req > self.ladder.max_mhz as f64 {
+            // Overloaded: even max clock misses deadlines — protect latency.
+            return self.ladder.max_mhz;
+        }
+
+        // Energy scan over feasible ladder points (Eq. 12). D = the SLO
+        // horizon of the current backlog.
+        let d = horizon.max(t_ref_total * f_ref / self.ladder.max_mhz as f64);
+        let idle = self.models.idle_w;
+        let mut best = (f64::INFINITY, self.ladder.max_mhz);
+        let mut mhz = f_lo;
+        while mhz <= self.ladder.max_mhz {
+            let busy = t_ref_total * f_ref / mhz as f64;
+            if busy <= d + 1e-12 {
+                let e = self.models.power_w(mhz) * busy + idle * (d - busy);
+                if e < best.0 {
+                    best = (e, mhz);
+                }
+            }
+            mhz += self.ladder.step_mhz;
+        }
+        best.1
+    }
+
+    /// Lowest ladder clock meeting every cumulative deadline, with no
+    /// energy scan — the throttLL'eM-lite prefill policy (predictive
+    /// latency-feasibility only). Energy-suboptimal whenever the feasible
+    /// floor sits below the knee of (P(f)−P_idle)/f.
+    pub fn min_feasible_clock(&mut self, now: f64, jobs: &[PrefillJobView]) -> u32 {
+        if jobs.is_empty() {
+            return self.idle_clock_mhz;
+        }
+        let f_ref = self.models.f_ref_mhz as f64;
+        let mut cum_t = 0.0;
+        let mut f_req: f64 = self.ladder.min_mhz as f64;
+        for j in jobs {
+            cum_t += self.models.prefill_t_ref(j.prompt_len);
+            let slack = (j.deadline_s - now).max(1e-3);
+            f_req = f_req.max(f_ref * cum_t / slack);
+        }
+        // Open-loop safety margin (7 %): prediction noise is not corrected
+        // by any feedback loop in this policy.
+        self.ladder.snap_up(f_req * 1.07)
+    }
+
+    /// The Eq.-12 objective at a given clock (exposed for tests/benches).
+    pub fn energy_objective(&self, jobs: &[PrefillJobView], mhz: u32, d: f64) -> f64 {
+        let f_ref = self.models.f_ref_mhz as f64;
+        let t_ref: f64 = jobs
+            .iter()
+            .map(|j| self.models.prefill_t_ref(j.prompt_len))
+            .sum();
+        let busy = t_ref * f_ref / mhz as f64;
+        self.models.power_w(mhz) * busy + self.models.idle_w * (d - busy).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dvfs::profiler::Profiler;
+    use crate::gpu::perf::PerfModel;
+    use crate::gpu::power::PowerModel;
+    use crate::model::ModelSpec;
+
+    fn optimizer() -> PrefillOptimizer {
+        let mut p = Profiler::new(
+            PerfModel::new(ModelSpec::qwen3_14b()),
+            PowerModel::a100(),
+            0.0,
+            3,
+        );
+        PrefillOptimizer::new(p.fit(1), 210)
+    }
+
+    fn job(len: u32, deadline: f64) -> PrefillJobView {
+        PrefillJobView {
+            prompt_len: len,
+            deadline_s: deadline,
+        }
+    }
+
+    #[test]
+    fn empty_queue_parks_at_idle_clock() {
+        let mut o = optimizer();
+        assert_eq!(o.optimal_clock(0.0, &[]), 210);
+    }
+
+    #[test]
+    fn relaxed_deadline_picks_knee_not_max() {
+        // One 512-token job (~60 ms at f_ref) with 380 ms of slack: plenty
+        // of headroom, so the optimizer should sit near the energy knee
+        // (0.9–1.1 GHz), far below max boost.
+        let mut o = optimizer();
+        let f = o.optimal_clock(0.0, &[job(512, 0.380)]);
+        assert!((800..=1150).contains(&f), "f={f}");
+    }
+
+    #[test]
+    fn tight_deadline_forces_high_clock() {
+        // Same job with only 70 ms of slack needs ≈ f_ref.
+        let mut o = optimizer();
+        let f = o.optimal_clock(0.0, &[job(512, 0.070)]);
+        assert!(f >= 1200, "f={f}");
+    }
+
+    #[test]
+    fn infeasible_backlog_returns_max() {
+        let mut o = optimizer();
+        let jobs: Vec<_> = (0..50).map(|_| job(2048, 0.100)).collect();
+        assert_eq!(o.optimal_clock(0.0, &jobs), 1410);
+    }
+
+    #[test]
+    fn deeper_queue_needs_higher_clock() {
+        let mut o = optimizer();
+        let shallow = o.optimal_clock(0.0, &[job(512, 0.380)]);
+        let deep: Vec<_> = (0..6).map(|_| job(512, 0.380)).collect();
+        let deep_f = o.optimal_clock(0.0, &deep);
+        assert!(deep_f > shallow, "shallow={shallow} deep={deep_f}");
+    }
+
+    #[test]
+    fn cumulative_deadlines_respected() {
+        // Two jobs: generous first deadline, tight second — the *cumulative*
+        // constraint on job 2 must drive the clock.
+        let mut o = optimizer();
+        let t_ref_each = o.models.prefill_t_ref(1024);
+        // A deadline with ~25 % slack over the minimum possible busy time.
+        let dl2 = 2.0 * t_ref_each * 1.25;
+        let f = o.optimal_clock(0.0, &[job(1024, 10.0), job(1024, dl2)]);
+        let busy = 2.0 * t_ref_each * o.models.f_ref_mhz as f64 / f as f64;
+        assert!(busy <= dl2 + 1e-9, "busy={busy} at f={f}");
+        // The tight cumulative deadline forces a clock near max.
+        assert!(f >= 1100, "f={f}");
+    }
+
+    #[test]
+    fn chosen_clock_is_energy_minimal_among_feasible() {
+        let mut o = optimizer();
+        let jobs = [job(700, 0.5), job(300, 0.6)];
+        let f = o.optimal_clock(0.0, &jobs);
+        let d = 0.6;
+        let e_star = o.energy_objective(&jobs, f, d);
+        // No feasible ladder clock does better.
+        let ladder = FreqLadder::a100();
+        for mhz in ladder.iter() {
+            let t_ref: f64 = jobs
+                .iter()
+                .map(|j| o.models.prefill_t_ref(j.prompt_len))
+                .sum();
+            let busy = t_ref * o.models.f_ref_mhz as f64 / mhz as f64;
+            // feasibility per cumulative deadlines
+            let t1 = o.models.prefill_t_ref(700) * o.models.f_ref_mhz as f64 / mhz as f64;
+            if t1 <= 0.5 && busy <= 0.6 {
+                assert!(
+                    o.energy_objective(&jobs, mhz, d) >= e_star - 1e-9,
+                    "better clock {mhz} than chosen {f}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn margin_scaling_shifts_clock_down() {
+        // Doubling every deadline (2× margin) must not raise the clock.
+        let mut o = optimizer();
+        let tight: Vec<_> = (0..4).map(|_| job(800, 0.250)).collect();
+        let relaxed: Vec<_> = (0..4).map(|_| job(800, 0.500)).collect();
+        let f_tight = o.optimal_clock(0.0, &tight);
+        let f_relaxed = o.optimal_clock(0.0, &relaxed);
+        assert!(f_relaxed <= f_tight, "tight={f_tight} relaxed={f_relaxed}");
+    }
+}

@@ -1,0 +1,323 @@
+//! Profiling + model fitting: the paper's "Perf–Energy Profile" block.
+//!
+//! GreenLLM does not trust the analytic ground truth — it *measures*:
+//! short traces on the GPU node, sweeping prompt length and SM clock,
+//! then fits
+//!   * the prefill latency quadratic `t_ref(L) = aL² + bL + c` (Eq. 2,
+//!     Fig. 7),
+//!   * the active-power cubic `P(f) = k₃f³+k₂f²+k₁f+k₀` (Eq. 7, Fig. 8),
+//!   * the decode TPS-bucket → lowest-SLO-feasible-frequency lookup
+//!     table (§3.3.1, from the Fig. 3b-style decode sweep).
+//!
+//! Here "measuring" means sampling the simulated GPU's perf/power models
+//! with multiplicative log-normal noise — the same closed loop, minus the
+//! hardware.
+
+use crate::gpu::freq::FreqLadder;
+use crate::gpu::perf::PerfModel;
+use crate::gpu::power::PowerModel;
+use crate::util::polyfit::{polyfit, polyval};
+use crate::util::rng::Pcg64;
+
+/// Models fitted from profiling — everything the controllers consume.
+#[derive(Debug, Clone)]
+pub struct FittedModels {
+    /// Prefill latency quadratic (a, b, c) at f_ref: t = aL² + bL + c.
+    pub prefill_quad: (f64, f64, f64),
+    /// Active power cubic, coefficients low→high over GHz.
+    pub power_cubic: [f64; 4],
+    /// Measured idle power (W).
+    pub idle_w: f64,
+    /// Reference clock (MHz).
+    pub f_ref_mhz: u32,
+}
+
+impl FittedModels {
+    pub fn prefill_t_ref(&self, len: u32) -> f64 {
+        let (a, b, c) = self.prefill_quad;
+        let l = len as f64;
+        a * l * l + b * l + c
+    }
+
+    pub fn power_w(&self, mhz: u32) -> f64 {
+        polyval(&self.power_cubic, mhz as f64 / 1000.0)
+    }
+}
+
+/// Decode TPS bucket → optimal frequency lookup table (§3.3.1).
+#[derive(Debug, Clone)]
+pub struct BandTable {
+    pub bucket_width: f64,
+    /// freqs[i] = lowest clock holding P95 TBT under target at TPS bucket i.
+    pub freqs: Vec<u32>,
+}
+
+impl BandTable {
+    pub fn bucket_of(&self, tps: f64) -> usize {
+        ((tps / self.bucket_width) as usize).min(self.freqs.len() - 1)
+    }
+
+    pub fn lookup(&self, tps: f64) -> u32 {
+        self.freqs[self.bucket_of(tps)]
+    }
+
+    /// Shift one bucket's entry by `steps` ladder steps (band adaptation,
+    /// §3.3.3). Positive = up.
+    pub fn shift(&mut self, bucket: usize, steps: i32, ladder: &FreqLadder) {
+        let cur = self.freqs[bucket] as i64;
+        let next = cur + steps as i64 * ladder.step_mhz as i64;
+        self.freqs[bucket] =
+            (next.clamp(ladder.min_mhz as i64, ladder.max_mhz as i64)) as u32;
+    }
+}
+
+/// The profiling harness.
+pub struct Profiler {
+    pub perf: PerfModel,
+    pub power: PowerModel,
+    pub ladder: FreqLadder,
+    pub noise: f64,
+    rng: Pcg64,
+}
+
+impl Profiler {
+    pub fn new(perf: PerfModel, power: PowerModel, noise: f64, seed: u64) -> Self {
+        Profiler {
+            perf,
+            power,
+            ladder: FreqLadder::a100(),
+            noise,
+            rng: Pcg64::new(seed, 0x9801F11E),
+        }
+    }
+
+    /// One noisy prefill-latency measurement (the microbenchmark of §2.2.1).
+    pub fn measure_prefill(&mut self, len: u32, mhz: u32) -> f64 {
+        self.perf.prefill_time(len as usize, mhz) * self.rng.noise(self.noise)
+    }
+
+    /// One noisy power measurement at saturating prefill load (Fig. 8 setup:
+    /// fixed 1024-token prompts at high rate).
+    pub fn measure_power(&mut self, mhz: u32) -> f64 {
+        self.power.power_w(mhz, 1.0) * self.rng.noise(self.noise)
+    }
+
+    /// One noisy decode step-time measurement.
+    pub fn measure_decode_step(&mut self, batch: usize, avg_ctx: f64, mhz: u32) -> f64 {
+        self.perf.decode_step_time(batch, avg_ctx, mhz) * self.rng.noise(self.noise)
+    }
+
+    /// Fit Eq. (2): sweep prompt lengths at f_ref, `reps` samples each.
+    pub fn fit_prefill_quad(&mut self, reps: usize) -> (f64, f64, f64) {
+        let f_ref = self.perf.hw.f_ref_mhz;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut len = 64u32;
+        while len <= 8192 {
+            for _ in 0..reps {
+                xs.push(len as f64);
+                ys.push(self.measure_prefill(len, f_ref));
+            }
+            len = (len as f64 * 1.35) as u32;
+        }
+        let c = polyfit(&xs, &ys, 2);
+        (c[2], c[1], c[0])
+    }
+
+    /// Fit Eq. (7): sweep the clock ladder under saturating prefill.
+    pub fn fit_power_cubic(&mut self, reps: usize) -> [f64; 4] {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let freqs: Vec<u32> = self.ladder.iter().collect();
+        for mhz in freqs {
+            for _ in 0..reps {
+                xs.push(mhz as f64 / 1000.0);
+                ys.push(self.measure_power(mhz));
+            }
+        }
+        let c = polyfit(&xs, &ys, 3);
+        [c[0], c[1], c[2], c[3]]
+    }
+
+    /// Full fitting pass.
+    pub fn fit(&mut self, reps: usize) -> FittedModels {
+        FittedModels {
+            prefill_quad: self.fit_prefill_quad(reps),
+            power_cubic: self.fit_power_cubic(reps),
+            idle_w: self.power.power_w(self.ladder.min_mhz, 0.0),
+            f_ref_mhz: self.perf.hw.f_ref_mhz,
+        }
+    }
+
+    /// Build the §3.3.1 decode lookup table: for each TPS bucket, the
+    /// lowest clock whose steady-state P95 TBT stays under
+    /// `tbt_target_s` (with headroom for the P95-vs-mean gap and noise).
+    ///
+    /// Steady state at (tps, f): the batch is the fixpoint of
+    /// B = tps · t_step(B, ctx, f).
+    pub fn build_band_table(
+        &mut self,
+        max_tps: f64,
+        bucket_width: f64,
+        avg_ctx: f64,
+        tbt_target_s: f64,
+        max_streams: usize,
+    ) -> BandTable {
+        let n_buckets = (max_tps / bucket_width).ceil() as usize + 1;
+        // P95 of a noisy step time exceeds its mean; budget for it.
+        let headroom = 1.0 + 2.0 * self.noise;
+        let mut freqs = Vec::with_capacity(n_buckets);
+        // The lowest feasible clock is monotone in TPS, so resume each
+        // bucket's scan where the previous one stopped (two-pointer): the
+        // sweep costs O(buckets + ladder) fixpoints instead of O(b × l) —
+        // this dominates GreenLLM engine construction (§Perf).
+        let mut start = 0usize;
+        let ladder: Vec<u32> = self.ladder.iter().collect();
+        for i in 0..n_buckets {
+            let tps = (i as f64 + 0.5) * bucket_width; // bucket midpoint
+            let mut chosen = self.ladder.max_mhz;
+            while start < ladder.len() {
+                let mhz = ladder[start];
+                let ok = steady_state_tbt(&self.perf, tps, avg_ctx, mhz, max_streams)
+                    .map(|t| t * headroom <= tbt_target_s)
+                    .unwrap_or(false);
+                if ok {
+                    chosen = mhz;
+                    break;
+                }
+                start += 1;
+            }
+            freqs.push(chosen);
+        }
+        BandTable {
+            bucket_width,
+            freqs,
+        }
+    }
+}
+
+/// Steady-state decode step time at a given per-worker TPS and clock, or
+/// None if the worker cannot sustain that TPS at that clock.
+pub fn steady_state_tbt(
+    perf: &PerfModel,
+    tps: f64,
+    avg_ctx: f64,
+    mhz: u32,
+    max_streams: usize,
+) -> Option<f64> {
+    if tps <= 0.0 {
+        return Some(perf.decode_step_time(1, avg_ctx, mhz));
+    }
+    let mut b = 1.0f64;
+    for _ in 0..64 {
+        let t = perf.decode_step_time(b.ceil() as usize, avg_ctx, mhz);
+        let next = (tps * t).max(1.0);
+        if (next - b).abs() < 0.01 {
+            let t = perf.decode_step_time(next.ceil() as usize, avg_ctx, mhz);
+            return (next.ceil() as usize <= max_streams).then_some(t);
+        }
+        b = next;
+        if b > max_streams as f64 * 2.0 {
+            return None; // diverging: demand exceeds capacity at this clock
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+
+    fn profiler(noise: f64) -> Profiler {
+        Profiler::new(
+            PerfModel::new(ModelSpec::qwen3_14b()),
+            PowerModel::a100(),
+            noise,
+            7,
+        )
+    }
+
+    #[test]
+    fn prefill_fit_recovers_ground_truth() {
+        let mut p = profiler(0.02);
+        let (a, b, c) = p.fit_prefill_quad(3);
+        let (ta, tb, tc) = p.perf.prefill_coeffs();
+        assert!((a / ta - 1.0).abs() < 0.25, "a={a:.3e} truth={ta:.3e}");
+        assert!((b / tb - 1.0).abs() < 0.05, "b={b:.3e} truth={tb:.3e}");
+        assert!((c - tc).abs() < 0.01, "c={c:.4} truth={tc:.4}");
+    }
+
+    #[test]
+    fn power_fit_tracks_curve() {
+        let mut p = profiler(0.02);
+        let coeffs = p.fit_power_cubic(3);
+        for mhz in [300u32, 700, 1000, 1400] {
+            let fit = polyval(&coeffs, mhz as f64 / 1000.0);
+            let truth = p.power.power_w(mhz, 1.0);
+            assert!((fit / truth - 1.0).abs() < 0.05, "mhz={mhz} fit={fit} truth={truth}");
+        }
+    }
+
+    #[test]
+    fn noiseless_fit_is_nearly_exact() {
+        let mut p = profiler(0.0);
+        let m = p.fit(1);
+        let (ta, tb, _) = p.perf.prefill_coeffs();
+        assert!((m.prefill_quad.0 / ta - 1.0).abs() < 1e-6);
+        assert!((m.prefill_quad.1 / tb - 1.0).abs() < 1e-6);
+        let truth = p.power.power_w(1005, 1.0);
+        assert!((m.power_w(1005) / truth - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn band_table_monotone_in_tps() {
+        let mut p = profiler(0.02);
+        let t = p.build_band_table(3000.0, 100.0, 600.0, 0.100, 200);
+        // Higher TPS buckets need >= clocks (weakly monotone).
+        for w in t.freqs.windows(2) {
+            assert!(w[1] >= w[0], "table not monotone: {:?}", t.freqs);
+        }
+        // Light load can run at a much lower clock than heavy load.
+        assert!(t.lookup(100.0) + 200 < t.lookup(900.0));
+    }
+
+    #[test]
+    fn band_table_lookup_and_shift() {
+        let ladder = FreqLadder::a100();
+        let mut t = BandTable {
+            bucket_width: 100.0,
+            freqs: vec![300, 600, 900],
+        };
+        assert_eq!(t.lookup(0.0), 300);
+        assert_eq!(t.lookup(150.0), 600);
+        assert_eq!(t.lookup(10_000.0), 900); // clamped to last bucket
+        t.shift(0, 2, &ladder);
+        assert_eq!(t.freqs[0], 330);
+        t.shift(0, -100, &ladder);
+        assert_eq!(t.freqs[0], 210); // clamped to ladder min
+    }
+
+    #[test]
+    fn steady_state_tbt_behaviour() {
+        let perf = PerfModel::new(ModelSpec::qwen3_14b());
+        // Light load converges to a small batch with TBT ≈ weight-stream time.
+        let t = steady_state_tbt(&perf, 100.0, 600.0, 1410, 200).unwrap();
+        assert!((0.02..0.06).contains(&t), "t={t}");
+        // Demand far beyond capacity diverges.
+        assert!(steady_state_tbt(&perf, 5000.0, 600.0, 1410, 200).is_none());
+        // Low clock cannot sustain what max clock can.
+        let hi = steady_state_tbt(&perf, 800.0, 600.0, 1410, 200);
+        let lo = steady_state_tbt(&perf, 800.0, 600.0, 300, 200);
+        assert!(hi.is_some());
+        assert!(lo.is_none() || lo.unwrap() > hi.unwrap());
+    }
+
+    #[test]
+    fn band_table_zero_bucket_uses_min_feasible() {
+        let mut p = profiler(0.0);
+        let t = p.build_band_table(3000.0, 100.0, 600.0, 0.100, 200);
+        // Near-zero TPS: decode can idle at a very low clock yet hold TBT.
+        assert!(t.freqs[0] <= 600, "idle bucket at {}", t.freqs[0]);
+    }
+}

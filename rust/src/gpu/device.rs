@@ -1,0 +1,160 @@
+//! Simulated GPU device: NVML-like clock control + energy integration.
+//!
+//! The controllers see exactly the interface they would get from NVML
+//! application clocks: `set_app_clock()` / `sm_clock()`, plus telemetry
+//! (power, energy, busy time). Energy is integrated piecewise between
+//! state changes, so any set_clock / set_util ordering yields exact totals.
+
+use crate::gpu::freq::FreqLadder;
+use crate::gpu::power::PowerModel;
+
+/// One simulated A100.
+#[derive(Debug, Clone)]
+pub struct SimGpu {
+    pub id: usize,
+    pub ladder: FreqLadder,
+    pub power: PowerModel,
+    freq_mhz: u32,
+    util: f64,
+    last_t: f64,
+    energy_j: f64,
+    busy_s: f64,
+    /// Optional (time, freq) trace for Fig. 1-style plots.
+    pub record_trace: bool,
+    pub freq_trace: Vec<(f64, u32)>,
+}
+
+impl SimGpu {
+    pub fn new(id: usize) -> Self {
+        let ladder = FreqLadder::a100();
+        SimGpu {
+            id,
+            freq_mhz: ladder.max_mhz,
+            ladder,
+            power: PowerModel::a100(),
+            util: 0.0,
+            last_t: 0.0,
+            energy_j: 0.0,
+            busy_s: 0.0,
+            record_trace: false,
+            freq_trace: Vec::new(),
+        }
+    }
+
+    /// Integrate energy up to `now` under the current (freq, util) state.
+    pub fn advance(&mut self, now: f64) {
+        debug_assert!(now + 1e-9 >= self.last_t, "time went backwards");
+        let dt = (now - self.last_t).max(0.0);
+        if dt > 0.0 {
+            self.energy_j += self.power.power_w(self.freq_mhz, self.util) * dt;
+            if self.util > 0.0 {
+                self.busy_s += dt;
+            }
+            self.last_t = now;
+        }
+    }
+
+    /// NVML-style application-clock set (snapped to the ladder).
+    pub fn set_app_clock(&mut self, now: f64, mhz: u32) {
+        self.advance(now);
+        let snapped = self.ladder.snap(mhz as f64);
+        if snapped != self.freq_mhz {
+            self.freq_mhz = snapped;
+            if self.record_trace {
+                self.freq_trace.push((now, snapped));
+            }
+        }
+    }
+
+    /// Set current utilization (0 = idle; prefill saturates at 1.0, decode
+    /// runs lower — see `PerfModel::decode_util`).
+    pub fn set_util(&mut self, now: f64, util: f64) {
+        self.advance(now);
+        self.util = util.clamp(0.0, 1.0);
+    }
+
+    pub fn sm_clock(&self) -> u32 {
+        self.freq_mhz
+    }
+
+    pub fn util(&self) -> f64 {
+        self.util
+    }
+
+    pub fn power_w(&self) -> f64 {
+        self.power.power_w(self.freq_mhz, self.util)
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    pub fn busy_s(&self) -> f64 {
+        self.busy_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_gpu_draws_idle_power() {
+        let mut g = SimGpu::new(0);
+        let idle = g.power.power_w(g.sm_clock(), 0.0);
+        g.advance(10.0);
+        assert!((g.energy_j() - idle * 10.0).abs() < 1e-9);
+        assert_eq!(g.busy_s(), 0.0);
+    }
+
+    #[test]
+    fn busy_interval_integrates_active_power() {
+        let mut g = SimGpu::new(0);
+        g.set_app_clock(0.0, 1005);
+        let idle = g.power.power_w(1005, 0.0);
+        g.set_util(1.0, 1.0);
+        g.set_util(3.0, 0.0);
+        g.advance(4.0);
+        let expect = idle * 1.0 + g.power.power_w(1005, 1.0) * 2.0 + idle * 1.0;
+        assert!((g.energy_j() - expect).abs() < 1e-9, "{}", g.energy_j());
+        assert!((g.busy_s() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clock_changes_mid_interval_split_energy() {
+        let mut g = SimGpu::new(0);
+        g.set_util(0.0, 1.0);
+        g.set_app_clock(1.0, 600);
+        g.advance(2.0);
+        let expect = g.power.power_w(1410, 1.0) + g.power.power_w(600, 1.0);
+        assert!((g.energy_j() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clock_snaps_to_ladder() {
+        let mut g = SimGpu::new(0);
+        g.set_app_clock(0.0, 1000);
+        assert_eq!(g.sm_clock(), 1005);
+        g.set_app_clock(0.0, 100);
+        assert_eq!(g.sm_clock(), 210);
+    }
+
+    #[test]
+    fn trace_records_changes_only() {
+        let mut g = SimGpu::new(0);
+        g.record_trace = true;
+        g.set_app_clock(1.0, 900);
+        g.set_app_clock(2.0, 900); // no-op
+        g.set_app_clock(3.0, 915);
+        assert_eq!(g.freq_trace, vec![(1.0, 900), (3.0, 915)]);
+    }
+
+    #[test]
+    fn zero_dt_advance_is_noop() {
+        let mut g = SimGpu::new(0);
+        g.advance(5.0);
+        let e = g.energy_j();
+        g.advance(5.0);
+        assert_eq!(e, g.energy_j());
+    }
+}

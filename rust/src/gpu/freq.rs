@@ -1,0 +1,150 @@
+//! The SM frequency ladder — A100 application clocks.
+//!
+//! NVML application clocks on the A100 expose SM frequencies from 210 MHz
+//! to 1410 MHz in 15 MHz steps (81 points); GreenLLM's controllers only
+//! ever request ladder frequencies (the paper's fine loop moves in exactly
+//! one 15 MHz step per 20 ms tick).
+
+/// Discrete SM frequency ladder in MHz.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FreqLadder {
+    pub min_mhz: u32,
+    pub max_mhz: u32,
+    pub step_mhz: u32,
+}
+
+impl Default for FreqLadder {
+    fn default() -> Self {
+        FreqLadder::a100()
+    }
+}
+
+impl FreqLadder {
+    /// A100-SXM4: 210–1410 MHz, 15 MHz application-clock steps.
+    pub fn a100() -> Self {
+        FreqLadder {
+            min_mhz: 210,
+            max_mhz: 1410,
+            step_mhz: 15,
+        }
+    }
+
+    /// Number of ladder points.
+    pub fn len(&self) -> usize {
+        ((self.max_mhz - self.min_mhz) / self.step_mhz) as usize + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Snap an arbitrary frequency to the nearest ladder point (clamped).
+    pub fn snap(&self, mhz: f64) -> u32 {
+        let clamped = mhz.clamp(self.min_mhz as f64, self.max_mhz as f64);
+        let steps = ((clamped - self.min_mhz as f64) / self.step_mhz as f64).round() as u32;
+        self.min_mhz + steps * self.step_mhz
+    }
+
+    /// Snap *up*: smallest ladder frequency >= mhz (clamped to max).
+    pub fn snap_up(&self, mhz: f64) -> u32 {
+        let clamped = mhz.clamp(self.min_mhz as f64, self.max_mhz as f64);
+        let steps = ((clamped - self.min_mhz as f64) / self.step_mhz as f64).ceil() as u32;
+        self.min_mhz + steps * self.step_mhz
+    }
+
+    /// One fine step up/down from `mhz`, clamped to [lo, hi] band bounds.
+    pub fn step(&self, mhz: u32, up: bool, lo: u32, hi: u32) -> u32 {
+        let next = if up {
+            mhz.saturating_add(self.step_mhz)
+        } else {
+            mhz.saturating_sub(self.step_mhz)
+        };
+        next.clamp(lo.max(self.min_mhz), hi.min(self.max_mhz))
+    }
+
+    /// Iterate every ladder frequency (profiling sweeps).
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        (0..self.len() as u32).map(move |i| self.min_mhz + i * self.step_mhz)
+    }
+
+    /// Index of a ladder frequency (None if off-ladder).
+    pub fn index_of(&self, mhz: u32) -> Option<usize> {
+        if mhz < self.min_mhz || mhz > self.max_mhz {
+            return None;
+        }
+        let off = mhz - self.min_mhz;
+        (off % self.step_mhz == 0).then(|| (off / self.step_mhz) as usize)
+    }
+
+    pub fn contains(&self, mhz: u32) -> bool {
+        self.index_of(mhz).is_some()
+    }
+}
+
+/// MHz → GHz (the power polynomial is parameterized in GHz).
+#[inline]
+pub fn ghz(mhz: u32) -> f64 {
+    mhz as f64 / 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_ladder_has_81_points() {
+        let l = FreqLadder::a100();
+        assert_eq!(l.len(), 81);
+        assert_eq!(l.iter().next(), Some(210));
+        assert_eq!(l.iter().last(), Some(1410));
+    }
+
+    #[test]
+    fn snap_rounds_and_clamps() {
+        let l = FreqLadder::a100();
+        assert_eq!(l.snap(0.0), 210);
+        assert_eq!(l.snap(5000.0), 1410);
+        assert_eq!(l.snap(1000.0), 1005);
+        assert_eq!(l.snap(997.0), 990);
+        assert_eq!(l.snap(998.0), 1005);
+    }
+
+    #[test]
+    fn snap_up_never_below_target() {
+        let l = FreqLadder::a100();
+        for f in [211.0, 970.2, 1409.9, 250.0] {
+            let s = l.snap_up(f);
+            assert!(s as f64 >= f, "snap_up({f}) = {s}");
+            assert!(l.contains(s));
+        }
+        assert_eq!(l.snap_up(2000.0), 1410);
+    }
+
+    #[test]
+    fn step_respects_band_bounds() {
+        let l = FreqLadder::a100();
+        assert_eq!(l.step(900, true, 600, 915), 915);
+        assert_eq!(l.step(915, true, 600, 915), 915); // pinned at hi
+        assert_eq!(l.step(615, false, 600, 915), 600);
+        assert_eq!(l.step(600, false, 600, 915), 600); // pinned at lo
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let l = FreqLadder::a100();
+        for (i, f) in l.iter().enumerate() {
+            assert_eq!(l.index_of(f), Some(i));
+        }
+        assert_eq!(l.index_of(1000), None);
+        assert_eq!(l.index_of(209), None);
+        assert_eq!(l.index_of(1425), None);
+    }
+
+    #[test]
+    fn all_ladder_points_are_snap_fixed_points() {
+        let l = FreqLadder::a100();
+        for f in l.iter() {
+            assert_eq!(l.snap(f as f64), f);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The GPU substrate: the simulated DGX-A100 node the coordinator drives.
+//!
+//! The paper's testbed (8× A100, NVML app clocks) is not available here, so
+//! `SimGpu` reproduces the *interface and the physics the controllers see*:
+//! the 210–1410 MHz/15 MHz ladder, a cubic power curve, compute-bound
+//! prefill latency and memory-bound decode latency (DESIGN.md §1).
+
+pub mod device;
+pub mod freq;
+pub mod perf;
+pub mod power;
+
+pub use device::SimGpu;
+pub use freq::{ghz, FreqLadder};
+pub use perf::{GpuHardware, PerfModel};
+pub use power::PowerModel;

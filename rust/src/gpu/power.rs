@@ -1,0 +1,146 @@
+//! GPU power model: cubic in SM frequency (Eq. 7 of the paper).
+//!
+//! CMOS dynamic power grows ~f·V² with joint voltage-frequency scaling ⇒
+//! roughly cubic in f. The paper fits `P(f) = k₃f³ + k₂f² + k₁f + k₀` to
+//! measured prefill power on the A100 (Fig. 8); we *define* the simulated
+//! GPU with such a polynomial (calibrated to the A100 envelope) and let the
+//! controllers re-fit it from noisy "measurements" — exactly the paper's
+//! online-modeling loop, closed in simulation.
+
+use crate::gpu::freq::ghz;
+
+/// Cubic active-power model + idle floor. Frequencies in MHz at the API,
+/// GHz inside the polynomial.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerModel {
+    /// Coefficients low→high: P(f_ghz) = k0 + k1 f + k2 f² + k3 f³ (watts),
+    /// at full (prefill-saturating) utilization.
+    pub coeffs: [f64; 4],
+    /// Idle power at the lowest clock, watts.
+    pub idle_base_w: f64,
+    /// Idle power slope with clock (W/GHz): an A100 parked at max clocks
+    /// idles noticeably hotter than at 210 MHz. This is why parking idle
+    /// workers at low clocks (which GreenLLM does and defaultNV does not)
+    /// saves real energy on low-utilization traces.
+    pub idle_slope_w_per_ghz: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel::a100()
+    }
+}
+
+impl PowerModel {
+    /// Calibrated to the A100-SXM4-40GB envelope: ~193 W active floor at
+    /// 210 MHz, ~400 W at 1410 MHz, idle ≈ 55 W. The coefficients satisfy
+    /// d/df[(P(f) − P_idle)/f] = 0 at ≈ 1.0 GHz, which is what puts the
+    /// prefill energy knee at 0.95–1.05 GHz (Takeaway #1) — see the
+    /// calibration test below and DESIGN.md §7.
+    pub fn a100() -> Self {
+        PowerModel {
+            coeffs: [188.6, 20.0, -6.4, 70.0],
+            idle_base_w: 40.0,
+            idle_slope_w_per_ghz: 25.0,
+        }
+    }
+
+    /// Idle power at a given (parked) clock: ≈45 W at 210 MHz, ≈75 W at
+    /// 1410 MHz on the A100.
+    pub fn idle_w(&self, mhz: u32) -> f64 {
+        self.idle_base_w + self.idle_slope_w_per_ghz * ghz(mhz)
+    }
+
+    /// Power at frequency `mhz` and utilization `util` ∈ [0, 1]. `util`
+    /// interpolates between clocked-idle and full active power: decode
+    /// workers run at lower SM toggling rates than saturated prefill.
+    pub fn power_w(&self, mhz: u32, util: f64) -> f64 {
+        let u = util.clamp(0.0, 1.0);
+        let idle = self.idle_w(mhz);
+        if u == 0.0 {
+            return idle;
+        }
+        idle + u * (self.active_w(mhz) - idle)
+    }
+
+    /// Full-utilization active power (the fitted curve of Fig. 8).
+    pub fn active_w(&self, mhz: u32) -> f64 {
+        let f = ghz(mhz);
+        let [k0, k1, k2, k3] = self.coeffs;
+        (k0 + k1 * f + k2 * f * f + k3 * f * f * f).max(self.idle_w(mhz))
+    }
+
+    /// Energy (J) over a duration at fixed frequency/util.
+    pub fn energy_j(&self, mhz: u32, util: f64, dt_s: f64) -> f64 {
+        self.power_w(mhz, util) * dt_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::freq::FreqLadder;
+
+    #[test]
+    fn envelope_matches_a100() {
+        let p = PowerModel::a100();
+        let peak = p.active_w(1410);
+        assert!((395.0..410.0).contains(&peak), "peak={peak}");
+        let floor = p.active_w(210);
+        assert!((150.0..220.0).contains(&floor), "floor={floor}");
+        // Clocked-idle: hotter at high clocks.
+        let idle_lo = p.power_w(210, 0.0);
+        let idle_hi = p.power_w(1410, 0.0);
+        assert!((40.0..50.0).contains(&idle_lo), "idle_lo={idle_lo}");
+        assert!((70.0..80.0).contains(&idle_hi), "idle_hi={idle_hi}");
+    }
+
+    #[test]
+    fn monotone_increasing_in_frequency() {
+        let p = PowerModel::a100();
+        let l = FreqLadder::a100();
+        let mut prev = 0.0;
+        for f in l.iter() {
+            let w = p.active_w(f);
+            assert!(w > prev, "power not monotone at {f} MHz");
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn util_interpolates_between_idle_and_active() {
+        let p = PowerModel::a100();
+        let idle = p.power_w(1200, 0.0);
+        let half = p.power_w(1200, 0.5);
+        let full = p.power_w(1200, 1.0);
+        assert!((half - (idle + 0.5 * (full - idle))).abs() < 1e-9);
+        assert!(p.power_w(1200, 2.0) <= full + 1e-12); // clamped
+    }
+
+    /// Takeaway #1 calibration: the energy-per-work knee (min of
+    /// (P(f)−P_idle)/f) sits in the 0.90–1.10 GHz band, ≈70–80 % of max.
+    #[test]
+    fn prefill_energy_knee_in_paper_band() {
+        let p = PowerModel::a100();
+        let l = FreqLadder::a100();
+        let knee = l
+            .iter()
+            .min_by(|&a, &b| {
+                let ea = (p.active_w(a) - p.idle_w(a)) / a as f64;
+                let eb = (p.active_w(b) - p.idle_w(b)) / b as f64;
+                ea.partial_cmp(&eb).unwrap()
+            })
+            .unwrap();
+        assert!(
+            (900..=1100).contains(&knee),
+            "prefill energy knee at {knee} MHz, expected 900–1100"
+        );
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let p = PowerModel::a100();
+        let e = p.energy_j(1005, 1.0, 2.0);
+        assert!((e - 2.0 * p.power_w(1005, 1.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,37 @@
+//! # GreenLLM
+//!
+//! Reproduction of *GreenLLM: SLO-Aware Dynamic Frequency Scaling for
+//! Energy-Efficient LLM Serving* as a three-layer Rust + JAX + Pallas
+//! stack. The Rust coordinator (this crate) owns routing, batching, the
+//! phase-specific DVFS controllers and the simulated DGX-A100 substrate;
+//! JAX/Pallas author the served model at build time and export HLO
+//! artifacts the `runtime` module loads through PJRT.
+//!
+//! Layout (see DESIGN.md for the full inventory):
+//! * [`util`] — RNG/distributions, stats, polyfit, CLI/TOML/JSON parsing,
+//!   property-test harness (hand-built; offline mirror has no crates).
+//! * [`sim`] — discrete-event engine.
+//! * [`gpu`] — simulated A100: frequency ladder, cubic power model,
+//!   phase-specific latency models, energy integration.
+//! * [`model`] — model specs + the Eq. (1) FLOPs/bytes cost model.
+//! * [`workload`] — Alibaba/Azure-like trace generators, microbenchmarks.
+//! * [`metrics`], [`slo`] — telemetry + SLO accounting.
+//! * [`coordinator`] — router, queues, pools, the serving engine.
+//! * [`dvfs`] — governors: defaultNV baseline, prefill optimizer,
+//!   dual-loop decode controller (the paper's contribution).
+//! * [`runtime`], [`server`] — PJRT artifact engine + real serving loop.
+//! * [`bench`] — regeneration drivers for every paper table and figure.
+
+pub mod config;
+pub mod coordinator;
+pub mod dvfs;
+pub mod gpu;
+pub mod metrics;
+pub mod model;
+pub mod sim;
+pub mod slo;
+pub mod util;
+pub mod workload;
+pub mod bench;
+pub mod runtime;
+pub mod server;

@@ -1,0 +1,344 @@
+//! GreenLLM CLI — the launcher.
+//!
+//! ```text
+//! greenllm replay    --trace alibaba --qps 5 --method greenllm [--model qwen3-14b]
+//! greenllm compare   --trace azure_code5            # 3-method Table-3 row
+//! greenllm microbench --phase decode --tps 1000 --method greenllm
+//! greenllm profile                                   # Fig. 7 + Fig. 8 fits
+//! greenllm fig1|fig3a|fig3b|fig3c|fig5|fig7|fig8|fig10|fig11|fig12a|fig12b
+//! greenllm table3|table4
+//! greenllm serve     --prompts 16 --max-new 24       # real PJRT serving demo
+//! ```
+//!
+//! Common flags: --duration <s> --seed <n> --model <name> --config <toml>.
+
+use anyhow::{anyhow, Result};
+use greenllm::bench::{self, figures, tables};
+use greenllm::config::{Config, Method};
+use greenllm::coordinator::engine::{run, RunOptions};
+use greenllm::server::{ServerConfig, ServerHandle};
+use greenllm::util::cli::Args;
+use greenllm::workload::alibaba::{self, ChatParams};
+use greenllm::workload::azure::{self, AzureKind, AzureParams};
+use greenllm::workload::request::Trace;
+use greenllm::workload::synthetic;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let duration = args.f64_or("duration", 300.0)?;
+    let seed = args.u64_or("seed", 42)?;
+    match args.command.as_str() {
+        "replay" => replay(args, duration, seed),
+        "compare" => compare(args, duration, seed),
+        "microbench" => microbench(args, duration, seed),
+        "profile" => {
+            figures::fig7(seed);
+            figures::fig8(seed);
+            Ok(())
+        }
+        "fig1" => {
+            figures::fig1(duration.min(360.0), seed);
+            Ok(())
+        }
+        "fig3a" => {
+            figures::fig3a(duration.min(120.0), seed);
+            Ok(())
+        }
+        "fig3b" => {
+            figures::fig3b(duration.min(120.0), seed);
+            Ok(())
+        }
+        "fig3c" => {
+            figures::fig3c(duration.min(300.0), seed);
+            Ok(())
+        }
+        "fig5" => {
+            figures::fig5(duration, seed);
+            Ok(())
+        }
+        "fig7" => {
+            figures::fig7(seed);
+            Ok(())
+        }
+        "fig8" => {
+            figures::fig8(seed);
+            Ok(())
+        }
+        "fig10" => {
+            figures::fig10(duration.min(120.0), seed);
+            Ok(())
+        }
+        "fig11" => {
+            figures::fig11(duration.min(120.0), seed);
+            Ok(())
+        }
+        "fig12a" => {
+            figures::fig12a(duration, seed);
+            Ok(())
+        }
+        "fig12b" => {
+            figures::fig12b(duration, seed);
+            Ok(())
+        }
+        "table3" => {
+            tables::table3(duration, seed);
+            Ok(())
+        }
+        "table4" => {
+            tables::table4(duration, seed);
+            Ok(())
+        }
+        "ablations" => {
+            bench::ablations::ablations(duration, seed);
+            Ok(())
+        }
+        "baselines" => {
+            bench::baselines::baselines(duration, seed);
+            Ok(())
+        }
+        "cluster" => cluster_cmd(args, duration, seed),
+        "serve" => serve(args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}; try `greenllm help`")),
+    }
+}
+
+fn base_config(args: &Args, seed: u64) -> Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(path).map_err(|e| anyhow!(e))?,
+        None => Config::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(m) = args.get("method") {
+        cfg.method = Method::parse(m).ok_or_else(|| anyhow!("bad --method {m:?}"))?;
+    }
+    cfg.prefill_margin = args.f64_or("prefill-margin", cfg.prefill_margin)?;
+    cfg.decode_margin = args.f64_or("decode-margin", cfg.decode_margin)?;
+    cfg.seed = seed;
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    Ok(cfg)
+}
+
+fn trace_from_args(args: &Args, duration: f64, seed: u64) -> Result<Trace> {
+    let name = args.get_or("trace", "alibaba");
+    let qps = args.f64_or("qps", 5.0)?;
+    Ok(match name {
+        "alibaba" | "chat" => alibaba::generate(&ChatParams::new(qps, duration), seed),
+        "azure_code5" => azure::generate(&AzureParams::new(AzureKind::Code, 5, duration), seed),
+        "azure_code8" => azure::generate(&AzureParams::new(AzureKind::Code, 8, duration), seed),
+        "azure_conv5" => azure::generate(&AzureParams::new(AzureKind::Conv, 5, duration), seed),
+        "azure_conv8" => azure::generate(&AzureParams::new(AzureKind::Conv, 8, duration), seed),
+        "sinusoid" => synthetic::sinusoid_decode(400.0, 2600.0, 120.0, duration, seed),
+        other => return Err(anyhow!("unknown trace {other:?}")),
+    })
+}
+
+fn replay(args: &Args, duration: f64, seed: u64) -> Result<()> {
+    let cfg = base_config(args, seed)?;
+    let trace = trace_from_args(args, duration, seed)?;
+    println!(
+        "replaying {} ({} requests, {:.0}s) with {} on {}",
+        trace.name,
+        trace.requests.len(),
+        trace.duration_s,
+        cfg.method.name(),
+        cfg.model
+    );
+    let t0 = std::time::Instant::now();
+    let r = run(&cfg, &trace, &RunOptions::default());
+    println!(
+        "completed {} requests | tokens {} | throughput {:.0} tok/s",
+        r.completed,
+        r.generated_tokens,
+        r.throughput_tps()
+    );
+    println!(
+        "energy: prefill {:.1} kJ + decode {:.1} kJ = {:.1} kJ ({:.1} Wh)",
+        r.prefill_energy_j / 1e3,
+        r.decode_energy_j / 1e3,
+        r.total_energy_j / 1e3,
+        r.total_energy_wh()
+    );
+    println!(
+        "SLO: TTFT {:.1}% (p50 {:.0} ms, p99 {:.0} ms) | TBT {:.1}% (p95-of-p95 {:.0} ms)",
+        r.slo.ttft_pass_rate() * 100.0,
+        r.slo.ttft_hist.p50() * 1000.0,
+        r.slo.ttft_hist.p99() * 1000.0,
+        r.slo.tbt_pass_rate() * 100.0,
+        r.slo.tbt_hist.p95() * 1000.0
+    );
+    println!(
+        "sim: {} events in {:.1} ms wall ({:.2} Mev/s)",
+        r.events_processed,
+        t0.elapsed().as_secs_f64() * 1e3,
+        r.events_processed as f64 / t0.elapsed().as_secs_f64() / 1e6
+    );
+    Ok(())
+}
+
+fn compare(args: &Args, duration: f64, seed: u64) -> Result<()> {
+    let cfg = base_config(args, seed)?;
+    let trace = trace_from_args(args, duration, seed)?;
+    let rows = bench::compare_methods(&cfg.model, &trace, seed);
+    tables::render_rows(&format!("compare on {}", trace.name), &rows);
+    Ok(())
+}
+
+fn microbench(args: &Args, duration: f64, seed: u64) -> Result<()> {
+    let cfg = base_config(args, seed)?;
+    let tps = args.f64_or("tps", 1000.0)?;
+    let phase = args.get_or("phase", "decode");
+    let trace = match phase {
+        "prefill" => synthetic::prefill_microbench(tps, 256, 1024, duration, seed),
+        "decode" => synthetic::decode_microbench(tps, duration, seed),
+        other => return Err(anyhow!("unknown --phase {other:?}")),
+    };
+    let r = run(&cfg, &trace, &RunOptions::default());
+    println!(
+        "{} microbench @ {tps} TPS, {}: P90 TTFT {:.1} ms | P90 TBT {:.1} ms | energy {:.1} kJ",
+        phase,
+        cfg.method.name(),
+        r.slo.ttft_hist.p90() * 1000.0,
+        r.slo.tbt_hist.p90() * 1000.0,
+        r.total_energy_j / 1e3
+    );
+    Ok(())
+}
+
+fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
+    use greenllm::coordinator::cluster::{run_cluster, ClusterConfig, LbPolicy};
+    let nodes = args.usize_or("nodes", 2)?;
+    let qps = args.f64_or("qps", 10.0)?;
+    let lb = match args.get_or("lb", "leastwork") {
+        "rr" | "roundrobin" => LbPolicy::RoundRobin,
+        _ => LbPolicy::LeastPromptWork,
+    };
+    let trace = alibaba::generate(&ChatParams::new(qps, duration), seed);
+    println!(
+        "cluster: {nodes} nodes, {} requests at {qps} QPS aggregate, lb {lb:?}",
+        trace.requests.len()
+    );
+    for method in [Method::DefaultNv, Method::GreenLlm] {
+        let ccfg = ClusterConfig {
+            nodes,
+            lb,
+            node: Config {
+                method,
+                seed,
+                ..Config::default()
+            },
+        };
+        let r = run_cluster(&ccfg, &trace, &Default::default());
+        println!(
+            "{:<10} energy {:8.1} kJ ({:.2} J/tok) | TTFT {:5.1}% | TBT {:5.1}% | balance {:.2}",
+            method.name(),
+            r.total_energy_j / 1e3,
+            r.energy_per_token_j(),
+            r.ttft_pass_rate * 100.0,
+            r.tbt_pass_rate * 100.0,
+            r.balance_ratio()
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let n = args.usize_or("prompts", 12)?;
+    let max_new = args.usize_or("max-new", 16)?;
+    let dir = args.get_or("artifacts", "artifacts");
+    println!("starting PJRT server from {dir}/ ...");
+    let server = ServerHandle::start(ServerConfig {
+        artifacts_dir: dir.into(),
+        ..Default::default()
+    })?;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(&format!("request {i}: optimize my GPU energy"), max_new))
+        .collect();
+    let mut ttfts = Vec::new();
+    let mut tbts = Vec::new();
+    let mut tokens = 0usize;
+    for rx in rxs {
+        let c = rx.recv()?;
+        ttfts.push(c.ttft_s);
+        tbts.extend(c.tbts);
+        tokens += c.tokens.len();
+        println!("  #{:<3} ttft {:6.1} ms  {:?}", c.id, c.ttft_s * 1e3, c.text);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    tbts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |v: &[f64], q: f64| {
+        if v.is_empty() {
+            0.0
+        } else {
+            v[((q * v.len() as f64) as usize).min(v.len() - 1)] * 1000.0
+        }
+    };
+    println!(
+        "served {n} requests, {tokens} tokens in {wall:.2}s ({:.0} tok/s)",
+        tokens as f64 / wall
+    );
+    println!(
+        "TTFT p50/p90: {:.1}/{:.1} ms | TBT p50/p95: {:.2}/{:.2} ms",
+        pct(&ttfts, 0.5),
+        pct(&ttfts, 0.9),
+        pct(&tbts, 0.5),
+        pct(&tbts, 0.95)
+    );
+    let stats = server.shutdown()?;
+    println!(
+        "engine stats: {} batches, {} requests, {} tokens",
+        stats.batches, stats.completed, stats.generated_tokens
+    );
+    Ok(())
+}
+
+const HELP: &str = "\
+greenllm — SLO-aware dynamic frequency scaling for LLM serving (paper repro)
+
+USAGE: greenllm <command> [flags]
+
+COMMANDS
+  replay      replay a trace under one method (--trace --qps --method --model)
+  compare     defaultNV vs PrefillSplit vs GreenLLM on one trace
+  microbench  phase microbenchmark (--phase prefill|decode --tps N)
+  profile     fit + print the latency/power models (Figs. 7-8)
+  fig1 fig3a fig3b fig3c fig5 fig7 fig8 fig10 fig11 fig12a fig12b
+              regenerate a paper figure
+  table3 table4 ablations baselines cluster
+              regenerate a paper table
+  serve       end-to-end PJRT serving demo (needs `make artifacts`)
+
+FLAGS
+  --duration <s>        trace duration (default 300)
+  --seed <n>            RNG seed (default 42)
+  --model <name>        qwen3-14b | qwen3-30b-moe
+  --method <name>       defaultnv | prefillsplit | greenllm | fixed<MHz>
+  --trace <name>        alibaba | azure_code5|8 | azure_conv5|8 | sinusoid
+  --qps <f>             alibaba chat rate
+  --prefill-margin <f>  SLO margin factor (Fig. 12)
+  --decode-margin <f>   SLO margin factor (Fig. 12)
+  --config <path>       TOML config file (see config/greenllm.toml)
+
+ENV
+  GREENLLM_CSV_DIR      also write each table/figure as CSV into this dir
+";

@@ -1,0 +1,12 @@
+//! Telemetry substrates: streaming percentile histogram, sliding TPS
+//! window, sliding TBT percentile window.
+//!
+//! The decode dual-loop controller consumes exactly these signals: TPS over
+//! the last 200 ms (coarse loop) and P95 TBT over a recent-token window
+//! (fine loop, every 20 ms) — §3.3 of the paper.
+
+pub mod histogram;
+pub mod window;
+
+pub use histogram::Histogram;
+pub use window::{SlidingP95, TpsWindow};

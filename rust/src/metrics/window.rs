@@ -1,0 +1,222 @@
+//! Sliding-window telemetry: the decode controller's two input signals.
+//!
+//! * `TpsWindow` — tokens/s over the trailing window (paper: 200 ms) that
+//!   drives coarse frequency-band selection (§3.3.1).
+//! * `SlidingP95` — P95 TBT over the recent-token window that drives the
+//!   fine ±15 MHz loop every 20 ms (§3.3.2).
+
+use std::collections::VecDeque;
+
+/// Tokens-per-second over a trailing time window.
+#[derive(Debug, Clone)]
+pub struct TpsWindow {
+    window_s: f64,
+    /// (timestamp, token_count) batches — decode rounds emit B tokens at once.
+    events: VecDeque<(f64, u32)>,
+    total_tokens: u64,
+}
+
+impl TpsWindow {
+    pub fn new(window_s: f64) -> Self {
+        assert!(window_s > 0.0);
+        TpsWindow {
+            window_s,
+            events: VecDeque::new(),
+            total_tokens: 0,
+        }
+    }
+
+    pub fn record(&mut self, now: f64, tokens: u32) {
+        self.events.push_back((now, tokens));
+        self.total_tokens += tokens as u64;
+        self.prune(now);
+    }
+
+    fn prune(&mut self, now: f64) {
+        let horizon = now - self.window_s;
+        while let Some(&(t, n)) = self.events.front() {
+            if t < horizon {
+                self.events.pop_front();
+                self.total_tokens -= n as u64;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Smoothed TPS estimate at `now`.
+    pub fn tps(&mut self, now: f64) -> f64 {
+        self.prune(now);
+        self.total_tokens as f64 / self.window_s
+    }
+
+    pub fn tokens_in_window(&self) -> u64 {
+        self.total_tokens
+    }
+}
+
+/// P95 over the last ~`capacity` samples (recent-token TBT window).
+///
+/// Samples carry a *weight*: in one decode round every steady stream
+/// observes the identical TBT (the round duration), so the engine feeds
+/// one `(value, count=batch)` entry per round instead of `batch` copies —
+/// this took the TBT path from O(tokens × window) to O(rounds × entries)
+/// and was the top §Perf win. Entries evict FIFO as whole units, so the
+/// retained weight is ≤ capacity (may briefly dip under after evicting a
+/// heavy entry). With all-unit weights the behaviour matches the classic
+/// per-sample window exactly (property-tested against the oracle).
+#[derive(Debug, Clone)]
+pub struct SlidingP95 {
+    capacity: usize,
+    fifo: VecDeque<(f64, u32)>,
+    /// Sorted by value; total weight tracked separately.
+    sorted: Vec<(f64, u32)>,
+    total: u64,
+}
+
+impl SlidingP95 {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        SlidingP95 {
+            capacity,
+            fifo: VecDeque::with_capacity(capacity + 1),
+            sorted: Vec::with_capacity(capacity + 1),
+            total: 0,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.record_weighted(v, 1);
+    }
+
+    /// Record `count` identical samples (one decode round's steady streams).
+    pub fn record_weighted(&mut self, v: f64, count: u32) {
+        if !v.is_finite() || count == 0 {
+            return;
+        }
+        self.fifo.push_back((v, count));
+        let pos = self.sorted.partition_point(|&(x, _)| x < v);
+        self.sorted.insert(pos, (v, count));
+        self.total += count as u64;
+        while self.total > self.capacity as u64 && self.fifo.len() > 1 {
+            let (old, n) = self.fifo.pop_front().unwrap();
+            let start = self.sorted.partition_point(|&(x, _)| x < old);
+            let idx = self.sorted[start..]
+                .iter()
+                .position(|&(x, c)| x == old && c == n)
+                .expect("evicted entry present")
+                + start;
+            self.sorted.remove(idx);
+            self.total -= n as u64;
+        }
+    }
+
+    /// Total retained weight (token samples in the window).
+    pub fn len(&self) -> usize {
+        self.total as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Nearest-rank quantile over the weighted window; 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut acc = 0u64;
+        for &(v, n) in &self.sorted {
+            acc += n as u64;
+            if acc >= rank {
+                return v;
+            }
+        }
+        self.sorted.last().map(|&(v, _)| v).unwrap_or(0.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+    use crate::util::rng::Pcg64;
+    use crate::util::stats::percentile_exact;
+
+    #[test]
+    fn tps_counts_recent_tokens_only() {
+        let mut w = TpsWindow::new(0.2);
+        w.record(0.00, 10);
+        w.record(0.10, 10);
+        assert_eq!(w.tps(0.10), 100.0); // 20 tokens / 0.2 s
+        // At t=0.25 the first batch (t=0.00) fell out of the window.
+        assert_eq!(w.tps(0.25), 50.0);
+        // Far future: empty window.
+        assert_eq!(w.tps(10.0), 0.0);
+    }
+
+    #[test]
+    fn tps_batch_tokens() {
+        let mut w = TpsWindow::new(1.0);
+        w.record(0.5, 32);
+        assert_eq!(w.tps(0.5), 32.0);
+        assert_eq!(w.tokens_in_window(), 32);
+    }
+
+    #[test]
+    fn sliding_p95_evicts_oldest() {
+        let mut s = SlidingP95::new(3);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.record(v);
+        }
+        assert_eq!(s.len(), 3);
+        // Window now [2,3,4]: p95 = 4, median = 3.
+        assert_eq!(s.p95(), 4.0);
+        assert_eq!(s.quantile(0.5), 3.0);
+    }
+
+    #[test]
+    fn sliding_p95_matches_exact_oracle() {
+        check("sliding_p95_oracle", 50, |g| {
+            let cap = 1 + g.index(64);
+            let n = 1 + g.index(200);
+            let mut s = SlidingP95::new(cap);
+            let mut vals = Vec::new();
+            let mut gg = Pcg64::new(g.next_u64(), 0);
+            for _ in 0..n {
+                let v = gg.lognormal(-3.0, 1.0);
+                s.record(v);
+                vals.push(v);
+            }
+            let window: Vec<f64> = vals.iter().rev().take(cap).cloned().collect();
+            for q in [0.5, 0.9, 0.95, 1.0] {
+                let got = s.quantile(q);
+                let want = percentile_exact(&window, q);
+                crate::prop_assert!(
+                    (got - want).abs() < 1e-12,
+                    "cap={cap} n={n} q={q}: got={got} want={want}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_quantile_zero() {
+        let s = SlidingP95::new(8);
+        assert_eq!(s.p95(), 0.0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn nan_ignored() {
+        let mut s = SlidingP95::new(4);
+        s.record(f64::NAN);
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,218 @@
+//! Model specifications and the FLOPs/bytes cost model of Eq. (1).
+//!
+//! The prefill FLOPs per layer are `A·n + C·n²` where the linear term comes
+//! from QKV/output projections + FFN and the quadratic term from causal
+//! attention (α ≈ ½ when only the causal triangle is computed). The decode
+//! phase is dominated by weight streaming (dense: all parameters per step;
+//! MoE: the expert subset touched by the batch) plus KV-cache reads.
+
+/// Mixture-of-experts configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoeSpec {
+    pub n_experts: usize,
+    pub active_experts: usize,
+    /// Fraction of total parameters living in expert FFNs (the rest —
+    /// attention, embeddings, router — is always streamed).
+    pub expert_param_frac: f64,
+}
+
+/// Architecture + derived cost coefficients for a served model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Total parameters (streamed on dense decode).
+    pub params_total: f64,
+    /// Parameters active per token (dense: == total).
+    pub params_active: f64,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    /// Bytes per parameter (BF16 = 2).
+    pub bytes_per_param: f64,
+    pub moe: Option<MoeSpec>,
+}
+
+impl ModelSpec {
+    /// Qwen3-14B (dense): 40 layers, d_model 5120, GQA 8 KV heads (Table 2).
+    pub fn qwen3_14b() -> Self {
+        ModelSpec {
+            name: "Qwen3-14B".into(),
+            params_total: 14.8e9,
+            params_active: 14.8e9,
+            n_layers: 40,
+            d_model: 5120,
+            d_ff: 17408,
+            n_kv_heads: 8,
+            d_head: 128,
+            bytes_per_param: 2.0,
+            moe: None,
+        }
+    }
+
+    /// Qwen3-30B-A3B (MoE): 48 layers, 128 experts, 8 active, 3.3 B active
+    /// of 30.5 B total (Table 2).
+    pub fn qwen3_30b_moe() -> Self {
+        ModelSpec {
+            name: "Qwen3-30B-MoE".into(),
+            params_total: 30.5e9,
+            params_active: 3.3e9,
+            n_layers: 48,
+            d_model: 2048,
+            d_ff: 768,
+            n_kv_heads: 4,
+            d_head: 128,
+            bytes_per_param: 2.0,
+            moe: Some(MoeSpec {
+                n_experts: 128,
+                active_experts: 8,
+                expert_param_frac: 0.90,
+            }),
+        }
+    }
+
+    /// The TinyLM actually served through PJRT (matches python/compile defaults).
+    pub fn tinylm() -> Self {
+        ModelSpec {
+            name: "TinyLM".into(),
+            params_total: 479_872.0,
+            params_active: 479_872.0,
+            n_layers: 2,
+            d_model: 128,
+            d_ff: 256,
+            n_kv_heads: 4,
+            d_head: 32,
+            bytes_per_param: 4.0,
+            moe: None,
+        }
+    }
+
+    /// Linear prefill coefficient `A` of Eq. (1): FLOPs per prompt token for
+    /// projections + FFN ≈ 2 · active params (one fwd pass MAC = 2 FLOPs).
+    pub fn prefill_flops_linear(&self) -> f64 {
+        2.0 * self.params_active
+    }
+
+    /// Quadratic prefill coefficient `C` of Eq. (1): causal attention,
+    /// `4·α·d_model` per layer with α = ½ (causal triangle only).
+    pub fn prefill_flops_quadratic(&self) -> f64 {
+        let alpha = 0.5;
+        4.0 * alpha * self.d_model as f64 * self.n_layers as f64
+    }
+
+    /// Total prefill FLOPs for a prompt of n tokens (Eq. 1 summed over layers).
+    pub fn prefill_flops(&self, n: usize) -> f64 {
+        let n = n as f64;
+        self.prefill_flops_linear() * n + self.prefill_flops_quadratic() * n * n
+    }
+
+    /// KV-cache bytes appended per token (K+V, GQA heads, all layers, BF16).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_kv_heads as f64
+            * self.d_head as f64
+            * self.bytes_per_param
+            * self.n_layers as f64
+    }
+
+    /// Weight bytes streamed per decode step for a batch of `b` streams.
+    ///
+    /// Dense: every parameter once (batch amortizes it). MoE: the always-on
+    /// share plus the expected fraction of experts touched by `b` tokens
+    /// drawing `active` of `n` experts each: 1 − (1 − a/n)^b.
+    pub fn decode_weight_bytes(&self, b: usize) -> f64 {
+        let total = self.params_total * self.bytes_per_param;
+        match &self.moe {
+            None => total,
+            Some(m) => {
+                let dense_part = total * (1.0 - m.expert_param_frac);
+                let p_active = m.active_experts as f64 / m.n_experts as f64;
+                let frac_touched = 1.0 - (1.0 - p_active).powi(b.max(1) as i32);
+                dense_part + total * m.expert_param_frac * frac_touched
+            }
+        }
+    }
+
+    /// Decode FLOPs per token (≈ 2 · active params).
+    pub fn decode_flops_per_token(&self) -> f64 {
+        2.0 * self.params_active
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name {
+            "qwen3-14b" | "Qwen3-14B" => Some(ModelSpec::qwen3_14b()),
+            "qwen3-30b-moe" | "Qwen3-30B-MoE" | "qwen3-30b" => Some(ModelSpec::qwen3_30b_moe()),
+            "tinylm" | "TinyLM" => Some(ModelSpec::tinylm()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen14b_linear_dominates_at_short_lengths() {
+        let m = ModelSpec::qwen3_14b();
+        // At n = 512 the linear (FFN/projection) term must dominate.
+        let n = 512.0;
+        let lin = m.prefill_flops_linear() * n;
+        let quad = m.prefill_flops_quadratic() * n * n;
+        assert!(lin > 10.0 * quad, "lin={lin:.3e} quad={quad:.3e}");
+    }
+
+    #[test]
+    fn quadratic_term_grows_with_square() {
+        let m = ModelSpec::qwen3_14b();
+        let f1 = m.prefill_flops(1024);
+        let f2 = m.prefill_flops(2048);
+        // Doubling n more than doubles FLOPs (superlinear) but less than 4×
+        // while the linear term dominates.
+        assert!(f2 > 2.0 * f1 && f2 < 4.0 * f1);
+    }
+
+    #[test]
+    fn kv_bytes_qwen14b() {
+        let m = ModelSpec::qwen3_14b();
+        // 2 × 8 heads × 128 dim × 2 B × 40 layers = 163 840 B/token.
+        assert_eq!(m.kv_bytes_per_token(), 163_840.0);
+    }
+
+    #[test]
+    fn dense_decode_streams_all_weights_regardless_of_batch() {
+        let m = ModelSpec::qwen3_14b();
+        assert_eq!(m.decode_weight_bytes(1), m.decode_weight_bytes(64));
+        assert!((m.decode_weight_bytes(1) - 29.6e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn moe_decode_bytes_grow_with_batch_and_saturate() {
+        let m = ModelSpec::qwen3_30b_moe();
+        let b1 = m.decode_weight_bytes(1);
+        let b16 = m.decode_weight_bytes(16);
+        let b256 = m.decode_weight_bytes(256);
+        let total = m.params_total * m.bytes_per_param;
+        assert!(b1 < b16 && b16 < b256);
+        assert!(b256 <= total * 1.0001);
+        assert!(b256 > 0.95 * total, "b256 should approach full streaming");
+        // Single stream touches ~8/128 of expert weights + dense share.
+        assert!(b1 < 0.20 * total, "b1={b1:.3e} total={total:.3e}");
+    }
+
+    #[test]
+    fn moe_prefill_cheaper_per_token_than_dense_14b() {
+        let moe = ModelSpec::qwen3_30b_moe();
+        let dense = ModelSpec::qwen3_14b();
+        assert!(moe.prefill_flops_linear() < dense.prefill_flops_linear());
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(
+            ModelSpec::by_name("qwen3-14b").unwrap().name,
+            "Qwen3-14B"
+        );
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+}

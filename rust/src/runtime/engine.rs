@@ -1,0 +1,259 @@
+//! The PJRT artifact engine: compile-once, execute-many TinyLM.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): loads the HLO-text
+//! artifacts (`HloModuleProto::from_text_file` — text, not serialized
+//! proto; see aot.py), compiles one executable per prefill shape bucket
+//! plus the decode step, and feeds parameters positionally per the
+//! manifest ABI.
+
+use crate::runtime::manifest::Manifest;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Logits + KV state returned by prefill / decode steps. KV stays as
+/// opaque `xla::Literal`s threaded back into the next decode call.
+pub struct StepOutput {
+    /// Row-major logits; prefill: [B, S, V] flattened, decode: [B, V].
+    pub logits: Vec<f32>,
+    pub k_cache: xla::Literal,
+    pub v_cache: xla::Literal,
+}
+
+pub struct TinyLmEngine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    params: Vec<xla::Literal>,
+    prefill_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    decode_exe: xla::PjRtLoadedExecutable,
+    /// Executions since load (telemetry).
+    pub prefill_calls: std::cell::Cell<u64>,
+    pub decode_calls: std::cell::Cell<u64>,
+}
+
+impl TinyLmEngine {
+    /// Load artifacts from a directory (default `artifacts/`).
+    pub fn load(dir: &Path) -> Result<TinyLmEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+
+        // Parameters: one literal per tensor, ABI order.
+        let flat = manifest.load_params_f32()?;
+        let mut params = Vec::new();
+        let mut off = 0usize;
+        for spec in manifest.param_specs() {
+            let n = spec.numel();
+            let lit = xla::Literal::vec1(&flat[off..off + n]);
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            params.push(
+                lit.reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {}: {e:?}", spec.name))?,
+            );
+            off += n;
+        }
+        debug_assert_eq!(off, flat.len());
+
+        let compile = |path: &Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {path:?}: {e:?}"))
+        };
+
+        let mut prefill_exes = BTreeMap::new();
+        for (bucket, path) in &manifest.prefill_files {
+            prefill_exes.insert(*bucket, compile(path).context("prefill executable")?);
+        }
+        let decode_exe = compile(&manifest.decode_file).context("decode executable")?;
+
+        Ok(TinyLmEngine {
+            manifest,
+            client,
+            params,
+            prefill_exes,
+            decode_exe,
+            prefill_calls: std::cell::Cell::new(0),
+            decode_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Pad a batch of token rows up to (manifest.batch, bucket); rows
+    /// beyond the real batch repeat row 0 (results discarded).
+    fn pack_tokens(&self, rows: &[Vec<i32>], bucket: usize) -> Result<xla::Literal> {
+        let b = self.manifest.batch;
+        if rows.is_empty() || rows.len() > b {
+            return Err(anyhow!("batch must be 1..={b}, got {}", rows.len()));
+        }
+        let mut flat = vec![0i32; b * bucket];
+        for (r, row) in rows.iter().enumerate() {
+            if row.len() > bucket {
+                return Err(anyhow!("row {r} length {} exceeds bucket {bucket}", row.len()));
+            }
+            // Left-pad? No: right-pad with the last token (attention is
+            // causal, the padded tail never influences earlier positions).
+            for (c, &tok) in row.iter().enumerate() {
+                flat[r * bucket + c] = tok;
+            }
+            let last = *row.last().unwrap_or(&0);
+            for c in row.len()..bucket {
+                flat[r * bucket + c] = last;
+            }
+        }
+        for r in rows.len()..b {
+            for c in 0..bucket {
+                flat[r * bucket + c] = flat[c];
+            }
+        }
+        xla::Literal::vec1(&flat)
+            .reshape(&[b as i64, bucket as i64])
+            .map_err(|e| anyhow!("tokens reshape: {e:?}"))
+    }
+
+    /// Run prefill for up to `manifest.batch` prompts (each ≤ bucket).
+    /// Returns logits [B, bucket, V] plus the KV caches.
+    pub fn prefill(&self, rows: &[Vec<i32>], bucket: usize) -> Result<StepOutput> {
+        let exe = self
+            .prefill_exes
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no prefill executable for bucket {bucket}"))?;
+        let tokens = self.pack_tokens(rows, bucket)?;
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&tokens);
+        let result = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("prefill execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("prefill fetch: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("prefill tuple: {e:?}"))?;
+        let [logits, k, v]: [xla::Literal; 3] = parts
+            .try_into()
+            .map_err(|_| anyhow!("prefill must return 3 outputs"))?;
+        self.prefill_calls.set(self.prefill_calls.get() + 1);
+        Ok(StepOutput {
+            logits: logits
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("logits: {e:?}"))?,
+            k_cache: k,
+            v_cache: v,
+        })
+    }
+
+    /// One decode step: `tokens` (≤ batch, padded with token 0), shared
+    /// position `pos`. Returns logits [B, V] and updated caches.
+    pub fn decode_step(
+        &self,
+        tokens: &[i32],
+        k_cache: &xla::Literal,
+        v_cache: &xla::Literal,
+        pos: i32,
+    ) -> Result<StepOutput> {
+        let b = self.manifest.batch;
+        if tokens.is_empty() || tokens.len() > b {
+            return Err(anyhow!("decode batch must be 1..={b}"));
+        }
+        if !(0..self.manifest.max_seq as i32).contains(&pos) {
+            return Err(anyhow!("pos {pos} out of cache capacity"));
+        }
+        let mut padded = tokens.to_vec();
+        padded.resize(b, tokens[0]);
+        let tok_lit = xla::Literal::vec1(&padded);
+        let pos_lit = xla::Literal::from(pos);
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&tok_lit);
+        args.push(k_cache);
+        args.push(v_cache);
+        args.push(&pos_lit);
+        let result = self
+            .decode_exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("decode execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("decode fetch: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("decode tuple: {e:?}"))?;
+        let [logits, k, v]: [xla::Literal; 3] = parts
+            .try_into()
+            .map_err(|_| anyhow!("decode must return 3 outputs"))?;
+        self.decode_calls.set(self.decode_calls.get() + 1);
+        Ok(StepOutput {
+            logits: logits
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("logits: {e:?}"))?,
+            k_cache: k,
+            v_cache: v,
+        })
+    }
+
+    /// Greedy argmax over a logits row.
+    pub fn argmax_row(&self, logits: &[f32], row: usize) -> i32 {
+        let v = self.manifest.vocab;
+        let slice = &logits[row * v..(row + 1) * v];
+        let mut best = 0usize;
+        for (i, &x) in slice.iter().enumerate() {
+            if x > slice[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    /// Greedy generation for a batch of prompts (teacher path for tests and
+    /// the quickstart). The decode executable shares `pos` across the
+    /// batch, so all prompts in one call must have equal token length —
+    /// the server batches by exact length; here it is an error.
+    pub fn generate(&self, prompts: &[Vec<i32>], max_new: usize) -> Result<Vec<Vec<i32>>> {
+        let len0 = prompts.first().map(Vec::len).unwrap_or(0);
+        if len0 == 0 || prompts.iter().any(|p| p.len() != len0) {
+            return Err(anyhow!("generate needs equal-length, non-empty prompts"));
+        }
+        let bucket = self
+            .manifest
+            .bucket_for(len0)
+            .ok_or_else(|| anyhow!("prompt length {len0} exceeds largest bucket"))?;
+        let out = self.prefill(prompts, bucket)?;
+        let v = self.manifest.vocab;
+        let mut results: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        // Next token per row from the last real prompt position. Positions
+        // beyond len0 hold bucket padding, but decode masks the cache at
+        // `pos`, so they are never attended.
+        let mut next: Vec<i32> = (0..prompts.len())
+            .map(|r| {
+                let pos = len0 - 1;
+                let row = &out.logits[(r * bucket + pos) * v..(r * bucket + pos + 1) * v];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as i32
+            })
+            .collect();
+        let mut k = out.k_cache;
+        let mut v_cache = out.v_cache;
+        let mut pos = len0 as i32;
+        for _ in 0..max_new {
+            if pos as usize >= self.manifest.max_seq {
+                break;
+            }
+            for (r, n) in next.iter().enumerate() {
+                results[r].push(*n);
+            }
+            let step = self.decode_step(&next, &k, &v_cache, pos)?;
+            for (r, n) in next.iter_mut().enumerate().take(prompts.len()) {
+                *n = self.argmax_row(&step.logits, r);
+            }
+            k = step.k_cache;
+            v_cache = step.v_cache;
+            pos += 1;
+        }
+        Ok(results)
+    }
+}

@@ -1,0 +1,261 @@
+//! KV-cache block allocator — the memory-management substrate every
+//! serving engine needs (vLLM-style paged blocks, minus the paging).
+//!
+//! The decode pool admits streams only while blocks remain; the sim uses
+//! a stream cap derived from this and the real server uses it directly to
+//! bound concurrent batches. Reference counting supports prefix sharing
+//! (fork) so a future speculative/beam path can reuse prompt blocks.
+
+use std::collections::HashMap;
+
+/// Fixed-size block allocator with refcounts.
+#[derive(Debug)]
+pub struct KvBlockAllocator {
+    pub block_tokens: usize,
+    pub total_blocks: usize,
+    free: Vec<usize>,
+    refcounts: HashMap<usize, u32>,
+    /// stream id → blocks held.
+    allocations: HashMap<u64, Vec<usize>>,
+}
+
+impl KvBlockAllocator {
+    pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
+        assert!(total_blocks > 0 && block_tokens > 0);
+        KvBlockAllocator {
+            block_tokens,
+            total_blocks,
+            free: (0..total_blocks).rev().collect(),
+            refcounts: HashMap::new(),
+            allocations: HashMap::new(),
+        }
+    }
+
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    /// Can a stream of `tokens` context be admitted?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for_tokens(tokens) <= self.free.len()
+    }
+
+    /// Allocate blocks for a new stream. Returns false (no change) if the
+    /// cache cannot hold it.
+    pub fn admit(&mut self, stream: u64, tokens: usize) -> bool {
+        let need = self.blocks_for_tokens(tokens);
+        if need > self.free.len() || self.allocations.contains_key(&stream) {
+            return false;
+        }
+        let blocks: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        for &b in &blocks {
+            self.refcounts.insert(b, 1);
+        }
+        self.allocations.insert(stream, blocks);
+        true
+    }
+
+    /// Extend a stream by one token; allocates a new block on a boundary.
+    /// Returns false if the cache is full (caller must preempt or wait).
+    pub fn append_token(&mut self, stream: u64, new_len: usize) -> bool {
+        let need = self.blocks_for_tokens(new_len);
+        let Some(blocks) = self.allocations.get(&stream) else {
+            return false;
+        };
+        if blocks.len() >= need {
+            return true;
+        }
+        if self.free.is_empty() {
+            return false;
+        }
+        let b = self.free.pop().unwrap();
+        self.refcounts.insert(b, 1);
+        self.allocations.get_mut(&stream).unwrap().push(b);
+        true
+    }
+
+    /// Fork: a child stream sharing the parent's blocks (copy-on-write
+    /// refcounting; prefix sharing).
+    pub fn fork(&mut self, parent: u64, child: u64) -> bool {
+        if self.allocations.contains_key(&child) {
+            return false;
+        }
+        let Some(blocks) = self.allocations.get(&parent).cloned() else {
+            return false;
+        };
+        for &b in &blocks {
+            *self.refcounts.get_mut(&b).unwrap() += 1;
+        }
+        self.allocations.insert(child, blocks);
+        true
+    }
+
+    /// Release a stream's blocks (decrement refcounts; free at zero).
+    pub fn release(&mut self, stream: u64) {
+        if let Some(blocks) = self.allocations.remove(&stream) {
+            for b in blocks {
+                let rc = self.refcounts.get_mut(&b).unwrap();
+                *rc -= 1;
+                if *rc == 0 {
+                    self.refcounts.remove(&b);
+                    self.free.push(b);
+                }
+            }
+        }
+    }
+
+    /// Invariant check (used by property tests): every block is either
+    /// free or referenced, never both, never neither.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.total_blocks];
+        for &b in &self.free {
+            if seen[b] {
+                return Err(format!("block {b} double-freed"));
+            }
+            seen[b] = true;
+            if self.refcounts.contains_key(&b) {
+                return Err(format!("block {b} free but refcounted"));
+            }
+        }
+        for (&b, &rc) in &self.refcounts {
+            if rc == 0 {
+                return Err(format!("block {b} with zero refcount"));
+            }
+            if seen[b] {
+                return Err(format!("block {b} both free and allocated"));
+            }
+            seen[b] = true;
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaked block".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::check;
+
+    #[test]
+    fn admit_and_release_roundtrip() {
+        let mut a = KvBlockAllocator::new(10, 16);
+        assert!(a.admit(1, 33)); // 3 blocks
+        assert_eq!(a.used_blocks(), 3);
+        a.release(1);
+        assert_eq!(a.free_blocks(), 10);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rejects_when_full() {
+        let mut a = KvBlockAllocator::new(4, 16);
+        assert!(a.admit(1, 64)); // 4 blocks
+        assert!(!a.admit(2, 1));
+        assert!(!a.can_admit(1));
+        a.release(1);
+        assert!(a.admit(2, 1));
+    }
+
+    #[test]
+    fn append_allocates_on_boundary() {
+        let mut a = KvBlockAllocator::new(3, 4);
+        assert!(a.admit(1, 4)); // exactly 1 block
+        assert!(a.append_token(1, 5)); // crosses boundary → 2nd block
+        assert_eq!(a.used_blocks(), 2);
+        assert!(a.append_token(1, 6)); // same block
+        assert_eq!(a.used_blocks(), 2);
+    }
+
+    #[test]
+    fn append_fails_when_exhausted() {
+        let mut a = KvBlockAllocator::new(1, 4);
+        assert!(a.admit(1, 4));
+        assert!(!a.append_token(1, 5));
+    }
+
+    #[test]
+    fn fork_shares_blocks_release_frees_at_zero() {
+        let mut a = KvBlockAllocator::new(4, 8);
+        assert!(a.admit(1, 16)); // 2 blocks
+        assert!(a.fork(1, 2));
+        assert_eq!(a.used_blocks(), 2); // shared, not copied
+        a.release(1);
+        assert_eq!(a.used_blocks(), 2); // child still holds them
+        a.release(2);
+        assert_eq!(a.free_blocks(), 4);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_admit_rejected() {
+        let mut a = KvBlockAllocator::new(4, 8);
+        assert!(a.admit(1, 8));
+        assert!(!a.admit(1, 8));
+    }
+
+    #[test]
+    fn property_random_workload_keeps_invariants() {
+        check("kv_allocator_invariants", 30, |g| {
+            let mut a = KvBlockAllocator::new(1 + g.index(32), 1 + g.index(32));
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            let mut lens: std::collections::HashMap<u64, usize> = Default::default();
+            for _ in 0..200 {
+                match g.index(4) {
+                    0 => {
+                        let tokens = 1 + g.index(64);
+                        if a.admit(next_id, tokens) {
+                            live.push(next_id);
+                            lens.insert(next_id, tokens);
+                        }
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let s = live[g.index(live.len())];
+                        let l = lens.get_mut(&s).unwrap();
+                        if a.append_token(s, *l + 1) {
+                            *l += 1;
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let i = g.index(live.len());
+                        let s = live.swap_remove(i);
+                        lens.remove(&s);
+                        a.release(s);
+                    }
+                    3 if !live.is_empty() => {
+                        let parent = live[g.index(live.len())];
+                        if a.fork(parent, next_id) {
+                            live.push(next_id);
+                            lens.insert(next_id, lens[&parent]);
+                        }
+                        next_id += 1;
+                    }
+                    _ => {}
+                }
+                a.check_invariants()?;
+            }
+            for s in live {
+                a.release(s);
+            }
+            a.check_invariants()?;
+            crate::prop_assert!(
+                a.free_blocks() == a.total_blocks,
+                "leak: {} free of {}",
+                a.free_blocks(),
+                a.total_blocks
+            );
+            Ok(())
+        });
+    }
+}

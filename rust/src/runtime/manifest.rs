@@ -1,0 +1,253 @@
+//! `artifacts/manifest.json` — the contract between the Python AOT export
+//! and the Rust runtime: model shape, parameter ABI order, shape buckets,
+//! file names and numeric test vectors.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TestVectors {
+    pub prefill_bucket: usize,
+    pub last_logits_sum: f64,
+    pub last_logits_absmean: f64,
+    pub last_logits_row0_head: Vec<f64>,
+    pub greedy_prompt: Vec<i32>,
+    pub greedy_next_tokens: Vec<i32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub d_head: usize,
+    pub num_params: usize,
+    pub batch: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub params_file: PathBuf,
+    pub prefill_files: Vec<(usize, PathBuf)>,
+    pub decode_file: PathBuf,
+    pub test_vectors: TestVectors,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let usize_at = |p: &str| -> Result<usize> {
+            j.path(p)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing {p}"))
+        };
+        let buckets: Vec<usize> = j
+            .get("prefill_buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing prefill_buckets"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let files = j
+            .get("files")
+            .ok_or_else(|| anyhow!("manifest missing files"))?;
+        let mut prefill_files = Vec::new();
+        for &b in &buckets {
+            let f = files
+                .get(&format!("prefill_s{b}"))
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest missing prefill_s{b}"))?;
+            prefill_files.push((b, dir.join(f)));
+        }
+        let decode_file = dir.join(
+            files
+                .get("decode_step")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest missing decode_step"))?,
+        );
+        let tv = j
+            .get("test_vectors")
+            .ok_or_else(|| anyhow!("manifest missing test_vectors"))?;
+        let f64s = |node: &Json| -> Vec<f64> {
+            node.as_arr()
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default()
+        };
+        let i32s = |node: &Json| -> Vec<i32> {
+            node.as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_f64().map(|f| f as i32)).collect())
+                .unwrap_or_default()
+        };
+        let test_vectors = TestVectors {
+            prefill_bucket: tv
+                .get("prefill_bucket")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("test_vectors.prefill_bucket"))?,
+            last_logits_sum: tv
+                .get("last_logits_sum")
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::NAN),
+            last_logits_absmean: tv
+                .get("last_logits_absmean")
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::NAN),
+            last_logits_row0_head: tv
+                .get("last_logits_row0_head")
+                .map(f64s)
+                .unwrap_or_default(),
+            greedy_prompt: tv.get("greedy_prompt").map(i32s).unwrap_or_default(),
+            greedy_next_tokens: tv.get("greedy_next_tokens").map(i32s).unwrap_or_default(),
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            vocab: usize_at("model.vocab")?,
+            d_model: usize_at("model.d_model")?,
+            n_heads: usize_at("model.n_heads")?,
+            n_layers: usize_at("model.n_layers")?,
+            d_ff: usize_at("model.d_ff")?,
+            max_seq: usize_at("model.max_seq")?,
+            d_head: usize_at("model.d_head")?,
+            num_params: usize_at("model.num_params")?,
+            batch: usize_at("batch")?,
+            prefill_buckets: buckets,
+            params_file: dir.join(
+                j.get("params_file")
+                    .and_then(Json::as_str)
+                    .unwrap_or("params.bin"),
+            ),
+            prefill_files,
+            decode_file,
+            test_vectors,
+        })
+    }
+
+    /// Parameter tensor specs in ABI order (mirrors ModelConfig.param_specs
+    /// in python/compile/model.py — the orders must match exactly).
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        let (v, d, ff, t) = (self.vocab, self.d_model, self.d_ff, self.max_seq);
+        let mut specs = vec![
+            ParamSpec {
+                name: "embed".into(),
+                shape: vec![v, d],
+            },
+            ParamSpec {
+                name: "pos_embed".into(),
+                shape: vec![t, d],
+            },
+        ];
+        for i in 0..self.n_layers {
+            let layer = |n: &str, shape: Vec<usize>| ParamSpec {
+                name: format!("l{i}.{n}"),
+                shape,
+            };
+            specs.extend([
+                layer("norm1", vec![d]),
+                layer("wq", vec![d, d]),
+                layer("wk", vec![d, d]),
+                layer("wv", vec![d, d]),
+                layer("wo", vec![d, d]),
+                layer("norm2", vec![d]),
+                layer("w_gate", vec![d, ff]),
+                layer("w_up", vec![d, ff]),
+                layer("w_down", vec![ff, d]),
+            ]);
+        }
+        specs.push(ParamSpec {
+            name: "final_norm".into(),
+            shape: vec![d],
+        });
+        specs.push(ParamSpec {
+            name: "lm_head".into(),
+            shape: vec![d, v],
+        });
+        specs
+    }
+
+    /// Smallest bucket that fits a prompt of `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.prefill_buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    pub fn load_params_f32(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&self.params_file)
+            .with_context(|| format!("reading {:?}", self.params_file))?;
+        if bytes.len() != self.num_params * 4 {
+            return Err(anyhow!(
+                "params.bin has {} bytes, expected {}",
+                bytes.len(),
+                self.num_params * 4
+            ));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.vocab >= 2);
+        assert!(!m.prefill_buckets.is_empty());
+        assert_eq!(m.prefill_files.len(), m.prefill_buckets.len());
+        // ABI: total elements of the spec list must equal num_params.
+        let total: usize = m.param_specs().iter().map(|s| s.numel()).sum();
+        assert_eq!(total, m.num_params);
+        // Params file round-trips.
+        let p = m.load_params_f32().unwrap();
+        assert_eq!(p.len(), m.num_params);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let smallest = m.prefill_buckets[0];
+        let largest = *m.prefill_buckets.last().unwrap();
+        assert_eq!(m.bucket_for(1), Some(smallest));
+        assert_eq!(m.bucket_for(smallest), Some(smallest));
+        assert_eq!(m.bucket_for(largest + 1), None);
+    }
+
+    #[test]
+    fn missing_dir_is_error_with_hint() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,14 @@
+//! The PJRT runtime: loads the AOT artifacts exported by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//! Python never runs here — the Rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/*.hlo.txt` + `params.bin`.
+
+pub mod engine;
+pub mod kv_cache;
+pub mod manifest;
+pub mod tokenizer;
+
+pub use engine::TinyLmEngine;
+pub use kv_cache::KvBlockAllocator;
+pub use manifest::Manifest;
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,79 @@
+//! Byte-level tokenizer for the TinyLM serving path.
+//!
+//! Vocabulary layout (matches TinyLM's vocab=512 default): ids 0–255 are
+//! raw bytes, 256 = BOS, 257 = EOS, the rest unused. Lossless on arbitrary
+//! UTF-8, zero external files — exactly enough to prove the tokenize →
+//! route → serve path end-to-end.
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    pub vocab: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab >= 258, "byte tokenizer needs vocab >= 258");
+        ByteTokenizer { vocab }
+    }
+
+    /// Encode text → BOS + bytes.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids = Vec::with_capacity(text.len() + 1);
+        ids.push(BOS);
+        ids.extend(text.bytes().map(|b| b as i32));
+        ids
+    }
+
+    /// Decode ids → text (specials skipped, invalid UTF-8 lossy-replaced).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new(512);
+        let ids = t.encode("hello, GreenLLM");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(t.decode(&ids), "hello, GreenLLM");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::new(512);
+        let s = "énergie ⚡ 省エネ";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_skipped_on_decode() {
+        let t = ByteTokenizer::new(512);
+        assert_eq!(t.decode(&[BOS, 104, 105, EOS]), "hi");
+    }
+
+    #[test]
+    fn all_ids_in_vocab() {
+        let t = ByteTokenizer::new(512);
+        for id in t.encode("any\u{00ff}text") {
+            assert!((0..512).contains(&id));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_vocab_rejected() {
+        ByteTokenizer::new(100);
+    }
+}

@@ -1,0 +1,338 @@
+//! Real serving path: a threaded request loop over the PJRT TinyLM engine.
+//!
+//! This is the end-to-end proof that the three layers compose: clients
+//! submit prompts over a channel; the engine thread tokenizes, groups
+//! equal-length prompts into batches (the decode executable shares `pos`
+//! across its batch), admits them against the KV block allocator, runs
+//! prefill + decode through PJRT, and streams tokens back with TTFT/TBT
+//! timestamps. No Python anywhere. (tokio is not in the offline mirror, so
+//! the loop is plain std::thread + mpsc — one engine thread, like a single
+//! GPU worker.)
+
+use crate::runtime::kv_cache::KvBlockAllocator;
+use crate::runtime::tokenizer::ByteTokenizer;
+use crate::runtime::TinyLmEngine;
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// A completed request, with serving telemetry.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt: String,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    /// Wall-clock seconds from submit to first generated token.
+    pub ttft_s: f64,
+    /// Wall-clock seconds between subsequent tokens.
+    pub tbts: Vec<f64>,
+}
+
+struct ServeRequest {
+    id: u64,
+    prompt: String,
+    max_new: usize,
+    submitted: Instant,
+    tx: mpsc::Sender<Completion>,
+}
+
+enum Msg {
+    Request(ServeRequest),
+    Shutdown,
+}
+
+/// Handle held by clients; the engine runs on its own thread.
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+    next_id: std::sync::atomic::AtomicU64,
+    join: Option<std::thread::JoinHandle<Result<ServerStats>>>,
+}
+
+/// Aggregate serving stats returned at shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub completed: u64,
+    pub batches: u64,
+    pub generated_tokens: u64,
+    pub batched_requests: u64,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: PathBuf,
+    /// Batch-formation window: wait this long for same-length companions.
+    pub batch_window: Duration,
+    /// KV blocks available (bounds concurrent batches).
+    pub kv_blocks: usize,
+    pub kv_block_tokens: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            batch_window: Duration::from_millis(5),
+            kv_blocks: 64,
+            kv_block_tokens: 16,
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Start the engine thread (loads + compiles artifacts inside it — the
+    /// PJRT client is not Send).
+    pub fn start(cfg: ServerConfig) -> Result<ServerHandle> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("greenllm-engine".into())
+            .spawn(move || engine_thread(cfg, rx, ready_tx))
+            .map_err(|e| anyhow!("spawn: {e}"))?;
+        // Surface load/compile errors synchronously.
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(ServerHandle {
+            tx,
+            next_id: std::sync::atomic::AtomicU64::new(0),
+            join: Some(join),
+        })
+    }
+
+    /// Submit a prompt; returns a receiver for the completion.
+    pub fn submit(&self, prompt: &str, max_new: usize) -> mpsc::Receiver<Completion> {
+        let (tx, rx) = mpsc::channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let _ = self.tx.send(Msg::Request(ServeRequest {
+            id,
+            prompt: prompt.to_string(),
+            max_new,
+            submitted: Instant::now(),
+            tx,
+        }));
+        rx
+    }
+
+    /// Stop the engine after draining queued work; returns stats.
+    pub fn shutdown(mut self) -> Result<ServerStats> {
+        let _ = self.tx.send(Msg::Shutdown);
+        match self.join.take() {
+            Some(j) => j.join().map_err(|_| anyhow!("engine thread panicked"))?,
+            None => Ok(ServerStats::default()),
+        }
+    }
+}
+
+fn engine_thread(
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<Msg>,
+    ready_tx: mpsc::Sender<Result<()>>,
+) -> Result<ServerStats> {
+    let engine = match TinyLmEngine::load(&cfg.artifacts_dir) {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = ready_tx.send(Err(anyhow!("{msg}")));
+            return Err(anyhow!("{msg}"));
+        }
+    };
+    let tokenizer = ByteTokenizer::new(engine.manifest.vocab);
+    let mut kv = KvBlockAllocator::new(cfg.kv_blocks, cfg.kv_block_tokens);
+    let mut stats = ServerStats::default();
+    let mut backlog: VecDeque<ServeRequest> = VecDeque::new();
+    let mut draining = false;
+
+    loop {
+        // Pull at least one message (blocking), then opportunistically more
+        // within the batching window.
+        if backlog.is_empty() {
+            match rx.recv() {
+                Ok(Msg::Request(r)) => backlog.push_back(r),
+                Ok(Msg::Shutdown) | Err(_) => draining = true,
+            }
+        }
+        if !draining {
+            let deadline = Instant::now() + cfg.batch_window;
+            while let Some(left) = deadline.checked_duration_since(Instant::now()) {
+                match rx.recv_timeout(left) {
+                    Ok(Msg::Request(r)) => backlog.push_back(r),
+                    Ok(Msg::Shutdown) => {
+                        draining = true;
+                        break;
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        draining = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if backlog.is_empty() && draining {
+            return Ok(stats);
+        }
+        if backlog.is_empty() {
+            continue;
+        }
+
+        // Form a batch: the head request plus up to batch-1 same-token-length
+        // companions (shared decode `pos` requires equal lengths).
+        let head = backlog.pop_front().unwrap();
+        let head_tokens = clamp_prompt(&tokenizer, &head.prompt, &engine);
+        let mut batch = vec![(head, head_tokens.clone())];
+        let mut i = 0;
+        while i < backlog.len() && batch.len() < engine.manifest.batch {
+            let cand = clamp_prompt(&tokenizer, &backlog[i].prompt, &engine);
+            if cand.len() == head_tokens.len() {
+                let req = backlog.remove(i).unwrap();
+                batch.push((req, cand));
+            } else {
+                i += 1;
+            }
+        }
+
+        serve_batch(&engine, &tokenizer, &mut kv, &mut stats, batch);
+        if draining && backlog.is_empty() {
+            // One more non-blocking sweep for racing submissions.
+            while let Ok(Msg::Request(r)) = rx.try_recv() {
+                backlog.push_back(r);
+            }
+            if backlog.is_empty() {
+                return Ok(stats);
+            }
+        }
+    }
+}
+
+/// Tokenize and clamp a prompt to the largest bucket.
+fn clamp_prompt(tok: &ByteTokenizer, prompt: &str, engine: &TinyLmEngine) -> Vec<i32> {
+    let max = *engine.manifest.prefill_buckets.last().unwrap();
+    let mut ids = tok.encode(prompt);
+    ids.truncate(max);
+    ids
+}
+
+fn serve_batch(
+    engine: &TinyLmEngine,
+    tokenizer: &ByteTokenizer,
+    kv: &mut KvBlockAllocator,
+    stats: &mut ServerStats,
+    batch: Vec<(ServeRequest, Vec<i32>)>,
+) {
+    let prompts: Vec<Vec<i32>> = batch.iter().map(|(_, t)| t.clone()).collect();
+    let len0 = prompts[0].len();
+    let max_new = batch
+        .iter()
+        .map(|(r, _)| r.max_new)
+        .max()
+        .unwrap_or(0)
+        .min(engine.manifest.max_seq.saturating_sub(len0));
+
+    // KV admission: blocks for prompt + generation budget, per stream.
+    for (i, (req, _)) in batch.iter().enumerate() {
+        let _ = kv.admit(req.id, len0 + max_new);
+        let _ = i;
+    }
+
+    let bucket = engine.manifest.bucket_for(len0);
+    let t_submit: Vec<Instant> = batch.iter().map(|(r, _)| r.submitted).collect();
+    let result = match bucket {
+        Some(b) => run_generation(engine, &prompts, b, max_new),
+        None => Err(anyhow!("prompt too long")),
+    };
+    match result {
+        Ok((tokens_per_row, first_t, token_times)) => {
+            stats.batches += 1;
+            for (row, (req, _)) in batch.into_iter().enumerate() {
+                let want = req.max_new.min(max_new);
+                let toks: Vec<i32> = tokens_per_row[row].iter().take(want).cloned().collect();
+                let ttft = (first_t - t_submit[row]).as_secs_f64();
+                let mut tbts = Vec::new();
+                for w in token_times.windows(2).take(want.saturating_sub(1)) {
+                    tbts.push((w[1] - w[0]).as_secs_f64());
+                }
+                stats.generated_tokens += toks.len() as u64;
+                stats.completed += 1;
+                stats.batched_requests += 1;
+                kv.release(req.id);
+                let _ = req.tx.send(Completion {
+                    id: req.id,
+                    prompt: req.prompt,
+                    text: tokenizer.decode(&toks),
+                    tokens: toks,
+                    ttft_s: ttft,
+                    tbts,
+                });
+            }
+        }
+        Err(e) => {
+            for (req, _) in batch {
+                kv.release(req.id);
+                let _ = req.tx.send(Completion {
+                    id: req.id,
+                    prompt: req.prompt,
+                    text: format!("<error: {e}>"),
+                    tokens: vec![],
+                    ttft_s: 0.0,
+                    tbts: vec![],
+                });
+            }
+        }
+    }
+}
+
+/// Prefill + decode loop with per-token timestamps.
+#[allow(clippy::type_complexity)]
+fn run_generation(
+    engine: &TinyLmEngine,
+    prompts: &[Vec<i32>],
+    bucket: usize,
+    max_new: usize,
+) -> Result<(Vec<Vec<i32>>, Instant, Vec<Instant>)> {
+    let len0 = prompts[0].len();
+    let out = engine.prefill(prompts, bucket)?;
+    let first_t = Instant::now();
+    let v = engine.manifest.vocab;
+    let mut next: Vec<i32> = (0..prompts.len())
+        .map(|r| {
+            let base = (r * bucket + len0 - 1) * v;
+            let row = &out.logits[base..base + v];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32
+        })
+        .collect();
+    let mut results: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+    let mut token_times = vec![first_t];
+    let mut k = out.k_cache;
+    let mut vc = out.v_cache;
+    let mut pos = len0 as i32;
+    for step in 0..max_new {
+        for (r, n) in next.iter().enumerate() {
+            results[r].push(*n);
+        }
+        if step + 1 == max_new || pos as usize >= engine.manifest.max_seq {
+            break;
+        }
+        let sout = engine.decode_step(&next, &k, &vc, pos)?;
+        token_times.push(Instant::now());
+        for (r, n) in next.iter_mut().enumerate().take(prompts.len()) {
+            *n = engine.argmax_row(&sout.logits, r);
+        }
+        k = sout.k_cache;
+        vc = sout.v_cache;
+        pos += 1;
+    }
+    Ok((results, first_t, token_times))
+}

@@ -1,0 +1,218 @@
+//! SLO targets and per-request pass/fail accounting.
+//!
+//! Paper targets (§4.2.2, following DynamoLLM/Azure): TTFT < 400 ms for
+//! short/medium prompts, < 2 s for long prompts; P95 TBT ≤ 100 ms during
+//! decode. The trackers compute the TTFT% / TBT% pass-rate columns of
+//! Tables 3–4.
+
+use crate::metrics::Histogram;
+use crate::workload::request::{PromptClass, Request, RouteClass};
+
+/// SLO targets in seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloTargets {
+    pub ttft_short_medium_s: f64,
+    pub ttft_long_s: f64,
+    pub tbt_p95_s: f64,
+}
+
+impl Default for SloTargets {
+    fn default() -> Self {
+        SloTargets {
+            ttft_short_medium_s: 0.400,
+            ttft_long_s: 2.0,
+            tbt_p95_s: 0.100,
+        }
+    }
+}
+
+impl SloTargets {
+    pub fn ttft_for(&self, class: RouteClass) -> f64 {
+        match class {
+            RouteClass::ShortMedium => self.ttft_short_medium_s,
+            RouteClass::Long => self.ttft_long_s,
+        }
+    }
+}
+
+/// Outcome of one completed request.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub prompt_len: u32,
+    pub output_len: u32,
+    pub arrival_s: f64,
+    /// Time to first token (prefill completion), seconds.
+    pub ttft_s: f64,
+    /// P95 of this request's time-between-tokens, seconds (0 if < 2 tokens).
+    pub tbt_p95_s: f64,
+    pub finish_s: f64,
+}
+
+impl RequestOutcome {
+    pub fn prompt_class(&self) -> PromptClass {
+        Request {
+            id: self.id,
+            arrival_s: self.arrival_s,
+            prompt_len: self.prompt_len,
+            output_len: self.output_len,
+        }
+        .prompt_class()
+    }
+
+    pub fn route_class(&self) -> RouteClass {
+        if self.prompt_len >= crate::workload::request::LONG_MIN {
+            RouteClass::Long
+        } else {
+            RouteClass::ShortMedium
+        }
+    }
+}
+
+/// Aggregated SLO statistics over a run.
+#[derive(Debug, Clone)]
+pub struct SloTracker {
+    pub targets: SloTargets,
+    pub completed: u64,
+    ttft_pass: u64,
+    tbt_pass: u64,
+    tbt_eligible: u64,
+    pub ttft_hist: Histogram,
+    pub ttft_hist_sm: Histogram,
+    pub ttft_hist_long: Histogram,
+    pub tbt_hist: Histogram,
+    pub outcomes: Vec<RequestOutcome>,
+    pub keep_outcomes: bool,
+}
+
+impl SloTracker {
+    pub fn new(targets: SloTargets) -> Self {
+        SloTracker {
+            targets,
+            completed: 0,
+            ttft_pass: 0,
+            tbt_pass: 0,
+            tbt_eligible: 0,
+            ttft_hist: Histogram::latency(),
+            ttft_hist_sm: Histogram::latency(),
+            ttft_hist_long: Histogram::latency(),
+            tbt_hist: Histogram::latency(),
+            outcomes: Vec::new(),
+            keep_outcomes: false,
+        }
+    }
+
+    pub fn record(&mut self, o: RequestOutcome) {
+        self.completed += 1;
+        let ttft_target = self.targets.ttft_for(o.route_class());
+        if o.ttft_s <= ttft_target {
+            self.ttft_pass += 1;
+        }
+        self.ttft_hist.record(o.ttft_s);
+        match o.route_class() {
+            RouteClass::ShortMedium => self.ttft_hist_sm.record(o.ttft_s),
+            RouteClass::Long => self.ttft_hist_long.record(o.ttft_s),
+        }
+        if o.output_len >= 2 {
+            self.tbt_eligible += 1;
+            if o.tbt_p95_s <= self.targets.tbt_p95_s {
+                self.tbt_pass += 1;
+            }
+            self.tbt_hist.record(o.tbt_p95_s);
+        }
+        if self.keep_outcomes {
+            self.outcomes.push(o);
+        }
+    }
+
+    /// Fraction of requests meeting their TTFT target (Tables 3–4 "TTFT %").
+    pub fn ttft_pass_rate(&self) -> f64 {
+        if self.completed == 0 {
+            return 1.0;
+        }
+        self.ttft_pass as f64 / self.completed as f64
+    }
+
+    /// Fraction of streaming requests meeting P95 TBT ("TBT %").
+    pub fn tbt_pass_rate(&self) -> f64 {
+        if self.tbt_eligible == 0 {
+            return 1.0;
+        }
+        self.tbt_pass as f64 / self.tbt_eligible as f64
+    }
+
+    // Raw counters, for aggregating trackers across cluster nodes.
+    pub fn ttft_passes(&self) -> u64 {
+        self.ttft_pass
+    }
+    pub fn tbt_passes(&self) -> u64 {
+        self.tbt_pass
+    }
+    pub fn tbt_eligible(&self) -> u64 {
+        self.tbt_eligible
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(prompt: u32, ttft: f64, tbt: f64, out: u32) -> RequestOutcome {
+        RequestOutcome {
+            id: 0,
+            prompt_len: prompt,
+            output_len: out,
+            arrival_s: 0.0,
+            ttft_s: ttft,
+            tbt_p95_s: tbt,
+            finish_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn class_specific_ttft_targets() {
+        let mut t = SloTracker::new(SloTargets::default());
+        t.record(outcome(100, 0.39, 0.05, 10)); // SM pass
+        t.record(outcome(100, 0.41, 0.05, 10)); // SM fail
+        t.record(outcome(2000, 1.9, 0.05, 10)); // Long pass (2 s target)
+        t.record(outcome(2000, 2.1, 0.05, 10)); // Long fail
+        assert_eq!(t.ttft_pass_rate(), 0.5);
+    }
+
+    #[test]
+    fn tbt_pass_rate_only_counts_streaming() {
+        let mut t = SloTracker::new(SloTargets::default());
+        t.record(outcome(100, 0.1, 0.0, 1)); // single-token: TBT-exempt
+        t.record(outcome(100, 0.1, 0.09, 50)); // pass
+        t.record(outcome(100, 0.1, 0.12, 50)); // fail
+        assert_eq!(t.tbt_pass_rate(), 0.5);
+        assert_eq!(t.ttft_pass_rate(), 1.0);
+    }
+
+    #[test]
+    fn empty_tracker_passes_vacuously() {
+        let t = SloTracker::new(SloTargets::default());
+        assert_eq!(t.ttft_pass_rate(), 1.0);
+        assert_eq!(t.tbt_pass_rate(), 1.0);
+    }
+
+    #[test]
+    fn histograms_populated_by_class() {
+        let mut t = SloTracker::new(SloTargets::default());
+        t.record(outcome(100, 0.05, 0.02, 10));
+        t.record(outcome(5000, 1.0, 0.02, 10));
+        assert_eq!(t.ttft_hist.count(), 2);
+        assert_eq!(t.ttft_hist_sm.count(), 1);
+        assert_eq!(t.ttft_hist_long.count(), 1);
+    }
+
+    #[test]
+    fn outcomes_kept_only_when_requested() {
+        let mut t = SloTracker::new(SloTargets::default());
+        t.record(outcome(10, 0.1, 0.01, 5));
+        assert!(t.outcomes.is_empty());
+        t.keep_outcomes = true;
+        t.record(outcome(10, 0.1, 0.01, 5));
+        assert_eq!(t.outcomes.len(), 1);
+    }
+}

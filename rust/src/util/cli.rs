@@ -1,0 +1,151 @@
+//! Minimal CLI argument parser (clap is not in the offline mirror).
+//!
+//! Supports `command [--flag] [--key value] [--key=value] [positional...]`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Parsed command line: subcommand, key→value options, bare flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+        let mut it = argv.into_iter().peekable();
+        let mut args = Args {
+            command: it.next().unwrap_or_default(),
+            ..Default::default()
+        };
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional.
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| CliError(format!("invalid value for --{name}: {s:?}"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.get_parsed::<f64>(name)?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        Ok(self.get_parsed::<u64>(name)?.unwrap_or(default))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.get_parsed::<usize>(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_and_options() {
+        let a = parse(&["replay", "--trace", "alibaba", "--qps=5", "--verbose"]);
+        assert_eq!(a.command, "replay");
+        assert_eq!(a.get("trace"), Some("alibaba"));
+        assert_eq!(a.get("qps"), Some("5"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["run", "file1", "--k", "v", "file2"]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["run", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--qps", "7.5", "--n", "42"]);
+        assert_eq!(a.f64_or("qps", 0.0).unwrap(), 7.5);
+        assert_eq!(a.u64_or("n", 0).unwrap(), 42);
+        assert_eq!(a.u64_or("missing", 9).unwrap(), 9);
+        assert!(a.get_parsed::<u64>("qps").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["x", "--fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse(&[]);
+        assert_eq!(a.command, "");
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared substrates: RNG + distributions, statistics, polynomial fitting,
+//! CLI parsing, TOML/JSON parsing, and a property-test harness.
+//!
+//! These are hand-built because the offline crate mirror only carries the
+//! `xla` crate and its transitive deps (DESIGN.md §8).
+
+pub mod cli;
+pub mod json;
+pub mod polyfit;
+pub mod ptest;
+pub mod rng;
+pub mod stats;
+pub mod toml;

@@ -1,0 +1,183 @@
+//! Least-squares polynomial fitting — the paper's model-fitting substrate.
+//!
+//! GreenLLM fits (i) a quadratic `t(L) = aL² + bL + c` to measured prefill
+//! latencies (Eq. 2 / Fig. 7) and (ii) a cubic `P(f) = k₃f³+k₂f²+k₁f+k₀`
+//! to measured power (Eq. 7 / Fig. 8). No linear-algebra crate is available
+//! offline, so this solves the normal equations with partial-pivot Gaussian
+//! elimination; inputs are normalized for conditioning.
+
+/// Fit a degree-`deg` polynomial to (x, y); returns coefficients low→high
+/// (c0 + c1 x + c2 x² + ...).
+pub fn polyfit(xs: &[f64], ys: &[f64], deg: usize) -> Vec<f64> {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() > deg, "need more points than coefficients");
+    let n = deg + 1;
+
+    // Normalize x to [0, 1]-ish for conditioning, then de-scale the coeffs.
+    let xmax = xs.iter().cloned().fold(f64::MIN, f64::max).abs().max(1e-12);
+    let xn: Vec<f64> = xs.iter().map(|x| x / xmax).collect();
+
+    // Normal equations: (VᵀV) c = Vᵀ y with Vandermonde V.
+    let mut ata = vec![vec![0.0; n]; n];
+    let mut atb = vec![0.0; n];
+    for (x, y) in xn.iter().zip(ys) {
+        let mut powers = vec![1.0; n];
+        for i in 1..n {
+            powers[i] = powers[i - 1] * x;
+        }
+        for i in 0..n {
+            atb[i] += powers[i] * y;
+            for j in 0..n {
+                ata[i][j] += powers[i] * powers[j];
+            }
+        }
+    }
+    let mut coeffs = solve(&mut ata, &mut atb);
+    // De-normalize: c_i(x) = c_i(xn) / xmax^i.
+    let mut scale = 1.0;
+    for c in coeffs.iter_mut() {
+        *c /= scale;
+        scale *= xmax;
+    }
+    coeffs
+}
+
+/// Evaluate a polynomial given coefficients low→high.
+#[inline]
+pub fn polyval(coeffs: &[f64], x: f64) -> f64 {
+    let mut acc = 0.0;
+    for &c in coeffs.iter().rev() {
+        acc = acc * x + c;
+    }
+    acc
+}
+
+/// Solve A x = b in place (partial-pivot Gaussian elimination).
+fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for row in col + 1..n {
+            if a[row][col].abs() > a[piv][col].abs() {
+                piv = row;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-300, "singular normal equations");
+        for row in col + 1..n {
+            let f = a[row][col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in row + 1..n {
+            acc -= a[row][k] * x[k];
+        }
+        x[row] = acc / a[row][row];
+    }
+    x
+}
+
+/// Golden-section minimization of a unimodal f on [lo, hi] — used by the
+/// prefill optimizer for the continuous relaxation of Eq. (12) before
+/// snapping to the frequency ladder.
+pub fn golden_min<F: Fn(f64) -> f64>(f: F, lo: f64, hi: f64, tol: f64) -> f64 {
+    const PHI: f64 = 0.618_033_988_749_894_9;
+    let (mut a, mut b) = (lo, hi);
+    let mut c = b - PHI * (b - a);
+    let mut d = a + PHI * (b - a);
+    let (mut fc, mut fd) = (f(c), f(d));
+    while (b - a).abs() > tol {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - PHI * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + PHI * (b - a);
+            fd = f(d);
+        }
+    }
+    0.5 * (a + b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::util::stats::r_squared;
+
+    #[test]
+    fn recovers_exact_quadratic() {
+        let xs: Vec<f64> = (1..=20).map(|i| i as f64 * 100.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2e-8 * x * x + 9e-5 * x + 0.008).collect();
+        let c = polyfit(&xs, &ys, 2);
+        assert!((c[0] - 0.008).abs() < 1e-9, "{c:?}");
+        assert!((c[1] - 9e-5).abs() < 1e-12, "{c:?}");
+        assert!((c[2] - 2e-8).abs() < 1e-15, "{c:?}");
+    }
+
+    #[test]
+    fn recovers_exact_cubic() {
+        let xs: Vec<f64> = (2..=30).map(|i| i as f64 * 0.05).collect();
+        let truth = [188.6, 20.0, -6.4, 70.0];
+        let ys: Vec<f64> = xs.iter().map(|&x| polyval(&truth, x)).collect();
+        let c = polyfit(&xs, &ys, 3);
+        for (a, b) in c.iter().zip(&truth) {
+            assert!((a - b).abs() < 1e-6, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn fit_quality_under_noise() {
+        let mut rng = Pcg64::new(11, 0);
+        let xs: Vec<f64> = (1..=60).map(|i| i as f64 * 50.0).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| (2e-8 * x * x + 9e-5 * x + 0.008) * rng.noise(0.03))
+            .collect();
+        let c = polyfit(&xs, &ys, 2);
+        let yh: Vec<f64> = xs.iter().map(|&x| polyval(&c, x)).collect();
+        assert!(r_squared(&ys, &yh) > 0.99);
+    }
+
+    #[test]
+    fn polyval_matches_horner() {
+        let c = [1.0, -2.0, 3.0];
+        assert_eq!(polyval(&c, 2.0), 1.0 - 4.0 + 12.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn underdetermined_panics() {
+        polyfit(&[1.0, 2.0], &[1.0, 2.0], 2);
+    }
+
+    #[test]
+    fn golden_finds_parabola_min() {
+        let m = golden_min(|x| (x - 0.9) * (x - 0.9) + 1.0, 0.2, 1.5, 1e-6);
+        assert!((m - 0.9).abs() < 1e-4);
+    }
+
+    #[test]
+    fn golden_respects_bounds() {
+        // Minimum outside the interval → converges to the boundary.
+        let m = golden_min(|x| x, 0.2, 1.5, 1e-6);
+        assert!((m - 0.2).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,99 @@
+//! Small statistics helpers shared by metrics, models and benches.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Exact percentile (nearest-rank on a sorted copy). `q` in [0, 1].
+/// This is the oracle the streaming histogram is property-tested against.
+pub fn percentile_exact(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+    v[rank - 1]
+}
+
+/// Coefficient of determination of a fit.
+pub fn r_squared(y: &[f64], y_hat: &[f64]) -> f64 {
+    assert_eq!(y.len(), y_hat.len());
+    let m = mean(y);
+    let ss_tot: f64 = y.iter().map(|v| (v - m) * (v - m)).sum();
+    let ss_res: f64 = y
+        .iter()
+        .zip(y_hat)
+        .map(|(v, h)| (v - h) * (v - h))
+        .sum();
+    if ss_tot == 0.0 {
+        return 1.0;
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Max absolute relative error between two series (benchmark shape checks).
+pub fn max_rel_err(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) / y.abs().max(1e-12)).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn variance_basic() {
+        let v = variance(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((v - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [15.0, 20.0, 35.0, 40.0, 50.0];
+        assert_eq!(percentile_exact(&xs, 0.05), 15.0);
+        assert_eq!(percentile_exact(&xs, 0.30), 20.0);
+        assert_eq!(percentile_exact(&xs, 0.40), 20.0);
+        assert_eq!(percentile_exact(&xs, 0.50), 35.0);
+        assert_eq!(percentile_exact(&xs, 1.00), 50.0);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [50.0, 15.0, 40.0, 20.0, 35.0];
+        assert_eq!(percentile_exact(&xs, 0.5), 35.0);
+    }
+
+    #[test]
+    fn r_squared_perfect_and_mean() {
+        let y = [1.0, 2.0, 3.0];
+        assert!((r_squared(&y, &y) - 1.0).abs() < 1e-12);
+        let yh = [2.0, 2.0, 2.0];
+        assert!(r_squared(&y, &yh).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,279 @@
+//! A TOML-subset parser for config files (serde/toml are not in the
+//! offline mirror).
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / integer / float / boolean / flat arrays, `#` comments. This
+//! covers everything `config/greenllm.toml` needs; unsupported syntax is
+//! a hard error rather than a silent misparse.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+/// Parsed document: dotted-path key → value (e.g. "slo.ttft_short_ms").
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document, TomlError> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| TomlError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(TomlError {
+                        line: lineno,
+                        msg: "empty section name".into(),
+                    });
+                }
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| TomlError {
+                line: lineno,
+                msg: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: "empty key".into(),
+                });
+            }
+            let value = parse_value(v.trim(), lineno)?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.values.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.values.get(path)
+    }
+
+    pub fn f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_f64)
+    }
+    pub fn i64(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_i64)
+    }
+    pub fn str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+    pub fn bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+    pub fn f64_array(&self, path: &str) -> Option<Vec<f64>> {
+        self.get(path)
+            .and_then(Value::as_array)
+            .map(|a| a.iter().filter_map(Value::as_f64).collect())
+    }
+
+    /// Keys under a section prefix (for validation / unknown-key warnings).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        self.values
+            .keys()
+            .filter(move |k| k.starts_with(prefix))
+            .map(|k| k.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, TomlError> {
+    let err = |msg: String| TomlError { line, msg };
+    if s.is_empty() {
+        return Err(err("empty value".into()));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        if inner.contains('"') {
+            return Err(err("embedded quote not supported".into()));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let inner = body
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part, line)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(format!("cannot parse value {s:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Document::parse(
+            r#"
+            # GreenLLM config
+            name = "greenllm"
+            [slo]
+            ttft_short_ms = 400
+            tbt_p95_ms = 100.0
+            strict = true
+            margins = [0.2, 0.6, 1.0]
+            [pool.prefill]
+            workers = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str("name"), Some("greenllm"));
+        assert_eq!(doc.i64("slo.ttft_short_ms"), Some(400));
+        assert_eq!(doc.f64("slo.tbt_p95_ms"), Some(100.0));
+        assert_eq!(doc.bool("slo.strict"), Some(true));
+        assert_eq!(doc.f64_array("slo.margins").unwrap(), vec![0.2, 0.6, 1.0]);
+        assert_eq!(doc.i64("pool.prefill.workers"), Some(2));
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let doc = Document::parse("x = 5").unwrap();
+        assert_eq!(doc.f64("x"), Some(5.0));
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc = Document::parse("s = \"a#b\" # trailing").unwrap();
+        assert_eq!(doc.str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let doc = Document::parse("a = 2.0e-8\nb = 1e3").unwrap();
+        assert_eq!(doc.f64("a"), Some(2.0e-8));
+        assert_eq!(doc.f64("b"), Some(1000.0));
+    }
+
+    #[test]
+    fn negative_numbers_and_underscores() {
+        let doc = Document::parse("a = -42\nb = 1_000").unwrap();
+        assert_eq!(doc.i64("a"), Some(-42));
+        assert_eq!(doc.i64("b"), Some(1000));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = Document::parse("ok = 1\nbad line").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Document::parse("[unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Document::parse("x = \"oops").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = Document::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<&str> = doc.keys_under("a.").collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Alibaba ServeGen-like chat trace generator.
+//!
+//! Models the published characteristics of the ServeGen chat workload the
+//! paper replays at {1, 3, 5, 8, 10} QPS: bursty Poisson arrivals (rate
+//! modulated ±30 % on a ~5-minute cycle), log-normal short/medium prompts
+//! with a heavy Pareto long tail (~12 % of requests ≥ 1024 tokens — the
+//! head-of-line blockers of §3.1), and chat-scale outputs (median ≈ 220
+//! tokens).
+
+use crate::util::rng::Pcg64;
+use crate::workload::request::{Request, Trace};
+
+/// Parameters of the chat generator (defaults = paper workload).
+#[derive(Debug, Clone)]
+pub struct ChatParams {
+    pub qps: f64,
+    pub duration_s: f64,
+    /// Arrival burstiness: rate(t) = qps · (1 + amp · sin(2πt/period)).
+    pub burst_amplitude: f64,
+    pub burst_period_s: f64,
+    /// Fraction of long (≥ 1024 token) prompts.
+    pub long_frac: f64,
+    /// Log-normal (mu, sigma) of short/medium prompt lengths.
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    /// Pareto tail index of long prompts.
+    pub long_alpha: f64,
+    pub max_prompt: u32,
+    /// Log-normal (mu, sigma) of output lengths.
+    pub output_mu: f64,
+    pub output_sigma: f64,
+    pub max_output: u32,
+}
+
+impl ChatParams {
+    pub fn new(qps: f64, duration_s: f64) -> Self {
+        ChatParams {
+            qps,
+            duration_s,
+            burst_amplitude: 0.25,
+            burst_period_s: 300.0,
+            long_frac: 0.12,
+            prompt_mu: (280.0_f64).ln(),
+            prompt_sigma: 0.9,
+            long_alpha: 1.8,
+            max_prompt: 8192,
+            output_mu: (200.0_f64).ln(),
+            output_sigma: 0.65,
+            max_output: 1024,
+        }
+    }
+}
+
+/// Generate a chat trace (deterministic for a given seed).
+pub fn generate(params: &ChatParams, seed: u64) -> Trace {
+    let mut rng = Pcg64::new(seed, 0xA11BABA);
+    let mut requests = Vec::new();
+    let peak_rate = params.qps * (1.0 + params.burst_amplitude);
+    let mut t = 0.0;
+    let mut id = 0u64;
+    // Non-homogeneous Poisson via thinning against the peak rate.
+    loop {
+        t += rng.exponential(peak_rate);
+        if t >= params.duration_s {
+            break;
+        }
+        let rate_t = params.qps
+            * (1.0
+                + params.burst_amplitude
+                    * (2.0 * std::f64::consts::PI * t / params.burst_period_s).sin());
+        if !rng.chance(rate_t / peak_rate) {
+            continue;
+        }
+        let prompt_len = sample_prompt(&mut rng, params);
+        let output_len = sample_output(&mut rng, params);
+        requests.push(Request {
+            id,
+            arrival_s: t,
+            prompt_len,
+            output_len,
+        });
+        id += 1;
+    }
+    Trace {
+        name: format!("alibaba_chat_{}qps", params.qps),
+        duration_s: params.duration_s,
+        requests,
+    }
+}
+
+fn sample_prompt(rng: &mut Pcg64, p: &ChatParams) -> u32 {
+    if rng.chance(p.long_frac) {
+        // Long tail: Pareto starting at the routing threshold.
+        (rng.pareto(1024.0, p.long_alpha) as u32).clamp(1024, p.max_prompt)
+    } else {
+        (rng.lognormal(p.prompt_mu, p.prompt_sigma) as u32).clamp(8, 1023)
+    }
+}
+
+fn sample_output(rng: &mut Pcg64, p: &ChatParams) -> u32 {
+    (rng.lognormal(p.output_mu, p.output_sigma) as u32).clamp(16, p.max_output)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::request::RouteClass;
+
+    fn trace(qps: f64) -> Trace {
+        generate(&ChatParams::new(qps, 600.0), 42)
+    }
+
+    #[test]
+    fn achieves_target_qps() {
+        let t = trace(5.0);
+        assert!((t.qps() / 5.0 - 1.0).abs() < 0.1, "qps={}", t.qps());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&ChatParams::new(3.0, 100.0), 7);
+        let b = generate(&ChatParams::new(3.0, 100.0), 7);
+        assert_eq!(a.requests, b.requests);
+        let c = generate(&ChatParams::new(3.0, 100.0), 8);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn sorted_arrivals_within_duration() {
+        let t = trace(8.0);
+        t.assert_sorted();
+        assert!(t.requests.iter().all(|r| r.arrival_s < 600.0));
+    }
+
+    #[test]
+    fn long_fraction_near_target() {
+        let t = trace(10.0);
+        let long = t
+            .requests
+            .iter()
+            .filter(|r| r.route_class() == RouteClass::Long)
+            .count() as f64;
+        let frac = long / t.requests.len() as f64;
+        assert!((0.07..0.18).contains(&frac), "long frac={frac}");
+    }
+
+    #[test]
+    fn length_bounds_respected() {
+        let t = trace(10.0);
+        for r in &t.requests {
+            assert!((8..=8192).contains(&r.prompt_len));
+            assert!((16..=1024).contains(&r.output_len));
+        }
+    }
+
+    #[test]
+    fn decode_demand_scales_with_qps() {
+        let lo = trace(1.0).decode_tps();
+        let hi = trace(10.0).decode_tps();
+        assert!(hi > 5.0 * lo, "lo={lo} hi={hi}");
+        // 5 QPS chat ≈ 5 × ~280 ≈ 1200–1600 decode TPS (fits 4-worker pool).
+        let mid = trace(5.0).decode_tps();
+        assert!((800.0..2200.0).contains(&mid), "mid={mid}");
+    }
+
+    #[test]
+    fn burstiness_visible_in_windowed_rate() {
+        let t = generate(&ChatParams::new(8.0, 600.0), 3);
+        // Quarter-period windows around peak vs trough of the sinusoid.
+        let count_in = |lo: f64, hi: f64| {
+            t.requests
+                .iter()
+                .filter(|r| r.arrival_s >= lo && r.arrival_s < hi)
+                .count() as f64
+        };
+        let peak = count_in(50.0, 100.0); // sin > 0 region
+        let trough = count_in(200.0, 250.0); // sin < 0 region
+        assert!(peak > trough, "peak={peak} trough={trough}");
+    }
+}

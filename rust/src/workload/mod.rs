@@ -1,0 +1,14 @@
+//! Workloads: request types, trace generators and microbenchmarks.
+//!
+//! Production traces (Alibaba ServeGen chat, Azure 2024 code/conv) are not
+//! redistributable/downloadable here, so `alibaba.rs` / `azure.rs` generate
+//! synthetic equivalents that preserve the properties GreenLLM's results
+//! depend on: arrival burstiness, prompt-length skew (head-of-line
+//! blocking pressure) and decode-load variation (DESIGN.md §1).
+
+pub mod alibaba;
+pub mod azure;
+pub mod request;
+pub mod synthetic;
+
+pub use request::{PromptClass, Request, RouteClass, Trace};

@@ -1,0 +1,154 @@
+//! Request and trace types shared by the generators, coordinator and benches.
+
+/// Three-way prompt-size classification used for SLO reporting and the
+/// Fig. 10 per-class microbenchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PromptClass {
+    Short,
+    Medium,
+    Long,
+}
+
+/// Two-way routing classification (§3.1: n = 2 prefill workers, one
+/// threshold): short/medium prompts vs long prompts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RouteClass {
+    ShortMedium,
+    Long,
+}
+
+/// Boundary between Short and Medium prompts (tokens).
+pub const SHORT_MAX: u32 = 256;
+/// Routing threshold (§3.1: "up to approximately 1024 tokens").
+pub const LONG_MIN: u32 = 1024;
+
+/// One inference request of a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time, seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt length in tokens.
+    pub prompt_len: u32,
+    /// Output length in tokens (decode steps to run). The serving system
+    /// does NOT see this ahead of time — it only learns it when the stream
+    /// emits its final token (the paper: decode length is unpredictable).
+    pub output_len: u32,
+}
+
+impl Request {
+    pub fn prompt_class(&self) -> PromptClass {
+        if self.prompt_len >= LONG_MIN {
+            PromptClass::Long
+        } else if self.prompt_len >= SHORT_MAX {
+            PromptClass::Medium
+        } else {
+            PromptClass::Short
+        }
+    }
+
+    pub fn route_class(&self) -> RouteClass {
+        if self.prompt_len >= LONG_MIN {
+            RouteClass::Long
+        } else {
+            RouteClass::ShortMedium
+        }
+    }
+}
+
+/// A complete workload trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub duration_s: f64,
+    /// Requests sorted by arrival time.
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    /// Mean request rate over the trace.
+    pub fn qps(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.requests.len() as f64 / self.duration_s
+    }
+
+    /// Aggregate decode token demand per second.
+    pub fn decode_tps(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.output_len as f64).sum::<f64>() / self.duration_s
+    }
+
+    /// Aggregate prefill token demand per second.
+    pub fn prefill_tps(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.prompt_len as f64).sum::<f64>() / self.duration_s
+    }
+
+    pub fn assert_sorted(&self) {
+        for w in self.requests.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s, "trace not sorted");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(len: u32) -> Request {
+        Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_len: len,
+            output_len: 10,
+        }
+    }
+
+    #[test]
+    fn classification_boundaries() {
+        assert_eq!(req(1).prompt_class(), PromptClass::Short);
+        assert_eq!(req(255).prompt_class(), PromptClass::Short);
+        assert_eq!(req(256).prompt_class(), PromptClass::Medium);
+        assert_eq!(req(1023).prompt_class(), PromptClass::Medium);
+        assert_eq!(req(1024).prompt_class(), PromptClass::Long);
+    }
+
+    #[test]
+    fn route_class_two_way() {
+        assert_eq!(req(100).route_class(), RouteClass::ShortMedium);
+        assert_eq!(req(1023).route_class(), RouteClass::ShortMedium);
+        assert_eq!(req(1024).route_class(), RouteClass::Long);
+    }
+
+    #[test]
+    fn trace_rates() {
+        let t = Trace {
+            name: "t".into(),
+            duration_s: 10.0,
+            requests: vec![
+                Request {
+                    id: 0,
+                    arrival_s: 1.0,
+                    prompt_len: 100,
+                    output_len: 50,
+                },
+                Request {
+                    id: 1,
+                    arrival_s: 2.0,
+                    prompt_len: 300,
+                    output_len: 150,
+                },
+            ],
+        };
+        assert_eq!(t.qps(), 0.2);
+        assert_eq!(t.decode_tps(), 20.0);
+        assert_eq!(t.prefill_tps(), 40.0);
+        t.assert_sorted();
+    }
+}

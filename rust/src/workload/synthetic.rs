@@ -1,0 +1,183 @@
+//! Phase-specific microbenchmarks (§2.2.1 of the paper) and the sinusoidal
+//! tracking workload of Fig. 1.
+//!
+//! * Prefill microbenchmark: replays traces at a fixed aggregate *prompt*
+//!   TPS; each request prefills then emits exactly one token (output 1).
+//!   Prompt lengths randomized in [256, 1024] (or a per-class range for
+//!   the Fig. 10 class sweeps).
+//! * Decode microbenchmark: a very short prefill (32 tokens), then decode
+//!   with per-stream generated lengths in [256, 1024]; concurrency is set
+//!   so the steady-state aggregate decode rate hits the TPS target.
+//! * Sinusoid: a time-varying decode TPS target (Fig. 1) to test tracking.
+
+use crate::util::rng::Pcg64;
+use crate::workload::request::{Request, Trace};
+
+/// Prefill microbenchmark at a target prompt-token rate (tokens/s).
+pub fn prefill_microbench(
+    target_tps: f64,
+    min_len: u32,
+    max_len: u32,
+    duration_s: f64,
+    seed: u64,
+) -> Trace {
+    assert!(max_len >= min_len && min_len >= 1);
+    let mut rng = Pcg64::new(seed, 0x9EF111);
+    let mean_len = (min_len + max_len) as f64 / 2.0;
+    let qps = target_tps / mean_len;
+    let mut requests = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0;
+    loop {
+        t += rng.exponential(qps);
+        if t >= duration_s {
+            break;
+        }
+        requests.push(Request {
+            id,
+            arrival_s: t,
+            prompt_len: rng.range_u64(min_len as u64, max_len as u64 + 1) as u32,
+            output_len: 1, // terminate after the first token (paper §2.2.1)
+        });
+        id += 1;
+    }
+    Trace {
+        name: format!("prefill_mb_{target_tps}tps"),
+        duration_s,
+        requests,
+    }
+}
+
+/// Decode microbenchmark at a target decode-token rate (tokens/s).
+pub fn decode_microbench(target_tps: f64, duration_s: f64, seed: u64) -> Trace {
+    let mut rng = Pcg64::new(seed, 0xDEC0DE);
+    let mean_out = (256.0 + 1024.0) / 2.0;
+    let qps = target_tps / mean_out;
+    let mut requests = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0;
+    loop {
+        t += rng.exponential(qps);
+        if t >= duration_s {
+            break;
+        }
+        requests.push(Request {
+            id,
+            arrival_s: t,
+            prompt_len: 32, // very short prefill (paper §2.2.1)
+            output_len: rng.range_u64(256, 1025) as u32,
+        });
+        id += 1;
+    }
+    Trace {
+        name: format!("decode_mb_{target_tps}tps"),
+        duration_s,
+        requests,
+    }
+}
+
+/// Sinusoidal decode-TPS workload (Fig. 1): token demand oscillates between
+/// `tps_min` and `tps_max` with the given period.
+pub fn sinusoid_decode(
+    tps_min: f64,
+    tps_max: f64,
+    period_s: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Trace {
+    assert!(tps_max > tps_min && tps_min >= 0.0);
+    let mut rng = Pcg64::new(seed, 0x515E);
+    let mean_out = 400.0;
+    let peak_qps = tps_max / mean_out;
+    let mut requests = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0;
+    // Thinning: target rate(t) follows the sinusoid; streams of mean length
+    // `mean_out` lag the arrival rate by roughly their lifetime, so the
+    // demand the decode pool sees is a smoothed sinusoid — exactly the
+    // tracking challenge of Fig. 1.
+    loop {
+        t += rng.exponential(peak_qps);
+        if t >= duration_s {
+            break;
+        }
+        let mid = 0.5 * (tps_min + tps_max);
+        let amp = 0.5 * (tps_max - tps_min);
+        let rate_t = (mid + amp * (2.0 * std::f64::consts::PI * t / period_s).sin()) / mean_out;
+        if !rng.chance(rate_t / peak_qps) {
+            continue;
+        }
+        requests.push(Request {
+            id,
+            arrival_s: t,
+            prompt_len: 32,
+            output_len: (rng.lognormal(mean_out.ln(), 0.3) as u32).clamp(64, 1024),
+        });
+        id += 1;
+    }
+    Trace {
+        name: format!("sinusoid_{tps_min}-{tps_max}tps"),
+        duration_s,
+        requests,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_mb_hits_token_rate() {
+        let t = prefill_microbench(5000.0, 256, 1024, 400.0, 1);
+        let rate = t.prefill_tps();
+        assert!((rate / 5000.0 - 1.0).abs() < 0.15, "rate={rate}");
+        assert!(t.requests.iter().all(|r| r.output_len == 1));
+        assert!(t
+            .requests
+            .iter()
+            .all(|r| (256..=1024).contains(&r.prompt_len)));
+    }
+
+    #[test]
+    fn decode_mb_hits_token_rate() {
+        let t = decode_microbench(1000.0, 400.0, 2);
+        let rate = t.decode_tps();
+        assert!((rate / 1000.0 - 1.0).abs() < 0.15, "rate={rate}");
+        assert!(t.requests.iter().all(|r| r.prompt_len == 32));
+    }
+
+    #[test]
+    fn sinusoid_rate_oscillates() {
+        let t = sinusoid_decode(500.0, 2500.0, 120.0, 480.0, 3);
+        // Token demand in the peak quarter-cycle vs the trough quarter-cycle.
+        let demand = |lo: f64, hi: f64| {
+            t.requests
+                .iter()
+                .filter(|r| r.arrival_s >= lo && r.arrival_s < hi)
+                .map(|r| r.output_len as f64)
+                .sum::<f64>()
+        };
+        let peak = demand(15.0, 45.0); // sin ≈ +1 around t = 30
+        let trough = demand(75.0, 105.0); // sin ≈ −1 around t = 90
+        assert!(peak > 2.0 * trough, "peak={peak} trough={trough}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = decode_microbench(800.0, 100.0, 9);
+        let b = decode_microbench(800.0, 100.0, 9);
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn sorted_and_bounded() {
+        for t in [
+            prefill_microbench(2000.0, 256, 1024, 100.0, 1),
+            decode_microbench(500.0, 100.0, 1),
+            sinusoid_decode(200.0, 1000.0, 60.0, 100.0, 1),
+        ] {
+            t.assert_sorted();
+            assert!(t.requests.iter().all(|r| r.arrival_s < t.duration_s));
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration: the Rust PJRT runtime must reproduce the numerics the
+//! Python side exported (artifacts/manifest.json test vectors).
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! note) otherwise so `cargo test` stays green in a fresh checkout.
+
+use greenllm::runtime::engine::TinyLmEngine;
+use greenllm::runtime::manifest::Manifest;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime integration: run `make artifacts` first");
+        None
+    }
+}
+
+fn engine() -> Option<TinyLmEngine> {
+    artifacts().map(|d| TinyLmEngine::load(&d).expect("engine load"))
+}
+
+/// The deterministic token pattern aot.py used for its test vectors.
+fn test_tokens(m: &Manifest) -> Vec<Vec<i32>> {
+    let (b, s) = (m.batch, m.test_vectors.prefill_bucket);
+    (0..b)
+        .map(|r| {
+            (0..s)
+                .map(|c| (((r * s + c) * 7 + 3) % m.vocab) as i32)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn loads_and_compiles_all_artifacts() {
+    let Some(e) = engine() else { return };
+    assert_eq!(e.platform(), "cpu");
+    assert!(!e.manifest.prefill_buckets.is_empty());
+}
+
+#[test]
+fn prefill_matches_python_test_vectors() {
+    let Some(e) = engine() else { return };
+    let m = &e.manifest;
+    let rows = test_tokens(m);
+    let bucket = m.test_vectors.prefill_bucket;
+    let out = e.prefill(&rows, bucket).expect("prefill");
+    let v = m.vocab;
+    // Sum of last-position logits across the batch.
+    let mut sum = 0.0f64;
+    let mut abs = 0.0f64;
+    for r in 0..m.batch {
+        let base = (r * bucket + bucket - 1) * v;
+        for &x in &out.logits[base..base + v] {
+            sum += x as f64;
+            abs += (x as f64).abs();
+        }
+    }
+    let absmean = abs / (m.batch * v) as f64;
+    let tv = &m.test_vectors;
+    assert!(
+        (sum - tv.last_logits_sum).abs() < 1e-2 * tv.last_logits_sum.abs().max(1.0),
+        "logits sum {sum} vs python {}",
+        tv.last_logits_sum
+    );
+    assert!(
+        (absmean - tv.last_logits_absmean).abs() < 1e-3 * tv.last_logits_absmean.max(1e-6),
+        "absmean {absmean} vs python {}",
+        tv.last_logits_absmean
+    );
+    // First 8 logits of row 0's last position, element-exact-ish.
+    let base = (bucket - 1) * v;
+    for (i, &want) in tv.last_logits_row0_head.iter().enumerate() {
+        let got = out.logits[base + i] as f64;
+        assert!(
+            (got - want).abs() < 1e-3,
+            "logit[{i}] = {got} vs python {want}"
+        );
+    }
+}
+
+#[test]
+fn greedy_generation_matches_python() {
+    let Some(e) = engine() else { return };
+    let tv = e.manifest.test_vectors.clone();
+    if tv.greedy_prompt.is_empty() {
+        return;
+    }
+    let out = e
+        .generate(&[tv.greedy_prompt.clone()], tv.greedy_next_tokens.len())
+        .expect("generate");
+    assert_eq!(
+        out[0], tv.greedy_next_tokens,
+        "rust greedy path diverged from the python reference"
+    );
+}
+
+#[test]
+fn batched_generation_rows_independent() {
+    let Some(e) = engine() else { return };
+    let m = &e.manifest;
+    let s = m.test_vectors.prefill_bucket.min(8);
+    let p1: Vec<i32> = (0..s).map(|i| ((i * 5 + 1) % m.vocab) as i32).collect();
+    let p2: Vec<i32> = (0..s).map(|i| ((i * 11 + 2) % m.vocab) as i32).collect();
+    // Row result must not depend on its companions in the batch.
+    let solo = e.generate(&[p1.clone()], 6).unwrap();
+    let duo = e.generate(&[p1.clone(), p2], 6).unwrap();
+    assert_eq!(solo[0], duo[0]);
+}
+
+#[test]
+fn decode_step_respects_cache_capacity() {
+    let Some(e) = engine() else { return };
+    let m = &e.manifest;
+    let s = m.prefill_buckets[0];
+    let prompt: Vec<i32> = (0..s).map(|i| (i % m.vocab) as i32).collect();
+    let out = e.prefill(&[prompt], s).unwrap();
+    let bad_pos = m.max_seq as i32;
+    assert!(e
+        .decode_step(&[1], &out.k_cache, &out.v_cache, bad_pos)
+        .is_err());
+}
+
+#[test]
+fn unequal_prompt_lengths_rejected() {
+    let Some(e) = engine() else { return };
+    let r = e.generate(&[vec![1, 2, 3], vec![1, 2]], 4);
+    assert!(r.is_err());
+}
+
+#[test]
+fn oversized_batch_rejected() {
+    let Some(e) = engine() else { return };
+    let m = &e.manifest;
+    let rows: Vec<Vec<i32>> = (0..m.batch + 1).map(|_| vec![1, 2, 3, 4]).collect();
+    assert!(e.prefill(&rows, m.prefill_buckets[0]).is_err());
+}

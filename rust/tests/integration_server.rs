@@ -1,0 +1,93 @@
+//! Integration: the threaded serving loop over the real PJRT engine —
+//! tokenize → batch → prefill → decode → stream, no Python anywhere.
+
+use greenllm::server::{ServerConfig, ServerHandle};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn config() -> Option<ServerConfig> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping server integration: run `make artifacts` first");
+        return None;
+    }
+    Some(ServerConfig {
+        artifacts_dir: dir,
+        batch_window: Duration::from_millis(2),
+        ..Default::default()
+    })
+}
+
+#[test]
+fn serves_single_request_end_to_end() {
+    let Some(cfg) = config() else { return };
+    let server = ServerHandle::start(cfg).expect("server start");
+    let rx = server.submit("hello energy-efficient serving", 8);
+    let done = rx.recv_timeout(Duration::from_secs(120)).expect("completion");
+    assert_eq!(done.tokens.len(), 8);
+    assert!(done.ttft_s > 0.0);
+    assert_eq!(done.tbts.len(), 7);
+    assert!(done.tbts.iter().all(|&t| t >= 0.0));
+    let stats = server.shutdown().expect("shutdown");
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.generated_tokens, 8);
+}
+
+#[test]
+fn batches_equal_length_prompts() {
+    let Some(cfg) = config() else { return };
+    let server = ServerHandle::start(cfg).expect("server start");
+    // Same byte length ⇒ same token length ⇒ one batch.
+    let rxs: Vec<_> = (0..4)
+        .map(|i| server.submit(&format!("prompt {i}"), 6))
+        .collect();
+    let outs: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(120)).expect("completion"))
+        .collect();
+    assert!(outs.iter().all(|c| c.tokens.len() == 6));
+    let stats = server.shutdown().expect("shutdown");
+    assert_eq!(stats.completed, 4);
+    // All four should have ridden in few batches (≤ 2 given the 2 ms window).
+    assert!(stats.batches <= 2, "batches = {}", stats.batches);
+}
+
+#[test]
+fn mixed_lengths_still_all_complete() {
+    let Some(cfg) = config() else { return };
+    let server = ServerHandle::start(cfg).expect("server start");
+    let prompts = ["a", "bb", "ccc", "dddd", "ee"];
+    let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p, 4)).collect();
+    for rx in rxs {
+        let done = rx.recv_timeout(Duration::from_secs(120)).expect("completion");
+        assert_eq!(done.tokens.len(), 4);
+    }
+    let stats = server.shutdown().expect("shutdown");
+    assert_eq!(stats.completed, 5);
+}
+
+#[test]
+fn deterministic_output_for_same_prompt() {
+    let Some(cfg) = config() else { return };
+    let server = ServerHandle::start(cfg).expect("server start");
+    let a = server
+        .submit("determinism", 6)
+        .recv_timeout(Duration::from_secs(120))
+        .unwrap();
+    let b = server
+        .submit("determinism", 6)
+        .recv_timeout(Duration::from_secs(120))
+        .unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.text, b.text);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn startup_error_is_synchronous() {
+    let cfg = ServerConfig {
+        artifacts_dir: PathBuf::from("/nonexistent"),
+        ..Default::default()
+    };
+    assert!(ServerHandle::start(cfg).is_err());
+}

@@ -1,0 +1,207 @@
+//! Property tests over coordinator invariants: random workloads, random
+//! pool shapes, random methods — nothing lost, nothing duplicated, energy
+//! conserved, controllers always on the ladder.
+
+use greenllm::config::{Config, Method, PoolConfig};
+use greenllm::coordinator::engine::{run, RunOptions};
+use greenllm::coordinator::router::Router;
+use greenllm::gpu::freq::FreqLadder;
+use greenllm::prop_assert;
+use greenllm::util::ptest::check;
+use greenllm::util::rng::Pcg64;
+use greenllm::workload::request::{Request, Trace};
+
+fn random_trace(g: &mut Pcg64, max_requests: usize) -> Trace {
+    let n = 1 + g.index(max_requests);
+    let duration = 10.0 + g.f64() * 60.0;
+    let mut t = 0.0;
+    let requests: Vec<Request> = (0..n)
+        .map(|i| {
+            t += g.exponential(n as f64 / duration);
+            Request {
+                id: i as u64,
+                arrival_s: t.min(duration - 0.01),
+                prompt_len: 1 + g.index(5000) as u32,
+                output_len: 1 + g.index(300) as u32,
+            }
+        })
+        .collect();
+    Trace {
+        name: "prop".into(),
+        duration_s: duration,
+        requests,
+    }
+}
+
+fn random_method(g: &mut Pcg64) -> Method {
+    match g.index(4) {
+        0 => Method::DefaultNv,
+        1 => Method::PrefillSplit,
+        2 => Method::GreenLlm,
+        _ => Method::Fixed(FreqLadder::a100().snap(g.range_f64(210.0, 1410.0))),
+    }
+}
+
+#[test]
+fn no_request_lost_or_duplicated() {
+    check("no_request_lost", 25, |g| {
+        let trace = random_trace(g, 120);
+        let method = random_method(g);
+        let cfg = Config {
+            method,
+            seed: g.next_u64(),
+            ..Config::default()
+        };
+        let r = run(&cfg, &trace, &RunOptions::default());
+        prop_assert!(
+            r.completed as usize == trace.requests.len(),
+            "{method:?}: completed {} of {}",
+            r.completed,
+            trace.requests.len()
+        );
+        let expect: u64 = trace.requests.iter().map(|q| q.output_len as u64).sum();
+        prop_assert!(
+            r.generated_tokens == expect,
+            "{method:?}: tokens {} != {}",
+            r.generated_tokens,
+            expect
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn energy_bounded_by_physics() {
+    check("energy_bounds", 15, |g| {
+        let trace = random_trace(g, 80);
+        let cfg = Config {
+            method: random_method(g),
+            seed: g.next_u64(),
+            ..Config::default()
+        };
+        let r = run(&cfg, &trace, &RunOptions::default());
+        let n_gpus = (cfg.pools.prefill_workers * cfg.pools.gpus_per_prefill_worker
+            + cfg.pools.decode_workers * cfg.pools.gpus_per_decode_worker) as f64;
+        // Idle floor (40 W min-clock idle) and active ceiling (~405 W).
+        let floor = n_gpus * 40.0 * r.sim_duration_s;
+        let ceil = n_gpus * 410.0 * r.sim_duration_s;
+        prop_assert!(
+            r.total_energy_j >= floor * 0.999 && r.total_energy_j <= ceil * 1.001,
+            "energy {} outside [{floor}, {ceil}]",
+            r.total_energy_j
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn outcomes_sane() {
+    check("outcomes_sane", 15, |g| {
+        let trace = random_trace(g, 80);
+        let cfg = Config {
+            method: random_method(g),
+            seed: g.next_u64(),
+            ..Config::default()
+        };
+        let opts = RunOptions {
+            keep_outcomes: true,
+            ..Default::default()
+        };
+        let r = run(&cfg, &trace, &opts);
+        for o in &r.slo.outcomes {
+            prop_assert!(o.ttft_s > 0.0, "nonpositive ttft");
+            prop_assert!(o.finish_s >= o.arrival_s + o.ttft_s - 1e-9, "finish before ttft");
+            prop_assert!(o.tbt_p95_s >= 0.0);
+            // A request with k output tokens cannot finish before (k-1)
+            // decode rounds of > 0 duration.
+            if o.output_len > 1 {
+                prop_assert!(o.finish_s > o.arrival_s + o.ttft_s);
+            }
+        }
+        // Ids unique.
+        let mut ids: Vec<u64> = r.slo.outcomes.iter().map(|o| o.id).collect();
+        ids.sort();
+        ids.dedup();
+        prop_assert!(ids.len() == r.slo.outcomes.len(), "duplicate outcomes");
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_shapes_respected() {
+    check("pool_shapes", 10, |g| {
+        let pools = PoolConfig {
+            prefill_workers: 1 + g.index(3),
+            gpus_per_prefill_worker: 1 + g.index(2),
+            decode_workers: 1 + g.index(4),
+            gpus_per_decode_worker: 1,
+            max_streams_per_decode_worker: 8 + g.index(64),
+        };
+        let trace = random_trace(g, 60);
+        let cfg = Config {
+            method: random_method(g),
+            pools,
+            seed: g.next_u64(),
+            ..Config::default()
+        };
+        let r = run(&cfg, &trace, &RunOptions::default());
+        prop_assert!(r.completed as usize == trace.requests.len());
+        prop_assert!(
+            r.mean_decode_batch <= cfg.pools.max_streams_per_decode_worker as f64 + 1e-9,
+            "batch {} exceeds cap {}",
+            r.mean_decode_batch,
+            cfg.pools.max_streams_per_decode_worker
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn router_fifo_within_class() {
+    // Pure-router property: among same-class requests, completion order of
+    // prefill follows arrival order when served by a dedicated worker.
+    check("router_fifo", 20, |g| {
+        let router = Router::new(true, 2);
+        let mut arrivals: Vec<Request> = (0..50)
+            .map(|i| Request {
+                id: i,
+                arrival_s: i as f64,
+                prompt_len: 1 + g.index(4000) as u32,
+                output_len: 1,
+            })
+            .collect();
+        // Queue per router decision preserves class order.
+        let mut queues: Vec<Vec<u64>> = vec![Vec::new(), Vec::new()];
+        for r in arrivals.drain(..) {
+            queues[router.queue_for(&r)].push(r.id);
+        }
+        for q in &queues {
+            let mut sorted = q.clone();
+            sorted.sort();
+            prop_assert!(&sorted == q, "router reordered within class");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn greenllm_decode_clocks_on_ladder() {
+    check("clocks_on_ladder", 8, |g| {
+        let trace = random_trace(g, 80);
+        let cfg = Config {
+            method: Method::GreenLlm,
+            seed: g.next_u64(),
+            ..Config::default()
+        };
+        let opts = RunOptions {
+            record_freq_trace: true,
+            ..Default::default()
+        };
+        let r = run(&cfg, &trace, &opts);
+        let ladder = FreqLadder::a100();
+        for &(_, f) in r.decode_freq_trace.iter().chain(&r.prefill_freq_trace) {
+            prop_assert!(ladder.contains(f), "off-ladder clock {f}");
+        }
+        Ok(())
+    });
+}
