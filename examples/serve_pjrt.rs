@@ -31,7 +31,7 @@ const PROMPTS: &[&str] = &[
     "What makes long prompts expensive in prefill?",
 ];
 
-fn main() -> anyhow::Result<()> {
+fn main() -> greenllm::util::error::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     println!("loading + compiling artifacts from {dir}/ (PJRT CPU)...");
     let t_load = Instant::now();

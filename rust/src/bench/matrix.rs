@@ -1,0 +1,507 @@
+//! Scenario-matrix harness: sweep traces × DVFS policies × SLO margins in
+//! one invocation, fanned out across OS threads, and emit one consolidated
+//! report (aligned table on stdout, plus JSON / markdown files on demand).
+//!
+//! Every cell is an independent deterministic replay (its own `Config`,
+//! trace generation and RNG streams), so results are bit-identical
+//! regardless of the worker count — asserted by the tests. Adding a
+//! scenario means adding a [`TraceSpec`]; adding a governor means
+//! registering it in `coordinator::policy::build` — the harness and the
+//! event loop pick both up unchanged.
+
+use crate::bench::report::{fmt_f, fmt_pct, maybe_write_csv, Table};
+use crate::config::{Config, Method};
+use crate::coordinator::engine::{run, RunOptions};
+use crate::util::json::Json;
+use crate::workload::alibaba::{self, ChatParams};
+use crate::workload::azure::{self, AzureKind, AzureParams};
+use crate::workload::request::Trace;
+use crate::workload::synthetic;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread;
+
+/// One workload axis of the matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceSpec {
+    /// Alibaba ServeGen-like chat at a given QPS.
+    Alibaba { qps: f64 },
+    /// Azure 2024 code/conv slice at a downsampling divisor.
+    Azure { kind: AzureKind, divisor: u32 },
+    /// Markov-modulated bursty synthetic workload.
+    Bursty { base_qps: f64, burst_qps: f64 },
+    /// Sinusoidal decode-demand tracking workload (Fig. 1).
+    Sinusoid { tps_min: f64, tps_max: f64 },
+}
+
+impl TraceSpec {
+    /// Stable cell label (also the CLI spelling).
+    pub fn name(&self) -> String {
+        match self {
+            TraceSpec::Alibaba { qps } => format!("alibaba{qps}"),
+            TraceSpec::Azure { kind, divisor } => match kind {
+                AzureKind::Code => format!("azure_code{divisor}"),
+                AzureKind::Conv => format!("azure_conv{divisor}"),
+            },
+            TraceSpec::Bursty { .. } => "bursty".into(),
+            TraceSpec::Sinusoid { .. } => "sinusoid".into(),
+        }
+    }
+
+    /// Parse a CLI spelling: `alibaba5`, `azure_code5`, `azure_conv8`,
+    /// `bursty`, `sinusoid`.
+    pub fn parse(s: &str) -> Option<TraceSpec> {
+        let s = s.trim();
+        if let Some(qps) = s.strip_prefix("alibaba").or_else(|| s.strip_prefix("chat")) {
+            let qps: f64 = if qps.is_empty() { 5.0 } else { qps.parse().ok()? };
+            return Some(TraceSpec::Alibaba { qps });
+        }
+        if let Some(d) = s.strip_prefix("azure_code") {
+            return Some(TraceSpec::Azure {
+                kind: AzureKind::Code,
+                divisor: d.parse().ok()?,
+            });
+        }
+        if let Some(d) = s.strip_prefix("azure_conv") {
+            return Some(TraceSpec::Azure {
+                kind: AzureKind::Conv,
+                divisor: d.parse().ok()?,
+            });
+        }
+        match s {
+            "bursty" => Some(TraceSpec::Bursty {
+                base_qps: 2.0,
+                burst_qps: 12.0,
+            }),
+            "sinusoid" => Some(TraceSpec::Sinusoid {
+                tps_min: 400.0,
+                tps_max: 2600.0,
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn generate(&self, duration_s: f64, seed: u64) -> Trace {
+        match self {
+            TraceSpec::Alibaba { qps } => {
+                alibaba::generate(&ChatParams::new(*qps, duration_s), seed)
+            }
+            TraceSpec::Azure { kind, divisor } => {
+                azure::generate(&AzureParams::new(*kind, *divisor, duration_s), seed)
+            }
+            TraceSpec::Bursty { base_qps, burst_qps } => {
+                synthetic::bursty(*base_qps, *burst_qps, 30.0, 10.0, duration_s, seed)
+            }
+            TraceSpec::Sinusoid { tps_min, tps_max } => {
+                synthetic::sinusoid_decode(*tps_min, *tps_max, 120.0, duration_s, seed)
+            }
+        }
+    }
+}
+
+/// Matrix sweep configuration.
+#[derive(Debug, Clone)]
+pub struct MatrixConfig {
+    pub model: String,
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Worker threads; 0 = one per available core (capped by cell count).
+    pub threads: usize,
+    pub traces: Vec<TraceSpec>,
+    pub methods: Vec<Method>,
+    /// SLO margin factors applied to both prefill and decode controllers.
+    pub margins: Vec<f64>,
+}
+
+impl Default for MatrixConfig {
+    fn default() -> Self {
+        MatrixConfig {
+            model: "qwen3-14b".into(),
+            duration_s: 120.0,
+            seed: 42,
+            threads: 0,
+            traces: vec![
+                TraceSpec::Alibaba { qps: 5.0 },
+                TraceSpec::Azure {
+                    kind: AzureKind::Code,
+                    divisor: 5,
+                },
+                TraceSpec::Bursty {
+                    base_qps: 2.0,
+                    burst_qps: 12.0,
+                },
+            ],
+            methods: Method::matrix_set(),
+            margins: vec![0.95],
+        }
+    }
+}
+
+impl MatrixConfig {
+    /// The cartesian cell list, in report order.
+    pub fn cells(&self) -> Vec<(TraceSpec, Method, f64)> {
+        let mut cells = Vec::new();
+        for trace in &self.traces {
+            for margin in &self.margins {
+                for method in &self.methods {
+                    cells.push((trace.clone(), *method, *margin));
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// One completed matrix cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub trace: String,
+    pub method: Method,
+    pub margin: f64,
+    pub total_energy_j: f64,
+    pub prefill_energy_j: f64,
+    pub decode_energy_j: f64,
+    pub energy_per_token_j: f64,
+    pub ttft_pct: f64,
+    pub tbt_pct: f64,
+    pub throughput_tps: f64,
+    pub completed: u64,
+    pub mean_decode_batch: f64,
+    /// Energy saving vs the defaultNV cell of the same (trace, margin),
+    /// when that cell is part of the sweep.
+    pub delta_energy_pct: Option<f64>,
+}
+
+fn run_cell(cfg: &MatrixConfig, trace_spec: &TraceSpec, method: Method, margin: f64) -> CellResult {
+    let trace = trace_spec.generate(cfg.duration_s, cfg.seed);
+    let run_cfg = Config {
+        model: cfg.model.clone(),
+        method,
+        seed: cfg.seed,
+        prefill_margin: margin,
+        decode_margin: margin,
+        ..Config::default()
+    };
+    let r = run(&run_cfg, &trace, &RunOptions::default());
+    CellResult {
+        trace: trace_spec.name(),
+        method,
+        margin,
+        total_energy_j: r.total_energy_j,
+        prefill_energy_j: r.prefill_energy_j,
+        decode_energy_j: r.decode_energy_j,
+        energy_per_token_j: r.total_energy_j / r.generated_tokens.max(1) as f64,
+        ttft_pct: r.slo.ttft_pass_rate() * 100.0,
+        tbt_pct: r.slo.tbt_pass_rate() * 100.0,
+        throughput_tps: r.throughput_tps(),
+        completed: r.completed,
+        mean_decode_batch: r.mean_decode_batch,
+        delta_energy_pct: None,
+    }
+}
+
+/// Run the full matrix across OS threads. Results come back in cell order
+/// and are bit-identical for any thread count (each cell is an independent
+/// seeded replay).
+pub fn run_matrix(cfg: &MatrixConfig) -> Vec<CellResult> {
+    let cells = cfg.cells();
+    if cells.is_empty() {
+        return Vec::new();
+    }
+    let threads = if cfg.threads > 0 {
+        cfg.threads
+    } else {
+        thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    }
+    .min(cells.len())
+    .max(1);
+
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, CellResult)>();
+    let cells_ref = &cells;
+    let next_ref = &next;
+    thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= cells_ref.len() {
+                    break;
+                }
+                let (trace, method, margin) = &cells_ref[i];
+                let result = run_cell(cfg, trace, *method, *margin);
+                let _ = tx.send((i, result));
+            });
+        }
+        drop(tx);
+    });
+
+    let mut slots: Vec<Option<CellResult>> = (0..cells.len()).map(|_| None).collect();
+    for (i, r) in rx.iter() {
+        slots[i] = Some(r);
+    }
+    let mut results: Vec<CellResult> = slots
+        .into_iter()
+        .map(|s| s.expect("every matrix cell produces a result"))
+        .collect();
+    fill_deltas(&mut results);
+    results
+}
+
+/// Fill `delta_energy_pct` against the defaultNV cell of each
+/// (trace, margin) group.
+fn fill_deltas(results: &mut [CellResult]) {
+    let mut base: BTreeMap<(String, u64), f64> = BTreeMap::new();
+    for r in results.iter() {
+        if r.method == Method::DefaultNv {
+            base.insert((r.trace.clone(), r.margin.to_bits()), r.total_energy_j);
+        }
+    }
+    for r in results.iter_mut() {
+        if let Some(b) = base.get(&(r.trace.clone(), r.margin.to_bits())) {
+            r.delta_energy_pct = Some((1.0 - r.total_energy_j / b) * 100.0);
+        }
+    }
+}
+
+/// Render the consolidated aligned table (also used for the stdout report).
+pub fn render_table(results: &[CellResult]) -> Table {
+    let mut t = Table::new(&[
+        "Trace",
+        "Policy",
+        "Margin",
+        "Energy(kJ)",
+        "J/tok",
+        "dEn(%)",
+        "TTFT(%)",
+        "TBT(%)",
+        "Thru(tok/s)",
+        "Batch",
+    ]);
+    for r in results {
+        t.row(&[
+            r.trace.clone(),
+            r.method.name(),
+            fmt_f(r.margin, 2),
+            fmt_f(r.total_energy_j / 1e3, 1),
+            fmt_f(r.energy_per_token_j, 2),
+            r.delta_energy_pct
+                .map(|d| fmt_f(d, 2))
+                .unwrap_or_else(|| "-".into()),
+            fmt_pct(r.ttft_pct),
+            fmt_pct(r.tbt_pct),
+            fmt_f(r.throughput_tps, 0),
+            fmt_f(r.mean_decode_batch, 1),
+        ]);
+    }
+    t
+}
+
+/// Render a GitHub-flavoured markdown table.
+pub fn render_markdown(cfg: &MatrixConfig, results: &[CellResult]) -> String {
+    let mut out = String::new();
+    out.push_str("# GreenLLM scenario matrix\n\n");
+    out.push_str(&format!(
+        "model `{}`, {:.0} s per cell, seed {}, {} cells\n\n",
+        cfg.model,
+        cfg.duration_s,
+        cfg.seed,
+        results.len()
+    ));
+    out.push_str("| Trace | Policy | Margin | Energy (kJ) | J/tok | dEnergy (%) |");
+    out.push_str(" TTFT (%) | TBT (%) | tok/s |\n");
+    out.push_str("|---|---|---|---|---|---|---|---|---|\n");
+    for r in results {
+        out.push_str(&format!(
+            "| {} | {} | {:.2} | {:.1} | {:.2} | {} | {:.1} | {:.1} | {:.0} |\n",
+            r.trace,
+            r.method.name(),
+            r.margin,
+            r.total_energy_j / 1e3,
+            r.energy_per_token_j,
+            r.delta_energy_pct
+                .map(|d| format!("{d:.2}"))
+                .unwrap_or_else(|| "-".into()),
+            r.ttft_pct,
+            r.tbt_pct,
+            r.throughput_tps,
+        ));
+    }
+    out
+}
+
+/// Serialize the whole sweep (config + cells) as JSON.
+pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
+    let mut root = BTreeMap::new();
+    root.insert("model".to_string(), Json::Str(cfg.model.clone()));
+    root.insert("duration_s".to_string(), Json::Num(cfg.duration_s));
+    root.insert("seed".to_string(), Json::Num(cfg.seed as f64));
+    let cells = results
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("trace".to_string(), Json::Str(r.trace.clone()));
+            m.insert("policy".to_string(), Json::Str(r.method.name()));
+            m.insert("margin".to_string(), Json::Num(r.margin));
+            m.insert("total_energy_j".to_string(), Json::Num(r.total_energy_j));
+            m.insert(
+                "prefill_energy_j".to_string(),
+                Json::Num(r.prefill_energy_j),
+            );
+            m.insert("decode_energy_j".to_string(), Json::Num(r.decode_energy_j));
+            m.insert(
+                "energy_per_token_j".to_string(),
+                Json::Num(r.energy_per_token_j),
+            );
+            m.insert("ttft_pct".to_string(), Json::Num(r.ttft_pct));
+            m.insert("tbt_pct".to_string(), Json::Num(r.tbt_pct));
+            m.insert("throughput_tps".to_string(), Json::Num(r.throughput_tps));
+            m.insert("completed".to_string(), Json::Num(r.completed as f64));
+            m.insert(
+                "mean_decode_batch".to_string(),
+                Json::Num(r.mean_decode_batch),
+            );
+            m.insert(
+                "delta_energy_pct".to_string(),
+                r.delta_energy_pct.map(Json::Num).unwrap_or(Json::Null),
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    root.insert("cells".to_string(), Json::Arr(cells));
+    Json::Obj(root)
+}
+
+/// Full driver: run, print, optionally write artifacts. Returns the cells.
+pub fn matrix(
+    cfg: &MatrixConfig,
+    json_path: Option<&str>,
+    md_path: Option<&str>,
+) -> Vec<CellResult> {
+    let results = run_matrix(cfg);
+    let t = render_table(&results);
+    println!(
+        "== Scenario matrix: {} traces x {} policies x {} margins = {} cells ==",
+        cfg.traces.len(),
+        cfg.methods.len(),
+        cfg.margins.len(),
+        results.len()
+    );
+    t.print();
+    println!();
+    maybe_write_csv("matrix", &t);
+    if let Some(path) = json_path {
+        if let Err(e) = std::fs::write(path, to_json(cfg, &results).dump()) {
+            eprintln!("matrix json write {path}: {e}");
+        } else {
+            println!("wrote {path}");
+        }
+    }
+    if let Some(path) = md_path {
+        if let Err(e) = std::fs::write(path, render_markdown(cfg, &results)) {
+            eprintln!("matrix markdown write {path}: {e}");
+        } else {
+            println!("wrote {path}");
+        }
+    }
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> MatrixConfig {
+        MatrixConfig {
+            duration_s: 30.0,
+            traces: vec![
+                TraceSpec::Alibaba { qps: 3.0 },
+                TraceSpec::Bursty {
+                    base_qps: 2.0,
+                    burst_qps: 8.0,
+                },
+            ],
+            methods: vec![Method::DefaultNv, Method::GreenLlm, Method::PiTbt],
+            margins: vec![0.95],
+            ..MatrixConfig::default()
+        }
+    }
+
+    #[test]
+    fn trace_spec_parse_round_trips() {
+        for s in ["alibaba5", "azure_code5", "azure_conv8", "bursty", "sinusoid"] {
+            let spec = TraceSpec::parse(s).unwrap();
+            assert_eq!(spec.name(), s, "{s}");
+        }
+        assert_eq!(TraceSpec::parse("alibaba2.5").unwrap().name(), "alibaba2.5");
+        assert!(TraceSpec::parse("nope").is_none());
+        assert!(TraceSpec::parse("azure_codeX").is_none());
+    }
+
+    #[test]
+    fn default_matrix_has_at_least_twelve_cells() {
+        let cfg = MatrixConfig::default();
+        assert!(
+            cfg.cells().len() >= 12,
+            "default sweep must cover >= 12 cells, got {}",
+            cfg.cells().len()
+        );
+        assert!(cfg.traces.len() >= 3);
+        assert!(cfg.methods.len() >= 4);
+    }
+
+    #[test]
+    fn matrix_results_independent_of_thread_count() {
+        let mut cfg = small_cfg();
+        cfg.threads = 1;
+        let serial = run_matrix(&cfg);
+        cfg.threads = 4;
+        let parallel = run_matrix(&cfg);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.trace, b.trace);
+            assert_eq!(a.method, b.method);
+            assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+            assert_eq!(a.completed, b.completed);
+        }
+    }
+
+    #[test]
+    fn deltas_normalized_to_defaultnv() {
+        let cfg = small_cfg();
+        let results = run_matrix(&cfg);
+        for r in &results {
+            let d = r.delta_energy_pct.expect("defaultNV present in sweep");
+            if r.method == Method::DefaultNv {
+                assert!(d.abs() < 1e-9);
+            }
+        }
+        // GreenLLM saves energy vs defaultNV on the chat slice.
+        let green = results
+            .iter()
+            .find(|r| r.trace == "alibaba3" && r.method == Method::GreenLlm)
+            .unwrap();
+        assert!(green.delta_energy_pct.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_rendering_shapes() {
+        let cfg = small_cfg();
+        let results = run_matrix(&cfg);
+        let md = render_markdown(&cfg, &results);
+        assert_eq!(
+            md.lines().filter(|l| l.starts_with("| ")).count(),
+            results.len() + 1 // header row
+        );
+        let json = to_json(&cfg, &results);
+        let parsed = Json::parse(&json.dump()).unwrap();
+        assert_eq!(
+            parsed.get("cells").unwrap().as_arr().unwrap().len(),
+            results.len()
+        );
+    }
+}

@@ -9,6 +9,7 @@
 pub mod ablations;
 pub mod baselines;
 pub mod figures;
+pub mod matrix;
 pub mod report;
 pub mod tables;
 

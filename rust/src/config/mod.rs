@@ -25,6 +25,12 @@ pub enum Method {
     /// SLO-feasible; no phase split, no fine loop, no hysteresis. The
     /// related-work comparator the paper positions against.
     Throttle,
+    /// AGFT-style online adaptive tuner (arXiv:2508.01744): per-worker
+    /// ε-greedy Q-learning over ladder moves with an SLO guardrail.
+    Agft,
+    /// Plain PI feedback controller on P95 TBT — the simplest dynamic
+    /// baseline (no profiling, no tables, no learning).
+    PiTbt,
 }
 
 impl Method {
@@ -35,6 +41,8 @@ impl Method {
             Method::GreenLlm => "GreenLLM".into(),
             Method::Fixed(mhz) => format!("Fixed{mhz}"),
             Method::Throttle => "Throttle".into(),
+            Method::Agft => "AGFT".into(),
+            Method::PiTbt => "PI-TBT".into(),
         }
     }
 
@@ -44,6 +52,8 @@ impl Method {
             "prefillsplit" | "split" => Some(Method::PrefillSplit),
             "greenllm" | "green" => Some(Method::GreenLlm),
             "throttle" | "throttllem" => Some(Method::Throttle),
+            "agft" => Some(Method::Agft),
+            "pitbt" | "pi-tbt" | "pi" => Some(Method::PiTbt),
             other => other
                 .strip_prefix("fixed")
                 .and_then(|mhz| mhz.parse().ok())
@@ -51,9 +61,21 @@ impl Method {
         }
     }
 
-    /// Routing enabled? (defaultNV/Throttle use one mixed prefill queue.)
+    /// All governors the comparison harnesses sweep by default.
+    pub fn matrix_set() -> Vec<Method> {
+        vec![
+            Method::DefaultNv,
+            Method::GreenLlm,
+            Method::Throttle,
+            Method::Agft,
+            Method::PiTbt,
+        ]
+    }
+
+    /// Routing enabled? (Only the paper's split/GreenLLM methods route;
+    /// governor-only baselines share one mixed prefill queue.)
     pub fn routing(&self) -> bool {
-        !matches!(self, Method::DefaultNv | Method::Fixed(_) | Method::Throttle)
+        matches!(self, Method::PrefillSplit | Method::GreenLlm)
     }
 
     /// Phase-specific DVFS enabled?
@@ -375,6 +397,9 @@ mod tests {
         assert_eq!(Method::parse("defaultNV"), Some(Method::DefaultNv));
         assert_eq!(Method::parse("greenllm"), Some(Method::GreenLlm));
         assert_eq!(Method::parse("fixed750"), Some(Method::Fixed(750)));
+        assert_eq!(Method::parse("agft"), Some(Method::Agft));
+        assert_eq!(Method::parse("pitbt"), Some(Method::PiTbt));
+        assert_eq!(Method::parse("pi-tbt"), Some(Method::PiTbt));
         assert_eq!(Method::parse("bogus"), None);
     }
 
@@ -385,6 +410,17 @@ mod tests {
         assert!(!Method::PrefillSplit.dvfs());
         assert!(Method::GreenLlm.routing() && Method::GreenLlm.dvfs());
         assert!(!Method::Fixed(750).dvfs());
+        // Governor-only baselines keep the mixed queue (apples-to-apples
+        // against defaultNV).
+        assert!(!Method::Agft.routing());
+        assert!(!Method::PiTbt.routing());
+    }
+
+    #[test]
+    fn matrix_set_round_trips_through_parse() {
+        for m in Method::matrix_set() {
+            assert_eq!(Method::parse(&m.name()), Some(m), "{m:?}");
+        }
     }
 
     #[test]

@@ -1,19 +1,21 @@
 //! The discrete-event serving engine: replays a trace against the
-//! simulated DGX-A100 node under a given method (defaultNV / PrefillSplit /
-//! GreenLLM / fixed clock) and produces energy + SLO results.
+//! simulated DGX-A100 node under a pluggable [`DvfsPolicy`] and produces
+//! energy + SLO results.
 //!
 //! Topology (paper Fig. 4): requests arrive → router → per-class prefill
 //! queues → prefill pool (default 2 workers × 2 GPUs, one job at a time per
 //! worker) → decode pool (default 4 workers × 1 GPU, continuous batching) →
-//! token stream. Telemetry feeds the per-phase DVFS controllers, which set
-//! NVML-style application clocks on the workers' GPUs.
+//! token stream. The engine owns queues, workers and GPUs; every frequency
+//! decision flows through the policy layer (`coordinator::policy`), which
+//! receives telemetry snapshots and event-driven TBT/token feedback and
+//! answers with NVML-style application clocks. Adding a governor therefore
+//! never touches this event loop.
 
 use crate::config::{Config, Method};
+use crate::coordinator::policy::{self, DvfsPolicy};
 use crate::coordinator::router::Router;
-use crate::dvfs::decode_ctl::DecodeController;
-use crate::dvfs::governor::DefaultNvGovernor;
-use crate::dvfs::prefill_opt::{PrefillJobView, PrefillOptimizer};
-use crate::dvfs::profiler::Profiler;
+use crate::coordinator::telemetry::{ClockPlan, DecodeWorkerView, PoolView, TickSpec};
+use crate::dvfs::prefill_opt::PrefillJobView;
 use crate::gpu::device::SimGpu;
 use crate::gpu::perf::PerfModel;
 use crate::gpu::power::PowerModel;
@@ -86,11 +88,8 @@ enum Ev {
     Arrive(usize),
     PrefillDone { worker: usize, seq: u64 },
     DecodeRound { worker: usize, seq: u64 },
-    FineTick,
-    CoarseTick,
-    AdaptTick,
-    PrefillTick,
-    GovernorTick,
+    /// A policy-requested periodic callback (index into the tick specs).
+    PolicyTick(usize),
     SampleTick,
 }
 
@@ -141,30 +140,25 @@ struct Engine<'a> {
     prefill_workers: Vec<PrefillWorker>,
     decode_workers: Vec<DecodeWorker>,
     decode_wait: VecDeque<Stream>,
-    // Governors (populated per method).
-    prefill_opts: Vec<PrefillOptimizer>,
-    decode_ctls: Vec<DecodeController>,
-    nv_prefill: Vec<DefaultNvGovernor>,
-    nv_decode: Vec<DefaultNvGovernor>,
-    /// throttLL'eM-lite state: the prefill feasibility model (decode uses
-    /// model-predicted step times directly — per-query load prediction).
-    throttle: Option<PrefillOptimizer>,
+    /// The frequency governor under test — the only source of clock
+    /// decisions in the whole loop.
+    policy: Box<dyn DvfsPolicy>,
+    tick_specs: Vec<TickSpec>,
     slo: SloTracker,
     rng: Pcg64,
     completed: u64,
     generated_tokens: u64,
     global_tps: TpsWindow,
     tps_series: Vec<(f64, f64)>,
-    /// Reusable buffer for the optimizer's queue view (hot path: every
-    /// prefill tick × worker — §Perf).
+    /// Reusable buffers for policy telemetry (hot path: every policy tick
+    /// and prefill boundary — §Perf).
     jobs_scratch: Vec<PrefillJobView>,
+    view_scratch: PoolView,
+    plan_scratch: ClockPlan,
     /// Prefill deadline target per route class (SLO × margin).
     ttft_target_sm: f64,
     ttft_target_long: f64,
 }
-
-/// Mean context length assumed when building the decode band table.
-const TABLE_AVG_CTX: f64 = 600.0;
 
 /// Replay `trace` under `cfg`.
 pub fn run(cfg: &Config, trace: &Trace, opts: &RunOptions) -> RunResult {
@@ -206,60 +200,14 @@ pub fn run(cfg: &Config, trace: &Trace, opts: &RunOptions) -> RunResult {
         })
         .collect();
 
-    // --- Governors ----------------------------------------------------------
-    let mut prefill_opts = Vec::new();
-    let mut decode_ctls = Vec::new();
-    let mut nv_prefill = Vec::new();
-    let mut nv_decode = Vec::new();
-    match cfg.method {
-        Method::GreenLlm => {
-            let mut profiler =
-                Profiler::new(perf.clone(), power.clone(), cfg.sim_noise, cfg.seed ^ 0xF17);
-            let fitted = profiler.fit(3);
-            let table = profiler.build_band_table(
-                1600.0,
-                cfg.decode_ctl.tps_bucket,
-                TABLE_AVG_CTX,
-                cfg.slo.tbt_p95_s * cfg.decode_margin,
-                cfg.pools.max_streams_per_decode_worker,
-            );
-            for _ in 0..cfg.pools.prefill_workers {
-                prefill_opts.push(PrefillOptimizer::new(
-                    fitted.clone(),
-                    cfg.prefill_opt.idle_clock_mhz,
-                ));
-            }
-            for _ in 0..cfg.pools.decode_workers {
-                decode_ctls.push(DecodeController::new(
-                    cfg.decode_ctl.clone(),
-                    table.clone(),
-                    cfg.slo.tbt_p95_s * cfg.decode_margin,
-                ));
-            }
+    // --- Policy (the pluggable governor) -------------------------------------
+    let policy = policy::build(cfg, &perf, &power);
+    if let Some(mhz) = policy.initial_clock_mhz() {
+        for g in gpus.iter_mut() {
+            g.set_app_clock(0.0, mhz);
         }
-        Method::DefaultNv | Method::PrefillSplit => {
-            for w in 0..cfg.pools.prefill_workers {
-                nv_prefill.push(DefaultNvGovernor::new(cfg.seed ^ (w as u64)));
-            }
-            for w in 0..cfg.pools.decode_workers {
-                nv_decode.push(DefaultNvGovernor::new(cfg.seed ^ (0x100 + w as u64)));
-            }
-        }
-        Method::Fixed(mhz) => {
-            for g in gpus.iter_mut() {
-                g.set_app_clock(0.0, mhz);
-            }
-        }
-        Method::Throttle => {} // built after the struct (needs profiler)
     }
-    let throttle = if cfg.method == Method::Throttle {
-        let mut profiler =
-            Profiler::new(perf.clone(), power.clone(), cfg.sim_noise, cfg.seed ^ 0x7417);
-        let fitted = profiler.fit(3);
-        Some(PrefillOptimizer::new(fitted, cfg.prefill_opt.idle_clock_mhz))
-    } else {
-        None
-    };
+    let tick_specs = policy.ticks();
 
     let mut engine = Engine {
         cfg,
@@ -273,11 +221,8 @@ pub fn run(cfg: &Config, trace: &Trace, opts: &RunOptions) -> RunResult {
         prefill_workers,
         decode_workers,
         decode_wait: VecDeque::new(),
-        prefill_opts,
-        decode_ctls,
-        nv_prefill,
-        nv_decode,
-        throttle,
+        policy,
+        tick_specs,
         slo: {
             let mut t = SloTracker::new(cfg.slo.clone());
             t.keep_outcomes = opts.keep_outcomes;
@@ -289,6 +234,8 @@ pub fn run(cfg: &Config, trace: &Trace, opts: &RunOptions) -> RunResult {
         global_tps: TpsWindow::new(0.2),
         tps_series: Vec::new(),
         jobs_scratch: Vec::new(),
+        view_scratch: PoolView::default(),
+        plan_scratch: ClockPlan::default(),
         ttft_target_sm: cfg.slo.ttft_short_medium_s * cfg.prefill_margin,
         ttft_target_long: cfg.slo.ttft_long_s * cfg.prefill_margin,
     };
@@ -297,27 +244,15 @@ pub fn run(cfg: &Config, trace: &Trace, opts: &RunOptions) -> RunResult {
 
 impl<'a> Engine<'a> {
     fn run_loop(&mut self) -> RunResult {
-        // Seed arrivals + ticks.
-        for i in 0..self.trace.requests.len() {
-            self.q.schedule(self.trace.requests[i].arrival_s, Ev::Arrive(i));
+        // Seed arrivals + policy ticks (in declaration order so replays of
+        // the pre-refactor method wiring stay bit-identical).
+        let trace = self.trace;
+        for (i, req) in trace.requests.iter().enumerate() {
+            self.q.schedule(req.arrival_s, Ev::Arrive(i));
         }
-        match self.cfg.method {
-            Method::GreenLlm => {
-                self.q
-                    .schedule(self.cfg.decode_ctl.fine_tick_s, Ev::FineTick);
-                self.q
-                    .schedule(self.cfg.decode_ctl.coarse_tick_s, Ev::CoarseTick);
-                self.q
-                    .schedule(self.cfg.decode_ctl.adapt_interval_s, Ev::AdaptTick);
-                self.q.schedule(self.cfg.prefill_opt.tick_s, Ev::PrefillTick);
-            }
-            Method::DefaultNv | Method::PrefillSplit => {
-                self.q.schedule(0.2, Ev::GovernorTick);
-            }
-            Method::Throttle => {
-                self.q.schedule(1.0, Ev::GovernorTick); // coarse 1 s throttling
-            }
-            Method::Fixed(_) => {}
+        let specs = self.tick_specs.clone();
+        for (kind, spec) in specs.iter().enumerate() {
+            self.q.schedule(spec.interval_s, Ev::PolicyTick(kind));
         }
         if self.opts.record_tps_series {
             self.q.schedule(0.2, Ev::SampleTick);
@@ -330,53 +265,11 @@ impl<'a> Engine<'a> {
                 Ev::Arrive(i) => self.on_arrive(t, i),
                 Ev::PrefillDone { worker, seq } => self.on_prefill_done(t, worker, seq),
                 Ev::DecodeRound { worker, seq } => self.on_decode_round(t, worker, seq),
-                Ev::FineTick => {
-                    for w in 0..self.decode_workers.len() {
-                        let mhz = self.decode_ctls[w].fine_tick(t);
-                        let gpu = self.decode_workers[w].gpu;
-                        self.set_worker_clock(t, gpu, 1, mhz);
-                    }
+                Ev::PolicyTick(kind) => {
+                    self.policy_tick(t, kind);
                     if self.completed < total {
-                        self.q.schedule_in(self.cfg.decode_ctl.fine_tick_s, Ev::FineTick);
-                    }
-                }
-                Ev::CoarseTick => {
-                    for ctl in self.decode_ctls.iter_mut() {
-                        ctl.coarse_tick(t);
-                    }
-                    if self.completed < total {
-                        self.q
-                            .schedule_in(self.cfg.decode_ctl.coarse_tick_s, Ev::CoarseTick);
-                    }
-                }
-                Ev::AdaptTick => {
-                    for ctl in self.decode_ctls.iter_mut() {
-                        ctl.adapt_tick(t);
-                    }
-                    if self.completed < total {
-                        self.q
-                            .schedule_in(self.cfg.decode_ctl.adapt_interval_s, Ev::AdaptTick);
-                    }
-                }
-                Ev::PrefillTick => {
-                    for w in 0..self.prefill_workers.len() {
-                        self.update_prefill_clock(t, w);
-                    }
-                    if self.completed < total {
-                        self.q.schedule_in(self.cfg.prefill_opt.tick_s, Ev::PrefillTick);
-                    }
-                }
-                Ev::GovernorTick => {
-                    if self.throttle.is_some() {
-                        self.throttle_tick(t);
-                        if self.completed < total {
-                            self.q.schedule_in(1.0, Ev::GovernorTick);
-                        }
-                    } else {
-                        self.nv_tick(t);
-                        if self.completed < total {
-                            self.q.schedule_in(0.2, Ev::GovernorTick);
-                        }
+                        let dt = self.tick_specs[kind].interval_s;
+                        self.q.schedule_in(dt, Ev::PolicyTick(kind));
                     }
                 }
                 Ev::SampleTick => {
@@ -408,6 +301,7 @@ impl<'a> Engine<'a> {
             .decode_workers
             .iter()
             .fold((0u64, 0u64), |(s, n), w| (s + w.batch_sum, n + w.batch_samples));
+        let diag = self.policy.diagnostics();
 
         RunResult {
             trace_name: self.trace.name.clone(),
@@ -428,9 +322,9 @@ impl<'a> Engine<'a> {
             } else {
                 bsum as f64 / bsamp as f64
             },
-            band_switches: self.decode_ctls.iter().map(|c| c.band_switches).sum(),
-            adaptations: self.decode_ctls.iter().map(|c| c.adaptations).sum(),
-            fine_ticks: self.decode_ctls.iter().map(|c| c.fine_ticks).sum(),
+            band_switches: diag.band_switches,
+            adaptations: diag.adaptations,
+            fine_ticks: diag.fine_ticks,
         }
     }
 
@@ -446,6 +340,14 @@ impl<'a> Engine<'a> {
         self.gpus[self.prefill_workers[worker].gpus[0]].sm_clock()
     }
 
+    fn set_prefill_worker_clock(&mut self, t: f64, worker: usize, mhz: u32) {
+        let (g0, n) = (
+            self.prefill_workers[worker].gpus[0],
+            self.prefill_workers[worker].gpus.len(),
+        );
+        self.set_worker_clock(t, g0, n, mhz);
+    }
+
     /// Deadline for a request's first token under the controller margin.
     fn deadline_of(&self, req_idx: usize) -> f64 {
         let r = &self.trace.requests[req_idx];
@@ -456,119 +358,68 @@ impl<'a> Engine<'a> {
         r.arrival_s + slo
     }
 
-    fn update_prefill_clock(&mut self, t: f64, worker: usize) {
-        if self.prefill_opts.is_empty() {
-            return;
-        }
+    /// Append `worker`'s queue view: the in-flight job heads the FIFO (its
+    /// remaining work over-approximated by its full t_ref — conservative),
+    /// then the backlog.
+    fn fill_jobs(&self, worker: usize, out: &mut Vec<PrefillJobView>) {
         let queue = self.prefill_workers[worker].queue;
-        // The in-flight job heads the FIFO view (its remaining work is
-        // over-approximated by its full t_ref — conservative). Reuses the
-        // scratch buffer: this runs every prefill tick × worker.
-        let mut jobs = std::mem::take(&mut self.jobs_scratch);
-        jobs.clear();
         if let Some((req_idx, _)) = self.prefill_workers[worker].current {
-            jobs.push(PrefillJobView {
+            out.push(PrefillJobView {
                 prompt_len: self.trace.requests[req_idx].prompt_len,
                 deadline_s: self.deadline_of(req_idx),
             });
         }
-        jobs.extend(self.prefill_queues[queue].iter().map(|j| PrefillJobView {
+        out.extend(self.prefill_queues[queue].iter().map(|j| PrefillJobView {
             prompt_len: self.trace.requests[j.req_idx].prompt_len,
             deadline_s: self.deadline_of(j.req_idx),
         }));
-        let mhz = self.prefill_opts[worker].optimal_clock(t, &jobs);
-        self.jobs_scratch = jobs;
-        let (g0, n) = (
-            self.prefill_workers[worker].gpus[0],
-            self.prefill_workers[worker].gpus.len(),
-        );
-        self.set_worker_clock(t, g0, n, mhz);
     }
 
-    /// throttLL'eM-lite (1 Hz + dispatch boundaries): per-query load
-    /// prediction → lowest *predicted-feasible* clock per pool. No
-    /// phase-aware energy optimization, no feedback fine loop — the
-    /// predictive-throttling baseline the paper's related work describes.
-    fn throttle_tick(&mut self, t: f64) {
-        for w in 0..self.prefill_workers.len() {
-            self.throttle_prefill_update(t, w);
-        }
-        // Decode: predict the step time for the *current* batch from the
-        // model and pick the lowest clock that holds the TBT target. Open
-        // loop: joiners and noise between ticks are not corrected, so a
-        // fixed safety margin (7 %) stands in for the feedback GreenLLM's
-        // fine loop provides.
-        let target = self.cfg.slo.tbt_p95_s * self.cfg.decode_margin / 1.07;
-        for w in 0..self.decode_workers.len() {
-            let b = self.decode_workers[w].streams.len();
-            if b == 0 {
-                continue;
+    /// One periodic policy callback: snapshot telemetry, collect the clock
+    /// plan, apply it (prefill pool first, then decode — the order the
+    /// pre-refactor governors used).
+    fn policy_tick(&mut self, t: f64, kind: usize) {
+        let spec = self.tick_specs[kind];
+        let mut view = std::mem::take(&mut self.view_scratch);
+        view.now = t;
+        view.prefill.resize_with(self.prefill_workers.len(), Default::default);
+        for (w, pv) in view.prefill.iter_mut().enumerate() {
+            pv.busy = self.prefill_workers[w].current.is_some();
+            pv.jobs.clear();
+            if spec.prefill_jobs {
+                self.fill_jobs(w, &mut pv.jobs);
             }
-            let avg_ctx = self.decode_workers[w].streams.iter().map(|s| s.ctx).sum::<f64>()
-                / b as f64;
-            let ladder = crate::gpu::freq::FreqLadder::a100();
-            let mut chosen = ladder.max_mhz;
-            for mhz in ladder.iter() {
-                if self.perf.decode_step_time(b, avg_ctx, mhz) <= target {
-                    chosen = mhz;
-                    break;
-                }
+        }
+        view.decode.clear();
+        if spec.decode_view {
+            for w in &self.decode_workers {
+                let batch = w.streams.len();
+                let avg_ctx = if batch == 0 {
+                    0.0
+                } else {
+                    w.streams.iter().map(|s| s.ctx).sum::<f64>() / batch as f64
+                };
+                view.decode.push(DecodeWorkerView { batch, avg_ctx });
             }
-            let gpu = self.decode_workers[w].gpu;
-            self.gpus[gpu].set_app_clock(t, chosen);
         }
-    }
 
-    /// Prefill half of the throttle baseline — also invoked at dispatch
-    /// boundaries (throttLL'eM predicts per query, not per interval).
-    fn throttle_prefill_update(&mut self, t: f64, w: usize) {
-        if self.throttle.is_none() {
-            return;
-        }
-        let mut jobs = std::mem::take(&mut self.jobs_scratch);
-        jobs.clear();
-        let queue = self.prefill_workers[w].queue;
-        let in_flight = self.prefill_workers[w].current.map(|(req_idx, _)| req_idx);
-        for req_idx in in_flight
-            .into_iter()
-            .chain(self.prefill_queues[queue].iter().map(|j| j.req_idx))
-        {
-            jobs.push(PrefillJobView {
-                prompt_len: self.trace.requests[req_idx].prompt_len,
-                deadline_s: self.deadline_of(req_idx),
-            });
-        }
-        let mhz = self
-            .throttle
-            .as_mut()
-            .unwrap()
-            .min_feasible_clock(t, &jobs);
-        self.jobs_scratch = jobs;
-        let (g0, n) = (
-            self.prefill_workers[w].gpus[0],
-            self.prefill_workers[w].gpus.len(),
-        );
-        for g in g0..g0 + n {
-            self.gpus[g].set_app_clock(t, mhz);
-        }
-    }
+        let mut plan = std::mem::take(&mut self.plan_scratch);
+        plan.reset(self.prefill_workers.len(), self.decode_workers.len());
+        self.policy.on_tick(kind, t, &view, &mut plan);
 
-    fn nv_tick(&mut self, t: f64) {
-        for w in 0..self.prefill_workers.len() {
-            let busy = self.prefill_workers[w].current.is_some();
-            let mhz = self.nv_prefill[w].tick(t, busy);
-            let (g0, n) = (
-                self.prefill_workers[w].gpus[0],
-                self.prefill_workers[w].gpus.len(),
-            );
-            self.set_worker_clock(t, g0, n, mhz);
+        for (w, mhz) in plan.prefill_mhz.iter().enumerate() {
+            if let Some(mhz) = mhz {
+                self.set_prefill_worker_clock(t, w, *mhz);
+            }
         }
-        for w in 0..self.decode_workers.len() {
-            let busy = !self.decode_workers[w].streams.is_empty();
-            let mhz = self.nv_decode[w].tick(t, busy);
-            let gpu = self.decode_workers[w].gpu;
-            self.set_worker_clock(t, gpu, 1, mhz);
+        for (w, mhz) in plan.decode_mhz.iter().enumerate() {
+            if let Some(mhz) = mhz {
+                let gpu = self.decode_workers[w].gpu;
+                self.set_worker_clock(t, gpu, 1, *mhz);
+            }
         }
+        self.view_scratch = view;
+        self.plan_scratch = plan;
     }
 
     // -- prefill -------------------------------------------------------------
@@ -583,11 +434,18 @@ impl<'a> Engine<'a> {
             .find(|&&w| self.prefill_workers[w].current.is_none())
         {
             self.dispatch_prefill(t, w);
-        } else if !self.prefill_opts.is_empty() {
-            // Queue grew: let the optimizer react immediately for busy
+        } else if self.policy.wants_backlog_updates() {
+            // Queue grew: let the policy react immediately for busy
             // workers too (clock applies to subsequent jobs).
             for w in workers {
-                self.update_prefill_clock(t, w);
+                let mut jobs = std::mem::take(&mut self.jobs_scratch);
+                jobs.clear();
+                self.fill_jobs(w, &mut jobs);
+                let decision = self.policy.on_prefill_backlog(t, w, &jobs);
+                self.jobs_scratch = jobs;
+                if let Some(mhz) = decision {
+                    self.set_prefill_worker_clock(t, w, mhz);
+                }
             }
         }
     }
@@ -601,7 +459,7 @@ impl<'a> Engine<'a> {
                 .and_then(|q| self.prefill_queues[q].pop_front())
         });
         let Some(job) = job else {
-            // Nothing to do: park util at 0 (and clock, for GreenLLM).
+            // Nothing to do: park util at 0 (and clock, if the policy says).
             let (g0, n) = (
                 self.prefill_workers[worker].gpus[0],
                 self.prefill_workers[worker].gpus.len(),
@@ -609,28 +467,26 @@ impl<'a> Engine<'a> {
             for g in g0..g0 + n {
                 self.gpus[g].set_util(t, 0.0);
             }
-            if !self.prefill_opts.is_empty() {
-                self.update_prefill_clock(t, worker);
+            if let Some(mhz) = self.policy.on_prefill_idle(t, worker) {
+                self.set_worker_clock(t, g0, n, mhz);
             }
             return;
         };
         // Mark the job in flight *before* the clock decision so the
-        // optimizer accounts for its work (then overwrite seq below).
+        // policy accounts for its work.
         self.prefill_workers[worker].seq += 1;
         let seq = self.prefill_workers[worker].seq;
         self.prefill_workers[worker].current = Some((job.req_idx, seq));
         // Refresh the clock decision at the dispatch boundary.
-        if !self.prefill_opts.is_empty() {
-            self.update_prefill_clock(t, worker);
-        } else if self.throttle.is_some() {
-            self.throttle_prefill_update(t, worker);
-        } else if !self.nv_prefill.is_empty() {
-            let mhz = self.nv_prefill[worker].tick(t, true);
-            let (g0, n) = (
-                self.prefill_workers[worker].gpus[0],
-                self.prefill_workers[worker].gpus.len(),
-            );
-            self.set_worker_clock(t, g0, n, mhz);
+        let mut jobs = std::mem::take(&mut self.jobs_scratch);
+        jobs.clear();
+        if self.policy.wants_prefill_jobs() {
+            self.fill_jobs(worker, &mut jobs);
+        }
+        let decision = self.policy.on_prefill_dispatch(t, worker, &jobs);
+        self.jobs_scratch = jobs;
+        if let Some(mhz) = decision {
+            self.set_prefill_worker_clock(t, worker, mhz);
         }
         let mhz = self.prefill_clock(worker);
         let len = self.trace.requests[job.req_idx].prompt_len;
@@ -740,12 +596,12 @@ impl<'a> Engine<'a> {
         let mut finished: Vec<Stream> = Vec::new();
         let mut steady: u32 = 0;
         {
-            // Single fused pass: emit tokens AND feed the controller's TBT
-            // window (split borrows keep this allocation-free). Steady
+            // Single fused pass: emit tokens AND feed the policy's TBT
+            // telemetry (split borrows keep this allocation-free). Steady
             // streams (last token at round start) all observe the same
             // round-duration TBT, fed as ONE weighted sample below — §Perf.
             let w = &mut self.decode_workers[worker];
-            let mut ctl = self.decode_ctls.get_mut(worker);
+            let policy = &mut self.policy;
             let mut i = 0;
             while i < w.streams.len() {
                 // Streams that joined mid-round wait for the next one.
@@ -758,8 +614,8 @@ impl<'a> Engine<'a> {
                 s.tbts.push(tbt);
                 if s.last_token_t == round_start {
                     steady += 1;
-                } else if let Some(c) = ctl.as_deref_mut() {
-                    c.on_tbt(tbt); // fresh joiner: distinct first-token TBT
+                } else {
+                    policy.on_decode_tbt(worker, tbt); // fresh joiner
                 }
                 s.last_token_t = t;
                 s.ctx += 1.0;
@@ -774,10 +630,8 @@ impl<'a> Engine<'a> {
         }
         self.generated_tokens += emitted as u64;
         self.global_tps.record(t, emitted);
-        if let Some(ctl) = self.decode_ctls.get_mut(worker) {
-            ctl.on_tbt_weighted(t - round_start, steady);
-            ctl.on_tokens(t, emitted);
-        }
+        self.policy.on_decode_tbt_weighted(worker, t - round_start, steady);
+        self.policy.on_decode_tokens(worker, t, emitted);
         for s in finished {
             self.finish_stream(t, s);
         }
@@ -848,6 +702,16 @@ mod tests {
     }
 
     #[test]
+    fn new_policies_complete_all_requests() {
+        for method in [Method::Agft, Method::PiTbt, Method::Throttle] {
+            let trace = tiny_trace(50, 5.0, 400, 20);
+            let r = run(&cfg(method), &trace, &RunOptions::default());
+            assert_eq!(r.completed, 50, "{method:?}");
+            assert_eq!(r.generated_tokens, 50 * 20, "{method:?}");
+        }
+    }
+
+    #[test]
     fn token_accounting_exact() {
         let trace = tiny_trace(20, 4.0, 300, 16);
         let r = run(&cfg(Method::GreenLlm), &trace, &RunOptions::default());
@@ -872,6 +736,17 @@ mod tests {
         assert_eq!(a.total_energy_j, b.total_energy_j);
         assert_eq!(a.generated_tokens, b.generated_tokens);
         assert_eq!(a.slo.ttft_pass_rate(), b.slo.ttft_pass_rate());
+    }
+
+    #[test]
+    fn deterministic_replay_new_policies() {
+        for method in [Method::Agft, Method::PiTbt] {
+            let trace = tiny_trace(40, 5.0, 400, 30);
+            let a = run(&cfg(method), &trace, &RunOptions::default());
+            let b = run(&cfg(method), &trace, &RunOptions::default());
+            assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+            assert_eq!(a.events_processed, b.events_processed);
+        }
     }
 
     #[test]
@@ -900,6 +775,19 @@ mod tests {
         // ... without tanking SLOs.
         assert!(green.slo.ttft_pass_rate() > 0.9);
         assert!(green.slo.tbt_pass_rate() > 0.9);
+    }
+
+    #[test]
+    fn pi_controller_saves_energy_at_light_load() {
+        let trace = tiny_trace(60, 2.0, 400, 60);
+        let nv = run(&cfg(Method::DefaultNv), &trace, &RunOptions::default());
+        let pi = run(&cfg(Method::PiTbt), &trace, &RunOptions::default());
+        assert!(
+            pi.total_energy_j < nv.total_energy_j,
+            "pi={} nv={}",
+            pi.total_energy_j,
+            nv.total_energy_j
+        );
     }
 
     #[test]

@@ -8,7 +8,11 @@
 
 pub mod cluster;
 pub mod engine;
+pub mod policy;
 pub mod router;
+pub mod telemetry;
 
 pub use engine::{run, RunOptions, RunResult};
+pub use policy::{DvfsPolicy, PolicyDiagnostics};
 pub use router::Router;
+pub use telemetry::{ClockPlan, PoolView, TickSpec};

@@ -1,0 +1,961 @@
+//! The pluggable DVFS policy layer.
+//!
+//! [`DvfsPolicy`] is the contract between the serving engine and a
+//! frequency governor: the engine delivers telemetry (periodic
+//! [`PoolView`] snapshots plus event-driven TBT/token feedback and
+//! prefill queue boundaries) and the policy answers with ladder clocks.
+//! Policies never touch queues, GPUs or the event loop, so adding a
+//! governor means implementing this trait and registering it in
+//! [`build`] — the event loop does not change.
+//!
+//! Shipped implementations:
+//! * [`GreenLlmPolicy`] — the paper's phase-specific stack: queueing-aware
+//!   prefill optimizer + dual-loop decode controller (§3.2–3.3).
+//! * [`DefaultNvPolicy`] — the stock-NVIDIA-governor baseline.
+//! * [`FixedPolicy`] — one static application clock everywhere.
+//! * [`ThrottlePolicy`] — throttLL'eM-lite 1 Hz predictive throttling.
+//! * [`AgftPolicy`] — AGFT-style online adaptive tuner (arXiv:2508.01744):
+//!   per-worker ε-greedy Q-learning over ladder moves with an SLO
+//!   guardrail.
+//! * [`PiTbtPolicy`] — a plain PI feedback controller on P95 TBT, the
+//!   simplest dynamic baseline.
+
+use crate::config::{Config, Method};
+use crate::coordinator::telemetry::{ClockPlan, PoolView, TickSpec};
+use crate::dvfs::decode_ctl::DecodeController;
+use crate::dvfs::governor::DefaultNvGovernor;
+use crate::dvfs::prefill_opt::{PrefillJobView, PrefillOptimizer};
+use crate::dvfs::profiler::Profiler;
+use crate::gpu::freq::FreqLadder;
+use crate::gpu::perf::PerfModel;
+use crate::gpu::power::PowerModel;
+use crate::metrics::{SlidingP95, TpsWindow};
+use crate::util::rng::Pcg64;
+
+/// Mean context length assumed when building the decode band table.
+pub const TABLE_AVG_CTX: f64 = 600.0;
+
+/// Counters a policy may expose for benches/diagnostics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PolicyDiagnostics {
+    pub band_switches: u64,
+    pub adaptations: u64,
+    pub fine_ticks: u64,
+}
+
+/// A frequency governor: telemetry in → per-GPU clock decisions out.
+///
+/// All methods default to no-ops so a policy only implements the signals
+/// it consumes. Invariant every implementation must uphold (property
+/// tested): every returned clock lies on the GPU's supported ladder.
+pub trait DvfsPolicy {
+    /// Human-readable policy name (reports, matrix rows).
+    fn name(&self) -> String;
+
+    /// Clock applied to every GPU at t = 0 (`None` keeps boost default).
+    fn initial_clock_mhz(&self) -> Option<u32> {
+        None
+    }
+
+    /// Periodic callbacks this policy wants; the index of a spec is the
+    /// `kind` passed back to [`DvfsPolicy::on_tick`].
+    fn ticks(&self) -> Vec<TickSpec> {
+        Vec::new()
+    }
+
+    /// Periodic decision point: read `view`, write clock decisions into
+    /// `plan` (pre-sized, all `None`).
+    fn on_tick(&mut self, _kind: usize, _now: f64, _view: &PoolView, _plan: &mut ClockPlan) {}
+
+    /// One fresh-joiner TBT sample observed on a decode worker.
+    fn on_decode_tbt(&mut self, _worker: usize, _tbt_s: f64) {}
+
+    /// `count` steady streams of one decode round all observed `tbt_s`.
+    fn on_decode_tbt_weighted(&mut self, _worker: usize, _tbt_s: f64, _count: u32) {}
+
+    /// Tokens emitted by one decode round on `worker`.
+    fn on_decode_tokens(&mut self, _worker: usize, _now: f64, _tokens: u32) {}
+
+    /// Build prefill queue views for dispatch decisions?
+    fn wants_prefill_jobs(&self) -> bool {
+        false
+    }
+
+    /// React to arrivals that merely deepen a busy worker's queue?
+    fn wants_backlog_updates(&self) -> bool {
+        false
+    }
+
+    /// A prefill worker just took a job; `jobs` = in-flight head + backlog
+    /// (empty unless [`DvfsPolicy::wants_prefill_jobs`]). Returned clock is
+    /// applied before the job's duration is computed.
+    fn on_prefill_dispatch(
+        &mut self,
+        _now: f64,
+        _worker: usize,
+        _jobs: &[PrefillJobView],
+    ) -> Option<u32> {
+        None
+    }
+
+    /// A prefill worker parked with an empty queue.
+    fn on_prefill_idle(&mut self, _now: f64, _worker: usize) -> Option<u32> {
+        None
+    }
+
+    /// An arrival deepened `worker`'s queue while it was busy (only when
+    /// [`DvfsPolicy::wants_backlog_updates`]).
+    fn on_prefill_backlog(
+        &mut self,
+        _now: f64,
+        _worker: usize,
+        _jobs: &[PrefillJobView],
+    ) -> Option<u32> {
+        None
+    }
+
+    fn diagnostics(&self) -> PolicyDiagnostics {
+        PolicyDiagnostics::default()
+    }
+}
+
+/// Instantiate the policy for `cfg.method`. This is the single registry:
+/// new governors plug in here and become available to the engine, the CLI
+/// and the scenario matrix at once.
+pub fn build(cfg: &Config, perf: &PerfModel, power: &PowerModel) -> Box<dyn DvfsPolicy> {
+    match cfg.method {
+        Method::GreenLlm => Box::new(GreenLlmPolicy::new(cfg, perf, power)),
+        Method::DefaultNv | Method::PrefillSplit => Box::new(DefaultNvPolicy::new(cfg)),
+        Method::Fixed(mhz) => Box::new(FixedPolicy { mhz }),
+        Method::Throttle => Box::new(ThrottlePolicy::new(cfg, perf, power)),
+        Method::Agft => Box::new(AgftPolicy::new(cfg)),
+        Method::PiTbt => Box::new(PiTbtPolicy::new(cfg)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GreenLLM (paper §3)
+// ---------------------------------------------------------------------------
+
+/// The paper's phase-specific stack behind the policy interface: one
+/// prefill optimizer per prefill worker, one dual-loop controller per
+/// decode worker. Tick kinds: 0 = fine, 1 = coarse, 2 = adapt, 3 = prefill.
+pub struct GreenLlmPolicy {
+    prefill_opts: Vec<PrefillOptimizer>,
+    decode_ctls: Vec<DecodeController>,
+    fine_tick_s: f64,
+    coarse_tick_s: f64,
+    adapt_interval_s: f64,
+    prefill_tick_s: f64,
+}
+
+impl GreenLlmPolicy {
+    pub fn new(cfg: &Config, perf: &PerfModel, power: &PowerModel) -> GreenLlmPolicy {
+        let mut profiler =
+            Profiler::new(perf.clone(), power.clone(), cfg.sim_noise, cfg.seed ^ 0xF17);
+        let fitted = profiler.fit(3);
+        let table = profiler.build_band_table(
+            1600.0,
+            cfg.decode_ctl.tps_bucket,
+            TABLE_AVG_CTX,
+            cfg.slo.tbt_p95_s * cfg.decode_margin,
+            cfg.pools.max_streams_per_decode_worker,
+        );
+        let mut prefill_opts = Vec::new();
+        for _ in 0..cfg.pools.prefill_workers {
+            prefill_opts.push(PrefillOptimizer::new(
+                fitted.clone(),
+                cfg.prefill_opt.idle_clock_mhz,
+            ));
+        }
+        let mut decode_ctls = Vec::new();
+        for _ in 0..cfg.pools.decode_workers {
+            decode_ctls.push(DecodeController::new(
+                cfg.decode_ctl.clone(),
+                table.clone(),
+                cfg.slo.tbt_p95_s * cfg.decode_margin,
+            ));
+        }
+        GreenLlmPolicy {
+            prefill_opts,
+            decode_ctls,
+            fine_tick_s: cfg.decode_ctl.fine_tick_s,
+            coarse_tick_s: cfg.decode_ctl.coarse_tick_s,
+            adapt_interval_s: cfg.decode_ctl.adapt_interval_s,
+            prefill_tick_s: cfg.prefill_opt.tick_s,
+        }
+    }
+}
+
+impl DvfsPolicy for GreenLlmPolicy {
+    fn name(&self) -> String {
+        "GreenLLM".into()
+    }
+
+    fn ticks(&self) -> Vec<TickSpec> {
+        // None of these read the decode view (the dual-loop controllers own
+        // their telemetry), so skip its O(streams) construction — the fine
+        // tick runs at 50 Hz.
+        vec![
+            TickSpec::every(self.fine_tick_s).without_decode_view(),
+            TickSpec::every(self.coarse_tick_s).without_decode_view(),
+            TickSpec::every(self.adapt_interval_s).without_decode_view(),
+            TickSpec::with_prefill_jobs(self.prefill_tick_s).without_decode_view(),
+        ]
+    }
+
+    fn on_tick(&mut self, kind: usize, now: f64, view: &PoolView, plan: &mut ClockPlan) {
+        match kind {
+            0 => {
+                for (w, ctl) in self.decode_ctls.iter_mut().enumerate() {
+                    plan.decode_mhz[w] = Some(ctl.fine_tick(now));
+                }
+            }
+            1 => {
+                for ctl in self.decode_ctls.iter_mut() {
+                    ctl.coarse_tick(now);
+                }
+            }
+            2 => {
+                for ctl in self.decode_ctls.iter_mut() {
+                    ctl.adapt_tick(now);
+                }
+            }
+            _ => {
+                for (w, pv) in view.prefill.iter().enumerate() {
+                    plan.prefill_mhz[w] = Some(self.prefill_opts[w].optimal_clock(now, &pv.jobs));
+                }
+            }
+        }
+    }
+
+    fn on_decode_tbt(&mut self, worker: usize, tbt_s: f64) {
+        self.decode_ctls[worker].on_tbt(tbt_s);
+    }
+
+    fn on_decode_tbt_weighted(&mut self, worker: usize, tbt_s: f64, count: u32) {
+        self.decode_ctls[worker].on_tbt_weighted(tbt_s, count);
+    }
+
+    fn on_decode_tokens(&mut self, worker: usize, now: f64, tokens: u32) {
+        self.decode_ctls[worker].on_tokens(now, tokens);
+    }
+
+    fn wants_prefill_jobs(&self) -> bool {
+        true
+    }
+
+    fn wants_backlog_updates(&self) -> bool {
+        true
+    }
+
+    fn on_prefill_dispatch(
+        &mut self,
+        now: f64,
+        worker: usize,
+        jobs: &[PrefillJobView],
+    ) -> Option<u32> {
+        Some(self.prefill_opts[worker].optimal_clock(now, jobs))
+    }
+
+    fn on_prefill_idle(&mut self, now: f64, worker: usize) -> Option<u32> {
+        Some(self.prefill_opts[worker].optimal_clock(now, &[]))
+    }
+
+    fn on_prefill_backlog(
+        &mut self,
+        now: f64,
+        worker: usize,
+        jobs: &[PrefillJobView],
+    ) -> Option<u32> {
+        Some(self.prefill_opts[worker].optimal_clock(now, jobs))
+    }
+
+    fn diagnostics(&self) -> PolicyDiagnostics {
+        PolicyDiagnostics {
+            band_switches: self.decode_ctls.iter().map(|c| c.band_switches).sum(),
+            adaptations: self.decode_ctls.iter().map(|c| c.adaptations).sum(),
+            fine_ticks: self.decode_ctls.iter().map(|c| c.fine_ticks).sum(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// defaultNV baseline
+// ---------------------------------------------------------------------------
+
+/// Stock-governor baseline: one [`DefaultNvGovernor`] per worker, ticked
+/// every 200 ms plus at prefill dispatch boundaries.
+pub struct DefaultNvPolicy {
+    nv_prefill: Vec<DefaultNvGovernor>,
+    nv_decode: Vec<DefaultNvGovernor>,
+    method: Method,
+}
+
+impl DefaultNvPolicy {
+    pub fn new(cfg: &Config) -> DefaultNvPolicy {
+        let nv_prefill = (0..cfg.pools.prefill_workers)
+            .map(|w| DefaultNvGovernor::new(cfg.seed ^ (w as u64)))
+            .collect();
+        let nv_decode = (0..cfg.pools.decode_workers)
+            .map(|w| DefaultNvGovernor::new(cfg.seed ^ (0x100 + w as u64)))
+            .collect();
+        DefaultNvPolicy {
+            nv_prefill,
+            nv_decode,
+            method: cfg.method,
+        }
+    }
+}
+
+impl DvfsPolicy for DefaultNvPolicy {
+    fn name(&self) -> String {
+        self.method.name()
+    }
+
+    fn ticks(&self) -> Vec<TickSpec> {
+        vec![TickSpec::every(0.2)]
+    }
+
+    fn on_tick(&mut self, _kind: usize, now: f64, view: &PoolView, plan: &mut ClockPlan) {
+        for (w, pv) in view.prefill.iter().enumerate() {
+            plan.prefill_mhz[w] = Some(self.nv_prefill[w].tick(now, pv.busy));
+        }
+        for (w, dv) in view.decode.iter().enumerate() {
+            plan.decode_mhz[w] = Some(self.nv_decode[w].tick(now, dv.batch > 0));
+        }
+    }
+
+    fn on_prefill_dispatch(
+        &mut self,
+        now: f64,
+        worker: usize,
+        _jobs: &[PrefillJobView],
+    ) -> Option<u32> {
+        Some(self.nv_prefill[worker].tick(now, true))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixed clock
+// ---------------------------------------------------------------------------
+
+/// Pin every GPU to one application clock for the whole run (Fig. 3c).
+pub struct FixedPolicy {
+    pub mhz: u32,
+}
+
+impl DvfsPolicy for FixedPolicy {
+    fn name(&self) -> String {
+        format!("Fixed{}", self.mhz)
+    }
+
+    fn initial_clock_mhz(&self) -> Option<u32> {
+        Some(self.mhz)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// throttLL'eM-lite
+// ---------------------------------------------------------------------------
+
+/// Coarse 1 Hz predictive throttling (Kakolyris et al.): lowest
+/// *predicted-feasible* clock per pool, no phase-aware energy objective,
+/// no feedback loop — a fixed 7 % safety margin stands in for feedback.
+pub struct ThrottlePolicy {
+    opt: PrefillOptimizer,
+    perf: PerfModel,
+    ladder: FreqLadder,
+    decode_target_s: f64,
+}
+
+impl ThrottlePolicy {
+    pub fn new(cfg: &Config, perf: &PerfModel, power: &PowerModel) -> ThrottlePolicy {
+        let mut profiler =
+            Profiler::new(perf.clone(), power.clone(), cfg.sim_noise, cfg.seed ^ 0x7417);
+        let fitted = profiler.fit(3);
+        ThrottlePolicy {
+            opt: PrefillOptimizer::new(fitted, cfg.prefill_opt.idle_clock_mhz),
+            perf: perf.clone(),
+            ladder: FreqLadder::a100(),
+            decode_target_s: cfg.slo.tbt_p95_s * cfg.decode_margin / 1.07,
+        }
+    }
+}
+
+impl DvfsPolicy for ThrottlePolicy {
+    fn name(&self) -> String {
+        "Throttle".into()
+    }
+
+    fn ticks(&self) -> Vec<TickSpec> {
+        vec![TickSpec::with_prefill_jobs(1.0)]
+    }
+
+    fn on_tick(&mut self, _kind: usize, now: f64, view: &PoolView, plan: &mut ClockPlan) {
+        for (w, pv) in view.prefill.iter().enumerate() {
+            plan.prefill_mhz[w] = Some(self.opt.min_feasible_clock(now, &pv.jobs));
+        }
+        // Decode: predict the step time for the current batch and pick the
+        // lowest clock that holds the TBT target (open loop).
+        for (w, dv) in view.decode.iter().enumerate() {
+            if dv.batch == 0 {
+                continue;
+            }
+            let mut chosen = self.ladder.max_mhz;
+            for mhz in self.ladder.iter() {
+                if self.perf.decode_step_time(dv.batch, dv.avg_ctx, mhz) <= self.decode_target_s {
+                    chosen = mhz;
+                    break;
+                }
+            }
+            plan.decode_mhz[w] = Some(chosen);
+        }
+    }
+
+    fn wants_prefill_jobs(&self) -> bool {
+        true
+    }
+
+    fn on_prefill_dispatch(
+        &mut self,
+        now: f64,
+        _worker: usize,
+        jobs: &[PrefillJobView],
+    ) -> Option<u32> {
+        Some(self.opt.min_feasible_clock(now, jobs))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AGFT-style online adaptive tuner
+// ---------------------------------------------------------------------------
+
+const AGFT_ACTIONS: [i64; 5] = [-3, -1, 0, 1, 3]; // ladder steps per move
+const AGFT_TPS_BUCKET: f64 = 250.0;
+const AGFT_STATES: usize = 16;
+const AGFT_ALPHA: f64 = 0.2;
+const AGFT_GAMMA: f64 = 0.9;
+
+struct AgftAgent {
+    q: Vec<[f64; AGFT_ACTIONS.len()]>,
+    tps: TpsWindow,
+    tbt: SlidingP95,
+    rng: Pcg64,
+    eps: f64,
+    cur_mhz: u32,
+    prev: Option<(usize, usize)>,
+}
+
+impl AgftAgent {
+    fn new(seed: u64, stream: u64, ladder: &FreqLadder) -> AgftAgent {
+        AgftAgent {
+            q: vec![[0.0; AGFT_ACTIONS.len()]; AGFT_STATES],
+            tps: TpsWindow::new(1.0),
+            tbt: SlidingP95::new(128),
+            rng: Pcg64::new(seed, stream),
+            eps: 0.2,
+            cur_mhz: ladder.max_mhz,
+            prev: None,
+        }
+    }
+
+    fn tick(&mut self, now: f64, ladder: &FreqLadder, target_s: f64, batch: usize) -> u32 {
+        if batch == 0 {
+            // Idle worker: park toward the floor and freeze learning. The
+            // TBT window is count-bounded and never drains, so a stale P95
+            // from the last burst must not keep the guardrail (or the
+            // Q-update) firing on an empty GPU.
+            self.prev = None;
+            let stepped = self.cur_mhz as i64 - 3 * ladder.step_mhz as i64;
+            self.cur_mhz = ladder.snap(stepped as f64);
+            return self.cur_mhz;
+        }
+        let tps = self.tps.tps(now);
+        let state = ((tps / AGFT_TPS_BUCKET) as usize).min(AGFT_STATES - 1);
+        // Reward for the previous action: energy proxy (cubic in clock)
+        // plus a latency penalty when P95 TBT exceeds the target.
+        let p95 = self.tbt.p95();
+        let f_norm = self.cur_mhz as f64 / ladder.max_mhz as f64;
+        let violation = (p95 / target_s - 1.0).max(0.0);
+        let reward = -(f_norm * f_norm * f_norm) - 4.0 * violation;
+        let max_next = self.q[state]
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max);
+        if let Some((ps, pa)) = self.prev {
+            let old = self.q[ps][pa];
+            self.q[ps][pa] = old + AGFT_ALPHA * (reward + AGFT_GAMMA * max_next - old);
+        }
+        // ε-greedy action selection (ε decays toward 2 %).
+        let action = if self.rng.f64() < self.eps {
+            self.rng.index(AGFT_ACTIONS.len())
+        } else {
+            let mut best = 0;
+            for (i, v) in self.q[state].iter().enumerate() {
+                if *v > self.q[state][best] {
+                    best = i;
+                }
+            }
+            best
+        };
+        self.eps = (self.eps * 0.995).max(0.02);
+        self.prev = Some((state, action));
+        // SLO guardrail: a deep violation overrides learning with max boost.
+        if violation > 0.5 {
+            self.cur_mhz = ladder.max_mhz;
+            return self.cur_mhz;
+        }
+        let stepped = self.cur_mhz as i64 + AGFT_ACTIONS[action] * ladder.step_mhz as i64;
+        self.cur_mhz = ladder.snap(stepped as f64);
+        self.cur_mhz
+    }
+}
+
+/// AGFT-style adaptive real-time tuner (arXiv:2508.01744): per-decode-worker
+/// ε-greedy Q-learning over ladder moves, rewarded for low clocks and
+/// penalized for TBT violations, with a hard SLO guardrail. Prefill runs a
+/// simple busy-boost/idle-park heuristic so TTFT stays governed while the
+/// learner owns the decode pool.
+pub struct AgftPolicy {
+    agents: Vec<AgftAgent>,
+    ladder: FreqLadder,
+    target_s: f64,
+    idle_clock_mhz: u32,
+    ticks_seen: u64,
+}
+
+impl AgftPolicy {
+    pub fn new(cfg: &Config) -> AgftPolicy {
+        let ladder = FreqLadder::a100();
+        let agents = (0..cfg.pools.decode_workers)
+            .map(|w| AgftAgent::new(cfg.seed ^ 0xA6F7, w as u64, &ladder))
+            .collect();
+        AgftPolicy {
+            agents,
+            ladder,
+            target_s: cfg.slo.tbt_p95_s * cfg.decode_margin,
+            idle_clock_mhz: cfg.prefill_opt.idle_clock_mhz,
+            ticks_seen: 0,
+        }
+    }
+}
+
+impl DvfsPolicy for AgftPolicy {
+    fn name(&self) -> String {
+        "AGFT".into()
+    }
+
+    fn ticks(&self) -> Vec<TickSpec> {
+        vec![TickSpec::every(0.25)]
+    }
+
+    fn on_tick(&mut self, _kind: usize, now: f64, view: &PoolView, plan: &mut ClockPlan) {
+        self.ticks_seen += 1;
+        for (w, pv) in view.prefill.iter().enumerate() {
+            plan.prefill_mhz[w] = Some(if pv.busy {
+                self.ladder.max_mhz
+            } else {
+                self.idle_clock_mhz
+            });
+        }
+        for (w, agent) in self.agents.iter_mut().enumerate() {
+            let batch = view.decode.get(w).map_or(0, |d| d.batch);
+            plan.decode_mhz[w] = Some(agent.tick(now, &self.ladder, self.target_s, batch));
+        }
+    }
+
+    fn on_decode_tbt(&mut self, worker: usize, tbt_s: f64) {
+        self.agents[worker].tbt.record(tbt_s);
+    }
+
+    fn on_decode_tbt_weighted(&mut self, worker: usize, tbt_s: f64, count: u32) {
+        self.agents[worker].tbt.record_weighted(tbt_s, count);
+    }
+
+    fn on_decode_tokens(&mut self, worker: usize, now: f64, tokens: u32) {
+        self.agents[worker].tps.record(now, tokens);
+    }
+
+    fn on_prefill_dispatch(
+        &mut self,
+        _now: f64,
+        _worker: usize,
+        _jobs: &[PrefillJobView],
+    ) -> Option<u32> {
+        Some(self.ladder.max_mhz)
+    }
+
+    fn on_prefill_idle(&mut self, _now: f64, _worker: usize) -> Option<u32> {
+        Some(self.idle_clock_mhz)
+    }
+
+    fn diagnostics(&self) -> PolicyDiagnostics {
+        PolicyDiagnostics {
+            fine_ticks: self.ticks_seen,
+            ..Default::default()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PI-on-TBT feedback controller
+// ---------------------------------------------------------------------------
+
+const PI_TICK_S: f64 = 0.1;
+const PI_SETPOINT: f64 = 0.85; // run at 85 % of the TBT budget
+const PI_KP: f64 = 1200.0; // MHz per unit error per second
+const PI_KI: f64 = 300.0;
+const PI_INTEG_CLAMP: f64 = 3.0;
+const PI_IDLE_DECAY_MHZ_S: f64 = 1500.0;
+
+struct PiWorker {
+    tbt: SlidingP95,
+    integ: f64,
+    cur_f: f64,
+}
+
+/// The simplest dynamic baseline: one PI loop per decode worker tracking
+/// P95 TBT to a setpoint at 85 % of the SLO budget. No profiling, no
+/// tables, no learning — what a practitioner would wire up in an
+/// afternoon. Prefill boosts while busy and parks while idle.
+pub struct PiTbtPolicy {
+    workers: Vec<PiWorker>,
+    ladder: FreqLadder,
+    target_s: f64,
+    idle_clock_mhz: u32,
+}
+
+impl PiTbtPolicy {
+    pub fn new(cfg: &Config) -> PiTbtPolicy {
+        let ladder = FreqLadder::a100();
+        let workers = (0..cfg.pools.decode_workers)
+            .map(|_| PiWorker {
+                tbt: SlidingP95::new(cfg.decode_ctl.tbt_window),
+                integ: 0.0,
+                cur_f: ladder.max_mhz as f64,
+            })
+            .collect();
+        PiTbtPolicy {
+            workers,
+            ladder,
+            target_s: cfg.slo.tbt_p95_s * cfg.decode_margin,
+            idle_clock_mhz: cfg.prefill_opt.idle_clock_mhz,
+        }
+    }
+}
+
+impl DvfsPolicy for PiTbtPolicy {
+    fn name(&self) -> String {
+        "PI-TBT".into()
+    }
+
+    fn ticks(&self) -> Vec<TickSpec> {
+        vec![TickSpec::every(PI_TICK_S)]
+    }
+
+    fn on_tick(&mut self, _kind: usize, _now: f64, view: &PoolView, plan: &mut ClockPlan) {
+        for (w, pv) in view.prefill.iter().enumerate() {
+            plan.prefill_mhz[w] = Some(if pv.busy {
+                self.ladder.max_mhz
+            } else {
+                self.idle_clock_mhz
+            });
+        }
+        for (w, st) in self.workers.iter_mut().enumerate() {
+            let batch = view.decode.get(w).map_or(0, |d| d.batch);
+            if batch == 0 || st.tbt.is_empty() {
+                // Idle worker (or no samples yet): decay toward the ladder
+                // floor. Keying on the batch matters — the TBT window is
+                // count-bounded and never drains, so a stale P95 from the
+                // last burst would otherwise hold (or wind up) the clock on
+                // an empty GPU.
+                st.cur_f =
+                    (st.cur_f - PI_IDLE_DECAY_MHZ_S * PI_TICK_S).max(self.ladder.min_mhz as f64);
+                st.integ = 0.0;
+            } else {
+                // err > 0: TBT above setpoint → raise the clock.
+                let err = st.tbt.p95() / self.target_s - PI_SETPOINT;
+                st.integ = (st.integ + err * PI_TICK_S).clamp(-PI_INTEG_CLAMP, PI_INTEG_CLAMP);
+                let u = PI_KP * err + PI_KI * st.integ;
+                st.cur_f = (st.cur_f + u * PI_TICK_S)
+                    .clamp(self.ladder.min_mhz as f64, self.ladder.max_mhz as f64);
+            }
+            plan.decode_mhz[w] = Some(self.ladder.snap(st.cur_f));
+        }
+    }
+
+    fn on_decode_tbt(&mut self, worker: usize, tbt_s: f64) {
+        self.workers[worker].tbt.record(tbt_s);
+    }
+
+    fn on_decode_tbt_weighted(&mut self, worker: usize, tbt_s: f64, count: u32) {
+        self.workers[worker].tbt.record_weighted(tbt_s, count);
+    }
+
+    fn on_prefill_dispatch(
+        &mut self,
+        _now: f64,
+        _worker: usize,
+        _jobs: &[PrefillJobView],
+    ) -> Option<u32> {
+        Some(self.ladder.max_mhz)
+    }
+
+    fn on_prefill_idle(&mut self, _now: f64, _worker: usize) -> Option<u32> {
+        Some(self.idle_clock_mhz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::telemetry::{DecodeWorkerView, PrefillWorkerView};
+    use crate::gpu::perf::PerfModel;
+    use crate::model::ModelSpec;
+
+    fn cfg(method: Method) -> Config {
+        Config {
+            method,
+            sim_noise: 0.0,
+            ..Config::default()
+        }
+    }
+
+    fn view(prefill_busy: &[bool], decode_batch: &[usize]) -> PoolView {
+        PoolView {
+            now: 1.0,
+            prefill: prefill_busy
+                .iter()
+                .map(|&busy| PrefillWorkerView {
+                    busy,
+                    jobs: Vec::new(),
+                })
+                .collect(),
+            decode: decode_batch
+                .iter()
+                .map(|&batch| DecodeWorkerView {
+                    batch,
+                    avg_ctx: if batch == 0 { 0.0 } else { 400.0 },
+                })
+                .collect(),
+        }
+    }
+
+    fn drive(policy: &mut dyn DvfsPolicy, v: &PoolView) -> ClockPlan {
+        let mut plan = ClockPlan::default();
+        plan.reset(v.prefill.len(), v.decode.len());
+        let specs = policy.ticks();
+        for kind in 0..specs.len() {
+            policy.on_tick(kind, v.now, v, &mut plan);
+        }
+        plan
+    }
+
+    fn build_all() -> Vec<Box<dyn DvfsPolicy>> {
+        let perf = PerfModel::new(ModelSpec::qwen3_14b());
+        let power = PowerModel::a100();
+        [
+            Method::DefaultNv,
+            Method::PrefillSplit,
+            Method::GreenLlm,
+            Method::Fixed(900),
+            Method::Throttle,
+            Method::Agft,
+            Method::PiTbt,
+        ]
+        .into_iter()
+        .map(|m| build(&cfg(m), &perf, &power))
+        .collect()
+    }
+
+    #[test]
+    fn registry_builds_every_method() {
+        let names: Vec<String> = build_all().iter().map(|p| p.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "defaultNV",
+                "PrefillSplit",
+                "GreenLLM",
+                "Fixed900",
+                "Throttle",
+                "AGFT",
+                "PI-TBT"
+            ]
+        );
+    }
+
+    #[test]
+    fn all_planned_clocks_on_ladder() {
+        let ladder = FreqLadder::a100();
+        let v = view(&[true, false], &[3, 0, 12, 1]);
+        for policy in build_all().iter_mut() {
+            let plan = drive(policy.as_mut(), &v);
+            for mhz in plan
+                .prefill_mhz
+                .iter()
+                .chain(plan.decode_mhz.iter())
+                .flatten()
+            {
+                assert!(ladder.contains(*mhz), "{}: off-ladder {mhz}", policy.name());
+            }
+            if let Some(f) = policy.initial_clock_mhz() {
+                assert!(ladder.contains(f));
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_policy_only_sets_initial_clock() {
+        let perf = PerfModel::new(ModelSpec::qwen3_14b());
+        let power = PowerModel::a100();
+        let mut p = build(&cfg(Method::Fixed(750)), &perf, &power);
+        assert_eq!(p.initial_clock_mhz(), Some(750));
+        assert!(p.ticks().is_empty());
+        assert_eq!(p.on_prefill_dispatch(0.0, 0, &[]), None);
+    }
+
+    #[test]
+    fn agft_guardrail_boosts_on_deep_violation() {
+        let mut p = AgftPolicy::new(&cfg(Method::Agft));
+        // Saturate the TBT window far above target (target = 95 ms).
+        p.on_decode_tbt_weighted(0, 0.400, 64);
+        let v = view(&[false, false], &[8, 8, 8, 8]);
+        let plan = drive(&mut p, &v);
+        assert_eq!(plan.decode_mhz[0], Some(1410));
+    }
+
+    #[test]
+    fn agft_learns_downward_under_slack() {
+        let mut p = AgftPolicy::new(&cfg(Method::Agft));
+        let v = view(&[false, false], &[4, 4, 4, 4]);
+        let mut plan = ClockPlan::default();
+        for i in 0..400 {
+            // Persistent slack: tiny TBTs, light token flow.
+            p.on_decode_tbt_weighted(0, 0.010, 4);
+            p.on_decode_tokens(0, i as f64 * 0.25, 40);
+            plan.reset(2, 4);
+            p.on_tick(0, i as f64 * 0.25, &v, &mut plan);
+        }
+        let f = plan.decode_mhz[0].unwrap();
+        assert!(f < 1200, "agft should have learned to lower the clock: {f}");
+    }
+
+    #[test]
+    fn agft_is_deterministic_for_a_seed() {
+        let run = || {
+            let mut p = AgftPolicy::new(&cfg(Method::Agft));
+            let v = view(&[true, false], &[6, 6, 6, 6]);
+            let mut plan = ClockPlan::default();
+            let mut out = Vec::new();
+            for i in 0..100 {
+                p.on_decode_tbt_weighted(0, 0.05 + 0.001 * (i % 7) as f64, 6);
+                p.on_decode_tokens(0, i as f64 * 0.25, 30);
+                plan.reset(2, 4);
+                p.on_tick(0, i as f64 * 0.25, &v, &mut plan);
+                out.push(plan.decode_mhz[0].unwrap());
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn pi_raises_on_violation_and_lowers_on_slack() {
+        let mut p = PiTbtPolicy::new(&cfg(Method::PiTbt));
+        let v = view(&[false, false], &[4, 4, 4, 4]);
+        let mut plan = ClockPlan::default();
+        // Slack: P95 far under the setpoint → clock falls from boost.
+        for _ in 0..40 {
+            p.on_decode_tbt(0, 0.010);
+            plan.reset(2, 4);
+            p.on_tick(0, 1.0, &v, &mut plan);
+        }
+        let low = plan.decode_mhz[0].unwrap();
+        assert!(low < 1410, "slack must lower the clock: {low}");
+        // Violation: P95 over budget → clock climbs back up.
+        let mut p2 = PiTbtPolicy::new(&cfg(Method::PiTbt));
+        for st in p2.workers.iter_mut() {
+            st.cur_f = 600.0;
+        }
+        for _ in 0..40 {
+            p2.on_decode_tbt(0, 0.200);
+            plan.reset(2, 4);
+            p2.on_tick(0, 1.0, &v, &mut plan);
+        }
+        let high = plan.decode_mhz[0].unwrap();
+        assert!(high > 900, "violation must raise the clock: {high}");
+    }
+
+    #[test]
+    fn pi_idle_decays_to_floor() {
+        let mut p = PiTbtPolicy::new(&cfg(Method::PiTbt));
+        let v = view(&[false, false], &[0, 0, 0, 0]);
+        let mut plan = ClockPlan::default();
+        for _ in 0..20 {
+            plan.reset(2, 4);
+            p.on_tick(0, 1.0, &v, &mut plan);
+        }
+        assert_eq!(plan.decode_mhz[0], Some(210));
+    }
+
+    #[test]
+    fn pi_drained_worker_decays_despite_stale_violations() {
+        // Regression: the TBT window never drains, so a worker whose last
+        // rounds were congested must still park once its batch empties.
+        let mut p = PiTbtPolicy::new(&cfg(Method::PiTbt));
+        let busy = view(&[false, false], &[4, 4, 4, 4]);
+        let mut plan = ClockPlan::default();
+        for _ in 0..30 {
+            p.on_decode_tbt(0, 0.300); // deep violation
+            plan.reset(2, 4);
+            p.on_tick(0, 1.0, &busy, &mut plan);
+        }
+        assert_eq!(plan.decode_mhz[0], Some(1410));
+        let idle = view(&[false, false], &[0, 4, 4, 4]);
+        for _ in 0..20 {
+            plan.reset(2, 4);
+            p.on_tick(0, 2.0, &idle, &mut plan);
+        }
+        assert_eq!(plan.decode_mhz[0], Some(210), "stale P95 held an idle GPU hot");
+    }
+
+    #[test]
+    fn agft_drained_worker_parks_despite_stale_violations() {
+        // Same regression for the learner: a stale violation window must
+        // not keep the guardrail pinning an idle GPU at max boost.
+        let mut p = AgftPolicy::new(&cfg(Method::Agft));
+        p.on_decode_tbt_weighted(0, 0.400, 64); // violation episode
+        let busy = view(&[false, false], &[8, 8, 8, 8]);
+        let mut plan = ClockPlan::default();
+        plan.reset(2, 4);
+        p.on_tick(0, 0.25, &busy, &mut plan);
+        assert_eq!(plan.decode_mhz[0], Some(1410));
+        let idle = view(&[false, false], &[0, 8, 8, 8]);
+        for i in 0..40 {
+            plan.reset(2, 4);
+            p.on_tick(0, 0.5 + i as f64 * 0.25, &idle, &mut plan);
+        }
+        assert_eq!(plan.decode_mhz[0], Some(210), "guardrail pinned an idle GPU");
+    }
+
+    #[test]
+    fn nv_policy_prefill_dispatch_draws_like_governor() {
+        let c = cfg(Method::DefaultNv);
+        let mut p = DefaultNvPolicy::new(&c);
+        let f = p.on_prefill_dispatch(0.5, 0, &[]).unwrap();
+        assert!((1290..=1410).contains(&f));
+    }
+
+    #[test]
+    fn throttle_decode_skips_idle_workers() {
+        let perf = PerfModel::new(ModelSpec::qwen3_14b());
+        let power = PowerModel::a100();
+        let mut p = ThrottlePolicy::new(&cfg(Method::Throttle), &perf, &power);
+        let v = view(&[false, false], &[0, 5, 0, 0]);
+        let plan = drive(&mut p, &v);
+        assert_eq!(plan.decode_mhz[0], None);
+        assert!(plan.decode_mhz[1].is_some());
+    }
+}

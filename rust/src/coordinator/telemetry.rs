@@ -1,0 +1,124 @@
+//! Telemetry snapshots and clock plans — the data contract between the
+//! serving engine and a [`DvfsPolicy`](crate::coordinator::policy::DvfsPolicy).
+//!
+//! The engine owns the queues, workers and simulated GPUs; a policy only
+//! ever sees an immutable [`PoolView`] and answers with a [`ClockPlan`]
+//! (telemetry in → per-GPU clock decisions out). Keeping policies pure
+//! this way is what lets the scenario matrix swap governors without
+//! touching the event loop, and what makes the policy layer
+//! property-testable in isolation.
+
+use crate::dvfs::prefill_opt::PrefillJobView;
+
+/// What a policy sees of one prefill worker at a tick.
+#[derive(Debug, Clone, Default)]
+pub struct PrefillWorkerView {
+    /// Does the worker have an in-flight prefill job?
+    pub busy: bool,
+    /// FIFO queue view: the in-flight job heads the list (its remaining
+    /// work over-approximated by its full reference time), followed by the
+    /// backlog; each entry carries its absolute TTFT deadline. Populated
+    /// only for ticks that request it ([`TickSpec::prefill_jobs`]) — the
+    /// walk costs O(queue) per worker.
+    pub jobs: Vec<PrefillJobView>,
+}
+
+/// What a policy sees of one decode worker at a tick.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecodeWorkerView {
+    /// Streams currently batched on the worker.
+    pub batch: usize,
+    /// Mean context length across those streams (0 when idle).
+    pub avg_ctx: f64,
+}
+
+/// Snapshot of both pools at one instant of virtual time.
+#[derive(Debug, Clone, Default)]
+pub struct PoolView {
+    pub now: f64,
+    pub prefill: Vec<PrefillWorkerView>,
+    pub decode: Vec<DecodeWorkerView>,
+}
+
+/// Per-worker clock decisions returned from a policy tick. `None` holds
+/// the worker's current application clock.
+#[derive(Debug, Clone, Default)]
+pub struct ClockPlan {
+    pub prefill_mhz: Vec<Option<u32>>,
+    pub decode_mhz: Vec<Option<u32>>,
+}
+
+impl ClockPlan {
+    /// Clear all decisions and size the plan to the pool shapes.
+    pub fn reset(&mut self, prefill_workers: usize, decode_workers: usize) {
+        self.prefill_mhz.clear();
+        self.prefill_mhz.resize(prefill_workers, None);
+        self.decode_mhz.clear();
+        self.decode_mhz.resize(decode_workers, None);
+    }
+}
+
+/// One periodic callback a policy asks the engine to schedule. The index
+/// of a spec in [`DvfsPolicy::ticks`](crate::coordinator::policy::DvfsPolicy::ticks)
+/// is the `kind` passed back to `on_tick`.
+#[derive(Debug, Clone, Copy)]
+pub struct TickSpec {
+    pub interval_s: f64,
+    /// Fill [`PrefillWorkerView::jobs`] for this tick.
+    pub prefill_jobs: bool,
+    /// Fill [`PoolView::decode`] for this tick (costs an O(streams) scan
+    /// per decode worker; policies whose tick never reads the decode view
+    /// — e.g. GreenLLM's controller-state ticks — opt out).
+    pub decode_view: bool,
+}
+
+impl TickSpec {
+    pub fn every(interval_s: f64) -> TickSpec {
+        TickSpec {
+            interval_s,
+            prefill_jobs: false,
+            decode_view: true,
+        }
+    }
+
+    pub fn with_prefill_jobs(interval_s: f64) -> TickSpec {
+        TickSpec {
+            interval_s,
+            prefill_jobs: true,
+            decode_view: true,
+        }
+    }
+
+    /// Skip decode-view construction for this tick.
+    pub fn without_decode_view(mut self) -> TickSpec {
+        self.decode_view = false;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_plan_reset_sizes_and_clears() {
+        let mut p = ClockPlan::default();
+        p.reset(2, 4);
+        assert_eq!(p.prefill_mhz, vec![None, None]);
+        assert_eq!(p.decode_mhz.len(), 4);
+        p.decode_mhz[1] = Some(900);
+        p.reset(2, 4);
+        assert_eq!(p.decode_mhz[1], None);
+    }
+
+    #[test]
+    fn tick_spec_constructors() {
+        assert!(!TickSpec::every(0.2).prefill_jobs);
+        assert!(TickSpec::with_prefill_jobs(0.1).prefill_jobs);
+        assert_eq!(TickSpec::every(0.2).interval_s, 0.2);
+        assert!(TickSpec::every(0.2).decode_view);
+        let slim = TickSpec::every(0.02).without_decode_view();
+        assert!(!slim.decode_view);
+        assert_eq!(slim.interval_s, 0.02);
+    }
+}

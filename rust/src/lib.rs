@@ -16,11 +16,15 @@
 //! * [`model`] — model specs + the Eq. (1) FLOPs/bytes cost model.
 //! * [`workload`] — Alibaba/Azure-like trace generators, microbenchmarks.
 //! * [`metrics`], [`slo`] — telemetry + SLO accounting.
-//! * [`coordinator`] — router, queues, pools, the serving engine.
-//! * [`dvfs`] — governors: defaultNV baseline, prefill optimizer,
-//!   dual-loop decode controller (the paper's contribution).
-//! * [`runtime`], [`server`] — PJRT artifact engine + real serving loop.
-//! * [`bench`] — regeneration drivers for every paper table and figure.
+//! * [`coordinator`] — router, queues, pools, the serving engine, and the
+//!   pluggable `DvfsPolicy` layer every governor implements (see
+//!   `coordinator::policy` for the registry and the trait contract).
+//! * [`dvfs`] — controller building blocks: defaultNV baseline, prefill
+//!   optimizer, dual-loop decode controller (the paper's contribution).
+//! * [`runtime`], [`server`] — PJRT artifact engine + real serving loop
+//!   (compiled against `runtime::xla_stub` offline).
+//! * [`bench`] — regeneration drivers for every paper table and figure,
+//!   plus the scenario-matrix harness (`bench::matrix`).
 
 pub mod config;
 pub mod coordinator;

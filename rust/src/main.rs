@@ -12,14 +12,14 @@
 //!
 //! Common flags: --duration <s> --seed <n> --model <name> --config <toml>.
 
-use anyhow::{anyhow, Result};
+use greenllm::bench::matrix::TraceSpec;
 use greenllm::bench::{self, figures, tables};
 use greenllm::config::{Config, Method};
 use greenllm::coordinator::engine::{run, RunOptions};
 use greenllm::server::{ServerConfig, ServerHandle};
 use greenllm::util::cli::Args;
+use greenllm::util::error::{anyhow, Result};
 use greenllm::workload::alibaba::{self, ChatParams};
-use greenllm::workload::azure::{self, AzureKind, AzureParams};
 use greenllm::workload::request::Trace;
 use greenllm::workload::synthetic;
 
@@ -109,6 +109,7 @@ fn dispatch(args: &Args) -> Result<()> {
             bench::baselines::baselines(duration, seed);
             Ok(())
         }
+        "matrix" => matrix_cmd(args, duration, seed),
         "cluster" => cluster_cmd(args, duration, seed),
         "serve" => serve(args),
         "" | "help" | "--help" => {
@@ -140,14 +141,15 @@ fn base_config(args: &Args, seed: u64) -> Result<Config> {
 fn trace_from_args(args: &Args, duration: f64, seed: u64) -> Result<Trace> {
     let name = args.get_or("trace", "alibaba");
     let qps = args.f64_or("qps", 5.0)?;
+    // `alibaba`/`chat` honour --qps; everything else resolves through the
+    // scenario-matrix registry so `replay --trace X` and `matrix --traces X`
+    // can never drift apart.
     Ok(match name {
         "alibaba" | "chat" => alibaba::generate(&ChatParams::new(qps, duration), seed),
-        "azure_code5" => azure::generate(&AzureParams::new(AzureKind::Code, 5, duration), seed),
-        "azure_code8" => azure::generate(&AzureParams::new(AzureKind::Code, 8, duration), seed),
-        "azure_conv5" => azure::generate(&AzureParams::new(AzureKind::Conv, 5, duration), seed),
-        "azure_conv8" => azure::generate(&AzureParams::new(AzureKind::Conv, 8, duration), seed),
-        "sinusoid" => synthetic::sinusoid_decode(400.0, 2600.0, 120.0, duration, seed),
-        other => return Err(anyhow!("unknown trace {other:?}")),
+        other => match TraceSpec::parse(other) {
+            Some(spec) => spec.generate(duration, seed),
+            None => return Err(anyhow!("unknown trace {other:?}")),
+        },
     })
 }
 
@@ -220,6 +222,44 @@ fn microbench(args: &Args, duration: f64, seed: u64) -> Result<()> {
         r.slo.tbt_hist.p90() * 1000.0,
         r.total_energy_j / 1e3
     );
+    Ok(())
+}
+
+fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
+    use greenllm::bench::matrix::{matrix, MatrixConfig};
+    let mut cfg = MatrixConfig {
+        model: args.get_or("model", "qwen3-14b").to_string(),
+        duration_s: duration,
+        seed,
+        threads: args.usize_or("threads", 0)?,
+        ..MatrixConfig::default()
+    };
+    if let Some(spec) = args.get("traces") {
+        cfg.traces = spec
+            .split(',')
+            .map(|s| TraceSpec::parse(s).ok_or_else(|| anyhow!("unknown trace {s:?}")))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(spec) = args.get("methods") {
+        cfg.methods = spec
+            .split(',')
+            .map(|s| Method::parse(s.trim()).ok_or_else(|| anyhow!("unknown method {s:?}")))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(spec) = args.get("margins") {
+        cfg.margins = spec
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("bad margin {s:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if cfg.traces.is_empty() || cfg.methods.is_empty() || cfg.margins.is_empty() {
+        return Err(anyhow!("matrix needs at least one trace, method and margin"));
+    }
+    matrix(&cfg, args.get("json"), args.get("md"));
     Ok(())
 }
 
@@ -326,14 +366,19 @@ COMMANDS
               regenerate a paper figure
   table3 table4 ablations baselines cluster
               regenerate a paper table
+  matrix      scenario matrix: traces x policies x margins across threads
+              (--traces a,b --methods a,b --margins 0.9,1.0 --threads N
+               --json out.json --md out.md)
   serve       end-to-end PJRT serving demo (needs `make artifacts`)
 
 FLAGS
   --duration <s>        trace duration (default 300)
   --seed <n>            RNG seed (default 42)
   --model <name>        qwen3-14b | qwen3-30b-moe
-  --method <name>       defaultnv | prefillsplit | greenllm | fixed<MHz>
-  --trace <name>        alibaba | azure_code5|8 | azure_conv5|8 | sinusoid
+  --method <name>       defaultnv | prefillsplit | greenllm | fixed<MHz> |
+                        throttle | agft | pitbt
+  --trace <name>        alibaba | azure_code5|8 | azure_conv5|8 | sinusoid |
+                        bursty
   --qps <f>             alibaba chat rate
   --prefill-margin <f>  SLO margin factor (Fig. 12)
   --decode-margin <f>   SLO margin factor (Fig. 12)

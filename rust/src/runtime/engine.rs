@@ -7,7 +7,10 @@
 //! manifest ABI.
 
 use crate::runtime::manifest::Manifest;
-use anyhow::{anyhow, Context, Result};
+// Offline builds compile against the API-compatible stub; swap this alias
+// for the real `xla` crate to run on actual PJRT (see xla_stub docs).
+use crate::runtime::xla_stub as xla;
+use crate::util::error::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 

@@ -2,8 +2,8 @@
 //! and the Rust runtime: model shape, parameter ABI order, shape buckets,
 //! file names and numeric test vectors.
 
+use crate::util::error::{anyhow, Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone)]

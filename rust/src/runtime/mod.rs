@@ -7,6 +7,7 @@ pub mod engine;
 pub mod kv_cache;
 pub mod manifest;
 pub mod tokenizer;
+pub mod xla_stub;
 
 pub use engine::TinyLmEngine;
 pub use kv_cache::KvBlockAllocator;

@@ -1,0 +1,192 @@
+//! Offline stand-in for the `xla` crate (PJRT C API bindings).
+//!
+//! The container image used for CI has no crates.io access and no PJRT
+//! plugin, so the runtime engine compiles against this API-compatible stub
+//! instead. Every entry point that would reach the real PJRT runtime
+//! returns [`XlaError`]; the pure-Rust surface (`Literal` packing) works,
+//! which keeps the engine's shape/ABI logic compilable and testable.
+//!
+//! To run against real PJRT, vendor the actual `xla` crate and replace the
+//! `use crate::runtime::xla_stub as xla;` alias in `runtime::engine` with
+//! the extern crate — the engine code itself needs no changes.
+
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` closely enough for `{e:?}` formatting.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT backend not available in this build (offline xla stub)"
+    ))
+}
+
+/// Host literal: flat data + shape. Only the packing/reshaping surface the
+/// engine uses on the host side is implemented.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data_f32: Vec<f32>,
+    data_i32: Vec<i32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    fn from_parts(data_f32: Vec<f32>, data_i32: Vec<i32>, dims: Vec<i64>) -> Literal {
+        Literal {
+            data_f32,
+            data_i32,
+            dims,
+        }
+    }
+
+    /// Rank-1 literal from a slice (f32 or i32 via the `LiteralElem` impls).
+    pub fn vec1<T: LiteralElem>(v: &[T]) -> Literal {
+        T::vec1(v)
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let n: i64 = dims.iter().product();
+        let have = self.data_f32.len().max(self.data_i32.len()) as i64;
+        if n != have {
+            return Err(XlaError(format!("reshape {dims:?}: have {have} elements")));
+        }
+        Ok(Literal::from_parts(
+            self.data_f32.clone(),
+            self.data_i32.clone(),
+            dims.to_vec(),
+        ))
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Decompose a tuple literal — tuples only exist device-side, so the
+    /// stub can never produce one.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable("to_tuple"))
+    }
+
+    /// Copy out typed host data.
+    pub fn to_vec<T: LiteralElem>(&self) -> Result<Vec<T>, XlaError> {
+        T::to_vec(self)
+    }
+}
+
+impl From<i32> for Literal {
+    fn from(v: i32) -> Literal {
+        Literal::from_parts(Vec::new(), vec![v], Vec::new())
+    }
+}
+
+/// Element types a [`Literal`] can carry in the stub.
+pub trait LiteralElem: Sized {
+    fn vec1(v: &[Self]) -> Literal;
+    fn to_vec(lit: &Literal) -> Result<Vec<Self>, XlaError>;
+}
+
+impl LiteralElem for f32 {
+    fn vec1(v: &[f32]) -> Literal {
+        Literal::from_parts(v.to_vec(), Vec::new(), vec![v.len() as i64])
+    }
+    fn to_vec(lit: &Literal) -> Result<Vec<f32>, XlaError> {
+        Ok(lit.data_f32.clone())
+    }
+}
+
+impl LiteralElem for i32 {
+    fn vec1(v: &[i32]) -> Literal {
+        Literal::from_parts(Vec::new(), v.to_vec(), vec![v.len() as i64])
+    }
+    fn to_vec(lit: &Literal) -> Result<Vec<i32>, XlaError> {
+        Ok(lit.data_i32.clone())
+    }
+}
+
+/// Parsed HLO module handle (never constructible offline).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable(&format!("parse HLO {path:?}")))
+    }
+}
+
+/// Computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle (construction always fails offline).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable("compile"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable("execute"))
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_pack_and_reshape() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(l.reshape(&[4, 4]).is_err());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let l = Literal::vec1(&[1.5f32, -2.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.5, -2.0]);
+    }
+
+    #[test]
+    fn device_paths_fail_offline() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file(Path::new("x.hlo.txt")).is_err());
+        let lit = Literal::from(3);
+        assert!(lit.to_tuple().is_err());
+    }
+}

@@ -12,7 +12,7 @@
 use crate::runtime::kv_cache::KvBlockAllocator;
 use crate::runtime::tokenizer::ByteTokenizer;
 use crate::runtime::TinyLmEngine;
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::mpsc;

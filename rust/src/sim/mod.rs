@@ -40,10 +40,13 @@ impl<E> PartialOrd for Entry<E> {
 impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for min-heap: earlier time first, then lower seq.
+        // total_cmp is NaN-safe: the old partial_cmp(..).unwrap_or(Equal)
+        // silently corrupted heap order if a NaN ever reached the heap
+        // (schedule() now rejects non-finite times outright, so this is
+        // defense in depth).
         other
             .t
-            .partial_cmp(&self.t)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.t)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -63,8 +66,14 @@ impl<E> EventQueue<E> {
         self.now
     }
 
-    /// Schedule an event at absolute time `t` (>= now).
+    /// Schedule an event at absolute time `t` (>= now, finite).
+    ///
+    /// Non-finite timestamps are rejected loudly: a NaN used to be clamped
+    /// to `now` by the `max` below and +inf would park forever in the
+    /// heap — both silently corrupt a replay, so they are programming
+    /// errors, not schedulable states.
     pub fn schedule(&mut self, t: f64, ev: E) {
+        assert!(t.is_finite(), "non-finite event time {t} (now={})", self.now);
         debug_assert!(
             t + 1e-9 >= self.now,
             "scheduling into the past: t={t} now={}",
@@ -79,8 +88,10 @@ impl<E> EventQueue<E> {
         self.seq += 1;
     }
 
-    /// Schedule an event `dt` seconds from now.
+    /// Schedule an event `dt` seconds from now (`dt` must be finite; a
+    /// NaN would otherwise be masked by the `max` below).
     pub fn schedule_in(&mut self, dt: f64, ev: E) {
+        assert!(dt.is_finite(), "non-finite event delay {dt}");
         self.schedule(self.now + dt.max(0.0), ev);
     }
 
@@ -184,5 +195,49 @@ mod tests {
         q.schedule(5.0 - 1e-12, 2); // numerically "past" within tolerance
         let (t, _) = q.pop().unwrap();
         assert!(t >= 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_timestamp_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_timestamp_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::INFINITY, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event delay")]
+    fn nan_relative_delay_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule_in(f64::NAN, ());
+    }
+
+    #[test]
+    fn heap_order_survives_adversarial_finite_times() {
+        // Regression for the partial_cmp(..).unwrap_or(Equal) hazard: a
+        // dense mix of equal, denormal and extreme-but-finite times must
+        // still pop in (time, fifo) order.
+        let times = [0.0, 1e-308, 5e-324, 1.0, 1.0, 1e308, 0.5, 0.0];
+        let mut q = EventQueue::new();
+        for (i, &t) in times.iter().enumerate() {
+            q.schedule(t, i);
+        }
+        let mut popped = Vec::new();
+        while let Some((t, i)) = q.pop() {
+            popped.push((t, i));
+        }
+        for w in popped.windows(2) {
+            assert!(
+                w[0].0 < w[1].0 || (w[0].0 == w[1].0 && w[0].1 < w[1].1),
+                "order violated: {w:?}"
+            );
+        }
+        assert_eq!(popped.len(), times.len());
     }
 }

@@ -1,0 +1,165 @@
+//! Minimal `anyhow`-compatible error type (anyhow is not in the offline
+//! mirror).
+//!
+//! Provides the subset the crate uses: an opaque boxed-message [`Error`],
+//! a defaulted [`Result`] alias, the [`anyhow!`](crate::anyhow) macro and
+//! the [`Context`] extension trait. `Error` deliberately does *not*
+//! implement `std::error::Error`, so the blanket
+//! `From<E: std::error::Error>` conversion below can coexist with the
+//! language's reflexive `From<Error> for Error`.
+
+use std::fmt;
+
+/// Opaque error: a message plus an optional chain of context frames.
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            context: Vec::new(),
+        }
+    }
+
+    /// Push a higher-level context frame (outermost printed first).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.context.push(c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` prints the full chain, like anyhow's alternate format.
+        if f.alternate() && !self.context.is_empty() {
+            for c in self.context.iter().rev() {
+                write!(f, "{c}: ")?;
+            }
+        } else if let Some(outer) = self.context.last() {
+            return write!(f, "{outer}");
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Drop-in for the `anyhow!` macro.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+pub use crate::anyhow;
+
+/// Drop-in for `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let plain = anyhow!("plain");
+        assert_eq!(plain.to_string(), "plain");
+        let n = 7;
+        let captured = anyhow!("n={n}");
+        assert_eq!(captured.to_string(), "n=7");
+        let formatted = anyhow!("{} and {}", 1, 2);
+        assert_eq!(formatted.to_string(), "1 and 2");
+        let from_string = anyhow!(String::from("owned"));
+        assert_eq!(from_string.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: gone");
+        assert_eq!(format!("{e:?}"), "loading manifest: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = Context::context(v, "missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Context::context(Some(3), "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(1);
+        let v = ok
+            .with_context(|| -> &'static str { panic!("must not evaluate on Ok") })
+            .unwrap();
+        assert_eq!(v, 1);
+    }
+}

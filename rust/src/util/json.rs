@@ -1,8 +1,10 @@
-//! Minimal JSON parser — enough to read `artifacts/manifest.json`.
+//! Minimal JSON parser + emitter — enough to read
+//! `artifacts/manifest.json` and write scenario-matrix reports.
 //!
 //! (serde_json is not in the offline mirror.) Full value model, recursive
 //! descent, UTF-8 strings with standard escapes; numbers parsed as f64
-//! (manifest values fit exactly).
+//! (manifest values fit exactly). Emission uses Rust's shortest-roundtrip
+//! float formatting, so `parse(dump(v)) == v` for finite numbers.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -81,6 +83,69 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Serialize compactly (no whitespace). Non-finite numbers become
+    /// `null` (JSON has no NaN/inf).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&n.to_string());
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -301,5 +366,31 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn dump_roundtrips() {
+        let text = r#"{"a": [1, 2.5, -3e2], "b": {"nested": "va\"l\nue"}, "c": true,
+                       "d": null, "e": []}"#;
+        let v = Json::parse(text).unwrap();
+        let dumped = v.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), v);
+        // Compact: no spaces outside strings.
+        assert!(!dumped.contains(": "));
+    }
+
+    #[test]
+    fn dump_formats_numbers_minimally() {
+        assert_eq!(Json::Num(42.0).dump(), "42");
+        assert_eq!(Json::Num(-1.5).dump(), "-1.5");
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+    }
+
+    #[test]
+    fn dump_escapes_control_chars() {
+        let v = Json::Str("a\u{1}b\tc".into());
+        assert_eq!(v.dump(), "\"a\\u0001b\\tc\"");
+        assert_eq!(Json::parse(&v.dump()).unwrap(), v);
     }
 }

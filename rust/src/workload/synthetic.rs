@@ -122,6 +122,73 @@ pub fn sinusoid_decode(
     }
 }
 
+/// Markov-modulated bursty workload: arrivals alternate between a calm
+/// Poisson regime (`base_qps`) and bursts at `burst_qps`, with
+/// exponentially distributed regime durations. This is the stress case
+/// for coarse-loop hysteresis and band adaptation: TPS demand jumps by an
+/// order of magnitude in well under one adaptation window.
+pub fn bursty(
+    base_qps: f64,
+    burst_qps: f64,
+    mean_calm_s: f64,
+    mean_burst_s: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Trace {
+    assert!(burst_qps >= base_qps && base_qps > 0.0);
+    assert!(mean_calm_s > 0.0 && mean_burst_s > 0.0);
+    let mut rng = Pcg64::new(seed, 0xB5257);
+    // Pre-draw the regime switch times (state starts calm).
+    let mut switches = Vec::new();
+    let mut ts = 0.0;
+    let mut burst = false;
+    while ts < duration_s {
+        let mean = if burst { mean_burst_s } else { mean_calm_s };
+        ts += rng.exponential(1.0 / mean);
+        switches.push(ts);
+        burst = !burst;
+    }
+    // Arrivals by thinning against the peak rate.
+    let peak = burst_qps.max(base_qps);
+    let mut requests = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0;
+    let mut idx = 0;
+    let mut in_burst = false;
+    loop {
+        t += rng.exponential(peak);
+        if t >= duration_s {
+            break;
+        }
+        while idx < switches.len() && t >= switches[idx] {
+            in_burst = !in_burst;
+            idx += 1;
+        }
+        let rate = if in_burst { burst_qps } else { base_qps };
+        if !rng.chance(rate / peak) {
+            continue;
+        }
+        // Chat-like mix: mostly short/medium prompts, a heavy long tail.
+        let prompt_len = if rng.chance(0.10) {
+            (rng.pareto(1024.0, 1.8) as u32).clamp(1024, 8192)
+        } else {
+            (rng.lognormal((256.0_f64).ln(), 0.8) as u32).clamp(16, 1023)
+        };
+        requests.push(Request {
+            id,
+            arrival_s: t,
+            prompt_len,
+            output_len: (rng.lognormal((180.0_f64).ln(), 0.6) as u32).clamp(1, 1024),
+        });
+        id += 1;
+    }
+    Trace {
+        name: format!("bursty_{base_qps}-{burst_qps}qps"),
+        duration_s,
+        requests,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,11 +237,45 @@ mod tests {
     }
 
     #[test]
+    fn bursty_is_deterministic_and_bimodal() {
+        let a = bursty(2.0, 20.0, 30.0, 10.0, 600.0, 11);
+        let b = bursty(2.0, 20.0, 30.0, 10.0, 600.0, 11);
+        assert_eq!(a.requests, b.requests);
+        // Mean rate must sit strictly between the two regimes.
+        let qps = a.qps();
+        assert!(qps > 2.0 && qps < 20.0, "qps={qps}");
+        // Busiest 10 s window should be far hotter than the calmest.
+        let counts: Vec<usize> = (0..60)
+            .map(|w| {
+                let (lo, hi) = (w as f64 * 10.0, (w + 1) as f64 * 10.0);
+                a.requests
+                    .iter()
+                    .filter(|r| r.arrival_s >= lo && r.arrival_s < hi)
+                    .count()
+            })
+            .collect();
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max >= 3 * (min + 1), "max={max} min={min}");
+    }
+
+    #[test]
+    fn bursty_has_long_tail_prompts() {
+        let t = bursty(3.0, 15.0, 20.0, 10.0, 600.0, 5);
+        let longs = t.requests.iter().filter(|r| r.prompt_len >= 1024).count();
+        assert!(longs > 0, "expected some long prompts");
+        assert!(longs < t.requests.len() / 4, "long tail should be a tail");
+        assert!(t.requests.iter().all(|r| r.prompt_len <= 8192));
+        assert!(t.requests.iter().all(|r| (1..=1024).contains(&r.output_len)));
+    }
+
+    #[test]
     fn sorted_and_bounded() {
         for t in [
             prefill_microbench(2000.0, 256, 1024, 100.0, 1),
             decode_microbench(500.0, 100.0, 1),
             sinusoid_decode(200.0, 1000.0, 60.0, 100.0, 1),
+            bursty(2.0, 12.0, 30.0, 10.0, 100.0, 1),
         ] {
             t.assert_sorted();
             assert!(t.requests.iter().all(|r| r.arrival_s < t.duration_s));

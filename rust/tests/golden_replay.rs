@@ -1,0 +1,291 @@
+//! Golden determinism suite: the regression net under the benchmark
+//! trajectory.
+//!
+//! Two layers of pinning:
+//!  1. *Replay determinism* — the same seeded trace replayed twice per
+//!     method must be bit-identical (energy, SLO rates, token counts,
+//!     event counts). This catches any nondeterminism introduced into the
+//!     engine/policy stack, on any machine.
+//!  2. *Golden snapshot* — results are compared against the committed
+//!     snapshot at `tests/golden/golden_replay.txt`. Integer fields
+//!     (completed, tokens) are hard-pinned. Float fields are stored as hex
+//!     f64 bit patterns; a `pending` sentinel means "pin on first run":
+//!     the test fills them in and passes, and subsequent runs on that
+//!     checkout compare bit-exactly. Re-bless after an intentional change
+//!     with `GREENLLM_BLESS=1 cargo test --test golden_replay`.
+
+use greenllm::config::{Config, Method};
+use greenllm::coordinator::engine::{run, RunOptions, RunResult};
+use greenllm::workload::request::{Request, Trace};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+const SEED: u64 = 7;
+
+/// Every method in the comparison set, old and new.
+fn methods() -> Vec<Method> {
+    vec![
+        Method::DefaultNv,
+        Method::PrefillSplit,
+        Method::GreenLlm,
+        Method::Fixed(900),
+        Method::Throttle,
+        Method::Agft,
+        Method::PiTbt,
+    ]
+}
+
+/// Hand-written, RNG-free mini trace: 24 requests at 4 QPS with cycling
+/// shapes (includes a long prompt for the routing path and a prefill-only
+/// request). Structural totals: 24 completions, 6 × (8+24+1+16) = 294
+/// generated tokens — pinned as integers below.
+fn golden_trace() -> Trace {
+    let prompts = [128u32, 512, 1536, 256];
+    let outputs = [8u32, 24, 1, 16];
+    let requests = (0..24)
+        .map(|i| Request {
+            id: i as u64,
+            arrival_s: i as f64 * 0.25,
+            prompt_len: prompts[i % 4],
+            output_len: outputs[i % 4],
+        })
+        .collect();
+    Trace {
+        name: "golden-v1".into(),
+        duration_s: 6.0,
+        requests,
+    }
+}
+
+fn run_once(method: Method) -> RunResult {
+    let cfg = Config {
+        method,
+        seed: SEED,
+        ..Config::default()
+    };
+    run(&cfg, &golden_trace(), &RunOptions::default())
+}
+
+#[test]
+fn replay_twice_is_bit_identical_per_method() {
+    for method in methods() {
+        let a = run_once(method);
+        let b = run_once(method);
+        assert_eq!(
+            a.total_energy_j.to_bits(),
+            b.total_energy_j.to_bits(),
+            "{method:?}: total energy drifted between replays"
+        );
+        assert_eq!(a.prefill_energy_j.to_bits(), b.prefill_energy_j.to_bits());
+        assert_eq!(a.decode_energy_j.to_bits(), b.decode_energy_j.to_bits());
+        assert_eq!(a.generated_tokens, b.generated_tokens, "{method:?}");
+        assert_eq!(a.completed, b.completed, "{method:?}");
+        assert_eq!(a.events_processed, b.events_processed, "{method:?}");
+        assert_eq!(
+            a.slo.ttft_pass_rate().to_bits(),
+            b.slo.ttft_pass_rate().to_bits()
+        );
+        assert_eq!(
+            a.slo.tbt_pass_rate().to_bits(),
+            b.slo.tbt_pass_rate().to_bits()
+        );
+    }
+}
+
+#[test]
+fn structural_totals_are_exact_for_every_method() {
+    for method in methods() {
+        let r = run_once(method);
+        assert_eq!(r.completed, 24, "{method:?}");
+        assert_eq!(r.generated_tokens, 294, "{method:?}");
+        assert!(r.total_energy_j > 0.0 && r.total_energy_j.is_finite());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot plumbing
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+struct GoldenRow {
+    method: String,
+    completed: u64,
+    tokens: u64,
+    /// None = `pending` (not yet pinned on this checkout).
+    events: Option<u64>,
+    energy_bits: Option<u64>,
+    ttft_bits: Option<u64>,
+    tbt_bits: Option<u64>,
+}
+
+impl GoldenRow {
+    /// Any float field not yet pinned on this checkout?
+    fn pending(&self) -> bool {
+        self.events.is_none()
+            || self.energy_bits.is_none()
+            || self.ttft_bits.is_none()
+            || self.tbt_bits.is_none()
+    }
+
+    fn from_result(r: &RunResult) -> GoldenRow {
+        GoldenRow {
+            method: r.method.name(),
+            completed: r.completed,
+            tokens: r.generated_tokens,
+            events: Some(r.events_processed),
+            energy_bits: Some(r.total_energy_j.to_bits()),
+            ttft_bits: Some(r.slo.ttft_pass_rate().to_bits()),
+            tbt_bits: Some(r.slo.tbt_pass_rate().to_bits()),
+        }
+    }
+
+    fn parse(line: &str) -> Option<GoldenRow> {
+        let mut parts = line.split_whitespace();
+        let method = parts.next()?.to_string();
+        let mut row = GoldenRow {
+            method,
+            completed: 0,
+            tokens: 0,
+            events: None,
+            energy_bits: None,
+            ttft_bits: None,
+            tbt_bits: None,
+        };
+        for kv in parts {
+            let (k, v) = kv.split_once('=')?;
+            let pinned_u64 = |v: &str| -> Option<Option<u64>> {
+                if v == "pending" {
+                    Some(None)
+                } else {
+                    v.parse::<u64>().ok().map(Some)
+                }
+            };
+            let pinned_hex = |v: &str| -> Option<Option<u64>> {
+                if v == "pending" {
+                    Some(None)
+                } else {
+                    u64::from_str_radix(v.trim_start_matches("0x"), 16)
+                        .ok()
+                        .map(Some)
+                }
+            };
+            match k {
+                "completed" => row.completed = v.parse().ok()?,
+                "tokens" => row.tokens = v.parse().ok()?,
+                "events" => row.events = pinned_u64(v)?,
+                "energy" => row.energy_bits = pinned_hex(v)?,
+                "ttft" => row.ttft_bits = pinned_hex(v)?,
+                "tbt" => row.tbt_bits = pinned_hex(v)?,
+                _ => return None,
+            }
+        }
+        Some(row)
+    }
+
+    fn render(&self) -> String {
+        let hex = |v: &Option<u64>| match v {
+            Some(bits) => format!("0x{bits:016x}"),
+            None => "pending".to_string(),
+        };
+        let num = |v: &Option<u64>| match v {
+            Some(n) => n.to_string(),
+            None => "pending".to_string(),
+        };
+        format!(
+            "{} completed={} tokens={} events={} energy={} ttft={} tbt={}",
+            self.method,
+            self.completed,
+            self.tokens,
+            num(&self.events),
+            hex(&self.energy_bits),
+            hex(&self.ttft_bits),
+            hex(&self.tbt_bits),
+        )
+    }
+}
+
+fn snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/golden_replay.txt")
+}
+
+fn render_snapshot(rows: &[GoldenRow]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "# GreenLLM golden replay snapshot - trace golden-v1 (24 requests, 294 tokens), seed 7.\n",
+    );
+    out.push_str(
+        "# Float fields are hex f64 bit patterns; `pending` pins on the first test run.\n",
+    );
+    out.push_str(
+        "# Re-bless after intentional changes: GREENLLM_BLESS=1 cargo test --test golden_replay\n",
+    );
+    for row in rows {
+        let _ = writeln!(out, "{}", row.render());
+    }
+    out
+}
+
+#[test]
+fn matches_committed_golden_snapshot() {
+    let path = snapshot_path();
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("golden snapshot missing at {path:?}: {e}"));
+    let committed: Vec<GoldenRow> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+        .map(|l| GoldenRow::parse(l).unwrap_or_else(|| panic!("bad golden line: {l}")))
+        .collect();
+
+    let actual: Vec<GoldenRow> = methods()
+        .iter()
+        .map(|&m| GoldenRow::from_result(&run_once(m)))
+        .collect();
+    assert_eq!(
+        committed.len(),
+        actual.len(),
+        "method set changed; re-bless the snapshot"
+    );
+
+    let bless = std::env::var("GREENLLM_BLESS").is_ok();
+    let has_pending = committed.iter().any(GoldenRow::pending);
+
+    // Every *pinned* field is compared, even when sibling fields are still
+    // pending; only unpinned fields are exempt until their first run.
+    if !bless {
+        for (c, a) in committed.iter().zip(&actual) {
+            assert_eq!(c.method, a.method, "method order changed; re-bless");
+            assert_eq!(c.completed, a.completed, "{}: completed drifted", c.method);
+            assert_eq!(c.tokens, a.tokens, "{}: token count drifted", c.method);
+            let pinned = [
+                ("events", c.events, a.events),
+                ("energy", c.energy_bits, a.energy_bits),
+                ("ttft", c.ttft_bits, a.ttft_bits),
+                ("tbt", c.tbt_bits, a.tbt_bits),
+            ];
+            for (field, committed_v, actual_v) in pinned {
+                if let Some(v) = committed_v {
+                    assert_eq!(
+                        Some(v),
+                        actual_v,
+                        "{}: golden {field} mismatch.\n committed: {}\n actual:    {}\n\
+                         If this change is intentional, re-bless with \
+                         GREENLLM_BLESS=1 cargo test --test golden_replay",
+                        c.method,
+                        c.render(),
+                        a.render()
+                    );
+                }
+            }
+        }
+    }
+
+    if bless || has_pending {
+        std::fs::write(&path, render_snapshot(&actual))
+            .unwrap_or_else(|e| panic!("cannot pin golden snapshot {path:?}: {e}"));
+        eprintln!(
+            "golden snapshot pinned at {path:?} ({} rows){}",
+            actual.len(),
+            if bless { " [blessed]" } else { " [first run]" }
+        );
+    }
+}

@@ -1,0 +1,260 @@
+//! Property tests over the DVFS policy layer: every governor, fed
+//! arbitrary telemetry, only ever emits clocks from the GPU's supported
+//! ladder; and the decode controller's hysteresis never flips coarse
+//! bands in opposite directions within one hold window.
+
+use greenllm::config::{Config, DecodeCtlConfig, Method};
+use greenllm::coordinator::engine::{run, RunOptions};
+use greenllm::coordinator::policy::{build, DvfsPolicy};
+use greenllm::coordinator::telemetry::{ClockPlan, DecodeWorkerView, PoolView, PrefillWorkerView};
+use greenllm::dvfs::decode_ctl::DecodeController;
+use greenllm::dvfs::prefill_opt::PrefillJobView;
+use greenllm::dvfs::profiler::BandTable;
+use greenllm::gpu::freq::FreqLadder;
+use greenllm::gpu::perf::PerfModel;
+use greenllm::gpu::power::PowerModel;
+use greenllm::model::ModelSpec;
+use greenllm::prop_assert;
+use greenllm::util::ptest::check;
+use greenllm::util::rng::Pcg64;
+use greenllm::workload::alibaba::{generate, ChatParams};
+
+fn random_method(g: &mut Pcg64) -> Method {
+    match g.index(7) {
+        0 => Method::DefaultNv,
+        1 => Method::PrefillSplit,
+        2 => Method::GreenLlm,
+        3 => Method::Throttle,
+        4 => Method::Agft,
+        5 => Method::PiTbt,
+        _ => Method::Fixed(FreqLadder::a100().snap(g.range_f64(210.0, 1410.0))),
+    }
+}
+
+fn random_view(g: &mut Pcg64, now: f64, prefill_n: usize, decode_n: usize) -> PoolView {
+    let prefill = (0..prefill_n)
+        .map(|_| {
+            let depth = g.index(6);
+            PrefillWorkerView {
+                busy: g.chance(0.5),
+                jobs: (0..depth)
+                    .map(|_| PrefillJobView {
+                        prompt_len: 1 + g.index(8192) as u32,
+                        deadline_s: now + g.range_f64(-0.2, 2.0),
+                    })
+                    .collect(),
+            }
+        })
+        .collect();
+    let decode = (0..decode_n)
+        .map(|_| {
+            let batch = g.index(64);
+            DecodeWorkerView {
+                batch,
+                avg_ctx: if batch == 0 {
+                    0.0
+                } else {
+                    g.range_f64(40.0, 4000.0)
+                },
+            }
+        })
+        .collect();
+    PoolView {
+        now,
+        prefill,
+        decode,
+    }
+}
+
+/// Every `DvfsPolicy` only ever emits clocks within the GPU's supported
+/// set, no matter what telemetry it is fed.
+#[test]
+fn policies_only_emit_supported_clocks() {
+    let ladder = FreqLadder::a100();
+    let perf = PerfModel::new(ModelSpec::qwen3_14b());
+    let power = PowerModel::a100();
+    check("policy_clocks_on_ladder", 20, |g| {
+        let method = random_method(g);
+        let cfg = Config {
+            method,
+            seed: g.next_u64(),
+            sim_noise: 0.0,
+            ..Config::default()
+        };
+        let mut policy = build(&cfg, &perf, &power);
+        let assert_clock = |mhz: Option<u32>, what: &str| -> Result<(), String> {
+            if let Some(f) = mhz {
+                prop_assert!(
+                    ladder.contains(f),
+                    "{method:?}: off-ladder {f} MHz from {what}"
+                );
+            }
+            Ok(())
+        };
+        assert_clock(policy.initial_clock_mhz(), "initial_clock")?;
+
+        let ticks = policy.ticks();
+        let prefill_n = cfg.pools.prefill_workers;
+        let decode_n = cfg.pools.decode_workers;
+        let mut plan = ClockPlan::default();
+        let mut now = 0.0;
+        for step in 0..60 {
+            now += g.range_f64(0.001, 0.5);
+            // Random event-driven feedback.
+            for w in 0..decode_n {
+                if g.chance(0.7) {
+                    policy.on_decode_tbt(w, g.range_f64(0.0005, 0.5));
+                }
+                if g.chance(0.7) {
+                    policy.on_decode_tbt_weighted(w, g.range_f64(0.0005, 0.5), g.index(64) as u32);
+                }
+                if g.chance(0.7) {
+                    policy.on_decode_tokens(w, now, g.index(256) as u32);
+                }
+            }
+            // Random prefill boundaries.
+            let w = g.index(prefill_n);
+            let jobs: Vec<PrefillJobView> = (0..g.index(5))
+                .map(|_| PrefillJobView {
+                    prompt_len: 1 + g.index(8192) as u32,
+                    deadline_s: now + g.range_f64(-0.1, 1.0),
+                })
+                .collect();
+            assert_clock(policy.on_prefill_dispatch(now, w, &jobs), "dispatch")?;
+            assert_clock(policy.on_prefill_idle(now, w), "idle")?;
+            if policy.wants_backlog_updates() {
+                assert_clock(policy.on_prefill_backlog(now, w, &jobs), "backlog")?;
+            }
+            // Periodic ticks.
+            if !ticks.is_empty() {
+                let kind = step % ticks.len();
+                let view = random_view(g, now, prefill_n, decode_n);
+                plan.reset(prefill_n, decode_n);
+                policy.on_tick(kind, now, &view, &mut plan);
+                for mhz in plan.prefill_mhz.iter().chain(plan.decode_mhz.iter()) {
+                    assert_clock(*mhz, "tick plan")?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn test_table() -> BandTable {
+    // 0..1000 TPS in 100-TPS buckets, 300 → 1200 MHz, ladder-aligned.
+    BandTable {
+        bucket_width: 100.0,
+        freqs: (0..11).map(|i| 300 + i * 90).map(|f| f / 15 * 15).collect(),
+    }
+}
+
+/// The decode controller's coarse hysteresis never emits opposite band
+/// switches within one hold window: after a switch, another switch (in
+/// either direction, and in particular the opposite one) requires at
+/// least `hysteresis_ticks` further coarse intervals of consistent
+/// evidence.
+#[test]
+fn hysteresis_never_flips_within_hold_window() {
+    check("hysteresis_hold_window", 30, |g| {
+        let cfg = DecodeCtlConfig {
+            hysteresis_ticks: 2 + g.index(4) as u32,
+            ..DecodeCtlConfig::default()
+        };
+        let hold = cfg.hysteresis_ticks as i64;
+        let mut ctl = DecodeController::new(cfg, test_table(), 0.100);
+        let mut switches: Vec<(i64, i64)> = Vec::new(); // (tick index, direction)
+        let mut prev_bucket: i64 = 0;
+        for tick in 0..400i64 {
+            let now = tick as f64 * 0.2;
+            // Adversarial TPS feed: random bursts and droughts.
+            let tokens = match g.index(4) {
+                0 => 0,
+                1 => g.index(40) as u32,
+                2 => g.index(120) as u32,
+                _ => g.index(250) as u32,
+            };
+            ctl.on_tokens(now, tokens);
+            if ctl.coarse_tick(now + 0.01).is_some() {
+                let bucket = ctl.table.bucket_of(ctl.current_tps(now + 0.01)) as i64;
+                let dir = if bucket >= prev_bucket { 1 } else { -1 };
+                switches.push((tick, dir));
+                prev_bucket = bucket;
+            }
+        }
+        for pair in switches.windows(2) {
+            let (t1, d1) = pair[0];
+            let (t2, d2) = pair[1];
+            prop_assert!(
+                t2 - t1 >= hold,
+                "switches at ticks {t1} and {t2} closer than hold window {hold}"
+            );
+            if d1 != d2 {
+                prop_assert!(
+                    t2 - t1 >= hold,
+                    "opposite switches at {t1}/{t2} within hold window {hold}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Randomized fine-loop drive: the emitted clock always stays on the
+/// ladder and inside the controller's current band.
+#[test]
+fn fine_loop_clock_always_in_band_under_random_drive() {
+    let ladder = FreqLadder::a100();
+    check("fine_loop_in_band", 25, |g| {
+        let mut ctl = DecodeController::new(DecodeCtlConfig::default(), test_table(), 0.100);
+        for i in 0..500 {
+            let now = i as f64 * 0.02;
+            if g.chance(0.4) {
+                ctl.on_tokens(now, g.index(200) as u32);
+            }
+            if g.chance(0.8) {
+                ctl.on_tbt(g.range_f64(0.001, 0.400));
+            }
+            if i % 10 == 0 {
+                ctl.coarse_tick(now);
+            }
+            if i % 300 == 299 {
+                ctl.adapt_tick(now);
+            }
+            let f = ctl.fine_tick(now);
+            let band = ctl.current_band();
+            prop_assert!(ladder.contains(f), "off-ladder {f}");
+            prop_assert!(
+                f >= band.lo && f <= band.hi,
+                "clock {f} outside band [{}, {}]",
+                band.lo,
+                band.hi
+            );
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end: a full replay under the learned policies keeps every
+/// recorded decode clock on the ladder (the engine applies plans
+/// verbatim, so this pins the whole pipeline).
+#[test]
+fn engine_applies_only_ladder_clocks_for_new_policies() {
+    let ladder = FreqLadder::a100();
+    for method in [Method::Agft, Method::PiTbt] {
+        let trace = generate(&ChatParams::new(4.0, 40.0), 3);
+        let cfg = Config {
+            method,
+            seed: 3,
+            ..Config::default()
+        };
+        let opts = RunOptions {
+            record_freq_trace: true,
+            ..Default::default()
+        };
+        let r = run(&cfg, &trace, &opts);
+        assert_eq!(r.completed as usize, trace.requests.len(), "{method:?}");
+        for &(_, f) in r.decode_freq_trace.iter().chain(&r.prefill_freq_trace) {
+            assert!(ladder.contains(f), "{method:?}: off-ladder {f}");
+        }
+    }
+}
