@@ -1,16 +1,22 @@
-//! Scenario-matrix harness: sweep traces × DVFS policies × SLO margins in
-//! one invocation, fanned out across OS threads, and emit one consolidated
+//! Scenario-matrix harness: sweep traces × DVFS policies × SLO margins ×
+//! cluster shapes (node counts, ingress balancers, power caps) in one
+//! invocation, fanned out across OS threads, and emit one consolidated
 //! report (aligned table on stdout, plus JSON / markdown files on demand).
 //!
 //! Every cell is an independent deterministic replay (its own `Config`,
 //! trace generation and RNG streams), so results are bit-identical
-//! regardless of the worker count — asserted by the tests. Adding a
-//! scenario means adding a [`TraceSpec`]; adding a governor means
-//! registering it in `coordinator::policy::build` — the harness and the
-//! event loop pick both up unchanged.
+//! regardless of the worker count — asserted by the tests. Single-node
+//! uncapped cells run the plain engine; any cell with `nodes > 1` or a
+//! power cap runs the interleaved cluster simulation
+//! (`coordinator::cluster`). Adding a scenario means adding a
+//! [`TraceSpec`]; adding a governor means registering it in
+//! `coordinator::policy::build`; adding a balancer means registering it in
+//! `coordinator::cluster::balancer::build` — the harness and the event
+//! loop pick all three up unchanged.
 
 use crate::bench::report::{fmt_f, fmt_pct, maybe_write_csv, Table};
 use crate::config::{Config, Method};
+use crate::coordinator::cluster::{run_cluster, ClusterConfig, LbPolicy};
 use crate::coordinator::engine::{run, RunOptions};
 use crate::util::json::Json;
 use crate::workload::alibaba::{self, ChatParams};
@@ -34,6 +40,13 @@ pub enum TraceSpec {
     Bursty { base_qps: f64, burst_qps: f64 },
     /// Sinusoidal decode-demand tracking workload (Fig. 1).
     Sinusoid { tps_min: f64, tps_max: f64 },
+    /// Day/night sinusoid-modulated QPS (one full cycle per cell).
+    Diurnal { day_qps: f64, night_qps: f64 },
+    /// Two tenants: interactive chat + long-prompt batch summarization.
+    MultiTenant {
+        interactive_qps: f64,
+        batch_qps: f64,
+    },
 }
 
 impl TraceSpec {
@@ -47,11 +60,13 @@ impl TraceSpec {
             },
             TraceSpec::Bursty { .. } => "bursty".into(),
             TraceSpec::Sinusoid { .. } => "sinusoid".into(),
+            TraceSpec::Diurnal { .. } => "diurnal".into(),
+            TraceSpec::MultiTenant { .. } => "multitenant".into(),
         }
     }
 
     /// Parse a CLI spelling: `alibaba5`, `azure_code5`, `azure_conv8`,
-    /// `bursty`, `sinusoid`.
+    /// `bursty`, `sinusoid`, `diurnal`, `multitenant`.
     pub fn parse(s: &str) -> Option<TraceSpec> {
         let s = s.trim();
         if let Some(qps) = s.strip_prefix("alibaba").or_else(|| s.strip_prefix("chat")) {
@@ -79,6 +94,14 @@ impl TraceSpec {
                 tps_min: 400.0,
                 tps_max: 2600.0,
             }),
+            "diurnal" => Some(TraceSpec::Diurnal {
+                day_qps: 10.0,
+                night_qps: 1.0,
+            }),
+            "multitenant" => Some(TraceSpec::MultiTenant {
+                interactive_qps: 5.0,
+                batch_qps: 1.0,
+            }),
             _ => None,
         }
     }
@@ -97,6 +120,14 @@ impl TraceSpec {
             TraceSpec::Sinusoid { tps_min, tps_max } => {
                 synthetic::sinusoid_decode(*tps_min, *tps_max, 120.0, duration_s, seed)
             }
+            TraceSpec::Diurnal { day_qps, night_qps } => {
+                // One full day/night cycle per cell.
+                synthetic::diurnal(*day_qps, *night_qps, duration_s, duration_s, seed)
+            }
+            TraceSpec::MultiTenant {
+                interactive_qps,
+                batch_qps,
+            } => synthetic::multi_tenant(*interactive_qps, *batch_qps, duration_s, seed),
         }
     }
 }
@@ -113,6 +144,13 @@ pub struct MatrixConfig {
     pub methods: Vec<Method>,
     /// SLO margin factors applied to both prefill and decode controllers.
     pub margins: Vec<f64>,
+    /// Cluster node counts (1 = the plain single-node engine).
+    pub nodes: Vec<usize>,
+    /// Ingress balancers to sweep (collapsed to one entry at 1 node,
+    /// where ingress choice cannot matter).
+    pub lbs: Vec<LbPolicy>,
+    /// Cluster power caps in watts; 0.0 = uncapped.
+    pub power_caps_w: Vec<f64>,
 }
 
 impl Default for MatrixConfig {
@@ -135,23 +173,69 @@ impl Default for MatrixConfig {
             ],
             methods: Method::matrix_set(),
             margins: vec![0.95],
+            nodes: vec![1],
+            lbs: vec![LbPolicy::JoinShortestQueue],
+            power_caps_w: vec![0.0],
         }
     }
 }
 
+/// One cell of the sweep: the full scenario coordinate.
+#[derive(Debug, Clone)]
+pub struct MatrixCell {
+    pub trace: TraceSpec,
+    pub method: Method,
+    pub margin: f64,
+    pub nodes: usize,
+    pub lb: LbPolicy,
+    /// 0.0 = uncapped.
+    pub power_cap_w: f64,
+}
+
 impl MatrixConfig {
-    /// The cartesian cell list, in report order.
-    pub fn cells(&self) -> Vec<(TraceSpec, Method, f64)> {
+    /// The cartesian cell list, in report order. At 1 node every balancer
+    /// is a no-op, so the lb axis collapses to its first entry there
+    /// (avoids duplicate cells in `--nodes 1,2,4 --lb all` sweeps).
+    pub fn cells(&self) -> Vec<MatrixCell> {
         let mut cells = Vec::new();
         for trace in &self.traces {
             for margin in &self.margins {
-                for method in &self.methods {
-                    cells.push((trace.clone(), *method, *margin));
+                for &nodes in &self.nodes {
+                    let lbs: &[LbPolicy] = if nodes == 1 {
+                        &self.lbs[..self.lbs.len().min(1)]
+                    } else {
+                        &self.lbs
+                    };
+                    for &lb in lbs {
+                        for &cap in &self.power_caps_w {
+                            for method in &self.methods {
+                                cells.push(MatrixCell {
+                                    trace: trace.clone(),
+                                    method: *method,
+                                    margin: *margin,
+                                    nodes,
+                                    lb,
+                                    power_cap_w: cap,
+                                });
+                            }
+                        }
+                    }
                 }
             }
         }
         cells
     }
+}
+
+/// Per-node slice of a cluster cell.
+#[derive(Debug, Clone)]
+pub struct NodeCellResult {
+    pub node: usize,
+    pub assigned: usize,
+    pub completed: u64,
+    pub energy_j: f64,
+    pub ttft_pct: f64,
+    pub tbt_pct: f64,
 }
 
 /// One completed matrix cell.
@@ -160,6 +244,10 @@ pub struct CellResult {
     pub trace: String,
     pub method: Method,
     pub margin: f64,
+    pub nodes: usize,
+    /// Balancer name; "-" for single-node cells (ingress is a no-op).
+    pub lb: String,
+    pub power_cap_w: f64,
     pub total_energy_j: f64,
     pub prefill_energy_j: f64,
     pub decode_energy_j: f64,
@@ -169,36 +257,127 @@ pub struct CellResult {
     pub throughput_tps: f64,
     pub completed: u64,
     pub mean_decode_batch: f64,
-    /// Energy saving vs the defaultNV cell of the same (trace, margin),
-    /// when that cell is part of the sweep.
+    /// Max/min node request share (∞ when a node starved); 1.0 at 1 node.
+    pub balance_ratio: f64,
+    pub starved_nodes: usize,
+    /// Highest measured cluster draw across arbiter epochs (capped cells).
+    pub peak_power_w: Option<f64>,
+    /// Per-node breakdown (empty for single-node cells).
+    pub per_node: Vec<NodeCellResult>,
+    /// Energy saving vs the defaultNV cell of the same scenario
+    /// coordinate, when that cell is part of the sweep.
     pub delta_energy_pct: Option<f64>,
 }
 
-fn run_cell(cfg: &MatrixConfig, trace_spec: &TraceSpec, method: Method, margin: f64) -> CellResult {
-    let trace = trace_spec.generate(cfg.duration_s, cfg.seed);
+/// Grouping key for the defaultNV energy baseline.
+fn scenario_key(r: &CellResult) -> (String, u64, usize, String, u64) {
+    (
+        r.trace.clone(),
+        r.margin.to_bits(),
+        r.nodes,
+        r.lb.clone(),
+        r.power_cap_w.to_bits(),
+    )
+}
+
+fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
+    let trace = cell.trace.generate(cfg.duration_s, cfg.seed);
     let run_cfg = Config {
         model: cfg.model.clone(),
-        method,
+        method: cell.method,
         seed: cfg.seed,
-        prefill_margin: margin,
-        decode_margin: margin,
+        prefill_margin: cell.margin,
+        decode_margin: cell.margin,
         ..Config::default()
     };
-    let r = run(&run_cfg, &trace, &RunOptions::default());
-    CellResult {
-        trace: trace_spec.name(),
-        method,
-        margin,
-        total_energy_j: r.total_energy_j,
-        prefill_energy_j: r.prefill_energy_j,
-        decode_energy_j: r.decode_energy_j,
-        energy_per_token_j: r.total_energy_j / r.generated_tokens.max(1) as f64,
-        ttft_pct: r.slo.ttft_pass_rate() * 100.0,
-        tbt_pct: r.slo.tbt_pass_rate() * 100.0,
-        throughput_tps: r.throughput_tps(),
-        completed: r.completed,
-        mean_decode_batch: r.mean_decode_batch,
+    let base = CellResult {
+        trace: cell.trace.name(),
+        method: cell.method,
+        margin: cell.margin,
+        nodes: cell.nodes,
+        lb: if cell.nodes == 1 {
+            "-".into()
+        } else {
+            cell.lb.name().into()
+        },
+        power_cap_w: cell.power_cap_w,
+        total_energy_j: 0.0,
+        prefill_energy_j: 0.0,
+        decode_energy_j: 0.0,
+        energy_per_token_j: 0.0,
+        ttft_pct: 0.0,
+        tbt_pct: 0.0,
+        throughput_tps: 0.0,
+        completed: 0,
+        mean_decode_batch: 0.0,
+        balance_ratio: 1.0,
+        starved_nodes: 0,
+        peak_power_w: None,
+        per_node: Vec::new(),
         delta_energy_pct: None,
+    };
+    if cell.nodes == 1 && cell.power_cap_w == 0.0 {
+        // Plain single-node engine: bit-identical to the pre-cluster
+        // matrix (and cheaper than a 1-node cluster wrapper).
+        let r = run(&run_cfg, &trace, &RunOptions::default());
+        return CellResult {
+            total_energy_j: r.total_energy_j,
+            prefill_energy_j: r.prefill_energy_j,
+            decode_energy_j: r.decode_energy_j,
+            energy_per_token_j: r.total_energy_j / r.generated_tokens.max(1) as f64,
+            ttft_pct: r.slo.ttft_pass_rate() * 100.0,
+            tbt_pct: r.slo.tbt_pass_rate() * 100.0,
+            throughput_tps: r.throughput_tps(),
+            completed: r.completed,
+            mean_decode_batch: r.mean_decode_batch,
+            ..base
+        };
+    }
+    let mut ccfg = ClusterConfig::new(cell.nodes, cell.lb, run_cfg);
+    if cell.power_cap_w > 0.0 {
+        ccfg = ccfg.with_power_cap(cell.power_cap_w, 1.0);
+    }
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    let gen_tokens = r.generated_tokens.max(1) as f64;
+    let sim_s = r
+        .per_node
+        .iter()
+        .map(|n| n.sim_duration_s)
+        .fold(0.0, f64::max);
+    let (bsum, bn) = r.per_node.iter().fold((0.0, 0usize), |(s, n), rn| {
+        (s + rn.mean_decode_batch, n + 1)
+    });
+    CellResult {
+        total_energy_j: r.total_energy_j,
+        prefill_energy_j: r.per_node.iter().map(|n| n.prefill_energy_j).sum(),
+        decode_energy_j: r.per_node.iter().map(|n| n.decode_energy_j).sum(),
+        energy_per_token_j: r.total_energy_j / gen_tokens,
+        ttft_pct: r.ttft_pass_rate * 100.0,
+        tbt_pct: r.tbt_pass_rate * 100.0,
+        throughput_tps: if sim_s > 0.0 {
+            r.generated_tokens as f64 / sim_s
+        } else {
+            0.0
+        },
+        completed: r.completed,
+        mean_decode_batch: if bn == 0 { 0.0 } else { bsum / bn as f64 },
+        balance_ratio: r.balance_ratio(),
+        starved_nodes: r.starved_nodes(),
+        peak_power_w: r.power.as_ref().map(|p| p.peak_measured_w),
+        per_node: r
+            .per_node
+            .iter()
+            .enumerate()
+            .map(|(i, n)| NodeCellResult {
+                node: i,
+                assigned: r.assignment[i],
+                completed: n.completed,
+                energy_j: n.total_energy_j,
+                ttft_pct: n.slo.ttft_pass_rate() * 100.0,
+                tbt_pct: n.slo.tbt_pass_rate() * 100.0,
+            })
+            .collect(),
+        ..base
     }
 }
 
@@ -232,8 +411,7 @@ pub fn run_matrix(cfg: &MatrixConfig) -> Vec<CellResult> {
                 if i >= cells_ref.len() {
                     break;
                 }
-                let (trace, method, margin) = &cells_ref[i];
-                let result = run_cell(cfg, trace, *method, *margin);
+                let result = run_cell(cfg, &cells_ref[i]);
                 let _ = tx.send((i, result));
             });
         }
@@ -252,19 +430,27 @@ pub fn run_matrix(cfg: &MatrixConfig) -> Vec<CellResult> {
     results
 }
 
-/// Fill `delta_energy_pct` against the defaultNV cell of each
-/// (trace, margin) group.
+/// Fill `delta_energy_pct` against the defaultNV cell of each scenario
+/// coordinate (trace, margin, nodes, lb, cap).
 fn fill_deltas(results: &mut [CellResult]) {
-    let mut base: BTreeMap<(String, u64), f64> = BTreeMap::new();
+    let mut base: BTreeMap<(String, u64, usize, String, u64), f64> = BTreeMap::new();
     for r in results.iter() {
         if r.method == Method::DefaultNv {
-            base.insert((r.trace.clone(), r.margin.to_bits()), r.total_energy_j);
+            base.insert(scenario_key(r), r.total_energy_j);
         }
     }
     for r in results.iter_mut() {
-        if let Some(b) = base.get(&(r.trace.clone(), r.margin.to_bits())) {
+        if let Some(b) = base.get(&scenario_key(r)) {
             r.delta_energy_pct = Some((1.0 - r.total_energy_j / b) * 100.0);
         }
+    }
+}
+
+fn fmt_balance(r: &CellResult) -> String {
+    if r.nodes == 1 {
+        "-".into()
+    } else {
+        crate::coordinator::cluster::balance_label(r.balance_ratio, r.starved_nodes)
     }
 }
 
@@ -274,19 +460,30 @@ pub fn render_table(results: &[CellResult]) -> Table {
         "Trace",
         "Policy",
         "Margin",
+        "Nodes",
+        "LB",
+        "Cap(W)",
         "Energy(kJ)",
         "J/tok",
         "dEn(%)",
         "TTFT(%)",
         "TBT(%)",
         "Thru(tok/s)",
-        "Batch",
+        "Bal",
+        "PkW",
     ]);
     for r in results {
         t.row(&[
             r.trace.clone(),
             r.method.name(),
             fmt_f(r.margin, 2),
+            r.nodes.to_string(),
+            r.lb.clone(),
+            if r.power_cap_w > 0.0 {
+                fmt_f(r.power_cap_w, 0)
+            } else {
+                "-".into()
+            },
             fmt_f(r.total_energy_j / 1e3, 1),
             fmt_f(r.energy_per_token_j, 2),
             r.delta_energy_pct
@@ -295,7 +492,10 @@ pub fn render_table(results: &[CellResult]) -> Table {
             fmt_pct(r.ttft_pct),
             fmt_pct(r.tbt_pct),
             fmt_f(r.throughput_tps, 0),
-            fmt_f(r.mean_decode_batch, 1),
+            fmt_balance(r),
+            r.peak_power_w
+                .map(|p| fmt_f(p, 0))
+                .unwrap_or_else(|| "-".into()),
         ]);
     }
     t
@@ -312,15 +512,22 @@ pub fn render_markdown(cfg: &MatrixConfig, results: &[CellResult]) -> String {
         cfg.seed,
         results.len()
     ));
-    out.push_str("| Trace | Policy | Margin | Energy (kJ) | J/tok | dEnergy (%) |");
-    out.push_str(" TTFT (%) | TBT (%) | tok/s |\n");
-    out.push_str("|---|---|---|---|---|---|---|---|---|\n");
+    out.push_str("| Trace | Policy | Margin | Nodes | LB | Cap (W) | Energy (kJ) | J/tok |");
+    out.push_str(" dEnergy (%) | TTFT (%) | TBT (%) | tok/s | Bal |\n");
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
     for r in results {
         out.push_str(&format!(
-            "| {} | {} | {:.2} | {:.1} | {:.2} | {} | {:.1} | {:.1} | {:.0} |\n",
+            "| {} | {} | {:.2} | {} | {} | {} | {:.1} | {:.2} | {} | {:.1} | {:.1} | {:.0} | {} |\n",
             r.trace,
             r.method.name(),
             r.margin,
+            r.nodes,
+            r.lb,
+            if r.power_cap_w > 0.0 {
+                format!("{:.0}", r.power_cap_w)
+            } else {
+                "-".into()
+            },
             r.total_energy_j / 1e3,
             r.energy_per_token_j,
             r.delta_energy_pct
@@ -329,12 +536,14 @@ pub fn render_markdown(cfg: &MatrixConfig, results: &[CellResult]) -> String {
             r.ttft_pct,
             r.tbt_pct,
             r.throughput_tps,
+            fmt_balance(r),
         ));
     }
     out
 }
 
-/// Serialize the whole sweep (config + cells) as JSON.
+/// Serialize the whole sweep (config + cells) as JSON. Cluster cells carry
+/// a `per_node` section and, when capped, a `power` section.
 pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
     let mut root = BTreeMap::new();
     root.insert("model".to_string(), Json::Str(cfg.model.clone()));
@@ -347,6 +556,8 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
             m.insert("trace".to_string(), Json::Str(r.trace.clone()));
             m.insert("policy".to_string(), Json::Str(r.method.name()));
             m.insert("margin".to_string(), Json::Num(r.margin));
+            m.insert("nodes".to_string(), Json::Num(r.nodes as f64));
+            m.insert("lb".to_string(), Json::Str(r.lb.clone()));
             m.insert("total_energy_j".to_string(), Json::Num(r.total_energy_j));
             m.insert(
                 "prefill_energy_j".to_string(),
@@ -369,6 +580,45 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
                 "delta_energy_pct".to_string(),
                 r.delta_energy_pct.map(Json::Num).unwrap_or(Json::Null),
             );
+            if r.nodes > 1 {
+                // balance_ratio may be ∞ (starvation): JSON has no inf, so
+                // emit the starved count alongside and let ∞ become null.
+                m.insert("balance_ratio".to_string(), Json::Num(r.balance_ratio));
+                m.insert(
+                    "starved_nodes".to_string(),
+                    Json::Num(r.starved_nodes as f64),
+                );
+                m.insert(
+                    "per_node".to_string(),
+                    Json::Arr(
+                        r.per_node
+                            .iter()
+                            .map(|n| {
+                                Json::obj([
+                                    ("node", Json::Num(n.node as f64)),
+                                    ("assigned", Json::Num(n.assigned as f64)),
+                                    ("completed", Json::Num(n.completed as f64)),
+                                    ("energy_j", Json::Num(n.energy_j)),
+                                    ("ttft_pct", Json::Num(n.ttft_pct)),
+                                    ("tbt_pct", Json::Num(n.tbt_pct)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+            if r.power_cap_w > 0.0 {
+                m.insert(
+                    "power".to_string(),
+                    Json::obj([
+                        ("cap_w", Json::Num(r.power_cap_w)),
+                        (
+                            "peak_measured_w",
+                            r.peak_power_w.map(Json::Num).unwrap_or(Json::Null),
+                        ),
+                    ]),
+                );
+            }
             Json::Obj(m)
         })
         .collect();
@@ -385,10 +635,11 @@ pub fn matrix(
     let results = run_matrix(cfg);
     let t = render_table(&results);
     println!(
-        "== Scenario matrix: {} traces x {} policies x {} margins = {} cells ==",
+        "== Scenario matrix: {} traces x {} policies x {} margins x {} node-shapes = {} cells ==",
         cfg.traces.len(),
         cfg.methods.len(),
         cfg.margins.len(),
+        results.len() / (cfg.traces.len() * cfg.methods.len() * cfg.margins.len()).max(1),
         results.len()
     );
     t.print();
@@ -431,9 +682,29 @@ mod tests {
         }
     }
 
+    fn small_cluster_cfg() -> MatrixConfig {
+        MatrixConfig {
+            duration_s: 30.0,
+            traces: vec![TraceSpec::Alibaba { qps: 6.0 }],
+            methods: vec![Method::DefaultNv, Method::GreenLlm],
+            margins: vec![0.95],
+            nodes: vec![1, 2],
+            lbs: vec![LbPolicy::RoundRobin, LbPolicy::JoinShortestQueue],
+            ..MatrixConfig::default()
+        }
+    }
+
     #[test]
     fn trace_spec_parse_round_trips() {
-        for s in ["alibaba5", "azure_code5", "azure_conv8", "bursty", "sinusoid"] {
+        for s in [
+            "alibaba5",
+            "azure_code5",
+            "azure_conv8",
+            "bursty",
+            "sinusoid",
+            "diurnal",
+            "multitenant",
+        ] {
             let spec = TraceSpec::parse(s).unwrap();
             assert_eq!(spec.name(), s, "{s}");
         }
@@ -455,6 +726,18 @@ mod tests {
     }
 
     #[test]
+    fn lb_axis_collapses_at_one_node() {
+        let cfg = small_cluster_cfg();
+        let cells = cfg.cells();
+        // 1 trace × 1 margin × (1-node: 1 lb + 2-node: 2 lbs) × 2 methods.
+        assert_eq!(cells.len(), (1 + 2) * 2);
+        assert!(cells
+            .iter()
+            .filter(|c| c.nodes == 1)
+            .all(|c| c.lb == LbPolicy::RoundRobin));
+    }
+
+    #[test]
     fn matrix_results_independent_of_thread_count() {
         let mut cfg = small_cfg();
         cfg.threads = 1;
@@ -467,6 +750,47 @@ mod tests {
             assert_eq!(a.method, b.method);
             assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
             assert_eq!(a.completed, b.completed);
+        }
+    }
+
+    #[test]
+    fn cluster_cells_conserve_and_deltas_group_per_scenario() {
+        let cfg = small_cluster_cfg();
+        let results = run_matrix(&cfg);
+        let trace = cfg.traces[0].generate(cfg.duration_s, cfg.seed);
+        for r in &results {
+            assert_eq!(r.completed as usize, trace.requests.len(), "{r:?}");
+            let d = r.delta_energy_pct.expect("defaultNV in every scenario");
+            if r.method == Method::DefaultNv {
+                assert!(d.abs() < 1e-9);
+            }
+            if r.nodes > 1 {
+                assert_eq!(r.per_node.len(), r.nodes);
+                assert_eq!(
+                    r.per_node.iter().map(|n| n.assigned).sum::<usize>(),
+                    trace.requests.len()
+                );
+            }
+        }
+        // GreenLLM still saves energy vs defaultNV at 2 nodes (equal-node
+        // comparison — the headline cluster acceptance).
+        let green2 = results
+            .iter()
+            .find(|r| r.nodes == 2 && r.lb == "jsq" && r.method == Method::GreenLlm)
+            .unwrap();
+        assert!(green2.delta_energy_pct.unwrap() > 0.0, "{green2:?}");
+    }
+
+    #[test]
+    fn cluster_cells_deterministic_across_threads() {
+        let mut cfg = small_cluster_cfg();
+        cfg.threads = 1;
+        let serial = run_matrix(&cfg);
+        cfg.threads = 4;
+        let parallel = run_matrix(&cfg);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+            assert_eq!(a.balance_ratio.to_bits(), b.balance_ratio.to_bits());
         }
     }
 
@@ -503,5 +827,26 @@ mod tests {
             parsed.get("cells").unwrap().as_arr().unwrap().len(),
             results.len()
         );
+    }
+
+    #[test]
+    fn cluster_json_carries_per_node_sections() {
+        let mut cfg = small_cluster_cfg();
+        cfg.methods = vec![Method::DefaultNv, Method::GreenLlm];
+        cfg.lbs = vec![LbPolicy::JoinShortestQueue];
+        cfg.power_caps_w = vec![4000.0];
+        let results = run_matrix(&cfg);
+        let parsed = Json::parse(&to_json(&cfg, &results).dump()).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        let cluster_cell = cells
+            .iter()
+            .find(|c| c.get("nodes").unwrap().as_f64() == Some(2.0))
+            .expect("a 2-node cell");
+        let per_node = cluster_cell.get("per_node").unwrap().as_arr().unwrap();
+        assert_eq!(per_node.len(), 2);
+        assert!(per_node[0].get("energy_j").unwrap().as_f64().unwrap() > 0.0);
+        let power = cluster_cell.get("power").unwrap();
+        assert_eq!(power.get("cap_w").unwrap().as_f64(), Some(4000.0));
+        assert!(power.get("peak_measured_w").unwrap().as_f64().unwrap() <= 4000.0);
     }
 }

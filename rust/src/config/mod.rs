@@ -176,6 +176,36 @@ impl Default for PrefillOptConfig {
     }
 }
 
+/// Cluster deployment defaults (multi-node simulation). A plain
+/// single-node `run` ignores this section entirely; `greenllm cluster`
+/// reads it as its flag defaults (the `matrix` subcommand is flag-driven
+/// — its `--nodes/--lb/--power-cap-w` axes do not consult this section).
+/// The balancer is kept as a name string so the config layer stays free
+/// of coordinator types.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSection {
+    pub nodes: usize,
+    /// Ingress balancer name (`rr`, `leastwork`, `jsq`, `phase`).
+    pub lb: String,
+    /// Cluster-wide power budget, watts (0 = uncapped).
+    pub power_cap_w: f64,
+    /// Power-arbiter control epoch, seconds.
+    pub power_epoch_s: f64,
+}
+
+impl Default for ClusterSection {
+    fn default() -> Self {
+        ClusterSection {
+            // `greenllm cluster` default deployment: a 2-node cluster
+            // (set 1 to sanity-check the bit-exact single-node path).
+            nodes: 2,
+            lb: "jsq".into(),
+            power_cap_w: 0.0,
+            power_epoch_s: 1.0,
+        }
+    }
+}
+
 /// Top-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -185,6 +215,7 @@ pub struct Config {
     pub slo: SloTargets,
     pub decode_ctl: DecodeCtlConfig,
     pub prefill_opt: PrefillOptConfig,
+    pub cluster: ClusterSection,
     /// SLO margin factors (§5.3 sensitivity): scale the *controller's*
     /// deadline targets, not the reported SLOs.
     pub prefill_margin: f64,
@@ -203,6 +234,7 @@ impl Default for Config {
             slo: SloTargets::default(),
             decode_ctl: DecodeCtlConfig::default(),
             prefill_opt: PrefillOptConfig::default(),
+            cluster: ClusterSection::default(),
             prefill_margin: 0.95,
             decode_margin: 0.95,
             sim_noise: 0.03,
@@ -242,6 +274,10 @@ impl Config {
                     | "decode_ctl.adapt_interval_s"
                     | "prefill_opt.tick_ms"
                     | "prefill_opt.idle_clock_mhz"
+                    | "cluster.nodes"
+                    | "cluster.lb"
+                    | "cluster.power_cap_w"
+                    | "cluster.power_epoch_s"
             );
             if !known {
                 return Err(format!("unknown config key: {key}"));
@@ -316,6 +352,18 @@ impl Config {
         if let Some(v) = doc.i64("prefill_opt.idle_clock_mhz") {
             c.prefill_opt.idle_clock_mhz = v as u32;
         }
+        if let Some(v) = doc.i64("cluster.nodes") {
+            c.cluster.nodes = v as usize;
+        }
+        if let Some(v) = doc.str("cluster.lb") {
+            c.cluster.lb = v.to_string();
+        }
+        if let Some(v) = doc.f64("cluster.power_cap_w") {
+            c.cluster.power_cap_w = v;
+        }
+        if let Some(v) = doc.f64("cluster.power_epoch_s") {
+            c.cluster.power_epoch_s = v;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -338,6 +386,15 @@ impl Config {
         }
         if self.prefill_margin <= 0.0 || self.decode_margin <= 0.0 {
             return Err("margins must be positive".into());
+        }
+        if self.cluster.nodes == 0 {
+            return Err("cluster.nodes must be >= 1".into());
+        }
+        if self.cluster.power_cap_w < 0.0 {
+            return Err("cluster.power_cap_w must be >= 0 (0 = uncapped)".into());
+        }
+        if self.cluster.power_epoch_s <= 0.0 {
+            return Err("cluster.power_epoch_s must be positive".into());
         }
         Ok(())
     }
@@ -384,6 +441,33 @@ mod tests {
         assert_eq!(c.decode_ctl.fine_step_mhz, 30);
         // Untouched defaults survive.
         assert_eq!(c.decode_ctl.fine_tick_s, 0.020);
+    }
+
+    #[test]
+    fn cluster_section_parses_and_validates() {
+        let doc = Document::parse(
+            r#"
+            [cluster]
+            nodes = 4
+            lb = "phase"
+            power_cap_w = 8000
+            power_epoch_s = 0.5
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.cluster.nodes, 4);
+        assert_eq!(c.cluster.lb, "phase");
+        assert_eq!(c.cluster.power_cap_w, 8000.0);
+        assert_eq!(c.cluster.power_epoch_s, 0.5);
+        // Defaults: 2-node deployment, uncapped.
+        let d = Config::default();
+        assert_eq!(d.cluster.nodes, 2);
+        assert_eq!(d.cluster.power_cap_w, 0.0);
+        // Invalid epoch rejected.
+        let mut bad = Config::default();
+        bad.cluster.power_epoch_s = 0.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,349 @@
+//! Cluster ingress load balancing: online policies over live node
+//! telemetry.
+//!
+//! A [`Balancer`] is consulted once per arriving request with a
+//! [`NodeState`] snapshot per node (queue depths, outstanding prefill
+//! tokens, decode TBT tail — everything the cluster event loop can read
+//! off the live engines). Registering a new policy means implementing the
+//! trait, adding an [`LbPolicy`] variant and wiring it in [`build`]; the
+//! CLI, the scenario matrix and the invariant tests pick it up unchanged.
+
+use crate::workload::request::{Request, RouteClass};
+
+/// Live telemetry the cluster loop snapshots per node before each
+/// assignment decision.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NodeState {
+    /// Requests handed to this node so far.
+    pub assigned: usize,
+    /// Prefill jobs queued or in flight.
+    pub prefill_backlog: usize,
+    /// Prompt tokens queued or in prefill flight.
+    pub outstanding_prompt_tokens: u64,
+    /// Decode streams admitted and not yet finished.
+    pub active_streams: usize,
+    /// P95 of the node's recent decode TBTs (0.0 until samples exist).
+    pub tbt_tail_p95_s: f64,
+}
+
+/// Load-balancing policy at cluster ingress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LbPolicy {
+    /// Classic round-robin (front-end information only; baseline).
+    RoundRobin,
+    /// Join-least-loaded by accumulated prompt tokens with exponential
+    /// decay — a front-end's cheap proxy for outstanding prefill work
+    /// (baseline; no live telemetry).
+    LeastPromptWork,
+    /// Join-shortest-queue on live backlog (prefill jobs + decode streams).
+    JoinShortestQueue,
+    /// DualScale-style phase-aware ingress: long-prompt (prefill-heavy)
+    /// requests go to a dedicated node subset, interactive traffic joins
+    /// the shortest healthy queue on the rest (nodes with a blown TBT tail
+    /// are deprioritized).
+    PhaseAware,
+}
+
+impl LbPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LbPolicy::RoundRobin => "rr",
+            LbPolicy::LeastPromptWork => "leastwork",
+            LbPolicy::JoinShortestQueue => "jsq",
+            LbPolicy::PhaseAware => "phase",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LbPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "rr" | "roundrobin" | "round-robin" => Some(LbPolicy::RoundRobin),
+            "leastwork" | "least-work" | "lpw" => Some(LbPolicy::LeastPromptWork),
+            "jsq" | "shortestqueue" | "shortest-queue" => Some(LbPolicy::JoinShortestQueue),
+            "phase" | "phaseaware" | "phase-aware" | "dualscale" => Some(LbPolicy::PhaseAware),
+            _ => None,
+        }
+    }
+
+    /// Every registered policy, in report order.
+    pub fn all() -> Vec<LbPolicy> {
+        vec![
+            LbPolicy::RoundRobin,
+            LbPolicy::LeastPromptWork,
+            LbPolicy::JoinShortestQueue,
+            LbPolicy::PhaseAware,
+        ]
+    }
+
+    /// Does this policy use only front-end information (arrival order,
+    /// prompt length)? Such policies can also pre-assign a trace offline.
+    pub fn frontend_only(&self) -> bool {
+        matches!(self, LbPolicy::RoundRobin | LbPolicy::LeastPromptWork)
+    }
+}
+
+/// An ingress balancer: one request + live node states in, node index out.
+pub trait Balancer {
+    fn name(&self) -> &'static str;
+    /// Pick the node for `req` arriving at `t`. `nodes` has one entry per
+    /// node, index-aligned; the returned index must be `< nodes.len()`.
+    fn assign(&mut self, t: f64, req: &Request, nodes: &[NodeState]) -> usize;
+}
+
+/// Instantiate the balancer for a policy. `tbt_target_s` is the per-node
+/// decode SLO the phase-aware policy uses to spot unhealthy tails.
+pub fn build(lb: LbPolicy, nodes: usize, tbt_target_s: f64) -> Box<dyn Balancer> {
+    assert!(nodes >= 1);
+    match lb {
+        LbPolicy::RoundRobin => Box::new(RoundRobin { next: 0, nodes }),
+        LbPolicy::LeastPromptWork => Box::new(LeastPromptWork::new(nodes, 10.0)),
+        LbPolicy::JoinShortestQueue => Box::new(JoinShortestQueue),
+        LbPolicy::PhaseAware => Box::new(PhaseAware::new(nodes, tbt_target_s)),
+    }
+}
+
+struct RoundRobin {
+    next: usize,
+    nodes: usize,
+}
+
+impl Balancer for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn assign(&mut self, _t: f64, _req: &Request, _nodes: &[NodeState]) -> usize {
+        let n = self.next;
+        self.next = (self.next + 1) % self.nodes;
+        n
+    }
+}
+
+/// Decaying outstanding-work estimate per node; time constant ~10 s (a
+/// prefill queue's memory). Decay is applied lazily from a per-node
+/// last-touched timestamp, so an assignment costs O(nodes) comparisons and
+/// exactly one write — not O(nodes) exponentials ageing every counter.
+struct LeastPromptWork {
+    load: Vec<f64>,
+    last_t: Vec<f64>,
+    tau: f64,
+}
+
+impl LeastPromptWork {
+    fn new(nodes: usize, tau: f64) -> Self {
+        LeastPromptWork {
+            load: vec![0.0; nodes],
+            last_t: vec![0.0; nodes],
+            tau,
+        }
+    }
+
+    /// Continuous-decay value of node `i`'s load at time `t`.
+    fn load_at(&self, i: usize, t: f64) -> f64 {
+        self.load[i] * (-(t - self.last_t[i]).max(0.0) / self.tau).exp()
+    }
+}
+
+impl Balancer for LeastPromptWork {
+    fn name(&self) -> &'static str {
+        "leastwork"
+    }
+
+    fn assign(&mut self, t: f64, req: &Request, _nodes: &[NodeState]) -> usize {
+        let mut best = 0;
+        let mut best_load = f64::INFINITY;
+        for i in 0..self.load.len() {
+            let l = self.load_at(i, t);
+            if l < best_load {
+                best_load = l;
+                best = i;
+            }
+        }
+        // Touch only the winner: fold its decay into the stored value.
+        self.load[best] = best_load + req.prompt_len as f64;
+        self.last_t[best] = t;
+        best
+    }
+}
+
+struct JoinShortestQueue;
+
+impl JoinShortestQueue {
+    fn depth(n: &NodeState) -> usize {
+        n.prefill_backlog + n.active_streams
+    }
+}
+
+impl Balancer for JoinShortestQueue {
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+
+    fn assign(&mut self, _t: f64, _req: &Request, nodes: &[NodeState]) -> usize {
+        pick_min(nodes, |n| (Self::depth(n) as u64, n.outstanding_prompt_tokens))
+    }
+}
+
+/// DualScale-style split: the last `long_nodes` nodes form the
+/// prefill-heavy pool; everything else serves interactive traffic.
+struct PhaseAware {
+    long_nodes: usize,
+    tbt_target_s: f64,
+}
+
+impl PhaseAware {
+    fn new(nodes: usize, tbt_target_s: f64) -> Self {
+        // Dedicate ~a quarter of the cluster (at least one node) to long
+        // prefill once there are enough nodes to split at all.
+        let long_nodes = if nodes >= 2 { (nodes / 4).max(1) } else { 0 };
+        PhaseAware {
+            long_nodes,
+            tbt_target_s,
+        }
+    }
+}
+
+impl Balancer for PhaseAware {
+    fn name(&self) -> &'static str {
+        "phase"
+    }
+
+    fn assign(&mut self, _t: f64, req: &Request, nodes: &[NodeState]) -> usize {
+        if self.long_nodes == 0 {
+            return 0; // single node: nothing to split
+        }
+        let split = nodes.len() - self.long_nodes;
+        match req.route_class() {
+            RouteClass::Long => {
+                // Prefill pool: least outstanding prompt work.
+                split
+                    + pick_min(&nodes[split..], |n| {
+                        (n.outstanding_prompt_tokens, n.prefill_backlog as u64)
+                    })
+            }
+            RouteClass::ShortMedium => {
+                // Interactive pool: shortest queue among healthy nodes; a
+                // blown decode tail pushes a node behind every healthy one.
+                pick_min(&nodes[..split], |n| {
+                    let unhealthy = (n.tbt_tail_p95_s > self.tbt_target_s) as u64;
+                    (
+                        unhealthy,
+                        (n.prefill_backlog + n.active_streams) as u64,
+                    )
+                })
+            }
+        }
+    }
+}
+
+/// Index of the minimum key; ties break toward the lowest index (keeps
+/// every policy deterministic).
+fn pick_min<K: Ord>(nodes: &[NodeState], key: impl Fn(&NodeState) -> K) -> usize {
+    let mut best = 0;
+    let mut best_key = key(&nodes[0]);
+    for (i, n) in nodes.iter().enumerate().skip(1) {
+        let k = key(n);
+        if k < best_key {
+            best_key = k;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: f64, prompt: u32) -> Request {
+        Request {
+            id,
+            arrival_s: t,
+            prompt_len: prompt,
+            output_len: 32,
+        }
+    }
+
+    #[test]
+    fn policy_names_round_trip_through_parse() {
+        for lb in LbPolicy::all() {
+            assert_eq!(LbPolicy::parse(lb.name()), Some(lb), "{lb:?}");
+        }
+        assert_eq!(LbPolicy::parse("roundrobin"), Some(LbPolicy::RoundRobin));
+        assert_eq!(LbPolicy::parse("dualscale"), Some(LbPolicy::PhaseAware));
+        assert_eq!(LbPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut b = build(LbPolicy::RoundRobin, 3, 0.1);
+        let states = vec![NodeState::default(); 3];
+        let picks: Vec<usize> = (0..6)
+            .map(|i| b.assign(i as f64, &req(i, i as f64, 100), &states))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_work_lazy_decay_matches_continuous_decay() {
+        // Two nodes; load node 0 heavily, then wait several time constants:
+        // node 0 must win again once its load has decayed below node 1's.
+        let mut b = LeastPromptWork::new(2, 10.0);
+        let n = vec![NodeState::default(); 2];
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 8000), &n), 0);
+        assert_eq!(b.assign(0.1, &req(1, 0.1, 100), &n), 1);
+        // t=1: node0 ~ 8000*e^-0.1 >> node1 ~ 100 → node 1.
+        assert_eq!(b.assign(1.0, &req(2, 1.0, 100), &n), 1);
+        // t=60: both decayed ~e^-6; node0 8000e^-6≈19.8 < node1 200e^-59/10…
+        // node1 decayed from t≈1: 200e^-5.9 ≈ 0.55 → node 1 still smaller.
+        assert_eq!(b.assign(60.0, &req(3, 60.0, 100), &n), 1);
+        // Lazy value equals the closed-form continuous decay.
+        let expect = (8000.0f64) * (-(60.0f64) / 10.0).exp();
+        assert!((b.load_at(0, 60.0) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsq_picks_emptiest_node() {
+        let mut b = build(LbPolicy::JoinShortestQueue, 3, 0.1);
+        let mut states = vec![NodeState::default(); 3];
+        states[0].prefill_backlog = 4;
+        states[1].active_streams = 1;
+        states[2].active_streams = 9;
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 100), &states), 1);
+        // Equal depths: fewer outstanding tokens wins, then lowest index.
+        states[1].active_streams = 4;
+        states[2].active_streams = 4;
+        states[2].prefill_backlog = 0;
+        states[1].outstanding_prompt_tokens = 500;
+        states[2].outstanding_prompt_tokens = 100;
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 100), &states), 2);
+    }
+
+    #[test]
+    fn phase_aware_routes_long_prompts_to_dedicated_pool() {
+        let mut b = build(LbPolicy::PhaseAware, 4, 0.1);
+        let states = vec![NodeState::default(); 4];
+        // 4 nodes → 1 long node (index 3).
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 4096), &states), 3);
+        // Interactive traffic stays off the long pool.
+        let pick = b.assign(0.0, &req(1, 0.0, 128), &states);
+        assert!(pick < 3, "interactive landed on the long pool: {pick}");
+    }
+
+    #[test]
+    fn phase_aware_avoids_unhealthy_tails() {
+        let mut b = build(LbPolicy::PhaseAware, 4, 0.1);
+        let mut states = vec![NodeState::default(); 4];
+        // Node 0 empty but with a blown TBT tail; node 1 busy but healthy.
+        states[0].tbt_tail_p95_s = 0.5;
+        states[1].active_streams = 3;
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 128), &states), 1);
+    }
+
+    #[test]
+    fn phase_aware_single_node_degrades_gracefully() {
+        let mut b = build(LbPolicy::PhaseAware, 1, 0.1);
+        let states = vec![NodeState::default(); 1];
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 4096), &states), 0);
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 64), &states), 0);
+    }
+}

@@ -1,0 +1,176 @@
+//! The cluster event loop: N node engines interleaved on one virtual
+//! clock.
+//!
+//! The loop merges three deterministic event sources:
+//! * the arrival stream (the trace, pre-scheduled into a cluster queue),
+//! * the power arbiter's control epochs,
+//! * each node engine's own pending events.
+//!
+//! At every iteration the earliest source wins; ties go cluster-first and
+//! then lowest-node-first (`sim::earliest`), so the whole simulation is a
+//! pure function of (trace, config, seed). An arriving request is assigned
+//! by the balancer from a *live* telemetry snapshot and injected into the
+//! chosen engine through the priority event lane, which makes a 1-node
+//! cluster replay bit-identical to a plain [`run`](crate::coordinator::run).
+
+use crate::coordinator::cluster::balancer::{self, NodeState};
+use crate::coordinator::cluster::power::PowerArbiter;
+use crate::coordinator::cluster::{ClusterConfig, ClusterResult, PowerReport};
+use crate::coordinator::engine::{Engine, RunOptions, RunResult};
+use crate::sim::{self, EventQueue};
+use crate::workload::request::Trace;
+
+#[derive(Debug, Clone, Copy)]
+enum ClusterEv {
+    /// Index into the trace's request list.
+    Arrive(usize),
+    PowerEpoch,
+}
+
+fn snapshot(e: &Engine<'_>) -> NodeState {
+    NodeState {
+        assigned: e.assigned(),
+        prefill_backlog: e.prefill_backlog(),
+        outstanding_prompt_tokens: e.outstanding_prompt_tokens(),
+        active_streams: e.active_streams(),
+        tbt_tail_p95_s: e.tbt_tail_p95(),
+    }
+}
+
+/// Run `trace` across the cluster as one interleaved event-driven
+/// simulation.
+pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> ClusterResult {
+    assert!(ccfg.nodes >= 1, "cluster needs at least one node");
+    // Telemetry-driven balancers read the per-node TBT tail, so keep it
+    // live for them; front-end-only policies (rr, leastwork) never look,
+    // so skip the per-token cost. Everything else passes through.
+    let node_opts = RunOptions {
+        track_tbt_tail: opts.track_tbt_tail || !ccfg.lb.frontend_only(),
+        ..opts.clone()
+    };
+    let node_cfgs: Vec<_> = (0..ccfg.nodes)
+        .map(|n| {
+            let mut cfg = ccfg.node.clone();
+            cfg.seed = ccfg.node.seed.wrapping_add(n as u64);
+            cfg
+        })
+        .collect();
+    let mut engines: Vec<Engine<'_>> = node_cfgs
+        .iter()
+        .enumerate()
+        .map(|(n, cfg)| {
+            Engine::new(
+                cfg,
+                &node_opts,
+                format!("{}::node{n}", trace.name),
+                trace.duration_s,
+            )
+        })
+        .collect();
+    for e in engines.iter_mut() {
+        e.begin();
+    }
+
+    let mut lb = balancer::build(ccfg.lb, ccfg.nodes, ccfg.node.slo.tbt_p95_s);
+    let mut arbiter = ccfg
+        .power_cap_w
+        .map(|cap| PowerArbiter::new(cap, ccfg.power_epoch_s, ccfg.nodes));
+    if let Some(a) = arbiter.as_mut() {
+        a.apply_initial(&mut engines);
+    }
+
+    // Cluster-level queue: arrivals first (priority-free here — they get
+    // the lowest sequence numbers by being scheduled before the epochs).
+    let mut q: EventQueue<ClusterEv> = EventQueue::new();
+    for (i, r) in trace.requests.iter().enumerate() {
+        q.schedule(r.arrival_s, ClusterEv::Arrive(i));
+    }
+    if arbiter.is_some() {
+        q.schedule(ccfg.power_epoch_s, ClusterEv::PowerEpoch);
+    }
+
+    let total = trace.requests.len() as u64;
+    let mut assignment = vec![0usize; ccfg.nodes];
+    let mut node_times: Vec<Option<f64>> = vec![None; ccfg.nodes];
+    let mut states: Vec<NodeState> = Vec::with_capacity(ccfg.nodes);
+
+    loop {
+        let done: u64 = engines.iter().map(|e| e.completed()).sum();
+        if done >= total {
+            break;
+        }
+        for (i, e) in engines.iter().enumerate() {
+            node_times[i] = e.peek_time();
+        }
+        let next_node = sim::earliest(&node_times);
+        // Cluster events win exact-time ties: an arrival at t must be
+        // assigned before any node processes its own event at t (the order
+        // a pre-scheduled replay would use).
+        let take_cluster = match (q.peek_time(), next_node.map(|i| node_times[i].unwrap())) {
+            (Some(tc), Some(tn)) => tc <= tn,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => break, // fully drained yet incomplete: impossible
+        };
+        if take_cluster {
+            let (t, ev) = q.pop().expect("peeked");
+            match ev {
+                ClusterEv::Arrive(i) => {
+                    states.clear();
+                    states.extend(engines.iter().map(snapshot));
+                    let node = lb.assign(t, &trace.requests[i], &states);
+                    assert!(node < ccfg.nodes, "balancer returned node {node}");
+                    engines[node].inject(t, trace.requests[i].clone());
+                    assignment[node] += 1;
+                }
+                ClusterEv::PowerEpoch => {
+                    if let Some(a) = arbiter.as_mut() {
+                        a.epoch(t, &mut engines);
+                        q.schedule_in(ccfg.power_epoch_s, ClusterEv::PowerEpoch);
+                    }
+                }
+            }
+        } else {
+            engines[next_node.expect("node source exists")].step();
+        }
+    }
+
+    // Global end: every node integrates idle energy to the same horizon.
+    let end_t = engines
+        .iter()
+        .map(|e| e.now())
+        .fold(trace.duration_s, f64::max);
+    let per_node: Vec<RunResult> = engines.iter_mut().map(|e| e.finalize(end_t)).collect();
+
+    let total_energy_j = per_node.iter().map(|r| r.total_energy_j).sum();
+    let generated_tokens = per_node.iter().map(|r| r.generated_tokens).sum();
+    let completed: u64 = per_node.iter().map(|r| r.completed).sum();
+    let ttft_passes: u64 = per_node.iter().map(|r| r.slo.ttft_passes()).sum();
+    let tbt_passes: u64 = per_node.iter().map(|r| r.slo.tbt_passes()).sum();
+    let tbt_eligible: u64 = per_node.iter().map(|r| r.slo.tbt_eligible()).sum();
+    ClusterResult {
+        total_energy_j,
+        generated_tokens,
+        completed,
+        ttft_pass_rate: if completed == 0 {
+            1.0
+        } else {
+            ttft_passes as f64 / completed as f64
+        },
+        tbt_pass_rate: if tbt_eligible == 0 {
+            1.0
+        } else {
+            tbt_passes as f64 / tbt_eligible as f64
+        },
+        per_node,
+        assignment,
+        lb: ccfg.lb,
+        power: arbiter.map(|a| PowerReport {
+            cap_w: a.cap_w,
+            epoch_s: a.epoch_s,
+            peak_measured_w: a.peak_measured_w(),
+            had_infeasible_epoch: a.had_infeasible_epoch(),
+            epochs: a.epochs,
+        }),
+    }
+}

@@ -1,0 +1,220 @@
+//! Cluster power-budget arbitration: one watt cap, many nodes.
+//!
+//! Each control epoch the arbiter measures every node's mean power over
+//! the last epoch (exact, from the simulated GPUs' energy integrals) and
+//! splits the cluster cap into per-node watt shares: every node is first
+//! guaranteed its *floor* (worst-case power at the ladder's minimum
+//! clock — no grant can go below the physical lower bound), and the
+//! remaining headroom is distributed proportionally to measured demand.
+//! Each share is then converted into a *clock grant*: the highest ladder
+//! frequency whose worst-case node power (every GPU fully active) fits
+//! the share. Policies keep requesting whatever clocks they want — the
+//! engine clamps every request to the granted ceiling
+//! ([`crate::coordinator::engine::Engine::set_clock_cap`]).
+//!
+//! Because grants are sized against worst-case active power and every
+//! share is at least the floor whenever the cap covers the cluster-wide
+//! floor, the measured cluster draw can never exceed a feasible cap in
+//! any epoch. A cap below the summed floors is *physically* infeasible:
+//! nodes are clamped to the ladder minimum and the epoch is flagged.
+
+use crate::coordinator::engine::Engine;
+use crate::gpu::freq::FreqLadder;
+use crate::gpu::power::PowerModel;
+
+/// One arbitration decision (diagnostics + invariant tests).
+#[derive(Debug, Clone)]
+pub struct PowerEpoch {
+    /// Epoch end time (the decision instant).
+    pub t_s: f64,
+    /// Per-node mean power over the finished epoch, watts.
+    pub measured_w: Vec<f64>,
+    /// Per-node share of the cap the arbiter allotted, watts.
+    pub share_w: Vec<f64>,
+    /// Per-node clock ceiling granted, MHz.
+    pub clamp_mhz: Vec<u32>,
+    /// Worst-case power of each grant (GPUs fully active), watts.
+    pub granted_w: Vec<f64>,
+    /// Nodes whose share fell below the min-clock worst case (grant
+    /// clamped to the ladder floor; budget not guaranteeable).
+    pub infeasible_nodes: usize,
+}
+
+impl PowerEpoch {
+    pub fn total_measured_w(&self) -> f64 {
+        self.measured_w.iter().sum()
+    }
+
+    pub fn total_granted_w(&self) -> f64 {
+        self.granted_w.iter().sum()
+    }
+}
+
+/// The cluster-wide arbiter. Drive with [`PowerArbiter::apply_initial`]
+/// once at t = 0 and [`PowerArbiter::epoch`] at every epoch boundary.
+pub struct PowerArbiter {
+    pub cap_w: f64,
+    pub epoch_s: f64,
+    power: PowerModel,
+    ladder: FreqLadder,
+    last_energy_j: Vec<f64>,
+    last_t: f64,
+    pub epochs: Vec<PowerEpoch>,
+}
+
+impl PowerArbiter {
+    pub fn new(cap_w: f64, epoch_s: f64, nodes: usize) -> Self {
+        assert!(cap_w > 0.0, "power cap must be positive");
+        assert!(epoch_s > 0.0, "power epoch must be positive");
+        PowerArbiter {
+            cap_w,
+            epoch_s,
+            power: PowerModel::a100(),
+            ladder: FreqLadder::a100(),
+            last_energy_j: vec![0.0; nodes],
+            last_t: 0.0,
+            epochs: Vec::new(),
+        }
+    }
+
+    /// Highest ladder clock whose worst-case node power (`gpus` fully
+    /// active) fits `share_w`; `None` if even the floor exceeds the share.
+    fn grant_for_share(&self, gpus: usize, share_w: f64) -> Option<u32> {
+        let mut granted = None;
+        for f in self.ladder.iter() {
+            if gpus as f64 * self.power.active_w(f) <= share_w {
+                granted = Some(f);
+            } else {
+                break; // active power is monotone in frequency
+            }
+        }
+        granted
+    }
+
+    fn arbitrate(&mut self, t: f64, measured: Vec<f64>, engines: &mut [Engine<'_>]) {
+        let n = engines.len() as f64;
+        // Physical lower bound per node: worst-case power at the ladder
+        // floor. Shares never drop below it (a grant below min clock does
+        // not exist), so with a feasible cap every epoch stays feasible
+        // even when one node idles while another burns.
+        let floors: Vec<f64> = engines
+            .iter()
+            .map(|e| e.num_gpus() as f64 * self.power.active_w(self.ladder.min_mhz))
+            .collect();
+        let total_floor: f64 = floors.iter().sum();
+        let total_m: f64 = measured.iter().sum();
+        let share_w: Vec<f64> = if self.cap_w >= total_floor {
+            // Floor-guaranteed, headroom proportional to measured demand
+            // (equal split before any demand exists).
+            let headroom = self.cap_w - total_floor;
+            floors
+                .iter()
+                .zip(&measured)
+                .map(|(f, m)| {
+                    f + headroom * if total_m > 0.0 { m / total_m } else { 1.0 / n }
+                })
+                .collect()
+        } else if total_m > 0.0 {
+            // Infeasible cap: best effort, pure proportional (nodes clamp
+            // to the ladder floor below their share anyway).
+            measured.iter().map(|m| self.cap_w * m / total_m).collect()
+        } else {
+            engines.iter().map(|_| self.cap_w / n).collect()
+        };
+        let mut clamp_mhz = Vec::with_capacity(engines.len());
+        let mut granted_w = Vec::with_capacity(engines.len());
+        let mut infeasible = 0;
+        for (e, &share) in engines.iter_mut().zip(&share_w) {
+            let gpus = e.num_gpus();
+            let clamp = match self.grant_for_share(gpus, share) {
+                Some(f) => f,
+                None => {
+                    infeasible += 1;
+                    self.ladder.min_mhz
+                }
+            };
+            e.set_clock_cap(t, clamp);
+            granted_w.push(gpus as f64 * self.power.active_w(clamp));
+            clamp_mhz.push(clamp);
+        }
+        self.epochs.push(PowerEpoch {
+            t_s: t,
+            measured_w: measured,
+            share_w,
+            clamp_mhz,
+            granted_w,
+            infeasible_nodes: infeasible,
+        });
+    }
+
+    /// First grant, before any demand exists: equal shares.
+    pub fn apply_initial(&mut self, engines: &mut [Engine<'_>]) {
+        let measured = vec![0.0; engines.len()];
+        self.arbitrate(0.0, measured, engines);
+        // The t=0 record has no measurement; keep it for the clamp trail.
+    }
+
+    /// Epoch boundary at `t`: measure, re-split, re-grant.
+    pub fn epoch(&mut self, t: f64, engines: &mut [Engine<'_>]) {
+        let dt = t - self.last_t;
+        if dt <= 0.0 {
+            return;
+        }
+        let measured: Vec<f64> = engines
+            .iter_mut()
+            .enumerate()
+            .map(|(i, e)| {
+                let now = e.energy_now_j(t);
+                let p = (now - self.last_energy_j[i]) / dt;
+                self.last_energy_j[i] = now;
+                p
+            })
+            .collect();
+        self.last_t = t;
+        self.arbitrate(t, measured, engines);
+    }
+
+    /// Highest measured cluster draw across completed epochs (W).
+    pub fn peak_measured_w(&self) -> f64 {
+        self.epochs
+            .iter()
+            .map(|e| e.total_measured_w())
+            .fold(0.0, f64::max)
+    }
+
+    /// Did any epoch have a share below the min-clock worst case?
+    pub fn had_infeasible_epoch(&self) -> bool {
+        self.epochs.iter().any(|e| e.infeasible_nodes > 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grant_fits_share_and_is_maximal() {
+        let a = PowerArbiter::new(4000.0, 1.0, 2);
+        // 8-GPU node, 2000 W share → some mid-ladder clock.
+        let f = a.grant_for_share(8, 2000.0).unwrap();
+        assert!(8.0 * a.power.active_w(f) <= 2000.0);
+        // One step up must overflow the share (maximality).
+        let up = f + a.ladder.step_mhz;
+        assert!(up > a.ladder.max_mhz || 8.0 * a.power.active_w(up) > 2000.0);
+        // Generous share → full boost; starvation share → None.
+        assert_eq!(a.grant_for_share(8, 1e9), Some(a.ladder.max_mhz));
+        assert_eq!(a.grant_for_share(8, 100.0), None);
+    }
+
+    #[test]
+    fn epoch_report_shares_sum_to_cap() {
+        // Shares are proportional splits of the cap, so they always sum to
+        // it (within float error) whenever total demand is positive.
+        let a = PowerArbiter::new(3000.0, 1.0, 3);
+        // Synthesized split (no engines needed for the math check).
+        let measured = [900.0, 600.0, 300.0];
+        let total: f64 = measured.iter().sum();
+        let shares: Vec<f64> = measured.iter().map(|m| a.cap_w * m / total).collect();
+        assert!((shares.iter().sum::<f64>() - a.cap_w).abs() < 1e-9);
+    }
+}

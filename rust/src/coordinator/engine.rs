@@ -10,6 +10,18 @@
 //! receives telemetry snapshots and event-driven TBT/token feedback and
 //! answers with NVML-style application clocks. Adding a governor therefore
 //! never touches this event loop.
+//!
+//! The engine runs in two modes sharing one code path:
+//! * *Replay* ([`run`]): the whole trace is pre-scheduled and the loop is
+//!   driven to completion internally — the single-node experiments.
+//! * *Stepped* (cluster): [`Engine::new`] + [`Engine::begin`] build an
+//!   engine with no arrivals; the cluster event loop injects requests
+//!   online ([`Engine::inject`]) and advances the node one event at a time
+//!   ([`Engine::step`]) so many nodes interleave on one virtual clock.
+//!   Live telemetry accessors (queue depths, outstanding prefill tokens,
+//!   decode TBT tail) feed the cluster load balancer, and
+//!   [`Engine::set_clock_cap`] lets the power arbiter clamp every clock
+//!   the policy requests.
 
 use crate::config::{Config, Method};
 use crate::coordinator::policy::{self, DvfsPolicy};
@@ -19,15 +31,18 @@ use crate::dvfs::prefill_opt::PrefillJobView;
 use crate::gpu::device::SimGpu;
 use crate::gpu::perf::PerfModel;
 use crate::gpu::power::PowerModel;
-use crate::metrics::TpsWindow;
+use crate::metrics::{SlidingP95, TpsWindow};
 use crate::model::ModelSpec;
 use crate::sim::EventQueue;
 use crate::slo::{RequestOutcome, SloTracker};
 use crate::util::rng::Pcg64;
 use crate::util::stats::percentile_exact;
-use crate::workload::request::Trace;
+use crate::workload::request::{Request, Trace};
 
 use std::collections::VecDeque;
+
+/// Recent-TBT window used for the cluster balancer's per-node tail signal.
+const TBT_TAIL_WINDOW: usize = 256;
 
 /// Run options (figure-specific recording).
 #[derive(Debug, Clone, Default)]
@@ -38,6 +53,9 @@ pub struct RunOptions {
     pub record_tps_series: bool,
     /// Keep per-request outcomes (Fig. 5 distributions).
     pub keep_outcomes: bool,
+    /// Maintain a sliding P95 over recent decode TBTs (cluster balancer
+    /// telemetry). Off by default: single-node replays skip the cost.
+    pub track_tbt_tail: bool,
 }
 
 /// Results of one replay.
@@ -128,10 +146,19 @@ struct DecodeWorker {
     batch_sum: u64,
 }
 
-struct Engine<'a> {
+/// One simulated node. See the module docs for the replay vs stepped modes.
+pub struct Engine<'a> {
     cfg: &'a Config,
-    trace: &'a Trace,
     opts: &'a RunOptions,
+    /// Requests this node has seen. In replay mode the full trace is loaded
+    /// up front; in stepped mode [`Engine::inject`] grows it online.
+    requests: Vec<Request>,
+    trace_name: String,
+    trace_duration_s: f64,
+    /// `Some(n)` in replay mode: ticks stop rescheduling once `n` requests
+    /// completed (the pre-refactor loop-exit condition, bit-for-bit).
+    /// `None` in stepped mode: the cluster loop decides when to stop.
+    replay_total: Option<u64>,
     perf: PerfModel,
     router: Router,
     q: EventQueue<Ev>,
@@ -158,98 +185,140 @@ struct Engine<'a> {
     /// Prefill deadline target per route class (SLO × margin).
     ttft_target_sm: f64,
     ttft_target_long: f64,
+    /// Power-arbiter clock ceiling: every requested clock is clamped to
+    /// this before reaching a GPU. `u32::MAX` = uncapped (no-op min).
+    clock_cap_mhz: u32,
+    /// Last clock each GPU's policy *requested* (pre-clamp). When the
+    /// arbiter raises the cap, clamped GPUs return to their requested
+    /// clock — tickless policies (Fixed) would otherwise ratchet down.
+    requested_mhz: Vec<u32>,
+    /// Prompt tokens queued or in prefill flight (O(1) balancer signal).
+    outstanding_prompt_tok: u64,
+    /// Streams admitted to decode (batched or waiting) and not yet done.
+    streams_active: usize,
+    /// Recent decode-TBT tail (only when `opts.track_tbt_tail`).
+    tbt_tail: Option<SlidingP95>,
 }
 
 /// Replay `trace` under `cfg`.
 pub fn run(cfg: &Config, trace: &Trace, opts: &RunOptions) -> RunResult {
-    let spec = ModelSpec::by_name(&cfg.model)
-        .unwrap_or_else(|| panic!("unknown model {:?}", cfg.model));
-    let perf = PerfModel::new(spec);
-    let power = PowerModel::a100();
-    let router = Router::new(cfg.method.routing(), cfg.pools.prefill_workers);
-
-    // --- GPUs -------------------------------------------------------------
-    let n_prefill_gpus = cfg.pools.prefill_workers * cfg.pools.gpus_per_prefill_worker;
-    let n_gpus = n_prefill_gpus + cfg.pools.decode_workers * cfg.pools.gpus_per_decode_worker;
-    let mut gpus: Vec<SimGpu> = (0..n_gpus).map(SimGpu::new).collect();
-    if opts.record_freq_trace {
-        gpus[0].record_trace = true; // prefill worker 0, gpu 0
-        gpus[n_prefill_gpus].record_trace = true; // decode worker 0
-    }
-
-    // --- Workers ------------------------------------------------------------
-    let prefill_workers: Vec<PrefillWorker> = (0..cfg.pools.prefill_workers)
-        .map(|w| PrefillWorker {
-            gpus: (0..cfg.pools.gpus_per_prefill_worker)
-                .map(|g| w * cfg.pools.gpus_per_prefill_worker + g)
-                .collect(),
-            queue: router.queue_of_worker(w),
-            current: None,
-            seq: 0,
-        })
-        .collect();
-    let decode_workers: Vec<DecodeWorker> = (0..cfg.pools.decode_workers)
-        .map(|w| DecodeWorker {
-            gpu: n_prefill_gpus + w * cfg.pools.gpus_per_decode_worker,
-            streams: Vec::new(),
-            round_active: false,
-            round_start: 0.0,
-            seq: 0,
-            batch_samples: 0,
-            batch_sum: 0,
-        })
-        .collect();
-
-    // --- Policy (the pluggable governor) -------------------------------------
-    let policy = policy::build(cfg, &perf, &power);
-    if let Some(mhz) = policy.initial_clock_mhz() {
-        for g in gpus.iter_mut() {
-            g.set_app_clock(0.0, mhz);
-        }
-    }
-    let tick_specs = policy.ticks();
-
-    let mut engine = Engine {
-        cfg,
-        trace,
-        opts,
-        perf,
-        router,
-        q: EventQueue::new(),
-        gpus,
-        prefill_queues: vec![VecDeque::new(), VecDeque::new()],
-        prefill_workers,
-        decode_workers,
-        decode_wait: VecDeque::new(),
-        policy,
-        tick_specs,
-        slo: {
-            let mut t = SloTracker::new(cfg.slo.clone());
-            t.keep_outcomes = opts.keep_outcomes;
-            t
-        },
-        rng: Pcg64::new(cfg.seed, 0xE2617E),
-        completed: 0,
-        generated_tokens: 0,
-        global_tps: TpsWindow::new(0.2),
-        tps_series: Vec::new(),
-        jobs_scratch: Vec::new(),
-        view_scratch: PoolView::default(),
-        plan_scratch: ClockPlan::default(),
-        ttft_target_sm: cfg.slo.ttft_short_medium_s * cfg.prefill_margin,
-        ttft_target_long: cfg.slo.ttft_long_s * cfg.prefill_margin,
-    };
+    let mut engine = Engine::new(cfg, opts, trace.name.clone(), trace.duration_s);
+    engine.load_trace(&trace.requests);
+    engine.begin();
     engine.run_loop()
 }
 
 impl<'a> Engine<'a> {
-    fn run_loop(&mut self) -> RunResult {
-        // Seed arrivals + policy ticks (in declaration order so replays of
-        // the pre-refactor method wiring stay bit-identical).
-        let trace = self.trace;
-        for (i, req) in trace.requests.iter().enumerate() {
-            self.q.schedule(req.arrival_s, Ev::Arrive(i));
+    /// Build a node engine with no scheduled arrivals. Call
+    /// [`Engine::load_trace`] (replay) or [`Engine::inject`] (stepped) to
+    /// feed it requests, and [`Engine::begin`] to arm the policy ticks.
+    pub fn new(cfg: &'a Config, opts: &'a RunOptions, trace_name: String, duration_s: f64) -> Self {
+        let spec = ModelSpec::by_name(&cfg.model)
+            .unwrap_or_else(|| panic!("unknown model {:?}", cfg.model));
+        let perf = PerfModel::new(spec);
+        let power = PowerModel::a100();
+        let router = Router::new(cfg.method.routing(), cfg.pools.prefill_workers);
+
+        // --- GPUs -------------------------------------------------------------
+        let n_prefill_gpus = cfg.pools.prefill_workers * cfg.pools.gpus_per_prefill_worker;
+        let n_gpus = n_prefill_gpus + cfg.pools.decode_workers * cfg.pools.gpus_per_decode_worker;
+        let mut gpus: Vec<SimGpu> = (0..n_gpus).map(SimGpu::new).collect();
+        if opts.record_freq_trace {
+            gpus[0].record_trace = true; // prefill worker 0, gpu 0
+            gpus[n_prefill_gpus].record_trace = true; // decode worker 0
         }
+
+        // --- Workers ----------------------------------------------------------
+        let prefill_workers: Vec<PrefillWorker> = (0..cfg.pools.prefill_workers)
+            .map(|w| PrefillWorker {
+                gpus: (0..cfg.pools.gpus_per_prefill_worker)
+                    .map(|g| w * cfg.pools.gpus_per_prefill_worker + g)
+                    .collect(),
+                queue: router.queue_of_worker(w),
+                current: None,
+                seq: 0,
+            })
+            .collect();
+        let decode_workers: Vec<DecodeWorker> = (0..cfg.pools.decode_workers)
+            .map(|w| DecodeWorker {
+                gpu: n_prefill_gpus + w * cfg.pools.gpus_per_decode_worker,
+                streams: Vec::new(),
+                round_active: false,
+                round_start: 0.0,
+                seq: 0,
+                batch_samples: 0,
+                batch_sum: 0,
+            })
+            .collect();
+
+        // --- Policy (the pluggable governor) ----------------------------------
+        let policy = policy::build(cfg, &perf, &power);
+        if let Some(mhz) = policy.initial_clock_mhz() {
+            for g in gpus.iter_mut() {
+                g.set_app_clock(0.0, mhz);
+            }
+        }
+        let requested_mhz = vec![gpus[0].sm_clock(); n_gpus];
+        let tick_specs = policy.ticks();
+
+        Engine {
+            cfg,
+            opts,
+            requests: Vec::new(),
+            trace_name,
+            trace_duration_s: duration_s,
+            replay_total: None,
+            perf,
+            router,
+            q: EventQueue::new(),
+            gpus,
+            prefill_queues: vec![VecDeque::new(), VecDeque::new()],
+            prefill_workers,
+            decode_workers,
+            decode_wait: VecDeque::new(),
+            policy,
+            tick_specs,
+            slo: {
+                let mut t = SloTracker::new(cfg.slo.clone());
+                t.keep_outcomes = opts.keep_outcomes;
+                t
+            },
+            rng: Pcg64::new(cfg.seed, 0xE2617E),
+            completed: 0,
+            generated_tokens: 0,
+            global_tps: TpsWindow::new(0.2),
+            tps_series: Vec::new(),
+            jobs_scratch: Vec::new(),
+            view_scratch: PoolView::default(),
+            plan_scratch: ClockPlan::default(),
+            ttft_target_sm: cfg.slo.ttft_short_medium_s * cfg.prefill_margin,
+            ttft_target_long: cfg.slo.ttft_long_s * cfg.prefill_margin,
+            clock_cap_mhz: u32::MAX,
+            requested_mhz,
+            outstanding_prompt_tok: 0,
+            streams_active: 0,
+            tbt_tail: opts
+                .track_tbt_tail
+                .then(|| SlidingP95::new(TBT_TAIL_WINDOW)),
+        }
+    }
+
+    /// Pre-schedule a whole trace (replay mode). Arrivals get the lowest
+    /// event sequence numbers, which keeps equal-time ordering identical to
+    /// the pre-refactor loop.
+    pub fn load_trace(&mut self, requests: &[Request]) {
+        debug_assert!(self.requests.is_empty(), "load_trace on a seeded engine");
+        self.requests = requests.to_vec();
+        for i in 0..self.requests.len() {
+            let t = self.requests[i].arrival_s;
+            self.q.schedule_priority(t, Ev::Arrive(i));
+        }
+        self.replay_total = Some(self.requests.len() as u64);
+    }
+
+    /// Arm policy ticks (and the TPS sampler). Call exactly once, after
+    /// [`Engine::load_trace`] in replay mode.
+    pub fn begin(&mut self) {
         let specs = self.tick_specs.clone();
         for (kind, spec) in specs.iter().enumerate() {
             self.q.schedule(spec.interval_s, Ev::PolicyTick(kind));
@@ -257,33 +326,74 @@ impl<'a> Engine<'a> {
         if self.opts.record_tps_series {
             self.q.schedule(0.2, Ev::SampleTick);
         }
+    }
 
-        let total = self.trace.requests.len() as u64;
-        while self.completed < total {
-            let Some((t, ev)) = self.q.pop() else { break };
-            match ev {
-                Ev::Arrive(i) => self.on_arrive(t, i),
-                Ev::PrefillDone { worker, seq } => self.on_prefill_done(t, worker, seq),
-                Ev::DecodeRound { worker, seq } => self.on_decode_round(t, worker, seq),
-                Ev::PolicyTick(kind) => {
-                    self.policy_tick(t, kind);
-                    if self.completed < total {
-                        let dt = self.tick_specs[kind].interval_s;
-                        self.q.schedule_in(dt, Ev::PolicyTick(kind));
-                    }
+    /// Hand one request to this node at time `t` (stepped mode only).
+    pub fn inject(&mut self, t: f64, req: Request) {
+        debug_assert!(
+            self.replay_total.is_none(),
+            "inject into a replay-mode engine"
+        );
+        let idx = self.requests.len();
+        self.requests.push(req);
+        // Priority lane: an injected arrival orders exactly like a
+        // pre-scheduled one at the same timestamp (see `sim`).
+        self.q.schedule_priority(t, Ev::Arrive(idx));
+    }
+
+    /// Ticks keep rescheduling while the run is live. In replay mode that
+    /// is "not all trace requests completed" (pre-refactor semantics); in
+    /// stepped mode the cluster loop simply stops stepping when done.
+    fn keep_ticking(&self) -> bool {
+        match self.replay_total {
+            Some(total) => self.completed < total,
+            None => true,
+        }
+    }
+
+    /// Process the next event. Returns false when the queue is empty.
+    pub fn step(&mut self) -> bool {
+        let Some((t, ev)) = self.q.pop() else {
+            return false;
+        };
+        match ev {
+            Ev::Arrive(i) => self.on_arrive(t, i),
+            Ev::PrefillDone { worker, seq } => self.on_prefill_done(t, worker, seq),
+            Ev::DecodeRound { worker, seq } => self.on_decode_round(t, worker, seq),
+            Ev::PolicyTick(kind) => {
+                self.policy_tick(t, kind);
+                if self.keep_ticking() {
+                    let dt = self.tick_specs[kind].interval_s;
+                    self.q.schedule_in(dt, Ev::PolicyTick(kind));
                 }
-                Ev::SampleTick => {
-                    let tps = self.global_tps.tps(t);
-                    self.tps_series.push((t, tps));
-                    if self.completed < total {
-                        self.q.schedule_in(0.2, Ev::SampleTick);
-                    }
+            }
+            Ev::SampleTick => {
+                let tps = self.global_tps.tps(t);
+                self.tps_series.push((t, tps));
+                if self.keep_ticking() {
+                    self.q.schedule_in(0.2, Ev::SampleTick);
                 }
             }
         }
+        true
+    }
 
-        // Final energy integration.
-        let end_t = self.q.now().max(self.trace.duration_s);
+    /// Drive a replay to completion (private: [`run`] is the public entry).
+    fn run_loop(&mut self) -> RunResult {
+        let total = self.replay_total.expect("run_loop requires load_trace");
+        while self.completed < total {
+            if !self.step() {
+                break;
+            }
+        }
+        self.finalize(self.trace_duration_s)
+    }
+
+    /// Final energy integration and result assembly. `end_floor` is the
+    /// earliest admissible end time (the trace duration for a replay, the
+    /// global cluster end otherwise).
+    pub fn finalize(&mut self, end_floor: f64) -> RunResult {
+        let end_t = self.q.now().max(end_floor);
         for g in self.gpus.iter_mut() {
             g.advance(end_t);
         }
@@ -304,7 +414,7 @@ impl<'a> Engine<'a> {
         let diag = self.policy.diagnostics();
 
         RunResult {
-            trace_name: self.trace.name.clone(),
+            trace_name: self.trace_name.clone(),
             method: self.cfg.method,
             slo: std::mem::replace(&mut self.slo, SloTracker::new(self.cfg.slo.clone())),
             prefill_energy_j: prefill_energy,
@@ -328,11 +438,99 @@ impl<'a> Engine<'a> {
         }
     }
 
+    // -- cluster-facing telemetry -------------------------------------------
+
+    /// Virtual time of this node's last processed event.
+    pub fn now(&self) -> f64 {
+        self.q.now()
+    }
+
+    /// Time of the next pending event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.q.peek_time()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Requests this node has been handed so far.
+    pub fn assigned(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Prefill jobs queued or in flight.
+    pub fn prefill_backlog(&self) -> usize {
+        self.prefill_queues.iter().map(|q| q.len()).sum::<usize>()
+            + self
+                .prefill_workers
+                .iter()
+                .filter(|w| w.current.is_some())
+                .count()
+    }
+
+    /// Prompt tokens queued or in prefill flight (maintained O(1)).
+    pub fn outstanding_prompt_tokens(&self) -> u64 {
+        self.outstanding_prompt_tok
+    }
+
+    /// Streams admitted to decode (batched or waiting) and not yet done.
+    pub fn active_streams(&self) -> usize {
+        self.streams_active
+    }
+
+    /// P95 of recent decode TBTs (0.0 until tracked samples exist; requires
+    /// [`RunOptions::track_tbt_tail`]).
+    pub fn tbt_tail_p95(&self) -> f64 {
+        self.tbt_tail.as_ref().map(|t| t.p95()).unwrap_or(0.0)
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// Cumulative node energy integrated up to `t` (power-arbiter
+    /// measurement; `t` must be ≥ every GPU's last state change).
+    pub fn energy_now_j(&mut self, t: f64) -> f64 {
+        for g in self.gpus.iter_mut() {
+            g.advance(t);
+        }
+        self.gpus.iter().map(|g| g.energy_j()).sum()
+    }
+
+    /// Current arbiter clock ceiling (`u32::MAX` = uncapped).
+    pub fn clock_cap_mhz(&self) -> u32 {
+        self.clock_cap_mhz
+    }
+
+    /// Clamp this node's clock ceiling (power arbiter grant). Any GPU
+    /// above the cap is pulled down immediately; when a later grant
+    /// raises the cap, previously clamped GPUs return to their policy's
+    /// last *requested* clock (tickless policies never re-request, so the
+    /// engine restores for them). Future requests are clamped at the
+    /// engine boundary. `cap_mhz` must be a ladder frequency.
+    pub fn set_clock_cap(&mut self, t: f64, cap_mhz: u32) {
+        debug_assert!(
+            self.gpus[0].ladder.contains(cap_mhz),
+            "arbiter cap {cap_mhz} MHz off-ladder"
+        );
+        self.clock_cap_mhz = cap_mhz;
+        for (g, gpu) in self.gpus.iter_mut().enumerate() {
+            let want = self.requested_mhz[g].min(cap_mhz);
+            if gpu.sm_clock() != want {
+                gpu.set_app_clock(t, want);
+            }
+        }
+        self.policy.on_power_cap(cap_mhz);
+    }
+
     // -- helpers -------------------------------------------------------------
 
     fn set_worker_clock(&mut self, t: f64, first_gpu: usize, n: usize, mhz: u32) {
+        let clamped = mhz.min(self.clock_cap_mhz);
         for g in first_gpu..first_gpu + n {
-            self.gpus[g].set_app_clock(t, mhz);
+            self.requested_mhz[g] = mhz;
+            self.gpus[g].set_app_clock(t, clamped);
         }
     }
 
@@ -350,7 +548,7 @@ impl<'a> Engine<'a> {
 
     /// Deadline for a request's first token under the controller margin.
     fn deadline_of(&self, req_idx: usize) -> f64 {
-        let r = &self.trace.requests[req_idx];
+        let r = &self.requests[req_idx];
         let slo = match r.route_class() {
             crate::workload::request::RouteClass::Long => self.ttft_target_long,
             _ => self.ttft_target_sm,
@@ -365,12 +563,12 @@ impl<'a> Engine<'a> {
         let queue = self.prefill_workers[worker].queue;
         if let Some((req_idx, _)) = self.prefill_workers[worker].current {
             out.push(PrefillJobView {
-                prompt_len: self.trace.requests[req_idx].prompt_len,
+                prompt_len: self.requests[req_idx].prompt_len,
                 deadline_s: self.deadline_of(req_idx),
             });
         }
         out.extend(self.prefill_queues[queue].iter().map(|j| PrefillJobView {
-            prompt_len: self.trace.requests[j.req_idx].prompt_len,
+            prompt_len: self.requests[j.req_idx].prompt_len,
             deadline_s: self.deadline_of(j.req_idx),
         }));
     }
@@ -406,6 +604,9 @@ impl<'a> Engine<'a> {
         let mut plan = std::mem::take(&mut self.plan_scratch);
         plan.reset(self.prefill_workers.len(), self.decode_workers.len());
         self.policy.on_tick(kind, t, &view, &mut plan);
+        // No clamping here: set_worker_clock records the *pre-clamp*
+        // request (so a raised power cap can restore it) and applies the
+        // cap itself.
 
         for (w, mhz) in plan.prefill_mhz.iter().enumerate() {
             if let Some(mhz) = mhz {
@@ -425,7 +626,8 @@ impl<'a> Engine<'a> {
     // -- prefill -------------------------------------------------------------
 
     fn on_arrive(&mut self, t: f64, req_idx: usize) {
-        let queue = self.router.queue_for(&self.trace.requests[req_idx]);
+        self.outstanding_prompt_tok += self.requests[req_idx].prompt_len as u64;
+        let queue = self.router.queue_for(&self.requests[req_idx]);
         self.prefill_queues[queue].push_back(QueuedJob { req_idx });
         // Kick an idle worker serving (or allowed to steal from) this queue.
         let workers = self.router.candidate_workers(queue);
@@ -489,7 +691,7 @@ impl<'a> Engine<'a> {
             self.set_prefill_worker_clock(t, worker, mhz);
         }
         let mhz = self.prefill_clock(worker);
-        let len = self.trace.requests[job.req_idx].prompt_len;
+        let len = self.requests[job.req_idx].prompt_len;
         let dt = self.perf.prefill_time(len as usize, mhz) * self.rng.noise(self.cfg.sim_noise);
         let (g0, n) = (
             self.prefill_workers[worker].gpus[0],
@@ -509,7 +711,10 @@ impl<'a> Engine<'a> {
             return; // stale event
         }
         self.prefill_workers[worker].current = None;
-        let req = &self.trace.requests[req_idx];
+        let req = self.requests[req_idx].clone();
+        self.outstanding_prompt_tok = self
+            .outstanding_prompt_tok
+            .saturating_sub(req.prompt_len as u64);
         let ttft = t - req.arrival_s;
         self.generated_tokens += 1; // prefill emits the first token
         self.global_tps.record(t, 1);
@@ -536,6 +741,7 @@ impl<'a> Engine<'a> {
                 joined_t: t,
                 tbts: Vec::with_capacity(req.output_len as usize),
             };
+            self.streams_active += 1;
             self.admit_stream(t, stream, ttft);
         }
         // Next job (or park).
@@ -602,6 +808,7 @@ impl<'a> Engine<'a> {
             // round-duration TBT, fed as ONE weighted sample below — §Perf.
             let w = &mut self.decode_workers[worker];
             let policy = &mut self.policy;
+            let tail = &mut self.tbt_tail;
             let mut i = 0;
             while i < w.streams.len() {
                 // Streams that joined mid-round wait for the next one.
@@ -616,6 +823,9 @@ impl<'a> Engine<'a> {
                     steady += 1;
                 } else {
                     policy.on_decode_tbt(worker, tbt); // fresh joiner
+                    if let Some(tt) = tail.as_mut() {
+                        tt.record(tbt);
+                    }
                 }
                 s.last_token_t = t;
                 s.ctx += 1.0;
@@ -631,6 +841,9 @@ impl<'a> Engine<'a> {
         self.generated_tokens += emitted as u64;
         self.global_tps.record(t, emitted);
         self.policy.on_decode_tbt_weighted(worker, t - round_start, steady);
+        if let Some(tt) = self.tbt_tail.as_mut() {
+            tt.record_weighted(t - round_start, steady);
+        }
         self.policy.on_decode_tokens(worker, t, emitted);
         for s in finished {
             self.finish_stream(t, s);
@@ -647,7 +860,7 @@ impl<'a> Engine<'a> {
     }
 
     fn finish_stream(&mut self, t: f64, s: Stream) {
-        let req = &self.trace.requests[s.req_idx];
+        let req = self.requests[s.req_idx].clone();
         let ttft = s.joined_t - req.arrival_s;
         let tbt_p95 = percentile_exact(&s.tbts, 0.95);
         self.slo.record(RequestOutcome {
@@ -660,6 +873,7 @@ impl<'a> Engine<'a> {
             finish_s: t,
         });
         self.completed += 1;
+        self.streams_active -= 1;
     }
 }
 
@@ -816,5 +1030,101 @@ mod tests {
         let trace = tiny_trace(40, 8.0, 300, 50);
         let r = run(&cfg(Method::DefaultNv), &trace, &RunOptions::default());
         assert!(r.mean_decode_batch >= 1.0);
+    }
+
+    #[test]
+    fn tbt_tail_tracked_only_on_request() {
+        let trace = tiny_trace(30, 5.0, 300, 30);
+        let cfg = cfg(Method::DefaultNv);
+        // Plain options: tail stays 0 (not tracked).
+        let plain_opts = RunOptions::default();
+        let mut e = Engine::new(&cfg, &plain_opts, "t".into(), trace.duration_s);
+        e.load_trace(&trace.requests);
+        e.begin();
+        while e.completed() < 30 {
+            assert!(e.step());
+        }
+        assert_eq!(e.tbt_tail_p95(), 0.0);
+        // Tracked options: a positive tail emerges.
+        let opts = RunOptions {
+            track_tbt_tail: true,
+            ..Default::default()
+        };
+        let mut e = Engine::new(&cfg, &opts, "t".into(), trace.duration_s);
+        e.load_trace(&trace.requests);
+        e.begin();
+        while e.completed() < 30 {
+            assert!(e.step());
+        }
+        assert!(e.tbt_tail_p95() > 0.0);
+    }
+
+    #[test]
+    fn stepped_mode_matches_replay_bit_exactly() {
+        let trace = tiny_trace(40, 5.0, 400, 24);
+        let cfg = cfg(Method::GreenLlm);
+        let replay = run(&cfg, &trace, &RunOptions::default());
+        // Drive the identical engine through the stepped interface, with
+        // arrivals injected online one at a time.
+        let opts = RunOptions::default();
+        let mut e = Engine::new(&cfg, &opts, trace.name.clone(), trace.duration_s);
+        e.begin();
+        let mut next = 0;
+        while e.completed() < trace.requests.len() as u64 {
+            let arrival = trace.requests.get(next).map(|r| r.arrival_s);
+            let take_arrival = match (arrival, e.peek_time()) {
+                (Some(ta), Some(tn)) => ta <= tn,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if take_arrival {
+                e.inject(arrival.unwrap(), trace.requests[next].clone());
+                next += 1;
+            } else if !e.step() {
+                break;
+            }
+        }
+        let stepped = e.finalize(trace.duration_s);
+        assert_eq!(replay.total_energy_j.to_bits(), stepped.total_energy_j.to_bits());
+        assert_eq!(replay.generated_tokens, stepped.generated_tokens);
+        assert_eq!(replay.completed, stepped.completed);
+    }
+
+    #[test]
+    fn raising_the_cap_restores_requested_clocks() {
+        // Fixed policies never re-request a clock, so the engine itself
+        // must restore them when the arbiter's grant goes back up.
+        let cfg = cfg(Method::Fixed(1200));
+        let opts = RunOptions::default();
+        let mut e = Engine::new(&cfg, &opts, "cap-cycle".into(), 10.0);
+        e.begin();
+        e.set_clock_cap(1.0, 900);
+        assert!(e.gpus.iter().all(|g| g.sm_clock() == 900));
+        e.set_clock_cap(2.0, 1410);
+        assert!(
+            e.gpus.iter().all(|g| g.sm_clock() == 1200),
+            "clamped GPUs must return to the policy's requested clock"
+        );
+    }
+
+    #[test]
+    fn clock_cap_clamps_all_requests() {
+        let trace = tiny_trace(30, 5.0, 400, 20);
+        let cfg = cfg(Method::DefaultNv);
+        let opts = RunOptions::default();
+        let mut e = Engine::new(&cfg, &opts, "capped".into(), trace.duration_s);
+        e.begin();
+        e.set_clock_cap(0.0, 600);
+        for r in &trace.requests {
+            e.inject(r.arrival_s, r.clone());
+        }
+        while e.completed() < 30 {
+            assert!(e.step());
+        }
+        let r = e.finalize(trace.duration_s);
+        assert_eq!(r.completed, 30);
+        // Capped defaultNV burns less energy than uncapped boost clocks.
+        let uncapped = run(&cfg, &trace, &RunOptions::default());
+        assert!(r.total_energy_j < uncapped.total_energy_j);
     }
 }

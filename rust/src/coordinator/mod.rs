@@ -12,7 +12,8 @@ pub mod policy;
 pub mod router;
 pub mod telemetry;
 
-pub use engine::{run, RunOptions, RunResult};
+pub use cluster::{run_cluster, ClusterConfig, ClusterResult, LbPolicy};
+pub use engine::{run, Engine, RunOptions, RunResult};
 pub use policy::{DvfsPolicy, PolicyDiagnostics};
 pub use router::Router;
 pub use telemetry::{ClockPlan, PoolView, TickSpec};

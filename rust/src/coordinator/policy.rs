@@ -114,6 +114,13 @@ pub trait DvfsPolicy {
         None
     }
 
+    /// The cluster power arbiter changed this node's clock ceiling: every
+    /// requested clock above `cap_mhz` will be clamped by the engine until
+    /// the next grant. Default no-op — clamping is enforced regardless;
+    /// learning policies may use the signal to avoid wasting exploration
+    /// on unreachable ladder rungs.
+    fn on_power_cap(&mut self, _cap_mhz: u32) {}
+
     fn diagnostics(&self) -> PolicyDiagnostics {
         PolicyDiagnostics::default()
     }

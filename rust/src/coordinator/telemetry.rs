@@ -56,6 +56,20 @@ impl ClockPlan {
         self.decode_mhz.clear();
         self.decode_mhz.resize(decode_workers, None);
     }
+
+    /// Clamp every decision to a clock ceiling. Note the engine enforces
+    /// the power arbiter's cap itself (recording the pre-clamp request so
+    /// a raised cap can restore it); this helper is for policies that
+    /// want to pre-shape a plan against a known ceiling, e.g. after an
+    /// [`on_power_cap`](crate::coordinator::policy::DvfsPolicy::on_power_cap)
+    /// notification.
+    pub fn clamp_to(&mut self, cap_mhz: u32) {
+        for m in self.prefill_mhz.iter_mut().chain(self.decode_mhz.iter_mut()) {
+            if let Some(v) = m {
+                *v = (*v).min(cap_mhz);
+            }
+        }
+    }
 }
 
 /// One periodic callback a policy asks the engine to schedule. The index
@@ -109,6 +123,18 @@ mod tests {
         p.decode_mhz[1] = Some(900);
         p.reset(2, 4);
         assert_eq!(p.decode_mhz[1], None);
+    }
+
+    #[test]
+    fn clamp_to_caps_only_set_decisions() {
+        let mut p = ClockPlan::default();
+        p.reset(2, 2);
+        p.prefill_mhz[0] = Some(1410);
+        p.decode_mhz[1] = Some(600);
+        p.clamp_to(900);
+        assert_eq!(p.prefill_mhz[0], Some(900));
+        assert_eq!(p.prefill_mhz[1], None); // untouched holds stay None
+        assert_eq!(p.decode_mhz[1], Some(600)); // under the cap: unchanged
     }
 
     #[test]

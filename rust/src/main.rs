@@ -227,6 +227,7 @@ fn microbench(args: &Args, duration: f64, seed: u64) -> Result<()> {
 
 fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
     use greenllm::bench::matrix::{matrix, MatrixConfig};
+    use greenllm::coordinator::cluster::LbPolicy;
     let mut cfg = MatrixConfig {
         model: args.get_or("model", "qwen3-14b").to_string(),
         duration_s: duration,
@@ -256,8 +257,49 @@ fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
             })
             .collect::<Result<Vec<_>>>()?;
     }
-    if cfg.traces.is_empty() || cfg.methods.is_empty() || cfg.margins.is_empty() {
-        return Err(anyhow!("matrix needs at least one trace, method and margin"));
+    if let Some(spec) = args.get("nodes") {
+        cfg.nodes = spec
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| anyhow!("bad node count {s:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(spec) = args.get("lb") {
+        cfg.lbs = if spec == "all" {
+            LbPolicy::all()
+        } else {
+            spec.split(',')
+                .map(|s| LbPolicy::parse(s).ok_or_else(|| anyhow!("unknown balancer {s:?}")))
+                .collect::<Result<Vec<_>>>()?
+        };
+    }
+    if let Some(spec) = args.get("power-cap-w") {
+        cfg.power_caps_w = spec
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|c| *c >= 0.0)
+                    .ok_or_else(|| anyhow!("bad power cap {s:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if cfg.traces.is_empty()
+        || cfg.methods.is_empty()
+        || cfg.margins.is_empty()
+        || cfg.nodes.is_empty()
+        || cfg.lbs.is_empty()
+        || cfg.power_caps_w.is_empty()
+    {
+        return Err(anyhow!(
+            "matrix needs at least one trace, method, margin, node count, balancer and cap"
+        ));
     }
     matrix(&cfg, args.get("json"), args.get("md"));
     Ok(())
@@ -265,37 +307,68 @@ fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
 
 fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
     use greenllm::coordinator::cluster::{run_cluster, ClusterConfig, LbPolicy};
-    let nodes = args.usize_or("nodes", 2)?;
-    let qps = args.f64_or("qps", 10.0)?;
-    let lb = match args.get_or("lb", "leastwork") {
-        "rr" | "roundrobin" => LbPolicy::RoundRobin,
-        _ => LbPolicy::LeastPromptWork,
-    };
-    let trace = alibaba::generate(&ChatParams::new(qps, duration), seed);
+    let node_cfg = base_config(args, seed)?;
+    let nodes = args.usize_or("nodes", node_cfg.cluster.nodes)?;
+    let lb_name = args.get_or("lb", &node_cfg.cluster.lb);
+    let lb = LbPolicy::parse(lb_name).ok_or_else(|| anyhow!("unknown balancer {lb_name:?}"))?;
+    let cap_w = args.f64_or("power-cap-w", node_cfg.cluster.power_cap_w)?;
+    let epoch_s = args.f64_or("power-epoch-s", node_cfg.cluster.power_epoch_s)?;
+    let trace = trace_from_args(args, duration, seed)?;
     println!(
-        "cluster: {nodes} nodes, {} requests at {qps} QPS aggregate, lb {lb:?}",
-        trace.requests.len()
+        "cluster: {nodes} nodes, {} requests ({:.1} QPS aggregate), lb {}, cap {}",
+        trace.requests.len(),
+        trace.qps(),
+        lb.name(),
+        if cap_w > 0.0 {
+            format!("{cap_w:.0} W / {epoch_s:.1} s epoch")
+        } else {
+            "uncapped".into()
+        }
     );
     for method in [Method::DefaultNv, Method::GreenLlm] {
-        let ccfg = ClusterConfig {
+        let mut ccfg = ClusterConfig::new(
             nodes,
             lb,
-            node: Config {
+            Config {
                 method,
-                seed,
-                ..Config::default()
+                ..node_cfg.clone()
             },
-        };
+        );
+        if cap_w > 0.0 {
+            ccfg = ccfg.with_power_cap(cap_w, epoch_s);
+        }
         let r = run_cluster(&ccfg, &trace, &Default::default());
+        let balance = r.balance_label();
         println!(
-            "{:<10} energy {:8.1} kJ ({:.2} J/tok) | TTFT {:5.1}% | TBT {:5.1}% | balance {:.2}",
+            "{:<10} energy {:8.1} kJ ({:.2} J/tok) | TTFT {:5.1}% | TBT {:5.1}% | balance {balance}",
             method.name(),
             r.total_energy_j / 1e3,
             r.energy_per_token_j(),
             r.ttft_pass_rate * 100.0,
             r.tbt_pass_rate * 100.0,
-            r.balance_ratio()
         );
+        for (i, n) in r.per_node.iter().enumerate() {
+            println!(
+                "  node{i}: {:5} reqs | {:7.1} kJ | TTFT {:5.1}% | TBT {:5.1}%",
+                r.assignment[i],
+                n.total_energy_j / 1e3,
+                n.slo.ttft_pass_rate() * 100.0,
+                n.slo.tbt_pass_rate() * 100.0,
+            );
+        }
+        if let Some(p) = &r.power {
+            println!(
+                "  power: cap {:.0} W | peak epoch {:.0} W | {} epochs{}",
+                p.cap_w,
+                p.peak_measured_w,
+                p.epochs.len(),
+                if p.had_infeasible_epoch {
+                    " | WARNING: infeasible share epochs"
+                } else {
+                    ""
+                }
+            );
+        }
     }
     Ok(())
 }
@@ -364,11 +437,15 @@ COMMANDS
   profile     fit + print the latency/power models (Figs. 7-8)
   fig1 fig3a fig3b fig3c fig5 fig7 fig8 fig10 fig11 fig12a fig12b
               regenerate a paper figure
-  table3 table4 ablations baselines cluster
+  table3 table4 ablations baselines
               regenerate a paper table
-  matrix      scenario matrix: traces x policies x margins across threads
-              (--traces a,b --methods a,b --margins 0.9,1.0 --threads N
-               --json out.json --md out.md)
+  cluster     event-driven multi-node simulation with online load balancing
+              (--nodes N --lb rr|leastwork|jsq|phase --power-cap-w W
+               --power-epoch-s S --trace ...)
+  matrix      scenario matrix: traces x policies x margins x cluster shapes
+              across threads (--traces a,b --methods a,b --margins 0.9,1.0
+               --nodes 1,2,4 --lb all|jsq,phase --power-cap-w 0,8000
+               --threads N --json out.json --md out.md)
   serve       end-to-end PJRT serving demo (needs `make artifacts`)
 
 FLAGS
@@ -378,7 +455,7 @@ FLAGS
   --method <name>       defaultnv | prefillsplit | greenllm | fixed<MHz> |
                         throttle | agft | pitbt
   --trace <name>        alibaba | azure_code5|8 | azure_conv5|8 | sinusoid |
-                        bursty
+                        bursty | diurnal | multitenant
   --qps <f>             alibaba chat rate
   --prefill-margin <f>  SLO margin factor (Fig. 12)
   --decode-margin <f>   SLO margin factor (Fig. 12)

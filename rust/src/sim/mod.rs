@@ -10,11 +10,21 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+/// Sequence-number base for normally scheduled events. Priority events
+/// ([`EventQueue::schedule_priority`]) draw from `0..PRIORITY_SEQ_BASE`, so
+/// at equal timestamps they always pop before normal events while staying
+/// FIFO among themselves. Replaying a trace schedules arrivals through the
+/// priority lane, which makes online-injected arrivals (cluster mode)
+/// order identically to pre-scheduled ones — the interleaved multi-engine
+/// loop stays bit-exact with the single-engine replay.
+const PRIORITY_SEQ_BASE: u64 = 1 << 63;
+
 /// An event queue over f64 seconds with FIFO tie-breaking.
 #[derive(Debug)]
 pub struct EventQueue<E> {
     heap: BinaryHeap<Entry<E>>,
     seq: u64,
+    prio_seq: u64,
     now: f64,
     pub popped: u64,
 }
@@ -55,7 +65,8 @@ impl<E> EventQueue<E> {
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
-            seq: 0,
+            seq: PRIORITY_SEQ_BASE,
+            prio_seq: 0,
             now: 0.0,
             popped: 0,
         }
@@ -73,6 +84,22 @@ impl<E> EventQueue<E> {
     /// heap — both silently corrupt a replay, so they are programming
     /// errors, not schedulable states.
     pub fn schedule(&mut self, t: f64, ev: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.push_at(t, seq, ev);
+    }
+
+    /// Schedule an event that beats every *normally* scheduled event at the
+    /// same timestamp (FIFO among priority events). Used for request
+    /// arrivals so injection order never depends on when ticks were armed.
+    pub fn schedule_priority(&mut self, t: f64, ev: E) {
+        let seq = self.prio_seq;
+        self.prio_seq += 1;
+        debug_assert!(self.prio_seq < PRIORITY_SEQ_BASE);
+        self.push_at(t, seq, ev);
+    }
+
+    fn push_at(&mut self, t: f64, seq: u64, ev: E) {
         assert!(t.is_finite(), "non-finite event time {t} (now={})", self.now);
         debug_assert!(
             t + 1e-9 >= self.now,
@@ -80,12 +107,7 @@ impl<E> EventQueue<E> {
             self.now
         );
         let t = t.max(self.now);
-        self.heap.push(Entry {
-            t,
-            seq: self.seq,
-            ev,
-        });
-        self.seq += 1;
+        self.heap.push(Entry { t, seq, ev });
     }
 
     /// Schedule an event `dt` seconds from now (`dt` must be finite; a
@@ -121,6 +143,23 @@ impl<E> Default for EventQueue<E> {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// Multi-engine stepping: index of the earliest pending time among many
+/// event sources (`None` entries are sources with nothing pending). Ties
+/// break toward the lowest index, so interleaving several engines on one
+/// virtual clock is deterministic.
+pub fn earliest(times: &[Option<f64>]) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for (i, t) in times.iter().enumerate() {
+        if let Some(t) = *t {
+            debug_assert!(!t.is_nan(), "NaN pending time from source {i}");
+            if best.map(|(bt, _)| t < bt).unwrap_or(true) {
+                best = Some((t, i));
+            }
+        }
+    }
+    best.map(|(_, i)| i)
 }
 
 #[cfg(test)]
@@ -216,6 +255,28 @@ mod tests {
     fn nan_relative_delay_rejected() {
         let mut q = EventQueue::new();
         q.schedule_in(f64::NAN, ());
+    }
+
+    #[test]
+    fn priority_events_beat_equal_time_normal_events() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "tick");
+        q.schedule_priority(1.0, "arrive0");
+        q.schedule_priority(1.0, "arrive1");
+        q.schedule(0.5, "early");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        // Time still dominates; priority only breaks exact-time ties, and
+        // priority events stay FIFO among themselves.
+        assert_eq!(order, vec!["early", "arrive0", "arrive1", "tick"]);
+    }
+
+    #[test]
+    fn earliest_picks_min_with_low_index_ties() {
+        assert_eq!(earliest(&[]), None);
+        assert_eq!(earliest(&[None, None]), None);
+        assert_eq!(earliest(&[Some(2.0), Some(1.0), None]), Some(1));
+        assert_eq!(earliest(&[Some(1.0), Some(1.0)]), Some(0));
+        assert_eq!(earliest(&[None, Some(3.0)]), Some(1));
     }
 
     #[test]

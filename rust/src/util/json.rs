@@ -84,6 +84,13 @@ impl Json {
         }
     }
 
+    /// Build an object from `(key, value)` pairs — the report emitters'
+    /// idiom (matrix cells, per-node cluster sections) without BTreeMap
+    /// boilerplate at every call site.
+    pub fn obj<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
     /// Serialize compactly (no whitespace). Non-finite numbers become
     /// `null` (JSON has no NaN/inf).
     pub fn dump(&self) -> String {
@@ -385,6 +392,17 @@ mod tests {
         assert_eq!(Json::Num(-1.5).dump(), "-1.5");
         assert_eq!(Json::Num(f64::NAN).dump(), "null");
         assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+    }
+
+    #[test]
+    fn obj_builder_round_trips() {
+        let v = Json::obj([
+            ("node", Json::Num(0.0)),
+            ("energy_j", Json::Num(12.5)),
+            ("name", Json::Str("node0".into())),
+        ]);
+        assert_eq!(v.get("energy_j").unwrap().as_f64(), Some(12.5));
+        assert_eq!(Json::parse(&v.dump()).unwrap(), v);
     }
 
     #[test]

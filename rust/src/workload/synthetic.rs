@@ -189,6 +189,117 @@ pub fn bursty(
     }
 }
 
+/// Diurnal workload: request rate follows a day/night sinusoid between
+/// `night_qps` and `day_qps` over `period_s` (one simulated "day"). The
+/// cluster scaling story's canonical trace: at night most nodes idle (the
+/// power arbiter can starve them down the ladder), at noon the balancer
+/// must spread a multiple of the average load.
+pub fn diurnal(
+    day_qps: f64,
+    night_qps: f64,
+    period_s: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Trace {
+    assert!(day_qps > night_qps && night_qps >= 0.0);
+    assert!(period_s > 0.0);
+    let mut rng = Pcg64::new(seed, 0xD107A1);
+    let mid = 0.5 * (day_qps + night_qps);
+    let amp = 0.5 * (day_qps - night_qps);
+    let mut requests = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0;
+    // Thinning against the peak rate; phase shifted so the trace starts at
+    // the mean on the way up (morning).
+    loop {
+        t += rng.exponential(day_qps);
+        if t >= duration_s {
+            break;
+        }
+        let rate_t = mid + amp * (2.0 * std::f64::consts::PI * t / period_s).sin();
+        if !rng.chance(rate_t / day_qps) {
+            continue;
+        }
+        // Chat-like mix (same family as `bursty`): short/medium prompts
+        // with a heavy long tail.
+        let prompt_len = if rng.chance(0.10) {
+            (rng.pareto(1024.0, 1.8) as u32).clamp(1024, 8192)
+        } else {
+            (rng.lognormal((256.0_f64).ln(), 0.8) as u32).clamp(16, 1023)
+        };
+        requests.push(Request {
+            id,
+            arrival_s: t,
+            prompt_len,
+            output_len: (rng.lognormal((180.0_f64).ln(), 0.6) as u32).clamp(1, 1024),
+        });
+        id += 1;
+    }
+    Trace {
+        name: format!("diurnal_{night_qps}-{day_qps}qps"),
+        duration_s,
+        requests,
+    }
+}
+
+/// Multi-tenant workload: two request classes with distinct shapes sharing
+/// one cluster.
+///
+/// * *Interactive* (chat): short prompts (16–512), mid-length streamed
+///   outputs — lives under the tight short/medium TTFT + P95 TBT SLOs.
+/// * *Batch* (summarization): long prompts (1024–6144), short outputs —
+///   falls under the relaxed long-prompt TTFT SLO by construction
+///   (`RouteClass::Long`), which is exactly the class split the
+///   phase-aware cluster balancer routes to dedicated nodes.
+pub fn multi_tenant(
+    interactive_qps: f64,
+    batch_qps: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Trace {
+    assert!(interactive_qps > 0.0 && batch_qps > 0.0);
+    let mut rng = Pcg64::new(seed, 0x7E7A17);
+    let mut requests = Vec::new();
+    // Interactive tenant.
+    let mut t = 0.0;
+    loop {
+        t += rng.exponential(interactive_qps);
+        if t >= duration_s {
+            break;
+        }
+        requests.push(Request {
+            id: 0, // re-assigned after the merge sort
+            arrival_s: t,
+            prompt_len: (rng.lognormal((128.0_f64).ln(), 0.7) as u32).clamp(16, 512),
+            output_len: (rng.lognormal((200.0_f64).ln(), 0.5) as u32).clamp(8, 1024),
+        });
+    }
+    // Batch tenant: long prefill, terse output.
+    let mut t = 0.0;
+    loop {
+        t += rng.exponential(batch_qps);
+        if t >= duration_s {
+            break;
+        }
+        requests.push(Request {
+            id: 0,
+            arrival_s: t,
+            prompt_len: (rng.lognormal((2048.0_f64).ln(), 0.5) as u32).clamp(1024, 6144),
+            output_len: (rng.lognormal((64.0_f64).ln(), 0.5) as u32).clamp(4, 256),
+        });
+    }
+    // Merge to one arrival-ordered stream with stable ids.
+    requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    Trace {
+        name: format!("multitenant_{interactive_qps}+{batch_qps}qps"),
+        duration_s,
+        requests,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,12 +381,53 @@ mod tests {
     }
 
     #[test]
+    fn diurnal_day_night_contrast() {
+        // One full day in 400 s: day peak around t=100, night around t=300.
+        let t = diurnal(12.0, 1.0, 400.0, 400.0, 7);
+        let count = |lo: f64, hi: f64| {
+            t.requests
+                .iter()
+                .filter(|r| r.arrival_s >= lo && r.arrival_s < hi)
+                .count()
+        };
+        let day = count(60.0, 140.0);
+        let night = count(260.0, 340.0);
+        assert!(day > 3 * night.max(1), "day={day} night={night}");
+        // Deterministic under a fixed seed.
+        assert_eq!(t.requests, diurnal(12.0, 1.0, 400.0, 400.0, 7).requests);
+    }
+
+    #[test]
+    fn multi_tenant_has_both_classes_sorted_and_ided() {
+        let t = multi_tenant(6.0, 1.5, 300.0, 11);
+        t.assert_sorted();
+        let long = t.requests.iter().filter(|r| r.prompt_len >= 1024).count();
+        let short = t.requests.len() - long;
+        assert!(long > 0 && short > 0);
+        // Batch tenant arrives ~4× less often than interactive.
+        assert!(short > 2 * long, "short={short} long={long}");
+        // Ids are the merged arrival order.
+        for (i, r) in t.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        // Batch prompts are long-routed, outputs terse.
+        assert!(t
+            .requests
+            .iter()
+            .filter(|r| r.prompt_len >= 1024)
+            .all(|r| r.output_len <= 256));
+        assert_eq!(t.requests, multi_tenant(6.0, 1.5, 300.0, 11).requests);
+    }
+
+    #[test]
     fn sorted_and_bounded() {
         for t in [
             prefill_microbench(2000.0, 256, 1024, 100.0, 1),
             decode_microbench(500.0, 100.0, 1),
             sinusoid_decode(200.0, 1000.0, 60.0, 100.0, 1),
             bursty(2.0, 12.0, 30.0, 10.0, 100.0, 1),
+            diurnal(10.0, 1.0, 200.0, 100.0, 1),
+            multi_tenant(5.0, 1.0, 100.0, 1),
         ] {
             t.assert_sorted();
             assert!(t.requests.iter().all(|r| r.arrival_s < t.duration_s));

@@ -1,0 +1,216 @@
+//! Cluster coordinator invariants: conservation under every ingress
+//! policy, bit-exact degeneration to a single node, power-arbiter budget
+//! guarantees, and determinism of the interleaved event loop.
+
+use greenllm::config::{Config, Method};
+use greenllm::coordinator::cluster::{run_cluster, ClusterConfig, LbPolicy};
+use greenllm::coordinator::engine::{run, RunOptions};
+use greenllm::workload::alibaba::{generate, ChatParams};
+use greenllm::workload::request::Trace;
+use greenllm::workload::synthetic;
+
+fn node_cfg(method: Method, seed: u64) -> Config {
+    Config {
+        method,
+        seed,
+        ..Config::default()
+    }
+}
+
+fn chat(qps: f64, duration: f64, seed: u64) -> Trace {
+    generate(&ChatParams::new(qps, duration), seed)
+}
+
+#[test]
+fn every_lb_policy_conserves_requests_and_tokens() {
+    let trace = chat(12.0, 45.0, 3);
+    let expect_tokens: u64 = trace.requests.iter().map(|r| r.output_len as u64).sum();
+    for lb in LbPolicy::all() {
+        for nodes in [2, 3] {
+            let ccfg = ClusterConfig::new(nodes, lb, node_cfg(Method::GreenLlm, 9));
+            let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+            assert_eq!(
+                r.completed as usize,
+                trace.requests.len(),
+                "{lb:?} x{nodes}: lost requests"
+            );
+            assert_eq!(
+                r.generated_tokens, expect_tokens,
+                "{lb:?} x{nodes}: token conservation"
+            );
+            assert_eq!(
+                r.assignment.iter().sum::<usize>(),
+                trace.requests.len(),
+                "{lb:?} x{nodes}: assignment accounting"
+            );
+            // Per-node completions add up too.
+            let per: u64 = r.per_node.iter().map(|n| n.completed).sum();
+            assert_eq!(per, r.completed, "{lb:?} x{nodes}");
+        }
+    }
+}
+
+#[test]
+fn multi_tenant_trace_conserves_under_phase_aware() {
+    let trace = synthetic::multi_tenant(6.0, 1.5, 45.0, 5);
+    let ccfg = ClusterConfig::new(4, LbPolicy::PhaseAware, node_cfg(Method::GreenLlm, 1));
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len());
+    // The dedicated long pool (last node) must actually receive traffic on
+    // a long-prompt-heavy tenant mix.
+    assert!(r.assignment[3] > 0, "long pool starved: {:?}", r.assignment);
+}
+
+#[test]
+fn single_node_cluster_bit_exact_with_plain_run_per_method() {
+    // The interleaved event loop with online injection must reproduce the
+    // pre-scheduled replay exactly when there is nothing to balance.
+    let trace = chat(5.0, 40.0, 11);
+    for method in [Method::DefaultNv, Method::GreenLlm, Method::Agft] {
+        for lb in LbPolicy::all() {
+            let ccfg = ClusterConfig::new(1, lb, node_cfg(method, 23));
+            let c = run_cluster(&ccfg, &trace, &RunOptions::default());
+            let plain = run(&node_cfg(method, 23), &trace, &RunOptions::default());
+            assert_eq!(
+                c.total_energy_j.to_bits(),
+                plain.total_energy_j.to_bits(),
+                "{method:?}/{lb:?}: energy drifted"
+            );
+            assert_eq!(
+                c.per_node[0].events_processed, plain.events_processed,
+                "{method:?}/{lb:?}: event count drifted"
+            );
+            assert_eq!(c.generated_tokens, plain.generated_tokens);
+            assert_eq!(
+                c.ttft_pass_rate.to_bits(),
+                plain.slo.ttft_pass_rate().to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn interleaved_loop_is_deterministic_under_fixed_seed() {
+    let trace = chat(10.0, 40.0, 17);
+    for lb in [LbPolicy::JoinShortestQueue, LbPolicy::PhaseAware] {
+        let mk = || {
+            let ccfg = ClusterConfig::new(3, lb, node_cfg(Method::GreenLlm, 7));
+            run_cluster(&ccfg, &trace, &RunOptions::default())
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+        assert_eq!(a.assignment, b.assignment);
+        for (x, y) in a.per_node.iter().zip(&b.per_node) {
+            assert_eq!(x.events_processed, y.events_processed, "{lb:?}");
+            assert_eq!(x.total_energy_j.to_bits(), y.total_energy_j.to_bits());
+        }
+    }
+}
+
+#[test]
+fn power_arbiter_grants_never_exceed_cap() {
+    let trace = chat(10.0, 40.0, 29);
+    let cap_w = 4200.0; // 2 nodes × 8 GPUs: feasible but binding
+    let ccfg = ClusterConfig::new(
+        2,
+        LbPolicy::JoinShortestQueue,
+        node_cfg(Method::DefaultNv, 3),
+    )
+    .with_power_cap(cap_w, 1.0);
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len());
+    let p = r.power.as_ref().expect("capped run has a power report");
+    assert!(!p.epochs.is_empty());
+    assert!(!p.had_infeasible_epoch, "cap should be feasible");
+    for e in &p.epochs {
+        // The arbiter's own invariant: worst-case grants fit the budget.
+        assert!(
+            e.total_granted_w() <= cap_w + 1e-6,
+            "granted {} W > cap {cap_w} W at t={}",
+            e.total_granted_w(),
+            e.t_s
+        );
+        // Shares are a split of the cap.
+        assert!(e.share_w.iter().sum::<f64>() <= cap_w + 1e-6);
+        // And the measured consequence: the cluster never drew more than
+        // its budget in any control epoch.
+        assert!(
+            e.total_measured_w() <= cap_w + 1e-6,
+            "measured {} W > cap {cap_w} W at t={}",
+            e.total_measured_w(),
+            e.t_s
+        );
+        // Grants are real ladder clamps.
+        for &c in &e.clamp_mhz {
+            assert!((210..=1410).contains(&c) && (c - 210) % 15 == 0);
+        }
+    }
+    // The cap binds: defaultNV would boost to 1410 MHz without it.
+    assert!(
+        p.epochs.iter().any(|e| e.clamp_mhz.iter().any(|&c| c < 1410)),
+        "cap never clamped anything"
+    );
+}
+
+#[test]
+fn power_capped_greenllm_still_completes_with_sane_slos() {
+    let trace = chat(6.0, 40.0, 31);
+    let ccfg = ClusterConfig::new(2, LbPolicy::PhaseAware, node_cfg(Method::GreenLlm, 5))
+        .with_power_cap(5000.0, 1.0);
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len());
+    // A loose cap shouldn't wreck SLOs at light per-node load.
+    assert!(r.ttft_pass_rate > 0.8, "ttft {}", r.ttft_pass_rate);
+    let p = r.power.unwrap();
+    assert!(p.peak_measured_w <= 5000.0 + 1e-6);
+}
+
+#[test]
+fn capped_cluster_is_deterministic() {
+    let trace = chat(8.0, 30.0, 37);
+    let mk = || {
+        let ccfg = ClusterConfig::new(
+            2,
+            LbPolicy::JoinShortestQueue,
+            node_cfg(Method::GreenLlm, 2),
+        )
+        .with_power_cap(4200.0, 0.5);
+        run_cluster(&ccfg, &trace, &RunOptions::default())
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    let (pa, pb) = (a.power.unwrap(), b.power.unwrap());
+    assert_eq!(pa.epochs.len(), pb.epochs.len());
+    for (x, y) in pa.epochs.iter().zip(&pb.epochs) {
+        assert_eq!(x.clamp_mhz, y.clamp_mhz);
+        assert_eq!(
+            x.total_measured_w().to_bits(),
+            y.total_measured_w().to_bits()
+        );
+    }
+}
+
+#[test]
+fn cluster_acceptance_greenllm_beats_defaultnv_at_equal_nodes() {
+    // The PR's headline criterion: ≥15 % cluster energy saving vs
+    // defaultNV at equal node count with pass rates > 0.9.
+    let trace = chat(10.0, 60.0, 41);
+    for lb in [LbPolicy::JoinShortestQueue, LbPolicy::PhaseAware] {
+        let nv = run_cluster(
+            &ClusterConfig::new(2, lb, node_cfg(Method::DefaultNv, 5)),
+            &trace,
+            &RunOptions::default(),
+        );
+        let green = run_cluster(
+            &ClusterConfig::new(2, lb, node_cfg(Method::GreenLlm, 5)),
+            &trace,
+            &RunOptions::default(),
+        );
+        let saving = 1.0 - green.total_energy_j / nv.total_energy_j;
+        assert!(saving > 0.15, "{lb:?}: saving {saving:.3}");
+        assert!(green.ttft_pass_rate > 0.9, "{lb:?}");
+        assert!(green.tbt_pass_rate > 0.9, "{lb:?}");
+    }
+}

@@ -15,6 +15,7 @@
 //!     with `GREENLLM_BLESS=1 cargo test --test golden_replay`.
 
 use greenllm::config::{Config, Method};
+use greenllm::coordinator::cluster::{run_cluster, ClusterConfig, ClusterResult, LbPolicy};
 use greenllm::coordinator::engine::{run, RunOptions, RunResult};
 use greenllm::workload::request::{Request, Trace};
 use std::fmt::Write as _;
@@ -64,6 +65,30 @@ fn run_once(method: Method) -> RunResult {
         ..Config::default()
     };
     run(&cfg, &golden_trace(), &RunOptions::default())
+}
+
+/// The interleaved-cluster scenario pinned alongside the per-method rows:
+/// 2 nodes, join-shortest-queue ingress, GreenLLM per node.
+fn run_cluster_once() -> ClusterResult {
+    let ccfg = ClusterConfig::new(
+        2,
+        LbPolicy::JoinShortestQueue,
+        Config {
+            method: Method::GreenLlm,
+            seed: SEED,
+            ..Config::default()
+        },
+    );
+    run_cluster(&ccfg, &golden_trace(), &RunOptions::default())
+}
+
+#[test]
+fn cluster_scenario_structural_totals_are_exact() {
+    let r = run_cluster_once();
+    assert_eq!(r.completed, 24);
+    assert_eq!(r.generated_tokens, 294);
+    assert_eq!(r.assignment.iter().sum::<usize>(), 24);
+    assert!(r.total_energy_j > 0.0 && r.total_energy_j.is_finite());
 }
 
 #[test]
@@ -136,6 +161,18 @@ impl GoldenRow {
             energy_bits: Some(r.total_energy_j.to_bits()),
             ttft_bits: Some(r.slo.ttft_pass_rate().to_bits()),
             tbt_bits: Some(r.slo.tbt_pass_rate().to_bits()),
+        }
+    }
+
+    fn from_cluster(label: &str, r: &ClusterResult) -> GoldenRow {
+        GoldenRow {
+            method: label.to_string(),
+            completed: r.completed,
+            tokens: r.generated_tokens,
+            events: Some(r.per_node.iter().map(|n| n.events_processed).sum()),
+            energy_bits: Some(r.total_energy_j.to_bits()),
+            ttft_bits: Some(r.ttft_pass_rate.to_bits()),
+            tbt_bits: Some(r.tbt_pass_rate.to_bits()),
         }
     }
 
@@ -236,10 +273,14 @@ fn matches_committed_golden_snapshot() {
         .map(|l| GoldenRow::parse(l).unwrap_or_else(|| panic!("bad golden line: {l}")))
         .collect();
 
-    let actual: Vec<GoldenRow> = methods()
+    let mut actual: Vec<GoldenRow> = methods()
         .iter()
         .map(|&m| GoldenRow::from_result(&run_once(m)))
         .collect();
+    actual.push(GoldenRow::from_cluster(
+        "cluster2-jsq-GreenLLM",
+        &run_cluster_once(),
+    ));
     assert_eq!(
         committed.len(),
         actual.len(),
