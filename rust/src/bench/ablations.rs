@@ -13,12 +13,19 @@ use crate::coordinator::engine::{run, RunOptions, RunResult};
 use crate::workload::alibaba::{self, ChatParams};
 use crate::workload::request::Trace;
 
+/// One ablation variant's results vs the full GreenLLM stack (Table 5).
 pub struct AblationRow {
+    /// Ablation variant label.
     pub variant: String,
+    /// Energy saving vs defaultNV, percent.
     pub delta_energy_pct: f64,
+    /// TTFT pass rate, percent.
     pub ttft_pct: f64,
+    /// TBT pass rate, percent.
     pub tbt_pct: f64,
+    /// Decode coarse-band switches (controller activity).
     pub band_switches: u64,
+    /// Decode band-table adaptations.
     pub adaptations: u64,
 }
 

@@ -12,11 +12,17 @@ use crate::gpu::freq::FreqLadder;
 use crate::workload::alibaba::{self, ChatParams};
 use crate::workload::request::Trace;
 
+/// One baseline row of the extended comparison (best-fixed sweep etc.).
 pub struct BaselineRow {
+    /// Workload label.
     pub workload: String,
+    /// Method label (includes the swept best-fixed clock).
     pub method: String,
+    /// Energy saving vs defaultNV, percent.
     pub delta_energy_pct: f64,
+    /// TTFT pass rate, percent.
     pub ttft_pct: f64,
+    /// TBT pass rate, percent.
     pub tbt_pct: f64,
 }
 
@@ -38,6 +44,8 @@ pub fn best_fixed(model: &str, trace: &Trace, seed: u64, nv: &RunResult) -> (u32
     best.unwrap_or_else(|| (1410, run_method(model, Method::Fixed(1410), trace, seed)))
 }
 
+/// Run the extended baseline comparison (defaultNV, best fixed clock,
+/// GreenLLM) across chat rates; prints the table and returns the rows.
 pub fn baselines(duration_s: f64, seed: u64) -> Vec<BaselineRow> {
     let model = "qwen3-14b";
     let mut rows = Vec::new();

@@ -32,13 +32,17 @@ const MODEL: &str = "qwen3-14b";
 // Fig. 1 — sinusoidal tracking
 // ---------------------------------------------------------------------------
 
+/// Fig. 1 data: decode-demand tracking under a sinusoidal load.
 pub struct Fig1 {
     /// (t, tps, clock MHz) series per method.
     pub series: Vec<(String, Vec<(f64, f64, u32)>)>,
+    /// Per-method P99 TBT, milliseconds.
     pub p99_tbt_ms: Vec<(String, f64)>,
+    /// Per-method decode energy, joules.
     pub decode_energy_j: Vec<(String, f64)>,
 }
 
+/// Regenerate Fig. 1 (sinusoidal decode tracking) and print the summary.
 pub fn fig1(duration_s: f64, seed: u64) -> Fig1 {
     let trace = synthetic::sinusoid_decode(400.0, 2600.0, 120.0, duration_s, seed);
     let opts = RunOptions {
@@ -100,10 +104,13 @@ pub fn fig1(duration_s: f64, seed: u64) -> Fig1 {
 // Fig. 3a/3b — phase energy vs frequency
 // ---------------------------------------------------------------------------
 
+/// One normalized energy-vs-frequency curve (Figs. 3a/3b).
 pub struct EnergyCurve {
+    /// Offered token throughput of the sweep.
     pub tps: f64,
     /// (MHz, normalized energy E/E_min).
     pub points: Vec<(u32, f64)>,
+    /// Frequency of the energy minimum, MHz.
     pub knee_mhz: u32,
 }
 
@@ -111,6 +118,7 @@ fn freq_sweep() -> Vec<u32> {
     FreqLadder::a100().iter().step_by(5).collect() // 75 MHz grid
 }
 
+/// Regenerate Fig. 3a (prefill energy vs frequency per TPS level).
 pub fn fig3a(duration_s: f64, seed: u64) -> Vec<EnergyCurve> {
     let tps_levels = [2000.0, 8000.0, 16000.0, 24000.0];
     let mut curves = Vec::new();
@@ -127,6 +135,7 @@ pub fn fig3a(duration_s: f64, seed: u64) -> Vec<EnergyCurve> {
     curves
 }
 
+/// Regenerate Fig. 3b (decode energy vs frequency per TPS level).
 pub fn fig3b(duration_s: f64, seed: u64) -> Vec<EnergyCurve> {
     let tps_levels = [200.0, 1000.0, 2000.0, 3000.0];
     let mut curves = Vec::new();
@@ -143,6 +152,7 @@ pub fn fig3b(duration_s: f64, seed: u64) -> Vec<EnergyCurve> {
     curves
 }
 
+/// Regenerate Fig. 3c (fixed-clock sweep on the chat trace).
 pub fn fig3c(duration_s: f64, seed: u64) -> EnergyCurve {
     let trace = alibaba::generate(&ChatParams::new(5.0, duration_s), seed);
     let mut pts = Vec::new();
@@ -202,12 +212,15 @@ fn print_energy_curves(title: &str, csv: &str, curves: &[EnergyCurve]) {
 // Fig. 5 — routing ablation TTFT distribution
 // ---------------------------------------------------------------------------
 
+/// Fig. 5 data: TTFT distributions per prompt class and method.
 pub struct Fig5 {
     /// (method, class, p50 ms, p90 ms, p99 ms)
     pub rows: Vec<(String, String, f64, f64, f64)>,
+    /// Per-method TTFT SLO pass rate, percent.
     pub slo_pct: Vec<(String, f64)>,
 }
 
+/// Regenerate Fig. 5 (latency distributions at 8 QPS chat).
 pub fn fig5(duration_s: f64, seed: u64) -> Fig5 {
     let trace = alibaba::generate(&ChatParams::new(8.0, duration_s), seed);
     let opts = RunOptions {
@@ -269,12 +282,17 @@ pub fn fig5(duration_s: f64, seed: u64) -> Fig5 {
 // Fig. 7 / Fig. 8 — model fits
 // ---------------------------------------------------------------------------
 
+/// Goodness-of-fit report for a profiler model (Figs. 7–8).
 pub struct FitReport {
+    /// Coefficient of determination of the fit.
     pub r2: f64,
+    /// Fitted coefficients, low order first.
     pub coeffs: Vec<f64>,
+    /// (x, measured, fitted) sample rows.
     pub rows: Vec<(f64, f64, f64)>, // (x, measured, fit)
 }
 
+/// Regenerate Fig. 7 (prefill latency quadratic fit).
 pub fn fig7(seed: u64) -> FitReport {
     let mut profiler = Profiler::new(
         PerfModel::new(ModelSpec::qwen3_14b()),
@@ -309,6 +327,7 @@ pub fn fig7(seed: u64) -> FitReport {
     }
 }
 
+/// Regenerate Fig. 8 (active power cubic fit).
 pub fn fig8(seed: u64) -> FitReport {
     let mut profiler = Profiler::new(
         PerfModel::new(ModelSpec::qwen3_14b()),
@@ -348,15 +367,23 @@ pub fn fig8(seed: u64) -> FitReport {
 // Fig. 10 — prefill microbenchmarks per class
 // ---------------------------------------------------------------------------
 
+/// One prompt class row of Fig. 10 (prefill microbenchmarks).
 pub struct Fig10Row {
+    /// Prompt class label (Short/Medium/Long).
     pub class: String,
+    /// Offered prefill token throughput.
     pub tps: f64,
+    /// defaultNV P90 TTFT, milliseconds.
     pub ttft_nv_ms: f64,
+    /// GreenLLM P90 TTFT, milliseconds.
     pub ttft_green_ms: f64,
+    /// Prefill energy saving vs defaultNV, percent.
     pub energy_saving_pct: f64,
+    /// TTFT SLO of the class, milliseconds.
     pub ttft_slo_ms: f64,
 }
 
+/// Regenerate Fig. 10 (per-class prefill microbenchmarks).
 pub fn fig10(duration_s: f64, seed: u64) -> Vec<Fig10Row> {
     let classes = [
         ("Short", 64u32, 256u32, 400.0),
@@ -409,13 +436,19 @@ pub fn fig10(duration_s: f64, seed: u64) -> Vec<Fig10Row> {
 // Fig. 11 — decode microbenchmarks
 // ---------------------------------------------------------------------------
 
+/// One TPS row of Fig. 11 (decode microbenchmarks).
 pub struct Fig11Row {
+    /// Offered decode token throughput.
     pub tps: f64,
+    /// defaultNV P95 TBT, milliseconds.
     pub tbt_nv_ms: f64,
+    /// GreenLLM P95 TBT, milliseconds.
     pub tbt_green_ms: f64,
+    /// Decode energy saving vs defaultNV, percent.
     pub energy_saving_pct: f64,
 }
 
+/// Regenerate Fig. 11 (decode microbenchmark sweep).
 pub fn fig11(duration_s: f64, seed: u64) -> Vec<Fig11Row> {
     let mut rows = Vec::new();
     let mut t = Table::new(&[
@@ -453,14 +486,20 @@ pub fn fig11(duration_s: f64, seed: u64) -> Vec<Fig11Row> {
 // Fig. 12 — margin sensitivity
 // ---------------------------------------------------------------------------
 
+/// One margin row of Fig. 12 (SLO-margin sensitivity).
 pub struct MarginRow {
+    /// Controller margin factor.
     pub margin: f64,
+    /// Pool energy at this margin, joules.
     pub energy_j: f64,
+    /// P90 latency at this margin, milliseconds.
     pub p90_ms: f64,
 }
 
+/// Margin factors swept by Figs. 12a/12b.
 pub const MARGINS: [f64; 6] = [0.2, 0.6, 0.85, 0.95, 1.2, 2.0];
 
+/// Regenerate Fig. 12a (prefill margin sensitivity).
 pub fn fig12a(duration_s: f64, seed: u64) -> Vec<MarginRow> {
     let trace = alibaba::generate(&ChatParams::new(10.0, duration_s), seed);
     let mut rows = Vec::new();
@@ -494,6 +533,7 @@ pub fn fig12a(duration_s: f64, seed: u64) -> Vec<MarginRow> {
     rows
 }
 
+/// Regenerate Fig. 12b (decode margin sensitivity).
 pub fn fig12b(duration_s: f64, seed: u64) -> Vec<MarginRow> {
     let trace = alibaba::generate(&ChatParams::new(10.0, duration_s), seed);
     let mut rows = Vec::new();

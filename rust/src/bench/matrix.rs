@@ -6,17 +6,23 @@
 //! Every cell is an independent deterministic replay (its own `Config`,
 //! trace generation and RNG streams), so results are bit-identical
 //! regardless of the worker count — asserted by the tests. Single-node
-//! uncapped cells run the plain engine; any cell with `nodes > 1` or a
-//! power cap runs the interleaved cluster simulation
-//! (`coordinator::cluster`). Adding a scenario means adding a
-//! [`TraceSpec`]; adding a governor means registering it in
-//! `coordinator::policy::build`; adding a balancer means registering it in
-//! `coordinator::cluster::balancer::build` — the harness and the event
-//! loop pick all three up unchanged.
+//! uncapped fault-free cells run the plain engine; everything else runs
+//! the interleaved cluster simulation (`coordinator::cluster`). The
+//! chaos & heterogeneity axes make the sweep a genuine scenario-diversity
+//! harness: `--faults` (node loss / flap presets, resolved per cell
+//! against its duration), `--shapes` (per-node `NodeSpec` presets) and
+//! `--arbiter` (watt-headroom strategies) compose with the existing
+//! traces × policies × margins × nodes × balancers × caps axes. Adding a
+//! scenario means adding a [`TraceSpec`]; adding a governor means
+//! registering it in `coordinator::policy::build`; adding a balancer
+//! means registering it in `coordinator::cluster::balancer::build` — the
+//! harness and the event loop pick all three up unchanged.
 
 use crate::bench::report::{fmt_f, fmt_pct, maybe_write_csv, Table};
 use crate::config::{Config, Method};
-use crate::coordinator::cluster::{run_cluster, ClusterConfig, LbPolicy};
+use crate::coordinator::cluster::{
+    run_cluster, ArbiterStrategy, ClusterConfig, FaultSpec, LbPolicy, NodeSpec,
+};
 use crate::coordinator::engine::{run, RunOptions};
 use crate::util::json::Json;
 use crate::workload::alibaba::{self, ChatParams};
@@ -106,6 +112,7 @@ impl TraceSpec {
         }
     }
 
+    /// Generate the trace for one cell (deterministic per seed).
     pub fn generate(&self, duration_s: f64, seed: u64) -> Trace {
         match self {
             TraceSpec::Alibaba { qps } => {
@@ -135,12 +142,17 @@ impl TraceSpec {
 /// Matrix sweep configuration.
 #[derive(Debug, Clone)]
 pub struct MatrixConfig {
+    /// Served model name.
     pub model: String,
+    /// Trace duration per cell, seconds.
     pub duration_s: f64,
+    /// Seed shared by every cell's trace generation and replay RNG.
     pub seed: u64,
     /// Worker threads; 0 = one per available core (capped by cell count).
     pub threads: usize,
+    /// Workload axis.
     pub traces: Vec<TraceSpec>,
+    /// DVFS policy axis.
     pub methods: Vec<Method>,
     /// SLO margin factors applied to both prefill and decode controllers.
     pub margins: Vec<f64>,
@@ -151,6 +163,16 @@ pub struct MatrixConfig {
     pub lbs: Vec<LbPolicy>,
     /// Cluster power caps in watts; 0.0 = uncapped.
     pub power_caps_w: Vec<f64>,
+    /// Node-shape axis: each entry is a `NodeSpec` list spelled
+    /// `"uniform"` or with `+` separators (e.g. `"dgx+eff+legacy"`,
+    /// cycled over the cell's node count).
+    pub shapes: Vec<String>,
+    /// Fault-schedule axis (collapsed to its first entry at 1 node,
+    /// where presets resolve to the empty plan anyway).
+    pub faults: Vec<FaultSpec>,
+    /// Power-arbiter strategy axis (collapsed to its first entry for
+    /// uncapped cells, where no arbiter runs).
+    pub arbiters: Vec<ArbiterStrategy>,
 }
 
 impl Default for MatrixConfig {
@@ -176,6 +198,9 @@ impl Default for MatrixConfig {
             nodes: vec![1],
             lbs: vec![LbPolicy::JoinShortestQueue],
             power_caps_w: vec![0.0],
+            shapes: vec!["uniform".into()],
+            faults: vec![FaultSpec::None],
+            arbiters: vec![ArbiterStrategy::DemandProportional],
         }
     }
 }
@@ -183,19 +208,31 @@ impl Default for MatrixConfig {
 /// One cell of the sweep: the full scenario coordinate.
 #[derive(Debug, Clone)]
 pub struct MatrixCell {
+    /// Workload of the cell.
     pub trace: TraceSpec,
+    /// DVFS policy of the cell.
     pub method: Method,
+    /// SLO margin factor.
     pub margin: f64,
+    /// Node count.
     pub nodes: usize,
+    /// Ingress balancer.
     pub lb: LbPolicy,
     /// 0.0 = uncapped.
     pub power_cap_w: f64,
+    /// Node-shape spec list spelling (`"uniform"` = homogeneous).
+    pub shape: String,
+    /// Fault schedule (resolved against nodes × duration at run time).
+    pub fault: FaultSpec,
+    /// Power-arbiter strategy (only exercised when `power_cap_w > 0`).
+    pub arbiter: ArbiterStrategy,
 }
 
 impl MatrixConfig {
-    /// The cartesian cell list, in report order. At 1 node every balancer
-    /// is a no-op, so the lb axis collapses to its first entry there
-    /// (avoids duplicate cells in `--nodes 1,2,4 --lb all` sweeps).
+    /// The cartesian cell list, in report order. Degenerate axes collapse
+    /// to their first entry to avoid duplicate cells: the lb and fault
+    /// axes at 1 node (ingress is a no-op and fault presets resolve
+    /// empty), and the arbiter axis for uncapped cells (no arbiter runs).
     pub fn cells(&self) -> Vec<MatrixCell> {
         let mut cells = Vec::new();
         for trace in &self.traces {
@@ -206,17 +243,36 @@ impl MatrixConfig {
                     } else {
                         &self.lbs
                     };
+                    let faults: &[FaultSpec] = if nodes == 1 {
+                        &self.faults[..self.faults.len().min(1)]
+                    } else {
+                        &self.faults
+                    };
                     for &lb in lbs {
-                        for &cap in &self.power_caps_w {
-                            for method in &self.methods {
-                                cells.push(MatrixCell {
-                                    trace: trace.clone(),
-                                    method: *method,
-                                    margin: *margin,
-                                    nodes,
-                                    lb,
-                                    power_cap_w: cap,
-                                });
+                        for shape in &self.shapes {
+                            for fault in faults {
+                                for &cap in &self.power_caps_w {
+                                    let arbiters: &[ArbiterStrategy] = if cap == 0.0 {
+                                        &self.arbiters[..self.arbiters.len().min(1)]
+                                    } else {
+                                        &self.arbiters
+                                    };
+                                    for &arbiter in arbiters {
+                                        for method in &self.methods {
+                                            cells.push(MatrixCell {
+                                                trace: trace.clone(),
+                                                method: *method,
+                                                margin: *margin,
+                                                nodes,
+                                                lb,
+                                                power_cap_w: cap,
+                                                shape: shape.clone(),
+                                                fault: fault.clone(),
+                                                arbiter,
+                                            });
+                                        }
+                                    }
+                                }
                             }
                         }
                     }
@@ -230,36 +286,69 @@ impl MatrixConfig {
 /// Per-node slice of a cluster cell.
 #[derive(Debug, Clone)]
 pub struct NodeCellResult {
+    /// Node index.
     pub node: usize,
+    /// Node-shape preset name (`"dgx"` in homogeneous cells).
+    pub spec: String,
+    /// Requests this node finally served.
     pub assigned: usize,
+    /// Requests completed on this node.
     pub completed: u64,
+    /// Node energy, joules.
     pub energy_j: f64,
+    /// TTFT pass rate, percent.
     pub ttft_pct: f64,
+    /// TBT pass rate, percent.
     pub tbt_pct: f64,
 }
 
 /// One completed matrix cell.
 #[derive(Debug, Clone)]
 pub struct CellResult {
+    /// Workload label.
     pub trace: String,
+    /// DVFS policy.
     pub method: Method,
+    /// SLO margin factor.
     pub margin: f64,
+    /// Node count.
     pub nodes: usize,
     /// Balancer name; "-" for single-node cells (ingress is a no-op).
     pub lb: String,
+    /// Cluster power cap, watts (0.0 = uncapped).
     pub power_cap_w: f64,
+    /// Node-shape spec spelling (`"uniform"` = homogeneous).
+    pub shape: String,
+    /// Fault-schedule label (`"none"` = no chaos).
+    pub fault: String,
+    /// Arbiter strategy name; "-" for uncapped cells.
+    pub arbiter: String,
+    /// Cluster energy, joules.
     pub total_energy_j: f64,
+    /// Prefill-pool energy, joules.
     pub prefill_energy_j: f64,
+    /// Decode-pool energy, joules.
     pub decode_energy_j: f64,
+    /// Joules per delivered token.
     pub energy_per_token_j: f64,
+    /// TTFT pass rate, percent.
     pub ttft_pct: f64,
+    /// TBT pass rate, percent.
     pub tbt_pct: f64,
+    /// Delivered tokens per second of simulated time.
     pub throughput_tps: f64,
+    /// Requests completed (conserved even under node loss).
     pub completed: u64,
+    /// Mean decode batch occupancy across nodes.
     pub mean_decode_batch: f64,
     /// Max/min node request share (∞ when a node starved); 1.0 at 1 node.
     pub balance_ratio: f64,
+    /// Nodes that served zero requests.
     pub starved_nodes: usize,
+    /// Requests drained from failed nodes and re-homed (chaos cells).
+    pub rerouted: u64,
+    /// Tokens rolled back at node failures (chaos cells).
+    pub wasted_tokens: u64,
     /// Highest measured cluster draw across arbiter epochs (capped cells).
     pub peak_power_w: Option<f64>,
     /// Per-node breakdown (empty for single-node cells).
@@ -269,20 +358,30 @@ pub struct CellResult {
     pub delta_energy_pct: Option<f64>,
 }
 
-/// Grouping key for the defaultNV energy baseline.
-fn scenario_key(r: &CellResult) -> (String, u64, usize, String, u64) {
+/// Grouping key for the defaultNV energy baseline: the full scenario
+/// coordinate minus the policy (trace, margin, nodes, lb, cap, shape,
+/// fault, arbiter).
+type ScenarioKey = (String, u64, usize, String, u64, String, String, String);
+
+fn scenario_key(r: &CellResult) -> ScenarioKey {
     (
         r.trace.clone(),
         r.margin.to_bits(),
         r.nodes,
         r.lb.clone(),
         r.power_cap_w.to_bits(),
+        r.shape.clone(),
+        r.fault.clone(),
+        r.arbiter.clone(),
     )
 }
 
 fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
     let trace = cell.trace.generate(cfg.duration_s, cfg.seed);
-    let run_cfg = Config {
+    let specs = NodeSpec::parse_list(&cell.shape)
+        .unwrap_or_else(|e| panic!("bad shape axis {:?}: {e}", cell.shape));
+    let fault_plan = cell.fault.plan(cell.nodes, cfg.duration_s);
+    let mut run_cfg = Config {
         model: cfg.model.clone(),
         method: cell.method,
         seed: cfg.seed,
@@ -301,6 +400,13 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
             cell.lb.name().into()
         },
         power_cap_w: cell.power_cap_w,
+        shape: cell.shape.clone(),
+        fault: cell.fault.name(),
+        arbiter: if cell.power_cap_w > 0.0 {
+            cell.arbiter.name().into()
+        } else {
+            "-".into()
+        },
         total_energy_j: 0.0,
         prefill_energy_j: 0.0,
         decode_energy_j: 0.0,
@@ -312,13 +418,20 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
         mean_decode_batch: 0.0,
         balance_ratio: 1.0,
         starved_nodes: 0,
+        rerouted: 0,
+        wasted_tokens: 0,
         peak_power_w: None,
         per_node: Vec::new(),
         delta_energy_pct: None,
     };
-    if cell.nodes == 1 && cell.power_cap_w == 0.0 {
+    if cell.nodes == 1 && cell.power_cap_w == 0.0 && fault_plan.is_empty() {
         // Plain single-node engine: bit-identical to the pre-cluster
-        // matrix (and cheaper than a 1-node cluster wrapper).
+        // matrix (and cheaper than a 1-node cluster wrapper). A 1-node
+        // cell with a non-uniform shape still runs plain — it just wears
+        // the first spec's hardware.
+        if let Some(spec) = specs.first() {
+            spec.apply(&mut run_cfg);
+        }
         let r = run(&run_cfg, &trace, &RunOptions::default());
         return CellResult {
             total_energy_j: r.total_energy_j,
@@ -333,7 +446,10 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
             ..base
         };
     }
-    let mut ccfg = ClusterConfig::new(cell.nodes, cell.lb, run_cfg);
+    let mut ccfg = ClusterConfig::new(cell.nodes, cell.lb, run_cfg)
+        .with_node_specs(specs)
+        .with_faults(fault_plan)
+        .with_arbiter(cell.arbiter);
     if cell.power_cap_w > 0.0 {
         ccfg = ccfg.with_power_cap(cell.power_cap_w, 1.0);
     }
@@ -363,6 +479,8 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
         mean_decode_batch: if bn == 0 { 0.0 } else { bsum / bn as f64 },
         balance_ratio: r.balance_ratio(),
         starved_nodes: r.starved_nodes(),
+        rerouted: r.rerouted,
+        wasted_tokens: r.wasted_tokens,
         peak_power_w: r.power.as_ref().map(|p| p.peak_measured_w),
         per_node: r
             .per_node
@@ -370,6 +488,7 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
             .enumerate()
             .map(|(i, n)| NodeCellResult {
                 node: i,
+                spec: ccfg.node_spec_name(i),
                 assigned: r.assignment[i],
                 completed: n.completed,
                 energy_j: n.total_energy_j,
@@ -431,9 +550,9 @@ pub fn run_matrix(cfg: &MatrixConfig) -> Vec<CellResult> {
 }
 
 /// Fill `delta_energy_pct` against the defaultNV cell of each scenario
-/// coordinate (trace, margin, nodes, lb, cap).
+/// coordinate (trace, margin, nodes, lb, cap, shape, fault, arbiter).
 fn fill_deltas(results: &mut [CellResult]) {
-    let mut base: BTreeMap<(String, u64, usize, String, u64), f64> = BTreeMap::new();
+    let mut base: BTreeMap<ScenarioKey, f64> = BTreeMap::new();
     for r in results.iter() {
         if r.method == Method::DefaultNv {
             base.insert(scenario_key(r), r.total_energy_j);
@@ -462,6 +581,9 @@ pub fn render_table(results: &[CellResult]) -> Table {
         "Margin",
         "Nodes",
         "LB",
+        "Shape",
+        "Fault",
+        "Arb",
         "Cap(W)",
         "Energy(kJ)",
         "J/tok",
@@ -470,6 +592,7 @@ pub fn render_table(results: &[CellResult]) -> Table {
         "TBT(%)",
         "Thru(tok/s)",
         "Bal",
+        "Rrt",
         "PkW",
     ]);
     for r in results {
@@ -479,6 +602,9 @@ pub fn render_table(results: &[CellResult]) -> Table {
             fmt_f(r.margin, 2),
             r.nodes.to_string(),
             r.lb.clone(),
+            r.shape.clone(),
+            r.fault.clone(),
+            r.arbiter.clone(),
             if r.power_cap_w > 0.0 {
                 fmt_f(r.power_cap_w, 0)
             } else {
@@ -493,6 +619,11 @@ pub fn render_table(results: &[CellResult]) -> Table {
             fmt_pct(r.tbt_pct),
             fmt_f(r.throughput_tps, 0),
             fmt_balance(r),
+            if r.fault == "none" {
+                "-".into()
+            } else {
+                r.rerouted.to_string()
+            },
             r.peak_power_w
                 .map(|p| fmt_f(p, 0))
                 .unwrap_or_else(|| "-".into()),
@@ -512,17 +643,20 @@ pub fn render_markdown(cfg: &MatrixConfig, results: &[CellResult]) -> String {
         cfg.seed,
         results.len()
     ));
-    out.push_str("| Trace | Policy | Margin | Nodes | LB | Cap (W) | Energy (kJ) | J/tok |");
-    out.push_str(" dEnergy (%) | TTFT (%) | TBT (%) | tok/s | Bal |\n");
-    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+    out.push_str("| Trace | Policy | Margin | Nodes | LB | Shape | Fault | Arb | Cap (W) |");
+    out.push_str(" Energy (kJ) | J/tok | dEnergy (%) | TTFT (%) | TBT (%) | tok/s | Bal |\n");
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
     for r in results {
         out.push_str(&format!(
-            "| {} | {} | {:.2} | {} | {} | {} | {:.1} | {:.2} | {} | {:.1} | {:.1} | {:.0} | {} |\n",
+            "| {} | {} | {:.2} | {} | {} | {} | {} | {} | {} | {:.1} | {:.2} | {} | {:.1} | {:.1} | {:.0} | {} |\n",
             r.trace,
             r.method.name(),
             r.margin,
             r.nodes,
             r.lb,
+            r.shape,
+            r.fault,
+            r.arbiter,
             if r.power_cap_w > 0.0 {
                 format!("{:.0}", r.power_cap_w)
             } else {
@@ -543,7 +677,9 @@ pub fn render_markdown(cfg: &MatrixConfig, results: &[CellResult]) -> String {
 }
 
 /// Serialize the whole sweep (config + cells) as JSON. Cluster cells carry
-/// a `per_node` section and, when capped, a `power` section.
+/// a `per_node` section (with each node's shape spec), capped cells a
+/// `power` section, and faulted cells a `chaos` section (re-routed
+/// requests + rolled-back tokens).
 pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
     let mut root = BTreeMap::new();
     root.insert("model".to_string(), Json::Str(cfg.model.clone()));
@@ -558,6 +694,9 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
             m.insert("margin".to_string(), Json::Num(r.margin));
             m.insert("nodes".to_string(), Json::Num(r.nodes as f64));
             m.insert("lb".to_string(), Json::Str(r.lb.clone()));
+            m.insert("shape".to_string(), Json::Str(r.shape.clone()));
+            m.insert("fault".to_string(), Json::Str(r.fault.clone()));
+            m.insert("arbiter".to_string(), Json::Str(r.arbiter.clone()));
             m.insert("total_energy_j".to_string(), Json::Num(r.total_energy_j));
             m.insert(
                 "prefill_energy_j".to_string(),
@@ -596,6 +735,7 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
                             .map(|n| {
                                 Json::obj([
                                     ("node", Json::Num(n.node as f64)),
+                                    ("spec", Json::Str(n.spec.clone())),
                                     ("assigned", Json::Num(n.assigned as f64)),
                                     ("completed", Json::Num(n.completed as f64)),
                                     ("energy_j", Json::Num(n.energy_j)),
@@ -605,6 +745,16 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
                             })
                             .collect(),
                     ),
+                );
+            }
+            if r.fault != "none" {
+                m.insert(
+                    "chaos".to_string(),
+                    Json::obj([
+                        ("fault", Json::Str(r.fault.clone())),
+                        ("rerouted", Json::Num(r.rerouted as f64)),
+                        ("wasted_tokens", Json::Num(r.wasted_tokens as f64)),
+                    ]),
                 );
             }
             if r.power_cap_w > 0.0 {
@@ -827,6 +977,68 @@ mod tests {
             parsed.get("cells").unwrap().as_arr().unwrap().len(),
             results.len()
         );
+    }
+
+    #[test]
+    fn fault_and_arbiter_axes_collapse_when_degenerate() {
+        let cfg = MatrixConfig {
+            duration_s: 30.0,
+            traces: vec![TraceSpec::Alibaba { qps: 4.0 }],
+            methods: vec![Method::GreenLlm],
+            margins: vec![0.95],
+            nodes: vec![1, 2],
+            lbs: vec![LbPolicy::JoinShortestQueue],
+            power_caps_w: vec![0.0, 6000.0],
+            faults: vec![FaultSpec::None, FaultSpec::OneDown],
+            arbiters: ArbiterStrategy::all(),
+            ..MatrixConfig::default()
+        };
+        let cells = cfg.cells();
+        // 1 node: faults collapse to [None]; cap 0 collapses arbiters.
+        //   1 node: 1 fault x (cap0: 1 arb + cap6000: 2 arbs) = 3 cells
+        //   2 node: 2 faults x 3 = 6 cells
+        assert_eq!(cells.len(), 9, "{cells:#?}");
+        assert!(cells
+            .iter()
+            .filter(|c| c.nodes == 1)
+            .all(|c| c.fault == FaultSpec::None));
+        assert!(cells
+            .iter()
+            .filter(|c| c.power_cap_w == 0.0)
+            .all(|c| c.arbiter == ArbiterStrategy::DemandProportional));
+    }
+
+    #[test]
+    fn chaos_cells_conserve_and_report_reroutes() {
+        let cfg = MatrixConfig {
+            duration_s: 30.0,
+            traces: vec![TraceSpec::Alibaba { qps: 8.0 }],
+            methods: vec![Method::DefaultNv, Method::GreenLlm],
+            margins: vec![0.95],
+            nodes: vec![2],
+            lbs: vec![LbPolicy::JoinShortestQueue],
+            shapes: vec!["dgx+eff".into()],
+            faults: vec![FaultSpec::OneDown],
+            ..MatrixConfig::default()
+        };
+        let results = run_matrix(&cfg);
+        let trace = cfg.traces[0].generate(cfg.duration_s, cfg.seed);
+        for r in &results {
+            // Zero dropped requests under mid-trace node loss.
+            assert_eq!(r.completed as usize, trace.requests.len(), "{r:?}");
+            assert_eq!(r.fault, "onedown");
+            assert_eq!(r.shape, "dgx+eff");
+            assert!(r.rerouted > 0, "node loss at 1/3 must strand work: {r:?}");
+            assert_eq!(r.per_node[0].spec, "dgx");
+            assert_eq!(r.per_node[1].spec, "eff");
+        }
+        // The JSON report carries the chaos section.
+        let parsed = Json::parse(&to_json(&cfg, &results).dump()).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        for c in cells {
+            let chaos = c.get("chaos").expect("faulted cell carries chaos section");
+            assert!(chaos.get("rerouted").unwrap().as_f64().unwrap() > 0.0);
+        }
     }
 
     #[test]

@@ -46,13 +46,21 @@ pub fn run_method_opts(
 /// One comparison row of Tables 3–4.
 #[derive(Debug, Clone)]
 pub struct MethodRow {
+    /// Workload label.
     pub workload: String,
+    /// Serving method of the row.
     pub method: Method,
+    /// Decode energy relative to defaultNV's decode energy.
     pub rel_decode: f64,
+    /// Prefill energy relative to defaultNV's decode energy.
     pub rel_prefill: f64,
+    /// TTFT pass rate, percent.
     pub ttft_pct: f64,
+    /// TBT pass rate, percent.
     pub tbt_pct: f64,
+    /// Total energy saving vs defaultNV, percent.
     pub delta_energy_pct: f64,
+    /// Delivered tokens per second.
     pub throughput_tps: f64,
 }
 

@@ -11,6 +11,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -18,11 +19,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render to an aligned plain-text block.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -47,10 +50,12 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }
 
+    /// Render as CSV (naive quoting for comma-bearing cells).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         let esc = |s: &str| {
@@ -77,14 +82,17 @@ impl Table {
     }
 }
 
+/// Format a float with `prec` decimals.
 pub fn fmt_f(v: f64, prec: usize) -> String {
     format!("{v:.prec$}")
 }
 
+/// Format a percentage with one decimal.
 pub fn fmt_pct(v: f64) -> String {
     format!("{v:.1}")
 }
 
+/// Format seconds as milliseconds with one decimal.
 pub fn fmt_ms(v_s: f64) -> String {
     format!("{:.1}", v_s * 1000.0)
 }

@@ -50,6 +50,7 @@ pub fn run_table(model: &str, traces: &[Trace], seed: u64) -> Vec<MethodRow> {
     rows
 }
 
+/// Render comparison rows as an aligned table (and print it).
 pub fn render_rows(title: &str, rows: &[MethodRow]) -> Table {
     let mut t = Table::new(&[
         "Workload",
@@ -79,6 +80,7 @@ pub fn render_rows(title: &str, rows: &[MethodRow]) -> Table {
     t
 }
 
+/// Regenerate Table 3 (Qwen3-14B energy + SLO comparison).
 pub fn table3(duration_s: f64, seed: u64) -> Vec<MethodRow> {
     let traces = table3_workloads(duration_s, seed);
     let rows = run_table("qwen3-14b", &traces, seed);
@@ -90,6 +92,7 @@ pub fn table3(duration_s: f64, seed: u64) -> Vec<MethodRow> {
     rows
 }
 
+/// Regenerate Table 4 (Qwen3-30B-MoE energy + SLO comparison).
 pub fn table4(duration_s: f64, seed: u64) -> Vec<MethodRow> {
     let traces = table4_workloads(duration_s, seed);
     let rows = run_table("qwen3-30b-moe", &traces, seed);

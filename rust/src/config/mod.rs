@@ -34,6 +34,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Stable display name (report rows, golden snapshot labels).
     pub fn name(&self) -> String {
         match self {
             Method::DefaultNv => "defaultNV".into(),
@@ -46,6 +47,7 @@ impl Method {
         }
     }
 
+    /// Parse a CLI spelling (aliases included); `None` for unknown names.
     pub fn parse(s: &str) -> Option<Method> {
         match s.to_ascii_lowercase().as_str() {
             "defaultnv" | "default" | "nv" => Some(Method::DefaultNv),
@@ -87,9 +89,13 @@ impl Method {
 /// Pool shapes (paper Fig. 4: 2×2-GPU prefill, 4×1-GPU decode).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PoolConfig {
+    /// Number of prefill workers.
     pub prefill_workers: usize,
+    /// GPUs per prefill worker (tensor-parallel pair on the paper node).
     pub gpus_per_prefill_worker: usize,
+    /// Number of decode workers.
     pub decode_workers: usize,
+    /// GPUs per decode worker.
     pub gpus_per_decode_worker: usize,
     /// Continuous-batching cap per decode worker (KV memory bound).
     pub max_streams_per_decode_worker: usize,
@@ -176,21 +182,54 @@ impl Default for PrefillOptConfig {
     }
 }
 
+/// Simulated GPU hardware of a node (the heterogeneity knobs). Defaults
+/// are a stock A100; heterogeneous clusters assign each node its own
+/// values through `NodeSpec` presets (`coordinator::cluster`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Uniform multiplier on the whole power envelope (GPU-generation
+    /// proxy: 0.7 ≈ efficiency-binned next-gen, 1.25 ≈ older part).
+    pub power_scale: f64,
+    /// Application-clock ceiling in MHz. Must lie on the A100 ladder grid
+    /// (210–1410 in 15 MHz steps); cut-down SKUs cap below 1410.
+    pub max_clock_mhz: u32,
+}
+
+impl Default for GpuSpec {
+    fn default() -> Self {
+        GpuSpec {
+            power_scale: 1.0,
+            max_clock_mhz: 1410,
+        }
+    }
+}
+
 /// Cluster deployment defaults (multi-node simulation). A plain
 /// single-node `run` ignores this section entirely; `greenllm cluster`
 /// reads it as its flag defaults (the `matrix` subcommand is flag-driven
-/// — its `--nodes/--lb/--power-cap-w` axes do not consult this section).
-/// The balancer is kept as a name string so the config layer stays free
-/// of coordinator types.
+/// — its `--nodes/--lb/--power-cap-w/--shapes/--faults/--arbiter` axes do
+/// not consult this section). Balancer, arbiter, node-shape and fault
+/// specs are kept as name strings so the config layer stays free of
+/// coordinator types; they are parsed (and rejected loudly) where used.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSection {
+    /// Number of simulated nodes.
     pub nodes: usize,
-    /// Ingress balancer name (`rr`, `leastwork`, `jsq`, `phase`).
+    /// Ingress balancer name (`rr`, `leastwork`, `jsq`, `phase`,
+    /// `powergrant`).
     pub lb: String,
     /// Cluster-wide power budget, watts (0 = uncapped).
     pub power_cap_w: f64,
     /// Power-arbiter control epoch, seconds.
     pub power_epoch_s: f64,
+    /// Power-arbiter strategy name (`demand` or `slo-pressure`).
+    pub arbiter: String,
+    /// Comma-separated per-node shape presets (e.g. `"dgx,eff,legacy"`,
+    /// cycled over the node count); empty = homogeneous default nodes.
+    pub node_specs: String,
+    /// Fault schedule: a preset (`none`, `onedown`, `flap`) or an explicit
+    /// event list (`"down@40:1,up@80:1"`).
+    pub faults: String,
 }
 
 impl Default for ClusterSection {
@@ -202,6 +241,9 @@ impl Default for ClusterSection {
             lb: "jsq".into(),
             power_cap_w: 0.0,
             power_epoch_s: 1.0,
+            arbiter: "demand".into(),
+            node_specs: String::new(),
+            faults: "none".into(),
         }
     }
 }
@@ -209,19 +251,31 @@ impl Default for ClusterSection {
 /// Top-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Served model name (resolved through `ModelSpec::by_name`).
     pub model: String,
+    /// Serving policy under test.
     pub method: Method,
+    /// Worker-pool shapes.
     pub pools: PoolConfig,
+    /// SLO targets the trackers score against.
     pub slo: SloTargets,
+    /// Decode dual-loop controller constants.
     pub decode_ctl: DecodeCtlConfig,
+    /// Prefill optimizer constants.
     pub prefill_opt: PrefillOptConfig,
+    /// Cluster deployment defaults.
     pub cluster: ClusterSection,
+    /// Simulated GPU hardware of this node (per-node in heterogeneous
+    /// clusters; the default is a stock A100).
+    pub gpu: GpuSpec,
     /// SLO margin factors (§5.3 sensitivity): scale the *controller's*
     /// deadline targets, not the reported SLOs.
     pub prefill_margin: f64,
+    /// Decode controller margin factor.
     pub decode_margin: f64,
     /// Measurement noise of the simulated GPU (σ, log-normal).
     pub sim_noise: f64,
+    /// RNG seed for trace noise and governor streams.
     pub seed: u64,
 }
 
@@ -235,6 +289,7 @@ impl Default for Config {
             decode_ctl: DecodeCtlConfig::default(),
             prefill_opt: PrefillOptConfig::default(),
             cluster: ClusterSection::default(),
+            gpu: GpuSpec::default(),
             prefill_margin: 0.95,
             decode_margin: 0.95,
             sim_noise: 0.03,
@@ -278,6 +333,11 @@ impl Config {
                     | "cluster.lb"
                     | "cluster.power_cap_w"
                     | "cluster.power_epoch_s"
+                    | "cluster.arbiter"
+                    | "cluster.node_specs"
+                    | "cluster.faults"
+                    | "gpu.power_scale"
+                    | "gpu.max_clock_mhz"
             );
             if !known {
                 return Err(format!("unknown config key: {key}"));
@@ -364,16 +424,33 @@ impl Config {
         if let Some(v) = doc.f64("cluster.power_epoch_s") {
             c.cluster.power_epoch_s = v;
         }
+        if let Some(v) = doc.str("cluster.arbiter") {
+            c.cluster.arbiter = v.to_string();
+        }
+        if let Some(v) = doc.str("cluster.node_specs") {
+            c.cluster.node_specs = v.to_string();
+        }
+        if let Some(v) = doc.str("cluster.faults") {
+            c.cluster.faults = v.to_string();
+        }
+        if let Some(v) = doc.f64("gpu.power_scale") {
+            c.gpu.power_scale = v;
+        }
+        if let Some(v) = doc.i64("gpu.max_clock_mhz") {
+            c.gpu.max_clock_mhz = v as u32;
+        }
         c.validate()?;
         Ok(c)
     }
 
+    /// Load and validate a TOML config file.
     pub fn load(path: &str) -> Result<Config, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
         let doc = Document::parse(&text).map_err(|e| e.to_string())?;
         Config::from_toml(&doc)
     }
 
+    /// Reject out-of-range values with a human-readable reason.
     pub fn validate(&self) -> Result<(), String> {
         if self.pools.prefill_workers == 0 || self.pools.decode_workers == 0 {
             return Err("pool sizes must be >= 1".into());
@@ -395,6 +472,15 @@ impl Config {
         }
         if self.cluster.power_epoch_s <= 0.0 {
             return Err("cluster.power_epoch_s must be positive".into());
+        }
+        if self.gpu.power_scale <= 0.0 {
+            return Err("gpu.power_scale must be positive".into());
+        }
+        let mhz = self.gpu.max_clock_mhz;
+        if !(210..=1410).contains(&mhz) || (mhz - 210) % 15 != 0 {
+            return Err(format!(
+                "gpu.max_clock_mhz {mhz} must lie on the 210–1410 MHz ladder (15 MHz steps)"
+            ));
         }
         Ok(())
     }
@@ -467,6 +553,39 @@ mod tests {
         // Invalid epoch rejected.
         let mut bad = Config::default();
         bad.cluster.power_epoch_s = 0.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn gpu_and_chaos_sections_parse_and_validate() {
+        let doc = Document::parse(
+            r#"
+            [gpu]
+            power_scale = 0.7
+            max_clock_mhz = 1200
+            [cluster]
+            arbiter = "slo-pressure"
+            node_specs = "dgx,eff,legacy"
+            faults = "down@40:1,up@80:1"
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.gpu.power_scale, 0.7);
+        assert_eq!(c.gpu.max_clock_mhz, 1200);
+        assert_eq!(c.cluster.arbiter, "slo-pressure");
+        assert_eq!(c.cluster.node_specs, "dgx,eff,legacy");
+        assert_eq!(c.cluster.faults, "down@40:1,up@80:1");
+        // Defaults stay a stock A100 with no chaos.
+        let d = Config::default();
+        assert_eq!(d.gpu, GpuSpec::default());
+        assert_eq!(d.cluster.faults, "none");
+        // Off-ladder clock ceilings and non-positive scales are rejected.
+        let mut bad = Config::default();
+        bad.gpu.max_clock_mhz = 1000;
+        assert!(bad.validate().is_err());
+        let mut bad = Config::default();
+        bad.gpu.power_scale = 0.0;
         assert!(bad.validate().is_err());
     }
 

@@ -12,7 +12,7 @@ use crate::workload::request::{Request, RouteClass};
 
 /// Live telemetry the cluster loop snapshots per node before each
 /// assignment decision.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct NodeState {
     /// Requests handed to this node so far.
     pub assigned: usize,
@@ -24,9 +24,42 @@ pub struct NodeState {
     pub active_streams: usize,
     /// P95 of the node's recent decode TBTs (0.0 until samples exist).
     pub tbt_tail_p95_s: f64,
+    /// Is the node up? Balancers must never assign to a dead node (the
+    /// chaos layer flips this during node-loss windows).
+    pub alive: bool,
+    /// The power arbiter's current watt grant for this node
+    /// (`f64::INFINITY` when the cluster is uncapped). The `powergrant`
+    /// balancer routes on this signal; everything else ignores it.
+    pub granted_w: f64,
+}
+
+impl Default for NodeState {
+    fn default() -> Self {
+        NodeState {
+            assigned: 0,
+            prefill_backlog: 0,
+            outstanding_prompt_tokens: 0,
+            active_streams: 0,
+            tbt_tail_p95_s: 0.0,
+            alive: true,
+            granted_w: f64::INFINITY,
+        }
+    }
 }
 
 /// Load-balancing policy at cluster ingress.
+///
+/// ```
+/// use greenllm::coordinator::cluster::LbPolicy;
+///
+/// assert_eq!(LbPolicy::parse("jsq"), Some(LbPolicy::JoinShortestQueue));
+/// assert_eq!(LbPolicy::parse("powergrant"), Some(LbPolicy::PowerGrant));
+/// assert_eq!(LbPolicy::parse("teleport"), None);
+/// // Every registered policy's name round-trips through parse.
+/// for lb in LbPolicy::all() {
+///     assert_eq!(LbPolicy::parse(lb.name()), Some(lb));
+/// }
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LbPolicy {
     /// Classic round-robin (front-end information only; baseline).
@@ -42,24 +75,33 @@ pub enum LbPolicy {
     /// the shortest healthy queue on the rest (nodes with a blown TBT tail
     /// are deprioritized).
     PhaseAware,
+    /// Power-aware routing: join the node with the most watt headroom per
+    /// unit of queued work, using the power arbiter's live grants
+    /// ([`NodeState::granted_w`]). Degrades to queue-depth routing when
+    /// the cluster is uncapped (every grant is infinite).
+    PowerGrant,
 }
 
 impl LbPolicy {
+    /// Stable short name (CLI spelling, report column).
     pub fn name(&self) -> &'static str {
         match self {
             LbPolicy::RoundRobin => "rr",
             LbPolicy::LeastPromptWork => "leastwork",
             LbPolicy::JoinShortestQueue => "jsq",
             LbPolicy::PhaseAware => "phase",
+            LbPolicy::PowerGrant => "powergrant",
         }
     }
 
+    /// Parse a CLI spelling (aliases included); `None` for unknown names.
     pub fn parse(s: &str) -> Option<LbPolicy> {
         match s.trim().to_ascii_lowercase().as_str() {
             "rr" | "roundrobin" | "round-robin" => Some(LbPolicy::RoundRobin),
             "leastwork" | "least-work" | "lpw" => Some(LbPolicy::LeastPromptWork),
             "jsq" | "shortestqueue" | "shortest-queue" => Some(LbPolicy::JoinShortestQueue),
             "phase" | "phaseaware" | "phase-aware" | "dualscale" => Some(LbPolicy::PhaseAware),
+            "powergrant" | "power-grant" | "grant" | "pg" => Some(LbPolicy::PowerGrant),
             _ => None,
         }
     }
@@ -71,6 +113,7 @@ impl LbPolicy {
             LbPolicy::LeastPromptWork,
             LbPolicy::JoinShortestQueue,
             LbPolicy::PhaseAware,
+            LbPolicy::PowerGrant,
         ]
     }
 
@@ -83,9 +126,12 @@ impl LbPolicy {
 
 /// An ingress balancer: one request + live node states in, node index out.
 pub trait Balancer {
+    /// Stable short name (mirrors [`LbPolicy::name`]).
     fn name(&self) -> &'static str;
     /// Pick the node for `req` arriving at `t`. `nodes` has one entry per
-    /// node, index-aligned; the returned index must be `< nodes.len()`.
+    /// node, index-aligned; the returned index must be `< nodes.len()`
+    /// and must point at an *alive* node whenever one exists (the chaos
+    /// layer guarantees at least one node is always up).
     fn assign(&mut self, t: f64, req: &Request, nodes: &[NodeState]) -> usize;
 }
 
@@ -98,6 +144,7 @@ pub fn build(lb: LbPolicy, nodes: usize, tbt_target_s: f64) -> Box<dyn Balancer>
         LbPolicy::LeastPromptWork => Box::new(LeastPromptWork::new(nodes, 10.0)),
         LbPolicy::JoinShortestQueue => Box::new(JoinShortestQueue),
         LbPolicy::PhaseAware => Box::new(PhaseAware::new(nodes, tbt_target_s)),
+        LbPolicy::PowerGrant => Box::new(PowerGrant),
     }
 }
 
@@ -111,10 +158,17 @@ impl Balancer for RoundRobin {
         "rr"
     }
 
-    fn assign(&mut self, _t: f64, _req: &Request, _nodes: &[NodeState]) -> usize {
-        let n = self.next;
-        self.next = (self.next + 1) % self.nodes;
-        n
+    fn assign(&mut self, _t: f64, _req: &Request, nodes: &[NodeState]) -> usize {
+        // Cycle, skipping dead nodes; with everything alive this is the
+        // classic modular counter (bit-compatible with the pre-chaos rr).
+        for _ in 0..self.nodes {
+            let n = self.next;
+            self.next = (self.next + 1) % self.nodes;
+            if nodes.get(n).map_or(true, |s| s.alive) {
+                return n;
+            }
+        }
+        panic!("round-robin: no alive nodes");
     }
 }
 
@@ -148,16 +202,23 @@ impl Balancer for LeastPromptWork {
         "leastwork"
     }
 
-    fn assign(&mut self, t: f64, req: &Request, _nodes: &[NodeState]) -> usize {
-        let mut best = 0;
+    fn assign(&mut self, t: f64, req: &Request, nodes: &[NodeState]) -> usize {
+        // Front-end policy, but liveness still comes from the snapshot:
+        // dead nodes are skipped (strict `<` keeps the all-alive case
+        // bit-compatible with the pre-chaos scan).
+        let mut best = None;
         let mut best_load = f64::INFINITY;
         for i in 0..self.load.len() {
+            if !nodes.get(i).map_or(true, |s| s.alive) {
+                continue;
+            }
             let l = self.load_at(i, t);
-            if l < best_load {
+            if l < best_load || best.is_none() {
                 best_load = l;
-                best = i;
+                best = Some(i);
             }
         }
+        let best = best.expect("leastwork: no alive nodes");
         // Touch only the winner: fold its decay into the stored value.
         self.load[best] = best_load + req.prompt_len as f64;
         self.last_t[best] = t;
@@ -180,6 +241,7 @@ impl Balancer for JoinShortestQueue {
 
     fn assign(&mut self, _t: f64, _req: &Request, nodes: &[NodeState]) -> usize {
         pick_min(nodes, |n| (Self::depth(n) as u64, n.outstanding_prompt_tokens))
+            .expect("jsq: no alive nodes")
     }
 }
 
@@ -214,40 +276,98 @@ impl Balancer for PhaseAware {
         let split = nodes.len() - self.long_nodes;
         match req.route_class() {
             RouteClass::Long => {
-                // Prefill pool: least outstanding prompt work.
-                split
-                    + pick_min(&nodes[split..], |n| {
+                // Prefill pool: least outstanding prompt work. If the
+                // whole long pool is down, spill into the interactive one.
+                pick_min(&nodes[split..], |n| {
+                    (n.outstanding_prompt_tokens, n.prefill_backlog as u64)
+                })
+                .map(|i| split + i)
+                .or_else(|| {
+                    pick_min(&nodes[..split], |n| {
                         (n.outstanding_prompt_tokens, n.prefill_backlog as u64)
                     })
+                })
+                .expect("phase: no alive nodes")
             }
             RouteClass::ShortMedium => {
                 // Interactive pool: shortest queue among healthy nodes; a
-                // blown decode tail pushes a node behind every healthy one.
+                // blown decode tail pushes a node behind every healthy
+                // one. If the whole interactive pool is down, spill into
+                // the long pool.
                 pick_min(&nodes[..split], |n| {
                     let unhealthy = (n.tbt_tail_p95_s > self.tbt_target_s) as u64;
-                    (
-                        unhealthy,
-                        (n.prefill_backlog + n.active_streams) as u64,
-                    )
+                    (unhealthy, (n.prefill_backlog + n.active_streams) as u64)
                 })
+                .or_else(|| {
+                    pick_min(&nodes[split..], |n| {
+                        (n.prefill_backlog + n.active_streams) as u64
+                    })
+                    .map(|i| split + i)
+                })
+                .expect("phase: no alive nodes")
             }
         }
     }
 }
 
-/// Index of the minimum key; ties break toward the lowest index (keeps
-/// every policy deterministic).
-fn pick_min<K: Ord>(nodes: &[NodeState], key: impl Fn(&NodeState) -> K) -> usize {
-    let mut best = 0;
-    let mut best_key = key(&nodes[0]);
-    for (i, n) in nodes.iter().enumerate().skip(1) {
+/// Power-aware ingress: consume the arbiter's live grants. Each request
+/// joins the alive node minimizing queued work per granted watt —
+/// power-starved nodes (small grants after a demand or SLO-pressure
+/// re-split) receive proportionally less new work, which keeps their
+/// clamped clocks from turning into queue blowups. With no cap every
+/// grant is infinite and the score collapses to plain queue depth.
+struct PowerGrant;
+
+impl Balancer for PowerGrant {
+    fn name(&self) -> &'static str {
+        "powergrant"
+    }
+
+    fn assign(&mut self, _t: f64, _req: &Request, nodes: &[NodeState]) -> usize {
+        let mut best = None;
+        let mut best_score = f64::INFINITY;
+        for (i, n) in nodes.iter().enumerate() {
+            if !n.alive {
+                continue;
+            }
+            let depth = (n.prefill_backlog + n.active_streams + 1) as f64;
+            // Finite grants scale the score; infinite grants (uncapped)
+            // normalize to 1 W so the comparison degrades to queue depth.
+            let grant = if n.granted_w.is_finite() {
+                n.granted_w.max(1e-9)
+            } else {
+                1.0
+            };
+            let score = depth / grant;
+            // Strict `<`: ties break toward the lowest index.
+            if score < best_score || best.is_none() {
+                best_score = score;
+                best = Some(i);
+            }
+        }
+        best.expect("powergrant: no alive nodes")
+    }
+}
+
+/// Index of the minimum key among *alive* nodes; ties break toward the
+/// lowest index (keeps every policy deterministic). `None` when every
+/// node in the slice is dead.
+fn pick_min<K: Ord>(nodes: &[NodeState], key: impl Fn(&NodeState) -> K) -> Option<usize> {
+    let mut best: Option<(usize, K)> = None;
+    for (i, n) in nodes.iter().enumerate() {
+        if !n.alive {
+            continue;
+        }
         let k = key(n);
-        if k < best_key {
-            best_key = k;
-            best = i;
+        let better = match &best {
+            Some((_, bk)) => k < *bk,
+            None => true,
+        };
+        if better {
+            best = Some((i, k));
         }
     }
-    best
+    best.map(|(i, _)| i)
 }
 
 #[cfg(test)]
@@ -337,6 +457,68 @@ mod tests {
         states[0].tbt_tail_p95_s = 0.5;
         states[1].active_streams = 3;
         assert_eq!(b.assign(0.0, &req(0, 0.0, 128), &states), 1);
+    }
+
+    #[test]
+    fn every_policy_skips_dead_nodes() {
+        for lb in LbPolicy::all() {
+            let mut b = build(lb, 3, 0.1);
+            let mut states = vec![NodeState::default(); 3];
+            states[0].alive = false;
+            states[2].alive = false;
+            for i in 0..6 {
+                let prompt = if i % 2 == 0 { 100 } else { 4096 };
+                let pick = b.assign(i as f64, &req(i, i as f64, prompt), &states);
+                assert_eq!(pick, 1, "{lb:?} routed to a dead node");
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_resumes_cycle_after_recovery() {
+        let mut b = build(LbPolicy::RoundRobin, 3, 0.1);
+        let mut states = vec![NodeState::default(); 3];
+        states[1].alive = false;
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 100), &states), 0);
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 100), &states), 2);
+        states[1].alive = true;
+        assert_eq!(b.assign(0.0, &req(2, 0.0, 100), &states), 0);
+        assert_eq!(b.assign(0.0, &req(3, 0.0, 100), &states), 1);
+    }
+
+    #[test]
+    fn phase_aware_spills_across_dead_pools() {
+        // 4 nodes: interactive pool {0,1,2}, long pool {3}.
+        let mut b = build(LbPolicy::PhaseAware, 4, 0.1);
+        let mut states = vec![NodeState::default(); 4];
+        // Long pool down: long prompts spill into the interactive pool.
+        states[3].alive = false;
+        assert!(b.assign(0.0, &req(0, 0.0, 4096), &states) < 3);
+        // Interactive pool down: short prompts spill into the long pool.
+        states[3].alive = true;
+        for s in states[..3].iter_mut() {
+            s.alive = false;
+        }
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 128), &states), 3);
+    }
+
+    #[test]
+    fn powergrant_routes_by_watts_per_queued_work() {
+        let mut b = build(LbPolicy::PowerGrant, 2, 0.1);
+        let mut states = vec![NodeState::default(); 2];
+        // Equal depth, unequal grants: the bigger grant wins.
+        states[0].granted_w = 1000.0;
+        states[1].granted_w = 3000.0;
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 100), &states), 1);
+        // A starved grant loses even to a deeper queue.
+        states[0].granted_w = 500.0;
+        states[1].granted_w = 3000.0;
+        states[1].active_streams = 3;
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 100), &states), 1);
+        // Uncapped (infinite grants): degrades to queue depth.
+        states[0].granted_w = f64::INFINITY;
+        states[1].granted_w = f64::INFINITY;
+        assert_eq!(b.assign(0.0, &req(2, 0.0, 100), &states), 0);
     }
 
     #[test]

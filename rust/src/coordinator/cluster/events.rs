@@ -1,20 +1,36 @@
 //! The cluster event loop: N node engines interleaved on one virtual
 //! clock.
 //!
-//! The loop merges three deterministic event sources:
+//! The loop merges four deterministic event sources:
 //! * the arrival stream (the trace, pre-scheduled into a cluster queue),
 //! * the power arbiter's control epochs,
+//! * the fault plan's node-loss / node-recovery events (chaos layer),
 //! * each node engine's own pending events.
 //!
 //! At every iteration the earliest source wins; ties go cluster-first and
 //! then lowest-node-first (`sim::earliest`), so the whole simulation is a
-//! pure function of (trace, config, seed). An arriving request is assigned
-//! by the balancer from a *live* telemetry snapshot and injected into the
-//! chosen engine through the priority event lane, which makes a 1-node
-//! cluster replay bit-identical to a plain [`run`](crate::coordinator::run).
+//! pure function of (trace, config, fault plan, seed). An arriving request
+//! is assigned by the balancer from a *live* telemetry snapshot — which
+//! now carries liveness and the arbiter's current watt grants — and
+//! injected into the chosen engine through the priority event lane, which
+//! makes a 1-node cluster replay bit-identical to a plain
+//! [`run`](crate::coordinator::run).
+//!
+//! Node loss re-homes work instead of dropping it: the failed engine is
+//! drained ([`Engine::fail`]) and every incomplete request goes back
+//! through the balancer at the failure instant, so request and token
+//! conservation hold under churn (partial decodes are rolled back into
+//! `wasted_tokens`). Recovery ([`Engine::recover`]) powers the node back
+//! on with cold telemetry and lets the balancer route to it again. Under
+//! a power cap, both transitions trigger an immediate out-of-band
+//! re-arbitration so the budget invariant survives churn: loss frees the
+//! dead node's share to the survivors, recovery clamps the rejoining
+//! node at the rejoin instant instead of letting it run uncapped until
+//! the next epoch.
 
 use crate::coordinator::cluster::balancer::{self, NodeState};
-use crate::coordinator::cluster::power::PowerArbiter;
+use crate::coordinator::cluster::faults::FaultKind;
+use crate::coordinator::cluster::power::{ArbiterStrategy, PowerArbiter};
 use crate::coordinator::cluster::{ClusterConfig, ClusterResult, PowerReport};
 use crate::coordinator::engine::{Engine, RunOptions, RunResult};
 use crate::sim::{self, EventQueue};
@@ -25,33 +41,63 @@ enum ClusterEv {
     /// Index into the trace's request list.
     Arrive(usize),
     PowerEpoch,
+    /// Index into the fault plan's event list.
+    Fault(usize),
 }
 
-fn snapshot(e: &Engine<'_>) -> NodeState {
+fn snapshot(e: &Engine<'_>, alive: bool, granted_w: f64) -> NodeState {
     NodeState {
         assigned: e.assigned(),
         prefill_backlog: e.prefill_backlog(),
         outstanding_prompt_tokens: e.outstanding_prompt_tokens(),
         active_streams: e.active_streams(),
         tbt_tail_p95_s: e.tbt_tail_p95(),
+        alive,
+        granted_w,
     }
 }
 
+fn snapshot_all(
+    engines: &[Engine<'_>],
+    alive: &[bool],
+    granted_w: &[f64],
+    states: &mut Vec<NodeState>,
+) {
+    states.clear();
+    states.extend(
+        engines
+            .iter()
+            .enumerate()
+            .map(|(i, e)| snapshot(e, alive[i], granted_w[i])),
+    );
+}
+
 /// Run `trace` across the cluster as one interleaved event-driven
-/// simulation.
+/// simulation, honoring the config's node specs, fault plan and arbiter
+/// strategy. Panics on an invalid fault plan (validate at the CLI for a
+/// friendly error).
 pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> ClusterResult {
     assert!(ccfg.nodes >= 1, "cluster needs at least one node");
-    // Telemetry-driven balancers read the per-node TBT tail, so keep it
-    // live for them; front-end-only policies (rr, leastwork) never look,
-    // so skip the per-token cost. Everything else passes through.
+    ccfg.faults
+        .validate(ccfg.nodes)
+        .unwrap_or_else(|e| panic!("invalid fault plan: {e}"));
+    // Telemetry-driven balancers and the SLO-pressure arbiter read the
+    // per-node TBT tail, so keep it live for them; front-end-only
+    // policies (rr, leastwork) never look, so skip the per-token cost.
+    // Everything else passes through.
+    let wants_tail = !ccfg.lb.frontend_only()
+        || (ccfg.power_cap_w.is_some() && ccfg.arbiter == ArbiterStrategy::SloPressure);
     let node_opts = RunOptions {
-        track_tbt_tail: opts.track_tbt_tail || !ccfg.lb.frontend_only(),
+        track_tbt_tail: opts.track_tbt_tail || wants_tail,
         ..opts.clone()
     };
     let node_cfgs: Vec<_> = (0..ccfg.nodes)
         .map(|n| {
             let mut cfg = ccfg.node.clone();
             cfg.seed = ccfg.node.seed.wrapping_add(n as u64);
+            if !ccfg.node_specs.is_empty() {
+                ccfg.node_specs[n % ccfg.node_specs.len()].apply(&mut cfg);
+            }
             cfg
         })
         .collect();
@@ -72,18 +118,38 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
     }
 
     let mut lb = balancer::build(ccfg.lb, ccfg.nodes, ccfg.node.slo.tbt_p95_s);
-    let mut arbiter = ccfg
-        .power_cap_w
-        .map(|cap| PowerArbiter::new(cap, ccfg.power_epoch_s, ccfg.nodes));
+    let mut alive = vec![true; ccfg.nodes];
+    // Latest worst-case watt grant per node (∞ = uncapped); the
+    // `powergrant` balancer routes on this.
+    let mut granted_w = vec![f64::INFINITY; ccfg.nodes];
+    let mut arbiter = ccfg.power_cap_w.map(|cap| {
+        PowerArbiter::new(
+            cap,
+            ccfg.power_epoch_s,
+            ccfg.nodes,
+            ccfg.arbiter,
+            ccfg.node.slo.tbt_p95_s,
+        )
+    });
     if let Some(a) = arbiter.as_mut() {
-        a.apply_initial(&mut engines);
+        a.apply_initial(&mut engines, &alive);
+        if let Some(g) = a.latest_grants() {
+            granted_w.copy_from_slice(g);
+        }
     }
 
-    // Cluster-level queue: arrivals first (priority-free here — they get
-    // the lowest sequence numbers by being scheduled before the epochs).
+    // Cluster-level queue. Scheduling order fixes the sequence numbers,
+    // which fix exact-equal-timestamp ordering: all arrivals first, then
+    // fault transitions, then power epochs (rescheduled epochs draw ever
+    // higher sequence numbers, so a fault coinciding with an epoch always
+    // resolves fault-first — the epoch then sees the post-fault alive
+    // set, never granting watts to a node that died at the same instant).
     let mut q: EventQueue<ClusterEv> = EventQueue::new();
     for (i, r) in trace.requests.iter().enumerate() {
         q.schedule(r.arrival_s, ClusterEv::Arrive(i));
+    }
+    for (i, ev) in ccfg.faults.events.iter().enumerate() {
+        q.schedule(ev.t_s, ClusterEv::Fault(i));
     }
     if arbiter.is_some() {
         q.schedule(ccfg.power_epoch_s, ClusterEv::PowerEpoch);
@@ -93,6 +159,8 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
     let mut assignment = vec![0usize; ccfg.nodes];
     let mut node_times: Vec<Option<f64>> = vec![None; ccfg.nodes];
     let mut states: Vec<NodeState> = Vec::with_capacity(ccfg.nodes);
+    let mut rerouted: u64 = 0;
+    let mut fault_events: usize = 0;
 
     loop {
         let done: u64 = engines.iter().map(|e| e.completed()).sum();
@@ -116,17 +184,70 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
             let (t, ev) = q.pop().expect("peeked");
             match ev {
                 ClusterEv::Arrive(i) => {
-                    states.clear();
-                    states.extend(engines.iter().map(snapshot));
+                    snapshot_all(&engines, &alive, &granted_w, &mut states);
                     let node = lb.assign(t, &trace.requests[i], &states);
                     assert!(node < ccfg.nodes, "balancer returned node {node}");
+                    assert!(alive[node], "balancer routed to dead node {node}");
                     engines[node].inject(t, trace.requests[i].clone());
                     assignment[node] += 1;
                 }
                 ClusterEv::PowerEpoch => {
                     if let Some(a) = arbiter.as_mut() {
-                        a.epoch(t, &mut engines);
+                        a.epoch(t, &mut engines, &alive);
+                        if let Some(g) = a.latest_grants() {
+                            granted_w.copy_from_slice(g);
+                        }
                         q.schedule_in(ccfg.power_epoch_s, ClusterEv::PowerEpoch);
+                    }
+                }
+                ClusterEv::Fault(i) => {
+                    let fev = &ccfg.faults.events[i];
+                    fault_events += 1;
+                    match fev.kind {
+                        FaultKind::Down => {
+                            alive[fev.node] = false;
+                            let drained = engines[fev.node].fail(t);
+                            assignment[fev.node] -= drained.len();
+                            rerouted += drained.len() as u64;
+                            // Re-split the budget over the survivors right
+                            // away (frees the dead node's floor) so the
+                            // re-routes below see fresh grants.
+                            if let Some(a) = arbiter.as_mut() {
+                                a.rearbitrate(t, &mut engines, &alive);
+                                if let Some(g) = a.latest_grants() {
+                                    granted_w.copy_from_slice(g);
+                                }
+                            }
+                            // Re-home every incomplete request through the
+                            // live balancer (states re-snapshotted per
+                            // request: earlier re-routes shift the load the
+                            // later ones see).
+                            for req in drained {
+                                snapshot_all(&engines, &alive, &granted_w, &mut states);
+                                let node = lb.assign(t, &req, &states);
+                                assert!(
+                                    node < ccfg.nodes && alive[node],
+                                    "re-route picked dead node {node}"
+                                );
+                                engines[node].inject(t, req);
+                                assignment[node] += 1;
+                            }
+                        }
+                        FaultKind::Up => {
+                            alive[fev.node] = true;
+                            engines[fev.node].recover(t);
+                            // `recover` cleared the node's clamp; under a
+                            // cap that would let the cluster exceed its
+                            // budget until the next epoch. Re-arbitrate at
+                            // the rejoin instant (boost clocks have had
+                            // zero seconds to draw anything yet).
+                            if let Some(a) = arbiter.as_mut() {
+                                a.rearbitrate(t, &mut engines, &alive);
+                                if let Some(g) = a.latest_grants() {
+                                    granted_w.copy_from_slice(g);
+                                }
+                            }
+                        }
                     }
                 }
             }
@@ -140,6 +261,7 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
         .iter()
         .map(|e| e.now())
         .fold(trace.duration_s, f64::max);
+    let wasted_tokens: u64 = engines.iter().map(|e| e.wasted_tokens()).sum();
     let per_node: Vec<RunResult> = engines.iter_mut().map(|e| e.finalize(end_t)).collect();
 
     let total_energy_j = per_node.iter().map(|r| r.total_energy_j).sum();
@@ -172,5 +294,8 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
             had_infeasible_epoch: a.had_infeasible_epoch(),
             epochs: a.epochs,
         }),
+        rerouted,
+        wasted_tokens,
+        fault_events,
     }
 }

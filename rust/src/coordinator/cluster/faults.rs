@@ -1,0 +1,319 @@
+//! Chaos layer: deterministic node-loss / node-recovery schedules for the
+//! cluster event loop.
+//!
+//! A [`FaultPlan`] is an ordered list of [`FaultEvent`]s injected into the
+//! shared cluster clock alongside arrivals and power epochs. When a node
+//! goes down, the event loop drains its queued and in-flight requests
+//! ([`Engine::fail`](crate::coordinator::engine::Engine::fail)) and
+//! re-routes them through the live balancer, so conservation invariants
+//! (every request completes exactly once, every output token is generated
+//! exactly once) hold under churn; the energy the node already spent on
+//! aborted work is kept and the rolled-back tokens are reported as
+//! `wasted_tokens`. When a node comes back up it rejoins with cold
+//! telemetry (empty queues, reset TBT tail) and starts receiving traffic
+//! again.
+//!
+//! Schedules come in two spellings, both deterministic:
+//! * **Presets** ([`FaultSpec`]): `none`, `onedown` (highest-index node
+//!   lost at ⅓ of the trace), `flap` (same node lost at ⅓, recovered at
+//!   ⅔). Presets resolve against a concrete node count and duration, so
+//!   the scenario matrix can sweep them as an axis.
+//! * **Explicit events**: `"down@40:1,up@80:1"` — node 1 fails at t=40 s
+//!   and recovers at t=80 s.
+//!
+//! ```
+//! use greenllm::coordinator::cluster::faults::{FaultKind, FaultPlan};
+//!
+//! let plan = FaultPlan::parse("down@40:1,up@80:1").unwrap();
+//! assert_eq!(plan.events.len(), 2);
+//! assert_eq!(plan.events[0].kind, FaultKind::Down);
+//! plan.validate(3).unwrap();           // fine on a 3-node cluster
+//! assert!(plan.validate(1).is_err());  // would kill the only node
+//! ```
+
+/// Direction of one fault transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Node loss: drain + power off + re-route.
+    Down,
+    /// Node recovery: power on + rejoin with cold telemetry.
+    Up,
+}
+
+/// One scheduled fault transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time of the transition, seconds (must be > 0).
+    pub t_s: f64,
+    /// Target node index.
+    pub node: usize,
+    /// Loss or recovery.
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault schedule: time-ordered loss/recovery events.
+/// The default (empty) plan is inert — a cluster run with it is
+/// bit-identical to one without any chaos layer at all (tested).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Events sorted by time (ties in spell order).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// No events scheduled?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse an explicit event list: comma-separated `down@<t>:<node>` /
+    /// `up@<t>:<node>` entries. Events are sorted by time (stable, so
+    /// equal-time events keep their spelled order). An empty string is
+    /// the empty plan.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (kind, rest) = if let Some(r) = tok.strip_prefix("down@") {
+                (FaultKind::Down, r)
+            } else if let Some(r) = tok.strip_prefix("up@") {
+                (FaultKind::Up, r)
+            } else {
+                return Err(format!(
+                    "bad fault event {tok:?}: expected down@<t>:<node> or up@<t>:<node>"
+                ));
+            };
+            let (t, node) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("bad fault event {tok:?}: missing ':<node>'"))?;
+            let t_s: f64 = t
+                .parse()
+                .map_err(|_| format!("bad fault time {t:?} in {tok:?}"))?;
+            if !t_s.is_finite() || t_s <= 0.0 {
+                return Err(format!("fault time must be finite and > 0, got {t_s}"));
+            }
+            let node: usize = node
+                .parse()
+                .map_err(|_| format!("bad fault node {node:?} in {tok:?}"))?;
+            events.push(FaultEvent { t_s, node, kind });
+        }
+        let mut plan = FaultPlan { events };
+        plan.sort();
+        Ok(plan)
+    }
+
+    /// Sort events by time (stable: equal-time events keep insert order).
+    fn sort(&mut self) {
+        self.events.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
+    }
+
+    /// Check the schedule against a node count: every event targets a real
+    /// node, a node only goes down while up (and vice versa), and at least
+    /// one node stays alive at every instant (a fully dark cluster cannot
+    /// re-route its drained requests anywhere).
+    pub fn validate(&self, nodes: usize) -> Result<(), String> {
+        let mut down = vec![false; nodes];
+        let mut down_count = 0usize;
+        for ev in &self.events {
+            if ev.node >= nodes {
+                return Err(format!(
+                    "fault targets node {} but the cluster has {nodes} nodes",
+                    ev.node
+                ));
+            }
+            match ev.kind {
+                FaultKind::Down => {
+                    if down[ev.node] {
+                        return Err(format!("node {} downed twice (t={})", ev.node, ev.t_s));
+                    }
+                    if down_count + 1 >= nodes {
+                        return Err(format!(
+                            "fault plan would leave zero alive nodes at t={}",
+                            ev.t_s
+                        ));
+                    }
+                    down[ev.node] = true;
+                    down_count += 1;
+                }
+                FaultKind::Up => {
+                    if !down[ev.node] {
+                        return Err(format!(
+                            "node {} recovered while already up (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    down[ev.node] = false;
+                    down_count -= 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Render back to the explicit `down@t:node,...` spelling.
+    pub fn render(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| {
+                let k = match e.kind {
+                    FaultKind::Down => "down",
+                    FaultKind::Up => "up",
+                };
+                format!("{k}@{}:{}", e.t_s, e.node)
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// A named fault scenario, resolvable against a concrete cluster shape.
+/// This is the matrix-axis form: presets keep a stable label per cell
+/// while the actual event times scale with the cell's trace duration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultSpec {
+    /// No chaos (the empty plan).
+    None,
+    /// The highest-index node fails at ⅓ of the trace and never returns.
+    OneDown,
+    /// The highest-index node fails at ⅓ and recovers at ⅔ of the trace.
+    Flap,
+    /// An explicit event list (see [`FaultPlan::parse`]).
+    Explicit(FaultPlan),
+}
+
+impl FaultSpec {
+    /// Stable label (also the CLI spelling; explicit plans render their
+    /// event list).
+    pub fn name(&self) -> String {
+        match self {
+            FaultSpec::None => "none".into(),
+            FaultSpec::OneDown => "onedown".into(),
+            FaultSpec::Flap => "flap".into(),
+            FaultSpec::Explicit(p) => p.render(),
+        }
+    }
+
+    /// Parse a preset name or an explicit event list.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "none" | "" => Ok(FaultSpec::None),
+            "onedown" | "one-down" | "nodeloss" => Ok(FaultSpec::OneDown),
+            "flap" => Ok(FaultSpec::Flap),
+            _ => FaultPlan::parse(s).map(FaultSpec::Explicit),
+        }
+    }
+
+    /// Resolve to a concrete plan. Presets that would down the only node
+    /// of a 1-node cluster resolve to the empty plan (there is nowhere to
+    /// re-route, so chaos is a no-op there by construction).
+    pub fn plan(&self, nodes: usize, duration_s: f64) -> FaultPlan {
+        let victim = nodes.saturating_sub(1);
+        match self {
+            FaultSpec::None => FaultPlan::default(),
+            FaultSpec::OneDown if nodes >= 2 => FaultPlan {
+                events: vec![FaultEvent {
+                    t_s: duration_s / 3.0,
+                    node: victim,
+                    kind: FaultKind::Down,
+                }],
+            },
+            FaultSpec::Flap if nodes >= 2 => FaultPlan {
+                events: vec![
+                    FaultEvent {
+                        t_s: duration_s / 3.0,
+                        node: victim,
+                        kind: FaultKind::Down,
+                    },
+                    FaultEvent {
+                        t_s: duration_s * 2.0 / 3.0,
+                        node: victim,
+                        kind: FaultKind::Up,
+                    },
+                ],
+            },
+            FaultSpec::OneDown | FaultSpec::Flap => FaultPlan::default(),
+            FaultSpec::Explicit(p) => p.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_render_round_trip() {
+        let plan = FaultPlan::parse("down@40:1,up@80:1,down@100:0").unwrap();
+        assert_eq!(plan.events.len(), 3);
+        assert_eq!(plan.render(), "down@40:1,up@80:1,down@100:0");
+        assert_eq!(FaultPlan::parse(&plan.render()).unwrap(), plan);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_sorts_by_time() {
+        let plan = FaultPlan::parse("up@80:1,down@40:1").unwrap();
+        assert_eq!(plan.events[0].kind, FaultKind::Down);
+        assert_eq!(plan.events[1].kind, FaultKind::Up);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_events() {
+        assert!(FaultPlan::parse("sideways@40:1").is_err());
+        assert!(FaultPlan::parse("down@40").is_err());
+        assert!(FaultPlan::parse("down@-1:0").is_err());
+        assert!(FaultPlan::parse("down@0:0").is_err());
+        assert!(FaultPlan::parse("down@nan:0").is_err());
+        assert!(FaultPlan::parse("down@40:x").is_err());
+    }
+
+    #[test]
+    fn validate_enforces_liveness_and_state() {
+        let plan = FaultPlan::parse("down@40:1,up@80:1").unwrap();
+        plan.validate(2).unwrap();
+        // Bad node index.
+        assert!(FaultPlan::parse("down@40:5").unwrap().validate(2).is_err());
+        // Double down.
+        assert!(FaultPlan::parse("down@40:1,down@50:1")
+            .unwrap()
+            .validate(3)
+            .is_err());
+        // Up of an alive node.
+        assert!(FaultPlan::parse("up@40:1").unwrap().validate(2).is_err());
+        // All nodes dark.
+        assert!(FaultPlan::parse("down@40:0,down@50:1")
+            .unwrap()
+            .validate(2)
+            .is_err());
+        // ... but fine with a third node alive.
+        FaultPlan::parse("down@40:0,down@50:1")
+            .unwrap()
+            .validate(3)
+            .unwrap();
+    }
+
+    #[test]
+    fn spec_names_round_trip_through_parse() {
+        for spec in [FaultSpec::None, FaultSpec::OneDown, FaultSpec::Flap] {
+            assert_eq!(FaultSpec::parse(&spec.name()).unwrap(), spec);
+        }
+        let explicit = FaultSpec::parse("down@40:1,up@80:1").unwrap();
+        assert_eq!(FaultSpec::parse(&explicit.name()).unwrap(), explicit);
+        assert!(FaultSpec::parse("meteor").is_err());
+    }
+
+    #[test]
+    fn presets_resolve_against_shape_and_duration() {
+        let p = FaultSpec::OneDown.plan(3, 90.0);
+        assert_eq!(p.events.len(), 1);
+        assert_eq!(p.events[0].node, 2);
+        assert!((p.events[0].t_s - 30.0).abs() < 1e-12);
+        let f = FaultSpec::Flap.plan(2, 90.0);
+        assert_eq!(f.events.len(), 2);
+        assert!((f.events[1].t_s - 60.0).abs() < 1e-12);
+        f.validate(2).unwrap();
+        // Presets are inert on a single node and for `none`.
+        assert!(FaultSpec::OneDown.plan(1, 90.0).is_empty());
+        assert!(FaultSpec::Flap.plan(1, 90.0).is_empty());
+        assert!(FaultSpec::None.plan(4, 90.0).is_empty());
+    }
+}

@@ -10,86 +10,287 @@
 //! (`balancer`) — and a power arbiter re-splits a watt cap across nodes
 //! every control epoch by clamping each node's DVFS ladder (`power`).
 //!
+//! Chaos & heterogeneity (the fleet-realism layer):
+//! * [`faults::FaultPlan`] injects node-loss/recovery events into the
+//!   shared clock; a downed node's queued and in-flight requests are
+//!   drained and re-routed through the live balancer, recovered nodes
+//!   rejoin with cold telemetry, and request/token conservation holds
+//!   throughout (rolled-back partial work is reported as waste).
+//! * [`NodeSpec`] presets give each node its own pool shape, power-model
+//!   scale and clock ceiling, so balancers and the arbiter see genuinely
+//!   asymmetric capacity.
+//! * [`power::ArbiterStrategy`] selects how watt headroom is split:
+//!   demand-proportional (default) or SLO-pressure (TBT-tail weighted);
+//!   the `powergrant` balancer closes the loop by routing on live grants.
+//!
 //! Contracts:
 //! * Balancers implement [`balancer::Balancer`]; register in
 //!   [`balancer::build`] + add an [`LbPolicy`] variant.
 //! * The arbiter owns watt→clock conversion; engines only ever see a
 //!   ladder-frequency ceiling, policies keep requesting clocks freely.
 //! * Everything stays deterministic: a 1-node cluster is bit-identical to
-//!   a plain [`run`](crate::coordinator::run) (tested).
+//!   a plain [`run`](crate::coordinator::run) and an empty [`FaultPlan`]
+//!   is bit-identical to no chaos layer at all (both tested).
 
 pub mod balancer;
 pub mod events;
+pub mod faults;
 pub mod power;
 
 pub use balancer::{Balancer, LbPolicy, NodeState};
 pub use events::run_cluster;
-pub use power::{PowerArbiter, PowerEpoch};
+pub use faults::{FaultEvent, FaultKind, FaultPlan, FaultSpec};
+pub use power::{ArbiterStrategy, PowerArbiter, PowerEpoch};
 
-use crate::config::Config;
+use crate::config::{Config, PoolConfig};
 use crate::coordinator::engine::RunResult;
 use crate::workload::request::Trace;
 
-/// Cluster deployment: node count, ingress policy, per-node config, and
-/// the optional cluster-wide power budget.
+/// Hardware/pool shape of one node — the heterogeneity unit. Presets
+/// model GPU generations and SKU cuts on top of the A100 baseline:
+///
+/// | preset   | pools               | power × | clock cap |
+/// |----------|---------------------|---------|-----------|
+/// | `dgx`    | 2×2 pre + 4×1 dec   | 1.00    | 1410 MHz  |
+/// | `half`   | 1×2 pre + 2×1 dec   | 1.00    | 1410 MHz  |
+/// | `big`    | 3×2 pre + 6×1 dec   | 1.00    | 1410 MHz  |
+/// | `eff`    | 2×2 pre + 4×1 dec   | 0.70    | 1410 MHz  |
+/// | `legacy` | 2×2 pre + 4×1 dec   | 1.25    | 1200 MHz  |
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    /// Preset name (stable label for reports).
+    pub name: String,
+    /// Worker-pool shape of the node.
+    pub pools: PoolConfig,
+    /// Power-envelope multiplier (see [`crate::gpu::power::PowerModel::scaled`]).
+    pub power_scale: f64,
+    /// Application-clock ceiling in MHz (on the A100 ladder grid).
+    pub max_clock_mhz: u32,
+}
+
+impl NodeSpec {
+    /// The default DGX-A100 node (identical to `Config::default()` pools).
+    pub fn dgx() -> NodeSpec {
+        NodeSpec {
+            name: "dgx".into(),
+            pools: PoolConfig::default(),
+            power_scale: 1.0,
+            max_clock_mhz: 1410,
+        }
+    }
+
+    /// A half node: 1×2-GPU prefill + 2×1-GPU decode.
+    pub fn half() -> NodeSpec {
+        NodeSpec {
+            name: "half".into(),
+            pools: PoolConfig {
+                prefill_workers: 1,
+                decode_workers: 2,
+                ..PoolConfig::default()
+            },
+            power_scale: 1.0,
+            max_clock_mhz: 1410,
+        }
+    }
+
+    /// An oversized node: 3×2-GPU prefill + 6×1-GPU decode.
+    pub fn big() -> NodeSpec {
+        NodeSpec {
+            name: "big".into(),
+            pools: PoolConfig {
+                prefill_workers: 3,
+                decode_workers: 6,
+                ..PoolConfig::default()
+            },
+            power_scale: 1.0,
+            max_clock_mhz: 1410,
+        }
+    }
+
+    /// An efficiency-binned next-gen node: A100 envelope × 0.7.
+    pub fn eff() -> NodeSpec {
+        NodeSpec {
+            name: "eff".into(),
+            pools: PoolConfig::default(),
+            power_scale: 0.7,
+            max_clock_mhz: 1410,
+        }
+    }
+
+    /// An older-generation node: hotter (× 1.25) and capped at 1200 MHz.
+    pub fn legacy() -> NodeSpec {
+        NodeSpec {
+            name: "legacy".into(),
+            pools: PoolConfig::default(),
+            power_scale: 1.25,
+            max_clock_mhz: 1200,
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn parse(s: &str) -> Option<NodeSpec> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "dgx" | "a100" | "default" => Some(NodeSpec::dgx()),
+            "half" => Some(NodeSpec::half()),
+            "big" => Some(NodeSpec::big()),
+            "eff" | "efficient" => Some(NodeSpec::eff()),
+            "legacy" | "old" => Some(NodeSpec::legacy()),
+            _ => None,
+        }
+    }
+
+    /// Parse a node-shape list: preset names separated by `,` or `+`
+    /// (the matrix CLI uses `+` inside its comma-separated axis).
+    /// `"uniform"` (or empty) is the homogeneous cluster: an empty spec
+    /// list, meaning every node keeps the base `Config` untouched.
+    pub fn parse_list(s: &str) -> Result<Vec<NodeSpec>, String> {
+        let s = s.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("uniform") {
+            return Ok(Vec::new());
+        }
+        s.split(|c| c == ',' || c == '+')
+            .map(|tok| {
+                NodeSpec::parse(tok).ok_or_else(|| format!("unknown node spec {tok:?}"))
+            })
+            .collect()
+    }
+
+    /// Stamp this spec onto a node's serving config.
+    pub fn apply(&self, cfg: &mut Config) {
+        cfg.pools = self.pools.clone();
+        cfg.gpu.power_scale = self.power_scale;
+        cfg.gpu.max_clock_mhz = self.max_clock_mhz;
+    }
+}
+
+/// Cluster deployment: node count, ingress policy, per-node config, the
+/// optional cluster-wide power budget, per-node heterogeneity specs and
+/// the fault schedule.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
+    /// Number of simulated nodes.
     pub nodes: usize,
+    /// Ingress load-balancing policy.
     pub lb: LbPolicy,
     /// Per-node serving config (method, pools, SLOs...).
     pub node: Config,
+    /// Per-node shape overrides, cycled over the node count (node `i`
+    /// gets `node_specs[i % len]`). Empty = homogeneous `node` config.
+    pub node_specs: Vec<NodeSpec>,
     /// Cluster-wide power budget in watts (`None` = uncapped).
     pub power_cap_w: Option<f64>,
     /// Power-arbiter control epoch, seconds.
     pub power_epoch_s: f64,
+    /// How the arbiter splits watt headroom across nodes.
+    pub arbiter: ArbiterStrategy,
+    /// Node-loss/recovery schedule (empty = no chaos, bit-identical to
+    /// the pre-chaos event loop).
+    pub faults: FaultPlan,
 }
 
 impl ClusterConfig {
+    /// A homogeneous, uncapped, fault-free deployment.
     pub fn new(nodes: usize, lb: LbPolicy, node: Config) -> ClusterConfig {
         ClusterConfig {
             nodes,
             lb,
             node,
+            node_specs: Vec::new(),
             power_cap_w: None,
             power_epoch_s: 1.0,
+            arbiter: ArbiterStrategy::DemandProportional,
+            faults: FaultPlan::default(),
         }
     }
 
+    /// Add a cluster-wide watt budget arbitrated every `epoch_s` seconds.
     pub fn with_power_cap(mut self, cap_w: f64, epoch_s: f64) -> ClusterConfig {
         self.power_cap_w = Some(cap_w);
         self.power_epoch_s = epoch_s;
         self
+    }
+
+    /// Select the arbiter's headroom-split strategy.
+    pub fn with_arbiter(mut self, strategy: ArbiterStrategy) -> ClusterConfig {
+        self.arbiter = strategy;
+        self
+    }
+
+    /// Attach per-node shape presets (cycled over the node count).
+    pub fn with_node_specs(mut self, specs: Vec<NodeSpec>) -> ClusterConfig {
+        self.node_specs = specs;
+        self
+    }
+
+    /// Attach a fault schedule (validated against the node count when the
+    /// cluster runs).
+    pub fn with_faults(mut self, faults: FaultPlan) -> ClusterConfig {
+        self.faults = faults;
+        self
+    }
+
+    /// Resolved spec name of node `i` (`"dgx"` when homogeneous —
+    /// the base-config shape).
+    pub fn node_spec_name(&self, i: usize) -> String {
+        if self.node_specs.is_empty() {
+            "dgx".into()
+        } else {
+            self.node_specs[i % self.node_specs.len()].name.clone()
+        }
     }
 }
 
 /// Power-arbitration summary attached to a capped cluster run.
 #[derive(Debug, Clone)]
 pub struct PowerReport {
+    /// The cluster-wide watt budget.
     pub cap_w: f64,
+    /// Arbitration epoch length, seconds.
     pub epoch_s: f64,
     /// Highest measured cluster draw across epochs, watts.
     pub peak_measured_w: f64,
     /// Any epoch where a node's share fell below the ladder-floor power.
     pub had_infeasible_epoch: bool,
+    /// Every arbitration decision, in order (diagnostics + tests).
     pub epochs: Vec<PowerEpoch>,
 }
 
+/// Results of one cluster run: aggregate energy/SLO totals, the per-node
+/// breakdown, and chaos diagnostics when a fault plan was active.
 #[derive(Debug)]
 pub struct ClusterResult {
+    /// One engine result per node, index-aligned with the deployment.
     pub per_node: Vec<RunResult>,
+    /// Cluster-wide energy, joules.
     pub total_energy_j: f64,
+    /// Useful (delivered) tokens across the cluster. Conserved even under
+    /// node loss: partial work on a failed node is rolled back and
+    /// re-generated at the adoptive node.
     pub generated_tokens: u64,
+    /// Requests completed (every request completes exactly once).
     pub completed: u64,
+    /// Fraction of completed requests meeting their TTFT target.
     pub ttft_pass_rate: f64,
+    /// Fraction of TBT-eligible requests meeting the P95 TBT target.
     pub tbt_pass_rate: f64,
-    /// Requests assigned per node (balance diagnostic).
+    /// Requests assigned per node (balance diagnostic). A re-routed
+    /// request counts toward the node that finally served it.
     pub assignment: Vec<usize>,
+    /// The ingress policy the run used.
     pub lb: LbPolicy,
     /// Present iff the run had a power cap.
     pub power: Option<PowerReport>,
+    /// Requests drained from failed nodes and re-routed elsewhere.
+    pub rerouted: u64,
+    /// Tokens generated on failed nodes and rolled back at the drain
+    /// (energy already spent on them is kept — it is the waste of churn).
+    pub wasted_tokens: u64,
+    /// Fault transitions that actually fired during the run.
+    pub fault_events: usize,
 }
 
 impl ClusterResult {
+    /// Cluster-wide joules per delivered token.
     pub fn energy_per_token_j(&self) -> f64 {
         self.total_energy_j / self.generated_tokens.max(1) as f64
     }
@@ -239,6 +440,50 @@ mod tests {
             &RunOptions::default(),
         );
         assert_eq!(c.total_energy_j.to_bits(), plain.total_energy_j.to_bits());
+    }
+
+    #[test]
+    fn node_spec_presets_parse_and_apply() {
+        for name in ["dgx", "half", "big", "eff", "legacy"] {
+            let spec = NodeSpec::parse(name).unwrap();
+            assert_eq!(spec.name, name);
+            let mut cfg = Config::default();
+            spec.apply(&mut cfg);
+            cfg.validate().unwrap();
+            assert_eq!(cfg.pools, spec.pools);
+            assert_eq!(cfg.gpu.power_scale, spec.power_scale);
+            assert_eq!(cfg.gpu.max_clock_mhz, spec.max_clock_mhz);
+        }
+        assert!(NodeSpec::parse("h200").is_none());
+        // List grammar: `,` and `+` both separate; uniform/empty = none.
+        let specs = NodeSpec::parse_list("dgx+eff,legacy").unwrap();
+        assert_eq!(
+            specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>(),
+            vec!["dgx", "eff", "legacy"]
+        );
+        assert!(NodeSpec::parse_list("uniform").unwrap().is_empty());
+        assert!(NodeSpec::parse_list("").unwrap().is_empty());
+        assert!(NodeSpec::parse_list("dgx,bogus").is_err());
+    }
+
+    #[test]
+    fn cluster_config_builders_compose() {
+        let ccfg = ClusterConfig::new(3, LbPolicy::PowerGrant, Config::default())
+            .with_power_cap(9000.0, 0.5)
+            .with_arbiter(ArbiterStrategy::SloPressure)
+            .with_node_specs(vec![NodeSpec::eff(), NodeSpec::legacy()])
+            .with_faults(FaultPlan::parse("down@10:1,up@20:1").unwrap());
+        assert_eq!(ccfg.power_cap_w, Some(9000.0));
+        assert_eq!(ccfg.arbiter, ArbiterStrategy::SloPressure);
+        assert_eq!(ccfg.faults.events.len(), 2);
+        // Specs cycle over the node count.
+        assert_eq!(ccfg.node_spec_name(0), "eff");
+        assert_eq!(ccfg.node_spec_name(1), "legacy");
+        assert_eq!(ccfg.node_spec_name(2), "eff");
+        assert_eq!(
+            ClusterConfig::new(1, LbPolicy::RoundRobin, Config::default()).node_spec_name(0),
+            "dgx"
+        );
     }
 
     #[test]

@@ -1,26 +1,88 @@
-//! Cluster power-budget arbitration: one watt cap, many nodes.
+//! Cluster power-budget arbitration: one watt cap, many (possibly
+//! heterogeneous) nodes.
 //!
 //! Each control epoch the arbiter measures every node's mean power over
 //! the last epoch (exact, from the simulated GPUs' energy integrals) and
-//! splits the cluster cap into per-node watt shares: every node is first
-//! guaranteed its *floor* (worst-case power at the ladder's minimum
-//! clock — no grant can go below the physical lower bound), and the
-//! remaining headroom is distributed proportionally to measured demand.
+//! splits the cluster cap into per-node watt shares: every *alive* node
+//! is first guaranteed its *floor* (worst-case power at its own ladder's
+//! minimum clock — no grant can go below the physical lower bound), and
+//! the remaining headroom is distributed by the selected
+//! [`ArbiterStrategy`]:
+//!
+//! * [`ArbiterStrategy::DemandProportional`] — headroom follows measured
+//!   draw (the PR 2 default, unchanged bit-for-bit).
+//! * [`ArbiterStrategy::SloPressure`] — headroom follows each node's
+//!   TBT-tail pressure (recent decode P95 ÷ target): a node burning its
+//!   latency budget gets watts even while its measured draw is still
+//!   low, which is what lets clamped clusters protect tails instead of
+//!   rewarding whoever already burns the most.
+//!
 //! Each share is then converted into a *clock grant*: the highest ladder
-//! frequency whose worst-case node power (every GPU fully active) fits
-//! the share. Policies keep requesting whatever clocks they want — the
-//! engine clamps every request to the granted ceiling
+//! frequency whose worst-case node power (every GPU fully active, on that
+//! node's own power envelope) fits the share. Policies keep requesting
+//! whatever clocks they want — the engine clamps every request to the
+//! granted ceiling
 //! ([`crate::coordinator::engine::Engine::set_clock_cap`]).
 //!
 //! Because grants are sized against worst-case active power and every
 //! share is at least the floor whenever the cap covers the cluster-wide
 //! floor, the measured cluster draw can never exceed a feasible cap in
 //! any epoch. A cap below the summed floors is *physically* infeasible:
-//! nodes are clamped to the ladder minimum and the epoch is flagged.
+//! nodes are clamped to their ladder minimum and the epoch is flagged.
+//! Dead nodes (chaos layer) draw nothing, get share 0 and free their
+//! floor for the survivors.
 
 use crate::coordinator::engine::Engine;
 use crate::gpu::freq::FreqLadder;
 use crate::gpu::power::PowerModel;
+
+/// How the arbiter splits watt headroom above the per-node floors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArbiterStrategy {
+    /// Headroom proportional to each node's measured draw over the last
+    /// epoch (equal split before any demand exists). The default.
+    DemandProportional,
+    /// Headroom proportional to each node's TBT-tail pressure (recent
+    /// decode P95 ÷ the SLO target, clamped to [0, 8]): SLO-burning nodes
+    /// win watts. Falls back to measured demand while every tail is still
+    /// empty (cold start), then to an equal split.
+    SloPressure,
+}
+
+impl ArbiterStrategy {
+    /// Stable short name (CLI spelling, report column).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArbiterStrategy::DemandProportional => "demand",
+            ArbiterStrategy::SloPressure => "slo-pressure",
+        }
+    }
+
+    /// Parse a CLI spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<ArbiterStrategy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "demand" | "demand-proportional" | "proportional" => {
+                Some(ArbiterStrategy::DemandProportional)
+            }
+            "slo-pressure" | "slopressure" | "slo" | "pressure" => {
+                Some(ArbiterStrategy::SloPressure)
+            }
+            _ => None,
+        }
+    }
+
+    /// Every registered strategy, in report order.
+    pub fn all() -> Vec<ArbiterStrategy> {
+        vec![
+            ArbiterStrategy::DemandProportional,
+            ArbiterStrategy::SloPressure,
+        ]
+    }
+}
+
+/// Upper clamp on a node's TBT pressure weight: one deeply blown tail may
+/// dominate, but never starve the rest to a zero-headroom share.
+const MAX_PRESSURE: f64 = 8.0;
 
 /// One arbitration decision (diagnostics + invariant tests).
 #[derive(Debug, Clone)]
@@ -29,112 +91,208 @@ pub struct PowerEpoch {
     pub t_s: f64,
     /// Per-node mean power over the finished epoch, watts.
     pub measured_w: Vec<f64>,
-    /// Per-node share of the cap the arbiter allotted, watts.
+    /// Per-node share of the cap the arbiter allotted, watts (0 for dead
+    /// nodes).
     pub share_w: Vec<f64>,
-    /// Per-node clock ceiling granted, MHz.
+    /// Per-node clock ceiling granted, MHz (0 for dead nodes).
     pub clamp_mhz: Vec<u32>,
     /// Worst-case power of each grant (GPUs fully active), watts.
     pub granted_w: Vec<f64>,
-    /// Nodes whose share fell below the min-clock worst case (grant
-    /// clamped to the ladder floor; budget not guaranteeable).
+    /// Alive nodes whose share fell below their min-clock worst case
+    /// (grant clamped to the ladder floor; budget not guaranteeable).
     pub infeasible_nodes: usize,
 }
 
 impl PowerEpoch {
+    /// Summed measured cluster draw, watts.
     pub fn total_measured_w(&self) -> f64 {
         self.measured_w.iter().sum()
     }
 
+    /// Summed worst-case granted draw, watts.
     pub fn total_granted_w(&self) -> f64 {
         self.granted_w.iter().sum()
     }
 }
 
+/// Highest ladder clock whose worst-case node power (`gpus` fully active
+/// on `power`'s envelope) fits `share_w`; `None` if even the ladder floor
+/// exceeds the share. Heterogeneous nodes pass their own ladder/envelope.
+pub fn grant_for_share(
+    ladder: &FreqLadder,
+    power: &PowerModel,
+    gpus: usize,
+    share_w: f64,
+) -> Option<u32> {
+    let mut granted = None;
+    for f in ladder.iter() {
+        if gpus as f64 * power.active_w(f) <= share_w {
+            granted = Some(f);
+        } else {
+            break; // active power is monotone in frequency
+        }
+    }
+    granted
+}
+
 /// The cluster-wide arbiter. Drive with [`PowerArbiter::apply_initial`]
 /// once at t = 0 and [`PowerArbiter::epoch`] at every epoch boundary.
 pub struct PowerArbiter {
+    /// The cluster-wide watt budget.
     pub cap_w: f64,
+    /// Arbitration epoch length, seconds.
     pub epoch_s: f64,
-    power: PowerModel,
-    ladder: FreqLadder,
+    /// Headroom-split strategy.
+    pub strategy: ArbiterStrategy,
+    /// Decode P95 TBT target the SLO-pressure strategy normalizes by.
+    tbt_target_s: f64,
     last_energy_j: Vec<f64>,
     last_t: f64,
+    /// Every decision taken so far, in order.
     pub epochs: Vec<PowerEpoch>,
 }
 
 impl PowerArbiter {
-    pub fn new(cap_w: f64, epoch_s: f64, nodes: usize) -> Self {
+    /// A fresh arbiter for `nodes` nodes under `cap_w` watts.
+    pub fn new(
+        cap_w: f64,
+        epoch_s: f64,
+        nodes: usize,
+        strategy: ArbiterStrategy,
+        tbt_target_s: f64,
+    ) -> Self {
         assert!(cap_w > 0.0, "power cap must be positive");
         assert!(epoch_s > 0.0, "power epoch must be positive");
+        assert!(tbt_target_s > 0.0, "tbt target must be positive");
         PowerArbiter {
             cap_w,
             epoch_s,
-            power: PowerModel::a100(),
-            ladder: FreqLadder::a100(),
+            strategy,
+            tbt_target_s,
             last_energy_j: vec![0.0; nodes],
             last_t: 0.0,
             epochs: Vec::new(),
         }
     }
 
-    /// Highest ladder clock whose worst-case node power (`gpus` fully
-    /// active) fits `share_w`; `None` if even the floor exceeds the share.
-    fn grant_for_share(&self, gpus: usize, share_w: f64) -> Option<u32> {
-        let mut granted = None;
-        for f in self.ladder.iter() {
-            if gpus as f64 * self.power.active_w(f) <= share_w {
-                granted = Some(f);
+    /// Headroom weights per node under the active strategy; `None` means
+    /// "no information yet — fall back to an equal split among the
+    /// alive". Dead nodes always weigh zero.
+    fn headroom_weights(
+        &self,
+        measured: &[f64],
+        engines: &[Engine<'_>],
+        alive: &[bool],
+    ) -> Option<Vec<f64>> {
+        let masked = |v: Vec<f64>| -> Option<Vec<f64>> {
+            if v.iter().sum::<f64>() > 0.0 {
+                Some(v)
             } else {
-                break; // active power is monotone in frequency
+                None
             }
+        };
+        let demand = || {
+            masked(
+                measured
+                    .iter()
+                    .zip(alive)
+                    .map(|(m, &a)| if a { *m } else { 0.0 })
+                    .collect(),
+            )
+        };
+        match self.strategy {
+            ArbiterStrategy::DemandProportional => demand(),
+            ArbiterStrategy::SloPressure => masked(
+                engines
+                    .iter()
+                    .zip(alive)
+                    .map(|(e, &a)| {
+                        if a {
+                            (e.tbt_tail_p95() / self.tbt_target_s).clamp(0.0, MAX_PRESSURE)
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect(),
+            )
+            .or_else(demand),
         }
-        granted
     }
 
-    fn arbitrate(&mut self, t: f64, measured: Vec<f64>, engines: &mut [Engine<'_>]) {
-        let n = engines.len() as f64;
-        // Physical lower bound per node: worst-case power at the ladder
-        // floor. Shares never drop below it (a grant below min clock does
-        // not exist), so with a feasible cap every epoch stays feasible
-        // even when one node idles while another burns.
+    fn arbitrate(&mut self, t: f64, measured: Vec<f64>, engines: &mut [Engine<'_>], alive: &[bool]) {
+        let n_alive = alive.iter().filter(|a| **a).count().max(1) as f64;
+        // Physical lower bound per alive node: worst-case power at that
+        // node's own ladder floor. Shares never drop below it (a grant
+        // below min clock does not exist), so with a feasible cap every
+        // epoch stays feasible even when one node idles while another
+        // burns. Dead nodes draw nothing and need no floor.
         let floors: Vec<f64> = engines
             .iter()
-            .map(|e| e.num_gpus() as f64 * self.power.active_w(self.ladder.min_mhz))
+            .zip(alive)
+            .map(|(e, &a)| {
+                if a {
+                    e.node_active_w(e.ladder().min_mhz)
+                } else {
+                    0.0
+                }
+            })
             .collect();
         let total_floor: f64 = floors.iter().sum();
-        let total_m: f64 = measured.iter().sum();
+        let weights = self.headroom_weights(&measured, engines, alive);
         let share_w: Vec<f64> = if self.cap_w >= total_floor {
-            // Floor-guaranteed, headroom proportional to measured demand
-            // (equal split before any demand exists).
+            // Floor-guaranteed, headroom split by the strategy's weights
+            // (equal among the alive before any signal exists).
             let headroom = self.cap_w - total_floor;
+            let (w, total_w) = match &weights {
+                Some(w) => (Some(w), w.iter().sum::<f64>()),
+                None => (None, 0.0),
+            };
             floors
                 .iter()
-                .zip(&measured)
-                .map(|(f, m)| {
-                    f + headroom * if total_m > 0.0 { m / total_m } else { 1.0 / n }
+                .enumerate()
+                .map(|(i, f)| {
+                    if !alive[i] {
+                        return 0.0;
+                    }
+                    let frac = match w {
+                        Some(w) => w[i] / total_w,
+                        None => 1.0 / n_alive,
+                    };
+                    f + headroom * frac
                 })
                 .collect()
-        } else if total_m > 0.0 {
-            // Infeasible cap: best effort, pure proportional (nodes clamp
-            // to the ladder floor below their share anyway).
-            measured.iter().map(|m| self.cap_w * m / total_m).collect()
         } else {
-            engines.iter().map(|_| self.cap_w / n).collect()
+            // Infeasible cap: best effort, pure weighted split (nodes
+            // clamp to their ladder floor below their share anyway).
+            match &weights {
+                Some(w) => {
+                    let total_w: f64 = w.iter().sum();
+                    w.iter().map(|wi| self.cap_w * wi / total_w).collect()
+                }
+                None => alive
+                    .iter()
+                    .map(|&a| if a { self.cap_w / n_alive } else { 0.0 })
+                    .collect(),
+            }
         };
         let mut clamp_mhz = Vec::with_capacity(engines.len());
         let mut granted_w = Vec::with_capacity(engines.len());
         let mut infeasible = 0;
-        for (e, &share) in engines.iter_mut().zip(&share_w) {
-            let gpus = e.num_gpus();
-            let clamp = match self.grant_for_share(gpus, share) {
+        for (i, (e, &share)) in engines.iter_mut().zip(&share_w).enumerate() {
+            if !alive[i] {
+                clamp_mhz.push(0);
+                granted_w.push(0.0);
+                continue;
+            }
+            let clamp = match grant_for_share(e.ladder(), e.power_model(), e.num_gpus(), share) {
                 Some(f) => f,
                 None => {
                     infeasible += 1;
-                    self.ladder.min_mhz
+                    e.ladder().min_mhz
                 }
             };
             e.set_clock_cap(t, clamp);
-            granted_w.push(gpus as f64 * self.power.active_w(clamp));
+            granted_w.push(e.node_active_w(clamp));
             clamp_mhz.push(clamp);
         }
         self.epochs.push(PowerEpoch {
@@ -148,14 +306,30 @@ impl PowerArbiter {
     }
 
     /// First grant, before any demand exists: equal shares.
-    pub fn apply_initial(&mut self, engines: &mut [Engine<'_>]) {
+    pub fn apply_initial(&mut self, engines: &mut [Engine<'_>], alive: &[bool]) {
         let measured = vec![0.0; engines.len()];
-        self.arbitrate(0.0, measured, engines);
+        self.arbitrate(0.0, measured, engines, alive);
         // The t=0 record has no measurement; keep it for the clamp trail.
     }
 
+    /// Out-of-band re-arbitration at a fault transition: re-split the cap
+    /// across the *current* alive set using the last epoch's measurements,
+    /// without advancing the measurement window. Without this, a node
+    /// rejoining mid-epoch would run uncapped (its `recover` clears the
+    /// clamp) while the survivors still hold grants summing to the full
+    /// cap — the one way a feasible budget could be exceeded; and a freed
+    /// node's budget would stay stranded until the next epoch boundary.
+    pub fn rearbitrate(&mut self, t: f64, engines: &mut [Engine<'_>], alive: &[bool]) {
+        let measured = self
+            .epochs
+            .last()
+            .map(|e| e.measured_w.clone())
+            .unwrap_or_else(|| vec![0.0; engines.len()]);
+        self.arbitrate(t, measured, engines, alive);
+    }
+
     /// Epoch boundary at `t`: measure, re-split, re-grant.
-    pub fn epoch(&mut self, t: f64, engines: &mut [Engine<'_>]) {
+    pub fn epoch(&mut self, t: f64, engines: &mut [Engine<'_>], alive: &[bool]) {
         let dt = t - self.last_t;
         if dt <= 0.0 {
             return;
@@ -171,7 +345,15 @@ impl PowerArbiter {
             })
             .collect();
         self.last_t = t;
-        self.arbitrate(t, measured, engines);
+        self.arbitrate(t, measured, engines, alive);
+    }
+
+    /// Worst-case watt grant per node from the latest decision
+    /// (`f64::INFINITY` per node before any epoch ran — i.e. never, since
+    /// [`PowerArbiter::apply_initial`] records the t=0 grant). The
+    /// `powergrant` balancer consumes this.
+    pub fn latest_grants(&self) -> Option<&[f64]> {
+        self.epochs.last().map(|e| e.granted_w.as_slice())
     }
 
     /// Highest measured cluster draw across completed epochs (W).
@@ -194,27 +376,62 @@ mod tests {
 
     #[test]
     fn grant_fits_share_and_is_maximal() {
-        let a = PowerArbiter::new(4000.0, 1.0, 2);
+        let (ladder, power) = (FreqLadder::a100(), PowerModel::a100());
         // 8-GPU node, 2000 W share → some mid-ladder clock.
-        let f = a.grant_for_share(8, 2000.0).unwrap();
-        assert!(8.0 * a.power.active_w(f) <= 2000.0);
+        let f = grant_for_share(&ladder, &power, 8, 2000.0).unwrap();
+        assert!(8.0 * power.active_w(f) <= 2000.0);
         // One step up must overflow the share (maximality).
-        let up = f + a.ladder.step_mhz;
-        assert!(up > a.ladder.max_mhz || 8.0 * a.power.active_w(up) > 2000.0);
+        let up = f + ladder.step_mhz;
+        assert!(up > ladder.max_mhz || 8.0 * power.active_w(up) > 2000.0);
         // Generous share → full boost; starvation share → None.
-        assert_eq!(a.grant_for_share(8, 1e9), Some(a.ladder.max_mhz));
-        assert_eq!(a.grant_for_share(8, 100.0), None);
+        assert_eq!(
+            grant_for_share(&ladder, &power, 8, 1e9),
+            Some(ladder.max_mhz)
+        );
+        assert_eq!(grant_for_share(&ladder, &power, 8, 100.0), None);
+    }
+
+    #[test]
+    fn grant_respects_heterogeneous_hardware() {
+        let ladder = FreqLadder::a100();
+        let base = PowerModel::a100();
+        let eff = base.clone().scaled(0.7);
+        let share = 2000.0;
+        let f_base = grant_for_share(&ladder, &base, 8, share).unwrap();
+        let f_eff = grant_for_share(&ladder, &eff, 8, share).unwrap();
+        // An efficient node buys a higher clock for the same share.
+        assert!(f_eff > f_base, "eff {f_eff} <= base {f_base}");
+        // A capped ladder never grants above its ceiling.
+        let capped = FreqLadder {
+            max_mhz: 1200,
+            ..FreqLadder::a100()
+        };
+        assert_eq!(
+            grant_for_share(&capped, &base, 8, 1e9),
+            Some(1200)
+        );
     }
 
     #[test]
     fn epoch_report_shares_sum_to_cap() {
         // Shares are proportional splits of the cap, so they always sum to
         // it (within float error) whenever total demand is positive.
-        let a = PowerArbiter::new(3000.0, 1.0, 3);
-        // Synthesized split (no engines needed for the math check).
+        let cap_w = 3000.0;
         let measured = [900.0, 600.0, 300.0];
         let total: f64 = measured.iter().sum();
-        let shares: Vec<f64> = measured.iter().map(|m| a.cap_w * m / total).collect();
-        assert!((shares.iter().sum::<f64>() - a.cap_w).abs() < 1e-9);
+        let shares: Vec<f64> = measured.iter().map(|m| cap_w * m / total).collect();
+        assert!((shares.iter().sum::<f64>() - cap_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn strategy_names_round_trip_through_parse() {
+        for s in ArbiterStrategy::all() {
+            assert_eq!(ArbiterStrategy::parse(s.name()), Some(s), "{s:?}");
+        }
+        assert_eq!(
+            ArbiterStrategy::parse("slo"),
+            Some(ArbiterStrategy::SloPressure)
+        );
+        assert_eq!(ArbiterStrategy::parse("bogus"), None);
     }
 }

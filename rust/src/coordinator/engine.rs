@@ -21,7 +21,10 @@
 //!   Live telemetry accessors (queue depths, outstanding prefill tokens,
 //!   decode TBT tail) feed the cluster load balancer, and
 //!   [`Engine::set_clock_cap`] lets the power arbiter clamp every clock
-//!   the policy requests.
+//!   the policy requests. The chaos layer drives two more hooks:
+//!   [`Engine::fail`] (drain all incomplete requests for re-routing,
+//!   power off, cancel pending events) and [`Engine::recover`] (power
+//!   on with cold telemetry and re-armed ticks).
 
 use crate::config::{Config, Method};
 use crate::coordinator::policy::{self, DvfsPolicy};
@@ -29,6 +32,7 @@ use crate::coordinator::router::Router;
 use crate::coordinator::telemetry::{ClockPlan, DecodeWorkerView, PoolView, TickSpec};
 use crate::dvfs::prefill_opt::PrefillJobView;
 use crate::gpu::device::SimGpu;
+use crate::gpu::freq::FreqLadder;
 use crate::gpu::perf::PerfModel;
 use crate::gpu::power::PowerModel;
 use crate::metrics::{SlidingP95, TpsWindow};
@@ -61,25 +65,45 @@ pub struct RunOptions {
 /// Results of one replay.
 #[derive(Debug, Clone)]
 pub struct RunResult {
+    /// Name of the replayed trace.
     pub trace_name: String,
+    /// Serving policy the node ran.
     pub method: Method,
+    /// SLO accounting (TTFT/TBT pass rates, latency histograms).
     pub slo: SloTracker,
+    /// Prefill-pool energy, joules.
     pub prefill_energy_j: f64,
+    /// Decode-pool energy, joules.
     pub decode_energy_j: f64,
+    /// Whole-node energy, joules.
     pub total_energy_j: f64,
+    /// Useful (delivered) tokens; excludes tokens rolled back at a node
+    /// failure (see `wasted_tokens`).
     pub generated_tokens: u64,
+    /// Requests completed on this node.
     pub completed: u64,
+    /// Virtual end time of the run, seconds.
     pub sim_duration_s: f64,
+    /// Discrete events processed by the node's loop.
     pub events_processed: u64,
+    /// (t, MHz) trace of decode worker 0's GPU (when recorded).
     pub decode_freq_trace: Vec<(f64, u32)>,
+    /// (t, MHz) trace of prefill worker 0's GPU (when recorded).
     pub prefill_freq_trace: Vec<(f64, u32)>,
+    /// (t, tokens/s) aggregate decode throughput samples (when recorded).
     pub decode_tps_series: Vec<(f64, f64)>,
     /// Mean decode batch occupancy (diagnostics).
     pub mean_decode_batch: f64,
-    /// Controller diagnostics (GreenLLM only; zeros otherwise): coarse-band
-    /// switches, table adaptations, fine ticks across the decode pool.
+    /// Tokens generated then rolled back because the node failed
+    /// mid-stream (chaos layer); the energy spent on them is kept.
+    pub wasted_tokens: u64,
+    /// Coarse-band switches across the decode pool (GreenLLM only;
+    /// zero otherwise).
     pub band_switches: u64,
+    /// Band-table adaptations (GreenLLM only; zero otherwise).
     pub adaptations: u64,
+    /// Fine-loop ticks across the decode pool (GreenLLM only; zero
+    /// otherwise).
     pub fine_ticks: u64,
 }
 
@@ -92,6 +116,7 @@ impl RunResult {
         self.generated_tokens as f64 / self.sim_duration_s
     }
 
+    /// Whole-node energy in watt-hours.
     pub fn total_energy_wh(&self) -> f64 {
         self.total_energy_j / 3600.0
     }
@@ -198,6 +223,8 @@ pub struct Engine<'a> {
     streams_active: usize,
     /// Recent decode-TBT tail (only when `opts.track_tbt_tail`).
     tbt_tail: Option<SlidingP95>,
+    /// Tokens emitted then rolled back by a node failure (chaos layer).
+    wasted_tokens: u64,
 }
 
 /// Replay `trace` under `cfg`.
@@ -216,13 +243,22 @@ impl<'a> Engine<'a> {
         let spec = ModelSpec::by_name(&cfg.model)
             .unwrap_or_else(|| panic!("unknown model {:?}", cfg.model));
         let perf = PerfModel::new(spec);
-        let power = PowerModel::a100();
+        // Per-node hardware (heterogeneity knobs): a scaled A100 envelope
+        // and a possibly capped ladder. Defaults (scale 1.0, 1410 MHz) are
+        // bit-identical to the stock A100.
+        let ladder = FreqLadder {
+            max_mhz: cfg.gpu.max_clock_mhz,
+            ..FreqLadder::a100()
+        };
+        let power = PowerModel::a100().scaled(cfg.gpu.power_scale);
         let router = Router::new(cfg.method.routing(), cfg.pools.prefill_workers);
 
         // --- GPUs -------------------------------------------------------------
         let n_prefill_gpus = cfg.pools.prefill_workers * cfg.pools.gpus_per_prefill_worker;
         let n_gpus = n_prefill_gpus + cfg.pools.decode_workers * cfg.pools.gpus_per_decode_worker;
-        let mut gpus: Vec<SimGpu> = (0..n_gpus).map(SimGpu::new).collect();
+        let mut gpus: Vec<SimGpu> = (0..n_gpus)
+            .map(|i| SimGpu::with_hardware(i, ladder.clone(), power.clone()))
+            .collect();
         if opts.record_freq_trace {
             gpus[0].record_trace = true; // prefill worker 0, gpu 0
             gpus[n_prefill_gpus].record_trace = true; // decode worker 0
@@ -300,6 +336,7 @@ impl<'a> Engine<'a> {
             tbt_tail: opts
                 .track_tbt_tail
                 .then(|| SlidingP95::new(TBT_TAIL_WINDOW)),
+            wasted_tokens: 0,
         }
     }
 
@@ -432,6 +469,7 @@ impl<'a> Engine<'a> {
             } else {
                 bsum as f64 / bsamp as f64
             },
+            wasted_tokens: self.wasted_tokens,
             band_switches: diag.band_switches,
             adaptations: diag.adaptations,
             fine_ticks: diag.fine_ticks,
@@ -450,11 +488,13 @@ impl<'a> Engine<'a> {
         self.q.peek_time()
     }
 
+    /// Requests completed on this node so far.
     pub fn completed(&self) -> u64 {
         self.completed
     }
 
-    /// Requests this node has been handed so far.
+    /// Requests this node has been handed so far (drained requests stay
+    /// counted — they were handed to this node, then re-homed).
     pub fn assigned(&self) -> usize {
         self.requests.len()
     }
@@ -485,8 +525,32 @@ impl<'a> Engine<'a> {
         self.tbt_tail.as_ref().map(|t| t.p95()).unwrap_or(0.0)
     }
 
+    /// Total GPUs on this node (prefill + decode pools).
     pub fn num_gpus(&self) -> usize {
         self.gpus.len()
+    }
+
+    /// This node's application-clock ladder (heterogeneous nodes may cap
+    /// below the stock A100's 1410 MHz).
+    pub fn ladder(&self) -> &FreqLadder {
+        &self.gpus[0].ladder
+    }
+
+    /// This node's power envelope (heterogeneous nodes scale the A100
+    /// curve).
+    pub fn power_model(&self) -> &PowerModel {
+        &self.gpus[0].power
+    }
+
+    /// Worst-case node draw with every GPU fully active at `mhz`, watts.
+    /// The power arbiter sizes grants against this bound.
+    pub fn node_active_w(&self, mhz: u32) -> f64 {
+        self.num_gpus() as f64 * self.power_model().active_w(mhz)
+    }
+
+    /// Tokens emitted then rolled back by a node failure.
+    pub fn wasted_tokens(&self) -> u64 {
+        self.wasted_tokens
     }
 
     /// Cumulative node energy integrated up to `t` (power-arbiter
@@ -522,6 +586,108 @@ impl<'a> Engine<'a> {
             }
         }
         self.policy.on_power_cap(cap_mhz);
+    }
+
+    // -- chaos hooks (node loss / recovery) -----------------------------------
+
+    /// Node failure at `t` (chaos layer, stepped mode only): power every
+    /// GPU off, cancel all pending events, and drain every incomplete
+    /// request — queued prefill jobs, in-flight prefills, batched and
+    /// waiting decode streams — in a canonical deterministic order for
+    /// re-routing by the cluster loop. Tokens already emitted by drained
+    /// streams are rolled back from `generated_tokens` (the retry
+    /// re-generates them, keeping cluster-wide token conservation exact)
+    /// and surface as [`Engine::wasted_tokens`]; the energy they cost
+    /// stays on this node's meter. Telemetry goes cold: the TBT-tail and
+    /// TPS windows reset so balancer and arbiter see a fresh node on
+    /// recovery.
+    pub fn fail(&mut self, t: f64) -> Vec<Request> {
+        debug_assert!(
+            self.replay_total.is_none(),
+            "fail() on a replay-mode engine"
+        );
+        let mut drained = Vec::new();
+        // Queued prefill jobs, per queue in FIFO order.
+        for queue in self.prefill_queues.iter_mut() {
+            while let Some(job) = queue.pop_front() {
+                drained.push(self.requests[job.req_idx].clone());
+            }
+        }
+        // In-flight prefill jobs, worker order (their PrefillDone events
+        // die with the queue below).
+        for worker in self.prefill_workers.iter_mut() {
+            if let Some((req_idx, _)) = worker.current.take() {
+                drained.push(self.requests[req_idx].clone());
+            }
+        }
+        // Batched decode streams (worker order, batch order), then waiters.
+        let batched: Vec<Stream> = self
+            .decode_workers
+            .iter_mut()
+            .flat_map(|w| {
+                w.round_active = false;
+                std::mem::take(&mut w.streams)
+            })
+            .collect();
+        for s in batched {
+            self.abort_stream(s, &mut drained);
+        }
+        for s in std::mem::take(&mut self.decode_wait) {
+            self.abort_stream(s, &mut drained);
+        }
+        // Salvage arrivals the node was handed but had not yet processed
+        // (a same-timestamp fault can beat an injected arrival); all other
+        // pending events — in-flight completions, ticks — die with the
+        // node.
+        for (_, ev) in self.q.drain_sorted() {
+            if let Ev::Arrive(req_idx) = ev {
+                drained.push(self.requests[req_idx].clone());
+            }
+        }
+        self.outstanding_prompt_tok = 0;
+        self.streams_active = 0;
+        if self.tbt_tail.is_some() {
+            self.tbt_tail = Some(SlidingP95::new(TBT_TAIL_WINDOW));
+        }
+        self.global_tps = TpsWindow::new(0.2);
+        for g in self.gpus.iter_mut() {
+            g.power_off(t);
+        }
+        drained
+    }
+
+    /// Roll back one incomplete stream at a node failure: un-count its
+    /// emitted tokens (the prefill's first token + decode tokens so far)
+    /// and queue its request for re-routing.
+    fn abort_stream(&mut self, s: Stream, drained: &mut Vec<Request>) {
+        let req = self.requests[s.req_idx].clone();
+        let emitted = (req.output_len - s.remaining) as u64;
+        self.generated_tokens -= emitted;
+        self.wasted_tokens += emitted;
+        drained.push(req);
+    }
+
+    /// Node recovery at `t` (chaos layer): power the GPUs back on at the
+    /// policy's initial clock (boost when the policy sets none), clear
+    /// any stale arbiter cap, and re-arm the policy's periodic ticks from
+    /// the rejoin instant. Queues are empty (drained at failure) and
+    /// telemetry is cold; the cluster loop starts routing here again.
+    pub fn recover(&mut self, t: f64) {
+        let init = self.policy.initial_clock_mhz();
+        self.clock_cap_mhz = u32::MAX;
+        for (g, gpu) in self.gpus.iter_mut().enumerate() {
+            gpu.power_on(t);
+            let mhz = init.unwrap_or(gpu.ladder.max_mhz);
+            gpu.set_app_clock(t, mhz);
+            self.requested_mhz[g] = gpu.sm_clock();
+        }
+        let specs = self.tick_specs.clone();
+        for (kind, spec) in specs.iter().enumerate() {
+            self.q.schedule(t + spec.interval_s, Ev::PolicyTick(kind));
+        }
+        if self.opts.record_tps_series {
+            self.q.schedule(t + 0.2, Ev::SampleTick);
+        }
     }
 
     // -- helpers -------------------------------------------------------------
@@ -1088,6 +1254,57 @@ mod tests {
         assert_eq!(replay.total_energy_j.to_bits(), stepped.total_energy_j.to_bits());
         assert_eq!(replay.generated_tokens, stepped.generated_tokens);
         assert_eq!(replay.completed, stepped.completed);
+    }
+
+    #[test]
+    fn fail_drains_incomplete_work_and_conserves_after_retry() {
+        // Drive a stepped engine partway, fail it, then hand the drained
+        // requests back to the same (recovered) engine: every request
+        // must still complete exactly once with exact token totals.
+        let trace = tiny_trace(30, 10.0, 400, 20);
+        let cfg = cfg(Method::GreenLlm);
+        let opts = RunOptions::default();
+        let mut e = Engine::new(&cfg, &opts, "chaos".into(), trace.duration_s);
+        e.begin();
+        for r in &trace.requests {
+            e.inject(r.arrival_s, r.clone());
+        }
+        // Step until roughly half the requests completed.
+        while e.completed() < 15 {
+            assert!(e.step());
+        }
+        let t_fail = e.now();
+        let energy_at_fail = e.energy_now_j(t_fail);
+        let done_before = e.completed();
+        let drained = e.fail(t_fail);
+        assert!(!drained.is_empty(), "mid-run failure must drain work");
+        assert_eq!(
+            done_before as usize + drained.len(),
+            trace.requests.len(),
+            "drained + completed must cover every injected request"
+        );
+        // Dark window: no events pending, no energy accrues.
+        assert_eq!(e.peek_time(), None);
+        assert_eq!(e.energy_now_j(t_fail + 5.0), energy_at_fail);
+        // Recover and retry the drained requests on the same node.
+        let t_up = t_fail + 5.0;
+        e.recover(t_up);
+        for r in drained {
+            e.inject(t_up, r);
+        }
+        while e.completed() < trace.requests.len() as u64 {
+            assert!(e.step(), "engine stalled after recovery");
+        }
+        let r = e.finalize(trace.duration_s);
+        assert_eq!(r.completed, 30);
+        // Useful tokens are conserved exactly; the rolled-back partial
+        // streams show up as waste instead.
+        assert_eq!(r.generated_tokens, 30 * 20);
+        if done_before < 30 {
+            // At least the in-flight streams at the failure instant were
+            // partially decoded.
+            assert!(r.wasted_tokens > 0 || r.generated_tokens == 30 * 20);
+        }
     }
 
     #[test]

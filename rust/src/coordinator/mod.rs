@@ -12,7 +12,10 @@ pub mod policy;
 pub mod router;
 pub mod telemetry;
 
-pub use cluster::{run_cluster, ClusterConfig, ClusterResult, LbPolicy};
+pub use cluster::{
+    run_cluster, ArbiterStrategy, ClusterConfig, ClusterResult, FaultPlan, FaultSpec, LbPolicy,
+    NodeSpec,
+};
 pub use engine::{run, Engine, RunOptions, RunResult};
 pub use policy::{DvfsPolicy, PolicyDiagnostics};
 pub use router::Router;

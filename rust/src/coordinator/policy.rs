@@ -38,8 +38,11 @@ pub const TABLE_AVG_CTX: f64 = 600.0;
 /// Counters a policy may expose for benches/diagnostics.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PolicyDiagnostics {
+    /// Decode coarse-band switches.
     pub band_switches: u64,
+    /// Decode band-table adaptations.
     pub adaptations: u64,
+    /// Fine-loop ticks across the decode pool.
     pub fine_ticks: u64,
 }
 
@@ -157,6 +160,8 @@ pub struct GreenLlmPolicy {
 }
 
 impl GreenLlmPolicy {
+    /// Build the full stack for `cfg`: profile, fit, band tables, one
+    /// controller per worker.
     pub fn new(cfg: &Config, perf: &PerfModel, power: &PowerModel) -> GreenLlmPolicy {
         let mut profiler =
             Profiler::new(perf.clone(), power.clone(), cfg.sim_noise, cfg.seed ^ 0xF17);
@@ -300,6 +305,7 @@ pub struct DefaultNvPolicy {
 }
 
 impl DefaultNvPolicy {
+    /// One stock governor per worker, seeded per worker index.
     pub fn new(cfg: &Config) -> DefaultNvPolicy {
         let nv_prefill = (0..cfg.pools.prefill_workers)
             .map(|w| DefaultNvGovernor::new(cfg.seed ^ (w as u64)))
@@ -349,6 +355,7 @@ impl DvfsPolicy for DefaultNvPolicy {
 
 /// Pin every GPU to one application clock for the whole run (Fig. 3c).
 pub struct FixedPolicy {
+    /// The pinned application clock, MHz.
     pub mhz: u32,
 }
 
@@ -377,6 +384,7 @@ pub struct ThrottlePolicy {
 }
 
 impl ThrottlePolicy {
+    /// Profile and fit the latency model the predictor throttles against.
     pub fn new(cfg: &Config, perf: &PerfModel, power: &PowerModel) -> ThrottlePolicy {
         let mut profiler =
             Profiler::new(perf.clone(), power.clone(), cfg.sim_noise, cfg.seed ^ 0x7417);
@@ -533,6 +541,7 @@ pub struct AgftPolicy {
 }
 
 impl AgftPolicy {
+    /// One Q-learning agent per decode worker, seeded deterministically.
     pub fn new(cfg: &Config) -> AgftPolicy {
         let ladder = FreqLadder::a100();
         let agents = (0..cfg.pools.decode_workers)
@@ -634,6 +643,7 @@ pub struct PiTbtPolicy {
 }
 
 impl PiTbtPolicy {
+    /// One PI loop per decode worker at boost clocks.
     pub fn new(cfg: &Config) -> PiTbtPolicy {
         let ladder = FreqLadder::a100();
         let workers = (0..cfg.pools.decode_workers)

@@ -10,15 +10,20 @@ use crate::workload::request::{Request, RouteClass};
 
 /// Queue index constants.
 pub const Q_SHORT_MEDIUM: usize = 0;
+/// Long-prompt queue index.
 pub const Q_LONG: usize = 1;
 
 #[derive(Debug, Clone)]
+/// Length-based prefill router (one mixed queue when disabled).
 pub struct Router {
+    /// Routing enabled? (defaultNV baselines run one mixed queue).
     pub routing: bool,
+    /// Prefill worker count being routed across.
     pub prefill_workers: usize,
 }
 
 impl Router {
+    /// A router over `prefill_workers` workers.
     pub fn new(routing: bool, prefill_workers: usize) -> Self {
         assert!(prefill_workers >= 1);
         Router {

@@ -35,16 +35,32 @@ pub struct DecodeWorkerView {
 /// Snapshot of both pools at one instant of virtual time.
 #[derive(Debug, Clone, Default)]
 pub struct PoolView {
+    /// Virtual time of the snapshot.
     pub now: f64,
+    /// One view per prefill worker.
     pub prefill: Vec<PrefillWorkerView>,
+    /// One view per decode worker (empty unless [`TickSpec::decode_view`]).
     pub decode: Vec<DecodeWorkerView>,
 }
 
 /// Per-worker clock decisions returned from a policy tick. `None` holds
 /// the worker's current application clock.
+///
+/// ```
+/// use greenllm::coordinator::telemetry::ClockPlan;
+///
+/// let mut plan = ClockPlan::default();
+/// plan.reset(2, 4); // 2 prefill workers, 4 decode workers, all `None`
+/// plan.decode_mhz[0] = Some(1410);
+/// plan.clamp_to(900); // pre-shape against a known power-cap ceiling
+/// assert_eq!(plan.decode_mhz[0], Some(900));
+/// assert_eq!(plan.decode_mhz[1], None); // holds stay holds
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct ClockPlan {
+    /// Per-prefill-worker decisions, MHz.
     pub prefill_mhz: Vec<Option<u32>>,
+    /// Per-decode-worker decisions, MHz.
     pub decode_mhz: Vec<Option<u32>>,
 }
 
@@ -77,6 +93,7 @@ impl ClockPlan {
 /// is the `kind` passed back to `on_tick`.
 #[derive(Debug, Clone, Copy)]
 pub struct TickSpec {
+    /// Callback period, seconds.
     pub interval_s: f64,
     /// Fill [`PrefillWorkerView::jobs`] for this tick.
     pub prefill_jobs: bool,
@@ -87,6 +104,7 @@ pub struct TickSpec {
 }
 
 impl TickSpec {
+    /// A plain periodic tick (decode view on, prefill queues off).
     pub fn every(interval_s: f64) -> TickSpec {
         TickSpec {
             interval_s,
@@ -95,6 +113,7 @@ impl TickSpec {
         }
     }
 
+    /// A periodic tick that also builds prefill queue views.
     pub fn with_prefill_jobs(interval_s: f64) -> TickSpec {
         TickSpec {
             interval_s,

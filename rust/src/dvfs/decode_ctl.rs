@@ -21,14 +21,22 @@ use crate::metrics::{SlidingP95, TpsWindow};
 /// Frequency band: [lo, hi] in MHz, ladder-aligned.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Band {
+    /// Band floor, MHz.
     pub lo: u32,
+    /// Band ceiling, MHz.
     pub hi: u32,
 }
 
 #[derive(Debug, Clone)]
+/// The §3.3 dual-loop decode controller: coarse TPS→band lookup with
+/// hysteresis, fine P95-TBT steps inside the band, periodic band
+/// adaptation.
 pub struct DecodeController {
+    /// Controller constants (§3.3).
     pub cfg: DecodeCtlConfig,
+    /// Ladder the fine loop steps on.
     pub ladder: FreqLadder,
+    /// TPS-bucket → frequency lookup (coarse loop).
     pub table: BandTable,
     /// TBT SLO target × margin (s).
     pub tbt_target_s: f64,
@@ -45,11 +53,14 @@ pub struct DecodeController {
     adjusts_pinned_lo: u32,
     /// Counters for diagnostics/benches.
     pub fine_ticks: u64,
+    /// Coarse-band switches taken.
     pub band_switches: u64,
+    /// Band-table adaptations applied.
     pub adaptations: u64,
 }
 
 impl DecodeController {
+    /// A controller starting in the table's lowest bucket band.
     pub fn new(cfg: DecodeCtlConfig, table: BandTable, tbt_target_s: f64) -> Self {
         let ladder = FreqLadder::a100();
         let f0 = table.freqs[0];
@@ -181,14 +192,17 @@ impl DecodeController {
         self.adjusts_pinned_lo = 0;
     }
 
+    /// Current applied clock, MHz.
     pub fn current_clock(&self) -> u32 {
         self.cur_mhz
     }
 
+    /// Current [lo, hi] frequency band.
     pub fn current_band(&self) -> Band {
         self.band
     }
 
+    /// Smoothed TPS estimate at `now`.
     pub fn current_tps(&mut self, now: f64) -> f64 {
         self.tps_window.tps(now)
     }

@@ -23,6 +23,7 @@ pub struct DefaultNvGovernor {
 }
 
 impl DefaultNvGovernor {
+    /// A governor with the A100 boost envelope and a per-seed dither stream.
     pub fn new(seed: u64) -> Self {
         let ladder = FreqLadder::a100();
         DefaultNvGovernor {
@@ -51,6 +52,7 @@ impl DefaultNvGovernor {
         self.cur_mhz
     }
 
+    /// Current clock without ticking, MHz.
     pub fn current(&self) -> u32 {
         self.cur_mhz
     }

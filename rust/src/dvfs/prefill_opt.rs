@@ -18,6 +18,7 @@ use crate::gpu::freq::FreqLadder;
 /// What the optimizer sees of one queued prefill job.
 #[derive(Debug, Clone, Copy)]
 pub struct PrefillJobView {
+    /// Prompt length, tokens.
     pub prompt_len: u32,
     /// Absolute deadline for this job's TTFT (arrival + SLO × margin).
     pub deadline_s: f64,
@@ -26,7 +27,9 @@ pub struct PrefillJobView {
 /// Per-worker prefill optimizer.
 #[derive(Debug, Clone)]
 pub struct PrefillOptimizer {
+    /// Fitted latency/power models the optimizer plans with.
     pub models: FittedModels,
+    /// Ladder the chosen clock snaps to.
     pub ladder: FreqLadder,
     /// Clock to park at when the queue is empty.
     pub idle_clock_mhz: u32,
@@ -35,6 +38,7 @@ pub struct PrefillOptimizer {
 }
 
 impl PrefillOptimizer {
+    /// An optimizer over `models`, parking at `idle_clock_mhz` when empty.
     pub fn new(models: FittedModels, idle_clock_mhz: u32) -> Self {
         PrefillOptimizer {
             models,

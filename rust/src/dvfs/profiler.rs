@@ -33,12 +33,14 @@ pub struct FittedModels {
 }
 
 impl FittedModels {
+    /// Predicted prefill time of a `len`-token prompt at the reference clock.
     pub fn prefill_t_ref(&self, len: u32) -> f64 {
         let (a, b, c) = self.prefill_quad;
         let l = len as f64;
         a * l * l + b * l + c
     }
 
+    /// Predicted active power at `mhz`, watts.
     pub fn power_w(&self, mhz: u32) -> f64 {
         polyval(&self.power_cubic, mhz as f64 / 1000.0)
     }
@@ -47,16 +49,19 @@ impl FittedModels {
 /// Decode TPS bucket → optimal frequency lookup table (§3.3.1).
 #[derive(Debug, Clone)]
 pub struct BandTable {
+    /// TPS width of one bucket.
     pub bucket_width: f64,
     /// freqs[i] = lowest clock holding P95 TBT under target at TPS bucket i.
     pub freqs: Vec<u32>,
 }
 
 impl BandTable {
+    /// Bucket index of a TPS value (clamped to the table).
     pub fn bucket_of(&self, tps: f64) -> usize {
         ((tps / self.bucket_width) as usize).min(self.freqs.len() - 1)
     }
 
+    /// Table frequency for a TPS value, MHz.
     pub fn lookup(&self, tps: f64) -> u32 {
         self.freqs[self.bucket_of(tps)]
     }
@@ -73,14 +78,19 @@ impl BandTable {
 
 /// The profiling harness.
 pub struct Profiler {
+    /// Ground-truth latency model being "measured".
     pub perf: PerfModel,
+    /// Ground-truth power model being "measured".
     pub power: PowerModel,
+    /// Ladder swept by the profiling runs.
     pub ladder: FreqLadder,
+    /// Multiplicative log-normal measurement noise (σ).
     pub noise: f64,
     rng: Pcg64,
 }
 
 impl Profiler {
+    /// A profiler with a deterministic per-seed noise stream.
     pub fn new(perf: PerfModel, power: PowerModel, noise: f64, seed: u64) -> Self {
         Profiler {
             perf,

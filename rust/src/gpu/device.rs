@@ -8,50 +8,87 @@
 use crate::gpu::freq::FreqLadder;
 use crate::gpu::power::PowerModel;
 
-/// One simulated A100.
+/// One simulated GPU (an A100 by default; the heterogeneity layer builds
+/// nodes from scaled power envelopes and capped frequency ladders).
 #[derive(Debug, Clone)]
 pub struct SimGpu {
+    /// Device index within its node.
     pub id: usize,
+    /// Supported application-clock ladder.
     pub ladder: FreqLadder,
+    /// Power envelope (active curve + clocked-idle floor).
     pub power: PowerModel,
     freq_mhz: u32,
     util: f64,
     last_t: f64,
     energy_j: f64,
     busy_s: f64,
+    /// Powered off (node failure): draws zero watts until powered on.
+    off: bool,
     /// Optional (time, freq) trace for Fig. 1-style plots.
     pub record_trace: bool,
+    /// The recorded (time, MHz) clock-change trace (see `record_trace`).
     pub freq_trace: Vec<(f64, u32)>,
 }
 
 impl SimGpu {
+    /// A stock A100 at boost clocks.
     pub fn new(id: usize) -> Self {
-        let ladder = FreqLadder::a100();
+        SimGpu::with_hardware(id, FreqLadder::a100(), PowerModel::a100())
+    }
+
+    /// A GPU with an explicit ladder and power envelope (heterogeneous
+    /// cluster nodes). Starts at the ladder's maximum clock, idle.
+    pub fn with_hardware(id: usize, ladder: FreqLadder, power: PowerModel) -> Self {
         SimGpu {
             id,
             freq_mhz: ladder.max_mhz,
             ladder,
-            power: PowerModel::a100(),
+            power,
             util: 0.0,
             last_t: 0.0,
             energy_j: 0.0,
             busy_s: 0.0,
+            off: false,
             record_trace: false,
             freq_trace: Vec::new(),
         }
     }
 
-    /// Integrate energy up to `now` under the current (freq, util) state.
+    /// Integrate energy up to `now` under the current (freq, util, off)
+    /// state. A powered-off GPU integrates zero watts.
     pub fn advance(&mut self, now: f64) {
         debug_assert!(now + 1e-9 >= self.last_t, "time went backwards");
         let dt = (now - self.last_t).max(0.0);
         if dt > 0.0 {
-            self.energy_j += self.power.power_w(self.freq_mhz, self.util) * dt;
-            if self.util > 0.0 {
-                self.busy_s += dt;
+            if !self.off {
+                self.energy_j += self.power.power_w(self.freq_mhz, self.util) * dt;
+                if self.util > 0.0 {
+                    self.busy_s += dt;
+                }
             }
             self.last_t = now;
         }
+    }
+
+    /// Node failure at `now`: integrate up to the instant, then draw zero
+    /// watts (and accumulate no busy time) until [`SimGpu::power_on`].
+    pub fn power_off(&mut self, now: f64) {
+        self.advance(now);
+        self.off = true;
+        self.util = 0.0;
+    }
+
+    /// Node recovery at `now`: resume drawing power under the current
+    /// (freq, util) state from this instant.
+    pub fn power_on(&mut self, now: f64) {
+        self.advance(now);
+        self.off = false;
+    }
+
+    /// Is the GPU powered off (its node failed)?
+    pub fn is_off(&self) -> bool {
+        self.off
     }
 
     /// NVML-style application-clock set (snapped to the ladder).
@@ -73,22 +110,30 @@ impl SimGpu {
         self.util = util.clamp(0.0, 1.0);
     }
 
+    /// Current SM application clock in MHz.
     pub fn sm_clock(&self) -> u32 {
         self.freq_mhz
     }
 
+    /// Current utilization in [0, 1].
     pub fn util(&self) -> f64 {
         self.util
     }
 
+    /// Instantaneous power draw in watts (zero while powered off).
     pub fn power_w(&self) -> f64 {
+        if self.off {
+            return 0.0;
+        }
         self.power.power_w(self.freq_mhz, self.util)
     }
 
+    /// Energy integrated since construction, joules.
     pub fn energy_j(&self) -> f64 {
         self.energy_j
     }
 
+    /// Total time spent at non-zero utilization, seconds.
     pub fn busy_s(&self) -> f64 {
         self.busy_s
     }
@@ -147,6 +192,38 @@ mod tests {
         g.set_app_clock(2.0, 900); // no-op
         g.set_app_clock(3.0, 915);
         assert_eq!(g.freq_trace, vec![(1.0, 900), (3.0, 915)]);
+    }
+
+    #[test]
+    fn powered_off_gpu_draws_nothing() {
+        let mut g = SimGpu::new(0);
+        g.set_util(0.0, 1.0);
+        g.power_off(1.0); // 1 s active at boost
+        let at_failure = {
+            g.advance(5.0); // 4 s dark
+            g.energy_j()
+        };
+        assert!((at_failure - g.power.power_w(1410, 1.0)).abs() < 1e-9);
+        assert_eq!(g.power_w(), 0.0);
+        assert!(g.is_off());
+        // Recovery resumes idle integration from the power-on instant.
+        g.power_on(5.0);
+        g.advance(6.0);
+        let idle = g.power.power_w(1410, 0.0);
+        assert!((g.energy_j() - at_failure - idle).abs() < 1e-9);
+        assert!((g.busy_s() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn custom_hardware_scales_energy() {
+        let eff = PowerModel::a100().scaled(0.5);
+        let mut g = SimGpu::with_hardware(0, FreqLadder::a100(), eff);
+        let mut base = SimGpu::new(1);
+        g.set_util(0.0, 1.0);
+        base.set_util(0.0, 1.0);
+        g.advance(2.0);
+        base.advance(2.0);
+        assert!((g.energy_j() - 0.5 * base.energy_j()).abs() < 1e-9);
     }
 
     #[test]

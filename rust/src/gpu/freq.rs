@@ -8,8 +8,11 @@
 /// Discrete SM frequency ladder in MHz.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FreqLadder {
+    /// Lowest application clock, MHz.
     pub min_mhz: u32,
+    /// Highest application clock, MHz.
     pub max_mhz: u32,
+    /// Ladder step, MHz.
     pub step_mhz: u32,
 }
 
@@ -34,6 +37,7 @@ impl FreqLadder {
         ((self.max_mhz - self.min_mhz) / self.step_mhz) as usize + 1
     }
 
+    /// A ladder always has at least one point.
     pub fn is_empty(&self) -> bool {
         false
     }
@@ -76,6 +80,7 @@ impl FreqLadder {
         (off % self.step_mhz == 0).then(|| (off / self.step_mhz) as usize)
     }
 
+    /// Is `mhz` exactly on the ladder?
     pub fn contains(&self, mhz: u32) -> bool {
         self.index_of(mhz).is_some()
     }

@@ -36,10 +36,13 @@ impl Default for GpuHardware {
 /// Per-phase latency model for a (model, worker shape) pair.
 #[derive(Debug, Clone)]
 pub struct PerfModel {
+    /// Hardware envelope (peak FLOPs, HBM bandwidth, reference clock).
     pub hw: GpuHardware,
+    /// Served model architecture + cost coefficients.
     pub spec: ModelSpec,
     /// GPUs per prefill worker (paper: 2) and TP efficiency.
     pub prefill_gpus: usize,
+    /// Tensor-parallel scaling efficiency across the worker's GPUs.
     pub tp_efficiency: f64,
     /// Model FLOPs utilization achieved by the serving kernels.
     pub prefill_mfu: f64,
@@ -62,6 +65,7 @@ pub struct PerfModel {
 }
 
 impl PerfModel {
+    /// Calibrated model for `spec` on the paper's A100 worker shapes.
     pub fn new(spec: ModelSpec) -> Self {
         // Calibrated so the node saturates where the paper's does: prefill
         // pool nears saturation at Alibaba-chat 10 QPS (TTFT% dips to ~88,
@@ -107,6 +111,7 @@ impl PerfModel {
     }
 
     #[inline]
+    /// Latency multiplier of running at `mhz` vs the reference clock.
     pub fn freq_slowdown(&self, mhz: u32) -> f64 {
         self.hw.f_ref_mhz as f64 / (mhz.max(1) as f64)
     }

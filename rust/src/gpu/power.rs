@@ -45,6 +45,22 @@ impl PowerModel {
         }
     }
 
+    /// Uniformly scale the whole envelope (active curve, idle floor and
+    /// idle slope) by `factor`. The heterogeneity layer uses this as a
+    /// GPU-generation proxy: an efficiency-binned next-gen part is the
+    /// A100 curve × 0.7, an older-generation node × 1.25. Scaling by
+    /// exactly 1.0 is a bit-exact identity (`x * 1.0 == x` in IEEE 754),
+    /// so homogeneous clusters reproduce pre-heterogeneity results.
+    pub fn scaled(mut self, factor: f64) -> PowerModel {
+        assert!(factor > 0.0, "power scale must be positive");
+        for c in self.coeffs.iter_mut() {
+            *c *= factor;
+        }
+        self.idle_base_w *= factor;
+        self.idle_slope_w_per_ghz *= factor;
+        self
+    }
+
     /// Idle power at a given (parked) clock: ≈45 W at 210 MHz, ≈75 W at
     /// 1410 MHz on the A100.
     pub fn idle_w(&self, mhz: u32) -> f64 {
@@ -135,6 +151,19 @@ mod tests {
             (900..=1100).contains(&knee),
             "prefill energy knee at {knee} MHz, expected 900–1100"
         );
+    }
+
+    #[test]
+    fn scaled_model_scales_every_term() {
+        let base = PowerModel::a100();
+        let eff = base.clone().scaled(0.7);
+        for f in [210, 900, 1410] {
+            assert!((eff.active_w(f) - 0.7 * base.active_w(f)).abs() < 1e-9);
+            assert!((eff.idle_w(f) - 0.7 * base.idle_w(f)).abs() < 1e-9);
+        }
+        // Unit scale is a bit-exact identity.
+        let same = base.clone().scaled(1.0);
+        assert_eq!(same, base);
     }
 
     #[test]

@@ -25,6 +25,12 @@
 //!   (compiled against `runtime::xla_stub` offline).
 //! * [`bench`] — regeneration drivers for every paper table and figure,
 //!   plus the scenario-matrix harness (`bench::matrix`).
+//!
+//! The full architecture walk-through (module map, event-loop contract,
+//! trait contracts, dataflow) lives in `docs/ARCHITECTURE.md`; worked
+//! CLI recipes per scenario live in `docs/SCENARIOS.md`.
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;

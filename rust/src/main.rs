@@ -227,7 +227,7 @@ fn microbench(args: &Args, duration: f64, seed: u64) -> Result<()> {
 
 fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
     use greenllm::bench::matrix::{matrix, MatrixConfig};
-    use greenllm::coordinator::cluster::LbPolicy;
+    use greenllm::coordinator::cluster::{ArbiterStrategy, FaultSpec, LbPolicy, NodeSpec};
     let mut cfg = MatrixConfig {
         model: args.get_or("model", "qwen3-14b").to_string(),
         duration_s: duration,
@@ -290,40 +290,121 @@ fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
             })
             .collect::<Result<Vec<_>>>()?;
     }
+    if let Some(spec) = args.get("shapes") {
+        // Validate each shape eagerly so a typo fails before the sweep.
+        cfg.shapes = spec
+            .split(',')
+            .map(|s| {
+                let s = s.trim();
+                NodeSpec::parse_list(s)
+                    .map(|_| s.to_string())
+                    .map_err(|e| anyhow!(e))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(spec) = args.get("faults") {
+        cfg.faults = spec
+            .split(';')
+            .map(|s| FaultSpec::parse(s).map_err(|e| anyhow!(e)))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(spec) = args.get("arbiter") {
+        cfg.arbiters = if spec == "all" {
+            ArbiterStrategy::all()
+        } else {
+            spec.split(',')
+                .map(|s| {
+                    ArbiterStrategy::parse(s).ok_or_else(|| anyhow!("unknown arbiter {s:?}"))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+    }
     if cfg.traces.is_empty()
         || cfg.methods.is_empty()
         || cfg.margins.is_empty()
         || cfg.nodes.is_empty()
         || cfg.lbs.is_empty()
         || cfg.power_caps_w.is_empty()
+        || cfg.shapes.is_empty()
+        || cfg.faults.is_empty()
+        || cfg.arbiters.is_empty()
     {
         return Err(anyhow!(
-            "matrix needs at least one trace, method, margin, node count, balancer and cap"
+            "matrix needs at least one trace, method, margin, node count, balancer, \
+             cap, shape, fault spec and arbiter"
         ));
+    }
+    // Validate every fault plan that will actually run against its node
+    // count now, so a bad explicit schedule fails here with a message
+    // instead of panicking inside a sweep worker thread. (At 1 node the
+    // fault axis collapses to its first entry, mirroring `cells()`.)
+    for &n in &cfg.nodes {
+        let active = if n == 1 {
+            &cfg.faults[..cfg.faults.len().min(1)]
+        } else {
+            &cfg.faults[..]
+        };
+        for f in active {
+            f.plan(n, duration)
+                .validate(n)
+                .map_err(|e| anyhow!("fault spec {:?} at {n} nodes: {e}", f.name()))?;
+        }
     }
     matrix(&cfg, args.get("json"), args.get("md"));
     Ok(())
 }
 
 fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
-    use greenllm::coordinator::cluster::{run_cluster, ClusterConfig, LbPolicy};
+    use greenllm::coordinator::cluster::{
+        run_cluster, ArbiterStrategy, ClusterConfig, FaultSpec, LbPolicy, NodeSpec,
+    };
     let node_cfg = base_config(args, seed)?;
-    let nodes = args.usize_or("nodes", node_cfg.cluster.nodes)?;
     let lb_name = args.get_or("lb", &node_cfg.cluster.lb);
     let lb = LbPolicy::parse(lb_name).ok_or_else(|| anyhow!("unknown balancer {lb_name:?}"))?;
     let cap_w = args.f64_or("power-cap-w", node_cfg.cluster.power_cap_w)?;
     let epoch_s = args.f64_or("power-epoch-s", node_cfg.cluster.power_epoch_s)?;
+    let arb_name = args.get_or("arbiter", &node_cfg.cluster.arbiter);
+    let arbiter =
+        ArbiterStrategy::parse(arb_name).ok_or_else(|| anyhow!("unknown arbiter {arb_name:?}"))?;
+    let spec_list = args.get_or("node-spec", &node_cfg.cluster.node_specs);
+    let node_specs = NodeSpec::parse_list(spec_list).map_err(|e| anyhow!(e))?;
+    // `--node-spec a,b,c` fixes the node count unless --nodes overrides it.
+    let default_nodes = if node_specs.is_empty() {
+        node_cfg.cluster.nodes
+    } else {
+        node_specs.len()
+    };
+    let nodes = args.usize_or("nodes", default_nodes)?;
+    let fault_name = args.get_or("faults", &node_cfg.cluster.faults);
+    let faults = FaultSpec::parse(fault_name)
+        .map_err(|e| anyhow!(e))?
+        .plan(nodes, duration);
+    faults.validate(nodes).map_err(|e| anyhow!(e))?;
     let trace = trace_from_args(args, duration, seed)?;
+    let shape_label = if node_specs.is_empty() {
+        "uniform".to_string()
+    } else {
+        node_specs
+            .iter()
+            .map(|s| s.name.as_str())
+            .collect::<Vec<_>>()
+            .join(",")
+    };
     println!(
-        "cluster: {nodes} nodes, {} requests ({:.1} QPS aggregate), lb {}, cap {}",
+        "cluster: {nodes} nodes ({shape_label}), {} requests ({:.1} QPS aggregate), lb {}, cap {}, faults {}",
         trace.requests.len(),
         trace.qps(),
         lb.name(),
         if cap_w > 0.0 {
-            format!("{cap_w:.0} W / {epoch_s:.1} s epoch")
+            format!("{cap_w:.0} W / {epoch_s:.1} s epoch / {}", arbiter.name())
         } else {
             "uncapped".into()
-        }
+        },
+        if faults.is_empty() {
+            "none".to_string()
+        } else {
+            faults.render()
+        },
     );
     for method in [Method::DefaultNv, Method::GreenLlm] {
         let mut ccfg = ClusterConfig::new(
@@ -333,7 +414,10 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
                 method,
                 ..node_cfg.clone()
             },
-        );
+        )
+        .with_node_specs(node_specs.clone())
+        .with_faults(faults.clone())
+        .with_arbiter(arbiter);
         if cap_w > 0.0 {
             ccfg = ccfg.with_power_cap(cap_w, epoch_s);
         }
@@ -349,17 +433,25 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
         );
         for (i, n) in r.per_node.iter().enumerate() {
             println!(
-                "  node{i}: {:5} reqs | {:7.1} kJ | TTFT {:5.1}% | TBT {:5.1}%",
+                "  node{i} ({:<6}): {:5} reqs | {:7.1} kJ | TTFT {:5.1}% | TBT {:5.1}%",
+                ccfg.node_spec_name(i),
                 r.assignment[i],
                 n.total_energy_j / 1e3,
                 n.slo.ttft_pass_rate() * 100.0,
                 n.slo.tbt_pass_rate() * 100.0,
             );
         }
+        if r.fault_events > 0 {
+            println!(
+                "  chaos: {} fault events | {} requests re-routed | {} tokens wasted",
+                r.fault_events, r.rerouted, r.wasted_tokens
+            );
+        }
         if let Some(p) = &r.power {
             println!(
-                "  power: cap {:.0} W | peak epoch {:.0} W | {} epochs{}",
+                "  power: cap {:.0} W ({}) | peak epoch {:.0} W | {} epochs{}",
                 p.cap_w,
+                arbiter.name(),
                 p.peak_measured_w,
                 p.epochs.len(),
                 if p.had_infeasible_epoch {
@@ -439,13 +531,20 @@ COMMANDS
               regenerate a paper figure
   table3 table4 ablations baselines
               regenerate a paper table
-  cluster     event-driven multi-node simulation with online load balancing
-              (--nodes N --lb rr|leastwork|jsq|phase --power-cap-w W
-               --power-epoch-s S --trace ...)
+  cluster     event-driven multi-node simulation with online load balancing,
+              chaos injection and heterogeneous nodes
+              (--nodes N --lb rr|leastwork|jsq|phase|powergrant
+               --node-spec dgx,eff,legacy|half|big --power-cap-w W
+               --power-epoch-s S --arbiter demand|slo-pressure
+               --faults none|onedown|flap|\"down@40:1,up@80:1\" --trace ...)
   matrix      scenario matrix: traces x policies x margins x cluster shapes
-              across threads (--traces a,b --methods a,b --margins 0.9,1.0
-               --nodes 1,2,4 --lb all|jsq,phase --power-cap-w 0,8000
-               --threads N --json out.json --md out.md)
+              x chaos across threads (--traces a,b --methods a,b
+               --margins 0.9,1.0 --nodes 1,2,4 --lb all|jsq,phase
+               --power-cap-w 0,8000 --shapes uniform,dgx+eff+legacy
+               --faults \"none;onedown;flap\" --arbiter all|demand,slo-pressure
+               --threads N --json out.json --md out.md;
+               the --faults axis separates entries with ';' because explicit
+               fault plans contain commas)
   serve       end-to-end PJRT serving demo (needs `make artifacts`)
 
 FLAGS

@@ -49,6 +49,7 @@ impl Histogram {
     }
 
     #[inline]
+    /// Record one sample (non-finite values are dropped).
     pub fn record(&mut self, v: f64) {
         if !v.is_finite() {
             return;
@@ -61,10 +62,12 @@ impl Histogram {
         self.observed_max = self.observed_max.max(v);
     }
 
+    /// Total samples recorded.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Arithmetic mean of all samples.
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -94,19 +97,24 @@ impl Histogram {
         self.observed_max
     }
 
+    /// Median.
     pub fn p50(&self) -> f64 {
         self.quantile(0.50)
     }
+    /// 90th percentile.
     pub fn p90(&self) -> f64 {
         self.quantile(0.90)
     }
+    /// 95th percentile.
     pub fn p95(&self) -> f64 {
         self.quantile(0.95)
     }
+    /// 99th percentile.
     pub fn p99(&self) -> f64 {
         self.quantile(0.99)
     }
 
+    /// Largest recorded sample (0.0 when empty).
     pub fn observed_max(&self) -> f64 {
         if self.total == 0 {
             0.0

@@ -17,6 +17,7 @@ pub struct TpsWindow {
 }
 
 impl TpsWindow {
+    /// A window covering the trailing `window_s` seconds.
     pub fn new(window_s: f64) -> Self {
         assert!(window_s > 0.0);
         TpsWindow {
@@ -26,6 +27,7 @@ impl TpsWindow {
         }
     }
 
+    /// Record `tokens` emitted at `now`.
     pub fn record(&mut self, now: f64, tokens: u32) {
         self.events.push_back((now, tokens));
         self.total_tokens += tokens as u64;
@@ -50,6 +52,7 @@ impl TpsWindow {
         self.total_tokens as f64 / self.window_s
     }
 
+    /// Tokens currently inside the window.
     pub fn tokens_in_window(&self) -> u64 {
         self.total_tokens
     }
@@ -75,6 +78,7 @@ pub struct SlidingP95 {
 }
 
 impl SlidingP95 {
+    /// A window retaining ~`capacity` weighted samples.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity >= 1);
         SlidingP95 {
@@ -85,6 +89,7 @@ impl SlidingP95 {
         }
     }
 
+    /// Record one sample with weight 1.
     pub fn record(&mut self, v: f64) {
         self.record_weighted(v, 1);
     }
@@ -116,6 +121,7 @@ impl SlidingP95 {
         self.total as usize
     }
 
+    /// No samples retained?
     pub fn is_empty(&self) -> bool {
         self.total == 0
     }
@@ -136,6 +142,7 @@ impl SlidingP95 {
         self.sorted.last().map(|&(v, _)| v).unwrap_or(0.0)
     }
 
+    /// 95th percentile of the window (0.0 when empty).
     pub fn p95(&self) -> f64 {
         self.quantile(0.95)
     }

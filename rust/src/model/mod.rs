@@ -9,7 +9,9 @@
 /// Mixture-of-experts configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MoeSpec {
+    /// Total expert count per FFN layer.
     pub n_experts: usize,
+    /// Experts activated per token.
     pub active_experts: usize,
     /// Fraction of total parameters living in expert FFNs (the rest —
     /// attention, embeddings, router — is always streamed).
@@ -19,18 +21,25 @@ pub struct MoeSpec {
 /// Architecture + derived cost coefficients for a served model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
+    /// Display name.
     pub name: String,
     /// Total parameters (streamed on dense decode).
     pub params_total: f64,
     /// Parameters active per token (dense: == total).
     pub params_active: f64,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Hidden width.
     pub d_model: usize,
+    /// FFN inner width.
     pub d_ff: usize,
+    /// KV heads (GQA).
     pub n_kv_heads: usize,
+    /// Per-head dimension.
     pub d_head: usize,
     /// Bytes per parameter (BF16 = 2).
     pub bytes_per_param: f64,
+    /// Mixture-of-experts config (`None` = dense).
     pub moe: Option<MoeSpec>,
 }
 
@@ -138,6 +147,7 @@ impl ModelSpec {
         2.0 * self.params_active
     }
 
+    /// Look up a spec by CLI name; `None` for unknown models.
     pub fn by_name(name: &str) -> Option<ModelSpec> {
         match name {
             "qwen3-14b" | "Qwen3-14B" => Some(ModelSpec::qwen3_14b()),

@@ -19,11 +19,16 @@ use std::path::Path;
 pub struct StepOutput {
     /// Row-major logits; prefill: [B, S, V] flattened, decode: [B, V].
     pub logits: Vec<f32>,
+    /// Key-cache literal threaded into the next decode call.
     pub k_cache: xla::Literal,
+    /// Value-cache literal threaded into the next decode call.
     pub v_cache: xla::Literal,
 }
 
+/// PJRT-backed TinyLM engine: loads exported HLO artifacts and serves
+/// prefill/decode steps (compiles against the offline stub by default).
 pub struct TinyLmEngine {
+    /// The loaded artifact manifest.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     params: Vec<xla::Literal>,
@@ -31,6 +36,7 @@ pub struct TinyLmEngine {
     decode_exe: xla::PjRtLoadedExecutable,
     /// Executions since load (telemetry).
     pub prefill_calls: std::cell::Cell<u64>,
+    /// Decode executions since load (telemetry).
     pub decode_calls: std::cell::Cell<u64>,
 }
 
@@ -82,6 +88,7 @@ impl TinyLmEngine {
         })
     }
 
+    /// PJRT platform name of the backing client.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

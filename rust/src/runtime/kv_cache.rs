@@ -11,7 +11,9 @@ use std::collections::HashMap;
 /// Fixed-size block allocator with refcounts.
 #[derive(Debug)]
 pub struct KvBlockAllocator {
+    /// Tokens per block.
     pub block_tokens: usize,
+    /// Total blocks in the pool.
     pub total_blocks: usize,
     free: Vec<usize>,
     refcounts: HashMap<usize, u32>,
@@ -20,6 +22,7 @@ pub struct KvBlockAllocator {
 }
 
 impl KvBlockAllocator {
+    /// A pool of `total_blocks` blocks of `block_tokens` tokens each.
     pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
         assert!(total_blocks > 0 && block_tokens > 0);
         KvBlockAllocator {
@@ -31,14 +34,17 @@ impl KvBlockAllocator {
         }
     }
 
+    /// Blocks needed to hold `tokens` tokens (ceiling division).
     pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_tokens)
     }
 
+    /// Blocks currently free.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Blocks currently allocated.
     pub fn used_blocks(&self) -> usize {
         self.total_blocks - self.free.len()
     }

@@ -7,47 +7,75 @@ use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone)]
+/// One parameter tensor in ABI order.
 pub struct ParamSpec {
+    /// Parameter name.
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
 }
 
 impl ParamSpec {
+    /// Element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
 #[derive(Debug, Clone)]
+/// Numeric ground truth exported alongside the artifacts.
 pub struct TestVectors {
+    /// Prefill bucket the vectors were computed at.
     pub prefill_bucket: usize,
+    /// Sum of the last-position logits.
     pub last_logits_sum: f64,
+    /// Mean absolute value of the last-position logits.
     pub last_logits_absmean: f64,
+    /// Head of logits row 0 (spot check).
     pub last_logits_row0_head: Vec<f64>,
+    /// Prompt used for the greedy-decode check.
     pub greedy_prompt: Vec<i32>,
+    /// Expected greedy continuation tokens.
     pub greedy_next_tokens: Vec<i32>,
 }
 
 #[derive(Debug, Clone)]
+/// Parsed `manifest.json`: model shape, ABI, buckets, file map.
 pub struct Manifest {
+    /// Artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Hidden width.
     pub d_model: usize,
+    /// Attention head count.
     pub n_heads: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// FFN inner width.
     pub d_ff: usize,
+    /// Maximum sequence length.
     pub max_seq: usize,
+    /// Per-head dimension.
     pub d_head: usize,
+    /// Total parameter element count.
     pub num_params: usize,
+    /// Compiled batch size.
     pub batch: usize,
+    /// Prefill sequence-length buckets, ascending.
     pub prefill_buckets: Vec<usize>,
+    /// Path to the flat parameter file.
     pub params_file: PathBuf,
+    /// (bucket, path) per compiled prefill executable.
     pub prefill_files: Vec<(usize, PathBuf)>,
+    /// Path to the compiled decode executable.
     pub decode_file: PathBuf,
+    /// Numeric ground truth for the loaded artifacts.
     pub test_vectors: TestVectors,
 }
 
 impl Manifest {
+    /// Parse and validate `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -187,6 +215,7 @@ impl Manifest {
         self.prefill_buckets.iter().copied().find(|&b| b >= len)
     }
 
+    /// Read the flat f32 parameter file (validates the byte count).
     pub fn load_params_f32(&self) -> Result<Vec<f32>> {
         let bytes = std::fs::read(&self.params_file)
             .with_context(|| format!("reading {:?}", self.params_file))?;

@@ -5,15 +5,20 @@
 //! UTF-8, zero external files — exactly enough to prove the tokenize →
 //! route → serve path end-to-end.
 
+/// Beginning-of-sequence token id.
 pub const BOS: i32 = 256;
+/// End-of-sequence token id.
 pub const EOS: i32 = 257;
 
 #[derive(Debug, Clone)]
+/// Lossless byte-level tokenizer (ids 0–255 = raw bytes).
 pub struct ByteTokenizer {
+    /// Vocabulary size (≥ 258).
     pub vocab: usize,
 }
 
 impl ByteTokenizer {
+    /// A tokenizer for a `vocab`-sized model.
     pub fn new(vocab: usize) -> Self {
         assert!(vocab >= 258, "byte tokenizer needs vocab >= 258");
         ByteTokenizer { vocab }

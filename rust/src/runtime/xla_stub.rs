@@ -59,6 +59,7 @@ impl Literal {
         ))
     }
 
+    /// Tensor dimensions.
     pub fn dims(&self) -> &[i64] {
         &self.dims
     }
@@ -83,7 +84,9 @@ impl From<i32> for Literal {
 
 /// Element types a [`Literal`] can carry in the stub.
 pub trait LiteralElem: Sized {
+    /// Build a rank-1 literal from a slice.
     fn vec1(v: &[Self]) -> Literal;
+    /// Extract the literal's data as a vector of this element type.
     fn to_vec(lit: &Literal) -> Result<Vec<Self>, XlaError>;
 }
 
@@ -110,6 +113,7 @@ impl LiteralElem for i32 {
 pub struct HloModuleProto(());
 
 impl HloModuleProto {
+    /// Parse an HLO text file (always unavailable offline).
     pub fn from_text_file(path: &Path) -> Result<HloModuleProto, XlaError> {
         Err(unavailable(&format!("parse HLO {path:?}")))
     }
@@ -120,6 +124,7 @@ impl HloModuleProto {
 pub struct XlaComputation(());
 
 impl XlaComputation {
+    /// Wrap a parsed HLO module.
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation(())
     }
@@ -130,14 +135,17 @@ impl XlaComputation {
 pub struct PjRtClient(());
 
 impl PjRtClient {
+    /// Build a CPU client (always unavailable offline).
     pub fn cpu() -> Result<PjRtClient, XlaError> {
         Err(unavailable("PjRtClient::cpu"))
     }
 
+    /// Platform name of the stub.
     pub fn platform_name(&self) -> String {
         "offline-stub".to_string()
     }
 
+    /// Compile a computation (always unavailable offline).
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
         Err(unavailable("compile"))
     }
@@ -148,6 +156,7 @@ impl PjRtClient {
 pub struct PjRtLoadedExecutable(());
 
 impl PjRtLoadedExecutable {
+    /// Execute with the given arguments (always unavailable offline).
     pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
         Err(unavailable("execute"))
     }
@@ -158,6 +167,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer(());
 
 impl PjRtBuffer {
+    /// Copy the buffer host-side (always unavailable offline).
     pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
         Err(unavailable("to_literal_sync"))
     }

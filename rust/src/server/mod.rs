@@ -21,9 +21,13 @@ use std::time::{Duration, Instant};
 /// A completed request, with serving telemetry.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// Request id (submission order).
     pub id: u64,
+    /// The submitted prompt.
     pub prompt: String,
+    /// Decoded completion text.
     pub text: String,
+    /// Generated token ids.
     pub tokens: Vec<i32>,
     /// Wall-clock seconds from submit to first generated token.
     pub ttft_s: f64,
@@ -54,20 +58,26 @@ pub struct ServerHandle {
 /// Aggregate serving stats returned at shutdown.
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
+    /// Requests fully served.
     pub completed: u64,
+    /// Decode batches executed.
     pub batches: u64,
+    /// Tokens generated across all requests.
     pub generated_tokens: u64,
+    /// Requests that shared a batch with at least one other.
     pub batched_requests: u64,
 }
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Artifact directory (`make artifacts` output).
     pub artifacts_dir: PathBuf,
     /// Batch-formation window: wait this long for same-length companions.
     pub batch_window: Duration,
     /// KV blocks available (bounds concurrent batches).
     pub kv_blocks: usize,
+    /// Tokens per KV block.
     pub kv_block_tokens: usize,
 }
 

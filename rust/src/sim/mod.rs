@@ -26,6 +26,7 @@ pub struct EventQueue<E> {
     seq: u64,
     prio_seq: u64,
     now: f64,
+    /// Total events popped so far (the `events_processed` diagnostic).
     pub popped: u64,
 }
 
@@ -62,6 +63,7 @@ impl<E> Ord for Entry<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue at virtual time 0.
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
@@ -126,16 +128,39 @@ impl<E> EventQueue<E> {
         })
     }
 
+    /// Time of the earliest pending event without popping it.
     pub fn peek_time(&self) -> Option<f64> {
         self.heap.peek().map(|e| e.t)
     }
 
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// No events pending?
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+
+    /// Drop every pending event, keeping virtual time and the sequence
+    /// counters. Used by the chaos layer: a failed node's in-flight
+    /// completions, ticks and samples all die with the node; re-arming
+    /// after recovery draws fresh (higher) sequence numbers, so a replay
+    /// with the identical fault schedule stays bit-deterministic.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    /// Empty the queue *without* advancing virtual time, returning every
+    /// pending event in exactly the order [`EventQueue::pop`] would have
+    /// yielded it (time, then sequence). The chaos layer uses this to
+    /// salvage still-pending arrivals from a failing node while letting
+    /// its in-flight completions and ticks die.
+    pub fn drain_sorted(&mut self) -> Vec<(f64, E)> {
+        let mut entries: Vec<Entry<E>> = self.heap.drain().collect();
+        entries.sort_by(|a, b| a.t.total_cmp(&b.t).then_with(|| a.seq.cmp(&b.seq)));
+        entries.into_iter().map(|e| (e.t, e.ev)).collect()
     }
 }
 
@@ -268,6 +293,42 @@ mod tests {
         // Time still dominates; priority only breaks exact-time ties, and
         // priority events stay FIFO among themselves.
         assert_eq!(order, vec!["early", "arrive0", "arrive1", "tick"]);
+    }
+
+    #[test]
+    fn clear_drops_pending_but_keeps_time() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(2.0, 2);
+        q.pop();
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.now(), 1.0);
+        assert_eq!(q.popped, 1);
+        // Scheduling after a clear still works and respects `now`.
+        q.schedule(3.0, 3);
+        assert_eq!(q.pop(), Some((3.0, 3)));
+    }
+
+    #[test]
+    fn drain_sorted_matches_pop_order_without_advancing_time() {
+        let mk = || {
+            let mut q = EventQueue::new();
+            q.schedule(2.0, "tick");
+            q.schedule_priority(2.0, "arrive");
+            q.schedule(1.0, "early");
+            q.schedule(2.0, "tock");
+            q
+        };
+        let popped: Vec<_> = {
+            let mut q = mk();
+            std::iter::from_fn(move || q.pop()).collect()
+        };
+        let mut q = mk();
+        let drained = q.drain_sorted();
+        assert_eq!(drained, popped);
+        assert_eq!(q.now(), 0.0, "drain must not advance virtual time");
+        assert!(q.is_empty());
     }
 
     #[test]

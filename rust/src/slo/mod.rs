@@ -11,8 +11,11 @@ use crate::workload::request::{PromptClass, Request, RouteClass};
 /// SLO targets in seconds.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SloTargets {
+    /// TTFT target for short/medium prompts, seconds.
     pub ttft_short_medium_s: f64,
+    /// TTFT target for long prompts, seconds.
     pub ttft_long_s: f64,
+    /// P95 time-between-tokens target, seconds.
     pub tbt_p95_s: f64,
 }
 
@@ -27,6 +30,7 @@ impl Default for SloTargets {
 }
 
 impl SloTargets {
+    /// TTFT target for a route class, seconds.
     pub fn ttft_for(&self, class: RouteClass) -> f64 {
         match class {
             RouteClass::ShortMedium => self.ttft_short_medium_s,
@@ -38,18 +42,24 @@ impl SloTargets {
 /// Outcome of one completed request.
 #[derive(Debug, Clone)]
 pub struct RequestOutcome {
+    /// Request id.
     pub id: u64,
+    /// Prompt length, tokens.
     pub prompt_len: u32,
+    /// Output length, tokens.
     pub output_len: u32,
+    /// Arrival time, seconds.
     pub arrival_s: f64,
     /// Time to first token (prefill completion), seconds.
     pub ttft_s: f64,
     /// P95 of this request's time-between-tokens, seconds (0 if < 2 tokens).
     pub tbt_p95_s: f64,
+    /// Completion time, seconds.
     pub finish_s: f64,
 }
 
 impl RequestOutcome {
+    /// Three-way prompt-size class of the request.
     pub fn prompt_class(&self) -> PromptClass {
         Request {
             id: self.id,
@@ -60,6 +70,7 @@ impl RequestOutcome {
         .prompt_class()
     }
 
+    /// Two-way routing class of the request.
     pub fn route_class(&self) -> RouteClass {
         if self.prompt_len >= crate::workload::request::LONG_MIN {
             RouteClass::Long
@@ -72,20 +83,29 @@ impl RequestOutcome {
 /// Aggregated SLO statistics over a run.
 #[derive(Debug, Clone)]
 pub struct SloTracker {
+    /// Targets being scored against.
     pub targets: SloTargets,
+    /// Requests recorded.
     pub completed: u64,
     ttft_pass: u64,
     tbt_pass: u64,
     tbt_eligible: u64,
+    /// TTFT histogram over all requests.
     pub ttft_hist: Histogram,
+    /// TTFT histogram, short/medium prompts only.
     pub ttft_hist_sm: Histogram,
+    /// TTFT histogram, long prompts only.
     pub ttft_hist_long: Histogram,
+    /// Per-request P95-TBT histogram.
     pub tbt_hist: Histogram,
+    /// Retained outcomes (only when `keep_outcomes`).
     pub outcomes: Vec<RequestOutcome>,
+    /// Keep per-request outcomes? (Costs memory; figure runs only.)
     pub keep_outcomes: bool,
 }
 
 impl SloTracker {
+    /// An empty tracker for `targets`.
     pub fn new(targets: SloTargets) -> Self {
         SloTracker {
             targets,
@@ -102,6 +122,7 @@ impl SloTracker {
         }
     }
 
+    /// Score and record one completed request.
     pub fn record(&mut self, o: RequestOutcome) {
         self.completed += 1;
         let ttft_target = self.targets.ttft_for(o.route_class());
@@ -142,12 +163,15 @@ impl SloTracker {
     }
 
     // Raw counters, for aggregating trackers across cluster nodes.
+    /// Requests that met their TTFT target.
     pub fn ttft_passes(&self) -> u64 {
         self.ttft_pass
     }
+    /// Streaming requests that met the P95 TBT target.
     pub fn tbt_passes(&self) -> u64 {
         self.tbt_pass
     }
+    /// Requests with ≥ 2 output tokens (TBT-scoreable).
     pub fn tbt_eligible(&self) -> u64 {
         self.tbt_eligible
     }

@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 #[derive(Debug, Clone)]
+/// A malformed command line (message for the user).
 pub struct CliError(pub String);
 
 impl fmt::Display for CliError {
@@ -18,9 +19,13 @@ impl std::error::Error for CliError {}
 /// Parsed command line: subcommand, key→value options, bare flags, positionals.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The subcommand (first bare argument).
     pub command: String,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
+    /// Positional arguments.
     pub positional: Vec<String>,
 }
 
@@ -58,22 +63,27 @@ impl Args {
         Ok(args)
     }
 
+    /// Parse the process's own arguments.
     pub fn from_env() -> Result<Args, CliError> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Was the bare flag given?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Option value by key.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Option value by key, with a default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Parse an option as `T`; `Ok(None)` when absent, `Err` on bad input.
     pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
         match self.get(name) {
             None => Ok(None),
@@ -84,14 +94,17 @@ impl Args {
         }
     }
 
+    /// Parse an `f64` option with a default.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
         Ok(self.get_parsed::<f64>(name)?.unwrap_or(default))
     }
 
+    /// Parse a `u64` option with a default.
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
         Ok(self.get_parsed::<u64>(name)?.unwrap_or(default))
     }
 
+    /// Parse a `usize` option with a default.
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
         Ok(self.get_parsed::<usize>(name)?.unwrap_or(default))
     }

@@ -82,7 +82,9 @@ pub use crate::anyhow;
 
 /// Drop-in for `anyhow::Context`.
 pub trait Context<T> {
+    /// Wrap the error (or `None`) with a higher-level context message.
     fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Like [`Context::context`], with the message built lazily.
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 

@@ -10,18 +10,28 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A JSON value.
 pub enum Json {
+    /// `null`.
     Null,
+    /// A boolean.
     Bool(bool),
+    /// A number (always f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, deterministic emission).
     Obj(BTreeMap<String, Json>),
 }
 
 #[derive(Debug, Clone)]
+/// A parse failure with byte position.
 pub struct JsonError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// Human-readable reason.
     pub msg: String,
 }
 
@@ -34,6 +44,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let bytes = text.as_bytes();
         let mut p = Parser { b: bytes, i: 0 };
@@ -46,6 +57,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object member by key (`None` on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -62,21 +74,25 @@ impl Json {
         Some(cur)
     }
 
+    /// The value as f64, if a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The value as usize, if a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
+    /// The value as a string slice, if a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The value as an array slice, if an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),

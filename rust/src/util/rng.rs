@@ -33,6 +33,7 @@ impl Pcg64 {
     }
 
     #[inline]
+    /// Next raw 64-bit output (PCG-XSL-RR).
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
         let rot = (self.state >> 122) as u32;

@@ -10,15 +10,22 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A TOML value (the supported subset).
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// A boolean.
     Bool(bool),
+    /// A flat array.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The value as f64 (integers widen), if numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -26,24 +33,28 @@ impl Value {
             _ => None,
         }
     }
+    /// The value as i64, if an integer.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// The value as a string slice, if a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The value as a bool, if a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The value as an array slice, if an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -53,8 +64,11 @@ impl Value {
 }
 
 #[derive(Debug, Clone)]
+/// A parse failure with line number.
 pub struct TomlError {
+    /// 1-based line of the failure.
     pub line: usize,
+    /// Human-readable reason.
     pub msg: String,
 }
 
@@ -68,10 +82,12 @@ impl std::error::Error for TomlError {}
 /// Parsed document: dotted-path key → value (e.g. "slo.ttft_short_ms").
 #[derive(Debug, Clone, Default)]
 pub struct Document {
+    /// Flattened key → value map.
     pub values: BTreeMap<String, Value>,
 }
 
 impl Document {
+    /// Parse a TOML document (unsupported syntax is a hard error).
     pub fn parse(text: &str) -> Result<Document, TomlError> {
         let mut doc = Document::default();
         let mut section = String::new();
@@ -117,22 +133,28 @@ impl Document {
         Ok(doc)
     }
 
+    /// Raw value at a dotted path.
     pub fn get(&self, path: &str) -> Option<&Value> {
         self.values.get(path)
     }
 
+    /// f64 at a dotted path, if numeric.
     pub fn f64(&self, path: &str) -> Option<f64> {
         self.get(path).and_then(Value::as_f64)
     }
+    /// i64 at a dotted path, if an integer.
     pub fn i64(&self, path: &str) -> Option<i64> {
         self.get(path).and_then(Value::as_i64)
     }
+    /// String at a dotted path, if a string.
     pub fn str(&self, path: &str) -> Option<&str> {
         self.get(path).and_then(Value::as_str)
     }
+    /// Bool at a dotted path, if a boolean.
     pub fn bool(&self, path: &str) -> Option<bool> {
         self.get(path).and_then(Value::as_bool)
     }
+    /// All-numeric array at a dotted path.
     pub fn f64_array(&self, path: &str) -> Option<Vec<f64>> {
         self.get(path)
             .and_then(Value::as_array)

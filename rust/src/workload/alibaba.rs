@@ -13,26 +13,34 @@ use crate::workload::request::{Request, Trace};
 /// Parameters of the chat generator (defaults = paper workload).
 #[derive(Debug, Clone)]
 pub struct ChatParams {
+    /// Mean request rate.
     pub qps: f64,
+    /// Trace length, seconds.
     pub duration_s: f64,
     /// Arrival burstiness: rate(t) = qps · (1 + amp · sin(2πt/period)).
     pub burst_amplitude: f64,
+    /// Burst modulation period, seconds.
     pub burst_period_s: f64,
     /// Fraction of long (≥ 1024 token) prompts.
     pub long_frac: f64,
     /// Log-normal (mu, sigma) of short/medium prompt lengths.
     pub prompt_mu: f64,
+    /// Log-normal σ of short/medium prompt lengths.
     pub prompt_sigma: f64,
     /// Pareto tail index of long prompts.
     pub long_alpha: f64,
+    /// Prompt length cap, tokens.
     pub max_prompt: u32,
     /// Log-normal (mu, sigma) of output lengths.
     pub output_mu: f64,
+    /// Log-normal σ of output lengths.
     pub output_sigma: f64,
+    /// Output length cap, tokens.
     pub max_output: u32,
 }
 
 impl ChatParams {
+    /// Paper-default chat parameters at a given rate and duration.
     pub fn new(qps: f64, duration_s: f64) -> Self {
         ChatParams {
             qps,

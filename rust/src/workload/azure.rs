@@ -18,20 +18,27 @@ use crate::util::rng::Pcg64;
 use crate::workload::request::{Request, Trace};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which 2024 Azure LLM-inference slice to model.
 pub enum AzureKind {
+    /// The code-assistant slice (long prompts, short outputs).
     Code,
+    /// The conversational slice (chat-like shapes).
     Conv,
 }
 
 #[derive(Debug, Clone)]
+/// Parameters of the Azure-like generator.
 pub struct AzureParams {
+    /// Which slice to model.
     pub kind: AzureKind,
     /// Downsampling divisor (paper: 8 or 5 ⇒ "code8", "code5", ...).
     pub rate_divisor: u32,
+    /// Trace length, seconds.
     pub duration_s: f64,
 }
 
 impl AzureParams {
+    /// A slice at a downsampling divisor (paper: 5 or 8).
     pub fn new(kind: AzureKind, rate_divisor: u32, duration_s: f64) -> Self {
         AzureParams {
             kind,
@@ -51,6 +58,7 @@ impl AzureParams {
     }
 }
 
+/// Generate an Azure-like trace (deterministic per seed).
 pub fn generate(params: &AzureParams, seed: u64) -> Trace {
     let mut rng = Pcg64::new(seed, 0xA2u64 << 8 | params.rate_divisor as u64);
     let qps = params.qps();

@@ -4,8 +4,11 @@
 /// Fig. 10 per-class microbenchmarks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PromptClass {
+    /// Prompt < 256 tokens.
     Short,
+    /// Prompt in [256, 1024).
     Medium,
+    /// Prompt ≥ 1024 tokens.
     Long,
 }
 
@@ -13,7 +16,9 @@ pub enum PromptClass {
 /// threshold): short/medium prompts vs long prompts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RouteClass {
+    /// Prompts below the routing threshold.
     ShortMedium,
+    /// Prompts at or above the routing threshold (≥ 1024 tokens).
     Long,
 }
 
@@ -25,6 +30,7 @@ pub const LONG_MIN: u32 = 1024;
 /// One inference request of a trace.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
+    /// Unique request id within its trace.
     pub id: u64,
     /// Arrival time, seconds from trace start.
     pub arrival_s: f64,
@@ -37,6 +43,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// Three-way prompt-size class (reporting).
     pub fn prompt_class(&self) -> PromptClass {
         if self.prompt_len >= LONG_MIN {
             PromptClass::Long
@@ -47,6 +54,7 @@ impl Request {
         }
     }
 
+    /// Two-way routing class (§3.1 threshold at 1024 tokens).
     pub fn route_class(&self) -> RouteClass {
         if self.prompt_len >= LONG_MIN {
             RouteClass::Long
@@ -59,7 +67,9 @@ impl Request {
 /// A complete workload trace.
 #[derive(Debug, Clone)]
 pub struct Trace {
+    /// Trace label used in reports.
     pub name: String,
+    /// Nominal trace length, seconds.
     pub duration_s: f64,
     /// Requests sorted by arrival time.
     pub requests: Vec<Request>,
@@ -90,6 +100,7 @@ impl Trace {
         self.requests.iter().map(|r| r.prompt_len as f64).sum::<f64>() / self.duration_s
     }
 
+    /// Panic if arrivals are not sorted by time (generator contract).
     pub fn assert_sorted(&self) {
         for w in self.requests.windows(2) {
             assert!(w[0].arrival_s <= w[1].arrival_s, "trace not sorted");

@@ -1,9 +1,13 @@
 //! Cluster coordinator invariants: conservation under every ingress
-//! policy, bit-exact degeneration to a single node, power-arbiter budget
-//! guarantees, and determinism of the interleaved event loop.
+//! policy (with and without node churn), bit-exact degeneration to a
+//! single node, bit-exact replay of fault schedules, power-arbiter budget
+//! guarantees under both strategies, and determinism of the interleaved
+//! event loop.
 
 use greenllm::config::{Config, Method};
-use greenllm::coordinator::cluster::{run_cluster, ClusterConfig, LbPolicy};
+use greenllm::coordinator::cluster::{
+    run_cluster, ArbiterStrategy, ClusterConfig, FaultPlan, FaultSpec, LbPolicy, NodeSpec,
+};
 use greenllm::coordinator::engine::{run, RunOptions};
 use greenllm::workload::alibaba::{generate, ChatParams};
 use greenllm::workload::request::Trace;
@@ -190,6 +194,222 @@ fn capped_cluster_is_deterministic() {
             y.total_measured_w().to_bits()
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Chaos & heterogeneity invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn node_loss_conserves_requests_and_tokens_per_balancer() {
+    // Kill node `nodes-1` a third of the way in: every balancer must
+    // re-home the drained work with zero dropped requests and exact
+    // useful-token totals.
+    let trace = chat(12.0, 45.0, 3);
+    let expect_tokens: u64 = trace.requests.iter().map(|r| r.output_len as u64).sum();
+    for lb in LbPolicy::all() {
+        for nodes in [2, 3] {
+            let ccfg = ClusterConfig::new(nodes, lb, node_cfg(Method::GreenLlm, 9))
+                .with_faults(FaultSpec::OneDown.plan(nodes, trace.duration_s));
+            let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+            assert_eq!(
+                r.completed as usize,
+                trace.requests.len(),
+                "{lb:?} x{nodes}: dropped requests under node loss"
+            );
+            assert_eq!(
+                r.generated_tokens, expect_tokens,
+                "{lb:?} x{nodes}: token conservation under node loss"
+            );
+            assert_eq!(
+                r.assignment.iter().sum::<usize>(),
+                trace.requests.len(),
+                "{lb:?} x{nodes}: assignment accounting under node loss"
+            );
+            assert_eq!(r.fault_events, 1, "{lb:?} x{nodes}");
+            // The victim had 15 s of traffic at 4+ QPS/node: losing it
+            // must strand at least something.
+            assert!(r.rerouted > 0, "{lb:?} x{nodes}: nothing re-routed");
+        }
+    }
+}
+
+#[test]
+fn node_recovery_rejoins_and_serves_again() {
+    // Flap node 2 (down at 15 s, back at 30 s of 45 s): it must complete
+    // requests both before the loss and after the rejoin.
+    let trace = chat(12.0, 45.0, 7);
+    let ccfg = ClusterConfig::new(3, LbPolicy::RoundRobin, node_cfg(Method::GreenLlm, 9))
+        .with_faults(FaultSpec::Flap.plan(3, trace.duration_s));
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len());
+    assert_eq!(r.fault_events, 2);
+    assert!(r.rerouted > 0);
+    // Round-robin keeps cycling through the recovered node, so it ends
+    // with a healthy share of completions despite the dark window.
+    assert!(
+        r.per_node[2].completed > 0,
+        "recovered node never served again: {:?}",
+        r.assignment
+    );
+    // The dark window shows up as strictly less energy than its peers
+    // (same ingress share otherwise, 15 s of zero draw).
+    assert!(
+        r.per_node[2].total_energy_j < r.per_node[0].total_energy_j,
+        "downed node should have spent less energy"
+    );
+}
+
+#[test]
+fn fault_schedule_replay_is_bit_exact() {
+    let trace = chat(10.0, 40.0, 17);
+    for lb in [LbPolicy::JoinShortestQueue, LbPolicy::PowerGrant] {
+        let mk = || {
+            let ccfg = ClusterConfig::new(3, lb, node_cfg(Method::GreenLlm, 7))
+                .with_faults(FaultPlan::parse("down@13:1,up@26:1").unwrap());
+            run_cluster(&ccfg, &trace, &RunOptions::default())
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits(), "{lb:?}");
+        assert_eq!(a.assignment, b.assignment, "{lb:?}");
+        assert_eq!(a.rerouted, b.rerouted, "{lb:?}");
+        assert_eq!(a.wasted_tokens, b.wasted_tokens, "{lb:?}");
+        for (x, y) in a.per_node.iter().zip(&b.per_node) {
+            assert_eq!(x.events_processed, y.events_processed, "{lb:?}");
+            assert_eq!(x.total_energy_j.to_bits(), y.total_energy_j.to_bits(), "{lb:?}");
+        }
+    }
+}
+
+#[test]
+fn empty_fault_plan_is_bit_exact_with_no_chaos_layer() {
+    // The inert plan must not perturb the event loop in any way: same
+    // bits as the plain cluster config (PR 2 behavior).
+    let trace = chat(8.0, 40.0, 23);
+    let base = ClusterConfig::new(2, LbPolicy::JoinShortestQueue, node_cfg(Method::GreenLlm, 5));
+    let with_empty_plan = base.clone().with_faults(FaultPlan::default());
+    let a = run_cluster(&base, &trace, &RunOptions::default());
+    let b = run_cluster(&with_empty_plan, &trace, &RunOptions::default());
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    assert_eq!(a.assignment, b.assignment);
+    assert_eq!(a.rerouted, 0);
+    assert_eq!(b.rerouted, 0);
+    assert_eq!(b.wasted_tokens, 0);
+    for (x, y) in a.per_node.iter().zip(&b.per_node) {
+        assert_eq!(x.events_processed, y.events_processed);
+        assert_eq!(x.total_energy_j.to_bits(), y.total_energy_j.to_bits());
+    }
+}
+
+#[test]
+fn heterogeneous_cluster_conserves_and_reflects_hardware() {
+    // eff (0.7× envelope) vs legacy (1.25× envelope, 1200 MHz cap) under
+    // round-robin: equal request shares, so the legacy node must burn
+    // measurably more energy.
+    let trace = chat(8.0, 40.0, 29);
+    let ccfg = ClusterConfig::new(2, LbPolicy::RoundRobin, node_cfg(Method::DefaultNv, 3))
+        .with_node_specs(vec![NodeSpec::eff(), NodeSpec::legacy()]);
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len());
+    assert!(
+        r.per_node[1].total_energy_j > 1.2 * r.per_node[0].total_energy_j,
+        "legacy {} J vs eff {} J",
+        r.per_node[1].total_energy_j,
+        r.per_node[0].total_energy_j
+    );
+}
+
+#[test]
+fn acceptance_three_node_heterogeneous_loss_zero_drops() {
+    // The PR's headline chaos criterion: a 3-node heterogeneous cluster
+    // with a mid-trace node loss completes with zero dropped requests.
+    let trace = chat(12.0, 60.0, 31);
+    let expect_tokens: u64 = trace.requests.iter().map(|r| r.output_len as u64).sum();
+    let ccfg = ClusterConfig::new(3, LbPolicy::JoinShortestQueue, node_cfg(Method::GreenLlm, 5))
+        .with_node_specs(vec![NodeSpec::dgx(), NodeSpec::eff(), NodeSpec::legacy()])
+        .with_faults(FaultSpec::OneDown.plan(3, trace.duration_s));
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len(), "dropped requests");
+    assert_eq!(r.generated_tokens, expect_tokens, "token conservation");
+    assert!(r.rerouted > 0);
+}
+
+#[test]
+fn slo_pressure_arbiter_respects_cap_and_conserves() {
+    let trace = chat(10.0, 40.0, 37);
+    let cap_w = 4200.0;
+    let ccfg = ClusterConfig::new(
+        2,
+        LbPolicy::JoinShortestQueue,
+        node_cfg(Method::DefaultNv, 3),
+    )
+    .with_power_cap(cap_w, 1.0)
+    .with_arbiter(ArbiterStrategy::SloPressure);
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len());
+    let p = r.power.as_ref().expect("capped run has a power report");
+    assert!(!p.epochs.is_empty());
+    for e in &p.epochs {
+        assert!(
+            e.total_granted_w() <= cap_w + 1e-6,
+            "slo-pressure granted {} W > cap {cap_w} W at t={}",
+            e.total_granted_w(),
+            e.t_s
+        );
+        assert!(e.total_measured_w() <= cap_w + 1e-6);
+    }
+}
+
+#[test]
+fn tight_cap_survives_node_recovery() {
+    // Regression: a recovering node's clamp is cleared by Engine::recover,
+    // so without the fault-transition re-arbitration the survivors (still
+    // holding grants summing to ~cap) plus the rejoined node at boost
+    // would exceed the budget until the next epoch. The cap here sits
+    // just above the 3-node floor, so any such window is visible.
+    let trace = chat(10.0, 45.0, 43);
+    let cap_w = 5200.0; // 3 nodes x 8 GPUs: floors ≈ 4636 W, tight but feasible
+    let ccfg = ClusterConfig::new(
+        3,
+        LbPolicy::JoinShortestQueue,
+        node_cfg(Method::DefaultNv, 3),
+    )
+    .with_power_cap(cap_w, 1.0)
+    .with_faults(FaultSpec::Flap.plan(3, trace.duration_s));
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len());
+    let p = r.power.unwrap();
+    assert!(!p.had_infeasible_epoch, "cap should stay feasible");
+    for e in &p.epochs {
+        assert!(
+            e.total_granted_w() <= cap_w + 1e-6,
+            "granted {} W > cap at t={}",
+            e.total_granted_w(),
+            e.t_s
+        );
+        assert!(
+            e.total_measured_w() <= cap_w + 1e-6,
+            "budget blown across recovery: measured {} W at t={}",
+            e.total_measured_w(),
+            e.t_s
+        );
+    }
+}
+
+#[test]
+fn powergrant_balancer_conserves_under_cap_and_churn() {
+    let trace = chat(10.0, 45.0, 41);
+    let ccfg = ClusterConfig::new(3, LbPolicy::PowerGrant, node_cfg(Method::GreenLlm, 5))
+        .with_power_cap(9000.0, 1.0)
+        .with_arbiter(ArbiterStrategy::SloPressure)
+        .with_faults(FaultSpec::Flap.plan(3, trace.duration_s));
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len());
+    let expect_tokens: u64 = trace.requests.iter().map(|r| r.output_len as u64).sum();
+    assert_eq!(r.generated_tokens, expect_tokens);
+    let p = r.power.unwrap();
+    assert!(p.peak_measured_w <= 9000.0 + 1e-6);
 }
 
 #[test]

@@ -246,15 +246,29 @@ fn snapshot_path() -> PathBuf {
 }
 
 fn render_snapshot(rows: &[GoldenRow]) -> String {
+    // Keep this header in sync with the committed file: a pin/bless run
+    // rewrites the whole snapshot, so the workflow documentation must
+    // survive the rewrite.
     let mut out = String::new();
     out.push_str(
         "# GreenLLM golden replay snapshot - trace golden-v1 (24 requests, 294 tokens), seed 7.\n",
     );
     out.push_str(
-        "# Float fields are hex f64 bit patterns; `pending` pins on the first test run.\n",
+        "# Workflow: integer fields (completed, tokens) are hard-pinned. Float fields are\n",
     );
     out.push_str(
-        "# Re-bless after intentional changes: GREENLLM_BLESS=1 cargo test --test golden_replay\n",
+        "# hex f64 bit patterns compared bit-exactly; `pending` means \"pin on first run\":\n",
+    );
+    out.push_str(
+        "# the first `cargo test --test golden_replay` on a toolchain-equipped machine\n",
+    );
+    out.push_str(
+        "# fills them in and passes - commit the rewritten file to lock replays.\n",
+    );
+    out.push_str("# After an INTENTIONAL behavior change, re-bless with\n");
+    out.push_str("#   GREENLLM_BLESS=1 cargo test --test golden_replay\n");
+    out.push_str(
+        "# and commit the diff (integer totals should survive a pure-policy change).\n",
     );
     for row in rows {
         let _ = writeln!(out, "{}", row.render());
