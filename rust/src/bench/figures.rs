@@ -246,7 +246,7 @@ pub fn fig5(duration_s: f64, seed: u64) -> Fig5 {
                 .filter(|o| o.prompt_class() == class)
                 .map(|o| o.ttft_s)
                 .collect();
-            ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ttfts.sort_unstable_by(f64::total_cmp); // NaN-safe (stats.rs stance)
             let pct = |q: f64| {
                 if ttfts.is_empty() {
                     0.0

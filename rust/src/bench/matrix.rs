@@ -29,10 +29,12 @@ use crate::workload::alibaba::{self, ChatParams};
 use crate::workload::azure::{self, AzureKind, AzureParams};
 use crate::workload::request::Trace;
 use crate::workload::synthetic;
+use crate::workload::SharedTrace;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 
 /// One workload axis of the matrix.
@@ -136,6 +138,120 @@ impl TraceSpec {
                 batch_qps,
             } => synthetic::multi_tenant(*interactive_qps, *batch_qps, duration_s, seed),
         }
+    }
+}
+
+/// Effective worker-thread count for a work list: `cfg_threads` when set,
+/// otherwise one per available core, always within `[1, work_items]`.
+fn effective_threads(cfg_threads: usize, work_items: usize) -> usize {
+    if cfg_threads > 0 {
+        cfg_threads
+    } else {
+        thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    }
+    .min(work_items)
+    .max(1)
+}
+
+/// Deterministic parallel map: apply `f` to every item across `threads`
+/// OS threads (work-stealing by atomic index) and return the results in
+/// item order regardless of scheduling. Shared by trace-cache generation
+/// and the cell sweep — one copy of the fan-out scaffolding.
+fn parallel_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.min(items.len()).max(1);
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let next_ref = &next;
+    let f_ref = &f;
+    thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let _ = tx.send((i, f_ref(&items[i])));
+            });
+        }
+        drop(tx);
+    });
+    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    for (i, r) in rx.iter() {
+        slots[i] = Some(r);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("every item produces a result"))
+        .collect()
+}
+
+/// Shared trace cache (§Perf): every unique `(spec, duration, seed)`
+/// coordinate of a sweep generates its trace exactly once, up front, and
+/// all N policy × margin × node × chaos cells replay the same
+/// [`SharedTrace`] — the engine borrows the request list, so no cell
+/// copies it either. The map is immutable after [`TraceCache::build`],
+/// which is what lets worker threads share it lock-free.
+pub struct TraceCache {
+    map: BTreeMap<(String, u64, u64), SharedTrace>,
+}
+
+impl TraceCache {
+    /// Generate every unique trace `cells` needs, once each. Generation
+    /// itself fans out across threads (honoring `cfg.threads`): a sparse
+    /// sweep — many unique traces, few cells per trace — would otherwise
+    /// serialize its dominant cost on the caller before any worker runs.
+    pub fn build(cfg: &MatrixConfig, cells: &[MatrixCell]) -> TraceCache {
+        let mut unique: BTreeMap<(String, u64, u64), TraceSpec> = BTreeMap::new();
+        for cell in cells {
+            unique
+                .entry(Self::key(&cell.trace, cfg.duration_s, cfg.seed))
+                .or_insert_with(|| cell.trace.clone());
+        }
+        let entries: Vec<((String, u64, u64), TraceSpec)> = unique.into_iter().collect();
+        let threads = effective_threads(cfg.threads, entries.len());
+        let traces = parallel_map(threads, &entries, |entry| {
+            Arc::new(entry.1.generate(cfg.duration_s, cfg.seed))
+        });
+        let map = entries
+            .into_iter()
+            .zip(traces)
+            .map(|((key, _), trace)| (key, trace))
+            .collect();
+        TraceCache { map }
+    }
+
+    /// Exact cache key. `Debug` formatting of a [`TraceSpec`] is stable
+    /// and spells out every parameter, so it doubles as the spec key
+    /// (trace *names* collapse parameters — `bursty` hides its rates —
+    /// and would alias distinct specs).
+    fn key(spec: &TraceSpec, duration_s: f64, seed: u64) -> (String, u64, u64) {
+        (format!("{spec:?}"), duration_s.to_bits(), seed)
+    }
+
+    /// The cached trace for a coordinate, if present.
+    pub fn get(&self, spec: &TraceSpec, duration_s: f64, seed: u64) -> Option<SharedTrace> {
+        self.map.get(&Self::key(spec, duration_s, seed)).cloned()
+    }
+
+    /// Unique traces held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// No traces cached?
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
     }
 }
 
@@ -339,6 +455,11 @@ pub struct CellResult {
     pub throughput_tps: f64,
     /// Requests completed (conserved even under node loss).
     pub completed: u64,
+    /// Delivered tokens (simulated; perf-bench numerator).
+    pub generated_tokens: u64,
+    /// Discrete events processed across the cell's engine loops
+    /// (perf-bench numerator; summed over nodes for cluster cells).
+    pub events_processed: u64,
     /// Mean decode batch occupancy across nodes.
     pub mean_decode_batch: f64,
     /// Max/min node request share (∞ when a node starved); 1.0 at 1 node.
@@ -376,8 +497,7 @@ fn scenario_key(r: &CellResult) -> ScenarioKey {
     )
 }
 
-fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
-    let trace = cell.trace.generate(cfg.duration_s, cfg.seed);
+fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult {
     let specs = NodeSpec::parse_list(&cell.shape)
         .unwrap_or_else(|e| panic!("bad shape axis {:?}: {e}", cell.shape));
     let fault_plan = cell.fault.plan(cell.nodes, cfg.duration_s);
@@ -415,6 +535,8 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
         tbt_pct: 0.0,
         throughput_tps: 0.0,
         completed: 0,
+        generated_tokens: 0,
+        events_processed: 0,
         mean_decode_batch: 0.0,
         balance_ratio: 1.0,
         starved_nodes: 0,
@@ -432,7 +554,7 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
         if let Some(spec) = specs.first() {
             spec.apply(&mut run_cfg);
         }
-        let r = run(&run_cfg, &trace, &RunOptions::default());
+        let r = run(&run_cfg, trace, &RunOptions::default());
         return CellResult {
             total_energy_j: r.total_energy_j,
             prefill_energy_j: r.prefill_energy_j,
@@ -442,6 +564,8 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
             tbt_pct: r.slo.tbt_pass_rate() * 100.0,
             throughput_tps: r.throughput_tps(),
             completed: r.completed,
+            generated_tokens: r.generated_tokens,
+            events_processed: r.events_processed,
             mean_decode_batch: r.mean_decode_batch,
             ..base
         };
@@ -453,7 +577,7 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
     if cell.power_cap_w > 0.0 {
         ccfg = ccfg.with_power_cap(cell.power_cap_w, 1.0);
     }
-    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    let r = run_cluster(&ccfg, trace, &RunOptions::default());
     let gen_tokens = r.generated_tokens.max(1) as f64;
     let sim_s = r
         .per_node
@@ -476,6 +600,8 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
             0.0
         },
         completed: r.completed,
+        generated_tokens: r.generated_tokens,
+        events_processed: r.events_processed,
         mean_decode_batch: if bn == 0 { 0.0 } else { bsum / bn as f64 },
         balance_ratio: r.balance_ratio(),
         starved_nodes: r.starved_nodes(),
@@ -502,49 +628,22 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell) -> CellResult {
 
 /// Run the full matrix across OS threads. Results come back in cell order
 /// and are bit-identical for any thread count (each cell is an independent
-/// seeded replay).
+/// seeded replay). Traces are generated once per unique coordinate via a
+/// [`TraceCache`] shared read-only by every worker — a sweep of N cells
+/// over one trace replays one generation instead of N (§Perf).
 pub fn run_matrix(cfg: &MatrixConfig) -> Vec<CellResult> {
     let cells = cfg.cells();
     if cells.is_empty() {
         return Vec::new();
     }
-    let threads = if cfg.threads > 0 {
-        cfg.threads
-    } else {
-        thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-    }
-    .min(cells.len())
-    .max(1);
-
-    let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<(usize, CellResult)>();
-    let cells_ref = &cells;
-    let next_ref = &next;
-    thread::scope(|s| {
-        for _ in 0..threads {
-            let tx = tx.clone();
-            s.spawn(move || loop {
-                let i = next_ref.fetch_add(1, Ordering::Relaxed);
-                if i >= cells_ref.len() {
-                    break;
-                }
-                let result = run_cell(cfg, &cells_ref[i]);
-                let _ = tx.send((i, result));
-            });
-        }
-        drop(tx);
+    let cache = TraceCache::build(cfg, &cells);
+    let threads = effective_threads(cfg.threads, cells.len());
+    let mut results = parallel_map(threads, &cells, |cell| {
+        let trace = cache
+            .get(&cell.trace, cfg.duration_s, cfg.seed)
+            .expect("cache holds every cell's trace");
+        run_cell(cfg, cell, &trace)
     });
-
-    let mut slots: Vec<Option<CellResult>> = (0..cells.len()).map(|_| None).collect();
-    for (i, r) in rx.iter() {
-        slots[i] = Some(r);
-    }
-    let mut results: Vec<CellResult> = slots
-        .into_iter()
-        .map(|s| s.expect("every matrix cell produces a result"))
-        .collect();
     fill_deltas(&mut results);
     results
 }
@@ -711,6 +810,14 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
             m.insert("tbt_pct".to_string(), Json::Num(r.tbt_pct));
             m.insert("throughput_tps".to_string(), Json::Num(r.throughput_tps));
             m.insert("completed".to_string(), Json::Num(r.completed as f64));
+            m.insert(
+                "generated_tokens".to_string(),
+                Json::Num(r.generated_tokens as f64),
+            );
+            m.insert(
+                "events_processed".to_string(),
+                Json::Num(r.events_processed as f64),
+            );
             m.insert(
                 "mean_decode_batch".to_string(),
                 Json::Num(r.mean_decode_batch),
@@ -900,7 +1007,61 @@ mod tests {
             assert_eq!(a.method, b.method);
             assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
             assert_eq!(a.completed, b.completed);
+            // The shared trace cache must not perturb determinism either:
+            // event and token counts are part of the bit-exact contract.
+            assert_eq!(a.events_processed, b.events_processed);
+            assert_eq!(a.generated_tokens, b.generated_tokens);
         }
+    }
+
+    #[test]
+    fn cached_trace_cells_bit_identical_to_fresh_generation() {
+        // A sweep cell replaying the shared cached trace must be
+        // bit-identical to a standalone run over a freshly generated
+        // trace of the same coordinate (trace caching + the engine's
+        // borrowed request store are pure plumbing).
+        let cfg = small_cfg();
+        let results = run_matrix(&cfg);
+        for spec in &cfg.traces {
+            let fresh = spec.generate(cfg.duration_s, cfg.seed);
+            let run_cfg = Config {
+                model: cfg.model.clone(),
+                method: Method::GreenLlm,
+                seed: cfg.seed,
+                prefill_margin: cfg.margins[0],
+                decode_margin: cfg.margins[0],
+                ..Config::default()
+            };
+            let r = run(&run_cfg, &fresh, &RunOptions::default());
+            let cell = results
+                .iter()
+                .find(|c| c.trace == spec.name() && c.method == Method::GreenLlm)
+                .expect("GreenLLM cell for every trace");
+            assert_eq!(cell.total_energy_j.to_bits(), r.total_energy_j.to_bits());
+            assert_eq!(cell.completed, r.completed);
+            assert_eq!(cell.generated_tokens, r.generated_tokens);
+            assert_eq!(cell.events_processed, r.events_processed);
+        }
+    }
+
+    #[test]
+    fn trace_cache_generates_each_coordinate_once() {
+        let cfg = small_cfg(); // 2 traces x 3 methods = 6 cells
+        let cells = cfg.cells();
+        let cache = TraceCache::build(&cfg, &cells);
+        assert_eq!(cache.len(), 2, "one generation per unique trace");
+        assert!(!cache.is_empty());
+        for cell in &cells {
+            let t = cache
+                .get(&cell.trace, cfg.duration_s, cfg.seed)
+                .expect("every cell's trace cached");
+            assert_eq!(t.name, cell.trace.name());
+        }
+        let other = TraceSpec::Sinusoid {
+            tps_min: 1.0,
+            tps_max: 2.0,
+        };
+        assert!(cache.get(&other, cfg.duration_s, cfg.seed).is_none());
     }
 
     #[test]

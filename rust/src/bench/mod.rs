@@ -10,6 +10,7 @@ pub mod ablations;
 pub mod baselines;
 pub mod figures;
 pub mod matrix;
+pub mod perf;
 pub mod report;
 pub mod tables;
 

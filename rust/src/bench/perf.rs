@@ -1,0 +1,454 @@
+//! `greenllm bench` — the simulator's own perf-gate harness (§Perf).
+//!
+//! Three fixed-seed scenarios cover the hot paths end to end:
+//!
+//! 1. **`single-node-replay`** — one GreenLLM replay of a chat trace:
+//!    the pure event-loop path (decode rounds, policy ticks, pooled
+//!    stream buffers, quickselect P95).
+//! 2. **`cluster-4node-faults`** — a 4-node cluster with a mid-trace
+//!    node loss and a power cap: interleaved stepping, balancer
+//!    snapshots (Fenwick TBT tails), arbiter epochs, chaos drain.
+//! 3. **`mini-matrix`** — a small multi-threaded sweep: the shared
+//!    trace cache plus everything above across cells.
+//!
+//! Each scenario reports wall time (best of N timed iterations),
+//! discrete events per wall-second and simulated tokens per wall-second.
+//! Event and token counts are *deterministic* — they double as a
+//! drift check: a baseline whose counts differ from the current build
+//! was recorded against a different workload and is not comparable.
+//!
+//! `--json BENCH_pr4.json` records results into the committed baseline
+//! (per-mode sections merge; `--quick` writes the `quick` section CI
+//! uses, a plain run writes `full`). `--baseline <file>` gates the run:
+//! any scenario regressing more than `--max-regress` percent in wall
+//! time fails. A `"pending"` section — the state this file ships in
+//! until first blessed on a toolchain-equipped machine, mirroring the
+//! golden-replay float pins — skips the gate with a notice. See
+//! `docs/PERFORMANCE.md`.
+
+use crate::bench::matrix::{run_matrix, MatrixConfig, TraceSpec};
+use crate::bench::report::{fmt_f, Table};
+use crate::config::{Config, Method};
+use crate::coordinator::cluster::{run_cluster, ClusterConfig, FaultSpec, LbPolicy};
+use crate::coordinator::engine::{run, RunOptions};
+use crate::util::json::Json;
+use crate::workload::alibaba::{self, ChatParams};
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Fixed seed every bench scenario replays under (workload identity is
+/// part of the baseline contract).
+pub const BENCH_SEED: u64 = 42;
+
+/// Baseline JSON schema version.
+pub const BENCH_SCHEMA: f64 = 1.0;
+
+/// One measured scenario.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Stable scenario name (baseline lookup key).
+    pub name: String,
+    /// Best wall time across the timed iterations, milliseconds.
+    pub wall_ms: f64,
+    /// Timed iterations run (best-of; first run doubles as warm-up).
+    pub iters: usize,
+    /// Discrete events processed (deterministic per build).
+    pub events: u64,
+    /// Simulated tokens delivered (deterministic per build).
+    pub sim_tokens: u64,
+    /// Events per wall-second at the best iteration.
+    pub events_per_s: f64,
+    /// Simulated tokens per wall-second at the best iteration.
+    pub tokens_per_wall_s: f64,
+}
+
+/// Time `f` `iters` times and keep the best wall time (the standard
+/// throughput-bench idiom: the minimum is the least-noise estimate).
+fn measure(name: &str, iters: usize, mut f: impl FnMut() -> (u64, u64)) -> BenchResult {
+    let mut best_s = f64::INFINITY;
+    let mut events = 0u64;
+    let mut sim_tokens = 0u64;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let (e, t) = f();
+        let wall = t0.elapsed().as_secs_f64();
+        best_s = best_s.min(wall);
+        events = e;
+        sim_tokens = t;
+    }
+    BenchResult {
+        name: name.into(),
+        wall_ms: best_s * 1e3,
+        iters: iters.max(1),
+        events,
+        sim_tokens,
+        events_per_s: events as f64 / best_s,
+        tokens_per_wall_s: sim_tokens as f64 / best_s,
+    }
+}
+
+/// Run the three scenarios. `quick` shrinks horizons and iterations for
+/// CI smoke runs (its numbers live in the baseline's own `quick`
+/// section — quick and full results are never compared to each other).
+pub fn run_bench(quick: bool) -> Vec<BenchResult> {
+    run_bench_scaled(quick, 1.0)
+}
+
+/// [`run_bench`] with an extra duration multiplier. The public entry
+/// always uses 1.0 (baseline comparability requires fixed horizons);
+/// tests use a small scale to keep debug-mode runtime sane.
+pub fn run_bench_scaled(quick: bool, scale: f64) -> Vec<BenchResult> {
+    let iters = if quick { 2 } else { 3 };
+    let mut out = Vec::new();
+
+    // 1. Single-node replay: the pure engine hot loop.
+    {
+        let d = scale * if quick { 45.0 } else { 180.0 };
+        let cfg = Config {
+            method: Method::GreenLlm,
+            seed: BENCH_SEED,
+            ..Config::default()
+        };
+        let trace = alibaba::generate(&ChatParams::new(8.0, d), BENCH_SEED);
+        out.push(measure("single-node-replay", iters, || {
+            let r = run(&cfg, &trace, &RunOptions::default());
+            // A bench iteration that loses tokens is not a perf number.
+            debug_assert_eq!(r.generated_tokens, trace.total_output_tokens());
+            (r.events_processed, r.generated_tokens)
+        }));
+    }
+
+    // 2. Four-node cluster with a mid-trace node loss and a power cap:
+    //    interleaved stepping + live balancer telemetry + arbiter epochs.
+    {
+        let d = scale * if quick { 30.0 } else { 120.0 };
+        let trace = alibaba::generate(&ChatParams::new(24.0, d), BENCH_SEED);
+        let node = Config {
+            method: Method::GreenLlm,
+            seed: BENCH_SEED,
+            ..Config::default()
+        };
+        let ccfg = ClusterConfig::new(4, LbPolicy::JoinShortestQueue, node)
+            .with_faults(FaultSpec::OneDown.plan(4, d))
+            .with_power_cap(16_000.0, 1.0);
+        out.push(measure("cluster-4node-faults", iters, || {
+            let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+            // Useful tokens are conserved even under node loss (rolled
+            // back work re-generates at the adoptive node).
+            debug_assert_eq!(r.generated_tokens, trace.total_output_tokens());
+            (r.events_processed, r.generated_tokens)
+        }));
+    }
+
+    // 3. Mini scenario matrix: shared trace cache + thread fan-out.
+    {
+        let d = scale * if quick { 20.0 } else { 60.0 };
+        let mcfg = MatrixConfig {
+            duration_s: d,
+            seed: BENCH_SEED,
+            threads: 0,
+            traces: vec![
+                TraceSpec::Alibaba { qps: 5.0 },
+                TraceSpec::Bursty {
+                    base_qps: 2.0,
+                    burst_qps: 12.0,
+                },
+            ],
+            methods: vec![Method::DefaultNv, Method::GreenLlm, Method::PiTbt],
+            margins: vec![0.95],
+            nodes: vec![1, 2],
+            lbs: vec![LbPolicy::JoinShortestQueue],
+            ..MatrixConfig::default()
+        };
+        out.push(measure("mini-matrix", iters, || {
+            let cells = run_matrix(&mcfg);
+            cells.iter().fold((0u64, 0u64), |(e, t), c| {
+                (e + c.events_processed, t + c.generated_tokens)
+            })
+        }));
+    }
+
+    out
+}
+
+/// Render the bench report table.
+pub fn render_table(results: &[BenchResult]) -> Table {
+    let mut t = Table::new(&[
+        "Scenario",
+        "Wall(ms)",
+        "Events",
+        "MEv/s",
+        "SimTok",
+        "MTok/s",
+        "Iters",
+    ]);
+    for r in results {
+        t.row(&[
+            r.name.clone(),
+            fmt_f(r.wall_ms, 1),
+            r.events.to_string(),
+            fmt_f(r.events_per_s / 1e6, 2),
+            r.sim_tokens.to_string(),
+            fmt_f(r.tokens_per_wall_s / 1e6, 2),
+            r.iters.to_string(),
+        ]);
+    }
+    t
+}
+
+fn results_json(results: &[BenchResult]) -> Json {
+    Json::obj([
+        ("status", Json::Str("measured".into())),
+        (
+            "scenarios",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj([
+                            ("name", Json::Str(r.name.clone())),
+                            ("wall_ms", Json::Num(r.wall_ms)),
+                            ("iters", Json::Num(r.iters as f64)),
+                            ("events", Json::Num(r.events as f64)),
+                            ("sim_tokens", Json::Num(r.sim_tokens as f64)),
+                            ("events_per_s", Json::Num(r.events_per_s)),
+                            ("tokens_per_wall_s", Json::Num(r.tokens_per_wall_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Merge fresh results into a baseline document, replacing only this
+/// mode's section (`"quick"` or `"full"`) and preserving everything
+/// else — the two sections are blessed independently.
+pub fn merge_into_baseline(existing: Option<Json>, mode: &str, results: &[BenchResult]) -> Json {
+    let mut root: BTreeMap<String, Json> = match existing {
+        Some(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    root.insert("schema".into(), Json::Num(BENCH_SCHEMA));
+    let mut modes: BTreeMap<String, Json> = match root.remove("modes") {
+        Some(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    modes.insert(mode.to_string(), results_json(results));
+    root.insert("modes".into(), Json::Obj(modes));
+    Json::Obj(root)
+}
+
+/// Outcome of gating fresh results against a committed baseline.
+#[derive(Debug)]
+pub enum GateOutcome {
+    /// Baseline missing or pending for this mode — nothing to gate yet.
+    /// Carries the human-readable reason.
+    Skipped(String),
+    /// Every comparable scenario within the allowed regression; carries
+    /// per-scenario summary lines.
+    Passed(Vec<String>),
+    /// No comparable scenario regressed, but at least one scenario's
+    /// deterministic event count no longer matches the baseline: the
+    /// committed numbers describe a *different workload*, so wall-time
+    /// comparison is meaningless and the gate is disarmed until the
+    /// baseline is re-blessed. Surfaced as its own (failing) outcome —
+    /// a silent pass here would leave the gate off indefinitely.
+    Drifted(Vec<String>),
+    /// At least one scenario regressed beyond the threshold; carries the
+    /// offending (and passing) summary lines.
+    Regressed(Vec<String>),
+}
+
+/// Compare `results` against the `mode` section of `baseline`. A
+/// scenario regresses when its wall time exceeds the baseline's by more
+/// than `max_regress_pct` percent. Scenarios whose deterministic event
+/// counts differ from the baseline's cannot be wall-gated (the recorded
+/// workload is not the one that just ran); if any scenario drifted and
+/// none regressed, the whole gate resolves to [`GateOutcome::Drifted`]
+/// so the stale baseline fails loudly instead of disarming the gate
+/// silently — re-bless it in the same change that moved the counts.
+pub fn gate(
+    baseline: &Json,
+    mode: &str,
+    results: &[BenchResult],
+    max_regress_pct: f64,
+) -> GateOutcome {
+    let Some(section) = baseline.path(&format!("modes.{mode}")) else {
+        return GateOutcome::Skipped(format!("baseline has no {mode:?} section"));
+    };
+    if section.get("status").and_then(Json::as_str) != Some("measured") {
+        return GateOutcome::Skipped(format!(
+            "baseline {mode:?} section is pending — bless it with \
+             `greenllm bench{} --json <baseline>` on a representative machine",
+            if mode == "quick" { " --quick" } else { "" }
+        ));
+    }
+    let scenarios = section
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[]);
+    let mut lines = Vec::new();
+    let mut regressed = false;
+    let mut drifted = false;
+    for r in results {
+        let base = scenarios
+            .iter()
+            .find(|s| s.get("name").and_then(Json::as_str) == Some(r.name.as_str()));
+        let Some(base) = base else {
+            // A renamed/added scenario is the same silent-disarm hazard
+            // as an event-count drift: fail until the baseline catches up.
+            drifted = true;
+            lines.push(format!("{}: not in baseline — stale baseline, re-bless", r.name));
+            continue;
+        };
+        let base_events = base.get("events").and_then(Json::as_f64).unwrap_or(0.0);
+        if base_events as u64 != r.events {
+            drifted = true;
+            lines.push(format!(
+                "{}: workload drifted (events {} -> {}) — wall time not comparable, re-bless",
+                r.name, base_events as u64, r.events
+            ));
+            continue;
+        }
+        let base_wall = base.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0);
+        if base_wall <= 0.0 {
+            lines.push(format!("{}: baseline wall_ms invalid — skipped", r.name));
+            continue;
+        }
+        let delta_pct = (r.wall_ms / base_wall - 1.0) * 100.0;
+        if delta_pct > max_regress_pct {
+            regressed = true;
+            lines.push(format!(
+                "{}: REGRESSED {:+.1}% ({:.1} ms -> {:.1} ms, gate {:.0}%)",
+                r.name, delta_pct, base_wall, r.wall_ms, max_regress_pct
+            ));
+        } else {
+            lines.push(format!(
+                "{}: ok {:+.1}% ({:.1} ms -> {:.1} ms)",
+                r.name, delta_pct, base_wall, r.wall_ms
+            ));
+        }
+    }
+    if regressed {
+        GateOutcome::Regressed(lines)
+    } else if drifted {
+        GateOutcome::Drifted(lines)
+    } else {
+        GateOutcome::Passed(lines)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_results() -> Vec<BenchResult> {
+        // A heavily scaled-down pass through all three real scenarios:
+        // exercises the exact code paths the full bench times.
+        run_bench_scaled(true, 0.1)
+    }
+
+    #[test]
+    fn bench_counts_deterministic() {
+        let a = tiny_results();
+        let b = tiny_results();
+        assert_eq!(a.len(), 3);
+        let names: Vec<&str> = a.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["single-node-replay", "cluster-4node-faults", "mini-matrix"]
+        );
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.events > 0 && x.sim_tokens > 0, "{x:?}");
+            assert_eq!(x.events, y.events, "{}", x.name);
+            assert_eq!(x.sim_tokens, y.sim_tokens, "{}", x.name);
+        }
+    }
+
+    #[test]
+    fn merge_and_gate_round_trip() {
+        let results = tiny_results();
+        let doc = merge_into_baseline(None, "quick", &results);
+        // Re-parse through the serializer (what the CLI writes/reads).
+        let parsed = Json::parse(&doc.dump()).unwrap();
+        // Same results against their own baseline: 0% delta, passes.
+        match gate(&parsed, "quick", &results, 25.0) {
+            GateOutcome::Passed(lines) => assert_eq!(lines.len(), 3),
+            other => panic!("expected pass, got {other:?}"),
+        }
+        // A 10x slower run regresses.
+        let mut slow = results.clone();
+        for r in slow.iter_mut() {
+            r.wall_ms *= 10.0;
+        }
+        match gate(&parsed, "quick", &slow, 25.0) {
+            GateOutcome::Regressed(lines) => {
+                assert!(lines.iter().any(|l| l.contains("REGRESSED")));
+            }
+            other => panic!("expected regression, got {other:?}"),
+        }
+        // Different event counts: the baseline is stale — the gate must
+        // resolve to the distinct Drifted outcome (fails the CLI with
+        // re-bless instructions), never to a silent pass that would
+        // leave the gate disarmed indefinitely.
+        let mut drifted = results.clone();
+        for r in drifted.iter_mut() {
+            r.events += 1;
+            r.wall_ms *= 10.0;
+        }
+        match gate(&parsed, "quick", &drifted, 25.0) {
+            GateOutcome::Drifted(lines) => {
+                assert!(lines.iter().all(|l| l.contains("drifted")));
+            }
+            other => panic!("drift must surface as Drifted, got {other:?}"),
+        }
+        // Drift on one scenario plus a real regression on another:
+        // the regression dominates.
+        let mut mixed = results.clone();
+        mixed[0].events += 1;
+        mixed[1].wall_ms *= 10.0;
+        match gate(&parsed, "quick", &mixed, 25.0) {
+            GateOutcome::Regressed(lines) => {
+                assert!(lines.iter().any(|l| l.contains("REGRESSED")));
+                assert!(lines.iter().any(|l| l.contains("drifted")));
+            }
+            other => panic!("expected regression to dominate, got {other:?}"),
+        }
+        // A scenario the baseline has never seen (rename/addition) is the
+        // same stale-baseline hazard: Drifted, never a silent pass.
+        let mut renamed = results.clone();
+        renamed[0].name = "renamed-scenario".into();
+        match gate(&parsed, "quick", &renamed, 25.0) {
+            GateOutcome::Drifted(lines) => {
+                assert!(lines.iter().any(|l| l.contains("not in baseline")));
+            }
+            other => panic!("missing scenario must drift, got {other:?}"),
+        }
+        // The full section stays pending: the gate skips it.
+        match gate(&parsed, "full", &results, 25.0) {
+            GateOutcome::Skipped(_) => {}
+            other => panic!("expected skip, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn merge_preserves_other_sections() {
+        let results = tiny_results();
+        let pending = Json::parse(
+            r#"{"schema":1,"note":"n","modes":{"full":{"status":"pending"}}}"#,
+        )
+        .unwrap();
+        let merged = merge_into_baseline(Some(pending), "quick", &results);
+        assert_eq!(
+            merged.path("modes.full.status").and_then(Json::as_str),
+            Some("pending")
+        );
+        assert_eq!(
+            merged.path("modes.quick.status").and_then(Json::as_str),
+            Some("measured")
+        );
+        assert_eq!(merged.get("note").and_then(Json::as_str), Some("n"));
+    }
+}

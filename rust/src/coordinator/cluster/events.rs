@@ -264,6 +264,7 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
     let wasted_tokens: u64 = engines.iter().map(|e| e.wasted_tokens()).sum();
     let per_node: Vec<RunResult> = engines.iter_mut().map(|e| e.finalize(end_t)).collect();
 
+    let events_processed: u64 = per_node.iter().map(|r| r.events_processed).sum();
     let total_energy_j = per_node.iter().map(|r| r.total_energy_j).sum();
     let generated_tokens = per_node.iter().map(|r| r.generated_tokens).sum();
     let completed: u64 = per_node.iter().map(|r| r.completed).sum();
@@ -297,5 +298,6 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
         rerouted,
         wasted_tokens,
         fault_events,
+        events_processed,
     }
 }

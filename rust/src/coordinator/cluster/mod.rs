@@ -287,6 +287,9 @@ pub struct ClusterResult {
     pub wasted_tokens: u64,
     /// Fault transitions that actually fired during the run.
     pub fault_events: usize,
+    /// Discrete events processed across every node's loop (the cluster
+    /// analogue of [`RunResult::events_processed`]; perf-bench metric).
+    pub events_processed: u64,
 }
 
 impl ClusterResult {

@@ -40,10 +40,11 @@ use crate::model::ModelSpec;
 use crate::sim::EventQueue;
 use crate::slo::{RequestOutcome, SloTracker};
 use crate::util::rng::Pcg64;
-use crate::util::stats::percentile_exact;
+use crate::util::stats::percentile_in_place;
 use crate::workload::request::{Request, Trace};
 
 use std::collections::VecDeque;
+use std::ops::Index;
 
 /// Recent-TBT window used for the cluster balancer's per-node tail signal.
 const TBT_TAIL_WINDOW: usize = 256;
@@ -136,6 +137,49 @@ enum Ev {
     SampleTick,
 }
 
+/// Request storage behind the engine's two modes (§Perf): replay *borrows*
+/// the trace's request list — matrix cells share one generated trace with
+/// zero per-run copying — while stepped mode grows an owned list online
+/// through [`Engine::inject`].
+#[derive(Debug)]
+enum RequestStore<'a> {
+    /// Replay mode: the whole trace, borrowed for the engine's lifetime.
+    Borrowed(&'a [Request]),
+    /// Stepped mode: requests handed to this node so far.
+    Owned(Vec<Request>),
+}
+
+impl RequestStore<'_> {
+    fn len(&self) -> usize {
+        match self {
+            RequestStore::Borrowed(s) => s.len(),
+            RequestStore::Owned(v) => v.len(),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn push(&mut self, r: Request) {
+        match self {
+            RequestStore::Owned(v) => v.push(r),
+            RequestStore::Borrowed(_) => panic!("inject into a replay-mode engine"),
+        }
+    }
+}
+
+impl Index<usize> for RequestStore<'_> {
+    type Output = Request;
+
+    fn index(&self, i: usize) -> &Request {
+        match self {
+            RequestStore::Borrowed(s) => &s[i],
+            RequestStore::Owned(v) => &v[i],
+        }
+    }
+}
+
 #[derive(Debug)]
 struct QueuedJob {
     req_idx: usize,
@@ -175,9 +219,10 @@ struct DecodeWorker {
 pub struct Engine<'a> {
     cfg: &'a Config,
     opts: &'a RunOptions,
-    /// Requests this node has seen. In replay mode the full trace is loaded
-    /// up front; in stepped mode [`Engine::inject`] grows it online.
-    requests: Vec<Request>,
+    /// Requests this node has seen. In replay mode the full trace is
+    /// borrowed up front (zero-copy); in stepped mode [`Engine::inject`]
+    /// grows an owned list online.
+    requests: RequestStore<'a>,
     trace_name: String,
     trace_duration_s: f64,
     /// `Some(n)` in replay mode: ticks stop rescheduling once `n` requests
@@ -225,6 +270,14 @@ pub struct Engine<'a> {
     tbt_tail: Option<SlidingP95>,
     /// Tokens emitted then rolled back by a node failure (chaos layer).
     wasted_tokens: u64,
+    /// Free list of recycled per-stream TBT buffers: a completed stream's
+    /// buffer is cleared and returned here instead of dropped, so steady
+    /// decode traffic allocates no per-stream `Vec` at all after warm-up
+    /// (§Perf). Bounded by the peak number of concurrent streams.
+    tbt_pool: Vec<Vec<f64>>,
+    /// Reusable scratch for streams finishing within one decode round
+    /// (§Perf: `on_decode_round` used to allocate this per round).
+    finished_scratch: Vec<Stream>,
 }
 
 /// Replay `trace` under `cfg`.
@@ -300,7 +353,7 @@ impl<'a> Engine<'a> {
         Engine {
             cfg,
             opts,
-            requests: Vec::new(),
+            requests: RequestStore::Owned(Vec::new()),
             trace_name,
             trace_duration_s: duration_s,
             replay_total: None,
@@ -337,20 +390,22 @@ impl<'a> Engine<'a> {
                 .track_tbt_tail
                 .then(|| SlidingP95::new(TBT_TAIL_WINDOW)),
             wasted_tokens: 0,
+            tbt_pool: Vec::new(),
+            finished_scratch: Vec::new(),
         }
     }
 
     /// Pre-schedule a whole trace (replay mode). Arrivals get the lowest
     /// event sequence numbers, which keeps equal-time ordering identical to
-    /// the pre-refactor loop.
-    pub fn load_trace(&mut self, requests: &[Request]) {
+    /// the pre-refactor loop. The request list is *borrowed*, not copied:
+    /// matrix cells replaying the same cached trace share one allocation.
+    pub fn load_trace(&mut self, requests: &'a [Request]) {
         debug_assert!(self.requests.is_empty(), "load_trace on a seeded engine");
-        self.requests = requests.to_vec();
-        for i in 0..self.requests.len() {
-            let t = self.requests[i].arrival_s;
-            self.q.schedule_priority(t, Ev::Arrive(i));
+        for (i, r) in requests.iter().enumerate() {
+            self.q.schedule_priority(r.arrival_s, Ev::Arrive(i));
         }
-        self.replay_total = Some(self.requests.len() as u64);
+        self.requests = RequestStore::Borrowed(requests);
+        self.replay_total = Some(requests.len() as u64);
     }
 
     /// Arm policy ticks (and the TPS sampler). Call exactly once, after
@@ -659,12 +714,14 @@ impl<'a> Engine<'a> {
     /// Roll back one incomplete stream at a node failure: un-count its
     /// emitted tokens (the prefill's first token + decode tokens so far)
     /// and queue its request for re-routing.
-    fn abort_stream(&mut self, s: Stream, drained: &mut Vec<Request>) {
+    fn abort_stream(&mut self, mut s: Stream, drained: &mut Vec<Request>) {
         let req = self.requests[s.req_idx].clone();
         let emitted = (req.output_len - s.remaining) as u64;
         self.generated_tokens -= emitted;
         self.wasted_tokens += emitted;
         drained.push(req);
+        s.tbts.clear();
+        self.tbt_pool.push(s.tbts);
     }
 
     /// Node recovery at `t` (chaos layer): power the GPUs back on at the
@@ -746,12 +803,18 @@ impl<'a> Engine<'a> {
         let spec = self.tick_specs[kind];
         let mut view = std::mem::take(&mut self.view_scratch);
         view.now = t;
-        view.prefill.resize_with(self.prefill_workers.len(), Default::default);
-        for (w, pv) in view.prefill.iter_mut().enumerate() {
-            pv.busy = self.prefill_workers[w].current.is_some();
-            pv.jobs.clear();
-            if spec.prefill_jobs {
-                self.fill_jobs(w, &mut pv.jobs);
+        // Only build what this tick's spec declares (§Perf — the view
+        // contract in `coordinator::policy`): a 50 Hz fine tick that
+        // consumes neither pool view skips both refreshes entirely.
+        // Undeclared parts are left stale and must not be read.
+        if spec.prefill_view {
+            view.prefill.resize_with(self.prefill_workers.len(), Default::default);
+            for (w, pv) in view.prefill.iter_mut().enumerate() {
+                pv.busy = self.prefill_workers[w].current.is_some();
+                pv.jobs.clear();
+                if spec.prefill_jobs {
+                    self.fill_jobs(w, &mut pv.jobs);
+                }
             }
         }
         view.decode.clear();
@@ -899,13 +962,19 @@ impl<'a> Engine<'a> {
             self.slo.record(outcome);
             self.completed += 1;
         } else {
+            // Recycle a TBT buffer from the free list (§Perf): buffers
+            // return cleared at stream completion, so steady traffic runs
+            // allocation-free once the pool matches peak concurrency.
+            let mut tbts = self.tbt_pool.pop().unwrap_or_default();
+            debug_assert!(tbts.is_empty(), "recycled TBT buffer not cleared");
+            tbts.reserve(req.output_len as usize);
             let stream = Stream {
                 req_idx,
                 remaining: req.output_len - 1,
                 ctx: req.prompt_len as f64 + 1.0,
                 last_token_t: t,
                 joined_t: t,
-                tbts: Vec::with_capacity(req.output_len as usize),
+                tbts,
             };
             self.streams_active += 1;
             self.admit_stream(t, stream, ttft);
@@ -920,9 +989,22 @@ impl<'a> Engine<'a> {
         // TTFT is recorded at completion together with TBT stats; stash it
         // via the stream's joined_t (= prefill done time).
         let cap = self.cfg.pools.max_streams_per_decode_worker;
-        let best = (0..self.decode_workers.len())
-            .filter(|&w| self.decode_workers[w].streams.len() < cap)
-            .min_by_key(|&w| self.decode_workers[w].streams.len());
+        // Argmin with the same first-minimum tie-breaking as the old
+        // `filter(..).min_by_key(..)` scan, but short-circuiting on the
+        // first empty worker — nothing beats a zero-stream batch, and at
+        // light load (the common case) that is worker 0 (§Perf).
+        let mut best: Option<usize> = None;
+        let mut best_len = usize::MAX;
+        for (w, dw) in self.decode_workers.iter().enumerate() {
+            let len = dw.streams.len();
+            if len < cap && len < best_len {
+                best = Some(w);
+                best_len = len;
+                if len == 0 {
+                    break;
+                }
+            }
+        }
         match best {
             Some(w) => {
                 self.decode_workers[w].streams.push(stream);
@@ -965,7 +1047,10 @@ impl<'a> Engine<'a> {
         }
         let round_start = self.decode_workers[worker].round_start;
         let mut emitted: u32 = 0;
-        let mut finished: Vec<Stream> = Vec::new();
+        // Reused round scratch (§Perf): this used to allocate a fresh Vec
+        // per decode round — the single hottest allocation site.
+        let mut finished = std::mem::take(&mut self.finished_scratch);
+        debug_assert!(finished.is_empty());
         let mut steady: u32 = 0;
         {
             // Single fused pass: emit tokens AND feed the policy's TBT
@@ -1011,12 +1096,17 @@ impl<'a> Engine<'a> {
             tt.record_weighted(t - round_start, steady);
         }
         self.policy.on_decode_tokens(worker, t, emitted);
-        for s in finished {
+        for s in finished.drain(..) {
             self.finish_stream(t, s);
         }
-        // Backfill from the wait queue.
+        self.finished_scratch = finished;
+        // Backfill from the wait queue: promotion is O(promoted) — the
+        // free-slot count is computed once, each promotion is one
+        // pop_front + push, and no worker scan happens here (a finishing
+        // worker adopts waiters directly).
         let cap = self.cfg.pools.max_streams_per_decode_worker;
-        while self.decode_workers[worker].streams.len() < cap {
+        let free = cap.saturating_sub(self.decode_workers[worker].streams.len());
+        for _ in 0..free {
             match self.decode_wait.pop_front() {
                 Some(s) => self.decode_workers[worker].streams.push(s),
                 None => break,
@@ -1025,10 +1115,13 @@ impl<'a> Engine<'a> {
         self.start_round(t, worker);
     }
 
-    fn finish_stream(&mut self, t: f64, s: Stream) {
+    fn finish_stream(&mut self, t: f64, mut s: Stream) {
         let req = self.requests[s.req_idx].clone();
         let ttft = s.joined_t - req.arrival_s;
-        let tbt_p95 = percentile_exact(&s.tbts, 0.95);
+        // Quickselect, not clone+sort: bit-identical nearest-rank P95
+        // (see `percentile_in_place`), and the buffer is recycled below
+        // so its reordering is irrelevant.
+        let tbt_p95 = percentile_in_place(&mut s.tbts, 0.95);
         self.slo.record(RequestOutcome {
             id: req.id,
             prompt_len: req.prompt_len,
@@ -1040,6 +1133,8 @@ impl<'a> Engine<'a> {
         });
         self.completed += 1;
         self.streams_active -= 1;
+        s.tbts.clear();
+        self.tbt_pool.push(s.tbts);
     }
 }
 
@@ -1116,6 +1211,103 @@ mod tests {
         assert_eq!(a.total_energy_j, b.total_energy_j);
         assert_eq!(a.generated_tokens, b.generated_tokens);
         assert_eq!(a.slo.ttft_pass_rate(), b.slo.ttft_pass_rate());
+    }
+
+    #[test]
+    fn pooled_tbt_buffers_keep_outcomes_bit_identical() {
+        // Wildly varying output lengths force heavy recycling of the
+        // per-stream TBT free list (a long stream's buffer is reused by
+        // later short streams and vice versa). Every per-request outcome
+        // — TTFT, nearest-rank TBT P95, finish time — must stay
+        // bit-identical run to run; a dirty or mis-sized recycled buffer
+        // would corrupt a later stream's percentile.
+        let trace = Trace {
+            name: "pool".into(),
+            duration_s: 20.0,
+            requests: (0..80)
+                .map(|i| Request {
+                    id: i as u64,
+                    arrival_s: i as f64 * 0.25,
+                    prompt_len: 200 + (i as u32 * 37) % 900,
+                    output_len: 2 + (i as u32 * 53) % 120,
+                })
+                .collect(),
+        };
+        let opts = RunOptions {
+            keep_outcomes: true,
+            ..Default::default()
+        };
+        let a = run(&cfg(Method::GreenLlm), &trace, &opts);
+        let b = run(&cfg(Method::GreenLlm), &trace, &opts);
+        assert_eq!(a.slo.outcomes.len(), 80);
+        assert_eq!(a.slo.outcomes.len(), b.slo.outcomes.len());
+        for (x, y) in a.slo.outcomes.iter().zip(&b.slo.outcomes) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.ttft_s.to_bits(), y.ttft_s.to_bits());
+            assert_eq!(x.tbt_p95_s.to_bits(), y.tbt_p95_s.to_bits());
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn pooled_tbt_buffers_match_analytic_fresh_alloc_oracle() {
+        // True fresh-alloc oracle (not self-comparison): under a Fixed
+        // clock with zero noise, a solo stream's TBTs are analytically
+        // reproducible outside the engine — each round lasts
+        // decode_step_time(1, ctx, mhz), ctx growing by one per token,
+        // timestamps accumulating in the same f64 order. Requests are
+        // spaced far enough apart that streams never overlap, and output
+        // lengths alternate long/short so every short stream reuses a
+        // recycled long-stream buffer from the pool: a dirty or mis-sized
+        // recycled buffer shifts that stream's nearest-rank P95 away from
+        // the oracle computed over a fresh Vec with a plain clone+sort.
+        let mhz = 900;
+        let prompts: [u32; 6] = [400, 200, 800, 150, 600, 100];
+        let outputs: [u32; 6] = [40, 3, 33, 2, 25, 5];
+        let trace = Trace {
+            name: "oracle".into(),
+            duration_s: 60.0,
+            requests: (0..6)
+                .map(|i| Request {
+                    id: i as u64,
+                    arrival_s: i as f64 * 8.0,
+                    prompt_len: prompts[i],
+                    output_len: outputs[i],
+                })
+                .collect(),
+        };
+        let opts = RunOptions {
+            keep_outcomes: true,
+            ..Default::default()
+        };
+        let r = run(&cfg(Method::Fixed(mhz)), &trace, &opts);
+        assert_eq!(r.slo.outcomes.len(), 6);
+        let perf = PerfModel::new(ModelSpec::by_name("qwen3-14b").unwrap());
+        for (i, o) in r.slo.outcomes.iter().enumerate() {
+            assert_eq!(o.id, i as u64, "solo streams complete in order");
+            // Replay the stream's clock analytically with fresh buffers.
+            let mut t = trace.requests[i].arrival_s
+                + perf.prefill_time(prompts[i] as usize, mhz);
+            let mut ctx = prompts[i] as f64 + 1.0;
+            let mut tbts: Vec<f64> = Vec::new();
+            for _ in 0..outputs[i] - 1 {
+                let t_next = t + perf.decode_step_time(1, ctx, mhz);
+                tbts.push(t_next - t);
+                t = t_next;
+                ctx += 1.0;
+            }
+            // Clone+sort nearest-rank — the pre-quickselect oracle.
+            tbts.sort_by(f64::total_cmp);
+            let rank = ((0.95 * tbts.len() as f64).ceil() as usize).clamp(1, tbts.len());
+            let want = tbts[rank - 1];
+            assert_eq!(
+                o.tbt_p95_s.to_bits(),
+                want.to_bits(),
+                "req {i}: engine p95 {} != analytic fresh-alloc oracle {}",
+                o.tbt_p95_s,
+                want
+            );
+        }
     }
 
     #[test]

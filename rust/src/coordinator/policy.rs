@@ -62,6 +62,15 @@ pub trait DvfsPolicy {
 
     /// Periodic callbacks this policy wants; the index of a spec is the
     /// `kind` passed back to [`DvfsPolicy::on_tick`].
+    ///
+    /// **View contract (§Perf):** each [`TickSpec`] declares which parts
+    /// of the [`PoolView`] the tick actually consumes (`prefill_view`,
+    /// `prefill_jobs`, `decode_view`). The engine only builds the
+    /// declared parts — undeclared parts arrive *empty or stale* and must
+    /// not be read by that tick. Tickless policies (e.g. `Fixed`) return
+    /// no specs at all and the engine never builds a view for them. A
+    /// high-rate tick (GreenLLM's 50 Hz fine loop) should declare the
+    /// bare minimum: view construction is on the simulator's hot path.
     fn ticks(&self) -> Vec<TickSpec> {
         Vec::new()
     }
@@ -207,11 +216,19 @@ impl DvfsPolicy for GreenLlmPolicy {
     fn ticks(&self) -> Vec<TickSpec> {
         // None of these read the decode view (the dual-loop controllers own
         // their telemetry), so skip its O(streams) construction — the fine
-        // tick runs at 50 Hz.
+        // tick runs at 50 Hz. The three controller-state ticks never read
+        // the prefill view either, so they skip that refresh too; only the
+        // prefill-optimizer tick (kind 3) pays for queue views.
         vec![
-            TickSpec::every(self.fine_tick_s).without_decode_view(),
-            TickSpec::every(self.coarse_tick_s).without_decode_view(),
-            TickSpec::every(self.adapt_interval_s).without_decode_view(),
+            TickSpec::every(self.fine_tick_s)
+                .without_decode_view()
+                .without_prefill_view(),
+            TickSpec::every(self.coarse_tick_s)
+                .without_decode_view()
+                .without_prefill_view(),
+            TickSpec::every(self.adapt_interval_s)
+                .without_decode_view()
+                .without_prefill_view(),
             TickSpec::with_prefill_jobs(self.prefill_tick_s).without_decode_view(),
         ]
     }

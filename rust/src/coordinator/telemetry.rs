@@ -101,15 +101,22 @@ pub struct TickSpec {
     /// per decode worker; policies whose tick never reads the decode view
     /// — e.g. GreenLLM's controller-state ticks — opt out).
     pub decode_view: bool,
+    /// Refresh [`PoolView::prefill`] (busy flags) for this tick. Ticks
+    /// that never read the prefill view — e.g. GreenLLM's fine decode
+    /// loop at 50 Hz — opt out and must treat `view.prefill` as stale
+    /// (it holds whatever the last refreshing tick wrote). See the view
+    /// contract in [`crate::coordinator::policy`].
+    pub prefill_view: bool,
 }
 
 impl TickSpec {
-    /// A plain periodic tick (decode view on, prefill queues off).
+    /// A plain periodic tick (prefill + decode views on, queue jobs off).
     pub fn every(interval_s: f64) -> TickSpec {
         TickSpec {
             interval_s,
             prefill_jobs: false,
             decode_view: true,
+            prefill_view: true,
         }
     }
 
@@ -119,12 +126,21 @@ impl TickSpec {
             interval_s,
             prefill_jobs: true,
             decode_view: true,
+            prefill_view: true,
         }
     }
 
     /// Skip decode-view construction for this tick.
     pub fn without_decode_view(mut self) -> TickSpec {
         self.decode_view = false;
+        self
+    }
+
+    /// Skip prefill-view refresh for this tick (implies no queue jobs —
+    /// the tick must not read `view.prefill` at all).
+    pub fn without_prefill_view(mut self) -> TickSpec {
+        self.prefill_view = false;
+        self.prefill_jobs = false;
         self
     }
 }
@@ -164,6 +180,10 @@ mod tests {
         assert!(TickSpec::every(0.2).decode_view);
         let slim = TickSpec::every(0.02).without_decode_view();
         assert!(!slim.decode_view);
+        assert!(slim.prefill_view);
         assert_eq!(slim.interval_s, 0.02);
+        let bare = TickSpec::with_prefill_jobs(0.02).without_prefill_view();
+        assert!(!bare.prefill_view);
+        assert!(!bare.prefill_jobs, "no prefill view implies no job views");
     }
 }

@@ -8,6 +8,7 @@
 //! greenllm fig1|fig3a|fig3b|fig3c|fig5|fig7|fig8|fig10|fig11|fig12a|fig12b
 //! greenllm table3|table4
 //! greenllm serve     --prompts 16 --max-new 24       # real PJRT serving demo
+//! greenllm bench     --quick --baseline BENCH_pr4.json  # perf gate
 //! ```
 //!
 //! Common flags: --duration <s> --seed <n> --model <name> --config <toml>.
@@ -111,6 +112,7 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "matrix" => matrix_cmd(args, duration, seed),
         "cluster" => cluster_cmd(args, duration, seed),
+        "bench" => bench_cmd(args),
         "serve" => serve(args),
         "" | "help" | "--help" => {
             print!("{}", HELP);
@@ -465,6 +467,82 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
     Ok(())
 }
 
+fn bench_cmd(args: &Args) -> Result<()> {
+    use greenllm::bench::perf::{self, GateOutcome};
+    use greenllm::util::json::Json;
+    let quick = args.flag("quick");
+    let mode = if quick { "quick" } else { "full" };
+    println!(
+        "greenllm bench ({mode} mode, seed {}): single-node replay, \
+         4-node cluster + faults, mini-matrix",
+        perf::BENCH_SEED
+    );
+    let t0 = std::time::Instant::now();
+    let results = perf::run_bench(quick);
+    perf::render_table(&results).print();
+    println!("total wall {:.1} s", t0.elapsed().as_secs_f64());
+    // Gate BEFORE blessing: with --json and --baseline pointing at the
+    // same file ("verify then refresh"), the comparison must read the
+    // *old* numbers — and a regression must abort before overwriting
+    // them — or the gate would silently compare results to themselves.
+    let gate_disarmed = std::env::var("GREENLLM_BENCH_SKIP")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    if let Some(bpath) = args.get("baseline").filter(|_| !gate_disarmed) {
+        let max = args.f64_or("max-regress", 25.0)?;
+        let text = std::fs::read_to_string(bpath)
+            .map_err(|e| anyhow!("baseline {bpath}: {e}"))?;
+        let baseline = Json::parse(&text).map_err(|e| anyhow!("baseline {bpath}: {e}"))?;
+        match perf::gate(&baseline, mode, &results, max) {
+            GateOutcome::Skipped(why) => println!("perf gate skipped: {why}"),
+            GateOutcome::Passed(lines) => {
+                for l in &lines {
+                    println!("perf gate: {l}");
+                }
+            }
+            GateOutcome::Drifted(lines) => {
+                for l in &lines {
+                    eprintln!("perf gate: {l}");
+                }
+                return Err(anyhow!(
+                    "bench workload drifted vs {bpath} (event counts changed — the \
+                     committed baseline describes a different simulator build, so the \
+                     wall-time gate is disarmed): re-bless in this change with \
+                     `greenllm bench{} --json {bpath}`, or set GREENLLM_BENCH_SKIP=1",
+                    if quick { " --quick" } else { "" }
+                ));
+            }
+            GateOutcome::Regressed(lines) => {
+                for l in &lines {
+                    eprintln!("perf gate: {l}");
+                }
+                return Err(anyhow!(
+                    "perf regression beyond {max:.0}% vs {bpath}; if this runner is \
+                     noisy re-run, set GREENLLM_BENCH_SKIP=1, or re-bless with \
+                     `greenllm bench{} --json {bpath}`",
+                    if quick { " --quick" } else { "" }
+                ));
+            }
+        }
+    }
+    if gate_disarmed && args.get("baseline").is_some() {
+        // Disarms ONLY the gate — an explicitly requested --json bless
+        // below still happens (skipping it silently would strand a stale
+        // baseline).
+        println!("perf gate skipped (GREENLLM_BENCH_SKIP=1)");
+    }
+    if let Some(path) = args.get("json") {
+        let existing = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok());
+        let merged = perf::merge_into_baseline(existing, mode, &results);
+        std::fs::write(path, merged.dump())
+            .map_err(|e| anyhow!("bench json write {path}: {e}"))?;
+        println!("wrote {path} ({mode} section blessed)");
+    }
+    Ok(())
+}
+
 fn serve(args: &Args) -> Result<()> {
     let n = args.usize_or("prompts", 12)?;
     let max_new = args.usize_or("max-new", 16)?;
@@ -489,8 +567,8 @@ fn serve(args: &Args) -> Result<()> {
         println!("  #{:<3} ttft {:6.1} ms  {:?}", c.id, c.ttft_s * 1e3, c.text);
     }
     let wall = t0.elapsed().as_secs_f64();
-    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    tbts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ttfts.sort_unstable_by(f64::total_cmp); // NaN-safe (stats.rs stance)
+    tbts.sort_unstable_by(f64::total_cmp);
     let pct = |v: &[f64], q: f64| {
         if v.is_empty() {
             0.0
@@ -545,6 +623,11 @@ COMMANDS
                --threads N --json out.json --md out.md;
                the --faults axis separates entries with ';' because explicit
                fault plans contain commas)
+  bench       perf-gate harness: fixed-seed hot-path scenarios reporting
+              events/s, simulated tok/s and wall ms
+              (--quick for the CI smoke horizons; --json BENCH_pr4.json to
+               bless the baseline; --baseline <file> [--max-regress 25] to
+               fail on wall-time regressions; see docs/PERFORMANCE.md)
   serve       end-to-end PJRT serving demo (needs `make artifacts`)
 
 FLAGS

@@ -5,6 +5,7 @@
 //! * `SlidingP95` — P95 TBT over the recent-token window that drives the
 //!   fine ±15 MHz loop every 20 ms (§3.3.2).
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 
 /// Tokens-per-second over a trailing time window.
@@ -58,23 +59,67 @@ impl TpsWindow {
     }
 }
 
+/// log2 of the quantization bucket count for [`SlidingP95`]'s Fenwick
+/// tree. 4096 buckets = the top 12 bits of the IEEE-754 total-order key,
+/// i.e. sign + full exponent: every binary octave of positive values gets
+/// its own bucket, so a window of TBTs spanning a few octaves lands a
+/// handful of entries per bucket.
+const P95_BUCKET_BITS: u32 = 12;
+/// Bucket count (power of two — required by the Fenwick descend).
+const P95_BUCKETS: usize = 1 << P95_BUCKET_BITS;
+
+/// Monotone bucket index: ordering buckets by this index is consistent
+/// with `f64::total_cmp` ordering of the values (the standard
+/// sign-magnitude key flip), so a Fenwick prefix over buckets is a prefix
+/// over value order.
+fn p95_bucket(v: f64) -> usize {
+    let bits = v.to_bits();
+    let key = if bits >> 63 == 1 {
+        !bits
+    } else {
+        bits | (1u64 << 63)
+    };
+    (key >> (64 - P95_BUCKET_BITS)) as usize
+}
+
 /// P95 over the last ~`capacity` samples (recent-token TBT window).
 ///
 /// Samples carry a *weight*: in one decode round every steady stream
 /// observes the identical TBT (the round duration), so the engine feeds
-/// one `(value, count=batch)` entry per round instead of `batch` copies —
-/// this took the TBT path from O(tokens × window) to O(rounds × entries)
-/// and was the top §Perf win. Entries evict FIFO as whole units, so the
-/// retained weight is ≤ capacity (may briefly dip under after evicting a
-/// heavy entry). With all-unit weights the behaviour matches the classic
-/// per-sample window exactly (property-tested against the oracle).
+/// one `(value, count=batch)` entry per round instead of `batch` copies.
+/// Entries evict FIFO as whole units, so the retained weight is ≤
+/// capacity (may briefly dip under after evicting a heavy entry). With
+/// all-unit weights the behaviour matches the classic per-sample window
+/// exactly (property-tested against the oracle).
+///
+/// Internally the window keeps a Fenwick (binary-indexed) tree of
+/// retained weight per quantized value bucket: record and evict are
+/// O(log B) instead of the old sorted-`Vec`'s O(n) memmove + O(n)
+/// eviction search. A quantile query descends the tree in O(log B) to
+/// the bucket holding the target rank, then resolves the *exact* value
+/// with one cheap filter pass over the FIFO followed by a sort of only
+/// the hit bucket's entries — typically a handful; the whole window in
+/// the degenerate everything-in-one-bucket case (the exact-window
+/// fallback). The query is therefore O(log B + n) in the worst case,
+/// but the n-term is a branch-light scan, not the old maintain-a-
+/// globally-sorted-Vec-on-every-record regime. Returned quantiles are
+/// bit-identical to the sorted-Vec implementation for every finite
+/// input (both orders agree wherever bit patterns differ, except the
+/// irrelevant −0.0/+0.0 tie) — golden-safe by construction, and
+/// property-tested against the old implementation kept verbatim as the
+/// test oracle.
 #[derive(Debug, Clone)]
 pub struct SlidingP95 {
     capacity: usize,
     fifo: VecDeque<(f64, u32)>,
-    /// Sorted by value; total weight tracked separately.
-    sorted: Vec<(f64, u32)>,
+    /// Fenwick tree over `P95_BUCKETS` value buckets (1-indexed; slot 0
+    /// unused). Counts retained weight per bucket.
+    tree: Vec<u64>,
     total: u64,
+    /// Scratch for the within-bucket exact selection. Interior mutability
+    /// keeps [`SlidingP95::quantile`] callable through `&self` from
+    /// telemetry accessors (the cluster balancer snapshots are `&Engine`).
+    scratch: RefCell<Vec<(f64, u32)>>,
 }
 
 impl SlidingP95 {
@@ -84,9 +129,43 @@ impl SlidingP95 {
         SlidingP95 {
             capacity,
             fifo: VecDeque::with_capacity(capacity + 1),
-            sorted: Vec::with_capacity(capacity + 1),
+            tree: vec![0; P95_BUCKETS + 1],
             total: 0,
+            scratch: RefCell::new(Vec::new()),
         }
+    }
+
+    fn tree_add(&mut self, bucket: usize, w: u64) {
+        let mut i = bucket + 1;
+        while i <= P95_BUCKETS {
+            self.tree[i] += w;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    fn tree_sub(&mut self, bucket: usize, w: u64) {
+        let mut i = bucket + 1;
+        while i <= P95_BUCKETS {
+            self.tree[i] -= w;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Smallest 0-based bucket whose cumulative weight reaches `rank`,
+    /// plus the residual rank within that bucket. `rank` ≥ 1 and ≤ total.
+    fn find_bucket(&self, rank: u64) -> (usize, u64) {
+        let mut pos = 0usize;
+        let mut rem = rank;
+        let mut step = P95_BUCKETS;
+        while step > 0 {
+            let next = pos + step;
+            if next <= P95_BUCKETS && self.tree[next] < rem {
+                rem -= self.tree[next];
+                pos = next;
+            }
+            step >>= 1;
+        }
+        (pos, rem)
     }
 
     /// Record one sample with weight 1.
@@ -100,18 +179,11 @@ impl SlidingP95 {
             return;
         }
         self.fifo.push_back((v, count));
-        let pos = self.sorted.partition_point(|&(x, _)| x < v);
-        self.sorted.insert(pos, (v, count));
+        self.tree_add(p95_bucket(v), count as u64);
         self.total += count as u64;
         while self.total > self.capacity as u64 && self.fifo.len() > 1 {
             let (old, n) = self.fifo.pop_front().unwrap();
-            let start = self.sorted.partition_point(|&(x, _)| x < old);
-            let idx = self.sorted[start..]
-                .iter()
-                .position(|&(x, c)| x == old && c == n)
-                .expect("evicted entry present")
-                + start;
-            self.sorted.remove(idx);
+            self.tree_sub(p95_bucket(old), n as u64);
             self.total -= n as u64;
         }
     }
@@ -132,14 +204,27 @@ impl SlidingP95 {
             return 0.0;
         }
         let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let (bucket, rem) = self.find_bucket(rank);
+        // Exact within-bucket selection: collect this bucket's retained
+        // entries (typically a handful) and take the rem-th by value.
+        let mut scratch = self.scratch.borrow_mut();
+        scratch.clear();
+        scratch.extend(
+            self.fifo
+                .iter()
+                .copied()
+                .filter(|&(v, _)| p95_bucket(v) == bucket),
+        );
+        scratch.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
         let mut acc = 0u64;
-        for &(v, n) in &self.sorted {
+        for &(v, n) in scratch.iter() {
             acc += n as u64;
-            if acc >= rank {
+            if acc >= rem {
                 return v;
             }
         }
-        self.sorted.last().map(|&(v, _)| v).unwrap_or(0.0)
+        // Unreachable while the tree and FIFO agree; be defensive.
+        scratch.last().map(|&(v, _)| v).unwrap_or(0.0)
     }
 
     /// 95th percentile of the window (0.0 when empty).
@@ -211,6 +296,115 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The pre-Fenwick sorted-`Vec` window, kept verbatim as the oracle
+    /// the order-statistics rewrite is property-tested against.
+    struct SortedVecOracle {
+        capacity: usize,
+        fifo: VecDeque<(f64, u32)>,
+        sorted: Vec<(f64, u32)>,
+        total: u64,
+    }
+
+    impl SortedVecOracle {
+        fn new(capacity: usize) -> Self {
+            SortedVecOracle {
+                capacity,
+                fifo: VecDeque::new(),
+                sorted: Vec::new(),
+                total: 0,
+            }
+        }
+
+        fn record_weighted(&mut self, v: f64, count: u32) {
+            if !v.is_finite() || count == 0 {
+                return;
+            }
+            self.fifo.push_back((v, count));
+            let pos = self.sorted.partition_point(|&(x, _)| x < v);
+            self.sorted.insert(pos, (v, count));
+            self.total += count as u64;
+            while self.total > self.capacity as u64 && self.fifo.len() > 1 {
+                let (old, n) = self.fifo.pop_front().unwrap();
+                let start = self.sorted.partition_point(|&(x, _)| x < old);
+                let idx = self.sorted[start..]
+                    .iter()
+                    .position(|&(x, c)| x == old && c == n)
+                    .expect("evicted entry present")
+                    + start;
+                self.sorted.remove(idx);
+                self.total -= n as u64;
+            }
+        }
+
+        fn quantile(&self, q: f64) -> f64 {
+            if self.total == 0 {
+                return 0.0;
+            }
+            let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+            let mut acc = 0u64;
+            for &(v, n) in &self.sorted {
+                acc += n as u64;
+                if acc >= rank {
+                    return v;
+                }
+            }
+            self.sorted.last().map(|&(v, _)| v).unwrap_or(0.0)
+        }
+    }
+
+    #[test]
+    fn fenwick_matches_sorted_vec_oracle_weighted() {
+        // Bit-exact equivalence of the Fenwick window with the old
+        // sorted-Vec implementation across randomized weighted workloads:
+        // duplicates (shared buckets), tight clusters (exact-window
+        // fallback), wide magnitude ranges (many buckets) and heavy
+        // weights (whole-unit eviction).
+        check("sliding_p95_fenwick_oracle", 60, |g| {
+            let cap = 1 + g.index(300);
+            let n = 1 + g.index(300);
+            let mut s = SlidingP95::new(cap);
+            let mut oracle = SortedVecOracle::new(cap);
+            let mut gg = Pcg64::new(g.next_u64(), 1);
+            for i in 0..n {
+                let v = match gg.index(4) {
+                    0 => 0.05,                       // exact duplicates
+                    1 => gg.lognormal(-3.0, 0.05),   // one tight octave
+                    2 => gg.lognormal(0.0, 6.0),     // wide dynamic range
+                    _ => gg.lognormal(-3.0, 1.0),    // realistic TBTs
+                };
+                let w = 1 + gg.index(9) as u32;
+                s.record_weighted(v, w);
+                oracle.record_weighted(v, w);
+                if i % 7 == 0 {
+                    for q in [0.05, 0.5, 0.9, 0.95, 1.0] {
+                        let got = s.quantile(q);
+                        let want = oracle.quantile(q);
+                        crate::prop_assert!(
+                            got.to_bits() == want.to_bits(),
+                            "cap={cap} i={i} q={q}: got={got} want={want}"
+                        );
+                    }
+                }
+            }
+            crate::prop_assert!(s.len() == oracle.total as usize, "weight drift");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_bucket_fallback_exact() {
+        // Every value in one quantization bucket: the query degenerates to
+        // the exact-window scan and must still return exact quantiles.
+        let mut s = SlidingP95::new(64);
+        for i in 0..64u32 {
+            // All in [1.0, 2.0): same exponent, same bucket.
+            s.record(1.0 + i as f64 / 64.0);
+        }
+        assert_eq!(s.quantile(1.0), 1.0 + 63.0 / 64.0);
+        assert_eq!(s.quantile(0.5), 1.0 + 31.0 / 64.0);
+        assert_eq!(s.quantile(0.0), 1.0);
     }
 
     #[test]

@@ -22,16 +22,33 @@ pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
 
-/// Exact percentile (nearest-rank on a sorted copy). `q` in [0, 1].
+/// Exact percentile (nearest-rank on a copy). `q` in [0, 1].
 /// This is the oracle the streaming histogram is property-tested against.
+///
+/// NaN-safe: ordering is [`f64::total_cmp`] (NaNs sort after every finite
+/// value), matching the event queue's stance. The old
+/// `partial_cmp(..).unwrap()` sort panicked outright on NaN input.
 pub fn percentile_exact(xs: &[f64], q: f64) -> f64 {
+    let mut v: Vec<f64> = xs.to_vec();
+    percentile_in_place(&mut v, q)
+}
+
+/// Exact nearest-rank percentile without the copy: quickselect
+/// (`select_nth_unstable_by` with `total_cmp`) in O(n) expected time
+/// instead of sort's O(n log n), zero allocation.
+///
+/// Bit-exact with the sort-based [`percentile_exact`]: `total_cmp` is a
+/// total order under which two floats compare equal only when their bit
+/// patterns are identical, so the k-th order statistic is unique down to
+/// the bit and any correct selection returns the same value. The slice is
+/// reordered arbitrarily around the selected rank. This is the
+/// per-request completion hot path (`Engine::finish_stream`) — §Perf.
+pub fn percentile_in_place(xs: &mut [f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
-    v[rank - 1]
+    let rank = ((q * xs.len() as f64).ceil() as usize).clamp(1, xs.len());
+    *xs.select_nth_unstable_by(rank - 1, |a, b| a.total_cmp(b)).1
 }
 
 /// Coefficient of determination of a fit.
@@ -88,6 +105,52 @@ mod tests {
     fn percentile_unsorted_input() {
         let xs = [50.0, 15.0, 40.0, 20.0, 35.0];
         assert_eq!(percentile_exact(&xs, 0.5), 35.0);
+    }
+
+    #[test]
+    fn percentile_nan_input_does_not_panic() {
+        // Regression: the old partial_cmp(..).unwrap() sort panicked on
+        // NaN. total_cmp sorts NaN after every finite value, so finite
+        // quantiles stay meaningful and only the extreme rank sees NaN.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile_exact(&xs, 0.5), 2.0);
+        assert_eq!(percentile_exact(&xs, 0.25), 1.0);
+        assert!(percentile_exact(&xs, 1.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_in_place_matches_exact_bitwise() {
+        use crate::util::ptest::check;
+        use crate::util::rng::Pcg64;
+        check("percentile_in_place_oracle", 60, |g| {
+            let n = 1 + g.index(200);
+            let mut gg = Pcg64::new(g.next_u64(), 3);
+            let mut xs: Vec<f64> = (0..n)
+                .map(|i| {
+                    // Heavy duplicates + wide magnitudes to stress the
+                    // pivoting and tie handling.
+                    match gg.index(3) {
+                        0 => 0.125,
+                        1 => gg.lognormal(-3.0, 1.0),
+                        _ => gg.lognormal(0.0, 4.0) * if i % 2 == 0 { 1.0 } else { 1e-9 },
+                    }
+                })
+                .collect();
+            for q in [0.0, 0.05, 0.5, 0.95, 1.0] {
+                let want = percentile_exact(&xs, q);
+                let mut scratch = xs.clone();
+                let got = percentile_in_place(&mut scratch, q);
+                crate::prop_assert!(
+                    got.to_bits() == want.to_bits(),
+                    "n={n} q={q}: got={got} want={want}"
+                );
+                // The scratch still holds the same multiset.
+                scratch.sort_unstable_by(f64::total_cmp);
+                xs.sort_unstable_by(f64::total_cmp);
+                crate::prop_assert!(scratch == xs, "selection lost elements");
+            }
+            Ok(())
+        });
     }
 
     #[test]

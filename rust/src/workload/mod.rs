@@ -12,3 +12,10 @@ pub mod request;
 pub mod synthetic;
 
 pub use request::{PromptClass, Request, RouteClass, Trace};
+
+/// A generated trace shared across consumers without copying (§Perf):
+/// the matrix's [`TraceCache`](crate::bench::matrix::TraceCache) hands
+/// every cell the same `Arc`, and engines *borrow* the request list
+/// (`Engine::load_trace`), so an N-cell sweep performs one generation
+/// and zero request-vector clones.
+pub type SharedTrace = std::sync::Arc<Trace>;

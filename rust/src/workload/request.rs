@@ -100,6 +100,13 @@ impl Trace {
         self.requests.iter().map(|r| r.prompt_len as f64).sum::<f64>() / self.duration_s
     }
 
+    /// Total output tokens a replay delivers (useful tokens are conserved
+    /// even under node loss). The perf bench asserts its scenarios
+    /// against this before reporting throughput.
+    pub fn total_output_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.output_len as u64).sum()
+    }
+
     /// Panic if arrivals are not sorted by time (generator contract).
     pub fn assert_sorted(&self) {
         for w in self.requests.windows(2) {

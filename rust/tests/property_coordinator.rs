@@ -205,3 +205,57 @@ fn greenllm_decode_clocks_on_ladder() {
         Ok(())
     });
 }
+
+#[test]
+fn recycled_buffers_and_quickselect_bit_stable() {
+    // The engine pools per-stream TBT buffers and computes per-request
+    // P95 via in-place quickselect (PR 4 hot-path work). Across random
+    // workloads with wildly mixed output lengths — maximal buffer
+    // recycling churn — two runs must produce bit-identical per-request
+    // outcomes, and every recorded P95 must be a value the stream could
+    // actually have observed (positive, below the run horizon).
+    check("recycled_buffers_bit_stable", 12, |g| {
+        let trace = random_trace(g, 100);
+        let method = random_method(g);
+        let cfg = Config {
+            method,
+            seed: g.next_u64(),
+            ..Config::default()
+        };
+        let opts = RunOptions {
+            keep_outcomes: true,
+            ..Default::default()
+        };
+        let a = run(&cfg, &trace, &opts);
+        let b = run(&cfg, &trace, &opts);
+        prop_assert!(
+            a.slo.outcomes.len() == trace.requests.len(),
+            "{method:?}: outcomes {} of {}",
+            a.slo.outcomes.len(),
+            trace.requests.len()
+        );
+        for (x, y) in a.slo.outcomes.iter().zip(&b.slo.outcomes) {
+            prop_assert!(x.id == y.id, "completion order drifted");
+            prop_assert!(
+                x.tbt_p95_s.to_bits() == y.tbt_p95_s.to_bits(),
+                "req {}: p95 {} vs {}",
+                x.id,
+                x.tbt_p95_s,
+                y.tbt_p95_s
+            );
+            prop_assert!(
+                x.ttft_s.to_bits() == y.ttft_s.to_bits()
+                    && x.finish_s.to_bits() == y.finish_s.to_bits(),
+                "req {}: latency drifted",
+                x.id
+            );
+            prop_assert!(
+                x.tbt_p95_s >= 0.0 && x.tbt_p95_s <= x.finish_s,
+                "req {}: implausible p95 {} (dirty recycled buffer?)",
+                x.id,
+                x.tbt_p95_s
+            );
+        }
+        Ok(())
+    });
+}
