@@ -1,15 +1,20 @@
 //! `greenllm bench` — the simulator's own perf-gate harness (§Perf).
 //!
-//! Three fixed-seed scenarios cover the hot paths end to end:
+//! Four fixed-seed scenarios cover the hot paths end to end:
 //!
 //! 1. **`single-node-replay`** — one GreenLLM replay of a chat trace:
-//!    the pure event-loop path (decode rounds, policy ticks, pooled
-//!    stream buffers, quickselect P95).
+//!    the pure event-loop path (calendar event queue, decode rounds over
+//!    the stream arena, policy ticks, quickselect P95).
 //! 2. **`cluster-4node-faults`** — a 4-node cluster with a mid-trace
 //!    node loss and a power cap: interleaved stepping, balancer
 //!    snapshots (Fenwick TBT tails), arbiter epochs, chaos drain.
 //! 3. **`mini-matrix`** — a small multi-threaded sweep: the shared
 //!    trace cache plus everything above across cells.
+//! 4. **`cluster-32node-sweep`** — the node-count frontier: the same
+//!    heterogeneous capped cluster at 8 and at 32 nodes, back to back.
+//!    This is the scenario the O(log N) cross-engine scheduler exists
+//!    for — pre-PR5 its per-event cost grew linearly with the node
+//!    count.
 //!
 //! Each scenario reports wall time (best of N timed iterations),
 //! discrete events per wall-second and simulated tokens per wall-second.
@@ -23,14 +28,20 @@
 //! any scenario regressing more than `--max-regress` percent in wall
 //! time fails. A `"pending"` section — the state this file ships in
 //! until first blessed on a toolchain-equipped machine, mirroring the
-//! golden-replay float pins — skips the gate with a notice. See
-//! `docs/PERFORMANCE.md`.
+//! golden-replay float pins — skips the gate with a notice.
+//!
+//! `--mem` (binary built with `--features count-alloc`) replays each
+//! scenario once under the counting global allocator and reports
+//! allocation calls + peak live bytes instead of wall time — the
+//! memory-footprint companion the wall numbers must never be mixed
+//! with. See `docs/PERFORMANCE.md`.
 
 use crate::bench::matrix::{run_matrix, MatrixConfig, TraceSpec};
 use crate::bench::report::{fmt_f, Table};
 use crate::config::{Config, Method};
-use crate::coordinator::cluster::{run_cluster, ClusterConfig, FaultSpec, LbPolicy};
+use crate::coordinator::cluster::{run_cluster, ClusterConfig, FaultSpec, LbPolicy, NodeSpec};
 use crate::coordinator::engine::{run, RunOptions};
+use crate::util::count_alloc;
 use crate::util::json::Json;
 use crate::workload::alibaba::{self, ChatParams};
 
@@ -65,7 +76,7 @@ pub struct BenchResult {
 
 /// Time `f` `iters` times and keep the best wall time (the standard
 /// throughput-bench idiom: the minimum is the least-noise estimate).
-fn measure(name: &str, iters: usize, mut f: impl FnMut() -> (u64, u64)) -> BenchResult {
+fn measure(name: &str, iters: usize, f: &mut dyn FnMut() -> (u64, u64)) -> BenchResult {
     let mut best_s = f64::INFINITY;
     let mut events = 0u64;
     let mut sim_tokens = 0u64;
@@ -88,7 +99,7 @@ fn measure(name: &str, iters: usize, mut f: impl FnMut() -> (u64, u64)) -> Bench
     }
 }
 
-/// Run the three scenarios. `quick` shrinks horizons and iterations for
+/// Run the four scenarios. `quick` shrinks horizons and iterations for
 /// CI smoke runs (its numbers live in the baseline's own `quick`
 /// section — quick and full results are never compared to each other).
 pub fn run_bench(quick: bool) -> Vec<BenchResult> {
@@ -101,7 +112,20 @@ pub fn run_bench(quick: bool) -> Vec<BenchResult> {
 pub fn run_bench_scaled(quick: bool, scale: f64) -> Vec<BenchResult> {
     let iters = if quick { 2 } else { 3 };
     let mut out = Vec::new();
+    for_each_scenario(quick, scale, |name, f| out.push(measure(name, iters, f)));
+    out
+}
 
+/// The single scenario registry: builds every bench scenario's inputs
+/// and hands its name plus a run-once closure (returning deterministic
+/// `(events, sim_tokens)`) to `visit`. Both the wall-time and the
+/// memory-footprint modes drive the exact same closures, so the two
+/// reports always describe the same workloads.
+fn for_each_scenario(
+    quick: bool,
+    scale: f64,
+    mut visit: impl FnMut(&str, &mut dyn FnMut() -> (u64, u64)),
+) {
     // 1. Single-node replay: the pure engine hot loop.
     {
         let d = scale * if quick { 45.0 } else { 180.0 };
@@ -111,12 +135,12 @@ pub fn run_bench_scaled(quick: bool, scale: f64) -> Vec<BenchResult> {
             ..Config::default()
         };
         let trace = alibaba::generate(&ChatParams::new(8.0, d), BENCH_SEED);
-        out.push(measure("single-node-replay", iters, || {
+        visit("single-node-replay", &mut || {
             let r = run(&cfg, &trace, &RunOptions::default());
             // A bench iteration that loses tokens is not a perf number.
             debug_assert_eq!(r.generated_tokens, trace.total_output_tokens());
             (r.events_processed, r.generated_tokens)
-        }));
+        });
     }
 
     // 2. Four-node cluster with a mid-trace node loss and a power cap:
@@ -132,13 +156,13 @@ pub fn run_bench_scaled(quick: bool, scale: f64) -> Vec<BenchResult> {
         let ccfg = ClusterConfig::new(4, LbPolicy::JoinShortestQueue, node)
             .with_faults(FaultSpec::OneDown.plan(4, d))
             .with_power_cap(16_000.0, 1.0);
-        out.push(measure("cluster-4node-faults", iters, || {
+        visit("cluster-4node-faults", &mut || {
             let r = run_cluster(&ccfg, &trace, &RunOptions::default());
             // Useful tokens are conserved even under node loss (rolled
             // back work re-generates at the adoptive node).
             debug_assert_eq!(r.generated_tokens, trace.total_output_tokens());
             (r.events_processed, r.generated_tokens)
-        }));
+        });
     }
 
     // 3. Mini scenario matrix: shared trace cache + thread fan-out.
@@ -161,15 +185,141 @@ pub fn run_bench_scaled(quick: bool, scale: f64) -> Vec<BenchResult> {
             lbs: vec![LbPolicy::JoinShortestQueue],
             ..MatrixConfig::default()
         };
-        out.push(measure("mini-matrix", iters, || {
+        visit("mini-matrix", &mut || {
             let cells = run_matrix(&mcfg);
             cells.iter().fold((0u64, 0u64), |(e, t), c| {
                 (e + c.events_processed, t + c.generated_tokens)
             })
-        }));
+        });
     }
 
-    out
+    // 4. The 32-node frontier sweep: one heterogeneous, power-capped
+    //    cluster run at 8 nodes and one at 32 (load scaled per node),
+    //    back to back in a single timed iteration. The per-event
+    //    scheduling cost is what this measures — pre-PR5, every event
+    //    paid an O(N) engine scan, so the 32-node half dominated
+    //    superlinearly; with the SourceHeap it is O(log N).
+    {
+        let d = scale * if quick { 10.0 } else { 40.0 };
+        let specs = vec![NodeSpec::dgx(), NodeSpec::eff(), NodeSpec::legacy()];
+        let sweep: Vec<(ClusterConfig, crate::workload::request::Trace)> = [8usize, 32]
+            .into_iter()
+            .map(|n| {
+                let trace =
+                    alibaba::generate(&ChatParams::new(4.0 * n as f64, d), BENCH_SEED);
+                let node = Config {
+                    method: Method::GreenLlm,
+                    seed: BENCH_SEED,
+                    ..Config::default()
+                };
+                let ccfg = ClusterConfig::new(n, LbPolicy::JoinShortestQueue, node)
+                    .with_node_specs(specs.clone())
+                    .with_power_cap(2500.0 * n as f64, 1.0);
+                (ccfg, trace)
+            })
+            .collect();
+        visit("cluster-32node-sweep", &mut || {
+            let mut events = 0u64;
+            let mut tokens = 0u64;
+            for (ccfg, trace) in &sweep {
+                let r = run_cluster(ccfg, trace, &RunOptions::default());
+                debug_assert_eq!(r.generated_tokens, trace.total_output_tokens());
+                events += r.events_processed;
+                tokens += r.generated_tokens;
+            }
+            (events, tokens)
+        });
+    }
+}
+
+/// One memory-footprint measurement (`--mem`; requires the binary to be
+/// built with `--features count-alloc`).
+#[derive(Debug, Clone)]
+pub struct MemResult {
+    /// Stable scenario name (same registry as the wall-time bench).
+    pub name: String,
+    /// Allocation calls made while the scenario ran once.
+    pub allocations: u64,
+    /// High-water mark of live heap bytes while the scenario ran.
+    pub peak_bytes: u64,
+}
+
+/// Replay every bench scenario once under the counting allocator and
+/// report per-scenario allocation calls + peak live bytes. Returns
+/// `None` when the counting allocator is not installed (binary built
+/// without `--features count-alloc`) — callers surface the build hint.
+pub fn run_bench_mem(quick: bool) -> Option<Vec<MemResult>> {
+    if !count_alloc::active() {
+        return None;
+    }
+    let mut out = Vec::new();
+    for_each_scenario(quick, 1.0, |name, f| {
+        count_alloc::reset_peak();
+        let before = count_alloc::stats();
+        f();
+        let after = count_alloc::stats();
+        out.push(MemResult {
+            name: name.into(),
+            allocations: after.allocations - before.allocations,
+            peak_bytes: after.peak_bytes,
+        });
+    });
+    Some(out)
+}
+
+/// Render the memory-footprint report table.
+pub fn render_mem_table(results: &[MemResult]) -> Table {
+    let mut t = Table::new(&["Scenario", "Allocs", "PeakMiB"]);
+    for r in results {
+        t.row(&[
+            r.name.clone(),
+            r.allocations.to_string(),
+            fmt_f(r.peak_bytes as f64 / (1024.0 * 1024.0), 2),
+        ]);
+    }
+    t
+}
+
+/// Merge fresh memory results into the baseline document under the
+/// top-level `memory.<mode>` section, preserving everything else (the
+/// wall-time `modes` sections are blessed independently).
+pub fn merge_memory_into_baseline(
+    existing: Option<Json>,
+    mode: &str,
+    results: &[MemResult],
+) -> Json {
+    let mut root: BTreeMap<String, Json> = match existing {
+        Some(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    root.insert("schema".into(), Json::Num(BENCH_SCHEMA));
+    let mut memory: BTreeMap<String, Json> = match root.remove("memory") {
+        Some(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    memory.insert(
+        mode.to_string(),
+        Json::obj([
+            ("status", Json::Str("measured".into())),
+            (
+                "scenarios",
+                Json::Arr(
+                    results
+                        .iter()
+                        .map(|r| {
+                            Json::obj([
+                                ("name", Json::Str(r.name.clone())),
+                                ("allocations", Json::Num(r.allocations as f64)),
+                                ("peak_bytes", Json::Num(r.peak_bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    );
+    root.insert("memory".into(), Json::Obj(memory));
+    Json::Obj(root)
 }
 
 /// Render the bench report table.
@@ -345,20 +495,68 @@ mod tests {
     use super::*;
 
     fn tiny_results() -> Vec<BenchResult> {
-        // A heavily scaled-down pass through all three real scenarios:
+        // A heavily scaled-down pass through all four real scenarios:
         // exercises the exact code paths the full bench times.
         run_bench_scaled(true, 0.1)
+    }
+
+    #[test]
+    fn memory_mode_inactive_without_the_feature_and_merge_round_trips() {
+        // Unit tests run without the counting global allocator installed
+        // (installation lives in the binary behind `count-alloc`), so the
+        // mem bench must decline rather than report zeros.
+        assert!(run_bench_mem(true).is_none() || count_alloc::active());
+        // The memory section merges independently of the wall sections.
+        let mem = vec![MemResult {
+            name: "single-node-replay".into(),
+            allocations: 10,
+            peak_bytes: 4096,
+        }];
+        let pending =
+            Json::parse(r#"{"schema":1,"modes":{"full":{"status":"pending"}}}"#).unwrap();
+        let merged = merge_memory_into_baseline(Some(pending), "quick", &mem);
+        assert_eq!(
+            merged.path("modes.full.status").and_then(Json::as_str),
+            Some("pending")
+        );
+        assert_eq!(
+            merged.path("memory.quick.status").and_then(Json::as_str),
+            Some("measured")
+        );
+        assert_eq!(
+            merged
+                .path("memory.quick.scenarios")
+                .and_then(Json::as_arr)
+                .map(|a| a.len()),
+            Some(1)
+        );
+        // ... and a wall-number bless afterwards keeps it intact.
+        let wall = tiny_results();
+        let merged = merge_into_baseline(Some(merged), "quick", &wall);
+        assert_eq!(
+            merged.path("memory.quick.status").and_then(Json::as_str),
+            Some("measured")
+        );
+        assert_eq!(
+            merged.path("modes.quick.status").and_then(Json::as_str),
+            Some("measured")
+        );
     }
 
     #[test]
     fn bench_counts_deterministic() {
         let a = tiny_results();
         let b = tiny_results();
-        assert_eq!(a.len(), 3);
+        assert_eq!(a.len(), 4);
         let names: Vec<&str> = a.iter().map(|r| r.name.as_str()).collect();
         assert_eq!(
             names,
-            vec!["single-node-replay", "cluster-4node-faults", "mini-matrix"]
+            vec![
+                "single-node-replay",
+                "cluster-4node-faults",
+                "mini-matrix",
+                "cluster-32node-sweep"
+            ]
         );
         for (x, y) in a.iter().zip(&b) {
             assert!(x.events > 0 && x.sim_tokens > 0, "{x:?}");
@@ -375,7 +573,7 @@ mod tests {
         let parsed = Json::parse(&doc.dump()).unwrap();
         // Same results against their own baseline: 0% delta, passes.
         match gate(&parsed, "quick", &results, 25.0) {
-            GateOutcome::Passed(lines) => assert_eq!(lines.len(), 3),
+            GateOutcome::Passed(lines) => assert_eq!(lines.len(), 4),
             other => panic!("expected pass, got {other:?}"),
         }
         // A 10x slower run regresses.

@@ -8,33 +8,43 @@
 //! * each node engine's own pending events.
 //!
 //! At every iteration the earliest source wins; ties go cluster-first and
-//! then lowest-node-first (`sim::earliest`), so the whole simulation is a
-//! pure function of (trace, config, fault plan, seed). An arriving request
-//! is assigned by the balancer from a *live* telemetry snapshot — which
-//! now carries liveness and the arbiter's current watt grants — and
-//! injected into the chosen engine through the priority event lane, which
-//! makes a 1-node cluster replay bit-identical to a plain
-//! [`run`](crate::coordinator::run).
+//! then lowest-node-first, so the whole simulation is a pure function of
+//! (trace, config, fault plan, seed). An arriving request is assigned by
+//! the balancer from a *live* telemetry snapshot — which carries liveness
+//! and the arbiter's current watt grants — and injected into the chosen
+//! engine through the priority event lane, which makes a 1-node cluster
+//! replay bit-identical to a plain [`run`](crate::coordinator::run).
+//!
+//! **Scheduling is O(log N) per event (§Perf).** The next engine to step
+//! comes from a [`SourceHeap`] keyed on each engine's next-event time;
+//! the key is re-sifted only when that engine's queue can have changed —
+//! after it steps, after an `inject`, after `fail`/`recover`, and after
+//! every arbiter (re-)arbitration (belt-and-braces: arbitration clamps
+//! clocks but schedules nothing). The pre-PR5 per-event linear scan over
+//! all engines is kept verbatim behind [`run_cluster_scan_oracle`] and
+//! the two paths are asserted bit-equal by the property suite in
+//! `tests/cluster_invariants.rs`.
 //!
 //! Node loss re-homes work instead of dropping it: the failed engine is
-//! drained ([`Engine::fail`]) and every incomplete request goes back
-//! through the balancer at the failure instant, so request and token
-//! conservation hold under churn (partial decodes are rolled back into
-//! `wasted_tokens`). Recovery ([`Engine::recover`]) powers the node back
-//! on with cold telemetry and lets the balancer route to it again. Under
-//! a power cap, both transitions trigger an immediate out-of-band
-//! re-arbitration so the budget invariant survives churn: loss frees the
-//! dead node's share to the survivors, recovery clamps the rejoining
-//! node at the rejoin instant instead of letting it run uncapped until
-//! the next epoch.
+//! drained ([`Engine::fail_into`] — into a buffer the loop reuses across
+//! faults, so chaos paths allocate nothing steady-state) and every
+//! incomplete request goes back through the balancer at the failure
+//! instant, so request and token conservation hold under churn (partial
+//! decodes are rolled back into `wasted_tokens`). Recovery
+//! ([`Engine::recover`]) powers the node back on with cold telemetry and
+//! lets the balancer route to it again. Under a power cap, both
+//! transitions trigger an immediate out-of-band re-arbitration so the
+//! budget invariant survives churn: loss frees the dead node's share to
+//! the survivors, recovery clamps the rejoining node at the rejoin
+//! instant instead of letting it run uncapped until the next epoch.
 
 use crate::coordinator::cluster::balancer::{self, NodeState};
 use crate::coordinator::cluster::faults::FaultKind;
 use crate::coordinator::cluster::power::{ArbiterStrategy, PowerArbiter};
 use crate::coordinator::cluster::{ClusterConfig, ClusterResult, PowerReport};
 use crate::coordinator::engine::{Engine, RunOptions, RunResult};
-use crate::sim::{self, EventQueue};
-use crate::workload::request::Trace;
+use crate::sim::{self, EventQueue, SourceHeap};
+use crate::workload::request::{Request, Trace};
 
 #[derive(Debug, Clone, Copy)]
 enum ClusterEv {
@@ -43,6 +53,71 @@ enum ClusterEv {
     PowerEpoch,
     /// Index into the fault plan's event list.
     Fault(usize),
+}
+
+/// Strategy for picking the next engine to step. The production path
+/// ([`HeapSelector`]) maintains an index min-heap; the oracle
+/// ([`ScanSelector`]) re-reads every engine each iteration, exactly like
+/// the pre-PR5 loop — property tests assert the two produce bit-equal
+/// cluster results.
+trait EngineSelector {
+    fn new(n: usize) -> Self;
+    /// Engine `i`'s event queue may have changed — re-key it.
+    fn update(&mut self, i: usize, engines: &[Engine<'_>]);
+    /// Every engine may have changed (epoch boundaries, fault churn).
+    fn refresh_all(&mut self, engines: &[Engine<'_>]);
+    /// The earliest engine and its next-event time.
+    fn next(&mut self, engines: &[Engine<'_>]) -> Option<(usize, f64)>;
+}
+
+/// O(log N) per event: keys live in a [`SourceHeap`], only touched
+/// engines re-sift.
+struct HeapSelector(SourceHeap);
+
+impl EngineSelector for HeapSelector {
+    fn new(n: usize) -> Self {
+        HeapSelector(SourceHeap::new(n))
+    }
+
+    fn update(&mut self, i: usize, engines: &[Engine<'_>]) {
+        self.0.set(i, engines[i].peek_time());
+    }
+
+    fn refresh_all(&mut self, engines: &[Engine<'_>]) {
+        for (i, e) in engines.iter().enumerate() {
+            self.0.set(i, e.peek_time());
+        }
+    }
+
+    fn next(&mut self, _engines: &[Engine<'_>]) -> Option<(usize, f64)> {
+        self.0.min()
+    }
+}
+
+/// The kept-verbatim pre-PR5 behavior: every `next` re-reads every
+/// engine's `peek_time` and linearly scans for the minimum
+/// ([`sim::earliest`]). O(N) per event — oracle/testing only.
+struct ScanSelector {
+    times: Vec<Option<f64>>,
+}
+
+impl EngineSelector for ScanSelector {
+    fn new(n: usize) -> Self {
+        ScanSelector {
+            times: vec![None; n],
+        }
+    }
+
+    fn update(&mut self, _i: usize, _engines: &[Engine<'_>]) {}
+
+    fn refresh_all(&mut self, _engines: &[Engine<'_>]) {}
+
+    fn next(&mut self, engines: &[Engine<'_>]) -> Option<(usize, f64)> {
+        for (i, e) in engines.iter().enumerate() {
+            self.times[i] = e.peek_time();
+        }
+        sim::earliest(&self.times).map(|i| (i, self.times[i].expect("earliest picked Some")))
+    }
 }
 
 fn snapshot(e: &Engine<'_>, alive: bool, granted_w: f64) -> NodeState {
@@ -77,6 +152,27 @@ fn snapshot_all(
 /// strategy. Panics on an invalid fault plan (validate at the CLI for a
 /// friendly error).
 pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> ClusterResult {
+    run_cluster_impl::<HeapSelector>(ccfg, trace, opts)
+}
+
+/// [`run_cluster`] driven by the kept-verbatim pre-PR5 linear-scan
+/// engine selection instead of the O(log N) heap. Exists solely so the
+/// property suite can assert the two interleavings are bit-identical;
+/// not part of the supported API.
+#[doc(hidden)]
+pub fn run_cluster_scan_oracle(
+    ccfg: &ClusterConfig,
+    trace: &Trace,
+    opts: &RunOptions,
+) -> ClusterResult {
+    run_cluster_impl::<ScanSelector>(ccfg, trace, opts)
+}
+
+fn run_cluster_impl<S: EngineSelector>(
+    ccfg: &ClusterConfig,
+    trace: &Trace,
+    opts: &RunOptions,
+) -> ClusterResult {
     assert!(ccfg.nodes >= 1, "cluster needs at least one node");
     ccfg.faults
         .validate(ccfg.nodes)
@@ -157,25 +253,27 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
 
     let total = trace.requests.len() as u64;
     let mut assignment = vec![0usize; ccfg.nodes];
-    let mut node_times: Vec<Option<f64>> = vec![None; ccfg.nodes];
     let mut states: Vec<NodeState> = Vec::with_capacity(ccfg.nodes);
     let mut rerouted: u64 = 0;
     let mut fault_events: usize = 0;
+    // Reused across fault events: Engine::fail_into drains into this, so
+    // node loss allocates nothing after the first fault (§Perf).
+    let mut drain_buf: Vec<Request> = Vec::new();
+    // Requests completed across the cluster, maintained incrementally —
+    // completions only move inside Engine::step, so the pre-PR5 O(N)
+    // per-event re-sum is not needed on the hot path.
+    let mut done: u64 = 0;
 
-    loop {
-        let done: u64 = engines.iter().map(|e| e.completed()).sum();
-        if done >= total {
-            break;
-        }
-        for (i, e) in engines.iter().enumerate() {
-            node_times[i] = e.peek_time();
-        }
-        let next_node = sim::earliest(&node_times);
+    let mut sel = S::new(ccfg.nodes);
+    sel.refresh_all(&engines);
+
+    while done < total {
+        let next_node = sel.next(&engines);
         // Cluster events win exact-time ties: an arrival at t must be
         // assigned before any node processes its own event at t (the order
         // a pre-scheduled replay would use).
-        let take_cluster = match (q.peek_time(), next_node.map(|i| node_times[i].unwrap())) {
-            (Some(tc), Some(tn)) => tc <= tn,
+        let take_cluster = match (q.peek_time(), next_node) {
+            (Some(tc), Some((_, tn))) => tc <= tn,
             (Some(_), None) => true,
             (None, Some(_)) => false,
             (None, None) => break, // fully drained yet incomplete: impossible
@@ -190,6 +288,7 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
                     assert!(alive[node], "balancer routed to dead node {node}");
                     engines[node].inject(t, trace.requests[i].clone());
                     assignment[node] += 1;
+                    sel.update(node, &engines);
                 }
                 ClusterEv::PowerEpoch => {
                     if let Some(a) = arbiter.as_mut() {
@@ -198,6 +297,7 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
                             granted_w.copy_from_slice(g);
                         }
                         q.schedule_in(ccfg.power_epoch_s, ClusterEv::PowerEpoch);
+                        sel.refresh_all(&engines);
                     }
                 }
                 ClusterEv::Fault(i) => {
@@ -206,9 +306,11 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
                     match fev.kind {
                         FaultKind::Down => {
                             alive[fev.node] = false;
-                            let drained = engines[fev.node].fail(t);
-                            assignment[fev.node] -= drained.len();
-                            rerouted += drained.len() as u64;
+                            debug_assert!(drain_buf.is_empty());
+                            engines[fev.node].fail_into(t, &mut drain_buf);
+                            assignment[fev.node] -= drain_buf.len();
+                            rerouted += drain_buf.len() as u64;
+                            sel.update(fev.node, &engines);
                             // Re-split the budget over the survivors right
                             // away (frees the dead node's floor) so the
                             // re-routes below see fresh grants.
@@ -217,12 +319,13 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
                                 if let Some(g) = a.latest_grants() {
                                     granted_w.copy_from_slice(g);
                                 }
+                                sel.refresh_all(&engines);
                             }
                             // Re-home every incomplete request through the
                             // live balancer (states re-snapshotted per
                             // request: earlier re-routes shift the load the
                             // later ones see).
-                            for req in drained {
+                            for req in drain_buf.drain(..) {
                                 snapshot_all(&engines, &alive, &granted_w, &mut states);
                                 let node = lb.assign(t, &req, &states);
                                 assert!(
@@ -231,11 +334,13 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
                                 );
                                 engines[node].inject(t, req);
                                 assignment[node] += 1;
+                                sel.update(node, &engines);
                             }
                         }
                         FaultKind::Up => {
                             alive[fev.node] = true;
                             engines[fev.node].recover(t);
+                            sel.update(fev.node, &engines);
                             // `recover` cleared the node's clamp; under a
                             // cap that would let the cluster exceed its
                             // budget until the next epoch. Re-arbitrate at
@@ -246,13 +351,18 @@ pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> Cl
                                 if let Some(g) = a.latest_grants() {
                                     granted_w.copy_from_slice(g);
                                 }
+                                sel.refresh_all(&engines);
                             }
                         }
                     }
                 }
             }
         } else {
-            engines[next_node.expect("node source exists")].step();
+            let i = next_node.expect("node source exists").0;
+            let before = engines[i].completed();
+            engines[i].step();
+            done += engines[i].completed() - before;
+            sel.update(i, &engines);
         }
     }
 

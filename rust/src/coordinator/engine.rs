@@ -194,20 +194,124 @@ struct PrefillWorker {
     seq: u64,
 }
 
-#[derive(Debug)]
-struct Stream {
-    req_idx: usize,
-    remaining: u32,
-    ctx: f64,
-    last_token_t: f64,
-    joined_t: f64,
-    tbts: Vec<f64>,
+/// Generational handle into the engine's [`StreamArena`] (§Perf). Copy
+/// + 8 bytes: batches and the wait queue move ids, never stream state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct StreamId {
+    slot: u32,
+    gen: u32,
+}
+
+/// Slab arena for decode streams, split structure-of-arrays (§Perf).
+///
+/// Pre-PR5, `Stream` structs lived inside each worker's batch `Vec` and
+/// moved between batch / wait-queue / scratch on every transition, and
+/// their TBT buffers recycled through a separate engine-level free list.
+/// Now every stream occupies one *slot* for its whole life: the
+/// decode-round hot fields (`ctx`, `remaining`, `last_token_t`) sit in
+/// their own dense arrays so `on_decode_round` walks contiguous memory,
+/// admission/abort/finish move only 8-byte ids, and the per-stream TBT
+/// buffer lives *in the slot* — freeing a slot clears the buffer in
+/// place and the next stream allocated there reuses it, which subsumes
+/// the old `tbt_pool` free list. Slot reuse is guarded by a generation
+/// counter (stale-id access is a debug panic, not a silent corruption).
+#[derive(Debug, Default)]
+struct StreamArena {
+    // Hot fields, touched every decode round:
+    ctx: Vec<f64>,
+    remaining: Vec<u32>,
+    last_token_t: Vec<f64>,
+    // Cold fields, touched at admit/finish/abort:
+    joined_t: Vec<f64>,
+    req_idx: Vec<usize>,
+    /// Per-slot TBT buffer; cleared (capacity kept) when the slot frees.
+    tbts: Vec<Vec<f64>>,
+    /// Per-slot generation, bumped at free.
+    gen: Vec<u32>,
+    /// Free slot list (LIFO: the hottest slot is reused first).
+    free: Vec<u32>,
+    /// Live streams (== admitted and not yet finished/aborted).
+    live: usize,
+}
+
+impl StreamArena {
+    /// Claim a slot for a fresh stream; `tbt_capacity` pre-sizes the
+    /// slot's (possibly recycled) TBT buffer.
+    fn alloc(
+        &mut self,
+        req_idx: usize,
+        remaining: u32,
+        ctx: f64,
+        t: f64,
+        tbt_capacity: usize,
+    ) -> StreamId {
+        let slot = match self.free.pop() {
+            Some(s) => s as usize,
+            None => {
+                let s = self.ctx.len();
+                self.ctx.push(0.0);
+                self.remaining.push(0);
+                self.last_token_t.push(0.0);
+                self.joined_t.push(0.0);
+                self.req_idx.push(0);
+                self.tbts.push(Vec::new());
+                self.gen.push(0);
+                s
+            }
+        };
+        self.ctx[slot] = ctx;
+        self.remaining[slot] = remaining;
+        self.last_token_t[slot] = t;
+        self.joined_t[slot] = t;
+        self.req_idx[slot] = req_idx;
+        debug_assert!(self.tbts[slot].is_empty(), "recycled TBT buffer not cleared");
+        self.tbts[slot].reserve(tbt_capacity);
+        self.live += 1;
+        StreamId {
+            slot: slot as u32,
+            gen: self.gen[slot],
+        }
+    }
+
+    /// Mean context length across a batch of ids (0.0 when empty) —
+    /// shared by round sizing and the decode telemetry view.
+    fn avg_ctx(&self, ids: &[StreamId]) -> f64 {
+        if ids.is_empty() {
+            return 0.0;
+        }
+        let mut sum = 0.0;
+        for &id in ids {
+            sum += self.ctx[self.slot(id)];
+        }
+        sum / ids.len() as f64
+    }
+
+    /// Validated slot index of a live id.
+    #[inline]
+    fn slot(&self, id: StreamId) -> usize {
+        debug_assert_eq!(
+            self.gen[id.slot as usize], id.gen,
+            "stale stream id {id:?}"
+        );
+        id.slot as usize
+    }
+
+    /// Release a slot: the TBT buffer clears in place (capacity kept for
+    /// the next occupant) and the generation advances so stale ids trap.
+    fn release(&mut self, id: StreamId) {
+        let slot = self.slot(id);
+        self.tbts[slot].clear();
+        self.gen[slot] = self.gen[slot].wrapping_add(1);
+        self.free.push(slot as u32);
+        self.live -= 1;
+    }
 }
 
 #[derive(Debug)]
 struct DecodeWorker {
     gpu: usize,
-    streams: Vec<Stream>,
+    /// Ids of the streams in this worker's continuous batch.
+    streams: Vec<StreamId>,
     round_active: bool,
     round_start: f64,
     seq: u64,
@@ -236,7 +340,10 @@ pub struct Engine<'a> {
     prefill_queues: Vec<VecDeque<QueuedJob>>,
     prefill_workers: Vec<PrefillWorker>,
     decode_workers: Vec<DecodeWorker>,
-    decode_wait: VecDeque<Stream>,
+    decode_wait: VecDeque<StreamId>,
+    /// All decode-stream state, slab-allocated (§Perf): hot per-round
+    /// fields in SoA arrays, TBT buffers recycled in place per slot.
+    arena: StreamArena,
     /// The frequency governor under test — the only source of clock
     /// decisions in the whole loop.
     policy: Box<dyn DvfsPolicy>,
@@ -264,20 +371,17 @@ pub struct Engine<'a> {
     requested_mhz: Vec<u32>,
     /// Prompt tokens queued or in prefill flight (O(1) balancer signal).
     outstanding_prompt_tok: u64,
-    /// Streams admitted to decode (batched or waiting) and not yet done.
-    streams_active: usize,
     /// Recent decode-TBT tail (only when `opts.track_tbt_tail`).
     tbt_tail: Option<SlidingP95>,
     /// Tokens emitted then rolled back by a node failure (chaos layer).
     wasted_tokens: u64,
-    /// Free list of recycled per-stream TBT buffers: a completed stream's
-    /// buffer is cleared and returned here instead of dropped, so steady
-    /// decode traffic allocates no per-stream `Vec` at all after warm-up
-    /// (§Perf). Bounded by the peak number of concurrent streams.
-    tbt_pool: Vec<Vec<f64>>,
     /// Reusable scratch for streams finishing within one decode round
     /// (§Perf: `on_decode_round` used to allocate this per round).
-    finished_scratch: Vec<Stream>,
+    finished_scratch: Vec<StreamId>,
+    /// Reusable scratch for the chaos drain (§Perf: `Engine::fail_into`
+    /// collects batched + waiting stream ids here before aborting them,
+    /// so node loss moves ids instead of collecting `Stream` structs).
+    ids_scratch: Vec<StreamId>,
 }
 
 /// Replay `trace` under `cfg`.
@@ -365,6 +469,7 @@ impl<'a> Engine<'a> {
             prefill_workers,
             decode_workers,
             decode_wait: VecDeque::new(),
+            arena: StreamArena::default(),
             policy,
             tick_specs,
             slo: {
@@ -385,13 +490,12 @@ impl<'a> Engine<'a> {
             clock_cap_mhz: u32::MAX,
             requested_mhz,
             outstanding_prompt_tok: 0,
-            streams_active: 0,
             tbt_tail: opts
                 .track_tbt_tail
                 .then(|| SlidingP95::new(TBT_TAIL_WINDOW)),
             wasted_tokens: 0,
-            tbt_pool: Vec::new(),
             finished_scratch: Vec::new(),
+            ids_scratch: Vec::new(),
         }
     }
 
@@ -571,7 +675,7 @@ impl<'a> Engine<'a> {
 
     /// Streams admitted to decode (batched or waiting) and not yet done.
     pub fn active_streams(&self) -> usize {
-        self.streams_active
+        self.arena.live
     }
 
     /// P95 of recent decode TBTs (0.0 until tracked samples exist; requires
@@ -648,20 +752,20 @@ impl<'a> Engine<'a> {
     /// Node failure at `t` (chaos layer, stepped mode only): power every
     /// GPU off, cancel all pending events, and drain every incomplete
     /// request — queued prefill jobs, in-flight prefills, batched and
-    /// waiting decode streams — in a canonical deterministic order for
-    /// re-routing by the cluster loop. Tokens already emitted by drained
-    /// streams are rolled back from `generated_tokens` (the retry
-    /// re-generates them, keeping cluster-wide token conservation exact)
-    /// and surface as [`Engine::wasted_tokens`]; the energy they cost
-    /// stays on this node's meter. Telemetry goes cold: the TBT-tail and
-    /// TPS windows reset so balancer and arbiter see a fresh node on
-    /// recovery.
-    pub fn fail(&mut self, t: f64) -> Vec<Request> {
+    /// waiting decode streams — in a canonical deterministic order into
+    /// `drained` for re-routing by the cluster loop (the caller reuses
+    /// the buffer across faults, so chaos paths allocate nothing
+    /// steady-state — §Perf). Tokens already emitted by drained streams
+    /// are rolled back from `generated_tokens` (the retry re-generates
+    /// them, keeping cluster-wide token conservation exact) and surface
+    /// as [`Engine::wasted_tokens`]; the energy they cost stays on this
+    /// node's meter. Telemetry goes cold: the TBT-tail and TPS windows
+    /// reset so balancer and arbiter see a fresh node on recovery.
+    pub fn fail_into(&mut self, t: f64, drained: &mut Vec<Request>) {
         debug_assert!(
             self.replay_total.is_none(),
             "fail() on a replay-mode engine"
         );
-        let mut drained = Vec::new();
         // Queued prefill jobs, per queue in FIFO order.
         for queue in self.prefill_queues.iter_mut() {
             while let Some(job) = queue.pop_front() {
@@ -675,32 +779,32 @@ impl<'a> Engine<'a> {
                 drained.push(self.requests[req_idx].clone());
             }
         }
-        // Batched decode streams (worker order, batch order), then waiters.
-        let batched: Vec<Stream> = self
-            .decode_workers
-            .iter_mut()
-            .flat_map(|w| {
-                w.round_active = false;
-                std::mem::take(&mut w.streams)
-            })
-            .collect();
-        for s in batched {
-            self.abort_stream(s, &mut drained);
+        // Batched decode streams (worker order, batch order), then
+        // waiters — collected as ids into the engine-owned scratch (the
+        // `finished_scratch` pattern: no per-fault Vec).
+        let mut ids = std::mem::take(&mut self.ids_scratch);
+        debug_assert!(ids.is_empty());
+        for w in self.decode_workers.iter_mut() {
+            w.round_active = false;
+            ids.append(&mut w.streams);
         }
-        for s in std::mem::take(&mut self.decode_wait) {
-            self.abort_stream(s, &mut drained);
+        ids.extend(self.decode_wait.drain(..));
+        for id in ids.drain(..) {
+            self.abort_stream(id, drained);
         }
+        self.ids_scratch = ids;
         // Salvage arrivals the node was handed but had not yet processed
         // (a same-timestamp fault can beat an injected arrival); all other
         // pending events — in-flight completions, ticks — die with the
-        // node.
-        for (_, ev) in self.q.drain_sorted() {
+        // node. The drain walks the calendar queue's bucket order
+        // directly: no sorted intermediate Vec (§Perf).
+        let requests = &self.requests;
+        self.q.drain_each(|_, ev| {
             if let Ev::Arrive(req_idx) = ev {
-                drained.push(self.requests[req_idx].clone());
+                drained.push(requests[req_idx].clone());
             }
-        }
+        });
         self.outstanding_prompt_tok = 0;
-        self.streams_active = 0;
         if self.tbt_tail.is_some() {
             self.tbt_tail = Some(SlidingP95::new(TBT_TAIL_WINDOW));
         }
@@ -708,20 +812,28 @@ impl<'a> Engine<'a> {
         for g in self.gpus.iter_mut() {
             g.power_off(t);
         }
+    }
+
+    /// [`Engine::fail_into`] with a freshly allocated buffer (unit-test
+    /// convenience; the cluster loop reuses one buffer across faults).
+    pub fn fail(&mut self, t: f64) -> Vec<Request> {
+        let mut drained = Vec::new();
+        self.fail_into(t, &mut drained);
         drained
     }
 
     /// Roll back one incomplete stream at a node failure: un-count its
     /// emitted tokens (the prefill's first token + decode tokens so far)
-    /// and queue its request for re-routing.
-    fn abort_stream(&mut self, mut s: Stream, drained: &mut Vec<Request>) {
-        let req = self.requests[s.req_idx].clone();
-        let emitted = (req.output_len - s.remaining) as u64;
+    /// and queue its request for re-routing. The slot (and its TBT
+    /// buffer, cleared in place) returns to the arena's free list.
+    fn abort_stream(&mut self, id: StreamId, drained: &mut Vec<Request>) {
+        let slot = self.arena.slot(id);
+        let req = self.requests[self.arena.req_idx[slot]].clone();
+        let emitted = (req.output_len - self.arena.remaining[slot]) as u64;
         self.generated_tokens -= emitted;
         self.wasted_tokens += emitted;
         drained.push(req);
-        s.tbts.clear();
-        self.tbt_pool.push(s.tbts);
+        self.arena.release(id);
     }
 
     /// Node recovery at `t` (chaos layer): power the GPUs back on at the
@@ -820,13 +932,10 @@ impl<'a> Engine<'a> {
         view.decode.clear();
         if spec.decode_view {
             for w in &self.decode_workers {
-                let batch = w.streams.len();
-                let avg_ctx = if batch == 0 {
-                    0.0
-                } else {
-                    w.streams.iter().map(|s| s.ctx).sum::<f64>() / batch as f64
-                };
-                view.decode.push(DecodeWorkerView { batch, avg_ctx });
+                view.decode.push(DecodeWorkerView {
+                    batch: w.streams.len(),
+                    avg_ctx: self.arena.avg_ctx(&w.streams),
+                });
             }
         }
 
@@ -962,22 +1071,17 @@ impl<'a> Engine<'a> {
             self.slo.record(outcome);
             self.completed += 1;
         } else {
-            // Recycle a TBT buffer from the free list (§Perf): buffers
-            // return cleared at stream completion, so steady traffic runs
-            // allocation-free once the pool matches peak concurrency.
-            let mut tbts = self.tbt_pool.pop().unwrap_or_default();
-            debug_assert!(tbts.is_empty(), "recycled TBT buffer not cleared");
-            tbts.reserve(req.output_len as usize);
-            let stream = Stream {
+            // Claim an arena slot (§Perf): a recycled slot's TBT buffer
+            // comes back cleared-in-place, so steady traffic runs
+            // allocation-free once the arena matches peak concurrency.
+            let id = self.arena.alloc(
                 req_idx,
-                remaining: req.output_len - 1,
-                ctx: req.prompt_len as f64 + 1.0,
-                last_token_t: t,
-                joined_t: t,
-                tbts,
-            };
-            self.streams_active += 1;
-            self.admit_stream(t, stream, ttft);
+                req.output_len - 1,
+                req.prompt_len as f64 + 1.0,
+                t,
+                req.output_len as usize,
+            );
+            self.admit_stream(t, id, ttft);
         }
         // Next job (or park).
         self.dispatch_prefill(t, worker);
@@ -985,7 +1089,7 @@ impl<'a> Engine<'a> {
 
     // -- decode ----------------------------------------------------------------
 
-    fn admit_stream(&mut self, t: f64, stream: Stream, _ttft: f64) {
+    fn admit_stream(&mut self, t: f64, stream: StreamId, _ttft: f64) {
         // TTFT is recorded at completion together with TBT stats; stash it
         // via the stream's joined_t (= prefill done time).
         let cap = self.cfg.pools.max_streams_per_decode_worker;
@@ -1029,7 +1133,7 @@ impl<'a> Engine<'a> {
         w.seq += 1;
         let seq = w.seq;
         let batch = w.streams.len();
-        let avg_ctx = w.streams.iter().map(|s| s.ctx).sum::<f64>() / batch as f64;
+        let avg_ctx = self.arena.avg_ctx(&w.streams);
         w.batch_samples += 1;
         w.batch_sum += batch as u64;
         let gpu = w.gpu;
@@ -1057,20 +1161,25 @@ impl<'a> Engine<'a> {
             // telemetry (split borrows keep this allocation-free). Steady
             // streams (last token at round start) all observe the same
             // round-duration TBT, fed as ONE weighted sample below — §Perf.
+            // Stream state reads/writes go through the arena's SoA arrays
+            // (ctx / remaining / last_token_t are each dense), so the
+            // pass touches contiguous hot memory instead of chasing
+            // per-stream structs.
             let w = &mut self.decode_workers[worker];
+            let arena = &mut self.arena;
             let policy = &mut self.policy;
             let tail = &mut self.tbt_tail;
             let mut i = 0;
             while i < w.streams.len() {
+                let slot = arena.slot(w.streams[i]);
                 // Streams that joined mid-round wait for the next one.
-                if w.streams[i].joined_t > round_start {
+                if arena.joined_t[slot] > round_start {
                     i += 1;
                     continue;
                 }
-                let s = &mut w.streams[i];
-                let tbt = t - s.last_token_t;
-                s.tbts.push(tbt);
-                if s.last_token_t == round_start {
+                let tbt = t - arena.last_token_t[slot];
+                arena.tbts[slot].push(tbt);
+                if arena.last_token_t[slot] == round_start {
                     steady += 1;
                 } else {
                     policy.on_decode_tbt(worker, tbt); // fresh joiner
@@ -1078,11 +1187,11 @@ impl<'a> Engine<'a> {
                         tt.record(tbt);
                     }
                 }
-                s.last_token_t = t;
-                s.ctx += 1.0;
-                s.remaining -= 1;
+                arena.last_token_t[slot] = t;
+                arena.ctx[slot] += 1.0;
+                arena.remaining[slot] -= 1;
                 emitted += 1;
-                if s.remaining == 0 {
+                if arena.remaining[slot] == 0 {
                     finished.push(w.streams.swap_remove(i));
                 } else {
                     i += 1;
@@ -1115,13 +1224,14 @@ impl<'a> Engine<'a> {
         self.start_round(t, worker);
     }
 
-    fn finish_stream(&mut self, t: f64, mut s: Stream) {
-        let req = self.requests[s.req_idx].clone();
-        let ttft = s.joined_t - req.arrival_s;
+    fn finish_stream(&mut self, t: f64, id: StreamId) {
+        let slot = self.arena.slot(id);
+        let req = self.requests[self.arena.req_idx[slot]].clone();
+        let ttft = self.arena.joined_t[slot] - req.arrival_s;
         // Quickselect, not clone+sort: bit-identical nearest-rank P95
-        // (see `percentile_in_place`), and the buffer is recycled below
-        // so its reordering is irrelevant.
-        let tbt_p95 = percentile_in_place(&mut s.tbts, 0.95);
+        // (see `percentile_in_place`), and the slot's buffer is cleared
+        // in place on release so its reordering is irrelevant.
+        let tbt_p95 = percentile_in_place(&mut self.arena.tbts[slot], 0.95);
         self.slo.record(RequestOutcome {
             id: req.id,
             prompt_len: req.prompt_len,
@@ -1132,9 +1242,7 @@ impl<'a> Engine<'a> {
             finish_s: t,
         });
         self.completed += 1;
-        self.streams_active -= 1;
-        s.tbts.clear();
-        self.tbt_pool.push(s.tbts);
+        self.arena.release(id);
     }
 }
 

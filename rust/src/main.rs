@@ -24,6 +24,15 @@ use greenllm::workload::alibaba::{self, ChatParams};
 use greenllm::workload::request::Trace;
 use greenllm::workload::synthetic;
 
+/// `--features count-alloc` installs the counting global allocator so
+/// `greenllm bench --mem` can report allocation counts and peak live
+/// bytes. Never enabled for wall-time benching: counting costs a few
+/// percent of wall time and must not contaminate the gated numbers.
+#[cfg(feature = "count-alloc")]
+#[global_allocator]
+static COUNTING_ALLOC: greenllm::util::count_alloc::CountingAlloc =
+    greenllm::util::count_alloc::CountingAlloc;
+
 fn main() {
     let args = match Args::from_env() {
         Ok(a) => a,
@@ -472,9 +481,23 @@ fn bench_cmd(args: &Args) -> Result<()> {
     use greenllm::util::json::Json;
     let quick = args.flag("quick");
     let mode = if quick { "quick" } else { "full" };
+    if args.flag("mem") {
+        return bench_mem_cmd(args, quick, mode);
+    }
+    // Hard guard, not just a comment: a count-alloc build must never
+    // produce (or bless) wall numbers — allocator counting inflates
+    // them a few percent, which silently widens every later CI gate.
+    if greenllm::util::count_alloc::active() {
+        return Err(anyhow!(
+            "this binary was built with --features count-alloc; wall-time \
+             benching would be contaminated by allocator counting. Run \
+             `bench --mem` with this build, or rebuild without the feature \
+             to measure/bless wall numbers"
+        ));
+    }
     println!(
         "greenllm bench ({mode} mode, seed {}): single-node replay, \
-         4-node cluster + faults, mini-matrix",
+         4-node cluster + faults, mini-matrix, 32-node sweep",
         perf::BENCH_SEED
     );
     let t0 = std::time::Instant::now();
@@ -539,6 +562,47 @@ fn bench_cmd(args: &Args) -> Result<()> {
         std::fs::write(path, merged.dump())
             .map_err(|e| anyhow!("bench json write {path}: {e}"))?;
         println!("wrote {path} ({mode} section blessed)");
+    }
+    Ok(())
+}
+
+/// `greenllm bench --mem`: replay each scenario once under the counting
+/// allocator, report allocation calls + peak live bytes, optionally
+/// record them into the baseline's `memory.<mode>` section. Never
+/// wall-gated — allocator counting and wall timing must not mix.
+fn bench_mem_cmd(args: &Args, quick: bool, mode: &str) -> Result<()> {
+    use greenllm::bench::perf;
+    use greenllm::util::json::Json;
+    // No memory gate exists (the sections document the footprint
+    // trajectory; see docs/PERFORMANCE.md). Refuse rather than let a
+    // `--baseline` invocation exit 0 looking like a gate ran.
+    if args.get("baseline").is_some() {
+        return Err(anyhow!(
+            "bench --mem has no regression gate: memory sections are recorded \
+             (--json) but never compared. Drop --baseline/--max-regress, or \
+             run the wall-time bench (no --mem) to gate"
+        ));
+    }
+    let Some(results) = perf::run_bench_mem(quick) else {
+        return Err(anyhow!(
+            "bench --mem needs the counting allocator: rebuild with \
+             `cargo build --release --features count-alloc`"
+        ));
+    };
+    println!(
+        "greenllm bench --mem ({mode} horizons, seed {}): allocation calls \
+         and peak live bytes per scenario",
+        perf::BENCH_SEED
+    );
+    perf::render_mem_table(&results).print();
+    if let Some(path) = args.get("json") {
+        let existing = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok());
+        let merged = perf::merge_memory_into_baseline(existing, mode, &results);
+        std::fs::write(path, merged.dump())
+            .map_err(|e| anyhow!("bench json write {path}: {e}"))?;
+        println!("wrote {path} (memory.{mode} section blessed)");
     }
     Ok(())
 }
@@ -623,11 +687,14 @@ COMMANDS
                --threads N --json out.json --md out.md;
                the --faults axis separates entries with ';' because explicit
                fault plans contain commas)
-  bench       perf-gate harness: fixed-seed hot-path scenarios reporting
-              events/s, simulated tok/s and wall ms
+  bench       perf-gate harness: fixed-seed hot-path scenarios (incl. the
+              32-node cluster sweep) reporting events/s, simulated tok/s
+              and wall ms
               (--quick for the CI smoke horizons; --json BENCH_pr4.json to
                bless the baseline; --baseline <file> [--max-regress 25] to
-               fail on wall-time regressions; see docs/PERFORMANCE.md)
+               fail on wall-time regressions; --mem for allocation counts +
+               peak bytes — needs a --features count-alloc build;
+               see docs/PERFORMANCE.md)
   serve       end-to-end PJRT serving demo (needs `make artifacts`)
 
 FLAGS

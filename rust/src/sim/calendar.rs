@@ -1,0 +1,679 @@
+//! The event queue's storage backend: a hierarchical calendar/bucket
+//! queue with an automatic binary-heap fallback.
+//!
+//! [`EventQueue`](crate::sim::EventQueue) presents a total order over
+//! `(t, seq)` keys; this module provides the structure that holds the
+//! entries. Two modes share one invariant — *any* backend that always
+//! surfaces the `(t, seq)`-minimum is bit-exact with any other, because
+//! the key is a strict total order (`total_cmp` on time, then the unique
+//! sequence number):
+//!
+//! * **Heap** (warm-up / fallback): a `BinaryHeap` over the reversed key,
+//!   exactly the pre-PR5 queue. Small queues (a stepped cluster node's
+//!   tens of pending events) never leave this mode — a heap beats bucket
+//!   bookkeeping at that size.
+//! * **Calendar**: once the queue holds `WARMUP_LEN` events, entries
+//!   are spread over a circular *year* of `width`-second buckets
+//!   anchored at the pending minimum. Push computes a bucket index in
+//!   O(1); pop scans only the cursor bucket (the one holding the cached
+//!   head key) for the exact `(t, seq)` minimum. Events beyond the year
+//!   wait in the heap (the *far* overflow) and migrate bucket-ward one
+//!   year at a time. The year re-anchors when the queue drains or the
+//!   far horizon is reached, the bucket count doubles/halves with load,
+//!   and the width is re-estimated from the live time span at every
+//!   rebuild.
+//!
+//! Pathological timestamp distributions degrade gracefully instead of
+//! corrupting order: a single bucket exceeding `OVERLOAD` entries
+//! (same-timestamp bursts), a zero/non-finite span estimate, or a year
+//! span that underflows at the current time magnitude all switch the
+//! queue back to heap mode wholesale — the move is order-preserving by
+//! the invariant above, and a full drain re-arms the calendar.
+//!
+//! Property-tested bit-equal against the kept-verbatim pre-PR5 heap
+//! queue ([`crate::sim::oracle`]) in `tests/property_sim.rs`, including
+//! adversarial same-timestamp bursts and the priority-lane contract.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Queue length at which a heap-mode queue first attempts to build a
+/// calendar (and the threshold a drained queue resets to).
+const WARMUP_LEN: usize = 64;
+/// Minimum bucket count of a live calendar.
+const MIN_BUCKETS: usize = 64;
+/// Maximum bucket count (bounds per-queue memory: 2^15 empty `Vec`s).
+const MAX_BUCKETS: usize = 1 << 15;
+/// Single-bucket occupancy that triggers the wholesale heap fallback
+/// (a bucket this dense means the width estimate lost to the
+/// distribution — same-timestamp bursts being the adversarial case).
+const OVERLOAD: usize = 512;
+
+/// One stored event with its total-order key.
+#[derive(Debug)]
+pub(crate) struct Entry<E> {
+    /// Absolute virtual time, seconds. Finite (enforced at schedule).
+    pub t: f64,
+    /// Tie-breaking sequence number, unique per queue across both the
+    /// priority and the normal lane.
+    pub seq: u64,
+    /// The payload.
+    pub ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap behavior inside `BinaryHeap`: earlier time
+        // first, then lower seq. total_cmp is NaN-safe (defense in depth;
+        // schedule() rejects non-finite times outright).
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// `(t, seq)` key comparison — the queue's total order, forward-facing
+/// (smaller = pops first).
+#[inline]
+fn key_lt(a: (f64, u64), b: (f64, u64)) -> bool {
+    match a.0.total_cmp(&b.0) {
+        Ordering::Less => true,
+        Ordering::Greater => false,
+        Ordering::Equal => a.1 < b.1,
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Heap,
+    Calendar,
+}
+
+/// The two-mode storage. See the module docs for the design; the public
+/// face is [`crate::sim::EventQueue`].
+#[derive(Debug)]
+pub(crate) struct CalendarQueue<E> {
+    /// Heap-mode storage; in calendar mode, the far-future overflow
+    /// (entries with `t >= year_end`).
+    heap: BinaryHeap<Entry<E>>,
+    /// The circular year of near-future buckets (calendar mode).
+    buckets: Vec<Vec<Entry<E>>>,
+    /// Seconds covered by one bucket (> 0 whenever mode == Calendar).
+    width: f64,
+    /// Time at bucket 0 of the current year.
+    year_start: f64,
+    /// `year_start + width * buckets.len()`; entries at or past this go
+    /// to the far heap.
+    year_end: f64,
+    /// First bucket that can hold the minimum. Invariant: in calendar
+    /// mode with entries pending, the cached `head` entry lives in
+    /// `buckets[cursor]` and no entry lives in an earlier bucket.
+    cursor: usize,
+    /// Entries currently in buckets (excludes the far heap).
+    near_len: usize,
+    /// Cached `(t, seq)` of the global minimum (calendar mode; `None`
+    /// exactly when the queue is empty).
+    head: Option<(f64, u64)>,
+    /// Position of the head entry within `buckets[cursor]` (valid only
+    /// while `head` is `Some`). Stable between head updates: bucket
+    /// inserts append, and nothing else moves entries inside a bucket —
+    /// pop can `swap_remove` directly instead of re-scanning for `seq`.
+    head_pos: usize,
+    mode: Mode,
+    /// Heap-mode length at which the next calendar build is attempted
+    /// (doubles after every failed/degenerate attempt).
+    grow_at: usize,
+    /// Total entries across both sides.
+    len: usize,
+}
+
+impl<E> CalendarQueue<E> {
+    pub(crate) fn new() -> Self {
+        CalendarQueue {
+            heap: BinaryHeap::new(),
+            buckets: Vec::new(),
+            width: 0.0,
+            year_start: 0.0,
+            year_end: 0.0,
+            cursor: 0,
+            near_len: 0,
+            head: None,
+            head_pos: 0,
+            mode: Mode::Heap,
+            grow_at: WARMUP_LEN,
+            len: 0,
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// `(t, seq)` of the next entry [`CalendarQueue::pop_entry`] would
+    /// yield, without removing it.
+    pub(crate) fn peek_key(&self) -> Option<(f64, u64)> {
+        match self.mode {
+            Mode::Heap => self.heap.peek().map(|e| (e.t, e.seq)),
+            Mode::Calendar => self.head,
+        }
+    }
+
+    pub(crate) fn push(&mut self, t: f64, seq: u64, ev: E) {
+        let entry = Entry { t, seq, ev };
+        self.len += 1;
+        match self.mode {
+            Mode::Heap => {
+                self.heap.push(entry);
+                if self.len >= self.grow_at {
+                    self.rebuild(self.len.next_power_of_two());
+                }
+            }
+            Mode::Calendar => self.push_calendar(entry),
+        }
+    }
+
+    fn push_calendar(&mut self, entry: Entry<E>) {
+        debug_assert!(self.width > 0.0);
+        if self.len == 1 {
+            // The queue was empty: re-anchor the year at this event so
+            // sparse phases never scan stale bucket ranges.
+            self.year_start = entry.t;
+            self.year_end = entry.t + self.width * self.buckets.len() as f64;
+            self.cursor = 0;
+            debug_assert!(self.head.is_none());
+            if !(self.year_end > self.year_start) {
+                // Width underflows at this time magnitude: heap until the
+                // next rebuild re-estimates it.
+                self.to_heap_mode();
+                self.heap.push(entry);
+                return;
+            }
+        }
+        if entry.t >= self.year_end {
+            // Far future: beyond the current year. Can never beat the
+            // head (the head is a near entry with t < year_end).
+            self.heap.push(entry);
+            return;
+        }
+        let idx = self.bucket_of(entry.t);
+        let key = (entry.t, entry.seq);
+        if idx < self.cursor {
+            // A push behind the cursor is by construction a new global
+            // minimum (its whole bucket range precedes the head's).
+            self.cursor = idx;
+        }
+        let beats_head = match self.head {
+            None => true,
+            Some(h) => key_lt(key, h),
+        };
+        self.buckets[idx].push(entry);
+        self.near_len += 1;
+        if beats_head {
+            // A beating push always targets the cursor bucket (a lower
+            // bucket regressed the cursor above; a higher one cannot
+            // hold a smaller time), so head stays in buckets[cursor].
+            self.head = Some(key);
+            self.head_pos = self.buckets[idx].len() - 1;
+        }
+        if self.buckets[idx].len() >= OVERLOAD {
+            // The width estimate lost to the distribution (e.g. a
+            // same-timestamp burst): O(bucket) pops would go quadratic.
+            // Fall back to the heap wholesale — order-preserving, since
+            // both sides order by the same (t, seq) key.
+            self.fall_back_to_heap();
+        } else if self.near_len > self.buckets.len() * 4 && self.buckets.len() < MAX_BUCKETS {
+            self.rebuild(self.buckets.len() * 2);
+        }
+    }
+
+    /// Bucket index for a near-future time. Monotone in `t` (floor of a
+    /// positive division), which is all ordering correctness needs: the
+    /// clamp at 0 only fires for the new-global-minimum push that lands
+    /// just before a freshly anchored year, and the clamp at `nb - 1`
+    /// only absorbs float rounding at the year's far edge.
+    fn bucket_of(&self, t: f64) -> usize {
+        let d = (t - self.year_start) / self.width;
+        if d <= 0.0 {
+            0
+        } else {
+            (d as usize).min(self.buckets.len() - 1)
+        }
+    }
+
+    /// Switch to heap mode (no entry movement — callers drain buckets
+    /// first or know them empty) and re-arm the growth threshold.
+    fn to_heap_mode(&mut self) {
+        debug_assert_eq!(self.near_len, 0);
+        self.head = None;
+        self.mode = Mode::Heap;
+        self.grow_at = (self.len * 2).max(WARMUP_LEN);
+    }
+
+    /// Move every bucketed entry into the heap and switch modes.
+    fn fall_back_to_heap(&mut self) {
+        for b in self.buckets.iter_mut() {
+            for e in b.drain(..) {
+                self.heap.push(e);
+            }
+        }
+        self.near_len = 0;
+        self.to_heap_mode();
+    }
+
+    /// Re-bucket everything: re-estimate the width from the live span,
+    /// re-anchor the year at the pending minimum, distribute into
+    /// `nb_target` buckets. Degenerate estimates (zero span, underflow
+    /// at the time magnitude) resolve to heap mode instead — which is
+    /// also how a heap-mode queue attempts its first calendar.
+    fn rebuild(&mut self, nb_target: usize) {
+        let mut all: Vec<Entry<E>> = Vec::with_capacity(self.len);
+        all.extend(self.heap.drain());
+        for b in self.buckets.iter_mut() {
+            all.append(b);
+        }
+        self.near_len = 0;
+        self.head = None;
+        debug_assert_eq!(all.len(), self.len);
+        let nb = nb_target.clamp(MIN_BUCKETS, MAX_BUCKETS);
+        let (mut tmin, mut tmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for e in &all {
+            tmin = tmin.min(e.t);
+            tmax = tmax.max(e.t);
+        }
+        // Target ~0.5 events per bucket over the observed span so the
+        // year comfortably covers it and cursor scans stay short.
+        let width = (tmax - tmin) / all.len().max(1) as f64 * 2.0;
+        let year_end = tmin + width * nb as f64;
+        if all.is_empty() || !width.is_finite() || !(year_end > tmin) {
+            for e in all {
+                self.heap.push(e);
+            }
+            self.to_heap_mode();
+            return;
+        }
+        self.buckets.resize_with(nb, Vec::new);
+        self.width = width;
+        self.year_start = tmin;
+        self.year_end = year_end;
+        self.cursor = 0;
+        self.mode = Mode::Calendar;
+        let mut all_iter = all.into_iter();
+        let mut overloaded = false;
+        for e in all_iter.by_ref() {
+            if e.t < self.year_end {
+                let key = (e.t, e.seq);
+                let beats_head = match self.head {
+                    None => true,
+                    Some(h) => key_lt(key, h),
+                };
+                let idx = self.bucket_of(e.t);
+                self.buckets[idx].push(e);
+                self.near_len += 1;
+                if beats_head {
+                    self.head = Some(key);
+                    self.head_pos = self.buckets[idx].len() - 1;
+                }
+                if self.buckets[idx].len() >= OVERLOAD {
+                    // The span-based width estimate lost to a skewed
+                    // distribution (dense cluster + far outliers): the
+                    // same guard the push and migration paths apply.
+                    overloaded = true;
+                    break;
+                }
+            } else {
+                self.heap.push(e);
+            }
+        }
+        if overloaded {
+            for e in all_iter {
+                self.heap.push(e);
+            }
+            self.fall_back_to_heap();
+            return;
+        }
+        // The minimum (t == tmin) always lands near, in bucket 0.
+        debug_assert!(self.near_len > 0);
+        debug_assert!(self.head.is_some());
+    }
+
+    /// Remove and return the `(t, seq)`-minimum entry.
+    pub(crate) fn pop_entry(&mut self) -> Option<Entry<E>> {
+        let e = match self.mode {
+            Mode::Heap => self.heap.pop(),
+            Mode::Calendar => {
+                let (ht, hseq) = self.head?;
+                let b = &mut self.buckets[self.cursor];
+                // head_pos is maintained at every head update, so the pop
+                // needs no bucket re-scan to find its entry.
+                let e = b.swap_remove(self.head_pos);
+                debug_assert_eq!(e.seq, hseq, "head position out of sync");
+                debug_assert_eq!(e.t.to_bits(), ht.to_bits());
+                self.near_len -= 1;
+                self.recompute_head();
+                Some(e)
+            }
+        };
+        if e.is_some() {
+            self.len -= 1;
+            if self.len == 0 {
+                if self.mode == Mode::Heap {
+                    // A full drain re-arms the calendar after a fallback.
+                    self.grow_at = WARMUP_LEN;
+                }
+            } else if self.mode == Mode::Calendar
+                && self.len * 4 < self.buckets.len()
+                && self.buckets.len() > MIN_BUCKETS
+            {
+                // Sparse tail: shrink so empty-bucket scans stay bounded.
+                self.rebuild(self.buckets.len() / 2);
+            }
+        }
+        e
+    }
+
+    /// Re-establish the head cache after a pop: scan forward from the
+    /// cursor; when the year is exhausted, anchor a new year at the far
+    /// heap's minimum and migrate that year's entries into buckets.
+    fn recompute_head(&mut self) {
+        loop {
+            if self.near_len == 0 {
+                // Nothing near: skip the empty-bucket walk entirely and
+                // go straight to migration (sparse tails would otherwise
+                // pay a full-year scan per pop).
+                self.cursor = self.buckets.len();
+            }
+            while self.cursor < self.buckets.len() {
+                let b = &self.buckets[self.cursor];
+                if let Some(first) = b.first() {
+                    let mut best = (first.t, first.seq);
+                    let mut best_pos = 0;
+                    for (i, e) in b.iter().enumerate().skip(1) {
+                        let k = (e.t, e.seq);
+                        if key_lt(k, best) {
+                            best = k;
+                            best_pos = i;
+                        }
+                    }
+                    self.head = Some(best);
+                    self.head_pos = best_pos;
+                    return;
+                }
+                self.cursor += 1;
+            }
+            debug_assert_eq!(self.near_len, 0);
+            let Some(far_min) = self.heap.peek().map(|e| e.t) else {
+                self.head = None;
+                return;
+            };
+            self.year_start = far_min;
+            self.year_end = far_min + self.width * self.buckets.len() as f64;
+            self.cursor = 0;
+            if !(self.year_end > self.year_start) {
+                // Year span underflows at this magnitude: the calendar
+                // cannot advance — finish on the heap (order-preserving).
+                self.to_heap_mode();
+                return;
+            }
+            while let Some(e) = self.heap.peek() {
+                if e.t >= self.year_end {
+                    break;
+                }
+                let e = self.heap.pop().expect("peeked");
+                let idx = self.bucket_of(e.t);
+                if self.buckets[idx].len() + 1 >= OVERLOAD {
+                    // Migration-side overload guard: a dense
+                    // same-timestamp cluster parked in a future year
+                    // would land in one bucket here, and a pure drain
+                    // never passes through push_calendar's guard — so
+                    // fall back to the heap from the migration too.
+                    self.buckets[idx].push(e);
+                    self.near_len += 1;
+                    self.fall_back_to_heap();
+                    return;
+                }
+                self.buckets[idx].push(e);
+                self.near_len += 1;
+            }
+            // The far minimum migrated into bucket 0; loop to find it.
+            debug_assert!(self.near_len > 0);
+        }
+    }
+
+    /// Drop every entry, keeping allocations for reuse.
+    pub(crate) fn clear(&mut self) {
+        self.heap.clear();
+        for b in self.buckets.iter_mut() {
+            b.clear();
+        }
+        self.near_len = 0;
+        self.head = None;
+        self.len = 0;
+        self.cursor = 0;
+        if self.mode == Mode::Heap {
+            self.grow_at = WARMUP_LEN;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain_keys(q: &mut CalendarQueue<usize>) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        while let Some(e) = q.pop_entry() {
+            out.push((e.t.to_bits(), e.seq));
+        }
+        out
+    }
+
+    #[test]
+    fn calendar_mode_engages_and_orders_exactly() {
+        // Well over WARMUP_LEN spread events: the calendar engages, and
+        // pops come out in exact (t, seq) order.
+        let mut q = CalendarQueue::new();
+        let mut expect: Vec<(u64, u64)> = Vec::new();
+        for i in 0..1000u64 {
+            let t = ((i * 7919) % 1000) as f64 * 0.01;
+            q.push(t, i, i as usize);
+            expect.push((t.to_bits(), i));
+        }
+        assert_eq!(q.mode, Mode::Calendar, "large spread queue must calendarize");
+        expect.sort_by(|a, b| {
+            f64::from_bits(a.0)
+                .total_cmp(&f64::from_bits(b.0))
+                .then(a.1.cmp(&b.1))
+        });
+        assert_eq!(drain_keys(&mut q), expect);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn same_timestamp_burst_falls_back_to_heap_fifo() {
+        let mut q = CalendarQueue::new();
+        for i in 0..2000u64 {
+            q.push(5.0, i, i as usize);
+        }
+        // Zero span defeats every width estimate: heap mode, exact FIFO.
+        assert_eq!(q.mode, Mode::Heap);
+        let popped = drain_keys(&mut q);
+        assert_eq!(popped.len(), 2000);
+        for (i, (_, seq)) in popped.iter().enumerate() {
+            assert_eq!(*seq, i as u64);
+        }
+        // A full drain re-arms the calendar for the next fill.
+        assert_eq!(q.grow_at, WARMUP_LEN);
+    }
+
+    #[test]
+    fn overload_bucket_mid_flight_falls_back_without_reorder() {
+        // Spread events first (calendar engages), then a dense burst at
+        // one timestamp: the overloaded bucket triggers the wholesale
+        // fallback and the merged order is still exact.
+        let mut q = CalendarQueue::new();
+        let mut seq = 0u64;
+        let mut expect = Vec::new();
+        for i in 0..200 {
+            let t = i as f64 * 0.5;
+            q.push(t, seq, 0);
+            expect.push((t.to_bits(), seq));
+            seq += 1;
+        }
+        assert_eq!(q.mode, Mode::Calendar);
+        for _ in 0..(OVERLOAD + 10) {
+            q.push(42.25, seq, 0);
+            expect.push((42.25f64.to_bits(), seq));
+            seq += 1;
+        }
+        assert_eq!(q.mode, Mode::Heap, "overloaded bucket must fall back");
+        expect.sort_by(|a, b| {
+            f64::from_bits(a.0)
+                .total_cmp(&f64::from_bits(b.0))
+                .then(a.1.cmp(&b.1))
+        });
+        assert_eq!(drain_keys(&mut q), expect);
+    }
+
+    #[test]
+    fn far_year_same_timestamp_cluster_falls_back_at_migration() {
+        // A dense same-timestamp cluster parked beyond the active year:
+        // the pure drain path (no pushes) must hit the migration-side
+        // overload guard instead of going quadratic in one bucket, and
+        // order must survive the fallback.
+        let mut q = CalendarQueue::new();
+        let mut expect = Vec::new();
+        for i in 0..200u64 {
+            let t = i as f64 * 0.5;
+            q.push(t, i, 0);
+            expect.push((t.to_bits(), i));
+        }
+        assert_eq!(q.mode, Mode::Calendar);
+        // Far burst: one timestamp, well past the year, > OVERLOAD deep.
+        // year_end here is ~< 1e6, so these park in the far heap.
+        for i in 200..(200 + OVERLOAD as u64 + 100) {
+            q.push(1e6, i, 0);
+            expect.push((1e6f64.to_bits(), i));
+        }
+        let popped = drain_keys(&mut q);
+        expect.sort_by(|a, b| {
+            f64::from_bits(a.0)
+                .total_cmp(&f64::from_bits(b.0))
+                .then(a.1.cmp(&b.1))
+        });
+        assert_eq!(popped, expect);
+    }
+
+    #[test]
+    fn far_year_migration_preserves_order() {
+        // Two dense clusters years apart: the second waits in the far
+        // heap and migrates when the first drains.
+        let mut q = CalendarQueue::new();
+        let mut expect = Vec::new();
+        for i in 0..300u64 {
+            let t = i as f64 * 0.001; // ~0.3 s cluster
+            q.push(t, i, 0);
+            expect.push((t.to_bits(), i));
+        }
+        for i in 300..600u64 {
+            let t = 1e6 + (i - 300) as f64 * 0.001;
+            q.push(t, i, 0);
+            expect.push((t.to_bits(), i));
+        }
+        expect.sort_by(|a, b| {
+            f64::from_bits(a.0)
+                .total_cmp(&f64::from_bits(b.0))
+                .then(a.1.cmp(&b.1))
+        });
+        assert_eq!(drain_keys(&mut q), expect);
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_head_exact() {
+        // Pops interleaved with pushes that land behind the cursor
+        // (the re-anchored year + new-minimum path).
+        let mut q = CalendarQueue::new();
+        for i in 0..128u64 {
+            q.push(10.0 + i as f64, i, 0);
+        }
+        assert_eq!(q.mode, Mode::Calendar);
+        let e = q.pop_entry().unwrap();
+        assert_eq!(e.t, 10.0);
+        // Push at exactly the popped time (== "now"): new global min.
+        q.push(10.0, 1000, 0);
+        assert_eq!(q.peek_key(), Some((10.0, 1000)));
+        let e = q.pop_entry().unwrap();
+        assert_eq!((e.t, e.seq), (10.0, 1000));
+        assert_eq!(q.peek_key(), Some((11.0, 1)));
+    }
+
+    #[test]
+    fn rebuild_with_skewed_span_falls_back_instead_of_packing_one_bucket() {
+        // A dense sub-millisecond cluster plus one far-future outlier:
+        // the span-based width estimate would pack the whole cluster
+        // into bucket 0 at the growth rebuild — the distribution loop's
+        // overload guard must fall back to the heap instead, and order
+        // must survive.
+        let mut q = CalendarQueue::new();
+        let mut expect = Vec::new();
+        q.push(1e7, 0, 0); // the outlier that poisons the span
+        expect.push((1e7f64.to_bits(), 0u64));
+        for i in 1..2000u64 {
+            let t = i as f64 * 1e-6;
+            q.push(t, i, 0);
+            expect.push((t.to_bits(), i));
+        }
+        assert_eq!(
+            q.mode,
+            Mode::Heap,
+            "skewed rebuild must fall back, not bucket-pack"
+        );
+        expect.sort_by(|a, b| {
+            f64::from_bits(a.0)
+                .total_cmp(&f64::from_bits(b.0))
+                .then(a.1.cmp(&b.1))
+        });
+        assert_eq!(drain_keys(&mut q), expect);
+    }
+
+    #[test]
+    fn shrink_on_sparse_tail_keeps_order() {
+        let mut q = CalendarQueue::new();
+        for i in 0..4096u64 {
+            q.push(i as f64 * 0.01, i, 0);
+        }
+        assert_eq!(q.mode, Mode::Calendar);
+        let nb_full = q.buckets.len();
+        let mut last = (f64::NEG_INFINITY, 0u64);
+        for _ in 0..4090 {
+            let e = q.pop_entry().unwrap();
+            assert!(
+                key_lt(last, (e.t, e.seq)) || last.0 == f64::NEG_INFINITY,
+                "order violated"
+            );
+            last = (e.t, e.seq);
+        }
+        assert!(
+            q.mode == Mode::Heap || q.buckets.len() < nb_full,
+            "sparse tail must shrink the year (or fall back)"
+        );
+        assert_eq!(q.len(), 6);
+        drain_keys(&mut q);
+        assert!(q.is_empty());
+    }
+}

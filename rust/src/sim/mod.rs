@@ -1,14 +1,35 @@
 //! Discrete-event simulation core: a stable-ordered event queue over
-//! virtual time.
+//! virtual time, plus the cross-engine scheduling primitives the cluster
+//! loop builds on.
 //!
 //! Trace experiments replay 30-minute workloads in milliseconds of wall
 //! clock by driving the *identical* coordinator/controller code under
 //! virtual time (DESIGN.md §1). Events at equal timestamps pop in
 //! insertion order (a monotone sequence number breaks ties), which keeps
 //! replays bit-deterministic.
+//!
+//! Layout:
+//! * [`EventQueue`] — the queue facade: ordering contract, sequence
+//!   counters, the priority lane, virtual `now`. Storage lives in the
+//!   [`calendar`](self) backend (hierarchical calendar/bucket queue with
+//!   an automatic heap fallback; see `calendar.rs`), so large
+//!   pre-scheduled replays pay O(1)-ish per event instead of O(log n)
+//!   heap sifts — bit-exact either way.
+//! * [`sched::SourceHeap`] — index min-heap over per-source next-event
+//!   times: O(log N) cross-engine scheduling for the cluster loop.
+//! * [`earliest`] — the pre-PR5 linear scan, kept verbatim as the
+//!   [`SourceHeap`](sched::SourceHeap) oracle (and for one-shot scans
+//!   where N is tiny).
+//! * [`oracle::OracleEventQueue`] — the pre-PR5 heap queue, kept
+//!   verbatim as the calendar queue's bit-exactness oracle.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+mod calendar;
+pub mod oracle;
+pub mod sched;
+
+pub use sched::SourceHeap;
+
+use calendar::CalendarQueue;
 
 /// Sequence-number base for normally scheduled events. Priority events
 /// ([`EventQueue::schedule_priority`]) draw from `0..PRIORITY_SEQ_BASE`, so
@@ -20,9 +41,13 @@ use std::collections::BinaryHeap;
 const PRIORITY_SEQ_BASE: u64 = 1 << 63;
 
 /// An event queue over f64 seconds with FIFO tie-breaking.
+///
+/// The total order is `(t, seq)` — `total_cmp` on time, then the unique
+/// sequence number — and every operation (pop, peek, drain) observes it
+/// exactly, independent of the storage mode the backend is in.
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    q: CalendarQueue<E>,
     seq: u64,
     prio_seq: u64,
     now: f64,
@@ -30,43 +55,11 @@ pub struct EventQueue<E> {
     pub popped: u64,
 }
 
-#[derive(Debug)]
-struct Entry<E> {
-    t: f64,
-    seq: u64,
-    ev: E,
-}
-
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl<E> Eq for Entry<E> {}
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for min-heap: earlier time first, then lower seq.
-        // total_cmp is NaN-safe: the old partial_cmp(..).unwrap_or(Equal)
-        // silently corrupted heap order if a NaN ever reached the heap
-        // (schedule() now rejects non-finite times outright, so this is
-        // defense in depth).
-        other
-            .t
-            .total_cmp(&self.t)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
 impl<E> EventQueue<E> {
     /// An empty queue at virtual time 0.
     pub fn new() -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            q: CalendarQueue::new(),
             seq: PRIORITY_SEQ_BASE,
             prio_seq: 0,
             now: 0.0,
@@ -83,7 +76,7 @@ impl<E> EventQueue<E> {
     ///
     /// Non-finite timestamps are rejected loudly: a NaN used to be clamped
     /// to `now` by the `max` below and +inf would park forever in the
-    /// heap — both silently corrupt a replay, so they are programming
+    /// queue — both silently corrupt a replay, so they are programming
     /// errors, not schedulable states.
     pub fn schedule(&mut self, t: f64, ev: E) {
         let seq = self.seq;
@@ -109,7 +102,7 @@ impl<E> EventQueue<E> {
             self.now
         );
         let t = t.max(self.now);
-        self.heap.push(Entry { t, seq, ev });
+        self.q.push(t, seq, ev);
     }
 
     /// Schedule an event `dt` seconds from now (`dt` must be finite; a
@@ -121,7 +114,7 @@ impl<E> EventQueue<E> {
 
     /// Pop the next event, advancing virtual time.
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        self.heap.pop().map(|e| {
+        self.q.pop_entry().map(|e| {
             self.now = e.t;
             self.popped += 1;
             (e.t, e.ev)
@@ -130,17 +123,17 @@ impl<E> EventQueue<E> {
 
     /// Time of the earliest pending event without popping it.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.t)
+        self.q.peek_key().map(|(t, _)| t)
     }
 
     /// Number of pending events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.q.len()
     }
 
     /// No events pending?
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.q.is_empty()
     }
 
     /// Drop every pending event, keeping virtual time and the sequence
@@ -149,18 +142,28 @@ impl<E> EventQueue<E> {
     /// after recovery draws fresh (higher) sequence numbers, so a replay
     /// with the identical fault schedule stays bit-deterministic.
     pub fn clear(&mut self) {
-        self.heap.clear();
+        self.q.clear();
     }
 
-    /// Empty the queue *without* advancing virtual time, returning every
+    /// Empty the queue *without* advancing virtual time, visiting every
     /// pending event in exactly the order [`EventQueue::pop`] would have
-    /// yielded it (time, then sequence). The chaos layer uses this to
-    /// salvage still-pending arrivals from a failing node while letting
-    /// its in-flight completions and ticks die.
+    /// yielded it (time, then sequence). The chaos layer salvages a
+    /// failing node's still-pending arrivals through this; unlike the
+    /// old `drain_sorted`, it walks the calendar's bucket order directly
+    /// — no intermediate `Vec`, no global sort (§Perf).
+    pub fn drain_each(&mut self, mut f: impl FnMut(f64, E)) {
+        while let Some(e) = self.q.pop_entry() {
+            f(e.t, e.ev);
+        }
+    }
+
+    /// [`EventQueue::drain_each`], collected into a `Vec` — kept for
+    /// call sites (and tests) that want the list; the allocation-free
+    /// fault path uses `drain_each` directly.
     pub fn drain_sorted(&mut self) -> Vec<(f64, E)> {
-        let mut entries: Vec<Entry<E>> = self.heap.drain().collect();
-        entries.sort_by(|a, b| a.t.total_cmp(&b.t).then_with(|| a.seq.cmp(&b.seq)));
-        entries.into_iter().map(|e| (e.t, e.ev)).collect()
+        let mut out = Vec::with_capacity(self.len());
+        self.drain_each(|t, ev| out.push((t, ev)));
+        out
     }
 }
 
@@ -174,6 +177,11 @@ impl<E> Default for EventQueue<E> {
 /// event sources (`None` entries are sources with nothing pending). Ties
 /// break toward the lowest index, so interleaving several engines on one
 /// virtual clock is deterministic.
+///
+/// Kept **verbatim** as the [`SourceHeap`] oracle: the production cluster
+/// loop re-keys a heap in O(log N) instead of re-scanning, and the two
+/// must agree bit-for-bit (property-tested, plus the end-to-end cluster
+/// scan-oracle suite).
 pub fn earliest(times: &[Option<f64>]) -> Option<usize> {
     let mut best: Option<(f64, usize)> = None;
     for (i, t) in times.iter().enumerate() {
@@ -329,6 +337,73 @@ mod tests {
         assert_eq!(drained, popped);
         assert_eq!(q.now(), 0.0, "drain must not advance virtual time");
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_each_visits_pop_order_at_calendar_scale() {
+        // Enough spread events to engage the calendar backend: the
+        // callback drain must visit the identical (t, seq) pop order
+        // without advancing time or the popped counter.
+        let mk = || {
+            let mut q = EventQueue::new();
+            for i in 0..500u64 {
+                let t = ((i * 131) % 500) as f64 * 0.02;
+                if i % 5 == 0 {
+                    q.schedule_priority(t, i);
+                } else {
+                    q.schedule(t, i);
+                }
+            }
+            q
+        };
+        let popped: Vec<(u64, u64)> = {
+            let mut q = mk();
+            std::iter::from_fn(move || q.pop())
+                .map(|(t, e)| (t.to_bits(), e))
+                .collect()
+        };
+        let mut q = mk();
+        let mut drained = Vec::new();
+        q.drain_each(|t, e| drained.push((t.to_bits(), e)));
+        assert_eq!(drained, popped);
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.popped, 0, "drain must not count as processing");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn large_prescheduled_replay_pops_exactly_sorted() {
+        // The replay shape: thousands of arrivals pre-scheduled through
+        // the priority lane, ticks layered on top — the calendar path.
+        let mut q = EventQueue::new();
+        let mut expect: Vec<(u64, u64, u64)> = Vec::new(); // (t bits, lane, i)
+        for i in 0..5000u64 {
+            let t = ((i * 2654435761) % 100000) as f64 * 1e-3;
+            q.schedule_priority(t, i);
+            expect.push((t.to_bits(), 0, i));
+        }
+        for i in 0..500u64 {
+            let t = (i as f64) * 0.2;
+            q.schedule(t, 100_000 + i);
+            expect.push((t.to_bits(), 1, i));
+        }
+        expect.sort_by(|a, b| {
+            f64::from_bits(a.0)
+                .total_cmp(&f64::from_bits(b.0))
+                .then(a.1.cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        let mut prev_t = f64::NEG_INFINITY;
+        for (tb, lane, i) in expect {
+            let (t, ev) = q.pop().expect("queue drained early");
+            assert_eq!(t.to_bits(), tb);
+            assert!(t >= prev_t);
+            prev_t = t;
+            let want = if lane == 0 { i } else { 100_000 + i };
+            assert_eq!(ev, want);
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.popped, 5500);
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! The pre-PR5 binary-heap event queue, kept **verbatim** as the
+//! bit-exactness oracle for the calendar/bucket queue
+//! (`tests/property_sim.rs`), the same pattern as PR 4's
+//! `SortedVecOracle` for the Fenwick sliding-P95 window.
+//!
+//! Do not "improve" this type: its value is that it is the old
+//! implementation, byte for byte where it matters — the `(t, seq)`
+//! ordering semantics, the priority-lane sequence split, the clamp/assert
+//! behavior of `schedule`, and the sort-based `drain_sorted`.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Sequence-number base for normally scheduled events (see
+/// [`crate::sim::EventQueue`] — identical split).
+const PRIORITY_SEQ_BASE: u64 = 1 << 63;
+
+/// The pre-PR5 event queue: a plain `BinaryHeap` over `(t, seq)` with
+/// FIFO tie-breaking. Oracle only — production code uses
+/// [`crate::sim::EventQueue`].
+#[derive(Debug)]
+pub struct OracleEventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    prio_seq: u64,
+    now: f64,
+    /// Total events popped so far.
+    pub popped: u64,
+}
+
+#[derive(Debug)]
+struct Entry<E> {
+    t: f64,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap: earlier time first, then lower seq.
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<E> OracleEventQueue<E> {
+    /// An empty queue at virtual time 0.
+    pub fn new() -> Self {
+        OracleEventQueue {
+            heap: BinaryHeap::new(),
+            seq: PRIORITY_SEQ_BASE,
+            prio_seq: 0,
+            now: 0.0,
+            popped: 0,
+        }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule an event at absolute time `t` (>= now, finite).
+    pub fn schedule(&mut self, t: f64, ev: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.push_at(t, seq, ev);
+    }
+
+    /// Schedule through the priority lane (beats equal-time normal
+    /// events, FIFO among priority events).
+    pub fn schedule_priority(&mut self, t: f64, ev: E) {
+        let seq = self.prio_seq;
+        self.prio_seq += 1;
+        debug_assert!(self.prio_seq < PRIORITY_SEQ_BASE);
+        self.push_at(t, seq, ev);
+    }
+
+    fn push_at(&mut self, t: f64, seq: u64, ev: E) {
+        assert!(t.is_finite(), "non-finite event time {t} (now={})", self.now);
+        debug_assert!(
+            t + 1e-9 >= self.now,
+            "scheduling into the past: t={t} now={}",
+            self.now
+        );
+        let t = t.max(self.now);
+        self.heap.push(Entry { t, seq, ev });
+    }
+
+    /// Pop the next event, advancing virtual time.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| {
+            self.now = e.t;
+            self.popped += 1;
+            (e.t, e.ev)
+        })
+    }
+
+    /// Time of the earliest pending event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.t)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// No events pending?
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Empty the queue without advancing virtual time, in pop order —
+    /// the pre-PR5 implementation: drain the heap, then sort.
+    pub fn drain_sorted(&mut self) -> Vec<(f64, E)> {
+        let mut entries: Vec<Entry<E>> = self.heap.drain().collect();
+        entries.sort_by(|a, b| a.t.total_cmp(&b.t).then_with(|| a.seq.cmp(&b.seq)));
+        entries.into_iter().map(|e| (e.t, e.ev)).collect()
+    }
+}
+
+impl<E> Default for OracleEventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}

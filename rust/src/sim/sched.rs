@@ -1,0 +1,212 @@
+//! Cross-source scheduling: an index min-heap over per-source next-event
+//! times, the O(log N) replacement for the cluster loop's per-event
+//! linear scan ([`crate::sim::earliest`], kept as the oracle).
+//!
+//! The cluster event loop interleaves N node engines on one virtual
+//! clock. Pre-PR5 it re-read every engine's `peek_time()` and linearly
+//! scanned for the minimum on **every** event — O(N) per event, the
+//! dominant cost at 32+ nodes. [`SourceHeap`] keeps each source's
+//! next-event time in a positioned binary heap: reading the minimum is
+//! O(1) and re-keying one source after it steps (or is injected into,
+//! failed, recovered, or re-arbitrated) is O(log N).
+//!
+//! Ordering is **bit-compatible** with [`crate::sim::earliest`]: the
+//! comparison uses plain `<`/`==` on the (never-NaN) keys with ties
+//! broken toward the lowest source index — so `-0.0` and `+0.0` tie
+//! exactly like the linear scan, and the interleave order of a cluster
+//! run is unchanged down to the bit (property-tested, plus an
+//! end-to-end cluster equivalence suite against the scan-oracle loop).
+
+/// Sentinel position for "source not currently enqueued".
+const ABSENT: u32 = u32::MAX;
+
+/// An index min-heap over `n` event sources keyed by next-event time.
+///
+/// `None` keys (source has nothing pending) are represented by absence
+/// from the heap. Keys must never be NaN (engine event times are finite
+/// by construction; debug-asserted here).
+#[derive(Debug, Clone)]
+pub struct SourceHeap {
+    /// Heap of source ids, min at index 0, ordered by `(key, id)`.
+    heap: Vec<u32>,
+    /// Source id → position in `heap`, [`ABSENT`] when not enqueued.
+    pos: Vec<u32>,
+    /// Source id → current key (meaningful only while enqueued).
+    key: Vec<f64>,
+}
+
+impl SourceHeap {
+    /// A heap over `n` sources, all initially without pending events.
+    pub fn new(n: usize) -> SourceHeap {
+        assert!(n < ABSENT as usize, "source count overflows the id space");
+        SourceHeap {
+            heap: Vec::with_capacity(n),
+            pos: vec![ABSENT; n],
+            key: vec![0.0; n],
+        }
+    }
+
+    /// Number of sources currently holding a pending time.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// No source has anything pending?
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// The earliest source and its key, ties toward the lowest source
+    /// index — exactly [`crate::sim::earliest`]'s answer over the same
+    /// keys. O(1).
+    pub fn min(&self) -> Option<(usize, f64)> {
+        self.heap.first().map(|&i| (i as usize, self.key[i as usize]))
+    }
+
+    /// Set source `i`'s next-event time (`None` = nothing pending).
+    /// Insert, decrease-key, increase-key and remove are all this one
+    /// entry point; O(log N).
+    pub fn set(&mut self, i: usize, t: Option<f64>) {
+        match t {
+            Some(t) => {
+                debug_assert!(!t.is_nan(), "NaN pending time from source {i}");
+                self.key[i] = t;
+                if self.pos[i] == ABSENT {
+                    self.pos[i] = self.heap.len() as u32;
+                    self.heap.push(i as u32);
+                    self.sift_up(self.heap.len() - 1);
+                } else {
+                    // Re-key in place: one of the two sifts is a no-op.
+                    let p = self.pos[i] as usize;
+                    self.sift_up(p);
+                    self.sift_down(self.pos[i] as usize);
+                }
+            }
+            None => self.remove(i),
+        }
+    }
+
+    fn remove(&mut self, i: usize) {
+        let p = self.pos[i];
+        if p == ABSENT {
+            return;
+        }
+        let p = p as usize;
+        self.heap.swap_remove(p);
+        self.pos[i] = ABSENT;
+        if p < self.heap.len() {
+            // The former last element landed in the hole: restore order
+            // in whichever direction it violates.
+            let moved = self.heap[p] as usize;
+            self.pos[moved] = p as u32;
+            self.sift_up(p);
+            self.sift_down(self.pos[moved] as usize);
+        }
+    }
+
+    /// `(key, id)` strict order — `<`/`==` key semantics (keys are never
+    /// NaN), matching the linear-scan oracle including `±0.0` ties.
+    #[inline]
+    fn less(&self, a: usize, b: usize) -> bool {
+        let (ka, kb) = (self.key[a], self.key[b]);
+        ka < kb || (ka == kb && a < b)
+    }
+
+    #[inline]
+    fn swap_nodes(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a] as usize] = a as u32;
+        self.pos[self.heap[b] as usize] = b as u32;
+    }
+
+    fn sift_up(&mut self, mut p: usize) {
+        while p > 0 {
+            let parent = (p - 1) / 2;
+            if self.less(self.heap[p] as usize, self.heap[parent] as usize) {
+                self.swap_nodes(p, parent);
+                p = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut p: usize) {
+        loop {
+            let l = 2 * p + 1;
+            let r = 2 * p + 2;
+            let mut m = p;
+            if l < self.heap.len() && self.less(self.heap[l] as usize, self.heap[m] as usize) {
+                m = l;
+            }
+            if r < self.heap.len() && self.less(self.heap[r] as usize, self.heap[m] as usize) {
+                m = r;
+            }
+            if m == p {
+                return;
+            }
+            self.swap_nodes(p, m);
+            p = m;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::earliest;
+
+    #[test]
+    fn matches_earliest_on_basic_shapes() {
+        let mut h = SourceHeap::new(4);
+        assert_eq!(h.min(), None);
+        h.set(2, Some(3.0));
+        h.set(0, Some(5.0));
+        assert_eq!(h.min(), Some((2, 3.0)));
+        h.set(3, Some(3.0)); // equal key: lower index wins
+        assert_eq!(h.min(), Some((2, 3.0)));
+        h.set(1, Some(3.0));
+        assert_eq!(h.min(), Some((1, 3.0)));
+        h.set(1, None);
+        assert_eq!(h.min(), Some((2, 3.0)));
+        h.set(2, Some(9.0)); // increase-key
+        assert_eq!(h.min(), Some((3, 3.0)));
+        h.set(0, Some(1.0)); // decrease-key
+        assert_eq!(h.min(), Some((0, 1.0)));
+        let times = [Some(1.0), None, Some(9.0), Some(3.0)];
+        assert_eq!(earliest(&times), Some(0));
+    }
+
+    #[test]
+    fn remove_everything_then_refill() {
+        let mut h = SourceHeap::new(3);
+        for i in 0..3 {
+            h.set(i, Some(i as f64));
+        }
+        assert_eq!(h.len(), 3);
+        for i in 0..3 {
+            h.set(i, None);
+        }
+        assert!(h.is_empty());
+        h.set(2, Some(0.5));
+        assert_eq!(h.min(), Some((2, 0.5)));
+        // Removing an absent source is a no-op.
+        h.set(0, None);
+        assert_eq!(h.min(), Some((2, 0.5)));
+    }
+
+    #[test]
+    fn equal_time_ties_break_to_lowest_index_like_earliest() {
+        let mut h = SourceHeap::new(8);
+        // Insert in reverse so the heap cannot get the answer "for free".
+        for i in (0..8).rev() {
+            h.set(i, Some(7.25));
+        }
+        assert_eq!(h.min(), Some((0, 7.25)));
+        let times = vec![Some(7.25); 8];
+        assert_eq!(earliest(&times), Some(0));
+        h.set(0, None);
+        h.set(1, None);
+        assert_eq!(h.min(), Some((2, 7.25)));
+    }
+}

@@ -1,0 +1,124 @@
+//! A counting global allocator for the memory-footprint bench mode.
+//!
+//! [`CountingAlloc`] wraps the system allocator and keeps three relaxed
+//! atomic counters: total allocation calls, current live bytes, and the
+//! high-water mark of live bytes. The `greenllm` binary installs it as
+//! the `#[global_allocator]` **only** under the `count-alloc` cargo
+//! feature (counting every allocation costs a few percent of wall time,
+//! so it must never contaminate the wall-clock bench numbers); this
+//! module itself always compiles, which keeps the code linted and
+//! documented on every build.
+//!
+//! `greenllm bench --mem` (see `bench::perf::run_bench_mem`) replays the
+//! bench scenarios once each and reports the allocation-call delta and
+//! peak live bytes per scenario. Probe [`active`] to find out whether
+//! the counting allocator is actually installed in this process.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static CURRENT: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
+
+/// System-allocator wrapper that counts calls and tracks live/peak
+/// bytes. Install with `#[global_allocator]` (the binary does, behind
+/// the `count-alloc` feature).
+pub struct CountingAlloc;
+
+// SAFETY: defers every allocation verbatim to `System`; the counters are
+// plain relaxed atomics with no allocation of their own.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            ALLOCS.fetch_add(1, Relaxed);
+            let live = CURRENT.fetch_add(layout.size() as u64, Relaxed) + layout.size() as u64;
+            PEAK.fetch_max(live, Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        CURRENT.fetch_sub(layout.size() as u64, Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            ALLOCS.fetch_add(1, Relaxed);
+            // Live-byte delta in two's complement: grow adds, shrink
+            // wraps around to a subtraction.
+            let delta = (new_size as u64).wrapping_sub(layout.size() as u64);
+            let live = CURRENT.fetch_add(delta, Relaxed).wrapping_add(delta);
+            if new_size > layout.size() {
+                PEAK.fetch_max(live, Relaxed);
+            }
+        }
+        p
+    }
+}
+
+/// A snapshot of the allocator counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocStats {
+    /// Allocation calls (alloc + realloc) since process start.
+    pub allocations: u64,
+    /// Bytes currently live.
+    pub current_bytes: u64,
+    /// High-water mark of live bytes since process start (or the last
+    /// [`reset_peak`]).
+    pub peak_bytes: u64,
+}
+
+/// Read the counters. All zeros (and [`active`] == false) when the
+/// counting allocator is not installed.
+pub fn stats() -> AllocStats {
+    AllocStats {
+        allocations: ALLOCS.load(Relaxed),
+        current_bytes: CURRENT.load(Relaxed),
+        peak_bytes: PEAK.load(Relaxed),
+    }
+}
+
+/// Re-arm the peak tracker at the current live level, so the next
+/// [`stats`] reports the peak *of the region being measured*. Intended
+/// for single-threaded measurement harnesses; concurrent allocations
+/// between the load and the store are merely attributed to the next
+/// region.
+pub fn reset_peak() {
+    PEAK.store(CURRENT.load(Relaxed), Relaxed);
+}
+
+/// True when [`CountingAlloc`] is actually this process's global
+/// allocator (i.e. the binary was built with `--features count-alloc`),
+/// detected by probing whether a heap allocation moves the counters.
+pub fn active() -> bool {
+    let before = ALLOCS.load(Relaxed);
+    drop(std::hint::black_box(vec![0u8; 64]));
+    ALLOCS.load(Relaxed) > before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_readable_and_consistent() {
+        // Unit tests run under the default allocator (the lib never
+        // installs CountingAlloc), so the counters just hold steady —
+        // but the API must behave.
+        if active() {
+            // Installed (a custom harness): counters are moving; exact
+            // peak-vs-live relations race with other test threads.
+            assert!(stats().allocations > 0);
+        } else {
+            // Not installed (the normal test build): counters are inert.
+            reset_peak();
+            let s = stats();
+            assert_eq!(s.allocations, 0);
+            assert_eq!(s.peak_bytes, 0);
+        }
+    }
+}

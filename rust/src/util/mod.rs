@@ -5,6 +5,7 @@
 //! `xla` crate and its transitive deps (DESIGN.md §8).
 
 pub mod cli;
+pub mod count_alloc;
 pub mod error;
 pub mod json;
 pub mod polyfit;

@@ -434,3 +434,110 @@ fn cluster_acceptance_greenllm_beats_defaultnv_at_equal_nodes() {
         assert!(green.tbt_pass_rate > 0.9, "{lb:?}");
     }
 }
+
+// ---------------------------------------------------------------------------
+// PR 5: the O(log N) cross-engine scheduler vs the kept-verbatim
+// linear-scan oracle.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn heap_scheduler_bit_equal_with_scan_oracle_property() {
+    // The production cluster loop picks the next engine from a SourceHeap
+    // re-keyed incrementally (O(log N) per event); the oracle loop re-reads
+    // every engine and linearly scans, exactly like pre-PR5. Random
+    // cluster shapes — balancers, node counts, fault plans, power caps,
+    // arbiters — must interleave BIT-identically: same event order implies
+    // the same energy bits, event counts, assignment and chaos totals. A
+    // divergence here means an engine's next-event key was not refreshed
+    // after something mutated its queue (inject/fail/recover/epoch).
+    use greenllm::coordinator::cluster::events::run_cluster_scan_oracle;
+    use greenllm::util::ptest::check;
+    use greenllm::util::rng::Pcg64;
+
+    let lbs = LbPolicy::all();
+    check("heap_sched_vs_scan_oracle", 10, |g: &mut Pcg64| {
+        let nodes = 2 + g.index(3); // 2..=4
+        let lb = lbs[g.index(lbs.len())];
+        let qps = 4.0 + g.f64() * 8.0;
+        let duration = 20.0 + g.f64() * 15.0;
+        let trace = chat(qps, duration, g.next_u64());
+        let method = if g.chance(0.5) {
+            Method::GreenLlm
+        } else {
+            Method::DefaultNv
+        };
+        let mut ccfg = ClusterConfig::new(nodes, lb, node_cfg(method, g.next_u64()));
+        if g.chance(0.5) {
+            // Binding-ish cap, sometimes SLO-pressure split.
+            ccfg = ccfg.with_power_cap(nodes as f64 * (1800.0 + g.f64() * 1500.0), 0.5);
+            if g.chance(0.5) {
+                ccfg = ccfg.with_arbiter(ArbiterStrategy::SloPressure);
+            }
+        }
+        if g.chance(0.5) {
+            let spec = if g.chance(0.5) {
+                FaultSpec::OneDown
+            } else {
+                FaultSpec::Flap
+            };
+            ccfg = ccfg.with_faults(spec.plan(nodes, duration));
+        }
+        if g.chance(0.3) {
+            ccfg = ccfg.with_node_specs(vec![NodeSpec::dgx(), NodeSpec::eff()]);
+        }
+        let a = run_cluster(&ccfg, &trace, &RunOptions::default());
+        let b = run_cluster_scan_oracle(&ccfg, &trace, &RunOptions::default());
+        greenllm::prop_assert!(
+            a.total_energy_j.to_bits() == b.total_energy_j.to_bits(),
+            "energy diverged: {} vs {} ({lb:?} x{nodes})",
+            a.total_energy_j,
+            b.total_energy_j
+        );
+        greenllm::prop_assert!(
+            a.events_processed == b.events_processed,
+            "event counts diverged: {} vs {} ({lb:?} x{nodes})",
+            a.events_processed,
+            b.events_processed
+        );
+        greenllm::prop_assert!(a.assignment == b.assignment, "assignment diverged");
+        greenllm::prop_assert!(
+            a.rerouted == b.rerouted && a.wasted_tokens == b.wasted_tokens,
+            "chaos totals diverged"
+        );
+        for (x, y) in a.per_node.iter().zip(&b.per_node) {
+            greenllm::prop_assert!(
+                x.total_energy_j.to_bits() == y.total_energy_j.to_bits()
+                    && x.events_processed == y.events_processed
+                    && x.completed == y.completed,
+                "per-node results diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn heap_scheduler_matches_scan_oracle_at_32_nodes() {
+    // The frontier shape the PR exists for: heterogeneous 32-node capped
+    // cluster, short horizon. One fixed case (the property test above
+    // covers the shape space; this pins the scale) — bit-equal with the
+    // linear-scan oracle, all work conserved.
+    use greenllm::coordinator::cluster::events::run_cluster_scan_oracle;
+    let trace = chat(64.0, 12.0, 51);
+    let ccfg = ClusterConfig::new(
+        32,
+        LbPolicy::JoinShortestQueue,
+        node_cfg(Method::GreenLlm, 13),
+    )
+    .with_node_specs(vec![NodeSpec::dgx(), NodeSpec::eff(), NodeSpec::legacy()])
+    .with_power_cap(32.0 * 2500.0, 1.0);
+    let a = run_cluster(&ccfg, &trace, &RunOptions::default());
+    let b = run_cluster_scan_oracle(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(a.completed as usize, trace.requests.len());
+    let expect_tokens: u64 = trace.requests.iter().map(|r| r.output_len as u64).sum();
+    assert_eq!(a.generated_tokens, expect_tokens);
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.assignment, b.assignment);
+    assert_eq!(a.per_node.len(), 32);
+}

@@ -1,0 +1,223 @@
+//! Property tests for the PR 5 scheduling structures, each pitted
+//! against its kept-verbatim oracle:
+//!
+//! * the calendar/bucket [`EventQueue`] vs the pre-PR5 binary-heap queue
+//!   ([`OracleEventQueue`]) — bit-equal pop sequences under adversarial
+//!   time distributions (same-timestamp bursts, denormal gaps, huge
+//!   spans, priority-lane mixes, interleaved drains and clears);
+//! * the [`SourceHeap`] cross-engine scheduler vs the linear-scan
+//!   [`earliest`] — identical minima under random insert / re-key /
+//!   remove interleavings.
+
+use greenllm::prop_assert;
+use greenllm::sim::oracle::OracleEventQueue;
+use greenllm::sim::{earliest, EventQueue, SourceHeap};
+use greenllm::util::ptest::check;
+use greenllm::util::rng::Pcg64;
+
+/// Draw the next event time offset under one of several adversarial
+/// distributions (chosen per case, not per event, so each case commits
+/// to a shape the calendar must survive).
+fn next_dt(g: &mut Pcg64, shape: usize) -> f64 {
+    match shape {
+        // Spread: the common Poisson-ish replay shape.
+        0 => g.exponential(2.0),
+        // Same-timestamp bursts: mostly zero gaps.
+        1 => {
+            if g.chance(0.9) {
+                0.0
+            } else {
+                g.f64() * 0.5
+            }
+        }
+        // Huge span: sparse events across many orders of magnitude.
+        2 => g.f64() * 10f64.powi(g.index(9) as i32 - 2),
+        // Denormal-adjacent gaps around a big base offset.
+        3 => {
+            if g.chance(0.5) {
+                0.0
+            } else {
+                g.f64() * 1e-12
+            }
+        }
+        // Clustered: bursts separated by long idle gaps (years apart in
+        // calendar terms — exercises far-heap migration).
+        _ => {
+            if g.chance(0.95) {
+                g.f64() * 0.01
+            } else {
+                10.0 + g.f64() * 1000.0
+            }
+        }
+    }
+}
+
+#[test]
+fn calendar_queue_bit_equal_with_heap_oracle() {
+    check("calendar_vs_heap_oracle", 40, |g| {
+        let shape = g.index(5);
+        let ops = 200 + g.index(2000);
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut o: OracleEventQueue<u64> = OracleEventQueue::new();
+        let mut payload = 0u64;
+        let mut horizon = 0.0f64; // schedule at/after both queues' `now`
+        for _ in 0..ops {
+            let r = g.f64();
+            if r < 0.55 {
+                // Schedule 1..4 events at the same drawn time (FIFO ties).
+                let t = horizon + next_dt(g, shape);
+                let n = 1 + g.index(3);
+                for _ in 0..n {
+                    if g.chance(0.3) {
+                        q.schedule_priority(t, payload);
+                        o.schedule_priority(t, payload);
+                    } else {
+                        q.schedule(t, payload);
+                        o.schedule(t, payload);
+                    }
+                    payload += 1;
+                }
+            } else if r < 0.95 {
+                let a = q.pop();
+                let b = o.pop();
+                match (a, b) {
+                    (None, None) => {}
+                    (Some((ta, ea)), Some((tb, eb))) => {
+                        prop_assert!(
+                            ta.to_bits() == tb.to_bits() && ea == eb,
+                            "pop diverged: calendar ({ta}, {ea}) vs oracle ({tb}, {eb})"
+                        );
+                        horizon = ta;
+                    }
+                    (a, b) => {
+                        return Err(format!("pop presence diverged: {a:?} vs {b:?}"));
+                    }
+                }
+                prop_assert!(
+                    q.now().to_bits() == o.now().to_bits(),
+                    "now diverged: {} vs {}",
+                    q.now(),
+                    o.now()
+                );
+            } else if g.chance(0.5) {
+                // Rare: drain both in claimed pop order and re-fill later.
+                let a = q.drain_sorted();
+                let b = o.drain_sorted();
+                prop_assert!(a.len() == b.len(), "drain len {} vs {}", a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    prop_assert!(
+                        x.0.to_bits() == y.0.to_bits() && x.1 == y.1,
+                        "drain order diverged: {x:?} vs {y:?}"
+                    );
+                }
+            } else {
+                q.clear();
+                o.clear();
+            }
+            prop_assert!(q.len() == o.len(), "len diverged: {} vs {}", q.len(), o.len());
+            let (pa, pb) = (q.peek_time(), o.peek_time());
+            prop_assert!(
+                pa.map(f64::to_bits) == pb.map(f64::to_bits),
+                "peek diverged: {pa:?} vs {pb:?}"
+            );
+        }
+        // Final full drain must agree too.
+        loop {
+            match (q.pop(), o.pop()) {
+                (None, None) => break,
+                (Some((ta, ea)), Some((tb, eb))) => {
+                    prop_assert!(
+                        ta.to_bits() == tb.to_bits() && ea == eb,
+                        "final drain diverged: ({ta}, {ea}) vs ({tb}, {eb})"
+                    );
+                }
+                (a, b) => return Err(format!("final drain presence: {a:?} vs {b:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fault_drain_order_unchanged_vs_oracle() {
+    // Regression for the drain path `Engine::fail_into` salvages arrivals
+    // through: the calendar queue's bucket-order drain must visit the
+    // exact sequence the old sort-based drain produced, priority lane
+    // included, at sizes that force the calendar (not heap) backend.
+    check("fault_drain_order", 25, |g| {
+        let shape = g.index(5);
+        let n = 100 + g.index(3000);
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut o: OracleEventQueue<u64> = OracleEventQueue::new();
+        let mut t = 0.0;
+        for i in 0..n as u64 {
+            t += next_dt(g, shape);
+            if g.chance(0.25) {
+                q.schedule_priority(t, i);
+                o.schedule_priority(t, i);
+            } else {
+                q.schedule(t, i);
+                o.schedule(t, i);
+            }
+        }
+        let mut drained = Vec::with_capacity(n);
+        q.drain_each(|t, ev| drained.push((t.to_bits(), ev)));
+        let oracle: Vec<(u64, u64)> = o
+            .drain_sorted()
+            .into_iter()
+            .map(|(t, ev)| (t.to_bits(), ev))
+            .collect();
+        prop_assert!(
+            drained == oracle,
+            "drain order diverged at {} events (first diff at {:?})",
+            n,
+            drained
+                .iter()
+                .zip(&oracle)
+                .position(|(a, b)| a != b)
+        );
+        prop_assert!(q.now() == 0.0, "drain advanced time");
+        prop_assert!(q.popped == 0, "drain counted as processing");
+        Ok(())
+    });
+}
+
+#[test]
+fn source_heap_bit_equal_with_linear_scan() {
+    check("source_heap_vs_earliest", 60, |g| {
+        let n = 1 + g.index(48);
+        let mut h = SourceHeap::new(n);
+        let mut mirror: Vec<Option<f64>> = vec![None; n];
+        let ops = 50 + g.index(500);
+        for _ in 0..ops {
+            let i = g.index(n);
+            // Skewed toward Some: a live cluster mostly re-keys.
+            let t = if g.chance(0.8) {
+                // Coarse grid so equal keys (index tie-breaks) are common.
+                Some((g.index(40) as f64) * 0.25)
+            } else {
+                None
+            };
+            h.set(i, t);
+            mirror[i] = t;
+            let want = earliest(&mirror);
+            let got = h.min().map(|(i, _)| i);
+            prop_assert!(
+                got == want,
+                "min diverged: heap {got:?} vs earliest {want:?} over {mirror:?}"
+            );
+            if let (Some((gi, gt)), Some(wi)) = (h.min(), want) {
+                prop_assert!(
+                    gt.to_bits() == mirror[wi].unwrap().to_bits() && gi == wi,
+                    "key diverged at {gi}: {gt} vs {:?}",
+                    mirror[wi]
+                );
+            }
+            prop_assert!(
+                h.len() == mirror.iter().filter(|m| m.is_some()).count(),
+                "len diverged"
+            );
+        }
+        Ok(())
+    });
+}
