@@ -21,7 +21,8 @@
 use crate::bench::report::{fmt_f, fmt_pct, maybe_write_csv, Table};
 use crate::config::{Config, Method};
 use crate::coordinator::cluster::{
-    run_cluster, ArbiterStrategy, ClusterConfig, FaultSpec, LbPolicy, NodeSpec,
+    run_cluster, ArbiterStrategy, ClusterConfig, DisaggConfig, FaultSpec, LbPolicy,
+    MigrationReport, NodeSpec, PoolRatio,
 };
 use crate::coordinator::engine::{run, RunOptions};
 use crate::util::json::Json;
@@ -289,6 +290,10 @@ pub struct MatrixConfig {
     /// Power-arbiter strategy axis (collapsed to its first entry for
     /// uncapped cells, where no arbiter runs).
     pub arbiters: Vec<ArbiterStrategy>,
+    /// Prefill/decode disaggregation axis: `"off"` (colocated) or `P:D`
+    /// pool ratios like `"1:1"`, `"1:3"` (collapsed to its first entry at
+    /// 1 node, where a cluster cannot split).
+    pub disaggs: Vec<String>,
 }
 
 impl Default for MatrixConfig {
@@ -317,6 +322,7 @@ impl Default for MatrixConfig {
             shapes: vec!["uniform".into()],
             faults: vec![FaultSpec::None],
             arbiters: vec![ArbiterStrategy::DemandProportional],
+            disaggs: vec!["off".into()],
         }
     }
 }
@@ -342,13 +348,16 @@ pub struct MatrixCell {
     pub fault: FaultSpec,
     /// Power-arbiter strategy (only exercised when `power_cap_w > 0`).
     pub arbiter: ArbiterStrategy,
+    /// Disaggregation: `"off"` or a `P:D` pool ratio.
+    pub disagg: String,
 }
 
 impl MatrixConfig {
     /// The cartesian cell list, in report order. Degenerate axes collapse
-    /// to their first entry to avoid duplicate cells: the lb and fault
-    /// axes at 1 node (ingress is a no-op and fault presets resolve
-    /// empty), and the arbiter axis for uncapped cells (no arbiter runs).
+    /// to their first entry to avoid duplicate cells: the lb, fault and
+    /// disagg axes at 1 node (ingress is a no-op, fault presets resolve
+    /// empty and a single node cannot split into pools), and the arbiter
+    /// axis for uncapped cells (no arbiter runs).
     pub fn cells(&self) -> Vec<MatrixCell> {
         let mut cells = Vec::new();
         for trace in &self.traces {
@@ -364,28 +373,36 @@ impl MatrixConfig {
                     } else {
                         &self.faults
                     };
+                    let disaggs: &[String] = if nodes == 1 {
+                        &self.disaggs[..self.disaggs.len().min(1)]
+                    } else {
+                        &self.disaggs
+                    };
                     for &lb in lbs {
                         for shape in &self.shapes {
                             for fault in faults {
-                                for &cap in &self.power_caps_w {
-                                    let arbiters: &[ArbiterStrategy] = if cap == 0.0 {
-                                        &self.arbiters[..self.arbiters.len().min(1)]
-                                    } else {
-                                        &self.arbiters
-                                    };
-                                    for &arbiter in arbiters {
-                                        for method in &self.methods {
-                                            cells.push(MatrixCell {
-                                                trace: trace.clone(),
-                                                method: *method,
-                                                margin: *margin,
-                                                nodes,
-                                                lb,
-                                                power_cap_w: cap,
-                                                shape: shape.clone(),
-                                                fault: fault.clone(),
-                                                arbiter,
-                                            });
+                                for disagg in disaggs {
+                                    for &cap in &self.power_caps_w {
+                                        let arbiters: &[ArbiterStrategy] = if cap == 0.0 {
+                                            &self.arbiters[..self.arbiters.len().min(1)]
+                                        } else {
+                                            &self.arbiters
+                                        };
+                                        for &arbiter in arbiters {
+                                            for method in &self.methods {
+                                                cells.push(MatrixCell {
+                                                    trace: trace.clone(),
+                                                    method: *method,
+                                                    margin: *margin,
+                                                    nodes,
+                                                    lb,
+                                                    power_cap_w: cap,
+                                                    shape: shape.clone(),
+                                                    fault: fault.clone(),
+                                                    arbiter,
+                                                    disagg: disagg.clone(),
+                                                });
+                                            }
                                         }
                                     }
                                 }
@@ -439,6 +456,9 @@ pub struct CellResult {
     pub fault: String,
     /// Arbiter strategy name; "-" for uncapped cells.
     pub arbiter: String,
+    /// Disaggregation spelling (`"off"` = colocated; single-node cells
+    /// always report `"off"`).
+    pub disagg: String,
     /// Cluster energy, joules.
     pub total_energy_j: f64,
     /// Prefill-pool energy, joules.
@@ -472,6 +492,8 @@ pub struct CellResult {
     pub wasted_tokens: u64,
     /// Highest measured cluster draw across arbiter epochs (capped cells).
     pub peak_power_w: Option<f64>,
+    /// Migration ledger (disaggregated cells only).
+    pub migration: Option<MigrationReport>,
     /// Per-node breakdown (empty for single-node cells).
     pub per_node: Vec<NodeCellResult>,
     /// Energy saving vs the defaultNV cell of the same scenario
@@ -481,8 +503,18 @@ pub struct CellResult {
 
 /// Grouping key for the defaultNV energy baseline: the full scenario
 /// coordinate minus the policy (trace, margin, nodes, lb, cap, shape,
-/// fault, arbiter).
-type ScenarioKey = (String, u64, usize, String, u64, String, String, String);
+/// fault, arbiter, disagg).
+type ScenarioKey = (
+    String,
+    u64,
+    usize,
+    String,
+    u64,
+    String,
+    String,
+    String,
+    String,
+);
 
 fn scenario_key(r: &CellResult) -> ScenarioKey {
     (
@@ -494,6 +526,7 @@ fn scenario_key(r: &CellResult) -> ScenarioKey {
         r.shape.clone(),
         r.fault.clone(),
         r.arbiter.clone(),
+        r.disagg.clone(),
     )
 }
 
@@ -527,6 +560,11 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
         } else {
             "-".into()
         },
+        disagg: if cell.nodes == 1 {
+            "off".into()
+        } else {
+            cell.disagg.clone()
+        },
         total_energy_j: 0.0,
         prefill_energy_j: 0.0,
         decode_energy_j: 0.0,
@@ -543,6 +581,7 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
         rerouted: 0,
         wasted_tokens: 0,
         peak_power_w: None,
+        migration: None,
         per_node: Vec::new(),
         delta_energy_pct: None,
     };
@@ -577,6 +616,13 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
     if cell.power_cap_w > 0.0 {
         ccfg = ccfg.with_power_cap(cell.power_cap_w, 1.0);
     }
+    if cell.disagg != "off" {
+        let ratio = PoolRatio::parse(&cell.disagg)
+            .unwrap_or_else(|e| panic!("bad disagg axis {:?}: {e}", cell.disagg));
+        ccfg = ccfg
+            .with_pool_ratio(ratio)
+            .with_disagg(DisaggConfig::default());
+    }
     let r = run_cluster(&ccfg, trace, &RunOptions::default());
     let gen_tokens = r.generated_tokens.max(1) as f64;
     let sim_s = r
@@ -608,6 +654,7 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
         rerouted: r.rerouted,
         wasted_tokens: r.wasted_tokens,
         peak_power_w: r.power.as_ref().map(|p| p.peak_measured_w),
+        migration: r.migration,
         per_node: r
             .per_node
             .iter()
@@ -683,6 +730,7 @@ pub fn render_table(results: &[CellResult]) -> Table {
         "Shape",
         "Fault",
         "Arb",
+        "PD",
         "Cap(W)",
         "Energy(kJ)",
         "J/tok",
@@ -704,6 +752,11 @@ pub fn render_table(results: &[CellResult]) -> Table {
             r.shape.clone(),
             r.fault.clone(),
             r.arbiter.clone(),
+            if r.disagg == "off" {
+                "-".into()
+            } else {
+                r.disagg.clone()
+            },
             if r.power_cap_w > 0.0 {
                 fmt_f(r.power_cap_w, 0)
             } else {
@@ -742,12 +795,12 @@ pub fn render_markdown(cfg: &MatrixConfig, results: &[CellResult]) -> String {
         cfg.seed,
         results.len()
     ));
-    out.push_str("| Trace | Policy | Margin | Nodes | LB | Shape | Fault | Arb | Cap (W) |");
+    out.push_str("| Trace | Policy | Margin | Nodes | LB | Shape | Fault | Arb | PD | Cap (W) |");
     out.push_str(" Energy (kJ) | J/tok | dEnergy (%) | TTFT (%) | TBT (%) | tok/s | Bal |\n");
-    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
     for r in results {
         out.push_str(&format!(
-            "| {} | {} | {:.2} | {} | {} | {} | {} | {} | {} | {:.1} | {:.2} | {} | {:.1} | {:.1} | {:.0} | {} |\n",
+            "| {} | {} | {:.2} | {} | {} | {} | {} | {} | {} | {} | {:.1} | {:.2} | {} | {:.1} | {:.1} | {:.0} | {} |\n",
             r.trace,
             r.method.name(),
             r.margin,
@@ -756,6 +809,7 @@ pub fn render_markdown(cfg: &MatrixConfig, results: &[CellResult]) -> String {
             r.shape,
             r.fault,
             r.arbiter,
+            if r.disagg == "off" { "-" } else { &r.disagg },
             if r.power_cap_w > 0.0 {
                 format!("{:.0}", r.power_cap_w)
             } else {
@@ -796,6 +850,7 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
             m.insert("shape".to_string(), Json::Str(r.shape.clone()));
             m.insert("fault".to_string(), Json::Str(r.fault.clone()));
             m.insert("arbiter".to_string(), Json::Str(r.arbiter.clone()));
+            m.insert("disagg".to_string(), Json::Str(r.disagg.clone()));
             m.insert("total_energy_j".to_string(), Json::Num(r.total_energy_j));
             m.insert(
                 "prefill_energy_j".to_string(),
@@ -873,6 +928,17 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
                             "peak_measured_w",
                             r.peak_power_w.map(Json::Num).unwrap_or(Json::Null),
                         ),
+                    ]),
+                );
+            }
+            if let Some(mig) = &r.migration {
+                m.insert(
+                    "migration".to_string(),
+                    Json::obj([
+                        ("count", Json::Num(mig.count as f64)),
+                        ("kv_bytes", Json::Num(mig.kv_bytes)),
+                        ("transfer_j", Json::Num(mig.transfer_j)),
+                        ("relays", Json::Num(mig.relays as f64)),
                     ]),
                 );
             }
@@ -1199,6 +1265,82 @@ mod tests {
         for c in cells {
             let chaos = c.get("chaos").expect("faulted cell carries chaos section");
             assert!(chaos.get("rerouted").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn disagg_cells_conserve_and_emit_migration_section() {
+        let cfg = MatrixConfig {
+            duration_s: 30.0,
+            traces: vec![TraceSpec::Alibaba { qps: 8.0 }],
+            methods: vec![Method::GreenLlm],
+            margins: vec![0.95],
+            nodes: vec![4],
+            lbs: vec![LbPolicy::JoinShortestQueue],
+            disaggs: vec!["off".into(), "1:1".into(), "1:3".into()],
+            ..MatrixConfig::default()
+        };
+        let results = run_matrix(&cfg);
+        assert_eq!(results.len(), 3);
+        let trace = cfg.traces[0].generate(cfg.duration_s, cfg.seed);
+        for r in &results {
+            // Every request conserved across migrations, and the final
+            // assignment (current owners) still sums to the total.
+            assert_eq!(r.completed as usize, trace.requests.len(), "{r:?}");
+            assert_eq!(
+                r.per_node.iter().map(|n| n.assigned).sum::<usize>(),
+                trace.requests.len(),
+                "{r:?}"
+            );
+        }
+        let split = results.iter().find(|r| r.disagg == "1:1").unwrap();
+        let mig = split.migration.expect("split cell reports migration");
+        assert!(mig.count > 0, "{mig:?}");
+        assert!(mig.kv_bytes > 0.0 && mig.transfer_j > 0.0, "{mig:?}");
+        let off = results.iter().find(|r| r.disagg == "off").unwrap();
+        assert!(off.migration.is_none());
+        // JSON: the migration section rides on split cells only.
+        let parsed = Json::parse(&to_json(&cfg, &results).dump()).unwrap();
+        for c in parsed.get("cells").unwrap().as_arr().unwrap() {
+            let is_off = c.get("disagg").unwrap().as_str() == Some("off");
+            assert_eq!(c.get("migration").is_none(), is_off, "{c:?}");
+            if let Some(m) = c.get("migration") {
+                assert!(m.get("count").unwrap().as_f64().unwrap() > 0.0);
+                assert!(m.get("kv_bytes").unwrap().as_f64().unwrap() > 0.0);
+                assert!(m.get("transfer_j").unwrap().as_f64().unwrap() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn disagg_off_cells_bit_identical_to_pre_disagg_cluster_path() {
+        // The "off" axis value must be pure plumbing: a sweep that never
+        // mentions disagg and one that spells "off" explicitly produce
+        // bit-identical energy/event/assignment numbers.
+        let base = MatrixConfig {
+            duration_s: 30.0,
+            traces: vec![TraceSpec::Alibaba { qps: 6.0 }],
+            methods: vec![Method::GreenLlm],
+            margins: vec![0.95],
+            nodes: vec![2],
+            lbs: vec![LbPolicy::JoinShortestQueue],
+            ..MatrixConfig::default()
+        };
+        let explicit = MatrixConfig {
+            disaggs: vec!["off".into()],
+            ..base.clone()
+        };
+        let a = run_matrix(&base);
+        let b = run_matrix(&explicit);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.total_energy_j.to_bits(), y.total_energy_j.to_bits());
+            assert_eq!(x.events_processed, y.events_processed);
+            assert_eq!(x.generated_tokens, y.generated_tokens);
+            assert_eq!(
+                x.per_node.iter().map(|n| n.assigned).collect::<Vec<_>>(),
+                y.per_node.iter().map(|n| n.assigned).collect::<Vec<_>>()
+            );
         }
     }
 

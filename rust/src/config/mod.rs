@@ -248,6 +248,43 @@ impl Default for ClusterSection {
     }
 }
 
+/// Prefill/decode disaggregation defaults (`greenllm cluster` flag
+/// defaults, like [`ClusterSection`]). The pool ratio is kept as a spelled
+/// string (`"off"` or `"P:D"`) so the config layer stays free of
+/// coordinator types; it is parsed — and rejected loudly — where used
+/// (`PoolRatio::parse` at the CLI).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DisaggSection {
+    /// Pool split: `"off"` (colocated) or a `P:D` ratio like `"1:3"`.
+    pub ratio: String,
+    /// KV-cache footprint per context token, bytes.
+    pub bytes_per_token: f64,
+    /// KV interconnect rate, gigabits per second.
+    pub gbps: f64,
+    /// Fixed per-transfer latency, seconds.
+    pub latency_s: f64,
+    /// Transfer energy per byte per end, picojoules.
+    pub pj_per_byte: f64,
+    /// DVFS method override for the prefill pool (empty = cluster method).
+    pub prefill_method: String,
+    /// DVFS method override for the decode pool (empty = cluster method).
+    pub decode_method: String,
+}
+
+impl Default for DisaggSection {
+    fn default() -> Self {
+        DisaggSection {
+            ratio: "off".into(),
+            bytes_per_token: 819_200.0,
+            gbps: 200.0,
+            latency_s: 0.001,
+            pj_per_byte: 100.0,
+            prefill_method: String::new(),
+            decode_method: String::new(),
+        }
+    }
+}
+
 /// Top-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -265,6 +302,8 @@ pub struct Config {
     pub prefill_opt: PrefillOptConfig,
     /// Cluster deployment defaults.
     pub cluster: ClusterSection,
+    /// Prefill/decode disaggregation defaults.
+    pub disagg: DisaggSection,
     /// Simulated GPU hardware of this node (per-node in heterogeneous
     /// clusters; the default is a stock A100).
     pub gpu: GpuSpec,
@@ -289,6 +328,7 @@ impl Default for Config {
             decode_ctl: DecodeCtlConfig::default(),
             prefill_opt: PrefillOptConfig::default(),
             cluster: ClusterSection::default(),
+            disagg: DisaggSection::default(),
             gpu: GpuSpec::default(),
             prefill_margin: 0.95,
             decode_margin: 0.95,
@@ -336,6 +376,13 @@ impl Config {
                     | "cluster.arbiter"
                     | "cluster.node_specs"
                     | "cluster.faults"
+                    | "disagg.ratio"
+                    | "disagg.bytes_per_token"
+                    | "disagg.gbps"
+                    | "disagg.latency_s"
+                    | "disagg.pj_per_byte"
+                    | "disagg.prefill_method"
+                    | "disagg.decode_method"
                     | "gpu.power_scale"
                     | "gpu.max_clock_mhz"
             );
@@ -433,6 +480,27 @@ impl Config {
         if let Some(v) = doc.str("cluster.faults") {
             c.cluster.faults = v.to_string();
         }
+        if let Some(v) = doc.str("disagg.ratio") {
+            c.disagg.ratio = v.to_string();
+        }
+        if let Some(v) = doc.f64("disagg.bytes_per_token") {
+            c.disagg.bytes_per_token = v;
+        }
+        if let Some(v) = doc.f64("disagg.gbps") {
+            c.disagg.gbps = v;
+        }
+        if let Some(v) = doc.f64("disagg.latency_s") {
+            c.disagg.latency_s = v;
+        }
+        if let Some(v) = doc.f64("disagg.pj_per_byte") {
+            c.disagg.pj_per_byte = v;
+        }
+        if let Some(v) = doc.str("disagg.prefill_method") {
+            c.disagg.prefill_method = v.to_string();
+        }
+        if let Some(v) = doc.str("disagg.decode_method") {
+            c.disagg.decode_method = v.to_string();
+        }
         if let Some(v) = doc.f64("gpu.power_scale") {
             c.gpu.power_scale = v;
         }
@@ -475,6 +543,25 @@ impl Config {
         }
         if self.gpu.power_scale <= 0.0 {
             return Err("gpu.power_scale must be positive".into());
+        }
+        if self.disagg.bytes_per_token <= 0.0
+            || self.disagg.gbps <= 0.0
+            || self.disagg.pj_per_byte < 0.0
+            || self.disagg.latency_s < 0.0
+        {
+            return Err(
+                "disagg link params: bytes_per_token and gbps must be positive, \
+                 latency_s and pj_per_byte non-negative"
+                    .into(),
+            );
+        }
+        for (key, m) in [
+            ("disagg.prefill_method", &self.disagg.prefill_method),
+            ("disagg.decode_method", &self.disagg.decode_method),
+        ] {
+            if !m.is_empty() && Method::parse(m).is_none() {
+                return Err(format!("{key}: unknown method {m:?}"));
+            }
         }
         let mhz = self.gpu.max_clock_mhz;
         if !(210..=1410).contains(&mhz) || (mhz - 210) % 15 != 0 {
@@ -586,6 +673,39 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad = Config::default();
         bad.gpu.power_scale = 0.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn disagg_section_parses_and_validates() {
+        let doc = Document::parse(
+            r#"
+            [disagg]
+            ratio = "1:2"
+            gbps = 400
+            latency_s = 0.002
+            prefill_method = "fixed1410"
+            decode_method = "greenllm"
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.disagg.ratio, "1:2");
+        assert_eq!(c.disagg.gbps, 400.0);
+        assert_eq!(c.disagg.latency_s, 0.002);
+        assert_eq!(c.disagg.prefill_method, "fixed1410");
+        assert_eq!(c.disagg.decode_method, "greenllm");
+        // Defaults: colocated, 200 Gb/s, no method overrides.
+        let d = Config::default();
+        assert_eq!(d.disagg, DisaggSection::default());
+        assert_eq!(d.disagg.ratio, "off");
+        assert!(d.disagg.prefill_method.is_empty());
+        // Bad link params and bogus method names are rejected.
+        let mut bad = Config::default();
+        bad.disagg.gbps = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = Config::default();
+        bad.disagg.decode_method = "warp9".into();
         assert!(bad.validate().is_err());
     }
 

@@ -8,6 +8,7 @@
 //! trait, adding an [`LbPolicy`] variant and wiring it in [`build`]; the
 //! CLI, the scenario matrix and the invariant tests pick it up unchanged.
 
+use super::disagg::PoolRatio;
 use crate::workload::request::{Request, RouteClass};
 
 /// Live telemetry the cluster loop snapshots per node before each
@@ -129,21 +130,31 @@ pub trait Balancer {
     /// Stable short name (mirrors [`LbPolicy::name`]).
     fn name(&self) -> &'static str;
     /// Pick the node for `req` arriving at `t`. `nodes` has one entry per
-    /// node, index-aligned; the returned index must be `< nodes.len()`
-    /// and must point at an *alive* node whenever one exists (the chaos
-    /// layer guarantees at least one node is always up).
-    fn assign(&mut self, t: f64, req: &Request, nodes: &[NodeState]) -> usize;
+    /// node, index-aligned; a returned index must be `< nodes.len()` and
+    /// must point at an *alive* node. `None` means no node can take the
+    /// request right now (every node in the slice is down — possible
+    /// transiently between a drain and a re-route); the cluster loop
+    /// defers such requests and re-offers them at the next recovery
+    /// instead of aborting the run.
+    fn assign(&mut self, t: f64, req: &Request, nodes: &[NodeState]) -> Option<usize>;
 }
 
 /// Instantiate the balancer for a policy. `tbt_target_s` is the per-node
-/// decode SLO the phase-aware policy uses to spot unhealthy tails.
-pub fn build(lb: LbPolicy, nodes: usize, tbt_target_s: f64) -> Box<dyn Balancer> {
+/// decode SLO the phase-aware policy uses to spot unhealthy tails;
+/// `ratio` sizes its long-prompt pool (shared with the `--disagg` axis —
+/// the default `1:3` reproduces the historical quarter split).
+pub fn build(
+    lb: LbPolicy,
+    nodes: usize,
+    tbt_target_s: f64,
+    ratio: PoolRatio,
+) -> Box<dyn Balancer> {
     assert!(nodes >= 1);
     match lb {
         LbPolicy::RoundRobin => Box::new(RoundRobin { next: 0, nodes }),
         LbPolicy::LeastPromptWork => Box::new(LeastPromptWork::new(nodes, 10.0)),
         LbPolicy::JoinShortestQueue => Box::new(JoinShortestQueue),
-        LbPolicy::PhaseAware => Box::new(PhaseAware::new(nodes, tbt_target_s)),
+        LbPolicy::PhaseAware => Box::new(PhaseAware::new(nodes, tbt_target_s, ratio)),
         LbPolicy::PowerGrant => Box::new(PowerGrant),
     }
 }
@@ -158,17 +169,17 @@ impl Balancer for RoundRobin {
         "rr"
     }
 
-    fn assign(&mut self, _t: f64, _req: &Request, nodes: &[NodeState]) -> usize {
+    fn assign(&mut self, _t: f64, _req: &Request, nodes: &[NodeState]) -> Option<usize> {
         // Cycle, skipping dead nodes; with everything alive this is the
         // classic modular counter (bit-compatible with the pre-chaos rr).
         for _ in 0..self.nodes {
             let n = self.next;
             self.next = (self.next + 1) % self.nodes;
             if nodes.get(n).map_or(true, |s| s.alive) {
-                return n;
+                return Some(n);
             }
         }
-        panic!("round-robin: no alive nodes");
+        None
     }
 }
 
@@ -202,7 +213,7 @@ impl Balancer for LeastPromptWork {
         "leastwork"
     }
 
-    fn assign(&mut self, t: f64, req: &Request, nodes: &[NodeState]) -> usize {
+    fn assign(&mut self, t: f64, req: &Request, nodes: &[NodeState]) -> Option<usize> {
         // Front-end policy, but liveness still comes from the snapshot:
         // dead nodes are skipped (strict `<` keeps the all-alive case
         // bit-compatible with the pre-chaos scan).
@@ -218,11 +229,11 @@ impl Balancer for LeastPromptWork {
                 best = Some(i);
             }
         }
-        let best = best.expect("leastwork: no alive nodes");
+        let best = best?;
         // Touch only the winner: fold its decay into the stored value.
         self.load[best] = best_load + req.prompt_len as f64;
         self.last_t[best] = t;
-        best
+        Some(best)
     }
 }
 
@@ -239,9 +250,8 @@ impl Balancer for JoinShortestQueue {
         "jsq"
     }
 
-    fn assign(&mut self, _t: f64, _req: &Request, nodes: &[NodeState]) -> usize {
+    fn assign(&mut self, _t: f64, _req: &Request, nodes: &[NodeState]) -> Option<usize> {
         pick_min(nodes, |n| (Self::depth(n) as u64, n.outstanding_prompt_tokens))
-            .expect("jsq: no alive nodes")
     }
 }
 
@@ -253,12 +263,13 @@ struct PhaseAware {
 }
 
 impl PhaseAware {
-    fn new(nodes: usize, tbt_target_s: f64) -> Self {
-        // Dedicate ~a quarter of the cluster (at least one node) to long
-        // prefill once there are enough nodes to split at all.
-        let long_nodes = if nodes >= 2 { (nodes / 4).max(1) } else { 0 };
+    fn new(nodes: usize, tbt_target_s: f64, ratio: PoolRatio) -> Self {
+        // Dedicate the ratio's prefill share of the cluster (at least one
+        // node each side) to long prefill once there are enough nodes to
+        // split at all. The default 1:3 ratio is the historical quarter
+        // split, bit-for-bit.
         PhaseAware {
-            long_nodes,
+            long_nodes: ratio.prefill_count(nodes),
             tbt_target_s,
         }
     }
@@ -269,15 +280,20 @@ impl Balancer for PhaseAware {
         "phase"
     }
 
-    fn assign(&mut self, _t: f64, req: &Request, nodes: &[NodeState]) -> usize {
+    fn assign(&mut self, _t: f64, req: &Request, nodes: &[NodeState]) -> Option<usize> {
         if self.long_nodes == 0 {
-            return 0; // single node: nothing to split
+            // Single node: nothing to split, but liveness still applies —
+            // this used to return 0 unconditionally and route straight
+            // into a dead node during its fault window.
+            return pick_min(nodes, |_| 0u8);
         }
         let split = nodes.len() - self.long_nodes;
         match req.route_class() {
             RouteClass::Long => {
                 // Prefill pool: least outstanding prompt work. If the
-                // whole long pool is down, spill into the interactive one.
+                // whole long pool is down, spill into the interactive one;
+                // if *everything* is down, defer (None) — the cluster
+                // loop holds the request for the next recovery.
                 pick_min(&nodes[split..], |n| {
                     (n.outstanding_prompt_tokens, n.prefill_backlog as u64)
                 })
@@ -287,13 +303,12 @@ impl Balancer for PhaseAware {
                         (n.outstanding_prompt_tokens, n.prefill_backlog as u64)
                     })
                 })
-                .expect("phase: no alive nodes")
             }
             RouteClass::ShortMedium => {
                 // Interactive pool: shortest queue among healthy nodes; a
                 // blown decode tail pushes a node behind every healthy
                 // one. If the whole interactive pool is down, spill into
-                // the long pool.
+                // the long pool; all dead defers as above.
                 pick_min(&nodes[..split], |n| {
                     let unhealthy = (n.tbt_tail_p95_s > self.tbt_target_s) as u64;
                     (unhealthy, (n.prefill_backlog + n.active_streams) as u64)
@@ -304,7 +319,6 @@ impl Balancer for PhaseAware {
                     })
                     .map(|i| split + i)
                 })
-                .expect("phase: no alive nodes")
             }
         }
     }
@@ -323,7 +337,7 @@ impl Balancer for PowerGrant {
         "powergrant"
     }
 
-    fn assign(&mut self, _t: f64, _req: &Request, nodes: &[NodeState]) -> usize {
+    fn assign(&mut self, _t: f64, _req: &Request, nodes: &[NodeState]) -> Option<usize> {
         let mut best = None;
         let mut best_score = f64::INFINITY;
         for (i, n) in nodes.iter().enumerate() {
@@ -345,7 +359,7 @@ impl Balancer for PowerGrant {
                 best = Some(i);
             }
         }
-        best.expect("powergrant: no alive nodes")
+        best
     }
 }
 
@@ -395,10 +409,10 @@ mod tests {
 
     #[test]
     fn round_robin_cycles() {
-        let mut b = build(LbPolicy::RoundRobin, 3, 0.1);
+        let mut b = build(LbPolicy::RoundRobin, 3, 0.1, PoolRatio::default());
         let states = vec![NodeState::default(); 3];
         let picks: Vec<usize> = (0..6)
-            .map(|i| b.assign(i as f64, &req(i, i as f64, 100), &states))
+            .map(|i| b.assign(i as f64, &req(i, i as f64, 100), &states).unwrap())
             .collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
@@ -409,13 +423,13 @@ mod tests {
         // node 0 must win again once its load has decayed below node 1's.
         let mut b = LeastPromptWork::new(2, 10.0);
         let n = vec![NodeState::default(); 2];
-        assert_eq!(b.assign(0.0, &req(0, 0.0, 8000), &n), 0);
-        assert_eq!(b.assign(0.1, &req(1, 0.1, 100), &n), 1);
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 8000), &n), Some(0));
+        assert_eq!(b.assign(0.1, &req(1, 0.1, 100), &n), Some(1));
         // t=1: node0 ~ 8000*e^-0.1 >> node1 ~ 100 → node 1.
-        assert_eq!(b.assign(1.0, &req(2, 1.0, 100), &n), 1);
+        assert_eq!(b.assign(1.0, &req(2, 1.0, 100), &n), Some(1));
         // t=60: both decayed ~e^-6; node0 8000e^-6≈19.8 < node1 200e^-59/10…
         // node1 decayed from t≈1: 200e^-5.9 ≈ 0.55 → node 1 still smaller.
-        assert_eq!(b.assign(60.0, &req(3, 60.0, 100), &n), 1);
+        assert_eq!(b.assign(60.0, &req(3, 60.0, 100), &n), Some(1));
         // Lazy value equals the closed-form continuous decay.
         let expect = (8000.0f64) * (-(60.0f64) / 10.0).exp();
         assert!((b.load_at(0, 60.0) - expect).abs() < 1e-9);
@@ -423,109 +437,164 @@ mod tests {
 
     #[test]
     fn jsq_picks_emptiest_node() {
-        let mut b = build(LbPolicy::JoinShortestQueue, 3, 0.1);
+        let mut b = build(LbPolicy::JoinShortestQueue, 3, 0.1, PoolRatio::default());
         let mut states = vec![NodeState::default(); 3];
         states[0].prefill_backlog = 4;
         states[1].active_streams = 1;
         states[2].active_streams = 9;
-        assert_eq!(b.assign(0.0, &req(0, 0.0, 100), &states), 1);
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 100), &states), Some(1));
         // Equal depths: fewer outstanding tokens wins, then lowest index.
         states[1].active_streams = 4;
         states[2].active_streams = 4;
         states[2].prefill_backlog = 0;
         states[1].outstanding_prompt_tokens = 500;
         states[2].outstanding_prompt_tokens = 100;
-        assert_eq!(b.assign(0.0, &req(1, 0.0, 100), &states), 2);
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 100), &states), Some(2));
     }
 
     #[test]
     fn phase_aware_routes_long_prompts_to_dedicated_pool() {
-        let mut b = build(LbPolicy::PhaseAware, 4, 0.1);
+        let mut b = build(LbPolicy::PhaseAware, 4, 0.1, PoolRatio::default());
         let states = vec![NodeState::default(); 4];
         // 4 nodes → 1 long node (index 3).
-        assert_eq!(b.assign(0.0, &req(0, 0.0, 4096), &states), 3);
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 4096), &states), Some(3));
         // Interactive traffic stays off the long pool.
-        let pick = b.assign(0.0, &req(1, 0.0, 128), &states);
+        let pick = b.assign(0.0, &req(1, 0.0, 128), &states).unwrap();
         assert!(pick < 3, "interactive landed on the long pool: {pick}");
     }
 
     #[test]
     fn phase_aware_avoids_unhealthy_tails() {
-        let mut b = build(LbPolicy::PhaseAware, 4, 0.1);
+        let mut b = build(LbPolicy::PhaseAware, 4, 0.1, PoolRatio::default());
         let mut states = vec![NodeState::default(); 4];
         // Node 0 empty but with a blown TBT tail; node 1 busy but healthy.
         states[0].tbt_tail_p95_s = 0.5;
         states[1].active_streams = 3;
-        assert_eq!(b.assign(0.0, &req(0, 0.0, 128), &states), 1);
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 128), &states), Some(1));
     }
 
     #[test]
     fn every_policy_skips_dead_nodes() {
         for lb in LbPolicy::all() {
-            let mut b = build(lb, 3, 0.1);
+            let mut b = build(lb, 3, 0.1, PoolRatio::default());
             let mut states = vec![NodeState::default(); 3];
             states[0].alive = false;
             states[2].alive = false;
             for i in 0..6 {
                 let prompt = if i % 2 == 0 { 100 } else { 4096 };
                 let pick = b.assign(i as f64, &req(i, i as f64, prompt), &states);
-                assert_eq!(pick, 1, "{lb:?} routed to a dead node");
+                assert_eq!(pick, Some(1), "{lb:?} routed to a dead node");
             }
         }
     }
 
     #[test]
     fn round_robin_resumes_cycle_after_recovery() {
-        let mut b = build(LbPolicy::RoundRobin, 3, 0.1);
+        let mut b = build(LbPolicy::RoundRobin, 3, 0.1, PoolRatio::default());
         let mut states = vec![NodeState::default(); 3];
         states[1].alive = false;
-        assert_eq!(b.assign(0.0, &req(0, 0.0, 100), &states), 0);
-        assert_eq!(b.assign(0.0, &req(1, 0.0, 100), &states), 2);
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 100), &states), Some(0));
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 100), &states), Some(2));
         states[1].alive = true;
-        assert_eq!(b.assign(0.0, &req(2, 0.0, 100), &states), 0);
-        assert_eq!(b.assign(0.0, &req(3, 0.0, 100), &states), 1);
+        assert_eq!(b.assign(0.0, &req(2, 0.0, 100), &states), Some(0));
+        assert_eq!(b.assign(0.0, &req(3, 0.0, 100), &states), Some(1));
     }
 
     #[test]
     fn phase_aware_spills_across_dead_pools() {
         // 4 nodes: interactive pool {0,1,2}, long pool {3}.
-        let mut b = build(LbPolicy::PhaseAware, 4, 0.1);
+        let mut b = build(LbPolicy::PhaseAware, 4, 0.1, PoolRatio::default());
         let mut states = vec![NodeState::default(); 4];
         // Long pool down: long prompts spill into the interactive pool.
         states[3].alive = false;
-        assert!(b.assign(0.0, &req(0, 0.0, 4096), &states) < 3);
+        assert!(b.assign(0.0, &req(0, 0.0, 4096), &states).unwrap() < 3);
         // Interactive pool down: short prompts spill into the long pool.
         states[3].alive = true;
         for s in states[..3].iter_mut() {
             s.alive = false;
         }
-        assert_eq!(b.assign(0.0, &req(1, 0.0, 128), &states), 3);
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 128), &states), Some(3));
     }
 
     #[test]
     fn powergrant_routes_by_watts_per_queued_work() {
-        let mut b = build(LbPolicy::PowerGrant, 2, 0.1);
+        let mut b = build(LbPolicy::PowerGrant, 2, 0.1, PoolRatio::default());
         let mut states = vec![NodeState::default(); 2];
         // Equal depth, unequal grants: the bigger grant wins.
         states[0].granted_w = 1000.0;
         states[1].granted_w = 3000.0;
-        assert_eq!(b.assign(0.0, &req(0, 0.0, 100), &states), 1);
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 100), &states), Some(1));
         // A starved grant loses even to a deeper queue.
         states[0].granted_w = 500.0;
         states[1].granted_w = 3000.0;
         states[1].active_streams = 3;
-        assert_eq!(b.assign(0.0, &req(1, 0.0, 100), &states), 1);
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 100), &states), Some(1));
         // Uncapped (infinite grants): degrades to queue depth.
         states[0].granted_w = f64::INFINITY;
         states[1].granted_w = f64::INFINITY;
-        assert_eq!(b.assign(0.0, &req(2, 0.0, 100), &states), 0);
+        assert_eq!(b.assign(0.0, &req(2, 0.0, 100), &states), Some(0));
     }
 
     #[test]
     fn phase_aware_single_node_degrades_gracefully() {
-        let mut b = build(LbPolicy::PhaseAware, 1, 0.1);
+        let mut b = build(LbPolicy::PhaseAware, 1, 0.1, PoolRatio::default());
         let states = vec![NodeState::default(); 1];
-        assert_eq!(b.assign(0.0, &req(0, 0.0, 4096), &states), 0);
-        assert_eq!(b.assign(0.0, &req(1, 0.0, 64), &states), 0);
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 4096), &states), Some(0));
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 64), &states), Some(0));
+    }
+
+    #[test]
+    fn phase_aware_single_node_honors_liveness() {
+        // Regression: the long_nodes == 0 arm used to return 0 without
+        // looking at the snapshot, routing arrivals into a dead node
+        // during its fault window.
+        let mut b = build(LbPolicy::PhaseAware, 1, 0.1, PoolRatio::default());
+        let mut states = vec![NodeState::default(); 1];
+        states[0].alive = false;
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 4096), &states), None);
+        states[0].alive = true;
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 4096), &states), Some(0));
+    }
+
+    #[test]
+    fn phase_aware_all_dead_defers_instead_of_panicking() {
+        // Regression: both spill arms used to `.expect("phase: no alive
+        // nodes")` — overlapping fault windows between a drain and its
+        // re-route aborted the whole run.
+        let mut b = build(LbPolicy::PhaseAware, 4, 0.1, PoolRatio::default());
+        let mut states = vec![NodeState::default(); 4];
+        for s in states.iter_mut() {
+            s.alive = false;
+        }
+        assert_eq!(b.assign(0.0, &req(0, 0.0, 4096), &states), None);
+        assert_eq!(b.assign(0.0, &req(1, 0.0, 64), &states), None);
+    }
+
+    #[test]
+    fn every_policy_defers_when_cluster_dark() {
+        for lb in LbPolicy::all() {
+            let mut b = build(lb, 3, 0.1, PoolRatio::default());
+            let mut states = vec![NodeState::default(); 3];
+            for s in states.iter_mut() {
+                s.alive = false;
+            }
+            assert_eq!(
+                b.assign(0.0, &req(0, 0.0, 100), &states),
+                None,
+                "{lb:?} assigned with every node down"
+            );
+        }
+    }
+
+    #[test]
+    fn phase_aware_pool_ratio_moves_the_split() {
+        // 1:1 on 4 nodes → long pool {2, 3} instead of the default {3}.
+        let ratio = PoolRatio { prefill: 1, decode: 1 };
+        let mut b = build(LbPolicy::PhaseAware, 4, 0.1, ratio);
+        let states = vec![NodeState::default(); 4];
+        let long_pick = b.assign(0.0, &req(0, 0.0, 4096), &states).unwrap();
+        assert!(long_pick >= 2, "long prompt landed at {long_pick}");
+        let short_pick = b.assign(0.0, &req(1, 0.0, 128), &states).unwrap();
+        assert!(short_pick < 2, "interactive landed at {short_pick}");
     }
 }

@@ -1,0 +1,284 @@
+//! Prefill/decode disaggregation: pool topology, the KV-transfer cost
+//! model, and the EcoRoute-style decode router.
+//!
+//! The cluster can run *disaggregated* (DualScale / VoltanaLLM style):
+//! the first `PoolRatio::prefill_count` nodes form the prefill pool and
+//! the rest the decode pool. Arrivals are balanced over the prefill pool
+//! only; when a prefill finishes, the stream *migrates* — an explicit
+//! cluster event — to a decode node picked by [`eco_route`] over live
+//! decode telemetry (active streams, TBT-tail P95, granted watts). The
+//! KV cache travels over a modeled interconnect ([`KvLinkModel`]):
+//! bytes are linear in context length, the transfer has latency and an
+//! energy cost charged to *both* ends. Each pool then runs its own
+//! `DvfsPolicy` against its own SLO — TTFT pressure on prefill nodes,
+//! TBT tail on decode nodes (see `coordinator::policy` for the per-pool
+//! method overrides).
+//!
+//! With no [`DisaggConfig`] the cluster is colocated and every code path
+//! here is dormant — the event loop is bit-exact with the pre-disagg
+//! loop (§invariants in `events.rs`).
+
+use super::balancer::NodeState;
+use crate::config::Method;
+
+/// Prefill:decode pool split, e.g. `1:3` = a quarter of the cluster
+/// prefills. Shared between the `--disagg` axis and the `phase`
+/// balancer's long-pool sizing (which historically hard-coded the
+/// quarter split — the default ratio reproduces it exactly).
+///
+/// ```
+/// use greenllm::coordinator::cluster::disagg::PoolRatio;
+///
+/// let r = PoolRatio::parse("1:3").unwrap();
+/// assert_eq!(r.name(), "1:3");
+/// assert_eq!(r.prefill_count(8), 2);
+/// assert!(PoolRatio::parse("0:3").is_err());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolRatio {
+    /// Prefill-pool weight (≥ 1).
+    pub prefill: u32,
+    /// Decode-pool weight (≥ 1).
+    pub decode: u32,
+}
+
+impl Default for PoolRatio {
+    /// `1:3` — the quarter split the `phase` balancer has always used.
+    fn default() -> Self {
+        PoolRatio { prefill: 1, decode: 3 }
+    }
+}
+
+impl PoolRatio {
+    /// Parse a `P:D` spelling; both parts must be positive integers.
+    pub fn parse(s: &str) -> Result<PoolRatio, String> {
+        let (p, d) = s
+            .trim()
+            .split_once(':')
+            .ok_or_else(|| format!("pool ratio {s:?}: expected P:D (e.g. 1:3)"))?;
+        let prefill: u32 = p
+            .trim()
+            .parse()
+            .map_err(|_| format!("pool ratio {s:?}: bad prefill part {p:?}"))?;
+        let decode: u32 = d
+            .trim()
+            .parse()
+            .map_err(|_| format!("pool ratio {s:?}: bad decode part {d:?}"))?;
+        if prefill == 0 || decode == 0 {
+            return Err(format!("pool ratio {s:?}: both parts must be >= 1"));
+        }
+        Ok(PoolRatio { prefill, decode })
+    }
+
+    /// Stable spelling (CLI / report column).
+    pub fn name(&self) -> String {
+        format!("{}:{}", self.prefill, self.decode)
+    }
+
+    /// Nodes in the prefill (resp. long/phase) pool for a cluster of
+    /// `nodes`. At least one node lands on each side once there are two
+    /// nodes to split; a single node can't disaggregate (returns 0 —
+    /// colocated). At the default `1:3` this is `(nodes / 4).max(1)`,
+    /// bit-compatible with the phase balancer's historical quarter split.
+    pub fn prefill_count(&self, nodes: usize) -> usize {
+        if nodes < 2 {
+            return 0;
+        }
+        let total = (self.prefill + self.decode) as usize;
+        (nodes * self.prefill as usize / total)
+            .max(1)
+            .min(nodes - 1)
+    }
+}
+
+/// KV-cache transfer cost model for a prefill→decode handoff. Bytes are
+/// linear in the context (prompt + first token); the wire adds a fixed
+/// latency plus serialization time at the link rate, and moving the
+/// bytes costs energy charged to *both* ends of the transfer (send-side
+/// DMA + receive-side write). Defaults model a 200 Gb/s fabric and an
+/// fp16 KV cache of a mid-size model (~0.8 MB/token).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KvLinkModel {
+    /// KV-cache footprint per context token, bytes.
+    pub bytes_per_token: f64,
+    /// Link rate, gigabits per second.
+    pub gbps: f64,
+    /// Fixed per-transfer latency (handshake + RDMA setup), seconds.
+    pub latency_s: f64,
+    /// Energy to move one byte across the link, picojoules — charged to
+    /// each end.
+    pub pj_per_byte: f64,
+}
+
+impl Default for KvLinkModel {
+    fn default() -> Self {
+        KvLinkModel {
+            bytes_per_token: 819_200.0,
+            gbps: 200.0,
+            latency_s: 0.001,
+            pj_per_byte: 100.0,
+        }
+    }
+}
+
+impl KvLinkModel {
+    /// KV bytes for a stream with `ctx_tokens` of context.
+    pub fn kv_bytes(&self, ctx_tokens: f64) -> f64 {
+        ctx_tokens * self.bytes_per_token
+    }
+
+    /// Wall-clock transfer time for `bytes`, seconds.
+    pub fn transfer_s(&self, bytes: f64) -> f64 {
+        self.latency_s + bytes / (self.gbps * 1e9 / 8.0)
+    }
+
+    /// Energy charged to *one* end for `bytes`, joules.
+    pub fn transfer_j(&self, bytes: f64) -> f64 {
+        bytes * self.pj_per_byte * 1e-12
+    }
+}
+
+/// Disaggregation settings beyond the pool split itself (the split lives
+/// in `ClusterConfig::pool_ratio`, shared with the phase balancer).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DisaggConfig {
+    /// The KV-transfer interconnect.
+    pub link: KvLinkModel,
+    /// DVFS method override for prefill-pool nodes (`None` = the
+    /// cluster-wide method). Prefill nodes chase TTFT.
+    pub prefill_method: Option<Method>,
+    /// DVFS method override for decode-pool nodes (`None` = the
+    /// cluster-wide method). Decode nodes chase the TBT tail.
+    pub decode_method: Option<Method>,
+}
+
+/// Migration accounting for one cluster run (the `migration{...}` JSON
+/// section and the cluster report line).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MigrationReport {
+    /// Streams handed prefill→decode.
+    pub count: u64,
+    /// KV bytes moved (relays re-count: the bytes crossed the wire again).
+    pub kv_bytes: f64,
+    /// Transfer energy charged across both ends, joules.
+    pub transfer_j: f64,
+    /// Deliveries that found their target dead and were re-sent to a
+    /// fresh target (mid-migration node failure).
+    pub relays: u64,
+}
+
+/// EcoRoute-style decode-pool router: among alive nodes in
+/// `nodes[pool_start..]`, prefer a healthy TBT tail (≤ `tbt_target_s`),
+/// then the fewest active streams per granted watt (infinite grants
+/// normalize to 1 W, degrading to batch depth — the `powergrant`
+/// idiom); ties break toward the lowest index. If the whole decode pool
+/// is down, spill into the prefill pool — every node is a full engine,
+/// so a prefill node can decode in a pinch (the KV still pays the link).
+/// `None` only when every node in the cluster is dead.
+pub fn eco_route(nodes: &[NodeState], pool_start: usize, tbt_target_s: f64) -> Option<usize> {
+    let split = pool_start.min(nodes.len());
+    pick_decode(&nodes[split..], tbt_target_s)
+        .map(|i| split + i)
+        .or_else(|| pick_decode(&nodes[..split], tbt_target_s))
+}
+
+fn pick_decode(nodes: &[NodeState], tbt_target_s: f64) -> Option<usize> {
+    let mut best = None;
+    let mut best_key = (u8::MAX, f64::INFINITY);
+    for (i, n) in nodes.iter().enumerate() {
+        if !n.alive {
+            continue;
+        }
+        let unhealthy = (n.tbt_tail_p95_s > tbt_target_s) as u8;
+        let grant = if n.granted_w.is_finite() {
+            n.granted_w.max(1e-9)
+        } else {
+            1.0
+        };
+        let score = (n.active_streams + 1) as f64 / grant;
+        // Strict `<`: ties break toward the lowest index.
+        if best.is_none() || (unhealthy, score) < best_key {
+            best_key = (unhealthy, score);
+            best = Some(i);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_parses_and_rejects() {
+        assert_eq!(PoolRatio::parse("1:3").unwrap(), PoolRatio::default());
+        assert_eq!(
+            PoolRatio::parse(" 2 : 1 ").unwrap(),
+            PoolRatio { prefill: 2, decode: 1 }
+        );
+        for bad in ["", "1", "1:", ":3", "0:3", "1:0", "a:b", "1:3:5"] {
+            assert!(PoolRatio::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn default_ratio_reproduces_quarter_split() {
+        // The phase balancer historically used (nodes / 4).max(1) once
+        // nodes >= 2; the default 1:3 ratio must match it exactly.
+        let r = PoolRatio::default();
+        assert_eq!(r.prefill_count(1), 0);
+        for n in 2..=64 {
+            assert_eq!(r.prefill_count(n), (n / 4).max(1), "nodes = {n}");
+        }
+    }
+
+    #[test]
+    fn ratio_splits_keep_both_pools_nonempty() {
+        for (p, d) in [(1, 1), (1, 2), (1, 4), (4, 1), (3, 2)] {
+            let r = PoolRatio { prefill: p, decode: d };
+            for n in 2..=32 {
+                let pc = r.prefill_count(n);
+                assert!(pc >= 1 && pc <= n - 1, "{p}:{d} at {n} nodes -> {pc}");
+            }
+        }
+    }
+
+    #[test]
+    fn link_model_costs_scale_with_context() {
+        let link = KvLinkModel::default();
+        let (small, big) = (link.kv_bytes(128.0), link.kv_bytes(4096.0));
+        assert!(big > small);
+        assert!(link.transfer_s(big) > link.transfer_s(small));
+        assert!(link.transfer_s(small) > link.latency_s);
+        assert!(link.transfer_j(big) > link.transfer_j(small));
+        // 4096 tokens at ~0.8 MB/token ≈ 3.4 GB ≈ 134 ms on 200 Gb/s.
+        let s = link.transfer_s(big);
+        assert!(s > 0.1 && s < 0.2, "transfer_s = {s}");
+    }
+
+    #[test]
+    fn eco_route_prefers_healthy_low_load() {
+        let mut nodes = vec![NodeState::default(); 4];
+        // Decode pool = nodes[1..]. Node 1 blown tail, node 2 busy,
+        // node 3 idle → node 3.
+        nodes[1].tbt_tail_p95_s = 0.5;
+        nodes[2].active_streams = 6;
+        assert_eq!(eco_route(&nodes, 1, 0.1), Some(3));
+        // Equal depth: the bigger grant wins.
+        nodes[3].active_streams = 6;
+        nodes[2].granted_w = 3000.0;
+        nodes[3].granted_w = 1000.0;
+        assert_eq!(eco_route(&nodes, 1, 0.1), Some(2));
+    }
+
+    #[test]
+    fn eco_route_spills_into_prefill_pool_then_gives_up() {
+        let mut nodes = vec![NodeState::default(); 3];
+        nodes[1].alive = false;
+        nodes[2].alive = false;
+        // Whole decode pool down: spill to the prefill node.
+        assert_eq!(eco_route(&nodes, 1, 0.1), Some(0));
+        nodes[0].alive = false;
+        assert_eq!(eco_route(&nodes, 1, 0.1), None);
+    }
+}

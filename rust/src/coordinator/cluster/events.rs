@@ -1,19 +1,42 @@
 //! The cluster event loop: N node engines interleaved on one virtual
 //! clock.
 //!
-//! The loop merges four deterministic event sources:
+//! The loop merges five deterministic event sources:
 //! * the arrival stream (the trace, pre-scheduled into a cluster queue),
 //! * the power arbiter's control epochs,
 //! * the fault plan's node-loss / node-recovery events (chaos layer),
+//! * stream migrations (disaggregated clusters: a finished prefill's KV
+//!   landing on its decode node after the modeled link latency),
 //! * each node engine's own pending events.
 //!
 //! At every iteration the earliest source wins; ties go cluster-first and
 //! then lowest-node-first, so the whole simulation is a pure function of
-//! (trace, config, fault plan, seed). An arriving request is assigned by
-//! the balancer from a *live* telemetry snapshot — which carries liveness
-//! and the arbiter's current watt grants — and injected into the chosen
-//! engine through the priority event lane, which makes a 1-node cluster
-//! replay bit-identical to a plain [`run`](crate::coordinator::run).
+//! (trace, config, fault plan, seed). Exact-equal-timestamp cluster
+//! events resolve in scheduling-order: arrivals, then faults, then power
+//! epochs, then migrations (runtime-scheduled, so they always draw the
+//! highest sequence numbers — a migration landing at the instant its
+//! target dies sees the post-fault alive set and relays). An arriving
+//! request is assigned by the balancer from a *live* telemetry snapshot —
+//! which carries liveness and the arbiter's current watt grants — and
+//! injected into the chosen engine through the priority event lane, which
+//! makes a 1-node cluster replay bit-identical to a plain
+//! [`run`](crate::coordinator::run).
+//!
+//! **Disaggregation (§migration contract).** With a [`DisaggConfig`] the
+//! first `pool_ratio.prefill_count(nodes)` nodes form the prefill pool:
+//! the ingress balancer sees only them, their engines run in migrate-out
+//! mode, and every finished prefill is routed by
+//! [`disagg::eco_route`] over live decode telemetry, charged the KV
+//! link's energy at *both* ends, and delivered as a `Migrate` event
+//! after the transfer latency. Conservation holds the same way it does
+//! for faults: the first token is counted only on the receiving node, a
+//! dead target at delivery relays to a fresh one, and a node failure on
+//! either side re-routes the work through ingress for a full re-prefill
+//! (the KV died with the node). `assignment` tracks the node currently
+//! owning each request — the sender's count moves to the receiver at
+//! delivery. If every routable node is transiently down the work is
+//! *deferred* — held by the loop and re-offered at the next recovery —
+//! never panicked on.
 //!
 //! **Scheduling is O(log N) per event (§Perf).** The next engine to step
 //! comes from a [`SourceHeap`] keyed on each engine's next-event time;
@@ -38,11 +61,12 @@
 //! the survivors, recovery clamps the rejoining node at the rejoin
 //! instant instead of letting it run uncapped until the next epoch.
 
-use crate::coordinator::cluster::balancer::{self, NodeState};
+use crate::coordinator::cluster::balancer::{self, Balancer, NodeState};
+use crate::coordinator::cluster::disagg::{self, DisaggConfig, MigrationReport};
 use crate::coordinator::cluster::faults::FaultKind;
 use crate::coordinator::cluster::power::{ArbiterStrategy, PowerArbiter};
 use crate::coordinator::cluster::{ClusterConfig, ClusterResult, PowerReport};
-use crate::coordinator::engine::{Engine, RunOptions, RunResult};
+use crate::coordinator::engine::{Engine, MigratedStream, RunOptions, RunResult};
 use crate::sim::{self, EventQueue, SourceHeap};
 use crate::workload::request::{Request, Trace};
 
@@ -53,6 +77,21 @@ enum ClusterEv {
     PowerEpoch,
     /// Index into the fault plan's event list.
     Fault(usize),
+    /// A migrated stream's KV transfer completes: index into the run's
+    /// pending-migration list (runtime-scheduled at prefill completion).
+    Migrate(usize),
+}
+
+/// One in-flight prefill→decode handoff (indexed by `ClusterEv::Migrate`;
+/// a relay re-targets the entry and re-schedules the same index).
+struct PendingMigration {
+    req: Request,
+    /// Prefill completion on the sender — the TTFT anchor.
+    prefill_done_s: f64,
+    /// Sending node (re-charged on a relay: it still holds the KV).
+    from: usize,
+    /// Current destination decode node.
+    target: usize,
 }
 
 /// Strategy for picking the next engine to step. The production path
@@ -147,6 +186,30 @@ fn snapshot_all(
     );
 }
 
+/// Ingress pick: the balancer sees `states[..ingress]` (the prefill pool
+/// when disaggregated, the whole cluster otherwise). If the balancer
+/// defers — only legitimate when every ingress node is down — fall back
+/// to the lowest-index alive node anywhere: each node is a full engine,
+/// so a decode node can colocate in a pinch (degraded mode). `None` only
+/// when the entire cluster is dark; the caller then defers the request
+/// until the next recovery.
+fn pick_ingress(
+    lb: &mut dyn Balancer,
+    t: f64,
+    req: &Request,
+    states: &[NodeState],
+    ingress: usize,
+) -> Option<usize> {
+    if let Some(node) = lb.assign(t, req, &states[..ingress]) {
+        return Some(node);
+    }
+    debug_assert!(
+        states[..ingress].iter().all(|s| !s.alive),
+        "balancer deferred with an alive ingress node"
+    );
+    states.iter().position(|s| s.alive)
+}
+
 /// Run `trace` across the cluster as one interleaved event-driven
 /// simulation, honoring the config's node specs, fault plan and arbiter
 /// strategy. Panics on an invalid fault plan (validate at the CLI for a
@@ -177,12 +240,19 @@ fn run_cluster_impl<S: EngineSelector>(
     ccfg.faults
         .validate(ccfg.nodes)
         .unwrap_or_else(|e| panic!("invalid fault plan: {e}"));
-    // Telemetry-driven balancers and the SLO-pressure arbiter read the
-    // per-node TBT tail, so keep it live for them; front-end-only
-    // policies (rr, leastwork) never look, so skip the per-token cost.
-    // Everything else passes through.
+    // Disaggregation: first `prefill_pool` nodes prefill + migrate out,
+    // the rest decode. 0 = colocated (disagg unset, or a 1-node cluster
+    // that cannot split) — every migration path below is then dormant.
+    let prefill_pool = ccfg.prefill_pool();
+    let link = ccfg.disagg.unwrap_or_default().link;
+    let tbt_target_s = ccfg.node.slo.tbt_p95_s;
+    // Telemetry-driven balancers, the SLO-pressure arbiter and the
+    // migration router read the per-node TBT tail, so keep it live for
+    // them; front-end-only policies (rr, leastwork) never look, so skip
+    // the per-token cost. Everything else passes through.
     let wants_tail = !ccfg.lb.frontend_only()
-        || (ccfg.power_cap_w.is_some() && ccfg.arbiter == ArbiterStrategy::SloPressure);
+        || (ccfg.power_cap_w.is_some() && ccfg.arbiter == ArbiterStrategy::SloPressure)
+        || prefill_pool > 0;
     let node_opts = RunOptions {
         track_tbt_tail: opts.track_tbt_tail || wants_tail,
         ..opts.clone()
@@ -193,6 +263,19 @@ fn run_cluster_impl<S: EngineSelector>(
             cfg.seed = ccfg.node.seed.wrapping_add(n as u64);
             if !ccfg.node_specs.is_empty() {
                 ccfg.node_specs[n % ccfg.node_specs.len()].apply(&mut cfg);
+            }
+            // Per-pool DVFS: each pool may run its own method against
+            // its own SLO (TTFT on prefill nodes, TBT tail on decode).
+            if prefill_pool > 0 {
+                let d: DisaggConfig = ccfg.disagg.expect("prefill_pool > 0 implies disagg");
+                let over = if n < prefill_pool {
+                    d.prefill_method
+                } else {
+                    d.decode_method
+                };
+                if let Some(m) = over {
+                    cfg.method = m;
+                }
             }
             cfg
         })
@@ -212,20 +295,31 @@ fn run_cluster_impl<S: EngineSelector>(
     for e in engines.iter_mut() {
         e.begin();
     }
+    for e in engines[..prefill_pool].iter_mut() {
+        e.enable_migrate_out();
+    }
 
-    let mut lb = balancer::build(ccfg.lb, ccfg.nodes, ccfg.node.slo.tbt_p95_s);
+    // Disaggregated ingress balances over the prefill pool only.
+    let ingress = if prefill_pool > 0 {
+        prefill_pool
+    } else {
+        ccfg.nodes
+    };
+    let mut lb = balancer::build(ccfg.lb, ingress, tbt_target_s, ccfg.pool_ratio);
     let mut alive = vec![true; ccfg.nodes];
     // Latest worst-case watt grant per node (∞ = uncapped); the
     // `powergrant` balancer routes on this.
     let mut granted_w = vec![f64::INFINITY; ccfg.nodes];
     let mut arbiter = ccfg.power_cap_w.map(|cap| {
-        PowerArbiter::new(
+        let mut a = PowerArbiter::new(
             cap,
             ccfg.power_epoch_s,
             ccfg.nodes,
             ccfg.arbiter,
             ccfg.node.slo.tbt_p95_s,
-        )
+        );
+        a.set_prefill_pool(prefill_pool);
+        a
     });
     if let Some(a) = arbiter.as_mut() {
         a.apply_initial(&mut engines, &alive);
@@ -263,6 +357,16 @@ fn run_cluster_impl<S: EngineSelector>(
     // completions only move inside Engine::step, so the pre-PR5 O(N)
     // per-event re-sum is not needed on the hot path.
     let mut done: u64 = 0;
+    // Disaggregation state: in-flight handoffs (`pending`, indexed by
+    // `ClusterEv::Migrate`; relays re-target an entry in place), handoffs
+    // with no routable target (`parked`, re-offered at the next
+    // recovery), arrivals held while the cluster was dark (`deferred`),
+    // the reused per-step migration drain buffer, and the run's ledger.
+    let mut pending: Vec<PendingMigration> = Vec::new();
+    let mut parked: Vec<usize> = Vec::new();
+    let mut deferred: Vec<Request> = Vec::new();
+    let mut mig_buf: Vec<MigratedStream> = Vec::new();
+    let mut migration = MigrationReport::default();
 
     let mut sel = S::new(ccfg.nodes);
     sel.refresh_all(&engines);
@@ -276,19 +380,29 @@ fn run_cluster_impl<S: EngineSelector>(
             (Some(tc), Some((_, tn))) => tc <= tn,
             (Some(_), None) => true,
             (None, Some(_)) => false,
-            (None, None) => break, // fully drained yet incomplete: impossible
+            // Fully drained yet incomplete: only possible when the whole
+            // cluster died for good with work deferred — nothing left to
+            // wake it, so stop (conservation then shows up as incomplete
+            // requests, not lost ones).
+            (None, None) => break,
         };
         if take_cluster {
             let (t, ev) = q.pop().expect("peeked");
             match ev {
                 ClusterEv::Arrive(i) => {
                     snapshot_all(&engines, &alive, &granted_w, &mut states);
-                    let node = lb.assign(t, &trace.requests[i], &states);
-                    assert!(node < ccfg.nodes, "balancer returned node {node}");
-                    assert!(alive[node], "balancer routed to dead node {node}");
-                    engines[node].inject(t, trace.requests[i].clone());
-                    assignment[node] += 1;
-                    sel.update(node, &engines);
+                    match pick_ingress(lb.as_mut(), t, &trace.requests[i], &states, ingress) {
+                        Some(node) => {
+                            assert!(node < ccfg.nodes, "balancer returned node {node}");
+                            assert!(alive[node], "balancer routed to dead node {node}");
+                            engines[node].inject(t, trace.requests[i].clone());
+                            assignment[node] += 1;
+                            sel.update(node, &engines);
+                        }
+                        // Whole cluster dark: hold the request, re-offer it
+                        // at the next recovery.
+                        None => deferred.push(trace.requests[i].clone()),
+                    }
                 }
                 ClusterEv::PowerEpoch => {
                     if let Some(a) = arbiter.as_mut() {
@@ -327,14 +441,18 @@ fn run_cluster_impl<S: EngineSelector>(
                             // later ones see).
                             for req in drain_buf.drain(..) {
                                 snapshot_all(&engines, &alive, &granted_w, &mut states);
-                                let node = lb.assign(t, &req, &states);
-                                assert!(
-                                    node < ccfg.nodes && alive[node],
-                                    "re-route picked dead node {node}"
-                                );
-                                engines[node].inject(t, req);
-                                assignment[node] += 1;
-                                sel.update(node, &engines);
+                                match pick_ingress(lb.as_mut(), t, &req, &states, ingress) {
+                                    Some(node) => {
+                                        assert!(
+                                            node < ccfg.nodes && alive[node],
+                                            "re-route picked dead node {node}"
+                                        );
+                                        engines[node].inject(t, req);
+                                        assignment[node] += 1;
+                                        sel.update(node, &engines);
+                                    }
+                                    None => deferred.push(req),
+                                }
                             }
                         }
                         FaultKind::Up => {
@@ -353,6 +471,111 @@ fn run_cluster_impl<S: EngineSelector>(
                                 }
                                 sel.refresh_all(&engines);
                             }
+                            // A node is back: re-offer everything held
+                            // while the cluster was dark. Arrivals first
+                            // (their sequence numbers predate the parked
+                            // handoffs), then parked migrations.
+                            for req in std::mem::take(&mut deferred) {
+                                snapshot_all(&engines, &alive, &granted_w, &mut states);
+                                match pick_ingress(lb.as_mut(), t, &req, &states, ingress) {
+                                    Some(node) => {
+                                        engines[node].inject(t, req);
+                                        assignment[node] += 1;
+                                        sel.update(node, &engines);
+                                    }
+                                    None => deferred.push(req),
+                                }
+                            }
+                            for idx in std::mem::take(&mut parked) {
+                                let from = pending[idx].from;
+                                if !alive[from] {
+                                    // The KV died with the sender: full
+                                    // re-prefill through ingress.
+                                    let req = pending[idx].req.clone();
+                                    rerouted += 1;
+                                    snapshot_all(&engines, &alive, &granted_w, &mut states);
+                                    match pick_ingress(lb.as_mut(), t, &req, &states, ingress) {
+                                        Some(node) => {
+                                            engines[node].inject(t, req);
+                                            assignment[node] += 1;
+                                            sel.update(node, &engines);
+                                        }
+                                        None => deferred.push(req),
+                                    }
+                                    continue;
+                                }
+                                snapshot_all(&engines, &alive, &granted_w, &mut states);
+                                match disagg::eco_route(&states, prefill_pool, tbt_target_s) {
+                                    Some(nt) => {
+                                        let bytes = link
+                                            .kv_bytes(pending[idx].req.prompt_len as f64 + 1.0);
+                                        let j = link.transfer_j(bytes);
+                                        engines[from].add_transfer_energy(j);
+                                        engines[nt].add_transfer_energy(j);
+                                        migration.kv_bytes += bytes;
+                                        migration.transfer_j += 2.0 * j;
+                                        if pending[idx].target == usize::MAX {
+                                            migration.count += 1; // first send
+                                        } else {
+                                            migration.relays += 1;
+                                        }
+                                        pending[idx].target = nt;
+                                        q.schedule(
+                                            t + link.transfer_s(bytes),
+                                            ClusterEv::Migrate(idx),
+                                        );
+                                    }
+                                    None => parked.push(idx),
+                                }
+                            }
+                        }
+                    }
+                }
+                ClusterEv::Migrate(idx) => {
+                    let from = pending[idx].from;
+                    let target = pending[idx].target;
+                    if !alive[from] {
+                        // Sender died while the KV was on the wire — the
+                        // transfer never completed and the KV is gone.
+                        // Full re-prefill through ingress.
+                        let req = pending[idx].req.clone();
+                        rerouted += 1;
+                        snapshot_all(&engines, &alive, &granted_w, &mut states);
+                        match pick_ingress(lb.as_mut(), t, &req, &states, ingress) {
+                            Some(node) => {
+                                engines[node].inject(t, req);
+                                assignment[node] += 1;
+                                sel.update(node, &engines);
+                            }
+                            None => deferred.push(req),
+                        }
+                    } else if alive[target] {
+                        engines[target].migrate_in(
+                            t,
+                            pending[idx].req.clone(),
+                            pending[idx].prefill_done_s,
+                        );
+                        assignment[target] += 1;
+                        sel.update(target, &engines);
+                    } else {
+                        // Target died while the KV was on the wire; the
+                        // sender still holds it — relay to a fresh target,
+                        // both ends paying the link again.
+                        snapshot_all(&engines, &alive, &granted_w, &mut states);
+                        match disagg::eco_route(&states, prefill_pool, tbt_target_s) {
+                            Some(nt) => {
+                                let bytes =
+                                    link.kv_bytes(pending[idx].req.prompt_len as f64 + 1.0);
+                                let j = link.transfer_j(bytes);
+                                engines[from].add_transfer_energy(j);
+                                engines[nt].add_transfer_energy(j);
+                                migration.kv_bytes += bytes;
+                                migration.transfer_j += 2.0 * j;
+                                migration.relays += 1;
+                                pending[idx].target = nt;
+                                q.schedule(t + link.transfer_s(bytes), ClusterEv::Migrate(idx));
+                            }
+                            None => parked.push(idx),
                         }
                     }
                 }
@@ -362,6 +585,51 @@ fn run_cluster_impl<S: EngineSelector>(
             let before = engines[i].completed();
             engines[i].step();
             done += engines[i].completed() - before;
+            // Prefill-pool nodes surface finished prefills here; route
+            // each to a decode node and put its KV on the wire. Ownership
+            // moves now (`assignment[i] -= 1`) and lands on the receiver
+            // at delivery; in flight, the request is counted nowhere.
+            if i < prefill_pool {
+                engines[i].take_migrations(&mut mig_buf);
+                for m in mig_buf.drain(..) {
+                    snapshot_all(&engines, &alive, &granted_w, &mut states);
+                    assignment[i] -= 1;
+                    let idx = pending.len();
+                    match disagg::eco_route(&states, prefill_pool, tbt_target_s) {
+                        Some(target) => {
+                            let bytes = link.kv_bytes(m.req.prompt_len as f64 + 1.0);
+                            let j = link.transfer_j(bytes);
+                            engines[i].add_transfer_energy(j);
+                            engines[target].add_transfer_energy(j);
+                            migration.count += 1;
+                            migration.kv_bytes += bytes;
+                            migration.transfer_j += 2.0 * j;
+                            pending.push(PendingMigration {
+                                req: m.req,
+                                prefill_done_s: m.prefill_done_s,
+                                from: i,
+                                target,
+                            });
+                            q.schedule(
+                                m.prefill_done_s + link.transfer_s(bytes),
+                                ClusterEv::Migrate(idx),
+                            );
+                        }
+                        // Unreachable while the sender lives (eco_route
+                        // spills into the prefill pool), but kept total:
+                        // park the handoff until the next recovery.
+                        None => {
+                            pending.push(PendingMigration {
+                                req: m.req,
+                                prefill_done_s: m.prefill_done_s,
+                                from: i,
+                                target: usize::MAX,
+                            });
+                            parked.push(idx);
+                        }
+                    }
+                }
+            }
             sel.update(i, &engines);
         }
     }
@@ -409,5 +677,6 @@ fn run_cluster_impl<S: EngineSelector>(
         wasted_tokens,
         fault_events,
         events_processed,
+        migration: (prefill_pool > 0).then_some(migration),
     }
 }

@@ -23,21 +23,36 @@
 //!   demand-proportional (default) or SLO-pressure (TBT-tail weighted);
 //!   the `powergrant` balancer closes the loop by routing on live grants.
 //!
+//! Disaggregation (`disagg`, DualScale/VoltanaLLM style): an optional
+//! prefill/decode pool split. Arrivals land on the prefill pool only;
+//! each finished prefill *migrates* — a first-class cluster event with a
+//! KV-transfer cost model — to a decode node picked by an EcoRoute-style
+//! router over live decode telemetry. Each pool can run its own DVFS
+//! method against its own SLO. With no [`DisaggConfig`] every
+//! disaggregation path is dormant and the loop is bit-exact with the
+//! colocated event loop.
+//!
 //! Contracts:
 //! * Balancers implement [`balancer::Balancer`]; register in
-//!   [`balancer::build`] + add an [`LbPolicy`] variant.
+//!   [`balancer::build`] + add an [`LbPolicy`] variant. A balancer
+//!   returns `None` (defer) when every candidate node is down — it must
+//!   never panic on transient all-dead windows.
 //! * The arbiter owns watt→clock conversion; engines only ever see a
 //!   ladder-frequency ceiling, policies keep requesting clocks freely.
 //! * Everything stays deterministic: a 1-node cluster is bit-identical to
-//!   a plain [`run`](crate::coordinator::run) and an empty [`FaultPlan`]
-//!   is bit-identical to no chaos layer at all (both tested).
+//!   a plain [`run`](crate::coordinator::run), an empty [`FaultPlan`]
+//!   is bit-identical to no chaos layer at all, and a disabled
+//!   [`DisaggConfig`] is bit-identical to the colocated loop (all
+//!   tested).
 
 pub mod balancer;
+pub mod disagg;
 pub mod events;
 pub mod faults;
 pub mod power;
 
 pub use balancer::{Balancer, LbPolicy, NodeState};
+pub use disagg::{DisaggConfig, KvLinkModel, MigrationReport, PoolRatio};
 pub use events::run_cluster;
 pub use faults::{FaultEvent, FaultKind, FaultPlan, FaultSpec};
 pub use power::{ArbiterStrategy, PowerArbiter, PowerEpoch};
@@ -186,6 +201,14 @@ pub struct ClusterConfig {
     /// Node-loss/recovery schedule (empty = no chaos, bit-identical to
     /// the pre-chaos event loop).
     pub faults: FaultPlan,
+    /// Prefill:decode pool split. Sizes the `phase` balancer's long pool
+    /// always, and the disaggregated prefill pool when `disagg` is set.
+    /// The default `1:3` reproduces the historical quarter split.
+    pub pool_ratio: PoolRatio,
+    /// Prefill/decode disaggregation (`None` = colocated, bit-identical
+    /// to the pre-disagg event loop). Requires `nodes >= 2` to actually
+    /// split; a 1-node cluster degrades to colocated.
+    pub disagg: Option<DisaggConfig>,
 }
 
 impl ClusterConfig {
@@ -200,6 +223,8 @@ impl ClusterConfig {
             power_epoch_s: 1.0,
             arbiter: ArbiterStrategy::DemandProportional,
             faults: FaultPlan::default(),
+            pool_ratio: PoolRatio::default(),
+            disagg: None,
         }
     }
 
@@ -227,6 +252,29 @@ impl ClusterConfig {
     pub fn with_faults(mut self, faults: FaultPlan) -> ClusterConfig {
         self.faults = faults;
         self
+    }
+
+    /// Set the prefill:decode pool split (phase balancer + disagg pools).
+    pub fn with_pool_ratio(mut self, ratio: PoolRatio) -> ClusterConfig {
+        self.pool_ratio = ratio;
+        self
+    }
+
+    /// Enable prefill/decode disaggregation (pool split per
+    /// `pool_ratio`, stream migration at prefill completion).
+    pub fn with_disagg(mut self, disagg: DisaggConfig) -> ClusterConfig {
+        self.disagg = Some(disagg);
+        self
+    }
+
+    /// Nodes in the prefill pool when disaggregated (0 = colocated:
+    /// disagg unset, or a 1-node cluster that cannot split).
+    pub fn prefill_pool(&self) -> usize {
+        if self.disagg.is_some() {
+            self.pool_ratio.prefill_count(self.nodes)
+        } else {
+            0
+        }
     }
 
     /// Resolved spec name of node `i` (`"dgx"` when homogeneous —
@@ -290,6 +338,10 @@ pub struct ClusterResult {
     /// Discrete events processed across every node's loop (the cluster
     /// analogue of [`RunResult::events_processed`]; perf-bench metric).
     pub events_processed: u64,
+    /// Prefill→decode handoff accounting; present iff the run was
+    /// disaggregated. (`assignment` tracks the node currently *owning*
+    /// each request, so a migrated request counts at its decode home.)
+    pub migration: Option<MigrationReport>,
 }
 
 impl ClusterResult {
@@ -341,12 +393,15 @@ pub fn balance_label(ratio: f64, starved: usize) -> String {
 /// cheap offline preview of ingress decisions.
 pub fn assign(trace: &Trace, nodes: usize, lb: LbPolicy) -> Vec<usize> {
     assert!(nodes >= 1);
-    let mut b = balancer::build(lb, nodes, 0.1);
+    let mut b = balancer::build(lb, nodes, 0.1, PoolRatio::default());
     let states = vec![NodeState::default(); nodes];
     trace
         .requests
         .iter()
-        .map(|r| b.assign(r.arrival_s, r, &states))
+        .map(|r| {
+            b.assign(r.arrival_s, r, &states)
+                .expect("offline assign: every node is alive")
+        })
         .collect()
 }
 
@@ -475,10 +530,18 @@ mod tests {
             .with_power_cap(9000.0, 0.5)
             .with_arbiter(ArbiterStrategy::SloPressure)
             .with_node_specs(vec![NodeSpec::eff(), NodeSpec::legacy()])
-            .with_faults(FaultPlan::parse("down@10:1,up@20:1").unwrap());
+            .with_faults(FaultPlan::parse("down@10:1,up@20:1").unwrap())
+            .with_pool_ratio(PoolRatio { prefill: 1, decode: 2 })
+            .with_disagg(DisaggConfig::default());
         assert_eq!(ccfg.power_cap_w, Some(9000.0));
         assert_eq!(ccfg.arbiter, ArbiterStrategy::SloPressure);
         assert_eq!(ccfg.faults.events.len(), 2);
+        // 3 nodes at 1:2 → 1 prefill node; unset disagg = colocated (0).
+        assert_eq!(ccfg.prefill_pool(), 1);
+        assert_eq!(
+            ClusterConfig::new(3, LbPolicy::PowerGrant, Config::default()).prefill_pool(),
+            0
+        );
         // Specs cycle over the node count.
         assert_eq!(ccfg.node_spec_name(0), "eff");
         assert_eq!(ccfg.node_spec_name(1), "legacy");

@@ -146,6 +146,10 @@ pub struct PowerArbiter {
     pub strategy: ArbiterStrategy,
     /// Decode P95 TBT target the SLO-pressure strategy normalizes by.
     tbt_target_s: f64,
+    /// Disaggregated clusters: nodes `< prefill_pool` chase TTFT, not the
+    /// TBT tail — the SLO-pressure strategy weighs them by prefill
+    /// backlog pressure instead. 0 = colocated (every node decodes).
+    prefill_pool: usize,
     last_energy_j: Vec<f64>,
     last_t: f64,
     /// Every decision taken so far, in order.
@@ -169,10 +173,21 @@ impl PowerArbiter {
             epoch_s,
             strategy,
             tbt_target_s,
+            prefill_pool: 0,
             last_energy_j: vec![0.0; nodes],
             last_t: 0.0,
             epochs: Vec::new(),
         }
+    }
+
+    /// Mark the first `prefill_pool` nodes as prefill-pool members (call
+    /// before the first arbitration; disaggregated clusters only). Their
+    /// SLO-pressure weight becomes TTFT backlog pressure
+    /// ([`Engine::prefill_pressure`]) — same normalized scale as the
+    /// decode nodes' tail ÷ target, so the two pools compete fairly for
+    /// headroom.
+    pub fn set_prefill_pool(&mut self, prefill_pool: usize) {
+        self.prefill_pool = prefill_pool;
     }
 
     /// Headroom weights per node under the active strategy; `None` means
@@ -205,12 +220,17 @@ impl PowerArbiter {
             ArbiterStrategy::SloPressure => masked(
                 engines
                     .iter()
+                    .enumerate()
                     .zip(alive)
-                    .map(|(e, &a)| {
-                        if a {
-                            (e.tbt_tail_p95() / self.tbt_target_s).clamp(0.0, MAX_PRESSURE)
-                        } else {
+                    .map(|((i, e), &a)| {
+                        if !a {
                             0.0
+                        } else if i < self.prefill_pool {
+                            // Prefill nodes have no decode tail; their SLO
+                            // is TTFT — weigh by prompt-backlog pressure.
+                            e.prefill_pressure().clamp(0.0, MAX_PRESSURE)
+                        } else {
+                            (e.tbt_tail_p95() / self.tbt_target_s).clamp(0.0, MAX_PRESSURE)
                         }
                     })
                     .collect(),

@@ -185,6 +185,20 @@ struct QueuedJob {
     req_idx: usize,
 }
 
+/// A stream whose prefill finished on a migrate-out node (P/D
+/// disaggregation) and now needs a decode home. The cluster loop drains
+/// these via [`Engine::take_migrations`], routes each one, charges the
+/// KV-transfer cost to both ends and delivers it with
+/// [`Engine::migrate_in`] after the modeled link latency.
+#[derive(Debug, Clone)]
+pub struct MigratedStream {
+    /// The request (re-injected into the receiving node's store).
+    pub req: Request,
+    /// When the prefill (and so the first token) finished on the sender —
+    /// the receiver's TTFT anchor, unaffected by transfer latency.
+    pub prefill_done_s: f64,
+}
+
 #[derive(Debug)]
 struct PrefillWorker {
     gpus: Vec<usize>,
@@ -224,6 +238,11 @@ struct StreamArena {
     // Cold fields, touched at admit/finish/abort:
     joined_t: Vec<f64>,
     req_idx: Vec<usize>,
+    /// TTFT recorded when the stream's prefill finished — locally or, for
+    /// a migrated-in stream, on the *sending* node (`joined_t` is the
+    /// local admission time, which for a migration is later by the KV
+    /// transfer; the TTFT must not include that).
+    ttft_s: Vec<f64>,
     /// Per-slot TBT buffer; cleared (capacity kept) when the slot frees.
     tbts: Vec<Vec<f64>>,
     /// Per-slot generation, bumped at free.
@@ -236,7 +255,8 @@ struct StreamArena {
 
 impl StreamArena {
     /// Claim a slot for a fresh stream; `tbt_capacity` pre-sizes the
-    /// slot's (possibly recycled) TBT buffer.
+    /// slot's (possibly recycled) TBT buffer, `ttft_s` is the stream's
+    /// already-final first-token latency (see the field doc).
     fn alloc(
         &mut self,
         req_idx: usize,
@@ -244,6 +264,7 @@ impl StreamArena {
         ctx: f64,
         t: f64,
         tbt_capacity: usize,
+        ttft_s: f64,
     ) -> StreamId {
         let slot = match self.free.pop() {
             Some(s) => s as usize,
@@ -254,6 +275,7 @@ impl StreamArena {
                 self.last_token_t.push(0.0);
                 self.joined_t.push(0.0);
                 self.req_idx.push(0);
+                self.ttft_s.push(0.0);
                 self.tbts.push(Vec::new());
                 self.gen.push(0);
                 s
@@ -264,6 +286,7 @@ impl StreamArena {
         self.last_token_t[slot] = t;
         self.joined_t[slot] = t;
         self.req_idx[slot] = req_idx;
+        self.ttft_s[slot] = ttft_s;
         debug_assert!(self.tbts[slot].is_empty(), "recycled TBT buffer not cleared");
         self.tbts[slot].reserve(tbt_capacity);
         self.live += 1;
@@ -382,6 +405,17 @@ pub struct Engine<'a> {
     /// collects batched + waiting stream ids here before aborting them,
     /// so node loss moves ids instead of collecting `Stream` structs).
     ids_scratch: Vec<StreamId>,
+    /// Disaggregation (prefill pool): finished prefills are handed out
+    /// for decode-pool migration instead of admitted locally.
+    migrate_out: bool,
+    /// Streams awaiting pickup by the cluster loop (`migrate_out` only;
+    /// drained by [`Engine::take_migrations`] right after each step).
+    migrations: Vec<MigratedStream>,
+    /// KV-transfer energy charged to this node (both ends of every
+    /// migration pay; joules). Metered outside the GPU power integral —
+    /// it reaches the energy totals at [`Engine::finalize`], not the
+    /// arbiter's [`Engine::energy_now_j`] measurements.
+    transfer_energy_j: f64,
 }
 
 /// Replay `trace` under `cfg`.
@@ -496,6 +530,9 @@ impl<'a> Engine<'a> {
             wasted_tokens: 0,
             finished_scratch: Vec::new(),
             ids_scratch: Vec::new(),
+            migrate_out: false,
+            migrations: Vec::new(),
+            transfer_energy_j: 0.0,
         }
     }
 
@@ -615,7 +652,10 @@ impl<'a> Engine<'a> {
             slo: std::mem::replace(&mut self.slo, SloTracker::new(self.cfg.slo.clone())),
             prefill_energy_j: prefill_energy,
             decode_energy_j: decode_energy,
-            total_energy_j: prefill_energy + decode_energy,
+            // Whole node = both GPU pools plus this node's share of any
+            // KV-transfer energy (0.0 outside disaggregated clusters, so
+            // colocated totals are bit-identical).
+            total_energy_j: prefill_energy + decode_energy + self.transfer_energy_j,
             generated_tokens: self.generated_tokens,
             completed: self.completed,
             sim_duration_s: end_t,
@@ -804,6 +844,12 @@ impl<'a> Engine<'a> {
                 drained.push(requests[req_idx].clone());
             }
         });
+        // Undelivered migrations die with the node's KV cache: re-route
+        // for a full re-prefill elsewhere. No token rollback — the
+        // migrate-out path never counted one (the receiver would have).
+        for m in self.migrations.drain(..) {
+            drained.push(m.req);
+        }
         self.outstanding_prompt_tok = 0;
         if self.tbt_tail.is_some() {
             self.tbt_tail = Some(SlidingP95::new(TBT_TAIL_WINDOW));
@@ -857,6 +903,80 @@ impl<'a> Engine<'a> {
         if self.opts.record_tps_series {
             self.q.schedule(t + 0.2, Ev::SampleTick);
         }
+    }
+
+    // -- disaggregation hooks (P/D pools) -------------------------------------
+
+    /// Mark this node as a disaggregated *prefill* node: finished
+    /// prefills queue for cluster migration instead of joining the local
+    /// decode pool. Cluster loop only, set before any event runs.
+    pub fn enable_migrate_out(&mut self) {
+        self.migrate_out = true;
+    }
+
+    /// Drain the streams whose prefill just finished into `out`
+    /// (migrate-out nodes; a no-op otherwise). The cluster loop calls
+    /// this right after every step of a prefill-pool node.
+    pub fn take_migrations(&mut self, out: &mut Vec<MigratedStream>) {
+        out.append(&mut self.migrations);
+    }
+
+    /// Charge one end of a KV transfer to this node's energy meter
+    /// (both the sender and the receiver pay; see `cluster::disagg`).
+    pub fn add_transfer_energy(&mut self, j: f64) {
+        self.transfer_energy_j += j;
+    }
+
+    /// KV-transfer energy charged to this node so far, joules.
+    pub fn transfer_energy_j(&self) -> f64 {
+        self.transfer_energy_j
+    }
+
+    /// Adopt a migrated stream at `t` (decode node, stepped mode): the
+    /// sender finished its prefill at `prefill_done_s` and the KV cache
+    /// has just landed here. The first token is counted *here* — the
+    /// sender skipped it — so an abort on this node rolls back exactly
+    /// the tokens this node counted. TTFT stays anchored at the sender's
+    /// prefill completion (the user saw the first token then), while the
+    /// transfer gap surfaces in the first decode TBT: `last_token_t`
+    /// starts at `prefill_done_s`, not at delivery.
+    pub fn migrate_in(&mut self, t: f64, req: Request, prefill_done_s: f64) {
+        debug_assert!(
+            self.replay_total.is_none(),
+            "migrate_in on a replay-mode engine"
+        );
+        debug_assert!(req.output_len > 1, "prefill-only requests never migrate");
+        let req_idx = self.requests.len();
+        self.requests.push(req.clone());
+        self.generated_tokens += 1; // the sender's first token, owned here
+        self.global_tps.record(t, 1);
+        let id = self.arena.alloc(
+            req_idx,
+            req.output_len - 1,
+            req.prompt_len as f64 + 1.0,
+            t,
+            req.output_len as usize,
+            prefill_done_s - req.arrival_s,
+        );
+        let slot = self.arena.slot(id);
+        self.arena.last_token_t[slot] = prefill_done_s;
+        self.admit_stream(t, id);
+    }
+
+    /// Prefill-side SLO pressure for the power arbiter (a disaggregated
+    /// prefill node has no decode tail to weigh): estimated backlog
+    /// seconds — outstanding prompt tokens at this node's max-clock
+    /// prefill rate, split across its workers — over the short-prompt
+    /// TTFT budget. 0.0 when idle; same scale as the decode pools'
+    /// tail-over-target ratio.
+    pub fn prefill_pressure(&self) -> f64 {
+        if self.outstanding_prompt_tok == 0 {
+            return 0.0;
+        }
+        let per_tok_s = self.perf.prefill_time(512, self.ladder().max_mhz) / 512.0;
+        let backlog_s = self.outstanding_prompt_tok as f64 * per_tok_s
+            / self.prefill_workers.len().max(1) as f64;
+        backlog_s / self.ttft_target_sm
     }
 
     // -- helpers -------------------------------------------------------------
@@ -1053,6 +1173,22 @@ impl<'a> Engine<'a> {
         self.outstanding_prompt_tok = self
             .outstanding_prompt_tok
             .saturating_sub(req.prompt_len as u64);
+        if self.migrate_out && req.output_len > 1 {
+            // Disaggregated prefill node: hand the stream to the cluster
+            // loop for decode-pool migration. No token is counted here —
+            // the receiving node counts the first token at
+            // [`Engine::migrate_in`], so a later abort rolls back exactly
+            // the tokens one node counted (§migration contract). Prefill-
+            // only requests (output_len <= 1) never migrate: there is no
+            // decode work to hand over, so they complete below as in the
+            // colocated path.
+            self.migrations.push(MigratedStream {
+                req,
+                prefill_done_s: t,
+            });
+            self.dispatch_prefill(t, worker);
+            return;
+        }
         let ttft = t - req.arrival_s;
         self.generated_tokens += 1; // prefill emits the first token
         self.global_tps.record(t, 1);
@@ -1080,8 +1216,9 @@ impl<'a> Engine<'a> {
                 req.prompt_len as f64 + 1.0,
                 t,
                 req.output_len as usize,
+                ttft,
             );
-            self.admit_stream(t, id, ttft);
+            self.admit_stream(t, id);
         }
         // Next job (or park).
         self.dispatch_prefill(t, worker);
@@ -1089,9 +1226,9 @@ impl<'a> Engine<'a> {
 
     // -- decode ----------------------------------------------------------------
 
-    fn admit_stream(&mut self, t: f64, stream: StreamId, _ttft: f64) {
-        // TTFT is recorded at completion together with TBT stats; stash it
-        // via the stream's joined_t (= prefill done time).
+    fn admit_stream(&mut self, t: f64, stream: StreamId) {
+        // TTFT is recorded at completion together with TBT stats; it was
+        // stashed in the stream's arena slot at prefill completion.
         let cap = self.cfg.pools.max_streams_per_decode_worker;
         // Argmin with the same first-minimum tie-breaking as the old
         // `filter(..).min_by_key(..)` scan, but short-circuiting on the
@@ -1227,7 +1364,7 @@ impl<'a> Engine<'a> {
     fn finish_stream(&mut self, t: f64, id: StreamId) {
         let slot = self.arena.slot(id);
         let req = self.requests[self.arena.req_idx[slot]].clone();
-        let ttft = self.arena.joined_t[slot] - req.arrival_s;
+        let ttft = self.arena.ttft_s[slot];
         // Quickselect, not clone+sort: bit-identical nearest-rank P95
         // (see `percentile_in_place`), and the slot's buffer is cleared
         // in place on release so its reordering is irrelevant.

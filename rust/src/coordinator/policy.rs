@@ -19,6 +19,16 @@
 //!   guardrail.
 //! * [`PiTbtPolicy`] — a plain PI feedback controller on P95 TBT, the
 //!   simplest dynamic baseline.
+//!
+//! **Per-pool policies under disaggregation.** A disaggregated cluster
+//! (`[disagg]` / `--disagg`) may override the method per pool —
+//! `prefill_method` / `decode_method` in
+//! [`DisaggConfig`](crate::coordinator::cluster::disagg::DisaggConfig) —
+//! so each pool runs the governor suited to its own SLO: prefill nodes
+//! chase TTFT (their decode pool sits empty except for fault/spill
+//! traffic), decode nodes chase the TBT tail. Nothing here changes: the
+//! cluster loop simply builds each node's engine with its pool's method,
+//! and the policy sees an ordinary engine.
 
 use crate::config::{Config, Method};
 use crate::coordinator::telemetry::{ClockPlan, PoolView, TickSpec};

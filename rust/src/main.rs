@@ -238,7 +238,7 @@ fn microbench(args: &Args, duration: f64, seed: u64) -> Result<()> {
 
 fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
     use greenllm::bench::matrix::{matrix, MatrixConfig};
-    use greenllm::coordinator::cluster::{ArbiterStrategy, FaultSpec, LbPolicy, NodeSpec};
+    use greenllm::coordinator::cluster::{ArbiterStrategy, FaultSpec, LbPolicy, NodeSpec, PoolRatio};
     let mut cfg = MatrixConfig {
         model: args.get_or("model", "qwen3-14b").to_string(),
         duration_s: duration,
@@ -330,6 +330,27 @@ fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
                 .collect::<Result<Vec<_>>>()?
         };
     }
+    if let Some(spec) = args.get("disagg") {
+        // Validate every ratio eagerly so a typo fails here, not in a
+        // sweep worker thread.
+        cfg.disaggs = spec
+            .split(',')
+            .map(|s| {
+                let s = s.trim();
+                if s == "off" {
+                    Ok(s.to_string())
+                } else {
+                    PoolRatio::parse(s).map(|_| s.to_string()).map_err(|e| anyhow!(e))
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if cfg.disaggs.iter().any(|d| d != "off") && cfg.nodes.iter().all(|&n| n < 2) {
+            return Err(anyhow!(
+                "--disagg needs a node count >= 2 somewhere in --nodes to split \
+                 into prefill/decode pools"
+            ));
+        }
+    }
     if cfg.traces.is_empty()
         || cfg.methods.is_empty()
         || cfg.margins.is_empty()
@@ -339,10 +360,11 @@ fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
         || cfg.shapes.is_empty()
         || cfg.faults.is_empty()
         || cfg.arbiters.is_empty()
+        || cfg.disaggs.is_empty()
     {
         return Err(anyhow!(
             "matrix needs at least one trace, method, margin, node count, balancer, \
-             cap, shape, fault spec and arbiter"
+             cap, shape, fault spec, arbiter and disagg entry"
         ));
     }
     // Validate every fault plan that will actually run against its node
@@ -367,7 +389,8 @@ fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
 
 fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
     use greenllm::coordinator::cluster::{
-        run_cluster, ArbiterStrategy, ClusterConfig, FaultSpec, LbPolicy, NodeSpec,
+        run_cluster, ArbiterStrategy, ClusterConfig, DisaggConfig, FaultSpec, KvLinkModel,
+        LbPolicy, NodeSpec, PoolRatio,
     };
     let node_cfg = base_config(args, seed)?;
     let lb_name = args.get_or("lb", &node_cfg.cluster.lb);
@@ -391,6 +414,34 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
         .map_err(|e| anyhow!(e))?
         .plan(nodes, duration);
     faults.validate(nodes).map_err(|e| anyhow!(e))?;
+    // Disaggregation: --disagg off|P:D (default from [disagg].ratio). The
+    // pool ratio also drives the phase balancer's long-pool split, and
+    // --pool-ratio can set it independently of disaggregation.
+    let disagg_name = args.get_or("disagg", &node_cfg.disagg.ratio);
+    let disagg_ratio = if disagg_name == "off" {
+        None
+    } else {
+        Some(PoolRatio::parse(disagg_name).map_err(|e| anyhow!(e))?)
+    };
+    if disagg_ratio.is_some() && nodes < 2 {
+        return Err(anyhow!(
+            "--disagg {disagg_name} needs --nodes >= 2 to split into prefill/decode pools"
+        ));
+    }
+    let pool_ratio = match args.get("pool-ratio") {
+        Some(s) => PoolRatio::parse(s).map_err(|e| anyhow!(e))?,
+        None => disagg_ratio.unwrap_or_default(),
+    };
+    let disagg_cfg = disagg_ratio.map(|_| DisaggConfig {
+        link: KvLinkModel {
+            bytes_per_token: node_cfg.disagg.bytes_per_token,
+            gbps: node_cfg.disagg.gbps,
+            latency_s: node_cfg.disagg.latency_s,
+            pj_per_byte: node_cfg.disagg.pj_per_byte,
+        },
+        prefill_method: Method::parse(&node_cfg.disagg.prefill_method),
+        decode_method: Method::parse(&node_cfg.disagg.decode_method),
+    });
     let trace = trace_from_args(args, duration, seed)?;
     let shape_label = if node_specs.is_empty() {
         "uniform".to_string()
@@ -402,7 +453,7 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
             .join(",")
     };
     println!(
-        "cluster: {nodes} nodes ({shape_label}), {} requests ({:.1} QPS aggregate), lb {}, cap {}, faults {}",
+        "cluster: {nodes} nodes ({shape_label}), {} requests ({:.1} QPS aggregate), lb {}, cap {}, faults {}, disagg {}",
         trace.requests.len(),
         trace.qps(),
         lb.name(),
@@ -416,6 +467,15 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
         } else {
             faults.render()
         },
+        match disagg_ratio {
+            Some(r) => format!(
+                "{} ({} prefill + {} decode)",
+                r.name(),
+                r.prefill_count(nodes),
+                nodes - r.prefill_count(nodes)
+            ),
+            None => "off".into(),
+        },
     );
     for method in [Method::DefaultNv, Method::GreenLlm] {
         let mut ccfg = ClusterConfig::new(
@@ -428,9 +488,13 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
         )
         .with_node_specs(node_specs.clone())
         .with_faults(faults.clone())
-        .with_arbiter(arbiter);
+        .with_arbiter(arbiter)
+        .with_pool_ratio(pool_ratio);
         if cap_w > 0.0 {
             ccfg = ccfg.with_power_cap(cap_w, epoch_s);
+        }
+        if let Some(d) = disagg_cfg {
+            ccfg = ccfg.with_disagg(d);
         }
         let r = run_cluster(&ccfg, &trace, &Default::default());
         let balance = r.balance_label();
@@ -456,6 +520,15 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
             println!(
                 "  chaos: {} fault events | {} requests re-routed | {} tokens wasted",
                 r.fault_events, r.rerouted, r.wasted_tokens
+            );
+        }
+        if let Some(m) = &r.migration {
+            println!(
+                "  migration: {} handoffs | {:.1} MB KV moved | {:.1} J transfer | {} relays",
+                m.count,
+                m.kv_bytes / 1e6,
+                m.transfer_j,
+                m.relays
             );
         }
         if let Some(p) = &r.power {
@@ -678,12 +751,16 @@ COMMANDS
               (--nodes N --lb rr|leastwork|jsq|phase|powergrant
                --node-spec dgx,eff,legacy|half|big --power-cap-w W
                --power-epoch-s S --arbiter demand|slo-pressure
-               --faults none|onedown|flap|\"down@40:1,up@80:1\" --trace ...)
+               --faults none|onedown|flap|\"down@40:1,up@80:1\"
+               --disagg off|P:D (prefill/decode pool split with explicit
+               KV-transfer stream migration; link model via [disagg] TOML)
+               --pool-ratio P:D (phase-balancer long-pool split) --trace ...)
   matrix      scenario matrix: traces x policies x margins x cluster shapes
               x chaos across threads (--traces a,b --methods a,b
                --margins 0.9,1.0 --nodes 1,2,4 --lb all|jsq,phase
                --power-cap-w 0,8000 --shapes uniform,dgx+eff+legacy
                --faults \"none;onedown;flap\" --arbiter all|demand,slo-pressure
+               --disagg off,1:1,1:2,1:3,1:4
                --threads N --json out.json --md out.md;
                the --faults axis separates entries with ';' because explicit
                fault plans contain commas)

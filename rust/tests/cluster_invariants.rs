@@ -6,7 +6,8 @@
 
 use greenllm::config::{Config, Method};
 use greenllm::coordinator::cluster::{
-    run_cluster, ArbiterStrategy, ClusterConfig, FaultPlan, FaultSpec, LbPolicy, NodeSpec,
+    run_cluster, ArbiterStrategy, ClusterConfig, DisaggConfig, FaultPlan, FaultSpec, KvLinkModel,
+    LbPolicy, NodeSpec, PoolRatio,
 };
 use greenllm::coordinator::engine::{run, RunOptions};
 use greenllm::workload::alibaba::{generate, ChatParams};
@@ -540,4 +541,247 @@ fn heap_scheduler_matches_scan_oracle_at_32_nodes() {
     assert_eq!(a.events_processed, b.events_processed);
     assert_eq!(a.assignment, b.assignment);
     assert_eq!(a.per_node.len(), 32);
+}
+
+// ---------------------------------------------------------------------------
+// PR 6: prefill/decode disaggregation — stream-migration conservation,
+// colocated bit-exactness, and fault tolerance of in-flight handoffs.
+// ---------------------------------------------------------------------------
+
+/// A disaggregated cluster config: JSQ ingress over the prefill pool,
+/// default KV link, per-pool policies inherited from the node config.
+fn disagg_cfg(nodes: usize, ratio: &str) -> ClusterConfig {
+    ClusterConfig::new(
+        nodes,
+        LbPolicy::JoinShortestQueue,
+        node_cfg(Method::GreenLlm, 9),
+    )
+    .with_pool_ratio(PoolRatio::parse(ratio).unwrap())
+    .with_disagg(DisaggConfig::default())
+}
+
+#[test]
+fn disagg_cluster_conserves_requests_and_tokens_across_handoffs() {
+    // Every multi-token request prefills in the prefill pool and decodes
+    // in the decode pool: the handoff must lose nothing — exact request,
+    // token, and assignment conservation, with a live migration ledger.
+    let trace = chat(12.0, 45.0, 3);
+    let expect_tokens: u64 = trace.requests.iter().map(|r| r.output_len as u64).sum();
+    for ratio in ["1:1", "1:3"] {
+        for nodes in [2, 4] {
+            let r = run_cluster(&disagg_cfg(nodes, ratio), &trace, &RunOptions::default());
+            assert_eq!(
+                r.completed as usize,
+                trace.requests.len(),
+                "{ratio} x{nodes}: lost requests across migration"
+            );
+            assert_eq!(
+                r.generated_tokens, expect_tokens,
+                "{ratio} x{nodes}: token conservation across migration"
+            );
+            assert_eq!(
+                r.assignment.iter().sum::<usize>(),
+                trace.requests.len(),
+                "{ratio} x{nodes}: assignment ownership-move accounting"
+            );
+            let m = r.migration.expect("split cluster reports migrations");
+            assert!(m.count > 0, "{ratio} x{nodes}: no streams migrated");
+            assert!(m.count <= r.completed, "{ratio} x{nodes}");
+            assert!(m.kv_bytes > 0.0, "{ratio} x{nodes}: KV bytes not metered");
+            assert!(m.transfer_j > 0.0, "{ratio} x{nodes}: link energy not metered");
+            assert_eq!(m.relays, 0, "{ratio} x{nodes}: relays without faults");
+        }
+    }
+}
+
+#[test]
+fn disagg_off_ignores_pool_ratio_and_reports_no_migration() {
+    // The colocated path must be byte-for-byte untouched by this PR:
+    // setting a pool ratio WITHOUT enabling disagg changes nothing for a
+    // frontend-only balancer, and no migration ledger appears.
+    let trace = chat(10.0, 40.0, 11);
+    let base = ClusterConfig::new(3, LbPolicy::JoinShortestQueue, node_cfg(Method::GreenLlm, 7));
+    let ratioed = base.clone().with_pool_ratio(PoolRatio::parse("1:1").unwrap());
+    let a = run_cluster(&base, &trace, &RunOptions::default());
+    let b = run_cluster(&ratioed, &trace, &RunOptions::default());
+    assert!(a.migration.is_none(), "colocated run grew a migration ledger");
+    assert!(b.migration.is_none());
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    assert_eq!(a.assignment, b.assignment);
+    for (x, y) in a.per_node.iter().zip(&b.per_node) {
+        assert_eq!(x.events_processed, y.events_processed);
+        assert_eq!(x.total_energy_j.to_bits(), y.total_energy_j.to_bits());
+    }
+}
+
+#[test]
+fn one_node_disagg_collapses_to_colocated_bit_exact() {
+    // A 1-node cluster cannot split (prefill_count == 0), so `--disagg`
+    // there must degrade to the plain colocated loop: same bits, no
+    // migration section.
+    let trace = chat(5.0, 40.0, 11);
+    let plain = ClusterConfig::new(1, LbPolicy::JoinShortestQueue, node_cfg(Method::GreenLlm, 23));
+    let split = plain
+        .clone()
+        .with_pool_ratio(PoolRatio::parse("1:1").unwrap())
+        .with_disagg(DisaggConfig::default());
+    assert_eq!(split.prefill_pool(), 0);
+    let a = run_cluster(&plain, &trace, &RunOptions::default());
+    let b = run_cluster(&split, &trace, &RunOptions::default());
+    assert!(b.migration.is_none());
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    assert_eq!(a.generated_tokens, b.generated_tokens);
+    assert_eq!(a.per_node[0].events_processed, b.per_node[0].events_processed);
+}
+
+#[test]
+fn mid_migration_target_failure_relays_and_conserves() {
+    // Slow the KV link to 2 s per handoff, then kill decode node 3 a
+    // third of the way in: handoffs on the wire at the fault must relay
+    // to a surviving decode node with both ends re-charged, and streams
+    // already resident on the victim re-prefill through ingress. Nothing
+    // may be lost either way.
+    let trace = chat(12.0, 45.0, 3);
+    let expect_tokens: u64 = trace.requests.iter().map(|r| r.output_len as u64).sum();
+    let slow = DisaggConfig {
+        link: KvLinkModel {
+            latency_s: 2.0,
+            ..KvLinkModel::default()
+        },
+        ..DisaggConfig::default()
+    };
+    let ccfg = ClusterConfig::new(
+        4,
+        LbPolicy::JoinShortestQueue,
+        node_cfg(Method::GreenLlm, 9),
+    )
+    .with_pool_ratio(PoolRatio::parse("1:1").unwrap())
+    .with_disagg(slow)
+    .with_faults(FaultPlan::parse("down@15:3,up@30:3").unwrap());
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len(), "dropped requests");
+    assert_eq!(r.generated_tokens, expect_tokens, "token conservation");
+    assert_eq!(r.assignment.iter().sum::<usize>(), trace.requests.len());
+    let m = r.migration.expect("split cluster reports migrations");
+    assert!(m.count > 0);
+    assert!(
+        m.relays > 0,
+        "a 2 s link with a mid-trace decode loss must catch handoffs in flight"
+    );
+}
+
+#[test]
+fn mid_migration_sender_failure_reprefills_and_conserves() {
+    // Same slow link, but kill prefill node 0: the KV of its in-flight
+    // handoffs died with it, so those streams must take the full
+    // re-prefill path through ingress (rerouted), not a relay.
+    let trace = chat(12.0, 45.0, 7);
+    let expect_tokens: u64 = trace.requests.iter().map(|r| r.output_len as u64).sum();
+    let slow = DisaggConfig {
+        link: KvLinkModel {
+            latency_s: 2.0,
+            ..KvLinkModel::default()
+        },
+        ..DisaggConfig::default()
+    };
+    let ccfg = ClusterConfig::new(
+        4,
+        LbPolicy::JoinShortestQueue,
+        node_cfg(Method::GreenLlm, 9),
+    )
+    .with_pool_ratio(PoolRatio::parse("1:1").unwrap())
+    .with_disagg(slow)
+    .with_faults(FaultPlan::parse("down@15:0,up@30:0").unwrap());
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len(), "dropped requests");
+    assert_eq!(r.generated_tokens, expect_tokens, "token conservation");
+    assert_eq!(r.assignment.iter().sum::<usize>(), trace.requests.len());
+    assert!(r.rerouted > 0, "dead-sender handoffs must re-prefill via ingress");
+}
+
+#[test]
+fn disagg_heap_scheduler_bit_equal_with_scan_oracle() {
+    // Migration events ride the cluster queue; the O(log N) selector and
+    // the linear-scan oracle must interleave them identically — including
+    // across a flap of the last decode node.
+    use greenllm::coordinator::cluster::events::run_cluster_scan_oracle;
+    let trace = chat(10.0, 40.0, 17);
+    let ccfg = disagg_cfg(4, "1:1").with_faults(FaultSpec::Flap.plan(4, trace.duration_s));
+    let a = run_cluster(&ccfg, &trace, &RunOptions::default());
+    let b = run_cluster_scan_oracle(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.assignment, b.assignment);
+    let (ma, mb) = (a.migration.unwrap(), b.migration.unwrap());
+    assert_eq!(ma.count, mb.count);
+    assert_eq!(ma.relays, mb.relays);
+    assert_eq!(ma.kv_bytes.to_bits(), mb.kv_bytes.to_bits());
+    assert_eq!(ma.transfer_j.to_bits(), mb.transfer_j.to_bits());
+}
+
+#[test]
+fn disagg_property_conserves_over_ratios_faults_and_arbiters() {
+    // Random pool ratios x balancers x fault plans x arbiters: every
+    // shape conserves requests, tokens, and assignment ownership, and
+    // the heap scheduler stays bit-equal with the scan oracle.
+    use greenllm::coordinator::cluster::events::run_cluster_scan_oracle;
+    use greenllm::util::ptest::check;
+    use greenllm::util::rng::Pcg64;
+
+    let lbs = LbPolicy::all();
+    let ratios = ["1:1", "1:2", "1:3", "1:4"];
+    check("disagg_conservation", 10, |g: &mut Pcg64| {
+        let nodes = 2 + g.index(4); // 2..=5
+        let ratio = PoolRatio::parse(ratios[g.index(ratios.len())]).unwrap();
+        let lb = lbs[g.index(lbs.len())];
+        let qps = 4.0 + g.f64() * 8.0;
+        let duration = 20.0 + g.f64() * 15.0;
+        let trace = chat(qps, duration, g.next_u64());
+        let expect_tokens: u64 = trace.requests.iter().map(|r| r.output_len as u64).sum();
+        let mut ccfg = ClusterConfig::new(nodes, lb, node_cfg(Method::GreenLlm, g.next_u64()))
+            .with_pool_ratio(ratio)
+            .with_disagg(DisaggConfig::default());
+        if g.chance(0.5) {
+            ccfg = ccfg.with_power_cap(nodes as f64 * (1800.0 + g.f64() * 1500.0), 0.5);
+            if g.chance(0.5) {
+                ccfg = ccfg.with_arbiter(ArbiterStrategy::SloPressure);
+            }
+        }
+        if g.chance(0.5) {
+            let spec = if g.chance(0.5) {
+                FaultSpec::OneDown
+            } else {
+                FaultSpec::Flap
+            };
+            ccfg = ccfg.with_faults(spec.plan(nodes, duration));
+        }
+        let a = run_cluster(&ccfg, &trace, &RunOptions::default());
+        greenllm::prop_assert!(
+            a.completed as usize == trace.requests.len(),
+            "lost requests ({lb:?} x{nodes} {})",
+            ratio.name()
+        );
+        greenllm::prop_assert!(
+            a.generated_tokens == expect_tokens,
+            "token conservation broke ({lb:?} x{nodes} {})",
+            ratio.name()
+        );
+        greenllm::prop_assert!(
+            a.assignment.iter().sum::<usize>() == trace.requests.len(),
+            "assignment accounting broke ({lb:?} x{nodes} {})",
+            ratio.name()
+        );
+        let m = a.migration.expect("split cluster reports migrations");
+        greenllm::prop_assert!(m.count > 0, "no migrations ({lb:?} x{nodes})");
+        let b = run_cluster_scan_oracle(&ccfg, &trace, &RunOptions::default());
+        greenllm::prop_assert!(
+            a.total_energy_j.to_bits() == b.total_energy_j.to_bits(),
+            "energy diverged from scan oracle under disagg"
+        );
+        greenllm::prop_assert!(
+            a.events_processed == b.events_processed && a.assignment == b.assignment,
+            "interleaving diverged from scan oracle under disagg"
+        );
+        Ok(())
+    });
 }
