@@ -22,9 +22,10 @@ use crate::bench::report::{fmt_f, fmt_pct, maybe_write_csv, Table};
 use crate::config::{Config, Method};
 use crate::coordinator::cluster::{
     run_cluster, ArbiterStrategy, ClusterConfig, DisaggConfig, FaultSpec, LbPolicy,
-    MigrationReport, NodeSpec, PoolRatio,
+    MigrationReport, NodeMigration, NodeSpec, PoolRatio,
 };
 use crate::coordinator::engine::{run, RunOptions};
+use crate::metrics::Histogram;
 use crate::util::json::Json;
 use crate::workload::alibaba::{self, ChatParams};
 use crate::workload::azure::{self, AzureKind, AzureParams};
@@ -494,6 +495,13 @@ pub struct CellResult {
     pub peak_power_w: Option<f64>,
     /// Migration ledger (disaggregated cells only).
     pub migration: Option<MigrationReport>,
+    /// Per-node migration attribution (parallel to the node list;
+    /// populated for disaggregated cells only).
+    pub node_migration: Vec<NodeMigration>,
+    /// Whole-run TTFT distribution, seconds (merged across nodes).
+    pub ttft_hist: Histogram,
+    /// Whole-run per-request TBT-P95 distribution, seconds.
+    pub tbt_hist: Histogram,
     /// Per-node breakdown (empty for single-node cells).
     pub per_node: Vec<NodeCellResult>,
     /// Energy saving vs the defaultNV cell of the same scenario
@@ -582,6 +590,9 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
         wasted_tokens: 0,
         peak_power_w: None,
         migration: None,
+        node_migration: Vec::new(),
+        ttft_hist: Histogram::latency(),
+        tbt_hist: Histogram::latency(),
         per_node: Vec::new(),
         delta_energy_pct: None,
     };
@@ -606,6 +617,8 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
             generated_tokens: r.generated_tokens,
             events_processed: r.events_processed,
             mean_decode_batch: r.mean_decode_batch,
+            ttft_hist: r.slo.ttft_hist.clone(),
+            tbt_hist: r.slo.tbt_hist.clone(),
             ..base
         };
     }
@@ -655,6 +668,9 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
         wasted_tokens: r.wasted_tokens,
         peak_power_w: r.power.as_ref().map(|p| p.peak_measured_w),
         migration: r.migration,
+        node_migration: r.node_migration.clone(),
+        ttft_hist: r.ttft_hist.clone(),
+        tbt_hist: r.tbt_hist.clone(),
         per_node: r
             .per_node
             .iter()
@@ -829,10 +845,25 @@ pub fn render_markdown(cfg: &MatrixConfig, results: &[CellResult]) -> String {
     out
 }
 
+/// Distribution summary of a latency/power histogram: sample count,
+/// quantiles and the observed range (0.0 when empty).
+fn dist_json(h: &Histogram) -> Json {
+    Json::obj([
+        ("count", Json::Num(h.count() as f64)),
+        ("p50", Json::Num(h.p50())),
+        ("p95", Json::Num(h.p95())),
+        ("p99", Json::Num(h.p99())),
+        ("min", Json::Num(h.observed_min())),
+        ("max", Json::Num(h.observed_max())),
+    ])
+}
+
 /// Serialize the whole sweep (config + cells) as JSON. Cluster cells carry
 /// a `per_node` section (with each node's shape spec), capped cells a
 /// `power` section, and faulted cells a `chaos` section (re-routed
-/// requests + rolled-back tokens).
+/// requests + rolled-back tokens). Every cell carries whole-run `ttft_s`
+/// and `tbt_p95_s` distribution summaries; disaggregated cells extend the
+/// `migration` section with a per-node attribution array.
 pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
     let mut root = BTreeMap::new();
     root.insert("model".to_string(), Json::Str(cfg.model.clone()));
@@ -881,6 +912,8 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
                 "delta_energy_pct".to_string(),
                 r.delta_energy_pct.map(Json::Num).unwrap_or(Json::Null),
             );
+            m.insert("ttft_s".to_string(), dist_json(&r.ttft_hist));
+            m.insert("tbt_p95_s".to_string(), dist_json(&r.tbt_hist));
             if r.nodes > 1 {
                 // balance_ratio may be ∞ (starvation): JSON has no inf, so
                 // emit the starved count alongside and let ∞ become null.
@@ -939,6 +972,24 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
                         ("kv_bytes", Json::Num(mig.kv_bytes)),
                         ("transfer_j", Json::Num(mig.transfer_j)),
                         ("relays", Json::Num(mig.relays as f64)),
+                        (
+                            "per_node",
+                            Json::Arr(
+                                r.node_migration
+                                    .iter()
+                                    .enumerate()
+                                    .map(|(i, nm)| {
+                                        Json::obj([
+                                            ("node", Json::Num(i as f64)),
+                                            ("sends", Json::Num(nm.sends as f64)),
+                                            ("deliveries", Json::Num(nm.deliveries as f64)),
+                                            ("relays", Json::Num(nm.relays as f64)),
+                                            ("re_prefills", Json::Num(nm.re_prefills as f64)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
                     ]),
                 );
             }
@@ -1200,10 +1251,23 @@ mod tests {
         );
         let json = to_json(&cfg, &results);
         let parsed = Json::parse(&json.dump()).unwrap();
-        assert_eq!(
-            parsed.get("cells").unwrap().as_arr().unwrap().len(),
-            results.len()
-        );
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), results.len());
+        // Every cell (single-node engine cells included) carries whole-run
+        // TTFT/TBT distribution summaries with a consistent shape.
+        for c in cells {
+            for key in ["ttft_s", "tbt_p95_s"] {
+                let d = c.get(key).unwrap_or_else(|| panic!("{key} in {c:?}"));
+                let count = d.get("count").unwrap().as_f64().unwrap();
+                assert!(count > 0.0, "{key}: {d:?}");
+                let p50 = d.get("p50").unwrap().as_f64().unwrap();
+                let p99 = d.get("p99").unwrap().as_f64().unwrap();
+                let min = d.get("min").unwrap().as_f64().unwrap();
+                let max = d.get("max").unwrap().as_f64().unwrap();
+                assert!(p50 <= p99, "{key}: {d:?}");
+                assert!(min <= max && min >= 0.0, "{key}: {d:?}");
+            }
+        }
     }
 
     #[test]
@@ -1297,8 +1361,15 @@ mod tests {
         let mig = split.migration.expect("split cell reports migration");
         assert!(mig.count > 0, "{mig:?}");
         assert!(mig.kv_bytes > 0.0 && mig.transfer_j > 0.0, "{mig:?}");
+        // Per-node attribution sums back to the cluster ledger.
+        assert_eq!(split.node_migration.len(), split.nodes);
+        let sends: u64 = split.node_migration.iter().map(|n| n.sends).sum();
+        let relays: u64 = split.node_migration.iter().map(|n| n.relays).sum();
+        assert_eq!(sends, mig.count, "{:?}", split.node_migration);
+        assert_eq!(relays, mig.relays, "{:?}", split.node_migration);
         let off = results.iter().find(|r| r.disagg == "off").unwrap();
         assert!(off.migration.is_none());
+        assert!(off.node_migration.is_empty());
         // JSON: the migration section rides on split cells only.
         let parsed = Json::parse(&to_json(&cfg, &results).dump()).unwrap();
         for c in parsed.get("cells").unwrap().as_arr().unwrap() {
@@ -1308,6 +1379,13 @@ mod tests {
                 assert!(m.get("count").unwrap().as_f64().unwrap() > 0.0);
                 assert!(m.get("kv_bytes").unwrap().as_f64().unwrap() > 0.0);
                 assert!(m.get("transfer_j").unwrap().as_f64().unwrap() > 0.0);
+                let per_node = m.get("per_node").unwrap().as_arr().unwrap();
+                assert_eq!(per_node.len(), 4);
+                let json_sends: f64 = per_node
+                    .iter()
+                    .map(|n| n.get("sends").unwrap().as_f64().unwrap())
+                    .sum();
+                assert_eq!(json_sends, m.get("count").unwrap().as_f64().unwrap());
             }
         }
     }

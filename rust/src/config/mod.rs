@@ -285,6 +285,23 @@ impl Default for DisaggSection {
     }
 }
 
+/// Flight-recorder observability defaults (`greenllm cluster
+/// --trace-out` and `greenllm report`). The recorder itself is opt-in
+/// per run; this section only shapes it when attached.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObsSection {
+    /// Per-node telemetry ring capacity (samples kept per node; the ring
+    /// overwrites its oldest entries beyond this and reports the drop
+    /// count).
+    pub series_cap: usize,
+}
+
+impl Default for ObsSection {
+    fn default() -> Self {
+        ObsSection { series_cap: 4096 }
+    }
+}
+
 /// Top-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -304,6 +321,8 @@ pub struct Config {
     pub cluster: ClusterSection,
     /// Prefill/decode disaggregation defaults.
     pub disagg: DisaggSection,
+    /// Flight-recorder observability defaults.
+    pub obs: ObsSection,
     /// Simulated GPU hardware of this node (per-node in heterogeneous
     /// clusters; the default is a stock A100).
     pub gpu: GpuSpec,
@@ -329,6 +348,7 @@ impl Default for Config {
             prefill_opt: PrefillOptConfig::default(),
             cluster: ClusterSection::default(),
             disagg: DisaggSection::default(),
+            obs: ObsSection::default(),
             gpu: GpuSpec::default(),
             prefill_margin: 0.95,
             decode_margin: 0.95,
@@ -383,6 +403,7 @@ impl Config {
                     | "disagg.pj_per_byte"
                     | "disagg.prefill_method"
                     | "disagg.decode_method"
+                    | "obs.series_cap"
                     | "gpu.power_scale"
                     | "gpu.max_clock_mhz"
             );
@@ -501,6 +522,9 @@ impl Config {
         if let Some(v) = doc.str("disagg.decode_method") {
             c.disagg.decode_method = v.to_string();
         }
+        if let Some(v) = doc.i64("obs.series_cap") {
+            c.obs.series_cap = v as usize;
+        }
         if let Some(v) = doc.f64("gpu.power_scale") {
             c.gpu.power_scale = v;
         }
@@ -562,6 +586,9 @@ impl Config {
             if !m.is_empty() && Method::parse(m).is_none() {
                 return Err(format!("{key}: unknown method {m:?}"));
             }
+        }
+        if self.obs.series_cap == 0 {
+            return Err("obs.series_cap must be >= 1".into());
         }
         let mhz = self.gpu.max_clock_mhz;
         if !(210..=1410).contains(&mhz) || (mhz - 210) % 15 != 0 {
@@ -706,6 +733,17 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad = Config::default();
         bad.disagg.decode_method = "warp9".into();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn obs_section_parses_and_validates() {
+        let doc = Document::parse("[obs]\nseries_cap = 512").unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.obs.series_cap, 512);
+        assert_eq!(Config::default().obs.series_cap, 4096);
+        let mut bad = Config::default();
+        bad.obs.series_cap = 0;
         assert!(bad.validate().is_err());
     }
 

@@ -167,6 +167,26 @@ pub struct MigrationReport {
     pub relays: u64,
 }
 
+/// Per-node slice of the migration ledger: where handoffs were sent
+/// from, delivered to, relayed from, and re-prefilled after KV loss.
+/// Across a run `Σ sends == MigrationReport::count` and
+/// `Σ relays == MigrationReport::relays`; deliveries lag sends by the
+/// handoffs still on the wire (or parked) at the horizon. `re_prefills`
+/// counts full re-prefills this node absorbed after a sender died with
+/// the KV (handoffs deferred because the whole cluster was dark are not
+/// attributed to any node).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NodeMigration {
+    /// First sends of a KV handoff out of this (prefill) node.
+    pub sends: u64,
+    /// Handoffs delivered to this (decode) node.
+    pub deliveries: u64,
+    /// Relays re-sent from this node after the target died mid-wire.
+    pub relays: u64,
+    /// Full re-prefills absorbed by this node after a sender died.
+    pub re_prefills: u64,
+}
+
 /// EcoRoute-style decode-pool router: among alive nodes in
 /// `nodes[pool_start..]`, prefer a healthy TBT tail (≤ `tbt_target_s`),
 /// then the fewest active streams per granted watt (infinite grants

@@ -61,12 +61,16 @@
 //! the survivors, recovery clamps the rejoining node at the rejoin
 //! instant instead of letting it run uncapped until the next epoch.
 
+use std::cell::RefCell;
+
 use crate::coordinator::cluster::balancer::{self, Balancer, NodeState};
-use crate::coordinator::cluster::disagg::{self, DisaggConfig, MigrationReport};
+use crate::coordinator::cluster::disagg::{self, DisaggConfig, MigrationReport, NodeMigration};
 use crate::coordinator::cluster::faults::FaultKind;
 use crate::coordinator::cluster::power::{ArbiterStrategy, PowerArbiter};
 use crate::coordinator::cluster::{ClusterConfig, ClusterResult, PowerReport};
 use crate::coordinator::engine::{Engine, MigratedStream, RunOptions, RunResult};
+use crate::metrics::Histogram;
+use crate::obs::{FlightRecorder, NoopRecorder, Recorder, SharedRecorder};
 use crate::sim::{self, EventQueue, SourceHeap};
 use crate::workload::request::{Request, Trace};
 
@@ -102,11 +106,11 @@ struct PendingMigration {
 trait EngineSelector {
     fn new(n: usize) -> Self;
     /// Engine `i`'s event queue may have changed — re-key it.
-    fn update(&mut self, i: usize, engines: &[Engine<'_>]);
+    fn update<R: Recorder>(&mut self, i: usize, engines: &[Engine<'_, R>]);
     /// Every engine may have changed (epoch boundaries, fault churn).
-    fn refresh_all(&mut self, engines: &[Engine<'_>]);
+    fn refresh_all<R: Recorder>(&mut self, engines: &[Engine<'_, R>]);
     /// The earliest engine and its next-event time.
-    fn next(&mut self, engines: &[Engine<'_>]) -> Option<(usize, f64)>;
+    fn next<R: Recorder>(&mut self, engines: &[Engine<'_, R>]) -> Option<(usize, f64)>;
 }
 
 /// O(log N) per event: keys live in a [`SourceHeap`], only touched
@@ -118,17 +122,17 @@ impl EngineSelector for HeapSelector {
         HeapSelector(SourceHeap::new(n))
     }
 
-    fn update(&mut self, i: usize, engines: &[Engine<'_>]) {
+    fn update<R: Recorder>(&mut self, i: usize, engines: &[Engine<'_, R>]) {
         self.0.set(i, engines[i].peek_time());
     }
 
-    fn refresh_all(&mut self, engines: &[Engine<'_>]) {
+    fn refresh_all<R: Recorder>(&mut self, engines: &[Engine<'_, R>]) {
         for (i, e) in engines.iter().enumerate() {
             self.0.set(i, e.peek_time());
         }
     }
 
-    fn next(&mut self, _engines: &[Engine<'_>]) -> Option<(usize, f64)> {
+    fn next<R: Recorder>(&mut self, _engines: &[Engine<'_, R>]) -> Option<(usize, f64)> {
         self.0.min()
     }
 }
@@ -147,11 +151,11 @@ impl EngineSelector for ScanSelector {
         }
     }
 
-    fn update(&mut self, _i: usize, _engines: &[Engine<'_>]) {}
+    fn update<R: Recorder>(&mut self, _i: usize, _engines: &[Engine<'_, R>]) {}
 
-    fn refresh_all(&mut self, _engines: &[Engine<'_>]) {}
+    fn refresh_all<R: Recorder>(&mut self, _engines: &[Engine<'_, R>]) {}
 
-    fn next(&mut self, engines: &[Engine<'_>]) -> Option<(usize, f64)> {
+    fn next<R: Recorder>(&mut self, engines: &[Engine<'_, R>]) -> Option<(usize, f64)> {
         for (i, e) in engines.iter().enumerate() {
             self.times[i] = e.peek_time();
         }
@@ -159,7 +163,7 @@ impl EngineSelector for ScanSelector {
     }
 }
 
-fn snapshot(e: &Engine<'_>, alive: bool, granted_w: f64) -> NodeState {
+fn snapshot<R: Recorder>(e: &Engine<'_, R>, alive: bool, granted_w: f64) -> NodeState {
     NodeState {
         assigned: e.assigned(),
         prefill_backlog: e.prefill_backlog(),
@@ -171,8 +175,8 @@ fn snapshot(e: &Engine<'_>, alive: bool, granted_w: f64) -> NodeState {
     }
 }
 
-fn snapshot_all(
-    engines: &[Engine<'_>],
+fn snapshot_all<R: Recorder>(
+    engines: &[Engine<'_, R>],
     alive: &[bool],
     granted_w: &[f64],
     states: &mut Vec<NodeState>,
@@ -215,7 +219,22 @@ fn pick_ingress(
 /// strategy. Panics on an invalid fault plan (validate at the CLI for a
 /// friendly error).
 pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> ClusterResult {
-    run_cluster_impl::<HeapSelector>(ccfg, trace, opts)
+    run_cluster_impl::<HeapSelector, _>(ccfg, trace, opts, NoopRecorder)
+}
+
+/// [`run_cluster`] with the flight recorder attached: every node engine
+/// and the cluster loop itself record into `rec` (spans, per-node
+/// samples at arbitration epochs, migration/fault markers). The
+/// interleaving is identical to [`run_cluster`] — the recorder only
+/// observes — and the output is deterministic, so two recorded runs of
+/// the same deployment produce byte-identical exported traces.
+pub fn run_cluster_recorded(
+    ccfg: &ClusterConfig,
+    trace: &Trace,
+    opts: &RunOptions,
+    rec: &RefCell<FlightRecorder>,
+) -> ClusterResult {
+    run_cluster_impl::<HeapSelector, _>(ccfg, trace, opts, SharedRecorder(rec))
 }
 
 /// [`run_cluster`] driven by the kept-verbatim pre-PR5 linear-scan
@@ -228,13 +247,26 @@ pub fn run_cluster_scan_oracle(
     trace: &Trace,
     opts: &RunOptions,
 ) -> ClusterResult {
-    run_cluster_impl::<ScanSelector>(ccfg, trace, opts)
+    run_cluster_impl::<ScanSelector, _>(ccfg, trace, opts, NoopRecorder)
 }
 
-fn run_cluster_impl<S: EngineSelector>(
+/// Sample every node's telemetry into the recorder (arbitration-epoch
+/// cadence; ∞/uncapped grants export as "absent"). Compiles out when the
+/// recorder is the no-op.
+fn sample_all<R: Recorder>(engines: &mut [Engine<'_, R>], t: f64, granted_w: &[f64]) {
+    if !R::ENABLED {
+        return;
+    }
+    for (e, &g) in engines.iter_mut().zip(granted_w) {
+        e.record_obs_sample(t, if g.is_finite() { g } else { -1.0 });
+    }
+}
+
+fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
     ccfg: &ClusterConfig,
     trace: &Trace,
     opts: &RunOptions,
+    rec: R,
 ) -> ClusterResult {
     assert!(ccfg.nodes >= 1, "cluster needs at least one node");
     ccfg.faults
@@ -280,15 +312,17 @@ fn run_cluster_impl<S: EngineSelector>(
             cfg
         })
         .collect();
-    let mut engines: Vec<Engine<'_>> = node_cfgs
+    let mut engines: Vec<Engine<'_, R>> = node_cfgs
         .iter()
         .enumerate()
         .map(|(n, cfg)| {
-            Engine::new(
+            Engine::with_recorder(
                 cfg,
                 &node_opts,
                 format!("{}::node{n}", trace.name),
                 trace.duration_s,
+                rec.clone(),
+                n,
             )
         })
         .collect();
@@ -327,6 +361,11 @@ fn run_cluster_impl<S: EngineSelector>(
             granted_w.copy_from_slice(g);
         }
     }
+    // Cluster-level recorder handle: spans the engines can't see
+    // (migrations on the wire, fault transitions) plus the epoch-cadence
+    // telemetry sweep. `sample_all` seeds every counter track at t = 0.
+    let mut crec = rec;
+    sample_all(&mut engines, 0.0, &granted_w);
 
     // Cluster-level queue. Scheduling order fixes the sequence numbers,
     // which fix exact-equal-timestamp ordering: all arrivals first, then
@@ -367,6 +406,9 @@ fn run_cluster_impl<S: EngineSelector>(
     let mut deferred: Vec<Request> = Vec::new();
     let mut mig_buf: Vec<MigratedStream> = Vec::new();
     let mut migration = MigrationReport::default();
+    // Per-node slice of the same ledger (sends/deliveries/relays/
+    // re-prefills) — the cluster report's attribution columns.
+    let mut node_migration = vec![NodeMigration::default(); ccfg.nodes];
 
     let mut sel = S::new(ccfg.nodes);
     sel.refresh_all(&engines);
@@ -410,6 +452,7 @@ fn run_cluster_impl<S: EngineSelector>(
                         if let Some(g) = a.latest_grants() {
                             granted_w.copy_from_slice(g);
                         }
+                        sample_all(&mut engines, t, &granted_w);
                         q.schedule_in(ccfg.power_epoch_s, ClusterEv::PowerEpoch);
                         sel.refresh_all(&engines);
                     }
@@ -420,6 +463,7 @@ fn run_cluster_impl<S: EngineSelector>(
                     match fev.kind {
                         FaultKind::Down => {
                             alive[fev.node] = false;
+                            crec.fault(fev.node, t, false);
                             debug_assert!(drain_buf.is_empty());
                             engines[fev.node].fail_into(t, &mut drain_buf);
                             assignment[fev.node] -= drain_buf.len();
@@ -433,6 +477,7 @@ fn run_cluster_impl<S: EngineSelector>(
                                 if let Some(g) = a.latest_grants() {
                                     granted_w.copy_from_slice(g);
                                 }
+                                sample_all(&mut engines, t, &granted_w);
                                 sel.refresh_all(&engines);
                             }
                             // Re-home every incomplete request through the
@@ -457,6 +502,7 @@ fn run_cluster_impl<S: EngineSelector>(
                         }
                         FaultKind::Up => {
                             alive[fev.node] = true;
+                            crec.fault(fev.node, t, true);
                             engines[fev.node].recover(t);
                             sel.update(fev.node, &engines);
                             // `recover` cleared the node's clamp; under a
@@ -469,6 +515,7 @@ fn run_cluster_impl<S: EngineSelector>(
                                 if let Some(g) = a.latest_grants() {
                                     granted_w.copy_from_slice(g);
                                 }
+                                sample_all(&mut engines, t, &granted_w);
                                 sel.refresh_all(&engines);
                             }
                             // A node is back: re-offer everything held
@@ -496,6 +543,8 @@ fn run_cluster_impl<S: EngineSelector>(
                                     snapshot_all(&engines, &alive, &granted_w, &mut states);
                                     match pick_ingress(lb.as_mut(), t, &req, &states, ingress) {
                                         Some(node) => {
+                                            crec.re_prefill(node, t, req.id);
+                                            node_migration[node].re_prefills += 1;
                                             engines[node].inject(t, req);
                                             assignment[node] += 1;
                                             sel.update(node, &engines);
@@ -514,10 +563,18 @@ fn run_cluster_impl<S: EngineSelector>(
                                         engines[nt].add_transfer_energy(j);
                                         migration.kv_bytes += bytes;
                                         migration.transfer_j += 2.0 * j;
+                                        let rid = pending[idx].req.id;
                                         if pending[idx].target == usize::MAX {
                                             migration.count += 1; // first send
+                                            node_migration[from].sends += 1;
+                                            if R::ENABLED {
+                                                let dt = link.transfer_s(bytes);
+                                                crec.migrate_send(from, nt, t, rid, bytes, t + dt);
+                                            }
                                         } else {
                                             migration.relays += 1;
+                                            node_migration[from].relays += 1;
+                                            crec.migrate_relay(from, nt, t, rid);
                                         }
                                         pending[idx].target = nt;
                                         q.schedule(
@@ -543,6 +600,8 @@ fn run_cluster_impl<S: EngineSelector>(
                         snapshot_all(&engines, &alive, &granted_w, &mut states);
                         match pick_ingress(lb.as_mut(), t, &req, &states, ingress) {
                             Some(node) => {
+                                crec.re_prefill(node, t, req.id);
+                                node_migration[node].re_prefills += 1;
                                 engines[node].inject(t, req);
                                 assignment[node] += 1;
                                 sel.update(node, &engines);
@@ -555,6 +614,7 @@ fn run_cluster_impl<S: EngineSelector>(
                             pending[idx].req.clone(),
                             pending[idx].prefill_done_s,
                         );
+                        node_migration[target].deliveries += 1;
                         assignment[target] += 1;
                         sel.update(target, &engines);
                     } else {
@@ -572,6 +632,8 @@ fn run_cluster_impl<S: EngineSelector>(
                                 migration.kv_bytes += bytes;
                                 migration.transfer_j += 2.0 * j;
                                 migration.relays += 1;
+                                node_migration[from].relays += 1;
+                                crec.migrate_relay(from, nt, t, pending[idx].req.id);
                                 pending[idx].target = nt;
                                 q.schedule(t + link.transfer_s(bytes), ClusterEv::Migrate(idx));
                             }
@@ -604,6 +666,13 @@ fn run_cluster_impl<S: EngineSelector>(
                             migration.count += 1;
                             migration.kv_bytes += bytes;
                             migration.transfer_j += 2.0 * j;
+                            node_migration[i].sends += 1;
+                            if R::ENABLED {
+                                // KV hits the wire at prefill completion.
+                                let t0 = m.prefill_done_s;
+                                let t1 = t0 + link.transfer_s(bytes);
+                                crec.migrate_send(i, target, t0, m.req.id, bytes, t1);
+                            }
                             pending.push(PendingMigration {
                                 req: m.req,
                                 prefill_done_s: m.prefill_done_s,
@@ -642,6 +711,15 @@ fn run_cluster_impl<S: EngineSelector>(
     let wasted_tokens: u64 = engines.iter().map(|e| e.wasted_tokens()).sum();
     let per_node: Vec<RunResult> = engines.iter_mut().map(|e| e.finalize(end_t)).collect();
 
+    // Whole-run latency distributions: the per-node trackers all use the
+    // same latency bucketing, so their histograms merge exactly.
+    let mut ttft_hist = Histogram::latency();
+    let mut tbt_hist = Histogram::latency();
+    for r in &per_node {
+        ttft_hist.merge(&r.slo.ttft_hist);
+        tbt_hist.merge(&r.slo.tbt_hist);
+    }
+
     let events_processed: u64 = per_node.iter().map(|r| r.events_processed).sum();
     let total_energy_j = per_node.iter().map(|r| r.total_energy_j).sum();
     let generated_tokens = per_node.iter().map(|r| r.generated_tokens).sum();
@@ -678,5 +756,12 @@ fn run_cluster_impl<S: EngineSelector>(
         fault_events,
         events_processed,
         migration: (prefill_pool > 0).then_some(migration),
+        node_migration: if prefill_pool > 0 {
+            node_migration
+        } else {
+            Vec::new()
+        },
+        ttft_hist,
+        tbt_hist,
     }
 }

@@ -52,13 +52,14 @@ pub mod faults;
 pub mod power;
 
 pub use balancer::{Balancer, LbPolicy, NodeState};
-pub use disagg::{DisaggConfig, KvLinkModel, MigrationReport, PoolRatio};
-pub use events::run_cluster;
+pub use disagg::{DisaggConfig, KvLinkModel, MigrationReport, NodeMigration, PoolRatio};
+pub use events::{run_cluster, run_cluster_recorded};
 pub use faults::{FaultEvent, FaultKind, FaultPlan, FaultSpec};
 pub use power::{ArbiterStrategy, PowerArbiter, PowerEpoch};
 
 use crate::config::{Config, PoolConfig};
 use crate::coordinator::engine::RunResult;
+use crate::metrics::Histogram;
 use crate::workload::request::Trace;
 
 /// Hardware/pool shape of one node — the heterogeneity unit. Presets
@@ -342,6 +343,15 @@ pub struct ClusterResult {
     /// disaggregated. (`assignment` tracks the node currently *owning*
     /// each request, so a migrated request counts at its decode home.)
     pub migration: Option<MigrationReport>,
+    /// Per-node slice of the migration ledger, index-aligned with the
+    /// deployment; non-empty iff the run was disaggregated.
+    pub node_migration: Vec<NodeMigration>,
+    /// Whole-run TTFT distribution, merged across every node's tracker
+    /// (same log-spaced bucketing as [`Histogram::latency`]).
+    pub ttft_hist: Histogram,
+    /// Whole-run P95-TBT distribution (one sample per TBT-eligible
+    /// request), merged across every node's tracker.
+    pub tbt_hist: Histogram,
 }
 
 impl ClusterResult {

@@ -33,6 +33,7 @@
 //! floor for the survivors.
 
 use crate::coordinator::engine::Engine;
+use crate::obs::Recorder;
 use crate::gpu::freq::FreqLadder;
 use crate::gpu::power::PowerModel;
 
@@ -193,10 +194,10 @@ impl PowerArbiter {
     /// Headroom weights per node under the active strategy; `None` means
     /// "no information yet — fall back to an equal split among the
     /// alive". Dead nodes always weigh zero.
-    fn headroom_weights(
+    fn headroom_weights<R: Recorder>(
         &self,
         measured: &[f64],
-        engines: &[Engine<'_>],
+        engines: &[Engine<'_, R>],
         alive: &[bool],
     ) -> Option<Vec<f64>> {
         let masked = |v: Vec<f64>| -> Option<Vec<f64>> {
@@ -239,7 +240,13 @@ impl PowerArbiter {
         }
     }
 
-    fn arbitrate(&mut self, t: f64, measured: Vec<f64>, engines: &mut [Engine<'_>], alive: &[bool]) {
+    fn arbitrate<R: Recorder>(
+        &mut self,
+        t: f64,
+        measured: Vec<f64>,
+        engines: &mut [Engine<'_, R>],
+        alive: &[bool],
+    ) {
         let n_alive = alive.iter().filter(|a| **a).count().max(1) as f64;
         // Physical lower bound per alive node: worst-case power at that
         // node's own ladder floor. Shares never drop below it (a grant
@@ -326,7 +333,7 @@ impl PowerArbiter {
     }
 
     /// First grant, before any demand exists: equal shares.
-    pub fn apply_initial(&mut self, engines: &mut [Engine<'_>], alive: &[bool]) {
+    pub fn apply_initial<R: Recorder>(&mut self, engines: &mut [Engine<'_, R>], alive: &[bool]) {
         let measured = vec![0.0; engines.len()];
         self.arbitrate(0.0, measured, engines, alive);
         // The t=0 record has no measurement; keep it for the clamp trail.
@@ -339,7 +346,7 @@ impl PowerArbiter {
     /// clamp) while the survivors still hold grants summing to the full
     /// cap — the one way a feasible budget could be exceeded; and a freed
     /// node's budget would stay stranded until the next epoch boundary.
-    pub fn rearbitrate(&mut self, t: f64, engines: &mut [Engine<'_>], alive: &[bool]) {
+    pub fn rearbitrate<R: Recorder>(&mut self, t: f64, engines: &mut [Engine<'_, R>], alive: &[bool]) {
         let measured = self
             .epochs
             .last()
@@ -349,7 +356,7 @@ impl PowerArbiter {
     }
 
     /// Epoch boundary at `t`: measure, re-split, re-grant.
-    pub fn epoch(&mut self, t: f64, engines: &mut [Engine<'_>], alive: &[bool]) {
+    pub fn epoch<R: Recorder>(&mut self, t: f64, engines: &mut [Engine<'_, R>], alive: &[bool]) {
         let dt = t - self.last_t;
         if dt <= 0.0 {
             return;

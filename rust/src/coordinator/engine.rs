@@ -37,6 +37,7 @@ use crate::gpu::perf::PerfModel;
 use crate::gpu::power::PowerModel;
 use crate::metrics::{SlidingP95, TpsWindow};
 use crate::model::ModelSpec;
+use crate::obs::{NodeSample, NoopRecorder, Recorder};
 use crate::sim::EventQueue;
 use crate::slo::{RequestOutcome, SloTracker};
 use crate::util::rng::Pcg64;
@@ -343,7 +344,13 @@ struct DecodeWorker {
 }
 
 /// One simulated node. See the module docs for the replay vs stepped modes.
-pub struct Engine<'a> {
+///
+/// Generic over an observability [`Recorder`] (static dispatch). The
+/// default [`NoopRecorder`] compiles every hook away — the unrecorded
+/// engine is bit-exact with (and monomorphizes to) the pre-observability
+/// code. A live recorder sees every lifecycle transition with this node's
+/// cluster index attached.
+pub struct Engine<'a, R: Recorder = NoopRecorder> {
     cfg: &'a Config,
     opts: &'a RunOptions,
     /// Requests this node has seen. In replay mode the full trace is
@@ -416,11 +423,29 @@ pub struct Engine<'a> {
     /// it reaches the energy totals at [`Engine::finalize`], not the
     /// arbiter's [`Engine::energy_now_j`] measurements.
     transfer_energy_j: f64,
+    /// Observability sink (zero-sized no-op by default).
+    rec: R,
+    /// This node's index in its cluster (0 for single-node runs); stamped
+    /// on every recorder hook.
+    node_id: usize,
 }
 
 /// Replay `trace` under `cfg`.
 pub fn run(cfg: &Config, trace: &Trace, opts: &RunOptions) -> RunResult {
-    let mut engine = Engine::new(cfg, opts, trace.name.clone(), trace.duration_s);
+    run_with(cfg, trace, opts, NoopRecorder, 0)
+}
+
+/// Replay `trace` under `cfg` with a live [`Recorder`] attached as node
+/// `node_id` ([`run`] is the zero-cost default).
+pub fn run_with<R: Recorder>(
+    cfg: &Config,
+    trace: &Trace,
+    opts: &RunOptions,
+    rec: R,
+    node_id: usize,
+) -> RunResult {
+    let mut engine =
+        Engine::with_recorder(cfg, opts, trace.name.clone(), trace.duration_s, rec, node_id);
     engine.load_trace(&trace.requests);
     engine.begin();
     engine.run_loop()
@@ -431,6 +456,21 @@ impl<'a> Engine<'a> {
     /// [`Engine::load_trace`] (replay) or [`Engine::inject`] (stepped) to
     /// feed it requests, and [`Engine::begin`] to arm the policy ticks.
     pub fn new(cfg: &'a Config, opts: &'a RunOptions, trace_name: String, duration_s: f64) -> Self {
+        Engine::with_recorder(cfg, opts, trace_name, duration_s, NoopRecorder, 0)
+    }
+}
+
+impl<'a, R: Recorder> Engine<'a, R> {
+    /// [`Engine::new`] with an observability [`Recorder`] and this node's
+    /// cluster index attached (the flight-recorder entry point).
+    pub fn with_recorder(
+        cfg: &'a Config,
+        opts: &'a RunOptions,
+        trace_name: String,
+        duration_s: f64,
+        rec: R,
+        node_id: usize,
+    ) -> Self {
         let spec = ModelSpec::by_name(&cfg.model)
             .unwrap_or_else(|| panic!("unknown model {:?}", cfg.model));
         let perf = PerfModel::new(spec);
@@ -533,6 +573,8 @@ impl<'a> Engine<'a> {
             migrate_out: false,
             migrations: Vec::new(),
             transfer_energy_j: 0.0,
+            rec,
+            node_id,
         }
     }
 
@@ -766,6 +808,42 @@ impl<'a> Engine<'a> {
         self.clock_cap_mhz
     }
 
+    /// Push a full telemetry sample to the recorder (no-op for
+    /// [`NoopRecorder`] engines — the sample is never even built).
+    /// `granted_w` is the arbiter's current power grant, negative when no
+    /// grant is in force (uncapped runs, engine-local clock edges). The
+    /// cluster loop calls this at every arbitration epoch; the engine
+    /// calls it itself at clock-change edges.
+    pub fn record_obs_sample(&mut self, t: f64, granted_w: f64) {
+        if !R::ENABLED {
+            return;
+        }
+        let n_prefill_gpus =
+            self.cfg.pools.prefill_workers * self.cfg.pools.gpus_per_prefill_worker;
+        let clock_of = |g: &SimGpu| if g.is_off() { 0 } else { g.sm_clock() };
+        let prefill_mhz = if n_prefill_gpus > 0 {
+            clock_of(&self.gpus[0])
+        } else {
+            0
+        };
+        let decode_mhz = if self.gpus.len() > n_prefill_gpus {
+            clock_of(&self.gpus[n_prefill_gpus])
+        } else {
+            0
+        };
+        let s = NodeSample {
+            t,
+            prefill_mhz,
+            decode_mhz,
+            power_w: self.gpus.iter().map(SimGpu::power_w).sum(),
+            granted_w,
+            queue_depth: self.prefill_backlog(),
+            active_streams: self.arena.live,
+            batch: self.decode_workers.iter().map(|w| w.streams.len()).sum(),
+        };
+        self.rec.sample(self.node_id, s);
+    }
+
     /// Clamp this node's clock ceiling (power arbiter grant). Any GPU
     /// above the cap is pulled down immediately; when a later grant
     /// raises the cap, previously clamped GPUs return to their policy's
@@ -778,10 +856,22 @@ impl<'a> Engine<'a> {
             "arbiter cap {cap_mhz} MHz off-ladder"
         );
         self.clock_cap_mhz = cap_mhz;
+        let before = if R::ENABLED {
+            self.gpus[0].sm_clock()
+        } else {
+            0
+        };
         for (g, gpu) in self.gpus.iter_mut().enumerate() {
             let want = self.requested_mhz[g].min(cap_mhz);
             if gpu.sm_clock() != want {
                 gpu.set_app_clock(t, want);
+            }
+        }
+        if R::ENABLED {
+            let after = self.gpus[0].sm_clock();
+            if after != before {
+                self.rec.clock_change(self.node_id, t, 0, after);
+                self.record_obs_sample(t, -1.0);
             }
         }
         self.policy.on_power_cap(cap_mhz);
@@ -807,16 +897,25 @@ impl<'a> Engine<'a> {
             "fail() on a replay-mode engine"
         );
         // Queued prefill jobs, per queue in FIFO order.
+        let node_id = self.node_id;
         for queue in self.prefill_queues.iter_mut() {
             while let Some(job) = queue.pop_front() {
-                drained.push(self.requests[job.req_idx].clone());
+                let req = self.requests[job.req_idx].clone();
+                if R::ENABLED {
+                    self.rec.abort(node_id, t, req.id, 0);
+                }
+                drained.push(req);
             }
         }
         // In-flight prefill jobs, worker order (their PrefillDone events
         // die with the queue below).
         for worker in self.prefill_workers.iter_mut() {
             if let Some((req_idx, _)) = worker.current.take() {
-                drained.push(self.requests[req_idx].clone());
+                let req = self.requests[req_idx].clone();
+                if R::ENABLED {
+                    self.rec.abort(node_id, t, req.id, 0);
+                }
+                drained.push(req);
             }
         }
         // Batched decode streams (worker order, batch order), then
@@ -830,7 +929,7 @@ impl<'a> Engine<'a> {
         }
         ids.extend(self.decode_wait.drain(..));
         for id in ids.drain(..) {
-            self.abort_stream(id, drained);
+            self.abort_stream(t, id, drained);
         }
         self.ids_scratch = ids;
         // Salvage arrivals the node was handed but had not yet processed
@@ -839,15 +938,23 @@ impl<'a> Engine<'a> {
         // node. The drain walks the calendar queue's bucket order
         // directly: no sorted intermediate Vec (§Perf).
         let requests = &self.requests;
+        let rec = &mut self.rec;
         self.q.drain_each(|_, ev| {
             if let Ev::Arrive(req_idx) = ev {
-                drained.push(requests[req_idx].clone());
+                let req = requests[req_idx].clone();
+                if R::ENABLED {
+                    rec.abort(node_id, t, req.id, 0);
+                }
+                drained.push(req);
             }
         });
         // Undelivered migrations die with the node's KV cache: re-route
         // for a full re-prefill elsewhere. No token rollback — the
         // migrate-out path never counted one (the receiver would have).
         for m in self.migrations.drain(..) {
+            if R::ENABLED {
+                self.rec.abort(node_id, t, m.req.id, 0);
+            }
             drained.push(m.req);
         }
         self.outstanding_prompt_tok = 0;
@@ -872,12 +979,15 @@ impl<'a> Engine<'a> {
     /// emitted tokens (the prefill's first token + decode tokens so far)
     /// and queue its request for re-routing. The slot (and its TBT
     /// buffer, cleared in place) returns to the arena's free list.
-    fn abort_stream(&mut self, id: StreamId, drained: &mut Vec<Request>) {
+    fn abort_stream(&mut self, t: f64, id: StreamId, drained: &mut Vec<Request>) {
         let slot = self.arena.slot(id);
         let req = self.requests[self.arena.req_idx[slot]].clone();
         let emitted = (req.output_len - self.arena.remaining[slot]) as u64;
         self.generated_tokens -= emitted;
         self.wasted_tokens += emitted;
+        if R::ENABLED {
+            self.rec.abort(self.node_id, t, req.id, emitted);
+        }
         drained.push(req);
         self.arena.release(id);
     }
@@ -950,6 +1060,9 @@ impl<'a> Engine<'a> {
         self.requests.push(req.clone());
         self.generated_tokens += 1; // the sender's first token, owned here
         self.global_tps.record(t, 1);
+        if R::ENABLED {
+            self.rec.migrate_deliver(self.node_id, t, req.id);
+        }
         let id = self.arena.alloc(
             req_idx,
             req.output_len - 1,
@@ -983,9 +1096,23 @@ impl<'a> Engine<'a> {
 
     fn set_worker_clock(&mut self, t: f64, first_gpu: usize, n: usize, mhz: u32) {
         let clamped = mhz.min(self.clock_cap_mhz);
+        let before = if R::ENABLED {
+            self.gpus[first_gpu].sm_clock()
+        } else {
+            0
+        };
         for g in first_gpu..first_gpu + n {
             self.requested_mhz[g] = mhz;
             self.gpus[g].set_app_clock(t, clamped);
+        }
+        if R::ENABLED {
+            // Record only actual edges (set_app_clock snaps to the
+            // ladder, so the applied clock can equal the old one).
+            let after = self.gpus[first_gpu].sm_clock();
+            if after != before {
+                self.rec.clock_change(self.node_id, t, first_gpu, after);
+                self.record_obs_sample(t, -1.0);
+            }
         }
     }
 
@@ -1084,6 +1211,11 @@ impl<'a> Engine<'a> {
     // -- prefill -------------------------------------------------------------
 
     fn on_arrive(&mut self, t: f64, req_idx: usize) {
+        if R::ENABLED {
+            let r = &self.requests[req_idx];
+            let (id, pl, ol) = (r.id, r.prompt_len, r.output_len);
+            self.rec.arrive(self.node_id, t, id, pl, ol);
+        }
         self.outstanding_prompt_tok += self.requests[req_idx].prompt_len as u64;
         let queue = self.router.queue_for(&self.requests[req_idx]);
         self.prefill_queues[queue].push_back(QueuedJob { req_idx });
@@ -1158,6 +1290,10 @@ impl<'a> Engine<'a> {
         for g in g0..g0 + n {
             self.gpus[g].set_util(t, 1.0);
         }
+        if R::ENABLED {
+            let id = self.requests[job.req_idx].id;
+            self.rec.prefill_start(self.node_id, t, id, worker);
+        }
         self.q.schedule(t + dt, Ev::PrefillDone { worker, seq });
     }
 
@@ -1170,6 +1306,9 @@ impl<'a> Engine<'a> {
         }
         self.prefill_workers[worker].current = None;
         let req = self.requests[req_idx].clone();
+        if R::ENABLED {
+            self.rec.prefill_done(self.node_id, t, req.id);
+        }
         self.outstanding_prompt_tok = self
             .outstanding_prompt_tok
             .saturating_sub(req.prompt_len as u64);
@@ -1192,6 +1331,9 @@ impl<'a> Engine<'a> {
         let ttft = t - req.arrival_s;
         self.generated_tokens += 1; // prefill emits the first token
         self.global_tps.record(t, 1);
+        if R::ENABLED {
+            self.rec.first_token(self.node_id, t, req.id);
+        }
 
         if req.output_len <= 1 {
             // Prefill-only request (microbenchmarks): complete now.
@@ -1206,6 +1348,9 @@ impl<'a> Engine<'a> {
             };
             self.slo.record(outcome);
             self.completed += 1;
+            if R::ENABLED {
+                self.rec.finish(self.node_id, t, req.id, ttft, 0.0);
+            }
         } else {
             // Claim an arena slot (§Perf): a recycled slot's TBT buffer
             // comes back cleared-in-place, so steady traffic runs
@@ -1379,6 +1524,9 @@ impl<'a> Engine<'a> {
             finish_s: t,
         });
         self.completed += 1;
+        if R::ENABLED {
+            self.rec.finish(self.node_id, t, req.id, ttft, tbt_p95);
+        }
         self.arena.release(id);
     }
 }

@@ -7,6 +7,14 @@
 //! this way is what lets the scenario matrix swap governors without
 //! touching the event loop, and what makes the policy layer
 //! property-testable in isolation.
+//!
+//! These views are *inbound* telemetry — what policies consume to make
+//! clock decisions. The *outbound* direction (what the run emits about
+//! itself: request-lifecycle spans, per-node clock/power time series,
+//! SLO-violation attribution) lives in [`crate::obs`]; the engine applies
+//! a [`ClockPlan`] and reports the resulting clock edges to the flight
+//! recorder, so an exported trace shows exactly what a policy's plans did
+//! to the hardware over time. See `docs/OBSERVABILITY.md`.
 
 use crate::dvfs::prefill_opt::PrefillJobView;
 

@@ -16,6 +16,9 @@
 //! * [`model`] — model specs + the Eq. (1) FLOPs/bytes cost model.
 //! * [`workload`] — Alibaba/Azure-like trace generators, microbenchmarks.
 //! * [`metrics`], [`slo`] — telemetry + SLO accounting.
+//! * [`obs`] — flight-recorder observability: lifecycle spans, per-node
+//!   DVFS/power series, SLO-violation attribution, Perfetto export
+//!   (static-dispatch `Recorder`; the `NoopRecorder` default is zero-cost).
 //! * [`coordinator`] — router, queues, pools, the serving engine, and the
 //!   pluggable `DvfsPolicy` layer every governor implements (see
 //!   `coordinator::policy` for the registry and the trait contract).
@@ -38,6 +41,7 @@ pub mod dvfs;
 pub mod gpu;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod sim;
 pub mod slo;
 pub mod util;

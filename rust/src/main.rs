@@ -13,10 +13,18 @@
 //!
 //! Common flags: --duration <s> --seed <n> --model <name> --config <toml>.
 
+use std::cell::RefCell;
+
 use greenllm::bench::matrix::TraceSpec;
 use greenllm::bench::{self, figures, tables};
 use greenllm::config::{Config, Method};
+use greenllm::coordinator::cluster::{
+    run_cluster, run_cluster_recorded, ArbiterStrategy, ClusterConfig, DisaggConfig, FaultPlan,
+    FaultSpec, KvLinkModel, LbPolicy, NodeMigration, NodeSpec, PoolRatio,
+};
 use greenllm::coordinator::engine::{run, RunOptions};
+use greenllm::metrics::Histogram;
+use greenllm::obs::{self, FlightRecorder};
 use greenllm::server::{ServerConfig, ServerHandle};
 use greenllm::util::cli::Args;
 use greenllm::util::error::{anyhow, Result};
@@ -121,6 +129,8 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "matrix" => matrix_cmd(args, duration, seed),
         "cluster" => cluster_cmd(args, duration, seed),
+        "report" => report_cmd(args, duration, seed),
+        "trace-check" => trace_check_cmd(args),
         "bench" => bench_cmd(args),
         "serve" => serve(args),
         "" | "help" | "--help" => {
@@ -238,7 +248,6 @@ fn microbench(args: &Args, duration: f64, seed: u64) -> Result<()> {
 
 fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
     use greenllm::bench::matrix::{matrix, MatrixConfig};
-    use greenllm::coordinator::cluster::{ArbiterStrategy, FaultSpec, LbPolicy, NodeSpec, PoolRatio};
     let mut cfg = MatrixConfig {
         model: args.get_or("model", "qwen3-14b").to_string(),
         duration_s: duration,
@@ -387,11 +396,102 @@ fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
     Ok(())
 }
 
-fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
-    use greenllm::coordinator::cluster::{
-        run_cluster, ArbiterStrategy, ClusterConfig, DisaggConfig, FaultSpec, KvLinkModel,
-        LbPolicy, NodeSpec, PoolRatio,
-    };
+/// A cluster deployment parsed from flags plus `[cluster]`/`[disagg]`
+/// config defaults — everything `cluster` and `report` share before the
+/// method loop.
+struct ClusterSetup {
+    node_cfg: Config,
+    nodes: usize,
+    lb: LbPolicy,
+    cap_w: f64,
+    epoch_s: f64,
+    arbiter: ArbiterStrategy,
+    node_specs: Vec<NodeSpec>,
+    faults: FaultPlan,
+    pool_ratio: PoolRatio,
+    disagg_ratio: Option<PoolRatio>,
+    disagg_cfg: Option<DisaggConfig>,
+}
+
+impl ClusterSetup {
+    /// Assemble the full deployment for one DVFS method.
+    fn ccfg(&self, method: Method) -> ClusterConfig {
+        let mut ccfg = ClusterConfig::new(
+            self.nodes,
+            self.lb,
+            Config {
+                method,
+                ..self.node_cfg.clone()
+            },
+        )
+        .with_node_specs(self.node_specs.clone())
+        .with_faults(self.faults.clone())
+        .with_arbiter(self.arbiter)
+        .with_pool_ratio(self.pool_ratio);
+        if self.cap_w > 0.0 {
+            ccfg = ccfg.with_power_cap(self.cap_w, self.epoch_s);
+        }
+        if let Some(d) = self.disagg_cfg {
+            ccfg = ccfg.with_disagg(d);
+        }
+        ccfg
+    }
+
+    fn shape_label(&self) -> String {
+        if self.node_specs.is_empty() {
+            "uniform".to_string()
+        } else {
+            self.node_specs
+                .iter()
+                .map(|s| s.name.as_str())
+                .collect::<Vec<_>>()
+                .join(",")
+        }
+    }
+
+    fn cap_label(&self) -> String {
+        if self.cap_w > 0.0 {
+            format!(
+                "{:.0} W / {:.1} s epoch / {}",
+                self.cap_w,
+                self.epoch_s,
+                self.arbiter.name()
+            )
+        } else {
+            "uncapped".into()
+        }
+    }
+
+    fn fault_label(&self) -> String {
+        if self.faults.is_empty() {
+            "none".to_string()
+        } else {
+            self.faults.render()
+        }
+    }
+
+    fn disagg_label(&self) -> String {
+        match self.disagg_ratio {
+            Some(r) => format!(
+                "{} ({} prefill + {} decode)",
+                r.name(),
+                r.prefill_count(self.nodes),
+                self.nodes - r.prefill_count(self.nodes)
+            ),
+            None => "off".into(),
+        }
+    }
+
+    /// A fresh flight recorder sized for this deployment.
+    fn recorder(&self) -> RefCell<FlightRecorder> {
+        RefCell::new(FlightRecorder::new(self.nodes, self.node_cfg.obs.series_cap))
+    }
+}
+
+/// Parse the shared cluster deployment flags (`--nodes`, `--lb`,
+/// `--power-cap-w`, `--node-spec`, `--faults`, `--disagg`, ...) on top of
+/// the node config's `[cluster]`/`[disagg]` defaults.
+fn cluster_setup(args: &Args, duration: f64, seed: u64) -> Result<ClusterSetup> {
     let node_cfg = base_config(args, seed)?;
     let lb_name = args.get_or("lb", &node_cfg.cluster.lb);
     let lb = LbPolicy::parse(lb_name).ok_or_else(|| anyhow!("unknown balancer {lb_name:?}"))?;
@@ -442,61 +542,61 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
         prefill_method: Method::parse(&node_cfg.disagg.prefill_method),
         decode_method: Method::parse(&node_cfg.disagg.decode_method),
     });
+    Ok(ClusterSetup {
+        node_cfg,
+        nodes,
+        lb,
+        cap_w,
+        epoch_s,
+        arbiter,
+        node_specs,
+        faults,
+        pool_ratio,
+        disagg_ratio,
+        disagg_cfg,
+    })
+}
+
+/// One line summarising a whole-run latency distribution in milliseconds.
+fn dist_line(label: &str, h: &Histogram) -> String {
+    format!(
+        "{label} p50/p95/p99 {:.0}/{:.0}/{:.0} ms [{:.0}..{:.0} ms, n={}]",
+        h.p50() * 1e3,
+        h.p95() * 1e3,
+        h.p99() * 1e3,
+        h.observed_min() * 1e3,
+        h.observed_max() * 1e3,
+        h.count(),
+    )
+}
+
+fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
+    let setup = cluster_setup(args, duration, seed)?;
+    let nodes = setup.nodes;
     let trace = trace_from_args(args, duration, seed)?;
-    let shape_label = if node_specs.is_empty() {
-        "uniform".to_string()
-    } else {
-        node_specs
-            .iter()
-            .map(|s| s.name.as_str())
-            .collect::<Vec<_>>()
-            .join(",")
-    };
     println!(
-        "cluster: {nodes} nodes ({shape_label}), {} requests ({:.1} QPS aggregate), lb {}, cap {}, faults {}, disagg {}",
+        "cluster: {nodes} nodes ({}), {} requests ({:.1} QPS aggregate), lb {}, cap {}, faults {}, disagg {}",
+        setup.shape_label(),
         trace.requests.len(),
         trace.qps(),
-        lb.name(),
-        if cap_w > 0.0 {
-            format!("{cap_w:.0} W / {epoch_s:.1} s epoch / {}", arbiter.name())
-        } else {
-            "uncapped".into()
-        },
-        if faults.is_empty() {
-            "none".to_string()
-        } else {
-            faults.render()
-        },
-        match disagg_ratio {
-            Some(r) => format!(
-                "{} ({} prefill + {} decode)",
-                r.name(),
-                r.prefill_count(nodes),
-                nodes - r.prefill_count(nodes)
-            ),
-            None => "off".into(),
-        },
+        setup.lb.name(),
+        setup.cap_label(),
+        setup.fault_label(),
+        setup.disagg_label(),
     );
+    let trace_out = args.get("trace-out");
     for method in [Method::DefaultNv, Method::GreenLlm] {
-        let mut ccfg = ClusterConfig::new(
-            nodes,
-            lb,
-            Config {
-                method,
-                ..node_cfg.clone()
-            },
-        )
-        .with_node_specs(node_specs.clone())
-        .with_faults(faults.clone())
-        .with_arbiter(arbiter)
-        .with_pool_ratio(pool_ratio);
-        if cap_w > 0.0 {
-            ccfg = ccfg.with_power_cap(cap_w, epoch_s);
-        }
-        if let Some(d) = disagg_cfg {
-            ccfg = ccfg.with_disagg(d);
-        }
-        let r = run_cluster(&ccfg, &trace, &Default::default());
+        let ccfg = setup.ccfg(method);
+        // --trace-out records the GreenLLM pass (the paper's policy) and
+        // exports it as a Perfetto trace; the baseline pass stays
+        // recorder-off so the comparison keeps its zero-cost path.
+        let record_this = trace_out.is_some() && method == Method::GreenLlm;
+        let frec = setup.recorder();
+        let r = if record_this {
+            run_cluster_recorded(&ccfg, &trace, &Default::default(), &frec)
+        } else {
+            run_cluster(&ccfg, &trace, &Default::default())
+        };
         let balance = r.balance_label();
         println!(
             "{:<10} energy {:8.1} kJ ({:.2} J/tok) | TTFT {:5.1}% | TBT {:5.1}% | balance {balance}",
@@ -530,12 +630,20 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
                 m.transfer_j,
                 m.relays
             );
+            for (i, nm) in r.node_migration.iter().enumerate() {
+                if *nm != NodeMigration::default() {
+                    println!(
+                        "    node{i}: {} sends | {} deliveries | {} relays | {} re-prefills",
+                        nm.sends, nm.deliveries, nm.relays, nm.re_prefills
+                    );
+                }
+            }
         }
         if let Some(p) = &r.power {
             println!(
                 "  power: cap {:.0} W ({}) | peak epoch {:.0} W | {} epochs{}",
                 p.cap_w,
-                arbiter.name(),
+                setup.arbiter.name(),
                 p.peak_measured_w,
                 p.epochs.len(),
                 if p.had_infeasible_epoch {
@@ -545,7 +653,131 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
                 }
             );
         }
+        println!(
+            "  dist: {} | {}",
+            dist_line("TTFT", &r.ttft_hist),
+            dist_line("TBT-P95", &r.tbt_hist)
+        );
+        if record_this {
+            let path = trace_out.unwrap();
+            obs::perfetto::write_trace(&frec.borrow(), path)
+                .map_err(|e| anyhow!("trace-out {path}: {e}"))?;
+            println!("  trace: wrote {path}");
+        }
     }
+    Ok(())
+}
+
+/// `greenllm report`: run the configured method once with the flight
+/// recorder on, attribute every SLO violation to a dominant cause, and
+/// print the per-node attribution tables plus whole-run distributions.
+fn report_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
+    use greenllm::util::json::Json;
+    let setup = cluster_setup(args, duration, seed)?;
+    let trace = trace_from_args(args, duration, seed)?;
+    let method = setup.node_cfg.method;
+    let ccfg = setup.ccfg(method);
+    println!(
+        "report: {} nodes ({}), {} on {} ({} requests), faults {}, disagg {}",
+        setup.nodes,
+        setup.shape_label(),
+        method.name(),
+        trace.name,
+        trace.requests.len(),
+        setup.fault_label(),
+        setup.disagg_label(),
+    );
+    let frec = setup.recorder();
+    let r = run_cluster_recorded(&ccfg, &trace, &Default::default(), &frec);
+    let rec = frec.into_inner();
+    rec.span_check(false).map_err(|e| anyhow!("span invariants: {e}"))?;
+    let att = obs::attribute(&rec, &setup.node_cfg.slo);
+    // The recorder must agree with the per-node SLO trackers: every
+    // violation the trackers counted gets exactly one cause.
+    let exp_ttft: u64 = r
+        .per_node
+        .iter()
+        .map(|n| n.slo.completed - n.slo.ttft_passes())
+        .sum();
+    let exp_tbt: u64 = r
+        .per_node
+        .iter()
+        .map(|n| n.slo.tbt_eligible() - n.slo.tbt_passes())
+        .sum();
+    println!(
+        "attributed {}/{exp_ttft} TTFT and {}/{exp_tbt} TBT violations across {} finished requests",
+        att.ttft_violations, att.tbt_violations, att.finished
+    );
+    if att.ttft_violations != exp_ttft || att.tbt_violations != exp_tbt {
+        return Err(anyhow!(
+            "attribution mismatch: recorder attributed {}+{} violations but the SLO trackers counted {exp_ttft}+{exp_tbt}",
+            att.ttft_violations,
+            att.tbt_violations,
+        ));
+    }
+    print!("{}", att.render_table());
+    println!("{}", dist_line("TTFT", &r.ttft_hist));
+    println!("{}", dist_line("TBT-P95", &r.tbt_hist));
+    // Whole-run node power distribution from the recorder's time series.
+    let mut power = Histogram::new(1.0, 50_000.0, 512);
+    for n in 0..rec.nodes() {
+        for s in rec.series(n).iter() {
+            power.record(s.power_w);
+        }
+    }
+    println!(
+        "power: {} samples | p50/p95/p99 {:.0}/{:.0}/{:.0} W | peak {:.0} W",
+        power.count(),
+        power.p50(),
+        power.p95(),
+        power.p99(),
+        power.observed_max(),
+    );
+    if let Some(path) = args.get("trace-out") {
+        obs::perfetto::write_trace(&rec, path).map_err(|e| anyhow!("trace-out {path}: {e}"))?;
+        println!("trace: wrote {path}");
+    }
+    if let Some(path) = args.get("json") {
+        let dist_json = |h: &Histogram| {
+            Json::obj([
+                ("count", Json::Num(h.count() as f64)),
+                ("p50", Json::Num(h.p50())),
+                ("p95", Json::Num(h.p95())),
+                ("p99", Json::Num(h.p99())),
+                ("min", Json::Num(h.observed_min())),
+                ("max", Json::Num(h.observed_max())),
+            ])
+        };
+        let doc = Json::obj([
+            ("attribution", att.to_json()),
+            ("finished", Json::Num(att.finished as f64)),
+            ("ttft_s", dist_json(&r.ttft_hist)),
+            ("tbt_p95_s", dist_json(&r.tbt_hist)),
+            ("power_w", dist_json(&power)),
+        ]);
+        std::fs::write(path, doc.dump()).map_err(|e| anyhow!("report json {path}: {e}"))?;
+        println!("json: wrote {path}");
+    }
+    Ok(())
+}
+
+/// `greenllm trace-check <trace.json>`: re-parse an exported Perfetto
+/// trace with the in-repo parser and verify its structural invariants.
+fn trace_check_cmd(args: &Args) -> Result<()> {
+    use greenllm::util::json::Json;
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("file"))
+        .ok_or_else(|| anyhow!("usage: greenllm trace-check <trace.json>"))?;
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow!("read {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("parse {path}: {e}"))?;
+    let stats = obs::perfetto::validate_trace(&doc).map_err(|e| anyhow!("{path}: {e}"))?;
+    println!(
+        "{path}: OK — {} node tracks, {} spans, {} counter samples, {} instants",
+        stats.nodes, stats.spans, stats.counters, stats.instants
+    );
     Ok(())
 }
 
@@ -754,7 +986,19 @@ COMMANDS
                --faults none|onedown|flap|\"down@40:1,up@80:1\"
                --disagg off|P:D (prefill/decode pool split with explicit
                KV-transfer stream migration; link model via [disagg] TOML)
-               --pool-ratio P:D (phase-balancer long-pool split) --trace ...)
+               --pool-ratio P:D (phase-balancer long-pool split)
+               --trace-out t.json (Perfetto trace of the GreenLLM pass)
+               --trace ...)
+  report      flight-recorder post-run analysis: run the configured method
+              once with recording on, attribute every TTFT/TBT violation to
+              a dominant cause (queueing-wait | low-clock-prefill |
+              migration-wire-delay | fault-reroute | decode-clock-undershoot)
+              and print per-node tables + TTFT/TBT/power distributions
+              (same deployment flags as cluster; --trace-out t.json
+               --json report.json)
+  trace-check re-parse an exported Perfetto trace with the in-repo parser
+              and verify its structural invariants (greenllm trace-check
+              t.json)
   matrix      scenario matrix: traces x policies x margins x cluster shapes
               x chaos across threads (--traces a,b --methods a,b
                --margins 0.9,1.0 --nodes 1,2,4 --lb all|jsq,phase

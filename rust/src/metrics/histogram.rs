@@ -114,6 +114,15 @@ impl Histogram {
         self.quantile(0.99)
     }
 
+    /// Smallest recorded sample (0.0 when empty).
+    pub fn observed_min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.observed_min
+        }
+    }
+
     /// Largest recorded sample (0.0 when empty).
     pub fn observed_max(&self) -> f64 {
         if self.total == 0 {
@@ -218,6 +227,18 @@ mod tests {
         assert_eq!(a.count(), all.count());
         assert!((a.p95() / all.p95() - 1.0).abs() < 1e-9);
         assert!((a.mean() - all.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observed_extrema_track_samples() {
+        let mut h = Histogram::latency();
+        assert_eq!(h.observed_min(), 0.0);
+        assert_eq!(h.observed_max(), 0.0);
+        for v in [0.2, 0.005, 0.07] {
+            h.record(v);
+        }
+        assert_eq!(h.observed_min(), 0.005);
+        assert_eq!(h.observed_max(), 0.2);
     }
 
     #[test]

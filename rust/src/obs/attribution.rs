@@ -1,0 +1,409 @@
+//! SLO-violation attribution: a post-run pass over the flight recorder that
+//! classifies every TTFT/TBT violation by its dominant cause and rolls the
+//! result into per-cause/per-node tables.
+//!
+//! The taxonomy is **total and deterministic** — every violation maps to
+//! exactly one cause, so the table always sums to the violation count:
+//!
+//! - **TTFT** (scored against the route-class target): `fault-reroute` if
+//!   any fault touched the request; otherwise the larger of queue-wait vs
+//!   prefill-execution time decides `queueing-wait` vs `low-clock-prefill`
+//!   (ties go to queueing — the scheduler owns the tie). Migration wire
+//!   time never appears here because TTFT is anchored at the *sender's*
+//!   prefill-done instant.
+//! - **TBT** (P95 inter-token gap): `fault-reroute` if faulted; else
+//!   `migration-wire-delay` when the request's KV spent longer on the wire
+//!   than the TBT target (the delivery gap lands in the inter-token
+//!   stream); else `decode-clock-undershoot`.
+//!
+//! Node attribution follows the dominant segment: the queue/prefill node
+//! for TTFT causes, the decode node for TBT causes, the last-touched node
+//! for fault re-routes.
+
+use std::fmt::Write as _;
+
+use super::flight::{FlightRecorder, ReqOutcome, SegKind};
+use crate::slo::{RequestOutcome, SloTargets};
+use crate::util::json::Json;
+
+/// Dominant cause classes for an SLO violation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cause {
+    /// The request sat in a prefill queue longer than it ran.
+    QueueingWait,
+    /// Prefill execution dominated — the prefill pool clocked too low.
+    LowClockPrefill,
+    /// KV handoff wire time leaked into the inter-token stream.
+    MigrationWireDelay,
+    /// A node fault drained/relayed/re-prefilled the request.
+    FaultReroute,
+    /// Decode rounds ran too slow — the decode clock undershot.
+    DecodeClockUndershoot,
+}
+
+impl Cause {
+    /// All causes, in table order.
+    pub const ALL: [Cause; 5] = [
+        Cause::QueueingWait,
+        Cause::LowClockPrefill,
+        Cause::MigrationWireDelay,
+        Cause::FaultReroute,
+        Cause::DecodeClockUndershoot,
+    ];
+
+    /// Stable kebab-case label (tables, JSON keys).
+    pub fn label(self) -> &'static str {
+        match self {
+            Cause::QueueingWait => "queueing-wait",
+            Cause::LowClockPrefill => "low-clock-prefill",
+            Cause::MigrationWireDelay => "migration-wire-delay",
+            Cause::FaultReroute => "fault-reroute",
+            Cause::DecodeClockUndershoot => "decode-clock-undershoot",
+        }
+    }
+
+    fn idx(self) -> usize {
+        Cause::ALL.iter().position(|c| *c == self).unwrap()
+    }
+}
+
+/// Which SLO a violation broke.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// Time-to-first-token target (per route class).
+    Ttft,
+    /// P95 time-between-tokens target.
+    Tbt,
+}
+
+/// One attributed violation.
+#[derive(Debug, Clone, Copy)]
+pub struct Violation {
+    /// Request id.
+    pub id: u64,
+    /// Which SLO was broken.
+    pub kind: ViolationKind,
+    /// Dominant cause class.
+    pub cause: Cause,
+    /// Node the cause is attributed to.
+    pub node: usize,
+    /// How far past the target the metric landed, seconds.
+    pub excess_s: f64,
+}
+
+/// The rolled-up attribution result.
+#[derive(Debug, Clone)]
+pub struct Attribution {
+    /// Every attributed violation, in request-id order (TTFT before TBT
+    /// for a request that broke both).
+    pub violations: Vec<Violation>,
+    /// `counts[node][cause_idx]` violation counts (cause order =
+    /// [`Cause::ALL`]).
+    pub counts: Vec<[u64; 5]>,
+    /// TTFT violations attributed.
+    pub ttft_violations: u64,
+    /// TBT violations attributed.
+    pub tbt_violations: u64,
+    /// Finished requests examined.
+    pub finished: u64,
+}
+
+impl Attribution {
+    /// Total violations attributed.
+    pub fn total(&self) -> u64 {
+        self.ttft_violations + self.tbt_violations
+    }
+
+    /// Per-cause totals across nodes, in [`Cause::ALL`] order.
+    pub fn by_cause(&self) -> [u64; 5] {
+        let mut out = [0u64; 5];
+        for row in &self.counts {
+            for (o, c) in out.iter_mut().zip(row) {
+                *o += c;
+            }
+        }
+        out
+    }
+
+    /// Render the per-cause × per-node table as aligned text.
+    pub fn render_table(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(s, "{:<24}", "cause");
+        for n in 0..self.counts.len() {
+            let _ = write!(s, " {:>7}", format!("node{n}"));
+        }
+        let _ = writeln!(s, " {:>7}", "total");
+        let totals = self.by_cause();
+        for cause in Cause::ALL {
+            let i = cause.idx();
+            let _ = write!(s, "{:<24}", cause.label());
+            for row in &self.counts {
+                let _ = write!(s, " {:>7}", row[i]);
+            }
+            let _ = writeln!(s, " {:>7}", totals[i]);
+        }
+        let _ = write!(s, "{:<24}", "all causes");
+        for row in &self.counts {
+            let _ = write!(s, " {:>7}", row.iter().sum::<u64>());
+        }
+        let _ = writeln!(s, " {:>7}", self.total());
+        s
+    }
+
+    /// The attribution as JSON: per-cause totals plus the per-node matrix.
+    pub fn to_json(&self) -> Json {
+        let totals = self.by_cause();
+        Json::obj([
+            ("ttft_violations", Json::Num(self.ttft_violations as f64)),
+            ("tbt_violations", Json::Num(self.tbt_violations as f64)),
+            ("total", Json::Num(self.total() as f64)),
+            (
+                "by_cause",
+                Json::obj(
+                    Cause::ALL
+                        .iter()
+                        .map(|c| (c.label(), Json::Num(totals[c.idx()] as f64))),
+                ),
+            ),
+            (
+                "per_node",
+                Json::Arr(
+                    self.counts
+                        .iter()
+                        .map(|row| {
+                            Json::obj(
+                                Cause::ALL
+                                    .iter()
+                                    .map(|c| (c.label(), Json::Num(row[c.idx()] as f64))),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Classify every SLO violation among the recorder's finished requests.
+///
+/// Uses the same pass predicates as `slo::SloTracker::record` (TTFT fails
+/// when strictly above its route-class target; TBT is scored only for
+/// requests with ≥ 2 output tokens and fails strictly above the P95
+/// target), so the attributed totals match the tracker's violation counts
+/// exactly.
+pub fn attribute(rec: &FlightRecorder, targets: &SloTargets) -> Attribution {
+    let nodes = rec.nodes().max(1);
+    let mut out = Attribution {
+        violations: Vec::new(),
+        counts: vec![[0u64; 5]; nodes],
+        ttft_violations: 0,
+        tbt_violations: 0,
+        finished: 0,
+    };
+    for (&id, r) in rec.requests() {
+        let (ttft_s, tbt_p95_s) = match r.outcome {
+            ReqOutcome::Finished {
+                ttft_s, tbt_p95_s, ..
+            } => (ttft_s, tbt_p95_s),
+            _ => continue,
+        };
+        out.finished += 1;
+        // Reuse the tracker's route-class logic verbatim.
+        let scored = RequestOutcome {
+            id,
+            prompt_len: r.prompt_len,
+            output_len: r.output_len,
+            arrival_s: r.arrival_s,
+            ttft_s,
+            tbt_p95_s,
+            finish_s: 0.0,
+        };
+        let ttft_target = targets.ttft_for(scored.route_class());
+        if ttft_s > ttft_target {
+            let (cause, node) = if r.faulted {
+                (Cause::FaultReroute, last_touched(r))
+            } else {
+                let queued = r.time_in(SegKind::Queued);
+                let prefill = r.time_in(SegKind::Prefill);
+                if queued >= prefill {
+                    (
+                        Cause::QueueingWait,
+                        r.last_node_of(SegKind::Queued).unwrap_or(0),
+                    )
+                } else {
+                    (
+                        Cause::LowClockPrefill,
+                        r.last_node_of(SegKind::Prefill).unwrap_or(0),
+                    )
+                }
+            };
+            push(&mut out, id, ViolationKind::Ttft, cause, node, ttft_s - ttft_target);
+        }
+        if r.output_len >= 2 && tbt_p95_s > targets.tbt_p95_s {
+            let (cause, node) = if r.faulted {
+                (Cause::FaultReroute, last_touched(r))
+            } else if r.time_in(SegKind::KvTransfer) > targets.tbt_p95_s {
+                (
+                    Cause::MigrationWireDelay,
+                    r.last_node_of(SegKind::Decode).unwrap_or(0),
+                )
+            } else {
+                (
+                    Cause::DecodeClockUndershoot,
+                    r.last_node_of(SegKind::Decode).unwrap_or(0),
+                )
+            };
+            push(
+                &mut out,
+                id,
+                ViolationKind::Tbt,
+                cause,
+                node,
+                tbt_p95_s - targets.tbt_p95_s,
+            );
+        }
+    }
+    out
+}
+
+fn last_touched(r: &super::flight::ReqRecord) -> usize {
+    r.segs.last().map(|s| s.node as usize).unwrap_or(0)
+}
+
+fn push(out: &mut Attribution, id: u64, kind: ViolationKind, cause: Cause, node: usize, ex: f64) {
+    let node = node.min(out.counts.len() - 1);
+    out.counts[node][cause.idx()] += 1;
+    match kind {
+        ViolationKind::Ttft => out.ttft_violations += 1,
+        ViolationKind::Tbt => out.tbt_violations += 1,
+    }
+    out.violations.push(Violation {
+        id,
+        kind,
+        cause,
+        node,
+        excess_s: ex,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Recorder;
+
+    fn targets() -> SloTargets {
+        SloTargets {
+            ttft_short_medium_s: 0.4,
+            ttft_long_s: 2.0,
+            tbt_p95_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn queue_dominated_ttft_violation_is_queueing_wait() {
+        let mut fr = FlightRecorder::with_defaults(2);
+        fr.arrive(1, 0.0, 1, 100, 4);
+        fr.prefill_start(1, 0.5, 1, 0); // 0.5 s queued
+        fr.prefill_done(1, 0.6, 1); // 0.1 s prefill
+        fr.first_token(1, 0.6, 1);
+        fr.finish(1, 0.8, 1, 0.6, 0.02);
+        let a = attribute(&fr, &targets());
+        assert_eq!(a.total(), 1);
+        assert_eq!(a.violations[0].cause, Cause::QueueingWait);
+        assert_eq!(a.violations[0].node, 1);
+        assert_eq!(a.by_cause()[Cause::QueueingWait.idx()], 1);
+    }
+
+    #[test]
+    fn prefill_dominated_ttft_violation_is_low_clock() {
+        let mut fr = FlightRecorder::with_defaults(1);
+        fr.arrive(0, 0.0, 1, 100, 4);
+        fr.prefill_start(0, 0.1, 1, 0);
+        fr.prefill_done(0, 0.7, 1); // 0.6 s prefill > 0.1 s queued
+        fr.first_token(0, 0.7, 1);
+        fr.finish(0, 0.9, 1, 0.7, 0.02);
+        let a = attribute(&fr, &targets());
+        assert_eq!(a.total(), 1);
+        assert_eq!(a.violations[0].cause, Cause::LowClockPrefill);
+    }
+
+    #[test]
+    fn faulted_request_violations_are_fault_reroute() {
+        let mut fr = FlightRecorder::with_defaults(2);
+        fr.arrive(0, 0.0, 1, 100, 4);
+        fr.prefill_start(0, 0.1, 1, 0);
+        fr.abort(0, 0.2, 1, 0);
+        fr.arrive(1, 0.2, 1, 100, 4);
+        fr.prefill_start(1, 0.3, 1, 0);
+        fr.prefill_done(1, 0.5, 1);
+        fr.first_token(1, 0.5, 1);
+        fr.finish(1, 1.5, 1, 0.5, 0.3); // breaks TTFT and TBT
+        let a = attribute(&fr, &targets());
+        assert_eq!(a.total(), 2);
+        assert!(a.violations.iter().all(|v| v.cause == Cause::FaultReroute));
+        assert_eq!(a.ttft_violations, 1);
+        assert_eq!(a.tbt_violations, 1);
+    }
+
+    #[test]
+    fn wire_dominated_tbt_violation_is_migration_wire_delay() {
+        let mut fr = FlightRecorder::with_defaults(2);
+        fr.arrive(0, 0.0, 1, 100, 8);
+        fr.prefill_start(0, 0.0, 1, 0);
+        fr.prefill_done(0, 0.2, 1);
+        fr.migrate_send(0, 1, 0.2, 1, 1e6, 0.5);
+        fr.migrate_deliver(1, 0.5, 1); // 0.3 s on the wire > 0.1 s target
+        fr.finish(1, 1.0, 1, 0.2, 0.3);
+        let a = attribute(&fr, &targets());
+        assert_eq!(a.total(), 1);
+        assert_eq!(a.violations[0].cause, Cause::MigrationWireDelay);
+        assert_eq!(a.violations[0].node, 1);
+    }
+
+    #[test]
+    fn decode_undershoot_is_the_tbt_fallback_and_short_outputs_are_exempt() {
+        let mut fr = FlightRecorder::with_defaults(1);
+        fr.arrive(0, 0.0, 1, 100, 8);
+        fr.prefill_start(0, 0.0, 1, 0);
+        fr.prefill_done(0, 0.1, 1);
+        fr.first_token(0, 0.1, 1);
+        fr.finish(0, 2.0, 1, 0.1, 0.25);
+        // Single-token request with a "bad" TBT metric: not TBT-eligible.
+        fr.arrive(0, 0.0, 2, 100, 1);
+        fr.prefill_start(0, 0.0, 2, 0);
+        fr.prefill_done(0, 0.1, 2);
+        fr.first_token(0, 0.1, 2);
+        fr.finish(0, 0.1, 2, 0.1, 9.9);
+        let a = attribute(&fr, &targets());
+        assert_eq!(a.total(), 1);
+        assert_eq!(a.violations[0].cause, Cause::DecodeClockUndershoot);
+    }
+
+    #[test]
+    fn table_and_json_sum_to_total() {
+        let mut fr = FlightRecorder::with_defaults(2);
+        for (id, n) in [(1u64, 0usize), (2, 1), (3, 0)] {
+            fr.arrive(n, 0.0, id, 100, 4);
+            fr.prefill_start(n, 0.6, id, 0);
+            fr.prefill_done(n, 0.7, id);
+            fr.first_token(n, 0.7, id);
+            fr.finish(n, 0.9, id, 0.7, 0.02);
+        }
+        let a = attribute(&fr, &targets());
+        assert_eq!(a.total(), 3);
+        let txt = a.render_table();
+        assert!(txt.contains("queueing-wait"));
+        let j = a.to_json();
+        assert_eq!(j.path("total").and_then(Json::as_f64), Some(3.0));
+        let per_node = j.get("per_node").and_then(Json::as_arr).unwrap();
+        let sum: f64 = per_node
+            .iter()
+            .flat_map(|row| {
+                Cause::ALL
+                    .iter()
+                    .map(|c| row.get(c.label()).and_then(Json::as_f64).unwrap())
+            })
+            .sum();
+        assert_eq!(sum, 3.0);
+    }
+}

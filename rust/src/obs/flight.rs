@@ -1,0 +1,629 @@
+//! The in-memory flight recorder: per-request lifecycle segments keyed by
+//! request id, bounded per-node telemetry rings, and fault markers.
+//!
+//! Determinism: requests live in a `BTreeMap` (sorted by id), segments are
+//! appended in event order on one virtual clock, and ring samples are
+//! iterated oldest-first — so two identical seeded runs yield identical
+//! recorder state and (via `obs::perfetto`) byte-identical trace files.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use super::{NodeSample, Recorder};
+
+/// What a lifecycle segment covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegKind {
+    /// Waiting in a prefill queue (arrival or re-injection → prefill start).
+    Queued,
+    /// A prefill job in flight on a worker.
+    Prefill,
+    /// KV bytes on the inter-node wire (send/relay → delivery).
+    KvTransfer,
+    /// Decode rounds (first token / delivery → last token).
+    Decode,
+}
+
+impl SegKind {
+    /// Stable lowercase label (trace event names, tables).
+    pub fn label(self) -> &'static str {
+        match self {
+            SegKind::Queued => "queued",
+            SegKind::Prefill => "prefill",
+            SegKind::KvTransfer => "kv-transfer",
+            SegKind::Decode => "decode",
+        }
+    }
+}
+
+/// One time segment of a request's life on one node. `t1` is NaN while the
+/// segment is still open.
+#[derive(Debug, Clone, Copy)]
+pub struct Seg {
+    /// Segment kind.
+    pub kind: SegKind,
+    /// Cluster node the segment ran on (sender for `KvTransfer`).
+    pub node: u32,
+    /// Start time, seconds.
+    pub t0: f64,
+    /// End time, seconds (NaN while open).
+    pub t1: f64,
+}
+
+impl Seg {
+    /// Whether the segment is still open.
+    pub fn is_open(&self) -> bool {
+        self.t1.is_nan()
+    }
+    /// Segment duration (0 while open).
+    pub fn dur(&self) -> f64 {
+        if self.is_open() {
+            0.0
+        } else {
+            self.t1 - self.t0
+        }
+    }
+}
+
+/// Terminal state of a recorded request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReqOutcome {
+    /// Still in flight (or re-injected after a drain).
+    Open,
+    /// Completed; carries finish time and scored metrics.
+    Finished {
+        /// Completion time, seconds.
+        t: f64,
+        /// Time to first token, seconds.
+        ttft_s: f64,
+        /// P95 time-between-tokens, seconds.
+        tbt_p95_s: f64,
+    },
+    /// Drained from a failed node (normally transient: conservation
+    /// re-injects it and the record re-opens).
+    Aborted {
+        /// Drain time, seconds.
+        t: f64,
+        /// Tokens emitted and discarded by the drain.
+        emitted: u64,
+    },
+}
+
+/// Everything recorded about one request.
+#[derive(Debug, Clone)]
+pub struct ReqRecord {
+    /// Prompt length, tokens.
+    pub prompt_len: u32,
+    /// Output length, tokens.
+    pub output_len: u32,
+    /// First arrival time, seconds.
+    pub arrival_s: f64,
+    /// Lifecycle segments in event order.
+    pub segs: Vec<Seg>,
+    /// Times the request was drained off a failed node.
+    pub drains: u32,
+    /// Wire re-sends after a decode-target failure.
+    pub relays: u32,
+    /// Full prefill restarts after the KV was lost with its sender.
+    pub re_prefills: u32,
+    /// Whether any fault touched this request (drain/relay/re-prefill).
+    pub faulted: bool,
+    /// Times `finish` fired (span invariant: exactly 1 for Finished).
+    pub finishes: u32,
+    /// Terminal state.
+    pub outcome: ReqOutcome,
+}
+
+impl ReqRecord {
+    fn new(prompt_len: u32, output_len: u32, arrival_s: f64) -> Self {
+        ReqRecord {
+            prompt_len,
+            output_len,
+            arrival_s,
+            segs: Vec::new(),
+            drains: 0,
+            relays: 0,
+            re_prefills: 0,
+            faulted: false,
+            finishes: 0,
+            outcome: ReqOutcome::Open,
+        }
+    }
+
+    fn push_seg(&mut self, kind: SegKind, node: usize, t0: f64) {
+        self.segs.push(Seg {
+            kind,
+            node: node as u32,
+            t0,
+            t1: f64::NAN,
+        });
+    }
+
+    /// Close the most recent open segment at `t` (no-op if none is open).
+    fn close_open(&mut self, t: f64) {
+        if let Some(s) = self.segs.last_mut() {
+            if s.is_open() {
+                s.t1 = t;
+            }
+        }
+    }
+
+    /// Total duration spent in segments of `kind` (closed segments only).
+    pub fn time_in(&self, kind: SegKind) -> f64 {
+        self.segs
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(Seg::dur)
+            .sum()
+    }
+
+    /// Node of the last segment of `kind`, if any.
+    pub fn last_node_of(&self, kind: SegKind) -> Option<usize> {
+        self.segs
+            .iter()
+            .rev()
+            .find(|s| s.kind == kind)
+            .map(|s| s.node as usize)
+    }
+}
+
+/// Bounded ring buffer of [`NodeSample`]s: O(1) push, overwrites the oldest
+/// sample once full, iterates oldest-first.
+#[derive(Debug, Clone)]
+pub struct SeriesRing {
+    cap: usize,
+    buf: Vec<NodeSample>,
+    head: usize,
+    dropped: u64,
+}
+
+impl SeriesRing {
+    /// An empty ring holding at most `cap` samples.
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "series ring capacity must be positive");
+        SeriesRing {
+            cap,
+            buf: Vec::new(),
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Append a sample, evicting the oldest when full. The sample time must
+    /// be finite — the same contract `sim::EventQueue` enforces by panic —
+    /// so a recorder path can never smuggle a NaN/inf timestamp downstream.
+    pub fn push(&mut self, s: NodeSample) {
+        debug_assert!(
+            s.t.is_finite(),
+            "non-finite sample time {} in recorder series",
+            s.t
+        );
+        debug_assert!(
+            s.power_w.is_finite() && s.granted_w.is_finite(),
+            "non-finite power sample at t={}",
+            s.t
+        );
+        if self.buf.len() < self.cap {
+            self.buf.push(s);
+        } else {
+            self.buf[self.head] = s;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Samples currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether the ring holds no samples.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Samples evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Iterate oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &NodeSample> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+}
+
+/// The live recorder: request records keyed by id, one telemetry ring per
+/// node, and a fault-transition log.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    reqs: BTreeMap<u64, ReqRecord>,
+    series: Vec<SeriesRing>,
+    faults: Vec<(f64, usize, bool)>,
+    series_cap: usize,
+}
+
+impl FlightRecorder {
+    /// Recorder for `nodes` nodes with per-node rings of `series_cap`
+    /// samples.
+    pub fn new(nodes: usize, series_cap: usize) -> Self {
+        FlightRecorder {
+            reqs: BTreeMap::new(),
+            series: (0..nodes).map(|_| SeriesRing::new(series_cap)).collect(),
+            faults: Vec::new(),
+            series_cap,
+        }
+    }
+
+    /// Recorder with the default ring capacity (4096 samples/node).
+    pub fn with_defaults(nodes: usize) -> Self {
+        FlightRecorder::new(nodes, 4096)
+    }
+
+    /// Number of node tracks.
+    pub fn nodes(&self) -> usize {
+        self.series.len()
+    }
+
+    /// Request records, sorted by id.
+    pub fn requests(&self) -> impl Iterator<Item = (&u64, &ReqRecord)> {
+        self.reqs.iter()
+    }
+
+    /// The record for one request id.
+    pub fn request(&self, id: u64) -> Option<&ReqRecord> {
+        self.reqs.get(&id)
+    }
+
+    /// Telemetry ring for one node.
+    pub fn series(&self, node: usize) -> &SeriesRing {
+        &self.series[node]
+    }
+
+    /// Fault transitions as `(t, node, up)`.
+    pub fn faults(&self) -> &[(f64, usize, bool)] {
+        &self.faults
+    }
+
+    /// `(finished, aborted, open)` request counts — the "every arrival
+    /// closes in exactly one bucket" ledger.
+    pub fn bucket_counts(&self) -> (u64, u64, u64) {
+        let (mut fin, mut ab, mut open) = (0u64, 0u64, 0u64);
+        for r in self.reqs.values() {
+            match r.outcome {
+                ReqOutcome::Finished { .. } => fin += 1,
+                ReqOutcome::Aborted { .. } => ab += 1,
+                ReqOutcome::Open => open += 1,
+            }
+        }
+        (fin, ab, open)
+    }
+
+    fn rec(&mut self, id: u64) -> Option<&mut ReqRecord> {
+        self.reqs.get_mut(&id)
+    }
+
+    /// Validate the span invariants. With `require_closed`, every request
+    /// must have reached a terminal bucket (use after a completed run).
+    ///
+    /// Checks, per request: segments start at/after arrival and have
+    /// non-decreasing start times; closed segments run forward in time with
+    /// finite endpoints; a finished request has exactly one `finish`, no
+    /// open segments, and every migration (`kv-transfer`) segment nested
+    /// inside `[arrival, finish]`.
+    pub fn span_check(&self, require_closed: bool) -> Result<(), String> {
+        for (id, r) in &self.reqs {
+            let e = |msg: String| Err(format!("req {id}: {msg}"));
+            if r.segs.is_empty() {
+                return e("no segments recorded".into());
+            }
+            if r.segs[0].kind != SegKind::Queued {
+                return e(format!("first segment is {:?}, not Queued", r.segs[0].kind));
+            }
+            let mut prev_t0 = r.arrival_s;
+            for (i, s) in r.segs.iter().enumerate() {
+                if !s.t0.is_finite() {
+                    return e(format!("segment {i} has non-finite start {}", s.t0));
+                }
+                if s.t0 < prev_t0 - 1e-9 {
+                    return e(format!(
+                        "segment {i} starts at {} before previous start {prev_t0}",
+                        s.t0
+                    ));
+                }
+                prev_t0 = s.t0;
+                if !s.is_open() {
+                    if !s.t1.is_finite() {
+                        return e(format!("segment {i} has non-finite end {}", s.t1));
+                    }
+                    if s.t1 < s.t0 - 1e-9 {
+                        return e(format!("segment {i} runs backwards: {}..{}", s.t0, s.t1));
+                    }
+                }
+            }
+            match r.outcome {
+                ReqOutcome::Finished { t, .. } => {
+                    if r.finishes != 1 {
+                        return e(format!("finished {} times", r.finishes));
+                    }
+                    for (i, s) in r.segs.iter().enumerate() {
+                        if s.is_open() {
+                            return e(format!("segment {i} still open after finish"));
+                        }
+                        if s.kind == SegKind::KvTransfer
+                            && (s.t0 < r.arrival_s - 1e-9 || s.t1 > t + 1e-9)
+                        {
+                            return e(format!(
+                                "migration segment {i} ({}..{}) outside lifecycle {}..{t}",
+                                s.t0, s.t1, r.arrival_s
+                            ));
+                        }
+                    }
+                }
+                ReqOutcome::Aborted { .. } | ReqOutcome::Open => {
+                    if require_closed && matches!(r.outcome, ReqOutcome::Open) {
+                        return e("still open after run end".into());
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Recorder for FlightRecorder {
+    fn arrive(&mut self, node: usize, t: f64, id: u64, prompt_len: u32, output_len: u32) {
+        debug_assert!(t.is_finite(), "non-finite arrive time {t}");
+        let r = self
+            .reqs
+            .entry(id)
+            .or_insert_with(|| ReqRecord::new(prompt_len, output_len, t));
+        // A re-injection after a drain re-opens the record.
+        r.outcome = ReqOutcome::Open;
+        r.close_open(t);
+        r.push_seg(SegKind::Queued, node, t);
+    }
+
+    fn prefill_start(&mut self, node: usize, t: f64, id: u64, _worker: usize) {
+        if let Some(r) = self.rec(id) {
+            r.close_open(t);
+            r.push_seg(SegKind::Prefill, node, t);
+        }
+    }
+
+    fn prefill_done(&mut self, _node: usize, t: f64, id: u64) {
+        if let Some(r) = self.rec(id) {
+            r.close_open(t);
+        }
+    }
+
+    fn first_token(&mut self, node: usize, t: f64, id: u64) {
+        if let Some(r) = self.rec(id) {
+            r.push_seg(SegKind::Decode, node, t);
+        }
+    }
+
+    fn finish(&mut self, _node: usize, t: f64, id: u64, ttft_s: f64, tbt_p95_s: f64) {
+        if let Some(r) = self.rec(id) {
+            r.close_open(t);
+            r.finishes += 1;
+            r.outcome = ReqOutcome::Finished { t, ttft_s, tbt_p95_s };
+        }
+    }
+
+    fn abort(&mut self, _node: usize, t: f64, id: u64, emitted: u64) {
+        if let Some(r) = self.rec(id) {
+            r.close_open(t);
+            r.drains += 1;
+            r.faulted = true;
+            r.outcome = ReqOutcome::Aborted { t, emitted };
+        }
+    }
+
+    fn migrate_send(&mut self, from: usize, _to: usize, t: f64, id: u64, _kv_bytes: f64, _dl: f64) {
+        if let Some(r) = self.rec(id) {
+            r.close_open(t);
+            r.push_seg(SegKind::KvTransfer, from, t);
+        }
+    }
+
+    fn migrate_deliver(&mut self, node: usize, t: f64, id: u64) {
+        if let Some(r) = self.rec(id) {
+            r.close_open(t);
+            r.push_seg(SegKind::Decode, node, t);
+        }
+    }
+
+    fn migrate_relay(&mut self, from: usize, _to: usize, t: f64, id: u64) {
+        if let Some(r) = self.rec(id) {
+            r.close_open(t);
+            r.relays += 1;
+            r.faulted = true;
+            r.push_seg(SegKind::KvTransfer, from, t);
+        }
+    }
+
+    fn re_prefill(&mut self, _node: usize, t: f64, id: u64) {
+        if let Some(r) = self.rec(id) {
+            r.close_open(t);
+            r.re_prefills += 1;
+            r.faulted = true;
+        }
+    }
+
+    fn fault(&mut self, node: usize, t: f64, up: bool) {
+        debug_assert!(t.is_finite(), "non-finite fault time {t}");
+        self.faults.push((t, node, up));
+    }
+
+    fn clock_change(&mut self, _node: usize, t: f64, _first_gpu: usize, _mhz: u32) {
+        debug_assert!(t.is_finite(), "non-finite clock-change time {t}");
+    }
+
+    fn sample(&mut self, node: usize, s: NodeSample) {
+        if node >= self.series.len() {
+            // Engines beyond the sized node count (defensive; plain runs
+            // construct the recorder with nodes >= 1).
+            self.series
+                .extend((self.series.len()..=node).map(|_| SeriesRing::new(self.series_cap)));
+        }
+        self.series[node].push(s);
+    }
+}
+
+/// A `Copy` handle sharing one [`FlightRecorder`] between the cluster loop
+/// and its engines (each engine owns its recorder by value; the handle is a
+/// `&RefCell` so they all append to the same recorder).
+#[derive(Debug, Clone, Copy)]
+pub struct SharedRecorder<'r>(pub &'r RefCell<FlightRecorder>);
+
+impl Recorder for SharedRecorder<'_> {
+    fn arrive(&mut self, node: usize, t: f64, id: u64, prompt_len: u32, output_len: u32) {
+        self.0.borrow_mut().arrive(node, t, id, prompt_len, output_len);
+    }
+    fn prefill_start(&mut self, node: usize, t: f64, id: u64, worker: usize) {
+        self.0.borrow_mut().prefill_start(node, t, id, worker);
+    }
+    fn prefill_done(&mut self, node: usize, t: f64, id: u64) {
+        self.0.borrow_mut().prefill_done(node, t, id);
+    }
+    fn first_token(&mut self, node: usize, t: f64, id: u64) {
+        self.0.borrow_mut().first_token(node, t, id);
+    }
+    fn finish(&mut self, node: usize, t: f64, id: u64, ttft_s: f64, tbt_p95_s: f64) {
+        self.0.borrow_mut().finish(node, t, id, ttft_s, tbt_p95_s);
+    }
+    fn abort(&mut self, node: usize, t: f64, id: u64, emitted: u64) {
+        self.0.borrow_mut().abort(node, t, id, emitted);
+    }
+    fn migrate_send(&mut self, from: usize, to: usize, t: f64, id: u64, kv_bytes: f64, dl: f64) {
+        self.0.borrow_mut().migrate_send(from, to, t, id, kv_bytes, dl);
+    }
+    fn migrate_deliver(&mut self, node: usize, t: f64, id: u64) {
+        self.0.borrow_mut().migrate_deliver(node, t, id);
+    }
+    fn migrate_relay(&mut self, from: usize, to: usize, t: f64, id: u64) {
+        self.0.borrow_mut().migrate_relay(from, to, t, id);
+    }
+    fn re_prefill(&mut self, node: usize, t: f64, id: u64) {
+        self.0.borrow_mut().re_prefill(node, t, id);
+    }
+    fn fault(&mut self, node: usize, t: f64, up: bool) {
+        self.0.borrow_mut().fault(node, t, up);
+    }
+    fn clock_change(&mut self, node: usize, t: f64, first_gpu: usize, mhz: u32) {
+        self.0.borrow_mut().clock_change(node, t, first_gpu, mhz);
+    }
+    fn sample(&mut self, node: usize, s: NodeSample) {
+        self.0.borrow_mut().sample(node, s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: f64) -> NodeSample {
+        NodeSample {
+            t,
+            prefill_mhz: 1200,
+            decode_mhz: 900,
+            power_w: 250.0,
+            granted_w: -1.0,
+            queue_depth: 1,
+            active_streams: 2,
+            batch: 2,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_when_full() {
+        let mut r = SeriesRing::new(3);
+        for i in 0..5 {
+            r.push(sample(i as f64));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let ts: Vec<f64> = r.iter().map(|s| s.t).collect();
+        assert_eq!(ts, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite sample time")]
+    fn ring_rejects_non_finite_time() {
+        SeriesRing::new(4).push(sample(f64::NAN));
+    }
+
+    #[test]
+    fn happy_path_spans_close_in_order() {
+        let mut fr = FlightRecorder::with_defaults(1);
+        fr.arrive(0, 0.0, 7, 100, 4);
+        fr.prefill_start(0, 0.5, 7, 0);
+        fr.prefill_done(0, 0.9, 7);
+        fr.first_token(0, 0.9, 7);
+        fr.finish(0, 1.4, 7, 0.9, 0.05);
+        fr.span_check(true).unwrap();
+        let r = fr.request(7).unwrap();
+        assert_eq!(r.segs.len(), 3);
+        assert!((r.time_in(SegKind::Queued) - 0.5).abs() < 1e-12);
+        assert!((r.time_in(SegKind::Prefill) - 0.4).abs() < 1e-12);
+        assert!((r.time_in(SegKind::Decode) - 0.5).abs() < 1e-12);
+        assert_eq!(fr.bucket_counts(), (1, 0, 0));
+    }
+
+    #[test]
+    fn migration_spans_nest_inside_lifecycle() {
+        let mut fr = FlightRecorder::with_defaults(2);
+        fr.arrive(0, 0.0, 3, 2000, 8);
+        fr.prefill_start(0, 0.1, 3, 0);
+        fr.prefill_done(0, 1.1, 3);
+        fr.migrate_send(0, 1, 1.1, 3, 8e6, 1.2);
+        fr.migrate_deliver(1, 1.2, 3);
+        fr.finish(1, 2.0, 3, 1.1, 0.08);
+        fr.span_check(true).unwrap();
+        let r = fr.request(3).unwrap();
+        assert_eq!(r.last_node_of(SegKind::KvTransfer), Some(0));
+        assert_eq!(r.last_node_of(SegKind::Decode), Some(1));
+        assert!((r.time_in(SegKind::KvTransfer) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drain_and_reinjection_reopens_the_record() {
+        let mut fr = FlightRecorder::with_defaults(2);
+        fr.arrive(0, 0.0, 5, 100, 10);
+        fr.prefill_start(0, 0.2, 5, 0);
+        fr.abort(0, 0.6, 5, 0);
+        assert_eq!(fr.bucket_counts(), (0, 1, 0));
+        fr.arrive(1, 0.6, 5, 100, 10);
+        fr.prefill_start(1, 0.7, 5, 0);
+        fr.prefill_done(1, 1.0, 5);
+        fr.first_token(1, 1.0, 5);
+        fr.finish(1, 2.0, 5, 1.0, 0.04);
+        fr.span_check(true).unwrap();
+        let r = fr.request(5).unwrap();
+        assert!(r.faulted);
+        assert_eq!(r.drains, 1);
+        assert_eq!(fr.bucket_counts(), (1, 0, 0));
+    }
+
+    #[test]
+    fn span_check_flags_open_requests_when_required() {
+        let mut fr = FlightRecorder::with_defaults(1);
+        fr.arrive(0, 0.0, 1, 50, 2);
+        assert!(fr.span_check(false).is_ok());
+        assert!(fr.span_check(true).is_err());
+    }
+
+    #[test]
+    fn span_check_flags_double_finish() {
+        let mut fr = FlightRecorder::with_defaults(1);
+        fr.arrive(0, 0.0, 1, 50, 1);
+        fr.prefill_start(0, 0.1, 1, 0);
+        fr.prefill_done(0, 0.2, 1);
+        fr.first_token(0, 0.2, 1);
+        fr.finish(0, 0.2, 1, 0.2, 0.0);
+        fr.finish(0, 0.3, 1, 0.2, 0.0);
+        assert!(fr.span_check(true).is_err());
+    }
+}

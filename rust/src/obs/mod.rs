@@ -1,0 +1,133 @@
+//! Flight-recorder observability layer: request-lifecycle spans, per-node
+//! DVFS/power time series, and SLO-violation attribution — zero-cost when
+//! off.
+//!
+//! The engine and the cluster event loop are generic over a [`Recorder`].
+//! The default [`NoopRecorder`] has empty `#[inline]` hooks and
+//! `ENABLED == false`, so the unrecorded path monomorphizes to exactly the
+//! pre-observability code (every hook call folds away and every
+//! sample-construction site is guarded by `if R::ENABLED`). The live
+//! implementation is [`FlightRecorder`] (usually shared between the cluster
+//! loop and its engines through [`SharedRecorder`]), which feeds:
+//!
+//! - [`attribution`] — a post-run pass classifying every TTFT/TBT violation
+//!   by dominant cause into per-cause/per-node tables;
+//! - [`perfetto`] — a Chrome/Perfetto trace-event JSON exporter
+//!   (`--trace-out`) with spans on node tracks and clock/power counters.
+//!
+//! See `docs/OBSERVABILITY.md` for the recorder contract, the trace schema,
+//! and the attribution taxonomy.
+
+pub mod attribution;
+pub mod flight;
+pub mod perfetto;
+
+pub use attribution::{attribute, Attribution, Cause, ViolationKind};
+pub use flight::{FlightRecorder, ReqOutcome, ReqRecord, Seg, SegKind, SeriesRing, SharedRecorder};
+
+/// One telemetry sample for one node, taken at an arbitration epoch or a
+/// clock-change event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeSample {
+    /// Virtual time of the sample, seconds.
+    pub t: f64,
+    /// SM clock of the node's prefill workers (first prefill GPU), MHz.
+    /// 0 when the node has no prefill workers or is powered off.
+    pub prefill_mhz: u32,
+    /// SM clock of the node's decode workers (first decode GPU), MHz.
+    /// 0 when the node has no decode workers or is powered off.
+    pub decode_mhz: u32,
+    /// Instantaneous node power (sum over GPUs), watts.
+    pub power_w: f64,
+    /// Power granted by the cluster arbiter, watts. Negative when no grant
+    /// is in force (uncapped run or engine-local sample).
+    pub granted_w: f64,
+    /// Prefill-queue depth (requests waiting for a prefill slot).
+    pub queue_depth: usize,
+    /// Live decode streams (batched + waiting).
+    pub active_streams: usize,
+    /// Streams currently batched into decode rounds (excludes waiters).
+    pub batch: usize,
+}
+
+/// Static-dispatch observability sink threaded through the engine and the
+/// cluster event loop.
+///
+/// Every hook has an empty `#[inline]` default body, so an implementation
+/// only overrides what it cares about and [`NoopRecorder`] is a no-op for
+/// everything. Hooks take the *cluster node index* explicitly (plain
+/// single-node runs pass node 0) and virtual timestamps in seconds.
+/// Timestamps passed to hooks must be finite — the sim's `EventQueue`
+/// panics on non-finite times, and the recorder asserts the same contract
+/// (`debug_assert!`) so a bad sample is caught at the source.
+pub trait Recorder {
+    /// `false` only for [`NoopRecorder`]: lets call sites skip the *work of
+    /// building hook arguments* (telemetry samples) at compile time.
+    const ENABLED: bool = true;
+
+    /// A request entered the node's prefill queue (first arrival or a
+    /// fault-driven re-injection — the recorder keys on the request id).
+    #[inline]
+    fn arrive(&mut self, _node: usize, _t: f64, _id: u64, _prompt_len: u32, _output_len: u32) {}
+    /// A prefill job for the request started on `worker`.
+    #[inline]
+    fn prefill_start(&mut self, _node: usize, _t: f64, _id: u64, _worker: usize) {}
+    /// The request's prefill finished (for colocated streams this is also
+    /// the first-token instant; migrated streams emit their first token on
+    /// the decode node at delivery).
+    #[inline]
+    fn prefill_done(&mut self, _node: usize, _t: f64, _id: u64) {}
+    /// First output token emitted on `node` (colocated decode admission).
+    #[inline]
+    fn first_token(&mut self, _node: usize, _t: f64, _id: u64) {}
+    /// The request completed; `ttft_s`/`tbt_p95_s` are its scored metrics.
+    #[inline]
+    fn finish(&mut self, _node: usize, _t: f64, _id: u64, _ttft_s: f64, _tbt_p95_s: f64) {}
+    /// The request was drained from a failed node after emitting `emitted`
+    /// tokens (they are discarded; the request re-enters elsewhere).
+    #[inline]
+    fn abort(&mut self, _node: usize, _t: f64, _id: u64, _emitted: u64) {}
+    /// A KV handoff left `from` for `to`; the wire is busy until
+    /// `deliver_t`.
+    #[inline]
+    fn migrate_send(
+        &mut self,
+        _from: usize,
+        _to: usize,
+        _t: f64,
+        _id: u64,
+        _kv_bytes: f64,
+        _deliver_t: f64,
+    ) {
+    }
+    /// A KV handoff arrived on `node`; decode starts here.
+    #[inline]
+    fn migrate_deliver(&mut self, _node: usize, _t: f64, _id: u64) {}
+    /// An undelivered handoff was re-sent from `from` to a new target `to`
+    /// (original target failed before delivery).
+    #[inline]
+    fn migrate_relay(&mut self, _from: usize, _to: usize, _t: f64, _id: u64) {}
+    /// A handoff's KV was lost with its sender; the request restarts from
+    /// prefill on `node`.
+    #[inline]
+    fn re_prefill(&mut self, _node: usize, _t: f64, _id: u64) {}
+    /// Node fault transition (`up == false`: loss, `up == true`: recovery).
+    #[inline]
+    fn fault(&mut self, _node: usize, _t: f64, _up: bool) {}
+    /// A DVFS action changed the SM clock of the worker pool starting at
+    /// GPU `first_gpu` to `mhz` (post-ladder-snap value).
+    #[inline]
+    fn clock_change(&mut self, _node: usize, _t: f64, _first_gpu: usize, _mhz: u32) {}
+    /// A full telemetry sample for `node` (epoch or clock-change edge).
+    #[inline]
+    fn sample(&mut self, _node: usize, _s: NodeSample) {}
+}
+
+/// The default recorder: every hook is a no-op and `ENABLED == false`, so
+/// engines instantiated with it compile to the unobserved code path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NoopRecorder;
+
+impl Recorder for NoopRecorder {
+    const ENABLED: bool = false;
+}

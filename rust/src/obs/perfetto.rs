@@ -1,0 +1,292 @@
+//! Chrome/Perfetto trace-event JSON exporter for the flight recorder, plus
+//! the structural validator behind `greenllm trace-check`.
+//!
+//! Schema (load the file in <https://ui.perfetto.dev> or
+//! `chrome://tracing`): one *process* per cluster node; request-lifecycle
+//! segments as complete-duration `X` events (`tid` = request id, names
+//! `queued`/`prefill`/`kv-transfer`/`decode`); telemetry as `C` counter
+//! events (`prefill_mhz`, `decode_mhz`, `power_w`, `granted_w`,
+//! `queue_depth`, `active_streams`, `batch`); fault transitions as `i`
+//! instant events. Timestamps are virtual seconds scaled to microseconds.
+//! Emission goes through `util::json::Json` (sorted object keys, shortest
+//! round-trip floats), so identical runs produce byte-identical files.
+
+use std::collections::BTreeMap;
+
+use super::flight::{FlightRecorder, ReqOutcome};
+use crate::util::json::Json;
+
+const US: f64 = 1e6;
+
+/// Serialize the recorder as a trace-event JSON document.
+pub fn to_perfetto(rec: &FlightRecorder) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for n in 0..rec.nodes() {
+        events.push(Json::obj([
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(n as f64)),
+            ("ts", Json::Num(0.0)),
+            ("name", Json::Str("process_name".into())),
+            (
+                "args",
+                Json::obj([("name", Json::Str(format!("node{n}")))]),
+            ),
+        ]));
+    }
+    // Requests iterate in id order; an open segment (request cut off at run
+    // end) is clipped to its own start so `dur` stays finite and >= 0.
+    for (&id, r) in rec.requests() {
+        for s in &r.segs {
+            let t1 = if s.is_open() { s.t0 } else { s.t1 };
+            events.push(Json::obj([
+                ("ph", Json::Str("X".into())),
+                ("pid", Json::Num(s.node as f64)),
+                ("tid", Json::Num(id as f64)),
+                ("ts", Json::Num(s.t0 * US)),
+                ("dur", Json::Num(((t1 - s.t0) * US).max(0.0))),
+                ("name", Json::Str(s.kind.label().into())),
+                ("cat", Json::Str("request".into())),
+                ("args", Json::obj([("req", Json::Num(id as f64))])),
+            ]));
+        }
+        if let ReqOutcome::Aborted { t, .. } = r.outcome {
+            events.push(instant(last_node(r), t, "drained"));
+        }
+    }
+    for n in 0..rec.nodes() {
+        for s in rec.series(n).iter() {
+            let mut push = |name: &str, v: f64| {
+                events.push(Json::obj([
+                    ("ph", Json::Str("C".into())),
+                    ("pid", Json::Num(n as f64)),
+                    ("ts", Json::Num(s.t * US)),
+                    ("name", Json::Str(name.into())),
+                    ("args", Json::obj([("value", Json::Num(v))])),
+                ]));
+            };
+            push("prefill_mhz", s.prefill_mhz as f64);
+            push("decode_mhz", s.decode_mhz as f64);
+            push("power_w", s.power_w);
+            if s.granted_w >= 0.0 {
+                push("granted_w", s.granted_w);
+            }
+            push("queue_depth", s.queue_depth as f64);
+            push("active_streams", s.active_streams as f64);
+            push("batch", s.batch as f64);
+        }
+    }
+    for &(t, node, up) in rec.faults() {
+        events.push(instant(node, t, if up { "fault-up" } else { "fault-down" }));
+    }
+    Json::obj([
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+fn last_node(r: &super::flight::ReqRecord) -> usize {
+    r.segs.last().map(|s| s.node as usize).unwrap_or(0)
+}
+
+fn instant(node: usize, t: f64, name: &str) -> Json {
+    Json::obj([
+        ("ph", Json::Str("i".into())),
+        ("s", Json::Str("p".into())),
+        ("pid", Json::Num(node as f64)),
+        ("ts", Json::Num(t * US)),
+        ("name", Json::Str(name.into())),
+        ("cat", Json::Str("fault".into())),
+    ])
+}
+
+/// Write the trace to `path` (compact JSON, trailing newline).
+pub fn write_trace(rec: &FlightRecorder, path: &str) -> std::io::Result<()> {
+    let mut out = to_perfetto(rec).dump();
+    out.push('\n');
+    std::fs::write(path, out)
+}
+
+/// Counts from a validated trace document.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Distinct `pid` tracks seen.
+    pub nodes: usize,
+    /// Complete-duration (`X`) span events.
+    pub spans: u64,
+    /// Counter (`C`) sample events.
+    pub counters: u64,
+    /// Instant (`i`) events (faults, drains).
+    pub instants: u64,
+}
+
+/// Structurally validate a parsed trace-event document.
+///
+/// Checks the invariants `greenllm trace-check` enforces in CI: every
+/// event is an object with a `ph`/`pid`/finite non-negative `ts`; spans
+/// carry a finite non-negative `dur`, a known segment name, and a `tid`;
+/// counter samples carry a single finite numeric `value` and stay
+/// time-ordered per `(pid, name)` track; span events stay time-ordered per
+/// `(pid, tid)` lane.
+pub fn validate_trace(doc: &Json) -> Result<TraceStats, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+    let mut stats = TraceStats::default();
+    let mut pids: Vec<u64> = Vec::new();
+    let mut counter_clock: BTreeMap<(u64, String), f64> = BTreeMap::new();
+    let mut span_clock: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let e = |msg: String| Err(format!("event {i}: {msg}"));
+        let ph = match ev.get("ph").and_then(Json::as_str) {
+            Some(p) => p,
+            None => return e("missing ph".into()),
+        };
+        let pid = match ev.get("pid").and_then(Json::as_f64) {
+            Some(p) if p >= 0.0 && p.is_finite() => p as u64,
+            _ => return e("missing/invalid pid".into()),
+        };
+        if !pids.contains(&pid) {
+            pids.push(pid);
+        }
+        let ts = match ev.get("ts").and_then(Json::as_f64) {
+            Some(t) if t.is_finite() && t >= 0.0 => t,
+            _ => return e("missing/non-finite ts".into()),
+        };
+        match ph {
+            "X" => {
+                stats.spans += 1;
+                match ev.get("dur").and_then(Json::as_f64) {
+                    Some(d) if d.is_finite() && d >= 0.0 => {}
+                    _ => return e("span without finite dur".into()),
+                }
+                let name = ev.get("name").and_then(Json::as_str).unwrap_or("");
+                if !matches!(name, "queued" | "prefill" | "kv-transfer" | "decode") {
+                    return e(format!("unknown span name {name:?}"));
+                }
+                let tid = match ev.get("tid").and_then(Json::as_f64) {
+                    Some(t) if t.is_finite() && t >= 0.0 => t as u64,
+                    _ => return e("span without tid".into()),
+                };
+                let lane = span_clock.entry((pid, tid)).or_insert(f64::NEG_INFINITY);
+                if ts < *lane - 1e-6 {
+                    return e(format!("span lane ({pid},{tid}) goes back in time at ts={ts}"));
+                }
+                *lane = ts;
+            }
+            "C" => {
+                stats.counters += 1;
+                let name = match ev.get("name").and_then(Json::as_str) {
+                    Some(n) if !n.is_empty() => n.to_string(),
+                    _ => return e("counter without name".into()),
+                };
+                match ev.path("args.value").and_then(Json::as_f64) {
+                    Some(v) if v.is_finite() => {}
+                    _ => return e(format!("counter {name} without finite value")),
+                }
+                let track = counter_clock
+                    .entry((pid, name.clone()))
+                    .or_insert(f64::NEG_INFINITY);
+                if ts < *track - 1e-6 {
+                    return e(format!("counter {name} on pid {pid} goes back in time"));
+                }
+                *track = ts;
+            }
+            "i" => {
+                stats.instants += 1;
+                if ev.get("name").and_then(Json::as_str).unwrap_or("").is_empty() {
+                    return e("instant without name".into());
+                }
+            }
+            "M" => {}
+            other => return e(format!("unknown phase {other:?}")),
+        }
+    }
+    stats.nodes = pids.len();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{NodeSample, Recorder};
+
+    fn recorded() -> FlightRecorder {
+        let mut fr = FlightRecorder::with_defaults(2);
+        fr.arrive(0, 0.0, 1, 2000, 8);
+        fr.prefill_start(0, 0.1, 1, 0);
+        fr.prefill_done(0, 1.0, 1);
+        fr.migrate_send(0, 1, 1.0, 1, 8e6, 1.05);
+        fr.migrate_deliver(1, 1.05, 1);
+        fr.finish(1, 2.0, 1, 1.0, 0.05);
+        fr.fault(1, 1.5, false);
+        fr.fault(1, 1.8, true);
+        fr.sample(
+            0,
+            NodeSample {
+                t: 0.5,
+                prefill_mhz: 1410,
+                decode_mhz: 900,
+                power_w: 300.0,
+                granted_w: 350.0,
+                queue_depth: 2,
+                active_streams: 1,
+                batch: 1,
+            },
+        );
+        fr
+    }
+
+    #[test]
+    fn exported_trace_validates() {
+        let fr = recorded();
+        let doc = to_perfetto(&fr);
+        let stats = validate_trace(&doc).unwrap();
+        assert_eq!(stats.nodes, 2);
+        assert_eq!(stats.spans, 4); // queued, prefill, kv-transfer, decode
+        assert_eq!(stats.counters, 7);
+        assert_eq!(stats.instants, 2);
+    }
+
+    #[test]
+    fn export_is_deterministic_and_reparses() {
+        let fr = recorded();
+        let a = to_perfetto(&fr).dump();
+        let b = to_perfetto(&fr).dump();
+        assert_eq!(a, b);
+        let doc = Json::parse(&a).unwrap();
+        assert!(validate_trace(&doc).is_ok());
+    }
+
+    #[test]
+    fn validator_rejects_negative_duration() {
+        let doc = Json::obj([(
+            "traceEvents",
+            Json::Arr(vec![Json::obj([
+                ("ph", Json::Str("X".into())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(1.0)),
+                ("ts", Json::Num(5.0)),
+                ("dur", Json::Num(-1.0)),
+                ("name", Json::Str("decode".into())),
+            ])]),
+        )]);
+        assert!(validate_trace(&doc).unwrap_err().contains("dur"));
+    }
+
+    #[test]
+    fn validator_rejects_unknown_span_names() {
+        let doc = Json::obj([(
+            "traceEvents",
+            Json::Arr(vec![Json::obj([
+                ("ph", Json::Str("X".into())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(1.0)),
+                ("ts", Json::Num(5.0)),
+                ("dur", Json::Num(1.0)),
+                ("name", Json::Str("mystery".into())),
+            ])]),
+        )]);
+        assert!(validate_trace(&doc).is_err());
+    }
+}

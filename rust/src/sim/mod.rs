@@ -77,7 +77,10 @@ impl<E> EventQueue<E> {
     /// Non-finite timestamps are rejected loudly: a NaN used to be clamped
     /// to `now` by the `max` below and +inf would park forever in the
     /// queue — both silently corrupt a replay, so they are programming
-    /// errors, not schedulable states.
+    /// errors, not schedulable states. The observability layer mirrors
+    /// this contract (`obs::SeriesRing` debug-asserts finite sample
+    /// times), so a recorder hook firing at an event boundary can never
+    /// smuggle a non-finite time back into scheduling.
     pub fn schedule(&mut self, t: f64, ev: E) {
         let seq = self.seq;
         self.seq += 1;
@@ -288,6 +291,23 @@ mod tests {
     fn nan_relative_delay_rejected() {
         let mut q = EventQueue::new();
         q.schedule_in(f64::NAN, ());
+    }
+
+    #[test]
+    fn epoch_boundary_reschedule_at_now_pops_in_fifo_order() {
+        // The cluster loop's power-epoch shape: pop the epoch event at t,
+        // then immediately schedule follow-ups (clock re-arbitration,
+        // recorder samples, the next epoch) at that same t. Same-time
+        // reschedules must be legal (not "past"), pop FIFO after events
+        // already pending at t, and never move time backwards.
+        let mut q = EventQueue::new();
+        q.schedule(5.0, "epoch");
+        q.schedule(5.0, "pending");
+        assert_eq!(q.pop(), Some((5.0, "epoch")));
+        q.schedule(5.0, "rearmed"); // exactly `now`
+        assert_eq!(q.pop(), Some((5.0, "pending")));
+        assert_eq!(q.pop(), Some((5.0, "rearmed")));
+        assert_eq!(q.now(), 5.0);
     }
 
     #[test]

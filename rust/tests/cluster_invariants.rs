@@ -785,3 +785,89 @@ fn disagg_property_conserves_over_ratios_faults_and_arbiters() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// PR 7: flight-recorder observability — recording must be a pure observer.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn recorded_run_bit_exact_with_recorder_off_property() {
+    // The flight recorder is statically compiled out of `run_cluster`
+    // (NoopRecorder) and fully live in `run_cluster_recorded`. Recording
+    // must be a pure observer: across random balancers x node counts x
+    // fault plans x power caps x disagg splits, the recorded run's
+    // results are BIT-identical to the recorder-off run (itself already
+    // property-checked against the kept-verbatim scan oracle above).
+    use greenllm::coordinator::cluster::run_cluster_recorded;
+    use greenllm::obs::FlightRecorder;
+    use greenllm::util::ptest::check;
+    use greenllm::util::rng::Pcg64;
+    use std::cell::RefCell;
+
+    let lbs = LbPolicy::all();
+    check("recorded_vs_recorder_off", 10, |g: &mut Pcg64| {
+        let nodes = 2 + g.index(3); // 2..=4
+        let lb = lbs[g.index(lbs.len())];
+        let qps = 4.0 + g.f64() * 8.0;
+        let duration = 20.0 + g.f64() * 15.0;
+        let trace = chat(qps, duration, g.next_u64());
+        let mut ccfg = ClusterConfig::new(nodes, lb, node_cfg(Method::GreenLlm, g.next_u64()));
+        if g.chance(0.4) {
+            ccfg = ccfg
+                .with_pool_ratio(PoolRatio::parse("1:1").unwrap())
+                .with_disagg(DisaggConfig::default());
+        }
+        if g.chance(0.5) {
+            ccfg = ccfg.with_power_cap(nodes as f64 * (1800.0 + g.f64() * 1500.0), 0.5);
+        }
+        if g.chance(0.5) {
+            let spec = if g.chance(0.5) {
+                FaultSpec::OneDown
+            } else {
+                FaultSpec::Flap
+            };
+            ccfg = ccfg.with_faults(spec.plan(nodes, duration));
+        }
+        let off = run_cluster(&ccfg, &trace, &RunOptions::default());
+        let rec = RefCell::new(FlightRecorder::new(nodes, 4096));
+        let on = run_cluster_recorded(&ccfg, &trace, &RunOptions::default(), &rec);
+        greenllm::prop_assert!(
+            off.total_energy_j.to_bits() == on.total_energy_j.to_bits(),
+            "recording perturbed energy: {} vs {} ({lb:?} x{nodes})",
+            off.total_energy_j,
+            on.total_energy_j
+        );
+        greenllm::prop_assert!(
+            off.events_processed == on.events_processed,
+            "event counts diverged under recording"
+        );
+        greenllm::prop_assert!(off.assignment == on.assignment, "assignment diverged");
+        greenllm::prop_assert!(
+            off.rerouted == on.rerouted && off.wasted_tokens == on.wasted_tokens,
+            "chaos totals diverged under recording"
+        );
+        for (x, y) in off.per_node.iter().zip(&on.per_node) {
+            greenllm::prop_assert!(
+                x.total_energy_j.to_bits() == y.total_energy_j.to_bits()
+                    && x.events_processed == y.events_processed
+                    && x.completed == y.completed,
+                "per-node results diverged under recording"
+            );
+        }
+        // And the recorder actually observed the run: spans well-formed,
+        // one record per completed request.
+        let rec = rec.into_inner();
+        greenllm::prop_assert!(
+            rec.span_check(false).is_ok(),
+            "span invariants broke: {:?}",
+            rec.span_check(false)
+        );
+        greenllm::prop_assert!(
+            rec.requests().count() as u64 >= on.completed,
+            "recorder missed requests: {} records < {} completed",
+            rec.requests().count(),
+            on.completed
+        );
+        Ok(())
+    });
+}
