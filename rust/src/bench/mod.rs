@@ -13,6 +13,7 @@ pub mod matrix;
 pub mod perf;
 pub mod report;
 pub mod tables;
+pub mod validate;
 
 use crate::config::{Config, Method};
 use crate::coordinator::engine::{run, RunOptions, RunResult};

@@ -1,0 +1,328 @@
+//! Paper-closure validation harness (`greenllm validate`): replay the
+//! paper's Alibaba and Azure evaluation settings on *calibrated* nodes
+//! (`gpu::calibrate`), run the default-DVFS baseline and GreenLLM
+//! back-to-back, and check the deltas against declared tolerance bands.
+//!
+//! The paper's headline (§5.2, Tables 3–4): ≈34% energy savings vs the
+//! NVIDIA default governor with <3.5% additional SLO violations. This
+//! harness asserts a conservative floor (default ≥25% savings, <3.5 pp
+//! extra violations, `[closure]` in the config); `docs/VALIDATION.md`
+//! documents the remaining gap to the paper's number and how to close it.
+//!
+//! Everything is machine-readable: [`ClosureReport::to_json`] feeds the
+//! CI `validate-smoke` job and `rust/tests/paper_closure.rs`.
+
+use crate::config::{ClosureSection, Config, Method};
+use crate::coordinator::engine::{run, RunOptions, RunResult};
+use crate::util::json::Json;
+use crate::workload::alibaba::{self, ChatParams};
+use crate::workload::azure::{self, AzureKind, AzureParams};
+use crate::workload::request::Trace;
+
+/// The closure workload set: the paper's light-to-moderate settings where
+/// the headline savings are measured (Table 3's Alibaba 1 QPS row and the
+/// Azure-code /8 divisor row). Heavier loads shrink savings by design
+/// (Fig. 11) and are covered by the matrix/table harnesses instead.
+pub fn closure_workloads(duration_s: f64, seed: u64) -> Vec<Trace> {
+    vec![
+        alibaba::generate(&ChatParams::new(1.0, duration_s), seed),
+        azure::generate(&AzureParams::new(AzureKind::Code, 8, duration_s), seed),
+    ]
+}
+
+/// One workload's baseline-vs-GreenLLM deltas and verdicts.
+#[derive(Debug, Clone)]
+pub struct ClosureRow {
+    /// Workload label.
+    pub workload: String,
+    /// defaultNV whole-node energy, watt-hours.
+    pub nv_energy_wh: f64,
+    /// GreenLLM whole-node energy, watt-hours.
+    pub green_energy_wh: f64,
+    /// Energy savings vs defaultNV, percent (positive = GreenLLM saves).
+    pub energy_savings_pct: f64,
+    /// defaultNV TTFT SLO pass rate, percent.
+    pub nv_ttft_pct: f64,
+    /// GreenLLM TTFT SLO pass rate, percent.
+    pub green_ttft_pct: f64,
+    /// defaultNV TBT SLO pass rate, percent.
+    pub nv_tbt_pct: f64,
+    /// GreenLLM TBT SLO pass rate, percent.
+    pub green_tbt_pct: f64,
+    /// Extra SLO violations GreenLLM adds over the baseline, percentage
+    /// points, worst of the TTFT and TBT dimensions (negative = GreenLLM
+    /// violates *less*).
+    pub extra_violations_pp: f64,
+    /// Energy delta within the declared band?
+    pub pass_energy: bool,
+    /// Violation delta within the declared band?
+    pub pass_slo: bool,
+}
+
+impl ClosureRow {
+    /// Both bands hold for this workload.
+    pub fn pass(&self) -> bool {
+        self.pass_energy && self.pass_slo
+    }
+}
+
+/// The full closure verdict: per-workload rows + the bands they were
+/// judged against.
+#[derive(Debug, Clone)]
+pub struct ClosureReport {
+    /// Calibrated part the replays ran on.
+    pub part: String,
+    /// Served model.
+    pub model: String,
+    /// Replay horizon, seconds.
+    pub duration_s: f64,
+    /// RNG seed of the replays.
+    pub seed: u64,
+    /// Tolerance bands the rows were judged against.
+    pub bands: ClosureSection,
+    /// Per-workload results.
+    pub rows: Vec<ClosureRow>,
+}
+
+impl ClosureReport {
+    /// Every workload passes both bands.
+    pub fn pass(&self) -> bool {
+        !self.rows.is_empty() && self.rows.iter().all(|r| r.pass())
+    }
+
+    /// Machine-readable report (the CI contract: `pass` at the top level,
+    /// one object per workload under `rows`).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("part", Json::Str(self.part.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "bands",
+                Json::obj([
+                    (
+                        "min_energy_savings_pct",
+                        Json::Num(self.bands.min_energy_savings_pct),
+                    ),
+                    (
+                        "max_extra_violations_pct",
+                        Json::Num(self.bands.max_extra_violations_pct),
+                    ),
+                ]),
+            ),
+            ("pass", Json::Bool(self.pass())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj([
+                                ("workload", Json::Str(r.workload.clone())),
+                                ("nv_energy_wh", Json::Num(r.nv_energy_wh)),
+                                ("green_energy_wh", Json::Num(r.green_energy_wh)),
+                                ("energy_savings_pct", Json::Num(r.energy_savings_pct)),
+                                ("nv_ttft_pct", Json::Num(r.nv_ttft_pct)),
+                                ("green_ttft_pct", Json::Num(r.green_ttft_pct)),
+                                ("nv_tbt_pct", Json::Num(r.nv_tbt_pct)),
+                                ("green_tbt_pct", Json::Num(r.green_tbt_pct)),
+                                ("extra_violations_pp", Json::Num(r.extra_violations_pp)),
+                                ("pass_energy", Json::Bool(r.pass_energy)),
+                                ("pass_slo", Json::Bool(r.pass_slo)),
+                                ("pass", Json::Bool(r.pass())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Node config for one closure replay: the calibrated part at its own
+/// clock ceiling, everything else the paper's deployment defaults.
+fn closure_config(part: &str, model: &str, method: Method, seed: u64) -> Config {
+    let mut cfg = Config {
+        model: model.to_string(),
+        method,
+        seed,
+        ..Config::default()
+    };
+    cfg.gpu.part = part.to_string();
+    if let Some(p) = crate::gpu::calibrate::part(part) {
+        cfg.gpu.max_clock_mhz = p.ladder.max_mhz;
+    }
+    cfg.validate().unwrap_or_else(|e| panic!("closure config invalid: {e}"));
+    cfg
+}
+
+fn pct(rate: f64) -> f64 {
+    rate * 100.0
+}
+
+/// Judge one workload: run defaultNV then GreenLLM on the calibrated
+/// part and score the deltas against `bands`.
+pub fn closure_row(
+    part: &str,
+    model: &str,
+    trace: &Trace,
+    seed: u64,
+    bands: &ClosureSection,
+) -> ClosureRow {
+    let opts = RunOptions::default();
+    let nv: RunResult = run(&closure_config(part, model, Method::DefaultNv, seed), trace, &opts);
+    let green: RunResult = run(&closure_config(part, model, Method::GreenLlm, seed), trace, &opts);
+    let savings = (1.0 - green.total_energy_j / nv.total_energy_j) * 100.0;
+    // Extra violations in percentage points: violation% = 100 − pass%.
+    let extra_ttft = pct(nv.slo.ttft_pass_rate()) - pct(green.slo.ttft_pass_rate());
+    let extra_tbt = pct(nv.slo.tbt_pass_rate()) - pct(green.slo.tbt_pass_rate());
+    let extra = extra_ttft.max(extra_tbt);
+    ClosureRow {
+        workload: trace.name.clone(),
+        nv_energy_wh: nv.total_energy_wh(),
+        green_energy_wh: green.total_energy_wh(),
+        energy_savings_pct: savings,
+        nv_ttft_pct: pct(nv.slo.ttft_pass_rate()),
+        green_ttft_pct: pct(green.slo.ttft_pass_rate()),
+        nv_tbt_pct: pct(nv.slo.tbt_pass_rate()),
+        green_tbt_pct: pct(green.slo.tbt_pass_rate()),
+        extra_violations_pp: extra,
+        pass_energy: savings >= bands.min_energy_savings_pct,
+        pass_slo: extra < bands.max_extra_violations_pct,
+    }
+}
+
+/// Run the whole closure suite on one part and return the report.
+pub fn run_closure(
+    part: &str,
+    model: &str,
+    duration_s: f64,
+    seed: u64,
+    bands: &ClosureSection,
+) -> ClosureReport {
+    let rows = closure_workloads(duration_s, seed)
+        .iter()
+        .map(|t| closure_row(part, model, t, seed, bands))
+        .collect();
+    ClosureReport {
+        part: part.to_string(),
+        model: model.to_string(),
+        duration_s,
+        seed,
+        bands: bands.clone(),
+        rows,
+    }
+}
+
+/// Print the human-readable closure table (the `greenllm validate`
+/// output; the `--json` report carries the same numbers).
+pub fn print_report(rep: &ClosureReport) {
+    println!(
+        "== Paper closure: GreenLLM vs defaultNV on calibrated {} ({}, {:.0} s, seed {}) ==",
+        rep.part, rep.model, rep.duration_s, rep.seed
+    );
+    println!(
+        "   bands: energy savings >= {:.1}%  |  extra violations < {:.1} pp",
+        rep.bands.min_energy_savings_pct, rep.bands.max_extra_violations_pct
+    );
+    for r in &rep.rows {
+        println!(
+            "   {:<22} dEn {:>6.2}%  ({:.1} -> {:.1} Wh)   TTFT {:>5.1}% -> {:>5.1}%   \
+             TBT {:>5.1}% -> {:>5.1}%   extra {:+.2} pp   [{}]",
+            r.workload,
+            r.energy_savings_pct,
+            r.nv_energy_wh,
+            r.green_energy_wh,
+            r.nv_ttft_pct,
+            r.green_ttft_pct,
+            r.nv_tbt_pct,
+            r.green_tbt_pct,
+            r.extra_violations_pp,
+            if r.pass() { "pass" } else { "FAIL" }
+        );
+    }
+    println!(
+        "   verdict: {}",
+        if rep.pass() {
+            "PASS — reproduction inside the declared bands"
+        } else {
+            "FAIL — reproduction drifted outside the declared bands"
+        }
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closure_workloads_are_the_papers_light_settings() {
+        let traces = closure_workloads(30.0, 1);
+        assert_eq!(traces.len(), 2);
+        assert!(traces[0].name.contains("alibaba"), "{}", traces[0].name);
+        assert!(traces[1].name.contains("azure"), "{}", traces[1].name);
+    }
+
+    #[test]
+    fn report_json_shape_matches_the_ci_contract() {
+        let rep = ClosureReport {
+            part: "a100".into(),
+            model: "qwen3-14b".into(),
+            duration_s: 30.0,
+            seed: 1,
+            bands: ClosureSection::default(),
+            rows: vec![ClosureRow {
+                workload: "alibaba-1qps".into(),
+                nv_energy_wh: 100.0,
+                green_energy_wh: 70.0,
+                energy_savings_pct: 30.0,
+                nv_ttft_pct: 99.0,
+                green_ttft_pct: 98.5,
+                nv_tbt_pct: 99.0,
+                green_tbt_pct: 98.0,
+                extra_violations_pp: 1.0,
+                pass_energy: true,
+                pass_slo: true,
+            }],
+        };
+        assert!(rep.pass());
+        let j = rep.to_json();
+        assert_eq!(j.path("pass"), Some(&Json::Bool(true)));
+        let rows = j.path("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(
+            rows[0].path("energy_savings_pct").and_then(Json::as_f64),
+            Some(30.0)
+        );
+        // Round-trips through the in-repo parser.
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn empty_report_never_passes() {
+        let rep = ClosureReport {
+            part: "a100".into(),
+            model: "qwen3-14b".into(),
+            duration_s: 0.0,
+            seed: 0,
+            bands: ClosureSection::default(),
+            rows: Vec::new(),
+        };
+        assert!(!rep.pass(), "an empty suite must not report closure");
+    }
+
+    #[test]
+    fn row_verdicts_follow_the_bands() {
+        let bands = ClosureSection::default();
+        // A quick 30 s replay: verdict wiring only (the full-band closure
+        // assertion lives in rust/tests/paper_closure.rs at 240 s).
+        let trace = &closure_workloads(30.0, 2)[0];
+        let row = closure_row("a100", "qwen3-14b", trace, 2, &bands);
+        assert_eq!(row.pass(), row.pass_energy && row.pass_slo);
+        assert!(row.nv_energy_wh > 0.0 && row.green_energy_wh > 0.0);
+        // The baseline parks in its boost band: GreenLLM must never use
+        // MORE energy at the paper's light-load setting.
+        assert!(row.energy_savings_pct > 0.0, "savings={}", row.energy_savings_pct);
+    }
+}

@@ -190,9 +190,15 @@ pub struct GpuSpec {
     /// Uniform multiplier on the whole power envelope (GPU-generation
     /// proxy: 0.7 ≈ efficiency-binned next-gen, 1.25 ≈ older part).
     pub power_scale: f64,
-    /// Application-clock ceiling in MHz. Must lie on the A100 ladder grid
-    /// (210–1410 in 15 MHz steps); cut-down SKUs cap below 1410.
+    /// Application-clock ceiling in MHz. Must lie on the part's ladder
+    /// grid (analytic default: 210–1410 in 15 MHz steps); cut-down SKUs
+    /// cap below the part maximum.
     pub max_clock_mhz: u32,
+    /// Calibrated part from the model zoo (`gpu::calibrate`): `"a100"` or
+    /// `"h100"` swap in fitted latency/power curves and the part's own
+    /// ladder; empty keeps the analytic seed models (bit-exact with all
+    /// pre-zoo behavior).
+    pub part: String,
 }
 
 impl Default for GpuSpec {
@@ -200,6 +206,47 @@ impl Default for GpuSpec {
         GpuSpec {
             power_scale: 1.0,
             max_clock_mhz: 1410,
+            part: String::new(),
+        }
+    }
+}
+
+impl GpuSpec {
+    /// The frequency ladder this node runs: the calibrated part's ladder
+    /// when `part` names a zoo entry (unknown names fall back to the
+    /// analytic a100 grid — `validate()` rejects them before any run),
+    /// with its ceiling lowered to `max_clock_mhz` when capped below the
+    /// part maximum.
+    pub fn ladder(&self) -> crate::gpu::FreqLadder {
+        let base = match crate::gpu::calibrate::part(&self.part) {
+            Some(p) if !self.part.is_empty() => p.ladder.clone(),
+            _ => crate::gpu::FreqLadder::a100(),
+        };
+        crate::gpu::FreqLadder {
+            max_mhz: self.max_clock_mhz.min(base.max_mhz).max(base.min_mhz),
+            ..base
+        }
+    }
+}
+
+/// Paper-closure tolerance bands (`greenllm validate`): the reproduction
+/// passes when GreenLLM-vs-defaultNV deltas land inside them. The floor
+/// is set below the paper's 34% headline — see `docs/VALIDATION.md` for
+/// the documented gap and the path to closing it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClosureSection {
+    /// Minimum acceptable energy savings vs the default-DVFS baseline, %.
+    pub min_energy_savings_pct: f64,
+    /// Maximum acceptable extra SLO violations vs the baseline, in
+    /// percentage points (paper: <3.5%).
+    pub max_extra_violations_pct: f64,
+}
+
+impl Default for ClosureSection {
+    fn default() -> Self {
+        ClosureSection {
+            min_energy_savings_pct: 25.0,
+            max_extra_violations_pct: 3.5,
         }
     }
 }
@@ -326,6 +373,8 @@ pub struct Config {
     /// Simulated GPU hardware of this node (per-node in heterogeneous
     /// clusters; the default is a stock A100).
     pub gpu: GpuSpec,
+    /// Paper-closure tolerance bands (`greenllm validate`).
+    pub closure: ClosureSection,
     /// SLO margin factors (§5.3 sensitivity): scale the *controller's*
     /// deadline targets, not the reported SLOs.
     pub prefill_margin: f64,
@@ -350,6 +399,7 @@ impl Default for Config {
             disagg: DisaggSection::default(),
             obs: ObsSection::default(),
             gpu: GpuSpec::default(),
+            closure: ClosureSection::default(),
             prefill_margin: 0.95,
             decode_margin: 0.95,
             sim_noise: 0.03,
@@ -406,6 +456,9 @@ impl Config {
                     | "obs.series_cap"
                     | "gpu.power_scale"
                     | "gpu.max_clock_mhz"
+                    | "gpu.part"
+                    | "closure.min_energy_savings_pct"
+                    | "closure.max_extra_violations_pct"
             );
             if !known {
                 return Err(format!("unknown config key: {key}"));
@@ -530,6 +583,21 @@ impl Config {
         }
         if let Some(v) = doc.i64("gpu.max_clock_mhz") {
             c.gpu.max_clock_mhz = v as u32;
+        } else if let Some(p) = doc.str("gpu.part") {
+            // A part without an explicit cap runs at the part's own max
+            // (e.g. h100 boosts to 1980), not the analytic default 1410.
+            if let Some(cal) = crate::gpu::calibrate::part(p) {
+                c.gpu.max_clock_mhz = cal.ladder.max_mhz;
+            }
+        }
+        if let Some(p) = doc.str("gpu.part") {
+            c.gpu.part = p.to_string();
+        }
+        if let Some(v) = doc.f64("closure.min_energy_savings_pct") {
+            c.closure.min_energy_savings_pct = v;
+        }
+        if let Some(v) = doc.f64("closure.max_extra_violations_pct") {
+            c.closure.max_extra_violations_pct = v;
         }
         c.validate()?;
         Ok(c)
@@ -590,11 +658,33 @@ impl Config {
         if self.obs.series_cap == 0 {
             return Err("obs.series_cap must be >= 1".into());
         }
-        let mhz = self.gpu.max_clock_mhz;
-        if !(210..=1410).contains(&mhz) || (mhz - 210) % 15 != 0 {
+        if !self.gpu.part.is_empty() && crate::gpu::calibrate::part(&self.gpu.part).is_none() {
             return Err(format!(
-                "gpu.max_clock_mhz {mhz} must lie on the 210–1410 MHz ladder (15 MHz steps)"
+                "gpu.part {:?} not in the calibrated zoo (known: {})",
+                self.gpu.part,
+                crate::gpu::calibrate::part_names().join(", ")
             ));
+        }
+        let grid = match crate::gpu::calibrate::part(&self.gpu.part) {
+            Some(p) => p.ladder.clone(),
+            None => crate::gpu::FreqLadder::a100(),
+        };
+        let mhz = self.gpu.max_clock_mhz;
+        if !grid.contains(mhz) {
+            return Err(format!(
+                "gpu.max_clock_mhz {mhz} must lie on the {}\u{2013}{} MHz ladder ({} MHz steps)",
+                grid.min_mhz, grid.max_mhz, grid.step_mhz
+            ));
+        }
+        if self.closure.min_energy_savings_pct < 0.0
+            || self.closure.min_energy_savings_pct >= 100.0
+            || self.closure.max_extra_violations_pct < 0.0
+        {
+            return Err(
+                "closure bands: min_energy_savings_pct in [0,100), \
+                 max_extra_violations_pct >= 0"
+                    .into(),
+            );
         }
         Ok(())
     }
@@ -744,6 +834,55 @@ mod tests {
         assert_eq!(Config::default().obs.series_cap, 4096);
         let mut bad = Config::default();
         bad.obs.series_cap = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn calibrated_part_section_parses_and_validates() {
+        // Naming a part without a cap runs at the part's own ceiling.
+        let doc = Document::parse("[gpu]\npart = \"h100\"").unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.gpu.part, "h100");
+        assert_eq!(c.gpu.max_clock_mhz, 1980);
+        assert_eq!(c.gpu.ladder().max_mhz, 1980);
+        assert_eq!(c.gpu.ladder().len(), 119);
+        // An explicit cap wins and must sit on the part's grid.
+        let doc = Document::parse("[gpu]\npart = \"h100\"\nmax_clock_mhz = 1500").unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.gpu.max_clock_mhz, 1500);
+        assert_eq!(c.gpu.ladder().max_mhz, 1500);
+        // 1500 is on the h100 grid but off the analytic one: without the
+        // part it is rejected.
+        let mut bad = Config::default();
+        bad.gpu.max_clock_mhz = 1500;
+        assert!(bad.validate().is_err());
+        // Unknown part names fail loudly, listing the zoo.
+        let mut bad = Config::default();
+        bad.gpu.part = "b200".into();
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("b200") && err.contains("a100"), "{err}");
+        // Empty part (the default) stays the analytic a100 ladder.
+        assert_eq!(Config::default().gpu.ladder(), crate::gpu::FreqLadder::a100());
+    }
+
+    #[test]
+    fn closure_section_parses_and_validates() {
+        let doc = Document::parse(
+            "[closure]\nmin_energy_savings_pct = 30\nmax_extra_violations_pct = 2.0",
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert_eq!(c.closure.min_energy_savings_pct, 30.0);
+        assert_eq!(c.closure.max_extra_violations_pct, 2.0);
+        // Defaults: the declared tolerance bands of ISSUE 8.
+        let d = Config::default();
+        assert_eq!(d.closure.min_energy_savings_pct, 25.0);
+        assert_eq!(d.closure.max_extra_violations_pct, 3.5);
+        let mut bad = Config::default();
+        bad.closure.min_energy_savings_pct = 100.0;
+        assert!(bad.validate().is_err());
+        let mut bad = Config::default();
+        bad.closure.max_extra_violations_pct = -1.0;
         assert!(bad.validate().is_err());
     }
 

@@ -65,13 +65,19 @@ use crate::workload::request::Trace;
 /// Hardware/pool shape of one node — the heterogeneity unit. Presets
 /// model GPU generations and SKU cuts on top of the A100 baseline:
 ///
-/// | preset   | pools               | power × | clock cap |
-/// |----------|---------------------|---------|-----------|
-/// | `dgx`    | 2×2 pre + 4×1 dec   | 1.00    | 1410 MHz  |
-/// | `half`   | 1×2 pre + 2×1 dec   | 1.00    | 1410 MHz  |
-/// | `big`    | 3×2 pre + 6×1 dec   | 1.00    | 1410 MHz  |
-/// | `eff`    | 2×2 pre + 4×1 dec   | 0.70    | 1410 MHz  |
-/// | `legacy` | 2×2 pre + 4×1 dec   | 1.25    | 1200 MHz  |
+/// | preset   | pools               | power × | clock cap | models      |
+/// |----------|---------------------|---------|-----------|-------------|
+/// | `dgx`    | 2×2 pre + 4×1 dec   | 1.00    | 1410 MHz  | analytic    |
+/// | `half`   | 1×2 pre + 2×1 dec   | 1.00    | 1410 MHz  | analytic    |
+/// | `big`    | 3×2 pre + 6×1 dec   | 1.00    | 1410 MHz  | analytic    |
+/// | `eff`    | 2×2 pre + 4×1 dec   | 0.70    | 1410 MHz  | analytic    |
+/// | `legacy` | 2×2 pre + 4×1 dec   | 1.25    | 1200 MHz  | analytic    |
+/// | `a100`   | 2×2 pre + 4×1 dec   | 1.00    | 1410 MHz  | calibrated  |
+/// | `h100`   | 2×2 pre + 4×1 dec   | 1.00    | 1980 MHz  | calibrated  |
+///
+/// The calibrated presets swap in the fitted latency/power curves of
+/// [`crate::gpu::calibrate`] (cited sample tables) and the part's own
+/// frequency ladder; the analytic presets keep the seed models.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NodeSpec {
     /// Preset name (stable label for reports).
@@ -80,8 +86,11 @@ pub struct NodeSpec {
     pub pools: PoolConfig,
     /// Power-envelope multiplier (see [`crate::gpu::power::PowerModel::scaled`]).
     pub power_scale: f64,
-    /// Application-clock ceiling in MHz (on the A100 ladder grid).
+    /// Application-clock ceiling in MHz (on the node's ladder grid).
     pub max_clock_mhz: u32,
+    /// Calibrated part key (`gpu::calibrate` zoo); empty = analytic
+    /// models.
+    pub part: String,
 }
 
 impl NodeSpec {
@@ -92,6 +101,7 @@ impl NodeSpec {
             pools: PoolConfig::default(),
             power_scale: 1.0,
             max_clock_mhz: 1410,
+            part: String::new(),
         }
     }
 
@@ -106,6 +116,7 @@ impl NodeSpec {
             },
             power_scale: 1.0,
             max_clock_mhz: 1410,
+            part: String::new(),
         }
     }
 
@@ -120,6 +131,7 @@ impl NodeSpec {
             },
             power_scale: 1.0,
             max_clock_mhz: 1410,
+            part: String::new(),
         }
     }
 
@@ -130,6 +142,7 @@ impl NodeSpec {
             pools: PoolConfig::default(),
             power_scale: 0.7,
             max_clock_mhz: 1410,
+            part: String::new(),
         }
     }
 
@@ -140,17 +153,45 @@ impl NodeSpec {
             pools: PoolConfig::default(),
             power_scale: 1.25,
             max_clock_mhz: 1200,
+            part: String::new(),
         }
     }
 
-    /// Look up a preset by name.
+    /// A *calibrated* A100-SXM4 node: fitted latency/power curves from
+    /// the cited sample tables (`gpu::calibrate`), stock DGX pools.
+    pub fn a100() -> NodeSpec {
+        NodeSpec {
+            name: "a100".into(),
+            pools: PoolConfig::default(),
+            power_scale: 1.0,
+            max_clock_mhz: 1410,
+            part: "a100".into(),
+        }
+    }
+
+    /// A *calibrated* H100-SXM5 node: fitted curves, 210–1980 MHz
+    /// ladder, HBM3 bandwidth.
+    pub fn h100() -> NodeSpec {
+        NodeSpec {
+            name: "h100".into(),
+            pools: PoolConfig::default(),
+            power_scale: 1.0,
+            max_clock_mhz: 1980,
+            part: "h100".into(),
+        }
+    }
+
+    /// Look up a preset by name. `a100`/`h100` are the calibrated-zoo
+    /// nodes; `dgx`/`default` keep the analytic seed models.
     pub fn parse(s: &str) -> Option<NodeSpec> {
         match s.trim().to_ascii_lowercase().as_str() {
-            "dgx" | "a100" | "default" => Some(NodeSpec::dgx()),
+            "dgx" | "default" => Some(NodeSpec::dgx()),
             "half" => Some(NodeSpec::half()),
             "big" => Some(NodeSpec::big()),
             "eff" | "efficient" => Some(NodeSpec::eff()),
             "legacy" | "old" => Some(NodeSpec::legacy()),
+            "a100" => Some(NodeSpec::a100()),
+            "h100" | "hopper" => Some(NodeSpec::h100()),
             _ => None,
         }
     }
@@ -176,6 +217,7 @@ impl NodeSpec {
         cfg.pools = self.pools.clone();
         cfg.gpu.power_scale = self.power_scale;
         cfg.gpu.max_clock_mhz = self.max_clock_mhz;
+        cfg.gpu.part = self.part.clone();
     }
 }
 
@@ -512,7 +554,7 @@ mod tests {
 
     #[test]
     fn node_spec_presets_parse_and_apply() {
-        for name in ["dgx", "half", "big", "eff", "legacy"] {
+        for name in ["dgx", "half", "big", "eff", "legacy", "a100", "h100"] {
             let spec = NodeSpec::parse(name).unwrap();
             assert_eq!(spec.name, name);
             let mut cfg = Config::default();
@@ -521,7 +563,12 @@ mod tests {
             assert_eq!(cfg.pools, spec.pools);
             assert_eq!(cfg.gpu.power_scale, spec.power_scale);
             assert_eq!(cfg.gpu.max_clock_mhz, spec.max_clock_mhz);
+            assert_eq!(cfg.gpu.part, spec.part);
         }
+        // Calibrated presets carry their zoo key; analytic ones don't.
+        assert_eq!(NodeSpec::parse("a100").unwrap().part, "a100");
+        assert_eq!(NodeSpec::parse("hopper").unwrap().max_clock_mhz, 1980);
+        assert!(NodeSpec::parse("dgx").unwrap().part.is_empty());
         assert!(NodeSpec::parse("h200").is_none());
         // List grammar: `,` and `+` both separate; uniform/empty = none.
         let specs = NodeSpec::parse_list("dgx+eff,legacy").unwrap();

@@ -473,15 +473,18 @@ impl<'a, R: Recorder> Engine<'a, R> {
     ) -> Self {
         let spec = ModelSpec::by_name(&cfg.model)
             .unwrap_or_else(|| panic!("unknown model {:?}", cfg.model));
-        let perf = PerfModel::new(spec);
-        // Per-node hardware (heterogeneity knobs): a scaled A100 envelope
-        // and a possibly capped ladder. Defaults (scale 1.0, 1410 MHz) are
-        // bit-identical to the stock A100.
-        let ladder = FreqLadder {
-            max_mhz: cfg.gpu.max_clock_mhz,
-            ..FreqLadder::a100()
+        // Per-node hardware (heterogeneity knobs): either the analytic
+        // A100 envelope (default — bit-identical to all pre-zoo behavior)
+        // or a calibrated part from `gpu::calibrate`, in both cases with a
+        // possibly capped ladder and a scaled power envelope.
+        let (perf, power) = if cfg.gpu.part.is_empty() {
+            (PerfModel::new(spec), PowerModel::a100().scaled(cfg.gpu.power_scale))
+        } else {
+            let part = crate::gpu::calibrate::part(&cfg.gpu.part)
+                .unwrap_or_else(|| panic!("unknown gpu.part {:?}", cfg.gpu.part));
+            (part.perf_model(spec), part.power.clone().scaled(cfg.gpu.power_scale))
         };
-        let power = PowerModel::a100().scaled(cfg.gpu.power_scale);
+        let ladder = cfg.gpu.ladder();
         let router = Router::new(cfg.method.routing(), cfg.pools.prefill_workers);
 
         // --- GPUs -------------------------------------------------------------

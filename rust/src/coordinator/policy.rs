@@ -201,10 +201,11 @@ impl GreenLlmPolicy {
         }
         let mut decode_ctls = Vec::new();
         for _ in 0..cfg.pools.decode_workers {
-            decode_ctls.push(DecodeController::new(
+            decode_ctls.push(DecodeController::with_ladder(
                 cfg.decode_ctl.clone(),
                 table.clone(),
                 cfg.slo.tbt_p95_s * cfg.decode_margin,
+                cfg.gpu.ladder(),
             ));
         }
         GreenLlmPolicy {
@@ -334,11 +335,14 @@ pub struct DefaultNvPolicy {
 impl DefaultNvPolicy {
     /// One stock governor per worker, seeded per worker index.
     pub fn new(cfg: &Config) -> DefaultNvPolicy {
+        let ladder = cfg.gpu.ladder();
         let nv_prefill = (0..cfg.pools.prefill_workers)
-            .map(|w| DefaultNvGovernor::new(cfg.seed ^ (w as u64)))
+            .map(|w| DefaultNvGovernor::with_ladder(cfg.seed ^ (w as u64), ladder.clone()))
             .collect();
         let nv_decode = (0..cfg.pools.decode_workers)
-            .map(|w| DefaultNvGovernor::new(cfg.seed ^ (0x100 + w as u64)))
+            .map(|w| {
+                DefaultNvGovernor::with_ladder(cfg.seed ^ (0x100 + w as u64), ladder.clone())
+            })
             .collect();
         DefaultNvPolicy {
             nv_prefill,
@@ -419,7 +423,7 @@ impl ThrottlePolicy {
         ThrottlePolicy {
             opt: PrefillOptimizer::new(fitted, cfg.prefill_opt.idle_clock_mhz),
             perf: perf.clone(),
-            ladder: FreqLadder::a100(),
+            ladder: cfg.gpu.ladder(),
             decode_target_s: cfg.slo.tbt_p95_s * cfg.decode_margin / 1.07,
         }
     }
@@ -570,7 +574,7 @@ pub struct AgftPolicy {
 impl AgftPolicy {
     /// One Q-learning agent per decode worker, seeded deterministically.
     pub fn new(cfg: &Config) -> AgftPolicy {
-        let ladder = FreqLadder::a100();
+        let ladder = cfg.gpu.ladder();
         let agents = (0..cfg.pools.decode_workers)
             .map(|w| AgftAgent::new(cfg.seed ^ 0xA6F7, w as u64, &ladder))
             .collect();
@@ -672,7 +676,7 @@ pub struct PiTbtPolicy {
 impl PiTbtPolicy {
     /// One PI loop per decode worker at boost clocks.
     pub fn new(cfg: &Config) -> PiTbtPolicy {
-        let ladder = FreqLadder::a100();
+        let ladder = cfg.gpu.ladder();
         let workers = (0..cfg.pools.decode_workers)
             .map(|_| PiWorker {
                 tbt: SlidingP95::new(cfg.decode_ctl.tbt_window),

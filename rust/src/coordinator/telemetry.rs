@@ -94,6 +94,25 @@ impl ClockPlan {
             }
         }
     }
+
+    /// [`ClockPlan::clamp_to`], but ladder-aware: every capped decision is
+    /// snapped *down* to the highest ladder clock not above `cap_mhz`, so
+    /// an off-grid cap (e.g. a power arbiter's 1000 MHz ceiling on the
+    /// 15 MHz grid) never leaves an off-ladder request in the plan, and
+    /// never rounds above the cap. A cap below the ladder floor pins to
+    /// the floor — the lowest clock the part can actually run.
+    pub fn clamp_to_ladder(&mut self, cap_mhz: u32, ladder: &crate::gpu::FreqLadder) {
+        let cap = ladder.snap_down(cap_mhz as f64);
+        for m in self.prefill_mhz.iter_mut().chain(self.decode_mhz.iter_mut()) {
+            if let Some(v) = m {
+                if *v > cap {
+                    *v = cap;
+                } else {
+                    *v = ladder.snap_down(*v as f64);
+                }
+            }
+        }
+    }
 }
 
 /// One periodic callback a policy asks the engine to schedule. The index
@@ -178,6 +197,32 @@ mod tests {
         assert_eq!(p.prefill_mhz[0], Some(900));
         assert_eq!(p.prefill_mhz[1], None); // untouched holds stay None
         assert_eq!(p.decode_mhz[1], Some(600)); // under the cap: unchanged
+    }
+
+    #[test]
+    fn clamp_to_ladder_snaps_down_and_respects_boundaries() {
+        let ladder = crate::gpu::FreqLadder::a100();
+        let mut p = ClockPlan::default();
+        p.reset(2, 3);
+        p.prefill_mhz[0] = Some(1410);
+        p.decode_mhz[0] = Some(997); // off-grid decision under the cap
+        p.decode_mhz[1] = Some(600);
+        // Off-grid cap: 1000 snaps DOWN to 990, never up to 1005.
+        p.clamp_to_ladder(1000, &ladder);
+        assert_eq!(p.prefill_mhz[0], Some(990));
+        assert_eq!(p.prefill_mhz[1], None, "holds stay holds");
+        assert_eq!(p.decode_mhz[0], Some(990), "off-grid survivors snap down too");
+        assert_eq!(p.decode_mhz[1], Some(600));
+        // Cap below the ladder floor: pin at the floor, not below it.
+        p.clamp_to_ladder(100, &ladder);
+        assert_eq!(p.prefill_mhz[0], Some(210));
+        assert_eq!(p.decode_mhz[1], Some(210));
+        // Exact-boundary cap is a fixed point.
+        let mut q = ClockPlan::default();
+        q.reset(1, 0);
+        q.prefill_mhz[0] = Some(1410);
+        q.clamp_to_ladder(1410, &ladder);
+        assert_eq!(q.prefill_mhz[0], Some(1410));
     }
 
     #[test]

@@ -60,9 +60,20 @@ pub struct DecodeController {
 }
 
 impl DecodeController {
-    /// A controller starting in the table's lowest bucket band.
+    /// A controller starting in the table's lowest bucket band, on the
+    /// analytic A100 ladder.
     pub fn new(cfg: DecodeCtlConfig, table: BandTable, tbt_target_s: f64) -> Self {
-        let ladder = FreqLadder::a100();
+        DecodeController::with_ladder(cfg, table, tbt_target_s, FreqLadder::a100())
+    }
+
+    /// [`DecodeController::new`] on an explicit (calibrated or capped)
+    /// ladder — band clamping and fine steps stay on the node's own grid.
+    pub fn with_ladder(
+        cfg: DecodeCtlConfig,
+        table: BandTable,
+        tbt_target_s: f64,
+        ladder: FreqLadder,
+    ) -> Self {
         let f0 = table.freqs[0];
         let mut ctl = DecodeController {
             tps_window: TpsWindow::new(cfg.tps_window_s),

@@ -25,14 +25,24 @@ pub struct DefaultNvGovernor {
 impl DefaultNvGovernor {
     /// A governor with the A100 boost envelope and a per-seed dither stream.
     pub fn new(seed: u64) -> Self {
-        let ladder = FreqLadder::a100();
+        DefaultNvGovernor::with_ladder(seed, FreqLadder::a100())
+    }
+
+    /// A governor on an arbitrary (calibrated or capped) ladder. The stock
+    /// behavior generalizes by shape: the boost band spans the top 8
+    /// ladder steps below max and the idle sag parks 20 steps below max
+    /// (exactly 1290/1110 MHz on the stock A100 ladder, so `new` is
+    /// bit-identical through this path).
+    pub fn with_ladder(seed: u64, ladder: FreqLadder) -> Self {
+        let busy_lo = ladder.max_mhz.saturating_sub(8 * ladder.step_mhz).max(ladder.min_mhz);
+        let idle = ladder.max_mhz.saturating_sub(20 * ladder.step_mhz).max(ladder.min_mhz);
         DefaultNvGovernor {
             cur_mhz: ladder.max_mhz,
             ladder,
             rng: Pcg64::new(seed, 0xDEFA),
             last_busy_t: 0.0,
-            busy_lo_mhz: 1290,
-            idle_mhz: 1110,
+            busy_lo_mhz: busy_lo,
+            idle_mhz: idle,
             idle_timeout_s: 0.5,
         }
     }
@@ -99,6 +109,52 @@ mod tests {
         let l = FreqLadder::a100();
         for i in 0..100 {
             assert!(l.contains(g.tick(i as f64, true)));
+        }
+    }
+
+    #[test]
+    fn with_ladder_on_stock_a100_is_bit_identical_to_new() {
+        let mut a = DefaultNvGovernor::new(7);
+        let mut b = DefaultNvGovernor::with_ladder(7, FreqLadder::a100());
+        for i in 0..300 {
+            let busy = i % 17 != 0;
+            assert_eq!(a.tick(i as f64 * 0.02, busy), b.tick(i as f64 * 0.02, busy));
+        }
+    }
+
+    #[test]
+    fn with_ladder_boosts_past_1410_on_h100() {
+        let h100 = FreqLadder {
+            min_mhz: 210,
+            max_mhz: 1980,
+            step_mhz: 15,
+        };
+        let mut g = DefaultNvGovernor::with_ladder(5, h100.clone());
+        let mut seen_high = false;
+        for i in 0..200 {
+            let f = g.tick(i as f64 * 0.02, true);
+            assert!((1860..=1980).contains(&f), "f={f}");
+            assert!(h100.contains(f));
+            seen_high |= f > 1410;
+        }
+        assert!(seen_high, "the NV baseline must use the part's real boost band");
+        // Idle sag parks 20 steps below the part max, not at a100's 1110.
+        g.tick(50.0, true);
+        assert_eq!(g.tick(51.0, false), 1680);
+    }
+
+    #[test]
+    fn with_ladder_survives_tiny_capped_ladders() {
+        // A cap so low the band formulas would underflow past the floor.
+        let tiny = FreqLadder {
+            min_mhz: 210,
+            max_mhz: 240,
+            step_mhz: 15,
+        };
+        let mut g = DefaultNvGovernor::with_ladder(6, tiny);
+        for i in 0..50 {
+            let f = g.tick(i as f64, i % 2 == 0);
+            assert!((210..=240).contains(&f), "f={f}");
         }
     }
 }

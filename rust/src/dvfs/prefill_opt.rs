@@ -40,9 +40,15 @@ pub struct PrefillOptimizer {
 impl PrefillOptimizer {
     /// An optimizer over `models`, parking at `idle_clock_mhz` when empty.
     pub fn new(models: FittedModels, idle_clock_mhz: u32) -> Self {
+        // Search the fitted hardware's own ladder (f_ref = part max; the
+        // default 1410 reproduces the stock a100 grid bit-exactly).
+        let ladder = FreqLadder {
+            max_mhz: models.f_ref_mhz,
+            ..FreqLadder::a100()
+        };
         PrefillOptimizer {
             models,
-            ladder: FreqLadder::a100(),
+            ladder,
             idle_clock_mhz,
             decisions: 0,
         }

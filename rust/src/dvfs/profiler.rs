@@ -92,10 +92,17 @@ pub struct Profiler {
 impl Profiler {
     /// A profiler with a deterministic per-seed noise stream.
     pub fn new(perf: PerfModel, power: PowerModel, noise: f64, seed: u64) -> Self {
+        // Sweep the hardware's own ladder: f_ref is the part's max clock,
+        // so a calibrated H100 profiles up to 1980 MHz (identical to the
+        // stock a100 grid when f_ref is the default 1410).
+        let ladder = FreqLadder {
+            max_mhz: perf.hw.f_ref_mhz,
+            ..FreqLadder::a100()
+        };
         Profiler {
             perf,
             power,
-            ladder: FreqLadder::a100(),
+            ladder,
             noise,
             rng: Pcg64::new(seed, 0x9801F11E),
         }

@@ -56,14 +56,32 @@ impl FreqLadder {
         self.min_mhz + steps * self.step_mhz
     }
 
+    /// Snap *down*: largest ladder frequency <= mhz (clamped to min).
+    /// This is the safe direction for power caps: the snapped clock never
+    /// exceeds the requested ceiling.
+    pub fn snap_down(&self, mhz: f64) -> u32 {
+        let clamped = mhz.clamp(self.min_mhz as f64, self.max_mhz as f64);
+        let steps = ((clamped - self.min_mhz as f64) / self.step_mhz as f64).floor() as u32;
+        self.min_mhz + steps * self.step_mhz
+    }
+
     /// One fine step up/down from `mhz`, clamped to [lo, hi] band bounds.
+    /// A band that is empty after intersecting the ladder (lo > hi, e.g. a
+    /// cap below 210 MHz on a calibrated part) pins to the band ceiling —
+    /// never above the cap — raised to the ladder floor, rather than
+    /// panicking in `clamp`.
     pub fn step(&self, mhz: u32, up: bool, lo: u32, hi: u32) -> u32 {
+        let lo_b = lo.max(self.min_mhz);
+        let hi_b = hi.min(self.max_mhz);
+        if lo_b > hi_b {
+            return self.min_mhz.max(hi_b);
+        }
         let next = if up {
             mhz.saturating_add(self.step_mhz)
         } else {
             mhz.saturating_sub(self.step_mhz)
         };
-        next.clamp(lo.max(self.min_mhz), hi.min(self.max_mhz))
+        next.clamp(lo_b, hi_b)
     }
 
     /// Iterate every ladder frequency (profiling sweeps).
@@ -150,6 +168,78 @@ mod tests {
         let l = FreqLadder::a100();
         for f in l.iter() {
             assert_eq!(l.snap(f as f64), f);
+            assert_eq!(l.snap_up(f as f64), f);
+            assert_eq!(l.snap_down(f as f64), f);
         }
+    }
+
+    #[test]
+    fn snap_ties_round_up_pinned() {
+        // Exactly halfway between two rungs: `round()` is half-away-from-
+        // zero, and the normalized step count is always positive, so ties
+        // go UP. Pinned so calibrated ladders can rely on the direction.
+        let l = FreqLadder::a100();
+        assert_eq!(l.snap(997.5), 1005);
+        assert_eq!(l.snap(217.5), 225);
+        assert_eq!(l.snap(1402.5), 1410);
+    }
+
+    #[test]
+    fn sub_floor_and_over_ceiling_requests_clamp() {
+        // Sub-210 MHz requests (an aggressive governor on a calibrated
+        // part) clamp to the floor in every snap direction; over-ceiling
+        // requests clamp to the part's own max, not a100's.
+        for l in [
+            FreqLadder::a100(),
+            FreqLadder {
+                min_mhz: 210,
+                max_mhz: 1980,
+                step_mhz: 15,
+            },
+        ] {
+            for f in [-50.0, 0.0, 150.0, 209.9] {
+                assert_eq!(l.snap(f), 210);
+                assert_eq!(l.snap_up(f), 210);
+                assert_eq!(l.snap_down(f), 210);
+            }
+            let over = l.max_mhz as f64 + 100.0;
+            assert_eq!(l.snap(over), l.max_mhz);
+            assert_eq!(l.snap_down(over), l.max_mhz);
+        }
+    }
+
+    #[test]
+    fn snap_down_never_above_target() {
+        let l = FreqLadder::a100();
+        for f in [211.0, 970.2, 1409.9, 250.0, 1004.99] {
+            let s = l.snap_down(f);
+            assert!(s as f64 <= f, "snap_down({f}) = {s}");
+            assert!(l.contains(s));
+        }
+    }
+
+    #[test]
+    fn step_survives_degenerate_bands() {
+        let l = FreqLadder::a100();
+        // Cap entirely below the ladder floor: pin at the floor.
+        assert_eq!(l.step(210, false, 0, 100), 210);
+        assert_eq!(l.step(210, true, 0, 100), 210);
+        // Inverted band (lo > hi): pin at the band ceiling.
+        assert_eq!(l.step(900, false, 900, 600), 600);
+        // Band entirely above the ladder: pin at the ladder max.
+        assert_eq!(l.step(1410, true, 2000, 3000), 1410);
+    }
+
+    #[test]
+    fn h100_ladder_has_119_points() {
+        let l = FreqLadder {
+            min_mhz: 210,
+            max_mhz: 1980,
+            step_mhz: 15,
+        };
+        assert_eq!(l.len(), 119);
+        assert_eq!(l.iter().last(), Some(1980));
+        assert_eq!(l.snap(1500.0), 1500);
+        assert!(l.contains(1980) && !l.contains(1981));
     }
 }

@@ -5,11 +5,13 @@
 //! the 210–1410 MHz/15 MHz ladder, a cubic power curve, compute-bound
 //! prefill latency and memory-bound decode latency (DESIGN.md §1).
 
+pub mod calibrate;
 pub mod device;
 pub mod freq;
 pub mod perf;
 pub mod power;
 
+pub use calibrate::{CalibratedPart, CalibrationTable};
 pub use device::SimGpu;
 pub use freq::{ghz, FreqLadder};
 pub use perf::{GpuHardware, PerfModel};

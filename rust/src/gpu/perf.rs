@@ -62,6 +62,17 @@ pub struct PerfModel {
     /// compute-heavy is what shrinks GreenLLM's clock slack as batch grows
     /// — the paper's savings-vs-load falloff (Fig. 11).
     pub per_stream_cmp_frac: f64,
+    /// Memory-bound fraction of prefill: the share of `t_ref` that does
+    /// NOT scale with clock. 0.0 (the analytic default) is the paper's
+    /// pure-compute Eq. 3; calibrated parts fit a small positive value
+    /// from measured sweeps ([`crate::gpu::calibrate`]).
+    pub prefill_mem_frac: f64,
+    /// Calibration scale on the decode memory-bound component (1.0 =
+    /// analytic).
+    pub decode_mem_scale: f64,
+    /// Calibration scale on the decode compute-bound component (1.0 =
+    /// analytic).
+    pub decode_cmp_scale: f64,
 }
 
 impl PerfModel {
@@ -85,6 +96,9 @@ impl PerfModel {
             decode_mfu: 0.36,
             overhead_cmp_frac: 0.3,
             per_stream_cmp_frac: 0.8,
+            prefill_mem_frac: 0.0,
+            decode_mem_scale: 1.0,
+            decode_cmp_scale: 1.0,
         }
     }
 
@@ -102,12 +116,14 @@ impl PerfModel {
         (a, b, self.prefill_overhead_s)
     }
 
-    /// Prefill latency for a prompt of `len` tokens at SM clock `mhz` (Eq. 3).
+    /// Prefill latency for a prompt of `len` tokens at SM clock `mhz`
+    /// (Eq. 3, generalized with the calibrated memory-bound fraction `m`:
+    /// `t(f) = t_ref · (m + (1−m) · f_ref/f)`; `m = 0` is exactly Eq. 3).
     pub fn prefill_time(&self, len: usize, mhz: u32) -> f64 {
         let (a, b, c) = self.prefill_coeffs();
         let l = len as f64;
         let t_ref = a * l * l + b * l + c;
-        t_ref * self.freq_slowdown(mhz)
+        t_ref * (self.prefill_mem_frac + (1.0 - self.prefill_mem_frac) * self.freq_slowdown(mhz))
     }
 
     #[inline]
@@ -131,7 +147,10 @@ impl PerfModel {
             / (self.hw.peak_flops * self.decode_mfu);
         let cmp_over = self.overhead_cmp_frac * self.decode_overhead_s
             + self.per_stream_cmp_frac * b * self.decode_per_stream_s;
-        (weights + kv + mem_over, flops + cmp_over)
+        (
+            (weights + kv + mem_over) * self.decode_mem_scale,
+            (flops + cmp_over) * self.decode_cmp_scale,
+        )
     }
 
     /// Decode step latency at SM clock `mhz`: t_mem + t_cmp · f_ref/f.
@@ -254,6 +273,27 @@ mod tests {
         assert!((600.0..1400.0).contains(&cap), "cap={cap}");
         // Lower clock lowers capacity.
         assert!(m.decode_capacity_tps(600.0, 705, 0.100) < cap);
+    }
+
+    #[test]
+    fn calibration_knobs_default_to_bit_exact_identity() {
+        // prefill_mem_frac 0.0 and unit decode scales must leave every
+        // latency unchanged to the last bit — the analytic model is the
+        // oracle for all pre-calibration tests and goldens.
+        let m = qwen14b();
+        assert_eq!(m.prefill_mem_frac, 0.0);
+        assert_eq!((m.decode_mem_scale, m.decode_cmp_scale), (1.0, 1.0));
+        for mhz in [210, 705, 997, 1410] {
+            let (a, b, c) = m.prefill_coeffs();
+            let l = 1024.0;
+            let legacy = (a * l * l + b * l + c) * m.freq_slowdown(mhz);
+            assert_eq!(m.prefill_time(1024, mhz), legacy);
+        }
+        // Calibrated shape: a positive mem fraction flattens the response.
+        let mut cal = qwen14b();
+        cal.prefill_mem_frac = 0.25;
+        let ratio = cal.prefill_time(1024, 705) / cal.prefill_time(1024, 1410);
+        assert!(ratio < 2.0 && ratio > 1.5, "ratio={ratio}");
     }
 
     #[test]

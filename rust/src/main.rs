@@ -127,6 +127,7 @@ fn dispatch(args: &Args) -> Result<()> {
             bench::baselines::baselines(duration, seed);
             Ok(())
         }
+        "validate" => validate_cmd(args, seed),
         "matrix" => matrix_cmd(args, duration, seed),
         "cluster" => cluster_cmd(args, duration, seed),
         "report" => report_cmd(args, duration, seed),
@@ -243,6 +244,51 @@ fn microbench(args: &Args, duration: f64, seed: u64) -> Result<()> {
         r.slo.tbt_hist.p90() * 1000.0,
         r.total_energy_j / 1e3
     );
+    Ok(())
+}
+
+/// `greenllm validate`: the paper-closure harness. Replays the paper's
+/// Alibaba + Azure settings on a *calibrated* part (defaults to the
+/// cited A100 envelope), runs defaultNV and GreenLLM back-to-back, and
+/// checks energy savings / extra SLO violations against the `[closure]`
+/// tolerance bands. Exits non-zero when the reproduction drifts outside
+/// the bands — this is the CI closure gate. See docs/VALIDATION.md.
+fn validate_cmd(args: &Args, seed: u64) -> Result<()> {
+    let quick = args.flag("quick");
+    // Quick mode shrinks the horizon for CI smoke; the full default is
+    // long enough for the SLO tails to settle.
+    let duration = args.f64_or("duration", if quick { 90.0 } else { 240.0 })?;
+    let part = args.get_or("part", "a100");
+    if greenllm::gpu::calibrate::part(part).is_none() {
+        return Err(anyhow!(
+            "unknown --part {part:?}; calibrated parts: {}",
+            greenllm::gpu::calibrate::part_names().join(", ")
+        ));
+    }
+    // `[closure]` bands from --config (or defaults), with CLI overrides.
+    let cfg = base_config(args, seed)?;
+    let model = args.get_or("model", &cfg.model);
+    let mut bands = cfg.closure.clone();
+    bands.min_energy_savings_pct = args.f64_or("min-savings", bands.min_energy_savings_pct)?;
+    bands.max_extra_violations_pct =
+        args.f64_or("max-extra-viol", bands.max_extra_violations_pct)?;
+    let rep = bench::validate::run_closure(part, model, duration, seed, &bands);
+    bench::validate::print_report(&rep);
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, rep.to_json().dump())
+            .map_err(|e| anyhow!("closure json {path}: {e}"))?;
+        println!("json: wrote {path}");
+    }
+    if !rep.pass() {
+        return Err(anyhow!(
+            "paper closure failed on {} of {} workloads (bands: savings >= {:.1}%, \
+             extra violations < {:.1} pp)",
+            rep.rows.iter().filter(|r| !r.pass()).count(),
+            rep.rows.len(),
+            bands.min_energy_savings_pct,
+            bands.max_extra_violations_pct
+        ));
+    }
     Ok(())
 }
 
@@ -1016,6 +1062,14 @@ COMMANDS
                fail on wall-time regressions; --mem for allocation counts +
                peak bytes — needs a --features count-alloc build;
                see docs/PERFORMANCE.md)
+  validate    paper-closure gate: replay the paper's Alibaba + Azure
+              settings on a calibrated part (cited latency/power samples,
+              not the analytic defaults), compare defaultNV vs GreenLLM,
+              and check the deltas against the [closure] tolerance bands;
+              exits non-zero on drift
+              (--part a100|h100 --quick --json closure.json
+               --min-savings 25 --max-extra-viol 3.5 --duration 240;
+               see docs/VALIDATION.md)
   serve       end-to-end PJRT serving demo (needs `make artifacts`)
 
 FLAGS

@@ -1,8 +1,13 @@
 //! Integration: the Rust PJRT runtime must reproduce the numerics the
 //! Python side exported (artifacts/manifest.json test vectors).
 //!
-//! These tests need `make artifacts` to have run; they are skipped (with a
-//! note) otherwise so `cargo test` stays green in a fresh checkout.
+//! These tests need `make artifacts` to have run. They are `#[ignore]`d
+//! rather than silently vacuous: without artifacts they would pass while
+//! testing nothing, and this container's `runtime/xla_stub.rs` can never
+//! produce artifacts (the real XLA crate is not vendored). Run them with
+//! `cargo test --test integration_runtime -- --ignored` after exporting
+//! artifacts on a machine with the Python/XLA toolchain; the guard below
+//! still skips gracefully if the manifest is absent.
 
 use greenllm::runtime::engine::TinyLmEngine;
 use greenllm::runtime::manifest::Manifest;
@@ -35,6 +40,7 @@ fn test_tokens(m: &Manifest) -> Vec<Vec<i32>> {
 }
 
 #[test]
+#[ignore = "needs `make artifacts` (real XLA AOT export); xla_stub cannot produce them"]
 fn loads_and_compiles_all_artifacts() {
     let Some(e) = engine() else { return };
     assert_eq!(e.platform(), "cpu");
@@ -42,6 +48,7 @@ fn loads_and_compiles_all_artifacts() {
 }
 
 #[test]
+#[ignore = "needs `make artifacts` (real XLA AOT export); xla_stub cannot produce them"]
 fn prefill_matches_python_test_vectors() {
     let Some(e) = engine() else { return };
     let m = &e.manifest;
@@ -83,6 +90,7 @@ fn prefill_matches_python_test_vectors() {
 }
 
 #[test]
+#[ignore = "needs `make artifacts` (real XLA AOT export); xla_stub cannot produce them"]
 fn greedy_generation_matches_python() {
     let Some(e) = engine() else { return };
     let tv = e.manifest.test_vectors.clone();
@@ -99,6 +107,7 @@ fn greedy_generation_matches_python() {
 }
 
 #[test]
+#[ignore = "needs `make artifacts` (real XLA AOT export); xla_stub cannot produce them"]
 fn batched_generation_rows_independent() {
     let Some(e) = engine() else { return };
     let m = &e.manifest;
@@ -112,6 +121,7 @@ fn batched_generation_rows_independent() {
 }
 
 #[test]
+#[ignore = "needs `make artifacts` (real XLA AOT export); xla_stub cannot produce them"]
 fn decode_step_respects_cache_capacity() {
     let Some(e) = engine() else { return };
     let m = &e.manifest;
@@ -125,6 +135,7 @@ fn decode_step_respects_cache_capacity() {
 }
 
 #[test]
+#[ignore = "needs `make artifacts` (real XLA AOT export); xla_stub cannot produce them"]
 fn unequal_prompt_lengths_rejected() {
     let Some(e) = engine() else { return };
     let r = e.generate(&[vec![1, 2, 3], vec![1, 2]], 4);
@@ -132,6 +143,7 @@ fn unequal_prompt_lengths_rejected() {
 }
 
 #[test]
+#[ignore = "needs `make artifacts` (real XLA AOT export); xla_stub cannot produce them"]
 fn oversized_batch_rejected() {
     let Some(e) = engine() else { return };
     let m = &e.manifest;

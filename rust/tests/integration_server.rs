@@ -1,5 +1,11 @@
 //! Integration: the threaded serving loop over the real PJRT engine —
 //! tokenize → batch → prefill → decode → stream, no Python anywhere.
+//!
+//! Artifact-gated tests are `#[ignore]`d (not silently vacuous): they
+//! need `make artifacts` from the Python/XLA toolchain, which the
+//! in-tree `runtime/xla_stub.rs` cannot substitute for. Run with
+//! `-- --ignored` after exporting. `startup_error_is_synchronous` is
+//! artifact-free and always runs.
 
 use greenllm::server::{ServerConfig, ServerHandle};
 use std::path::PathBuf;
@@ -19,6 +25,7 @@ fn config() -> Option<ServerConfig> {
 }
 
 #[test]
+#[ignore = "needs `make artifacts` (real PJRT engine); xla_stub builds cannot serve"]
 fn serves_single_request_end_to_end() {
     let Some(cfg) = config() else { return };
     let server = ServerHandle::start(cfg).expect("server start");
@@ -34,6 +41,7 @@ fn serves_single_request_end_to_end() {
 }
 
 #[test]
+#[ignore = "needs `make artifacts` (real PJRT engine); xla_stub builds cannot serve"]
 fn batches_equal_length_prompts() {
     let Some(cfg) = config() else { return };
     let server = ServerHandle::start(cfg).expect("server start");
@@ -53,6 +61,7 @@ fn batches_equal_length_prompts() {
 }
 
 #[test]
+#[ignore = "needs `make artifacts` (real PJRT engine); xla_stub builds cannot serve"]
 fn mixed_lengths_still_all_complete() {
     let Some(cfg) = config() else { return };
     let server = ServerHandle::start(cfg).expect("server start");
@@ -67,6 +76,7 @@ fn mixed_lengths_still_all_complete() {
 }
 
 #[test]
+#[ignore = "needs `make artifacts` (real PJRT engine); xla_stub builds cannot serve"]
 fn deterministic_output_for_same_prompt() {
     let Some(cfg) = config() else { return };
     let server = ServerHandle::start(cfg).expect("server start");

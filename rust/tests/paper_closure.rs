@@ -1,0 +1,233 @@
+//! Paper-closure assertions: the reproduction must land inside the
+//! declared tolerance bands of the source paper's headline result on
+//! *calibrated* GPU models — not just on the analytic defaults.
+//!
+//! Three layers:
+//!   1. Closure proper: `bench::validate::run_closure` on the calibrated
+//!      A100 replays the paper's Alibaba and Azure settings and must show
+//!      ≥ 25% energy savings with < 3.5 pp extra SLO violations (the
+//!      paper reports ≈34%; docs/VALIDATION.md documents the gap).
+//!   2. Zoo contracts: every calibrated part's fitted models must keep
+//!      the physics the GreenLLM policies rely on — prefill latency
+//!      non-increasing and power strictly increasing in frequency, and
+//!      *phase-distinct* energy-minimal clocks (the reason prefill/decode
+//!      disaggregation pays at all).
+//!   3. Calibration gates: a deliberately corrupted sample table must be
+//!      rejected with a clear error, never silently fitted.
+
+use greenllm::bench::validate::{closure_workloads, closure_row, run_closure};
+use greenllm::config::ClosureSection;
+use greenllm::gpu::calibrate::{self, CalibrationTable};
+use greenllm::model::ModelSpec;
+
+/// Closure horizon: long enough for arrival bursts and SLO tails to
+/// settle, short enough for CI (two traces × two methods ≈ seconds of
+/// wall time at this simulator's event rate).
+const CLOSURE_DURATION_S: f64 = 240.0;
+const CLOSURE_SEED: u64 = 42;
+
+// ---------------------------------------------------------------------
+// 1. Closure proper
+// ---------------------------------------------------------------------
+
+#[test]
+fn greenllm_closes_the_papers_headline_on_calibrated_a100() {
+    let bands = ClosureSection::default();
+    assert_eq!(bands.min_energy_savings_pct, 25.0);
+    assert_eq!(bands.max_extra_violations_pct, 3.5);
+    let rep = run_closure("a100", "qwen3-14b", CLOSURE_DURATION_S, CLOSURE_SEED, &bands);
+    assert_eq!(rep.rows.len(), 2, "alibaba + azure");
+    for r in &rep.rows {
+        assert!(
+            r.energy_savings_pct >= bands.min_energy_savings_pct,
+            "{}: savings {:.2}% below the {:.1}% closure floor \
+             (paper reports ~34%; see docs/VALIDATION.md)",
+            r.workload,
+            r.energy_savings_pct,
+            bands.min_energy_savings_pct
+        );
+        assert!(
+            r.extra_violations_pp < bands.max_extra_violations_pct,
+            "{}: {:+.2} pp extra violations exceeds the {:.1} pp band",
+            r.workload,
+            r.extra_violations_pp,
+            bands.max_extra_violations_pct
+        );
+    }
+    assert!(rep.pass());
+}
+
+#[test]
+fn closure_report_is_seed_deterministic() {
+    // The CI gate replays this exact harness; two runs at one seed must
+    // agree bit-for-bit or the gate would flake.
+    let bands = ClosureSection::default();
+    let trace = &closure_workloads(60.0, 7)[0];
+    let a = closure_row("a100", "qwen3-14b", trace, 7, &bands);
+    let b = closure_row("a100", "qwen3-14b", trace, 7, &bands);
+    assert_eq!(a.nv_energy_wh.to_bits(), b.nv_energy_wh.to_bits());
+    assert_eq!(a.green_energy_wh.to_bits(), b.green_energy_wh.to_bits());
+    assert_eq!(a.extra_violations_pp.to_bits(), b.extra_violations_pp.to_bits());
+}
+
+// ---------------------------------------------------------------------
+// 2. Zoo contracts
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_zoo_part_keeps_prefill_latency_monotone_in_frequency() {
+    let spec = ModelSpec::qwen3_14b();
+    for part in calibrate::zoo() {
+        let perf = part.perf_model(spec.clone());
+        let mut prev = f64::INFINITY;
+        for mhz in part.ladder.iter() {
+            let t = perf.prefill_time(1024, mhz);
+            assert!(t.is_finite() && t > 0.0, "{}: t({mhz})={t}", part.name);
+            assert!(
+                t <= prev + 1e-12,
+                "{}: prefill latency rose {prev} -> {t} at {mhz} MHz",
+                part.name
+            );
+            prev = t;
+        }
+    }
+}
+
+#[test]
+fn every_zoo_part_keeps_decode_latency_monotone_in_frequency() {
+    let spec = ModelSpec::qwen3_14b();
+    for part in calibrate::zoo() {
+        let perf = part.perf_model(spec.clone());
+        let mut prev = f64::INFINITY;
+        for mhz in part.ladder.iter() {
+            let t = perf.decode_step_time(16, 600.0, mhz);
+            assert!(t.is_finite() && t > 0.0, "{}: t({mhz})={t}", part.name);
+            assert!(
+                t <= prev + 1e-12,
+                "{}: decode step time rose {prev} -> {t} at {mhz} MHz",
+                part.name
+            );
+            prev = t;
+        }
+    }
+}
+
+#[test]
+fn every_zoo_part_keeps_power_strictly_increasing_in_frequency() {
+    for part in calibrate::zoo() {
+        let mut prev = 0.0;
+        for mhz in part.ladder.iter() {
+            let w = part.power.active_w(mhz);
+            assert!(w.is_finite() && w > 0.0, "{}: P({mhz})={w}", part.name);
+            assert!(
+                w > prev,
+                "{}: active power not strictly increasing at {mhz} MHz ({prev} -> {w})",
+                part.name
+            );
+            prev = w;
+        }
+    }
+}
+
+#[test]
+fn every_zoo_part_passes_its_fit_quality_gates_in_release_tests_too() {
+    // `calibrate()` already enforces these at zoo construction; assert
+    // them independently so a loosened gate can't slip through unnoticed.
+    for part in calibrate::zoo() {
+        for (label, fq) in [
+            ("power", &part.fit.power),
+            ("prefill", &part.fit.prefill),
+            ("decode", &part.fit.decode),
+        ] {
+            assert!(
+                fq.r2 >= 0.98,
+                "{} {label}: r2={} below the 0.98 gate",
+                part.name,
+                fq.r2
+            );
+            assert!(
+                fq.max_rel_resid <= 0.02,
+                "{} {label}: max relative residual {} above the 2% gate",
+                part.name,
+                fq.max_rel_resid
+            );
+        }
+    }
+}
+
+/// Energy-minimal clock for a phase: argmin over the part's ladder of
+/// active power × phase latency (energy per unit of phase work).
+fn energy_min_clock(part: &calibrate::CalibratedPart, decode: bool) -> u32 {
+    let perf = part.perf_model(ModelSpec::qwen3_14b());
+    let mut best = (f64::INFINITY, part.ladder.min_mhz);
+    for mhz in part.ladder.iter() {
+        let t = if decode {
+            perf.decode_step_time(16, 600.0, mhz)
+        } else {
+            perf.prefill_time(1024, mhz)
+        };
+        let e = part.power.active_w(mhz) * t;
+        if e < best.0 {
+            best = (e, mhz);
+        }
+    }
+    best.1
+}
+
+#[test]
+fn calibrated_parts_want_different_clocks_for_prefill_and_decode() {
+    // The disaggregation premise (§4.3, DualScale): decode is memory-
+    // bound, so its energy-per-token keeps improving well below the
+    // prefill knee. On every calibrated part the two phases' energy-
+    // minimal clocks must be far apart — at least 10 ladder steps.
+    for part in calibrate::zoo() {
+        let f_prefill = energy_min_clock(part, false);
+        let f_decode = energy_min_clock(part, true);
+        assert!(
+            f_decode < f_prefill,
+            "{}: decode optimum {f_decode} MHz not below prefill optimum {f_prefill} MHz",
+            part.name
+        );
+        let gap_steps = (f_prefill - f_decode) / part.ladder.step_mhz;
+        assert!(
+            gap_steps >= 10,
+            "{}: phase optima only {gap_steps} ladder steps apart \
+             ({f_decode} vs {f_prefill} MHz)",
+            part.name
+        );
+        // Neither optimum sits pinned at a ladder edge — that would mean
+        // the fitted envelope has no interior knee and the optimizer
+        // degenerates to a bang-bang policy.
+        assert!(f_prefill < part.ladder.max_mhz, "{}", part.name);
+        assert!(f_decode > part.ladder.min_mhz, "{}", part.name);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. Calibration gates
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupted_sample_tables_fail_with_a_clear_error() {
+    // Shuffled power samples: breaks the monotone-power gate.
+    let mut t = CalibrationTable::a100();
+    t.power_w.swap(2, 12);
+    let err = calibrate::calibrate(&t).unwrap_err();
+    assert!(
+        err.contains("residual") || err.contains("increasing") || err.contains("R²"),
+        "unhelpful error: {err}"
+    );
+
+    // Latency that *improves* as the clock drops: physically impossible,
+    // must be rejected by the fit gates, not absorbed into a bad model.
+    let mut t = CalibrationTable::a100();
+    t.prefill_s.reverse();
+    let err = calibrate::calibrate(&t).unwrap_err();
+    assert!(!err.is_empty());
+
+    // A NaN sample must never reach the fitter's output.
+    let mut t = CalibrationTable::a100();
+    t.decode_s[4] = f64::NAN;
+    let err = calibrate::calibrate(&t).unwrap_err();
+    assert!(err.contains("finite") || err.contains("NaN") || err.contains("nan"), "{err}");
+}

@@ -1,0 +1,132 @@
+//! Conditioning properties of `util::polyfit` on the inputs the GPU
+//! calibration layer actually feeds it: frequency-response curves over
+//! the A100 application-clock ladder, both in the normalized
+//! `x = f_ref/f` basis (calibration fits) and in raw MHz (worst-case
+//! conditioning — values up to 1410 cubed inside the normal matrix).
+//!
+//! The fitter must stay well-behaved on every physically plausible
+//! monotone latency curve: finite coefficients, high R², bounded
+//! residuals. A silent conditioning failure here would poison every
+//! calibrated part downstream (`gpu::calibrate` trusts these fits after
+//! its own gates).
+
+use greenllm::gpu::FreqLadder;
+use greenllm::util::polyfit::{polyfit, polyval};
+use greenllm::util::rng::Pcg64;
+use greenllm::util::stats::{max_rel_err, r_squared};
+
+/// A random monotone-decreasing latency curve over the A100 ladder,
+/// shaped like a real frequency response: t(f) = t_mem + t_cmp·f_ref/f
+/// plus bounded multiplicative measurement noise.
+fn random_latency_curve(rng: &mut Pcg64, noise: f64) -> (Vec<f64>, Vec<f64>) {
+    let ladder = FreqLadder::a100();
+    let f_ref = ladder.max_mhz as f64;
+    let t_cmp = rng.range_f64(0.01, 2.0);
+    let t_mem = rng.range_f64(0.0, 1.5) * t_cmp;
+    let freqs: Vec<f64> = ladder.iter().map(|m| m as f64).collect();
+    let ys: Vec<f64> = freqs
+        .iter()
+        .map(|f| (t_mem + t_cmp * f_ref / f) * (1.0 + rng.range_f64(-noise, noise)))
+        .collect();
+    (freqs, ys)
+}
+
+#[test]
+fn calibration_basis_fits_recover_random_frequency_responses() {
+    // 200 random curves in the x = f_ref/f basis (what gpu::calibrate
+    // uses): the line fit must explain essentially all variance and
+    // leave residuals bounded by the injected noise.
+    let mut rng = Pcg64::new(0xF17, 1);
+    for trial in 0..200 {
+        let noise = 0.002;
+        let (freqs, ys) = random_latency_curve(&mut rng, noise);
+        let f_ref = 1410.0;
+        let xs: Vec<f64> = freqs.iter().map(|f| f_ref / f).collect();
+        let c = polyfit(&xs, &ys, 1);
+        assert!(c.iter().all(|v| v.is_finite()), "trial {trial}: coeffs {c:?}");
+        assert!(c[1] > 0.0, "trial {trial}: slope {} not positive", c[1]);
+        let yh: Vec<f64> = xs.iter().map(|&x| polyval(&c, x)).collect();
+        let r2 = r_squared(&ys, &yh);
+        assert!(r2 > 0.99, "trial {trial}: r2={r2}");
+        // Residuals bounded by a small multiple of the noise floor.
+        let resid = max_rel_err(&yh, &ys);
+        assert!(resid < 5.0 * noise + 1e-9, "trial {trial}: resid={resid}");
+    }
+}
+
+#[test]
+fn raw_mhz_cubics_stay_conditioned_across_the_ladder() {
+    // Power-style cubics fitted in raw MHz: the normal matrix holds
+    // values up to 1410^6 ≈ 8e18 before normalization — exactly where a
+    // naive implementation loses the fit. The internal x-normalization
+    // must keep coefficients finite and the curve faithful.
+    let mut rng = Pcg64::new(0xF18, 2);
+    let ladder = FreqLadder::a100();
+    let freqs: Vec<f64> = ladder.iter().map(|m| m as f64).collect();
+    for trial in 0..100 {
+        let k0 = rng.range_f64(50.0, 250.0);
+        let k3 = rng.range_f64(1e-8, 1e-7);
+        let ys: Vec<f64> = freqs.iter().map(|&f| k0 + k3 * f * f * f).collect();
+        let c = polyfit(&freqs, &ys, 3);
+        assert!(c.iter().all(|v| v.is_finite()), "trial {trial}: {c:?}");
+        let yh: Vec<f64> = freqs.iter().map(|&f| polyval(&c, f)).collect();
+        assert!(
+            max_rel_err(&yh, &ys) < 1e-6,
+            "trial {trial}: noiseless cubic not recovered"
+        );
+    }
+}
+
+#[test]
+fn near_degenerate_ladder_spacing_regression() {
+    // Four points spanning only three 15 MHz steps at the bottom of the
+    // ladder (210..255 MHz): x-spacing is ~2% of magnitude, the classic
+    // near-singular Vandermonde. A cubic through 4 points must still
+    // interpolate them exactly (up to conditioning slack), not blow up.
+    let xs = [210.0, 225.0, 240.0, 255.0];
+    let ys = [195.8, 196.1, 196.5, 197.0];
+    let c = polyfit(&xs, &ys, 3);
+    assert!(c.iter().all(|v| v.is_finite()), "{c:?}");
+    for (&x, &y) in xs.iter().zip(&ys) {
+        let yh = polyval(&c, x);
+        assert!(
+            (yh - y).abs() / y < 1e-6,
+            "interpolation drift at {x} MHz: {yh} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn constant_and_linear_curves_survive_overfitting_degrees() {
+    // Fitting a cubic to data that is actually constant or linear must
+    // return (near-)zero high-order coefficients, not noise amplified by
+    // the near-singular system.
+    let ladder = FreqLadder::a100();
+    let freqs: Vec<f64> = ladder.iter().map(|m| m as f64).collect();
+    let flat: Vec<f64> = freqs.iter().map(|_| 42.0).collect();
+    let c = polyfit(&freqs, &flat, 3);
+    for &f in &freqs {
+        assert!((polyval(&c, f) - 42.0).abs() < 1e-6);
+    }
+    let lin: Vec<f64> = freqs.iter().map(|f| 3.0 + 0.25 * f).collect();
+    let c = polyfit(&freqs, &lin, 3);
+    for &f in &freqs {
+        let y = 3.0 + 0.25 * f;
+        assert!((polyval(&c, f) - y).abs() / y < 1e-9, "f={f}");
+    }
+}
+
+#[test]
+fn noisy_monotone_curves_never_produce_nonfinite_fits() {
+    // Heavier noise (5%): the fit quality degrades, but finiteness and
+    // slope sign must hold — gpu::calibrate relies on these to give a
+    // *descriptive* rejection rather than a NaN-poisoned model.
+    let mut rng = Pcg64::new(0xF19, 3);
+    for trial in 0..100 {
+        let (freqs, ys) = random_latency_curve(&mut rng, 0.05);
+        let xs: Vec<f64> = freqs.iter().map(|f| 1410.0 / f).collect();
+        let c = polyfit(&xs, &ys, 1);
+        assert!(c.iter().all(|v| v.is_finite()), "trial {trial}: {c:?}");
+        assert!(c[1] > 0.0, "trial {trial}: 5% noise flipped the slope");
+    }
+}
