@@ -491,6 +491,11 @@ pub struct CellResult {
     pub rerouted: u64,
     /// Tokens rolled back at node failures (chaos cells).
     pub wasted_tokens: u64,
+    /// Arrivals deferred because no node was routable at offer time
+    /// (chaos cells; re-offered at the next recovery).
+    pub deferred_arrivals: u64,
+    /// Nodes the fault plan degraded (straggler cells), ascending.
+    pub straggler_nodes: Vec<usize>,
     /// Highest measured cluster draw across arbiter epochs (capped cells).
     pub peak_power_w: Option<f64>,
     /// Migration ledger (disaggregated cells only).
@@ -588,6 +593,8 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
         starved_nodes: 0,
         rerouted: 0,
         wasted_tokens: 0,
+        deferred_arrivals: 0,
+        straggler_nodes: Vec::new(),
         peak_power_w: None,
         migration: None,
         node_migration: Vec::new(),
@@ -666,6 +673,8 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
         starved_nodes: r.starved_nodes(),
         rerouted: r.rerouted,
         wasted_tokens: r.wasted_tokens,
+        deferred_arrivals: r.deferred_arrivals,
+        straggler_nodes: r.straggler_nodes.clone(),
         peak_power_w: r.power.as_ref().map(|p| p.peak_measured_w),
         migration: r.migration,
         node_migration: r.node_migration.clone(),
@@ -861,7 +870,8 @@ fn dist_json(h: &Histogram) -> Json {
 /// Serialize the whole sweep (config + cells) as JSON. Cluster cells carry
 /// a `per_node` section (with each node's shape spec), capped cells a
 /// `power` section, and faulted cells a `chaos` section (re-routed
-/// requests + rolled-back tokens). Every cell carries whole-run `ttft_s`
+/// requests, rolled-back tokens, deferred arrivals, straggler nodes).
+/// Every cell carries whole-run `ttft_s`
 /// and `tbt_p95_s` distribution summaries; disaggregated cells extend the
 /// `migration` section with a per-node attribution array.
 pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
@@ -949,6 +959,19 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
                         ("fault", Json::Str(r.fault.clone())),
                         ("rerouted", Json::Num(r.rerouted as f64)),
                         ("wasted_tokens", Json::Num(r.wasted_tokens as f64)),
+                        (
+                            "deferred_arrivals",
+                            Json::Num(r.deferred_arrivals as f64),
+                        ),
+                        (
+                            "straggler_nodes",
+                            Json::Arr(
+                                r.straggler_nodes
+                                    .iter()
+                                    .map(|&n| Json::Num(n as f64))
+                                    .collect(),
+                            ),
+                        ),
                     ]),
                 );
             }

@@ -332,6 +332,76 @@ impl Default for DisaggSection {
     }
 }
 
+/// Elastic-capacity autoscaler defaults (`greenllm cluster`; off unless
+/// `enabled = true` or the `--capacity` flag is given). Field meanings
+/// mirror `coordinator::cluster::CapacityConfig` — this section stays
+/// plain-typed so the config layer remains free of coordinator types,
+/// and is converted (and re-validated against the node count) where
+/// used.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacitySection {
+    /// Whether the capacity controller runs at all.
+    pub enabled: bool,
+    /// Nodes that start parked as warm spares (highest-index).
+    pub warm: usize,
+    /// Never park below this many live nodes.
+    pub min_live: usize,
+    /// Boot latency of a provisioned node, seconds.
+    pub boot_s: f64,
+    /// Controller check interval, seconds.
+    pub check_epoch_s: f64,
+    /// Scale-up watermark: mean prefill backlog per routable node.
+    pub up_backlog: f64,
+    /// Scale-down watermark (must not exceed `up_backlog`).
+    pub down_backlog: f64,
+    /// Consecutive below-watermark checks required before a park.
+    pub down_idle_epochs: u32,
+    /// Idle draw of one parked node, watts.
+    pub warm_idle_w: f64,
+}
+
+impl Default for CapacitySection {
+    fn default() -> Self {
+        CapacitySection {
+            enabled: false,
+            warm: 0,
+            min_live: 1,
+            boot_s: 15.0,
+            check_epoch_s: 5.0,
+            up_backlog: 4.0,
+            down_backlog: 0.25,
+            down_idle_epochs: 3,
+            warm_idle_w: 350.0,
+        }
+    }
+}
+
+/// Overload-shedding defaults (`greenllm cluster`; off unless
+/// `enabled = true` or the `--shed` flag is given). Mirrors
+/// `coordinator::cluster::ShedConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShedSection {
+    /// Whether the ingress overload gate runs at all.
+    pub enabled: bool,
+    /// Mean prefill backlog per live node beyond which arrivals defer.
+    pub queue_depth: f64,
+    /// Base retry backoff, seconds (doubles per attempt).
+    pub backoff_s: f64,
+    /// Re-offers before a request is shed permanently.
+    pub max_retries: u32,
+}
+
+impl Default for ShedSection {
+    fn default() -> Self {
+        ShedSection {
+            enabled: false,
+            queue_depth: 12.0,
+            backoff_s: 2.0,
+            max_retries: 3,
+        }
+    }
+}
+
 /// Flight-recorder observability defaults (`greenllm cluster
 /// --trace-out` and `greenllm report`). The recorder itself is opt-in
 /// per run; this section only shapes it when attached.
@@ -368,6 +438,10 @@ pub struct Config {
     pub cluster: ClusterSection,
     /// Prefill/decode disaggregation defaults.
     pub disagg: DisaggSection,
+    /// Elastic-capacity autoscaler defaults.
+    pub capacity: CapacitySection,
+    /// Overload-shedding defaults.
+    pub shed: ShedSection,
     /// Flight-recorder observability defaults.
     pub obs: ObsSection,
     /// Simulated GPU hardware of this node (per-node in heterogeneous
@@ -397,6 +471,8 @@ impl Default for Config {
             prefill_opt: PrefillOptConfig::default(),
             cluster: ClusterSection::default(),
             disagg: DisaggSection::default(),
+            capacity: CapacitySection::default(),
+            shed: ShedSection::default(),
             obs: ObsSection::default(),
             gpu: GpuSpec::default(),
             closure: ClosureSection::default(),
@@ -453,6 +529,19 @@ impl Config {
                     | "disagg.pj_per_byte"
                     | "disagg.prefill_method"
                     | "disagg.decode_method"
+                    | "capacity.enabled"
+                    | "capacity.warm"
+                    | "capacity.min_live"
+                    | "capacity.boot_s"
+                    | "capacity.check_epoch_s"
+                    | "capacity.up_backlog"
+                    | "capacity.down_backlog"
+                    | "capacity.down_idle_epochs"
+                    | "capacity.warm_idle_w"
+                    | "shed.enabled"
+                    | "shed.queue_depth"
+                    | "shed.backoff_s"
+                    | "shed.max_retries"
                     | "obs.series_cap"
                     | "gpu.power_scale"
                     | "gpu.max_clock_mhz"
@@ -575,6 +664,45 @@ impl Config {
         if let Some(v) = doc.str("disagg.decode_method") {
             c.disagg.decode_method = v.to_string();
         }
+        if let Some(v) = doc.bool("capacity.enabled") {
+            c.capacity.enabled = v;
+        }
+        if let Some(v) = doc.i64("capacity.warm") {
+            c.capacity.warm = v as usize;
+        }
+        if let Some(v) = doc.i64("capacity.min_live") {
+            c.capacity.min_live = v as usize;
+        }
+        if let Some(v) = doc.f64("capacity.boot_s") {
+            c.capacity.boot_s = v;
+        }
+        if let Some(v) = doc.f64("capacity.check_epoch_s") {
+            c.capacity.check_epoch_s = v;
+        }
+        if let Some(v) = doc.f64("capacity.up_backlog") {
+            c.capacity.up_backlog = v;
+        }
+        if let Some(v) = doc.f64("capacity.down_backlog") {
+            c.capacity.down_backlog = v;
+        }
+        if let Some(v) = doc.i64("capacity.down_idle_epochs") {
+            c.capacity.down_idle_epochs = v as u32;
+        }
+        if let Some(v) = doc.f64("capacity.warm_idle_w") {
+            c.capacity.warm_idle_w = v;
+        }
+        if let Some(v) = doc.bool("shed.enabled") {
+            c.shed.enabled = v;
+        }
+        if let Some(v) = doc.f64("shed.queue_depth") {
+            c.shed.queue_depth = v;
+        }
+        if let Some(v) = doc.f64("shed.backoff_s") {
+            c.shed.backoff_s = v;
+        }
+        if let Some(v) = doc.i64("shed.max_retries") {
+            c.shed.max_retries = v as u32;
+        }
         if let Some(v) = doc.i64("obs.series_cap") {
             c.obs.series_cap = v as usize;
         }
@@ -655,6 +783,42 @@ impl Config {
                 return Err(format!("{key}: unknown method {m:?}"));
             }
         }
+        if self.capacity.enabled {
+            if self.capacity.min_live == 0 {
+                return Err("capacity.min_live must be >= 1".into());
+            }
+            if self.capacity.warm + self.capacity.min_live > self.cluster.nodes {
+                return Err(format!(
+                    "capacity.warm {} + min_live {} exceeds cluster.nodes {}",
+                    self.capacity.warm, self.capacity.min_live, self.cluster.nodes
+                ));
+            }
+            if !(self.capacity.boot_s.is_finite() && self.capacity.boot_s > 0.0)
+                || !(self.capacity.check_epoch_s.is_finite() && self.capacity.check_epoch_s > 0.0)
+            {
+                return Err("capacity.boot_s and check_epoch_s must be finite and > 0".into());
+            }
+            if self.capacity.down_backlog > self.capacity.up_backlog {
+                return Err(format!(
+                    "capacity.down_backlog {} must not exceed up_backlog {}",
+                    self.capacity.down_backlog, self.capacity.up_backlog
+                ));
+            }
+            if self.capacity.down_idle_epochs == 0 {
+                return Err("capacity.down_idle_epochs must be >= 1".into());
+            }
+            if !(self.capacity.warm_idle_w.is_finite() && self.capacity.warm_idle_w >= 0.0) {
+                return Err("capacity.warm_idle_w must be finite and >= 0".into());
+            }
+        }
+        if self.shed.enabled {
+            if self.shed.queue_depth.is_nan() || self.shed.queue_depth <= 0.0 {
+                return Err("shed.queue_depth must be > 0 (inf = never shed)".into());
+            }
+            if !(self.shed.backoff_s.is_finite() && self.shed.backoff_s > 0.0) {
+                return Err("shed.backoff_s must be finite and > 0".into());
+            }
+        }
         if self.obs.series_cap == 0 {
             return Err("obs.series_cap must be >= 1".into());
         }
@@ -731,6 +895,53 @@ mod tests {
         assert_eq!(c.decode_ctl.fine_step_mhz, 30);
         // Untouched defaults survive.
         assert_eq!(c.decode_ctl.fine_tick_s, 0.020);
+    }
+
+    #[test]
+    fn capacity_and_shed_sections_parse_and_validate() {
+        let doc = Document::parse(
+            r#"
+            [cluster]
+            nodes = 4
+            [capacity]
+            enabled = true
+            warm = 1
+            min_live = 2
+            boot_s = 10.0
+            up_backlog = 6.0
+            down_backlog = 0.5
+            [shed]
+            enabled = true
+            queue_depth = 8.0
+            max_retries = 2
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert!(c.capacity.enabled);
+        assert_eq!(c.capacity.warm, 1);
+        assert_eq!(c.capacity.min_live, 2);
+        assert_eq!(c.capacity.boot_s, 10.0);
+        // Untouched defaults survive.
+        assert_eq!(c.capacity.check_epoch_s, 5.0);
+        assert!(c.shed.enabled);
+        assert_eq!(c.shed.queue_depth, 8.0);
+        assert_eq!(c.shed.max_retries, 2);
+        // Disabled sections skip validation; enabled ones reject bad
+        // shapes loudly.
+        let bad = Document::parse(
+            "[capacity]\nenabled = true\nwarm = 9\nmin_live = 2\n",
+        )
+        .unwrap();
+        let err = Config::from_toml(&bad).unwrap_err();
+        assert!(err.contains("capacity.warm"), "got: {err}");
+        let off = Document::parse("[capacity]\nwarm = 9\n").unwrap();
+        assert!(Config::from_toml(&off).is_ok());
+        let bad_shed =
+            Document::parse("[shed]\nenabled = true\nqueue_depth = 0\n").unwrap();
+        assert!(Config::from_toml(&bad_shed)
+            .unwrap_err()
+            .contains("shed.queue_depth"));
     }
 
     #[test]

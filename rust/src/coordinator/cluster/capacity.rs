@@ -1,0 +1,236 @@
+//! Elastic-capacity knobs: the endogenous autoscaler
+//! ([`CapacityConfig`]) and graceful overload shedding at ingress
+//! ([`ShedConfig`]).
+//!
+//! Both are *off by default* — a [`ClusterConfig`](super::ClusterConfig)
+//! without them runs the event loop bit-exactly as before (tested). When
+//! enabled:
+//!
+//! * The **capacity controller** is a deterministic event source on the
+//!   shared cluster clock (ordered after migrations at equal timestamps).
+//!   Every `check_epoch_s` it compares mean prefill backlog per routable
+//!   node against `up_backlog`/`down_backlog` watermarks: above the high
+//!   watermark it boots one cold node (joining `boot_s` later, cold
+//!   telemetry); below the low watermark for `down_idle_epochs`
+//!   *consecutive* checks it parks one idle node (never below
+//!   `min_live`). The watermark gap plus the consecutive-epoch
+//!   requirement is the hysteresis that keeps it from flapping against
+//!   the power arbiter's epoch-by-epoch re-splits. Parked nodes draw
+//!   `warm_idle_w` each, metered into the cluster energy integral as
+//!   `warm_energy_j` — a warm pool is not free.
+//! * The **shed policy** gates admission when the same backlog signal
+//!   exceeds `queue_depth`: the arrival is deferred with exponential
+//!   backoff (`backoff_s`, doubling per attempt) and re-offered through
+//!   the retry event lane; after `max_retries` failed offers it is shed
+//!   permanently. Interactive (short/medium-prompt) requests get a 2×
+//!   deeper threshold, so batch-class long prompts shed first. Every
+//!   arrival lands in exactly one terminal bucket:
+//!   `completed + shed == arrived` (property-tested).
+
+/// Autoscaler configuration (`[capacity]` / `--capacity`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CapacityConfig {
+    /// Nodes that start *parked* (the highest-index ones): warm spares
+    /// the controller can boot under load. Must leave at least
+    /// `min_live` nodes live at t=0.
+    pub warm: usize,
+    /// Never park below this many live nodes.
+    pub min_live: usize,
+    /// Boot latency of a provisioned node, seconds (cold → serving).
+    pub boot_s: f64,
+    /// Controller check interval, seconds.
+    pub check_epoch_s: f64,
+    /// Scale up when mean prefill backlog per routable node exceeds this.
+    pub up_backlog: f64,
+    /// Scale down only while the same signal is below this (with
+    /// `up_backlog > down_backlog` the gap is the hysteresis band).
+    pub down_backlog: f64,
+    /// Consecutive below-watermark checks required before a park.
+    pub down_idle_epochs: u32,
+    /// Idle draw of one parked (warm) node, watts — metered into the
+    /// cluster energy integral as `warm_energy_j`.
+    pub warm_idle_w: f64,
+}
+
+impl Default for CapacityConfig {
+    fn default() -> Self {
+        CapacityConfig {
+            warm: 0,
+            min_live: 1,
+            boot_s: 15.0,
+            check_epoch_s: 5.0,
+            up_backlog: 4.0,
+            down_backlog: 0.25,
+            down_idle_epochs: 3,
+            warm_idle_w: 350.0,
+        }
+    }
+}
+
+impl CapacityConfig {
+    /// Reject shapes the controller cannot run against `nodes`.
+    pub fn validate(&self, nodes: usize) -> Result<(), String> {
+        if self.min_live == 0 {
+            return Err("capacity.min_live must be >= 1".into());
+        }
+        if self.min_live > nodes {
+            return Err(format!(
+                "capacity.min_live {} exceeds the cluster's {nodes} nodes",
+                self.min_live
+            ));
+        }
+        if self.warm + self.min_live > nodes {
+            return Err(format!(
+                "capacity.warm {} would park below min_live {} on a {nodes}-node cluster",
+                self.warm, self.min_live
+            ));
+        }
+        if !(self.boot_s.is_finite() && self.boot_s > 0.0) {
+            return Err("capacity.boot_s must be finite and > 0".into());
+        }
+        if !(self.check_epoch_s.is_finite() && self.check_epoch_s > 0.0) {
+            return Err("capacity.check_epoch_s must be finite and > 0".into());
+        }
+        if self.up_backlog.is_nan() || self.down_backlog.is_nan() {
+            return Err("capacity watermarks must not be NaN".into());
+        }
+        if self.down_backlog > self.up_backlog {
+            return Err(format!(
+                "capacity.down_backlog {} must not exceed up_backlog {} \
+                 (the gap is the hysteresis band)",
+                self.down_backlog, self.up_backlog
+            ));
+        }
+        if self.down_idle_epochs == 0 {
+            return Err("capacity.down_idle_epochs must be >= 1".into());
+        }
+        if !(self.warm_idle_w.is_finite() && self.warm_idle_w >= 0.0) {
+            return Err("capacity.warm_idle_w must be finite and >= 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// Overload-shedding configuration (`[shed]` / `--shed`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShedConfig {
+    /// Mean prefill backlog per live node beyond which arrivals are
+    /// deferred/shed. `f64::INFINITY` = never shed (inert).
+    pub queue_depth: f64,
+    /// Base retry backoff, seconds (doubles per attempt).
+    pub backoff_s: f64,
+    /// Re-offers before a request is shed permanently.
+    pub max_retries: u32,
+}
+
+impl Default for ShedConfig {
+    fn default() -> Self {
+        ShedConfig {
+            queue_depth: 12.0,
+            backoff_s: 2.0,
+            max_retries: 3,
+        }
+    }
+}
+
+impl ShedConfig {
+    /// Reject nonsensical shed policies.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.queue_depth.is_nan() || self.queue_depth <= 0.0 {
+            return Err("shed.queue_depth must be > 0 (inf = never shed)".into());
+        }
+        if !(self.backoff_s.is_finite() && self.backoff_s > 0.0) {
+            return Err("shed.backoff_s must be finite and > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Admission threshold for one request: interactive (short/medium
+    /// prompt) classes get twice the depth, so batch-class long prompts
+    /// shed first under pressure.
+    pub fn threshold_for(&self, interactive: bool) -> f64 {
+        if interactive {
+            self.queue_depth * 2.0
+        } else {
+            self.queue_depth
+        }
+    }
+
+    /// Backoff before re-offer `attempt` (0-based): exponential,
+    /// `backoff_s × 2^attempt`, capped at 2¹⁶× to stay finite.
+    pub fn backoff_for(&self, attempt: u32) -> f64 {
+        self.backoff_s * (1u64 << attempt.min(16)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_defaults_validate_and_hysteresis_band_is_enforced() {
+        let c = CapacityConfig::default();
+        c.validate(2).unwrap();
+        assert!(CapacityConfig { min_live: 0, ..c }.validate(2).is_err());
+        assert!(CapacityConfig { min_live: 3, ..c }.validate(2).is_err());
+        assert!(CapacityConfig { warm: 2, ..c }.validate(2).is_err());
+        CapacityConfig { warm: 1, ..c }.validate(2).unwrap();
+        assert!(CapacityConfig { boot_s: 0.0, ..c }.validate(2).is_err());
+        assert!(CapacityConfig {
+            check_epoch_s: f64::NAN,
+            ..c
+        }
+        .validate(2)
+        .is_err());
+        assert!(CapacityConfig {
+            up_backlog: 1.0,
+            down_backlog: 2.0,
+            ..c
+        }
+        .validate(2)
+        .is_err());
+        assert!(CapacityConfig {
+            down_idle_epochs: 0,
+            ..c
+        }
+        .validate(2)
+        .is_err());
+        assert!(CapacityConfig {
+            warm_idle_w: -1.0,
+            ..c
+        }
+        .validate(2)
+        .is_err());
+    }
+
+    #[test]
+    fn shed_thresholds_and_backoff() {
+        let s = ShedConfig::default();
+        s.validate().unwrap();
+        assert_eq!(s.threshold_for(false), 12.0);
+        assert_eq!(s.threshold_for(true), 24.0);
+        assert_eq!(s.backoff_for(0), 2.0);
+        assert_eq!(s.backoff_for(1), 4.0);
+        assert_eq!(s.backoff_for(3), 16.0);
+        assert!(s.backoff_for(64).is_finite());
+        // Infinite depth is the inert spelling and validates.
+        ShedConfig {
+            queue_depth: f64::INFINITY,
+            ..s
+        }
+        .validate()
+        .unwrap();
+        assert!(ShedConfig {
+            queue_depth: 0.0,
+            ..s
+        }
+        .validate()
+        .is_err());
+        assert!(ShedConfig {
+            backoff_s: 0.0,
+            ..s
+        }
+        .validate()
+        .is_err());
+    }
+}

@@ -1,25 +1,32 @@
 //! The cluster event loop: N node engines interleaved on one virtual
 //! clock.
 //!
-//! The loop merges five deterministic event sources:
+//! The loop merges the deterministic event sources:
 //! * the arrival stream (the trace, pre-scheduled into a cluster queue),
 //! * the power arbiter's control epochs,
-//! * the fault plan's node-loss / node-recovery events (chaos layer),
+//! * the fault plan's node transitions (chaos layer: loss, recovery,
+//!   spot-preemption drain notices, straggler degrade/restore),
 //! * stream migrations (disaggregated clusters: a finished prefill's KV
 //!   landing on its decode node after the modeled link latency),
+//! * the capacity controller's check epochs and node boots (elastic
+//!   capacity: an endogenous autoscaler over the same clock),
+//! * shed-policy retry offers (overload: deferred arrivals re-offered
+//!   with backoff),
 //! * each node engine's own pending events.
 //!
 //! At every iteration the earliest source wins; ties go cluster-first and
 //! then lowest-node-first, so the whole simulation is a pure function of
 //! (trace, config, fault plan, seed). Exact-equal-timestamp cluster
 //! events resolve in scheduling-order: arrivals, then faults, then power
-//! epochs, then migrations (runtime-scheduled, so they always draw the
-//! highest sequence numbers — a migration landing at the instant its
-//! target dies sees the post-fault alive set and relays). An arriving
-//! request is assigned by the balancer from a *live* telemetry snapshot —
-//! which carries liveness and the arbiter's current watt grants — and
-//! injected into the chosen engine through the priority event lane, which
-//! makes a 1-node cluster replay bit-identical to a plain
+//! epochs, then capacity checks, then everything runtime-scheduled
+//! (migrations, retries, boots, re-armed epochs/checks) in the order it
+//! was scheduled — so they always draw the highest sequence numbers, and
+//! a migration landing at the instant its target dies sees the
+//! post-fault alive set and relays. An arriving request is assigned by
+//! the balancer from a *live* telemetry snapshot — which carries
+//! routability and the arbiter's current watt grants — and injected into
+//! the chosen engine through the priority event lane, which makes a
+//! 1-node cluster replay bit-identical to a plain
 //! [`run`](crate::coordinator::run).
 //!
 //! **Disaggregation (§migration contract).** With a [`DisaggConfig`] the
@@ -37,6 +44,25 @@
 //! delivery. If every routable node is transiently down the work is
 //! *deferred* — held by the loop and re-offered at the next recovery —
 //! never panicked on.
+//!
+//! **Elastic capacity (§degradation contract).** Three liveness shades,
+//! strictly ordered: *routable* (balancer-visible) ⊆ *alive* (still
+//! serving its own work) ⊆ *provisioned*. A spot-preemption notice
+//! (`FaultKind::Drain`) clears routable but not alive — the node drains
+//! what it owns before the paired `Down` yanks it. A straggler
+//! (`FaultKind::Slow`) stays both alive and routable but runs with a
+//! capped ladder and a perf slowdown, so governors and the arbiter must
+//! cope with a *slow* node, not just a dead one. The capacity controller
+//! ([`CapacityConfig`](super::CapacityConfig)) parks idle nodes cold
+//! (alive = false, warm idle watts metered into `warm_energy_j`) and
+//! boots them back with a `boot_s` latency when backlog pressure crosses
+//! its watermarks; a fault `Down` on a cold node wins over any pending
+//! boot. The shed policy ([`ShedConfig`](super::ShedConfig)) gates
+//! ingress when backlog per routable node exceeds its depth: arrivals
+//! are re-offered through `Retry` events with exponential backoff, then
+//! shed permanently — every request ends completed or shed, never lost
+//! (`completed + shed == arrived`, property-tested). With none of these
+//! knobs set the loop is bit-exact with the pre-elasticity behavior.
 //!
 //! **Scheduling is O(log N) per event (§Perf).** The next engine to step
 //! comes from a [`SourceHeap`] keyed on each engine's next-event time;
@@ -72,7 +98,7 @@ use crate::coordinator::engine::{Engine, MigratedStream, RunOptions, RunResult};
 use crate::metrics::Histogram;
 use crate::obs::{FlightRecorder, NoopRecorder, Recorder, SharedRecorder};
 use crate::sim::{self, EventQueue, SourceHeap};
-use crate::workload::request::{Request, Trace};
+use crate::workload::request::{Request, RouteClass, Trace};
 
 #[derive(Debug, Clone, Copy)]
 enum ClusterEv {
@@ -84,6 +110,14 @@ enum ClusterEv {
     /// A migrated stream's KV transfer completes: index into the run's
     /// pending-migration list (runtime-scheduled at prefill completion).
     Migrate(usize),
+    /// A shed-policy re-offer of trace request `.0` (attempt `.1`,
+    /// 1-based at delivery — runtime-scheduled with backoff).
+    Retry(usize, u32),
+    /// Capacity-controller check epoch (re-armed each firing).
+    Capacity,
+    /// A provisioned node finishes booting (runtime-scheduled
+    /// `boot_s` after the controller's scale-up decision).
+    CapacityBoot(usize),
 }
 
 /// One in-flight prefill→decode handoff (indexed by `ClusterEv::Migrate`;
@@ -175,9 +209,14 @@ fn snapshot<R: Recorder>(e: &Engine<'_, R>, alive: bool, granted_w: f64) -> Node
     }
 }
 
+/// Balancer-facing snapshots. `routable` — not raw liveness — feeds the
+/// `alive` field, so draining (spot notice) and cold-parked nodes are
+/// invisible to placement while still finishing or holding their own
+/// work. Without elasticity knobs `routable == alive` and this is the
+/// pre-elasticity snapshot, bit for bit.
 fn snapshot_all<R: Recorder>(
     engines: &[Engine<'_, R>],
-    alive: &[bool],
+    routable: &[bool],
     granted_w: &[f64],
     states: &mut Vec<NodeState>,
 ) {
@@ -186,37 +225,44 @@ fn snapshot_all<R: Recorder>(
         engines
             .iter()
             .enumerate()
-            .map(|(i, e)| snapshot(e, alive[i], granted_w[i])),
+            .map(|(i, e)| snapshot(e, routable[i], granted_w[i])),
     );
 }
 
 /// Ingress pick: the balancer sees `states[..ingress]` (the prefill pool
 /// when disaggregated, the whole cluster otherwise). If the balancer
-/// defers — only legitimate when every ingress node is down — fall back
-/// to the lowest-index alive node anywhere: each node is a full engine,
-/// so a decode node can colocate in a pinch (degraded mode). `None` only
-/// when the entire cluster is dark; the caller then defers the request
-/// until the next recovery.
+/// defers — only legitimate when every ingress node is unroutable — fall
+/// back to the lowest-index routable node anywhere: each node is a full
+/// engine, so a decode node can colocate in a pinch (degraded mode). If
+/// *nothing* is routable, fall back further to any node that is still
+/// `alive` — a draining node serves new work rather than defer it.
+/// `None` only when the entire cluster is dark; the caller then defers
+/// the request until the next recovery.
 fn pick_ingress(
     lb: &mut dyn Balancer,
     t: f64,
     req: &Request,
     states: &[NodeState],
     ingress: usize,
+    alive: &[bool],
 ) -> Option<usize> {
     if let Some(node) = lb.assign(t, req, &states[..ingress]) {
         return Some(node);
     }
     debug_assert!(
         states[..ingress].iter().all(|s| !s.alive),
-        "balancer deferred with an alive ingress node"
+        "balancer deferred with a routable ingress node"
     );
-    states.iter().position(|s| s.alive)
+    if let Some(node) = states.iter().position(|s| s.alive) {
+        return Some(node);
+    }
+    alive.iter().position(|&a| a)
 }
 
 /// Run `trace` across the cluster as one interleaved event-driven
-/// simulation, honoring the config's node specs, fault plan and arbiter
-/// strategy. Panics on an invalid fault plan (validate at the CLI for a
+/// simulation, honoring the config's node specs, fault plan, capacity
+/// controller, shed policy and arbiter strategy. Panics on an invalid
+/// fault plan or capacity/shed config (validate at the CLI for a
 /// friendly error).
 pub fn run_cluster(ccfg: &ClusterConfig, trace: &Trace, opts: &RunOptions) -> ClusterResult {
     run_cluster_impl::<HeapSelector, _>(ccfg, trace, opts, NoopRecorder)
@@ -272,6 +318,16 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
     ccfg.faults
         .validate(ccfg.nodes)
         .unwrap_or_else(|e| panic!("invalid fault plan: {e}"));
+    if let Some(cc) = &ccfg.capacity {
+        cc.validate(ccfg.nodes)
+            .unwrap_or_else(|e| panic!("invalid capacity config: {e}"));
+    }
+    if let Some(sc) = &ccfg.shed {
+        sc.validate()
+            .unwrap_or_else(|e| panic!("invalid shed config: {e}"));
+    }
+    let capacity = ccfg.capacity;
+    let shed = ccfg.shed;
     // Disaggregation: first `prefill_pool` nodes prefill + migrate out,
     // the rest decode. 0 = colocated (disagg unset, or a 1-node cluster
     // that cannot split) — every migration path below is then dormant.
@@ -341,6 +397,33 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
     };
     let mut lb = balancer::build(ccfg.lb, ingress, tbt_target_s, ccfg.pool_ratio);
     let mut alive = vec![true; ccfg.nodes];
+    // Balancer-visible liveness: alive minus draining (spot notice)
+    // minus cold-parked. Maintained at every transition; feeds every
+    // telemetry snapshot.
+    let mut routable = vec![true; ccfg.nodes];
+    // Spot-preemption notice state: alive, finishing its own work,
+    // taking nothing new.
+    let mut draining = vec![false; ccfg.nodes];
+    // Capacity-controller state: parked-cold nodes, their park instant
+    // (warm idle accrues from it), and in-flight boots.
+    let mut is_cold = vec![false; ccfg.nodes];
+    let mut cold_since = vec![0.0f64; ccfg.nodes];
+    let mut booting = vec![false; ccfg.nodes];
+    let mut warm_energy_j: f64 = 0.0;
+    // Warm pool: the controller starts with the highest-index nodes
+    // parked — drained cold *before* the arbiter splits its budget, so
+    // the initial grants only cover live nodes. Their idle draw is
+    // metered into `warm_energy_j` from t = 0.
+    if let Some(cc) = &capacity {
+        for n in ccfg.nodes - cc.warm..ccfg.nodes {
+            let mut fresh: Vec<Request> = Vec::new();
+            engines[n].fail_into(0.0, &mut fresh);
+            debug_assert!(fresh.is_empty(), "fresh engine drained work");
+            alive[n] = false;
+            routable[n] = false;
+            is_cold[n] = true;
+        }
+    }
     // Latest worst-case watt grant per node (∞ = uncapped); the
     // `powergrant` balancer routes on this.
     let mut granted_w = vec![f64::INFINITY; ccfg.nodes];
@@ -365,14 +448,21 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
     // (migrations on the wire, fault transitions) plus the epoch-cadence
     // telemetry sweep. `sample_all` seeds every counter track at t = 0.
     let mut crec = rec;
+    for n in 0..ccfg.nodes {
+        if is_cold[n] {
+            crec.capacity(n, 0.0, "park");
+        }
+    }
     sample_all(&mut engines, 0.0, &granted_w);
 
     // Cluster-level queue. Scheduling order fixes the sequence numbers,
     // which fix exact-equal-timestamp ordering: all arrivals first, then
-    // fault transitions, then power epochs (rescheduled epochs draw ever
-    // higher sequence numbers, so a fault coinciding with an epoch always
-    // resolves fault-first — the epoch then sees the post-fault alive
-    // set, never granting watts to a node that died at the same instant).
+    // fault transitions, then power epochs, then capacity checks
+    // (rescheduled epochs/checks draw ever higher sequence numbers, so a
+    // fault coinciding with an epoch always resolves fault-first — the
+    // epoch then sees the post-fault alive set, never granting watts to
+    // a node that died at the same instant; a capacity check likewise
+    // sees the instant's post-migration world).
     let mut q: EventQueue<ClusterEv> = EventQueue::new();
     for (i, r) in trace.requests.iter().enumerate() {
         q.schedule(r.arrival_s, ClusterEv::Arrive(i));
@@ -382,6 +472,9 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
     }
     if arbiter.is_some() {
         q.schedule(ccfg.power_epoch_s, ClusterEv::PowerEpoch);
+    }
+    if let Some(cc) = &capacity {
+        q.schedule(cc.check_epoch_s, ClusterEv::Capacity);
     }
 
     let total = trace.requests.len() as u64;
@@ -396,6 +489,18 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
     // completions only move inside Engine::step, so the pre-PR5 O(N)
     // per-event re-sum is not needed on the hot path.
     let mut done: u64 = 0;
+    // Shed-policy ledger: permanently shed arrivals (terminal — they
+    // count against the loop's exit condition), backoff re-offers
+    // issued, and how many times work was deferred for lack of any
+    // target. `done + shed_count` reaching `total` ends the run.
+    let mut shed_count: u64 = 0;
+    let mut shed_retries: u64 = 0;
+    let mut deferred_arrivals: u64 = 0;
+    // Capacity-controller ledger: completed boots, parks, and the
+    // consecutive below-watermark check streak (the hysteresis counter).
+    let mut provisions: u64 = 0;
+    let mut parks: u64 = 0;
+    let mut idle_checks: u32 = 0;
     // Disaggregation state: in-flight handoffs (`pending`, indexed by
     // `ClusterEv::Migrate`; relays re-target an entry in place), handoffs
     // with no routable target (`parked`, re-offered at the next
@@ -413,7 +518,7 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
     let mut sel = S::new(ccfg.nodes);
     sel.refresh_all(&engines);
 
-    while done < total {
+    while done + shed_count < total {
         let next_node = sel.next(&engines);
         // Cluster events win exact-time ties: an arrival at t must be
         // assigned before any node processes its own event at t (the order
@@ -430,10 +535,66 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
         };
         if take_cluster {
             let (t, ev) = q.pop().expect("peeked");
-            match ev {
-                ClusterEv::Arrive(i) => {
-                    snapshot_all(&engines, &alive, &granted_w, &mut states);
-                    match pick_ingress(lb.as_mut(), t, &trace.requests[i], &states, ingress) {
+            // Fresh arrivals and shed-policy re-offers share one
+            // admission path: normalize to (request index, attempt).
+            let admission = match ev {
+                ClusterEv::Arrive(i) => Some((i, 0u32)),
+                ClusterEv::Retry(i, attempt) => Some((i, attempt)),
+                _ => None,
+            };
+            if let Some((i, attempt)) = admission {
+                // Overload gate: mean prefill backlog per routable node
+                // against the class-aware depth (long prompts shed
+                // first). No policy, no gate — the pre-elasticity path.
+                let over_depth = match &shed {
+                    Some(sc) => {
+                        let (mut live, mut backlog) = (0usize, 0usize);
+                        for (n, e) in engines.iter().enumerate() {
+                            if routable[n] {
+                                live += 1;
+                                backlog += e.prefill_backlog();
+                            }
+                        }
+                        let pressure = if live == 0 {
+                            f64::INFINITY
+                        } else {
+                            backlog as f64 / live as f64
+                        };
+                        let interactive =
+                            trace.requests[i].route_class() == RouteClass::ShortMedium;
+                        pressure > sc.threshold_for(interactive)
+                    }
+                    None => false,
+                };
+                if over_depth {
+                    let sc = shed.as_ref().expect("over_depth implies a shed policy");
+                    let rid = trace.requests[i].id;
+                    if attempt < sc.max_retries {
+                        // Defer with backoff: the request re-enters
+                        // through the Retry lane and faces the gate
+                        // again with whatever capacity exists then.
+                        shed_retries += 1;
+                        crec.admission_retry(t, rid, attempt + 1);
+                        q.schedule(
+                            t + sc.backoff_for(attempt),
+                            ClusterEv::Retry(i, attempt + 1),
+                        );
+                    } else {
+                        // Out of retries: shed permanently. Terminal —
+                        // conservation counts it next to `completed`.
+                        shed_count += 1;
+                        crec.shed(t, rid);
+                    }
+                } else {
+                    snapshot_all(&engines, &routable, &granted_w, &mut states);
+                    match pick_ingress(
+                        lb.as_mut(),
+                        t,
+                        &trace.requests[i],
+                        &states,
+                        ingress,
+                        &alive,
+                    ) {
                         Some(node) => {
                             assert!(node < ccfg.nodes, "balancer returned node {node}");
                             assert!(alive[node], "balancer routed to dead node {node}");
@@ -441,75 +602,366 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
                             assignment[node] += 1;
                             sel.update(node, &engines);
                         }
-                        // Whole cluster dark: hold the request, re-offer it
-                        // at the next recovery.
-                        None => deferred.push(trace.requests[i].clone()),
-                    }
-                }
-                ClusterEv::PowerEpoch => {
-                    if let Some(a) = arbiter.as_mut() {
-                        a.epoch(t, &mut engines, &alive);
-                        if let Some(g) = a.latest_grants() {
-                            granted_w.copy_from_slice(g);
+                        // Whole cluster dark: hold the request, re-offer
+                        // it at the next recovery.
+                        None => {
+                            deferred_arrivals += 1;
+                            deferred.push(trace.requests[i].clone());
                         }
-                        sample_all(&mut engines, t, &granted_w);
-                        q.schedule_in(ccfg.power_epoch_s, ClusterEv::PowerEpoch);
-                        sel.refresh_all(&engines);
                     }
                 }
-                ClusterEv::Fault(i) => {
-                    let fev = &ccfg.faults.events[i];
-                    fault_events += 1;
-                    match fev.kind {
-                        FaultKind::Down => {
-                            alive[fev.node] = false;
-                            crec.fault(fev.node, t, false);
-                            debug_assert!(drain_buf.is_empty());
-                            engines[fev.node].fail_into(t, &mut drain_buf);
-                            assignment[fev.node] -= drain_buf.len();
-                            rerouted += drain_buf.len() as u64;
-                            sel.update(fev.node, &engines);
-                            // Re-split the budget over the survivors right
-                            // away (frees the dead node's floor) so the
-                            // re-routes below see fresh grants.
-                            if let Some(a) = arbiter.as_mut() {
-                                a.rearbitrate(t, &mut engines, &alive);
-                                if let Some(g) = a.latest_grants() {
-                                    granted_w.copy_from_slice(g);
-                                }
-                                sample_all(&mut engines, t, &granted_w);
-                                sel.refresh_all(&engines);
+            } else {
+                match ev {
+                    ClusterEv::Arrive(..) | ClusterEv::Retry(..) => {
+                        unreachable!("admission events handled above")
+                    }
+                    ClusterEv::PowerEpoch => {
+                        if let Some(a) = arbiter.as_mut() {
+                            a.epoch(t, &mut engines, &alive);
+                            if let Some(g) = a.latest_grants() {
+                                granted_w.copy_from_slice(g);
                             }
-                            // Re-home every incomplete request through the
-                            // live balancer (states re-snapshotted per
-                            // request: earlier re-routes shift the load the
-                            // later ones see).
-                            for req in drain_buf.drain(..) {
-                                snapshot_all(&engines, &alive, &granted_w, &mut states);
-                                match pick_ingress(lb.as_mut(), t, &req, &states, ingress) {
-                                    Some(node) => {
-                                        assert!(
-                                            node < ccfg.nodes && alive[node],
-                                            "re-route picked dead node {node}"
+                            sample_all(&mut engines, t, &granted_w);
+                            q.schedule_in(ccfg.power_epoch_s, ClusterEv::PowerEpoch);
+                            sel.refresh_all(&engines);
+                        }
+                    }
+                    ClusterEv::Fault(i) => {
+                        let fev = &ccfg.faults.events[i];
+                        fault_events += 1;
+                        match fev.kind {
+                            FaultKind::Down => {
+                                draining[fev.node] = false;
+                                routable[fev.node] = false;
+                                if is_cold[fev.node] {
+                                    // The capacity controller already
+                                    // drained and powered this node off;
+                                    // the fault just makes the loss real.
+                                    // Meter its warm time and forget it
+                                    // was warm — a pending boot then
+                                    // no-ops (the boot handler checks
+                                    // `is_cold`).
+                                    if let Some(cc) = &capacity {
+                                        warm_energy_j +=
+                                            cc.warm_idle_w * (t - cold_since[fev.node]);
+                                    }
+                                    is_cold[fev.node] = false;
+                                    alive[fev.node] = false;
+                                    crec.fault(fev.node, t, false);
+                                } else {
+                                    alive[fev.node] = false;
+                                    crec.fault(fev.node, t, false);
+                                    debug_assert!(drain_buf.is_empty());
+                                    engines[fev.node].fail_into(t, &mut drain_buf);
+                                    assignment[fev.node] -= drain_buf.len();
+                                    rerouted += drain_buf.len() as u64;
+                                    sel.update(fev.node, &engines);
+                                    // Re-split the budget over the
+                                    // survivors right away (frees the dead
+                                    // node's floor) so the re-routes below
+                                    // see fresh grants.
+                                    if let Some(a) = arbiter.as_mut() {
+                                        a.rearbitrate(t, &mut engines, &alive);
+                                        if let Some(g) = a.latest_grants() {
+                                            granted_w.copy_from_slice(g);
+                                        }
+                                        sample_all(&mut engines, t, &granted_w);
+                                        sel.refresh_all(&engines);
+                                    }
+                                    // Re-home every incomplete request
+                                    // through the live balancer (states
+                                    // re-snapshotted per request: earlier
+                                    // re-routes shift the load the later
+                                    // ones see).
+                                    for req in drain_buf.drain(..) {
+                                        snapshot_all(
+                                            &engines, &routable, &granted_w, &mut states,
                                         );
-                                        engines[node].inject(t, req);
-                                        assignment[node] += 1;
-                                        sel.update(node, &engines);
+                                        match pick_ingress(
+                                            lb.as_mut(),
+                                            t,
+                                            &req,
+                                            &states,
+                                            ingress,
+                                            &alive,
+                                        ) {
+                                            Some(node) => {
+                                                assert!(
+                                                    node < ccfg.nodes && alive[node],
+                                                    "re-route picked dead node {node}"
+                                                );
+                                                engines[node].inject(t, req);
+                                                assignment[node] += 1;
+                                                sel.update(node, &engines);
+                                            }
+                                            None => {
+                                                deferred_arrivals += 1;
+                                                deferred.push(req);
+                                            }
+                                        }
                                     }
-                                    None => deferred.push(req),
                                 }
                             }
+                            FaultKind::Up => {
+                                alive[fev.node] = true;
+                                routable[fev.node] = true;
+                                draining[fev.node] = false;
+                                crec.fault(fev.node, t, true);
+                                engines[fev.node].recover(t);
+                                sel.update(fev.node, &engines);
+                                // `recover` cleared the node's clamp; under
+                                // a cap that would let the cluster exceed
+                                // its budget until the next epoch.
+                                // Re-arbitrate at the rejoin instant (boost
+                                // clocks have had zero seconds to draw
+                                // anything yet).
+                                if let Some(a) = arbiter.as_mut() {
+                                    a.rearbitrate(t, &mut engines, &alive);
+                                    if let Some(g) = a.latest_grants() {
+                                        granted_w.copy_from_slice(g);
+                                    }
+                                    sample_all(&mut engines, t, &granted_w);
+                                    sel.refresh_all(&engines);
+                                }
+                                // A node is back: re-offer everything held
+                                // while the cluster was dark. Arrivals
+                                // first (their sequence numbers predate the
+                                // parked handoffs), then parked migrations.
+                                for req in std::mem::take(&mut deferred) {
+                                    snapshot_all(&engines, &routable, &granted_w, &mut states);
+                                    match pick_ingress(
+                                        lb.as_mut(),
+                                        t,
+                                        &req,
+                                        &states,
+                                        ingress,
+                                        &alive,
+                                    ) {
+                                        Some(node) => {
+                                            engines[node].inject(t, req);
+                                            assignment[node] += 1;
+                                            sel.update(node, &engines);
+                                        }
+                                        None => {
+                                            deferred_arrivals += 1;
+                                            deferred.push(req);
+                                        }
+                                    }
+                                }
+                                for idx in std::mem::take(&mut parked) {
+                                    let from = pending[idx].from;
+                                    if !alive[from] {
+                                        // The KV died with the sender:
+                                        // full re-prefill through ingress.
+                                        let req = pending[idx].req.clone();
+                                        rerouted += 1;
+                                        snapshot_all(
+                                            &engines, &routable, &granted_w, &mut states,
+                                        );
+                                        match pick_ingress(
+                                            lb.as_mut(),
+                                            t,
+                                            &req,
+                                            &states,
+                                            ingress,
+                                            &alive,
+                                        ) {
+                                            Some(node) => {
+                                                crec.re_prefill(node, t, req.id);
+                                                node_migration[node].re_prefills += 1;
+                                                engines[node].inject(t, req);
+                                                assignment[node] += 1;
+                                                sel.update(node, &engines);
+                                            }
+                                            None => {
+                                                deferred_arrivals += 1;
+                                                deferred.push(req);
+                                            }
+                                        }
+                                        continue;
+                                    }
+                                    snapshot_all(&engines, &routable, &granted_w, &mut states);
+                                    match disagg::eco_route(&states, prefill_pool, tbt_target_s)
+                                    {
+                                        Some(nt) => {
+                                            let bytes = link.kv_bytes(
+                                                pending[idx].req.prompt_len as f64 + 1.0,
+                                            );
+                                            let j = link.transfer_j(bytes);
+                                            engines[from].add_transfer_energy(j);
+                                            engines[nt].add_transfer_energy(j);
+                                            migration.kv_bytes += bytes;
+                                            migration.transfer_j += 2.0 * j;
+                                            let rid = pending[idx].req.id;
+                                            if pending[idx].target == usize::MAX {
+                                                migration.count += 1; // first send
+                                                node_migration[from].sends += 1;
+                                                if R::ENABLED {
+                                                    let dt = link.transfer_s(bytes);
+                                                    crec.migrate_send(
+                                                        from,
+                                                        nt,
+                                                        t,
+                                                        rid,
+                                                        bytes,
+                                                        t + dt,
+                                                    );
+                                                }
+                                            } else {
+                                                migration.relays += 1;
+                                                node_migration[from].relays += 1;
+                                                crec.migrate_relay(from, nt, t, rid);
+                                            }
+                                            pending[idx].target = nt;
+                                            q.schedule(
+                                                t + link.transfer_s(bytes),
+                                                ClusterEv::Migrate(idx),
+                                            );
+                                        }
+                                        None => parked.push(idx),
+                                    }
+                                }
+                            }
+                            FaultKind::Drain => {
+                                // Spot-preemption notice: the node keeps
+                                // serving everything it already owns but
+                                // stops taking new work. The paired Down
+                                // (scheduled by `preempt@`) makes the loss
+                                // real later; by then the backlog has
+                                // mostly drained instead of being yanked.
+                                draining[fev.node] = true;
+                                routable[fev.node] = false;
+                                crec.capacity(fev.node, t, "drain");
+                            }
+                            FaultKind::Slow => {
+                                // Straggler: the node keeps running,
+                                // degraded. Clocks re-clamp immediately;
+                                // nothing queues or unqueues, so the
+                                // selector key is untouched.
+                                engines[fev.node].degrade(t, fev.factor, fev.cap_mhz);
+                                crec.capacity(fev.node, t, "slow");
+                            }
+                            FaultKind::Restore => {
+                                engines[fev.node].restore_degrade(t);
+                                crec.capacity(fev.node, t, "restore");
+                            }
                         }
-                        FaultKind::Up => {
-                            alive[fev.node] = true;
-                            crec.fault(fev.node, t, true);
-                            engines[fev.node].recover(t);
-                            sel.update(fev.node, &engines);
-                            // `recover` cleared the node's clamp; under a
-                            // cap that would let the cluster exceed its
-                            // budget until the next epoch. Re-arbitrate at
-                            // the rejoin instant (boost clocks have had
-                            // zero seconds to draw anything yet).
+                    }
+                    ClusterEv::Capacity => {
+                        let cc = capacity.expect("capacity event without a controller");
+                        let (mut live, mut backlog) = (0usize, 0usize);
+                        for (n, e) in engines.iter().enumerate() {
+                            if routable[n] {
+                                live += 1;
+                                backlog += e.prefill_backlog();
+                            }
+                        }
+                        let pressure = if live == 0 {
+                            f64::INFINITY
+                        } else {
+                            backlog as f64 / live as f64
+                        };
+                        if pressure > cc.up_backlog {
+                            idle_checks = 0;
+                            // Scale up: boot the lowest-index cold node
+                            // (determinism), one per check — the boot
+                            // latency is the natural ramp limiter.
+                            if let Some(n) =
+                                (0..ccfg.nodes).find(|&n| is_cold[n] && !booting[n])
+                            {
+                                booting[n] = true;
+                                crec.capacity(n, t, "boot");
+                                q.schedule(t + cc.boot_s, ClusterEv::CapacityBoot(n));
+                            }
+                        } else if pressure < cc.down_backlog {
+                            idle_checks += 1;
+                            let alive_count = alive.iter().filter(|a| **a).count();
+                            if idle_checks >= cc.down_idle_epochs && alive_count > cc.min_live
+                            {
+                                // Scale down: park the highest-index node
+                                // that is verifiably idle (never a
+                                // draining one — it's already leaving).
+                                if let Some(n) = (0..ccfg.nodes).rev().find(|&n| {
+                                    alive[n]
+                                        && !draining[n]
+                                        && engines[n].prefill_backlog() == 0
+                                        && engines[n].active_streams() == 0
+                                }) {
+                                    idle_checks = 0;
+                                    parks += 1;
+                                    alive[n] = false;
+                                    routable[n] = false;
+                                    is_cold[n] = true;
+                                    cold_since[n] = t;
+                                    crec.capacity(n, t, "park");
+                                    debug_assert!(drain_buf.is_empty());
+                                    engines[n].fail_into(t, &mut drain_buf);
+                                    assignment[n] -= drain_buf.len();
+                                    rerouted += drain_buf.len() as u64;
+                                    sel.update(n, &engines);
+                                    if let Some(a) = arbiter.as_mut() {
+                                        a.rearbitrate(t, &mut engines, &alive);
+                                        if let Some(g) = a.latest_grants() {
+                                            granted_w.copy_from_slice(g);
+                                        }
+                                        sample_all(&mut engines, t, &granted_w);
+                                        sel.refresh_all(&engines);
+                                    }
+                                    // The park predicate requires an idle
+                                    // node, but an arrival injected at this
+                                    // exact instant could still be queued —
+                                    // re-home it, never drop it.
+                                    for req in drain_buf.drain(..) {
+                                        snapshot_all(
+                                            &engines, &routable, &granted_w, &mut states,
+                                        );
+                                        match pick_ingress(
+                                            lb.as_mut(),
+                                            t,
+                                            &req,
+                                            &states,
+                                            ingress,
+                                            &alive,
+                                        ) {
+                                            Some(node) => {
+                                                engines[node].inject(t, req);
+                                                assignment[node] += 1;
+                                                sel.update(node, &engines);
+                                            }
+                                            None => {
+                                                deferred_arrivals += 1;
+                                                deferred.push(req);
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        } else {
+                            // Inside the hysteresis band: reset the streak
+                            // so only a *sustained* lull parks capacity.
+                            idle_checks = 0;
+                        }
+                        q.schedule_in(cc.check_epoch_s, ClusterEv::Capacity);
+                    }
+                    ClusterEv::CapacityBoot(n) => {
+                        booting[n] = false;
+                        // A fault may have downed the node mid-boot
+                        // (`is_cold` cleared there); the provision then
+                        // evaporates — the fault plan wins.
+                        if is_cold[n] {
+                            let cc = capacity.expect("boot event without a controller");
+                            warm_energy_j += cc.warm_idle_w * (t - cold_since[n]);
+                            is_cold[n] = false;
+                            alive[n] = true;
+                            routable[n] = true;
+                            provisions += 1;
+                            crec.capacity(n, t, "join");
+                            engines[n].recover(t);
+                            sel.update(n, &engines);
+                            // Same contract as a fault recovery: re-clamp
+                            // the rejoining node under the cap, then
+                            // re-offer everything held for lack of a
+                            // target.
                             if let Some(a) = arbiter.as_mut() {
                                 a.rearbitrate(t, &mut engines, &alive);
                                 if let Some(g) = a.latest_grants() {
@@ -518,30 +970,41 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
                                 sample_all(&mut engines, t, &granted_w);
                                 sel.refresh_all(&engines);
                             }
-                            // A node is back: re-offer everything held
-                            // while the cluster was dark. Arrivals first
-                            // (their sequence numbers predate the parked
-                            // handoffs), then parked migrations.
                             for req in std::mem::take(&mut deferred) {
-                                snapshot_all(&engines, &alive, &granted_w, &mut states);
-                                match pick_ingress(lb.as_mut(), t, &req, &states, ingress) {
+                                snapshot_all(&engines, &routable, &granted_w, &mut states);
+                                match pick_ingress(
+                                    lb.as_mut(),
+                                    t,
+                                    &req,
+                                    &states,
+                                    ingress,
+                                    &alive,
+                                ) {
                                     Some(node) => {
                                         engines[node].inject(t, req);
                                         assignment[node] += 1;
                                         sel.update(node, &engines);
                                     }
-                                    None => deferred.push(req),
+                                    None => {
+                                        deferred_arrivals += 1;
+                                        deferred.push(req);
+                                    }
                                 }
                             }
                             for idx in std::mem::take(&mut parked) {
                                 let from = pending[idx].from;
                                 if !alive[from] {
-                                    // The KV died with the sender: full
-                                    // re-prefill through ingress.
                                     let req = pending[idx].req.clone();
                                     rerouted += 1;
-                                    snapshot_all(&engines, &alive, &granted_w, &mut states);
-                                    match pick_ingress(lb.as_mut(), t, &req, &states, ingress) {
+                                    snapshot_all(&engines, &routable, &granted_w, &mut states);
+                                    match pick_ingress(
+                                        lb.as_mut(),
+                                        t,
+                                        &req,
+                                        &states,
+                                        ingress,
+                                        &alive,
+                                    ) {
                                         Some(node) => {
                                             crec.re_prefill(node, t, req.id);
                                             node_migration[node].re_prefills += 1;
@@ -549,15 +1012,19 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
                                             assignment[node] += 1;
                                             sel.update(node, &engines);
                                         }
-                                        None => deferred.push(req),
+                                        None => {
+                                            deferred_arrivals += 1;
+                                            deferred.push(req);
+                                        }
                                     }
                                     continue;
                                 }
-                                snapshot_all(&engines, &alive, &granted_w, &mut states);
+                                snapshot_all(&engines, &routable, &granted_w, &mut states);
                                 match disagg::eco_route(&states, prefill_pool, tbt_target_s) {
                                     Some(nt) => {
-                                        let bytes = link
-                                            .kv_bytes(pending[idx].req.prompt_len as f64 + 1.0);
+                                        let bytes = link.kv_bytes(
+                                            pending[idx].req.prompt_len as f64 + 1.0,
+                                        );
                                         let j = link.transfer_j(bytes);
                                         engines[from].add_transfer_energy(j);
                                         engines[nt].add_transfer_energy(j);
@@ -587,57 +1054,63 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
                             }
                         }
                     }
-                }
-                ClusterEv::Migrate(idx) => {
-                    let from = pending[idx].from;
-                    let target = pending[idx].target;
-                    if !alive[from] {
-                        // Sender died while the KV was on the wire — the
-                        // transfer never completed and the KV is gone.
-                        // Full re-prefill through ingress.
-                        let req = pending[idx].req.clone();
-                        rerouted += 1;
-                        snapshot_all(&engines, &alive, &granted_w, &mut states);
-                        match pick_ingress(lb.as_mut(), t, &req, &states, ingress) {
-                            Some(node) => {
-                                crec.re_prefill(node, t, req.id);
-                                node_migration[node].re_prefills += 1;
-                                engines[node].inject(t, req);
-                                assignment[node] += 1;
-                                sel.update(node, &engines);
+                    ClusterEv::Migrate(idx) => {
+                        let from = pending[idx].from;
+                        let target = pending[idx].target;
+                        if !alive[from] {
+                            // Sender died while the KV was on the wire —
+                            // the transfer never completed and the KV is
+                            // gone. Full re-prefill through ingress.
+                            let req = pending[idx].req.clone();
+                            rerouted += 1;
+                            snapshot_all(&engines, &routable, &granted_w, &mut states);
+                            match pick_ingress(lb.as_mut(), t, &req, &states, ingress, &alive) {
+                                Some(node) => {
+                                    crec.re_prefill(node, t, req.id);
+                                    node_migration[node].re_prefills += 1;
+                                    engines[node].inject(t, req);
+                                    assignment[node] += 1;
+                                    sel.update(node, &engines);
+                                }
+                                None => {
+                                    deferred_arrivals += 1;
+                                    deferred.push(req);
+                                }
                             }
-                            None => deferred.push(req),
-                        }
-                    } else if alive[target] {
-                        engines[target].migrate_in(
-                            t,
-                            pending[idx].req.clone(),
-                            pending[idx].prefill_done_s,
-                        );
-                        node_migration[target].deliveries += 1;
-                        assignment[target] += 1;
-                        sel.update(target, &engines);
-                    } else {
-                        // Target died while the KV was on the wire; the
-                        // sender still holds it — relay to a fresh target,
-                        // both ends paying the link again.
-                        snapshot_all(&engines, &alive, &granted_w, &mut states);
-                        match disagg::eco_route(&states, prefill_pool, tbt_target_s) {
-                            Some(nt) => {
-                                let bytes =
-                                    link.kv_bytes(pending[idx].req.prompt_len as f64 + 1.0);
-                                let j = link.transfer_j(bytes);
-                                engines[from].add_transfer_energy(j);
-                                engines[nt].add_transfer_energy(j);
-                                migration.kv_bytes += bytes;
-                                migration.transfer_j += 2.0 * j;
-                                migration.relays += 1;
-                                node_migration[from].relays += 1;
-                                crec.migrate_relay(from, nt, t, pending[idx].req.id);
-                                pending[idx].target = nt;
-                                q.schedule(t + link.transfer_s(bytes), ClusterEv::Migrate(idx));
+                        } else if alive[target] {
+                            engines[target].migrate_in(
+                                t,
+                                pending[idx].req.clone(),
+                                pending[idx].prefill_done_s,
+                            );
+                            node_migration[target].deliveries += 1;
+                            assignment[target] += 1;
+                            sel.update(target, &engines);
+                        } else {
+                            // Target died while the KV was on the wire;
+                            // the sender still holds it — relay to a fresh
+                            // target, both ends paying the link again.
+                            snapshot_all(&engines, &routable, &granted_w, &mut states);
+                            match disagg::eco_route(&states, prefill_pool, tbt_target_s) {
+                                Some(nt) => {
+                                    let bytes =
+                                        link.kv_bytes(pending[idx].req.prompt_len as f64 + 1.0);
+                                    let j = link.transfer_j(bytes);
+                                    engines[from].add_transfer_energy(j);
+                                    engines[nt].add_transfer_energy(j);
+                                    migration.kv_bytes += bytes;
+                                    migration.transfer_j += 2.0 * j;
+                                    migration.relays += 1;
+                                    node_migration[from].relays += 1;
+                                    crec.migrate_relay(from, nt, t, pending[idx].req.id);
+                                    pending[idx].target = nt;
+                                    q.schedule(
+                                        t + link.transfer_s(bytes),
+                                        ClusterEv::Migrate(idx),
+                                    );
+                                }
+                                None => parked.push(idx),
                             }
-                            None => parked.push(idx),
                         }
                     }
                 }
@@ -654,7 +1127,7 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
             if i < prefill_pool {
                 engines[i].take_migrations(&mut mig_buf);
                 for m in mig_buf.drain(..) {
-                    snapshot_all(&engines, &alive, &granted_w, &mut states);
+                    snapshot_all(&engines, &routable, &granted_w, &mut states);
                     assignment[i] -= 1;
                     let idx = pending.len();
                     match disagg::eco_route(&states, prefill_pool, tbt_target_s) {
@@ -711,6 +1184,16 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
     let wasted_tokens: u64 = engines.iter().map(|e| e.wasted_tokens()).sum();
     let per_node: Vec<RunResult> = engines.iter_mut().map(|e| e.finalize(end_t)).collect();
 
+    // Nodes still parked at the end draw warm idle to the very horizon —
+    // a warm pool is not free, and the energy integral must say so.
+    if let Some(cc) = &capacity {
+        for n in 0..ccfg.nodes {
+            if is_cold[n] {
+                warm_energy_j += cc.warm_idle_w * (end_t - cold_since[n]);
+            }
+        }
+    }
+
     // Whole-run latency distributions: the per-node trackers all use the
     // same latency bucketing, so their histograms merge exactly.
     let mut ttft_hist = Histogram::latency();
@@ -721,7 +1204,9 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
     }
 
     let events_processed: u64 = per_node.iter().map(|r| r.events_processed).sum();
-    let total_energy_j = per_node.iter().map(|r| r.total_energy_j).sum();
+    // `+ 0.0` when no warm pool ever existed — bitwise identity, so the
+    // off-path energy integral is unchanged.
+    let total_energy_j = per_node.iter().map(|r| r.total_energy_j).sum::<f64>() + warm_energy_j;
     let generated_tokens = per_node.iter().map(|r| r.generated_tokens).sum();
     let completed: u64 = per_node.iter().map(|r| r.completed).sum();
     let ttft_passes: u64 = per_node.iter().map(|r| r.slo.ttft_passes()).sum();
@@ -755,6 +1240,13 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
         wasted_tokens,
         fault_events,
         events_processed,
+        shed: shed_count,
+        shed_retries,
+        deferred_arrivals,
+        warm_energy_j,
+        capacity_provisions: provisions,
+        capacity_parks: parks,
+        straggler_nodes: ccfg.faults.straggler_nodes(),
         migration: (prefill_pool > 0).then_some(migration),
         node_migration: if prefill_pool > 0 {
             node_migration

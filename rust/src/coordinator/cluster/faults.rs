@@ -1,4 +1,4 @@
-//! Chaos layer: deterministic node-loss / node-recovery schedules for the
+//! Chaos layer: deterministic capacity-degradation schedules for the
 //! cluster event loop.
 //!
 //! A [`FaultPlan`] is an ordered list of [`FaultEvent`]s injected into the
@@ -13,11 +13,32 @@
 //! telemetry (empty queues, reset TBT tail) and starts receiving traffic
 //! again.
 //!
+//! Beyond binary up/down, the grammar covers the realistic degradation
+//! modes a fleet sees:
+//! * **Drain** (`drain@t:n`): the node stops taking *new* ingress but
+//!   keeps serving what it has — the administrative half of a spot
+//!   preemption notice.
+//! * **Spot preemption** (`preempt@t:n[:notice]`): expands at parse time
+//!   to `drain@t:n` + `down@(t+notice):n` (default notice 30 s), so the
+//!   cluster proactively empties the node instead of losing its in-flight
+//!   work at the kill instant.
+//! * **Straggler** (`slow@t:n:factor[:cap_mhz]` / `restore@t:n`): the
+//!   node *keeps running* but every prefill/decode step takes `factor`×
+//!   longer and (optionally) its DVFS ladder is thermally capped at
+//!   `cap_mhz` — governors and the power arbiter must cope with a slow
+//!   node, not just a dead one.
+//! * **Rack-correlated loss** (`rackdown@t:a-b` / `rackup@t:a-b`):
+//!   expands at parse time to per-node `down`/`up` events on the whole
+//!   inclusive node range — one switch or PDU takes out a node *group*.
+//!
 //! Schedules come in two spellings, both deterministic:
 //! * **Presets** ([`FaultSpec`]): `none`, `onedown` (highest-index node
 //!   lost at ⅓ of the trace), `flap` (same node lost at ⅓, recovered at
-//!   ⅔). Presets resolve against a concrete node count and duration, so
-//!   the scenario matrix can sweep them as an axis.
+//!   ⅔), `spot` (drain at ⅓, kill at ½, back at ⅔ — preemption with
+//!   notice), `straggler` (highest-index node runs 2× slow, thermally
+//!   capped, between ⅓ and ⅔). Presets resolve against a concrete node
+//!   count and duration, so the scenario matrix can sweep them as an
+//!   axis.
 //! * **Explicit events**: `"down@40:1,up@80:1"` — node 1 fails at t=40 s
 //!   and recovers at t=80 s.
 //!
@@ -29,7 +50,14 @@
 //! assert_eq!(plan.events[0].kind, FaultKind::Down);
 //! plan.validate(3).unwrap();           // fine on a 3-node cluster
 //! assert!(plan.validate(1).is_err());  // would kill the only node
+//!
+//! // Spot preemption expands to its drain + kill pair.
+//! let spot = FaultPlan::parse("preempt@40:1:20").unwrap();
+//! assert_eq!(spot.render(), "drain@40:1,down@60:1");
 //! ```
+
+/// Spot-preemption notice window used when `preempt@t:n` omits one, s.
+pub const DEFAULT_PREEMPT_NOTICE_S: f64 = 30.0;
 
 /// Direction of one fault transition.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,6 +66,14 @@ pub enum FaultKind {
     Down,
     /// Node recovery: power on + rejoin with cold telemetry.
     Up,
+    /// Stop routing new ingress to the node; it keeps serving in-flight
+    /// work (spot-preemption notice, administrative drain).
+    Drain,
+    /// Straggler onset: the node keeps serving but every step runs
+    /// `factor`× slower, optionally under a thermal clock cap.
+    Slow,
+    /// Straggler recovery: slowdown and thermal cap lifted.
+    Restore,
 }
 
 /// One scheduled fault transition.
@@ -47,11 +83,31 @@ pub struct FaultEvent {
     pub t_s: f64,
     /// Target node index.
     pub node: usize,
-    /// Loss or recovery.
+    /// Transition kind.
     pub kind: FaultKind,
+    /// Performance slowdown multiplier ([`FaultKind::Slow`] only;
+    /// 1.0 otherwise). Every prefill/decode step on the node takes
+    /// `factor`× its nominal time while degraded.
+    pub factor: f64,
+    /// Thermal clock cap in MHz ([`FaultKind::Slow`] only; `u32::MAX`
+    /// = no cap). Snapped down to the node's ladder grid when applied.
+    pub cap_mhz: u32,
 }
 
-/// A deterministic fault schedule: time-ordered loss/recovery events.
+impl FaultEvent {
+    /// An event with no straggler payload (factor 1, uncapped).
+    pub fn new(t_s: f64, node: usize, kind: FaultKind) -> FaultEvent {
+        FaultEvent {
+            t_s,
+            node,
+            kind,
+            factor: 1.0,
+            cap_mhz: u32::MAX,
+        }
+    }
+}
+
+/// A deterministic fault schedule: time-ordered degradation events.
 /// The default (empty) plan is inert — a cluster run with it is
 /// bit-identical to one without any chaos layer at all (tested).
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -66,35 +122,157 @@ impl FaultPlan {
         self.events.is_empty()
     }
 
-    /// Parse an explicit event list: comma-separated `down@<t>:<node>` /
-    /// `up@<t>:<node>` entries. Events are sorted by time (stable, so
-    /// equal-time events keep their spelled order). An empty string is
-    /// the empty plan.
+    /// Node indices scheduled to run degraded (straggler) at any point,
+    /// ascending and deduplicated — reported in cluster results so a
+    /// straggler run is flaggable from JSON.
+    pub fn straggler_nodes(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::Slow)
+            .map(|e| e.node)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Parse an explicit event list: comma-separated entries of
+    ///
+    /// * `down@<t>:<node>` / `up@<t>:<node>` — binary loss/recovery;
+    /// * `drain@<t>:<node>` — stop new ingress, keep serving;
+    /// * `preempt@<t>:<node>[:<notice_s>]` — expands to a drain at `t`
+    ///   and a down at `t + notice_s` (default 30 s);
+    /// * `slow@<t>:<node>:<factor>[:<cap_mhz>]` / `restore@<t>:<node>` —
+    ///   straggler onset/recovery;
+    /// * `rackdown@<t>:<a>-<b>` / `rackup@<t>:<a>-<b>` — expands to one
+    ///   down/up per node of the inclusive range (correlated rack loss).
+    ///
+    /// Events are sorted by time (stable, so equal-time events keep their
+    /// spelled order; expansions keep ascending node order). An empty
+    /// string is the empty plan.
     pub fn parse(s: &str) -> Result<FaultPlan, String> {
         let mut events = Vec::new();
         for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
-            let (kind, rest) = if let Some(r) = tok.strip_prefix("down@") {
-                (FaultKind::Down, r)
-            } else if let Some(r) = tok.strip_prefix("up@") {
-                (FaultKind::Up, r)
-            } else {
-                return Err(format!(
-                    "bad fault event {tok:?}: expected down@<t>:<node> or up@<t>:<node>"
-                ));
-            };
-            let (t, node) = rest
-                .split_once(':')
-                .ok_or_else(|| format!("bad fault event {tok:?}: missing ':<node>'"))?;
+            let (verb, rest) = tok.split_once('@').ok_or_else(|| {
+                format!("bad fault event {tok:?}: expected <kind>@<t>:<node>")
+            })?;
+            let mut parts = rest.split(':');
+            let t = parts.next().unwrap_or("");
             let t_s: f64 = t
                 .parse()
                 .map_err(|_| format!("bad fault time {t:?} in {tok:?}"))?;
             if !t_s.is_finite() || t_s <= 0.0 {
                 return Err(format!("fault time must be finite and > 0, got {t_s}"));
             }
-            let node: usize = node
-                .parse()
-                .map_err(|_| format!("bad fault node {node:?} in {tok:?}"))?;
-            events.push(FaultEvent { t_s, node, kind });
+            let target = parts
+                .next()
+                .ok_or_else(|| format!("bad fault event {tok:?}: missing ':<node>'"))?;
+            let extra: Vec<&str> = parts.collect();
+            let parse_node = |node: &str| -> Result<usize, String> {
+                node.parse()
+                    .map_err(|_| format!("bad fault node {node:?} in {tok:?}"))
+            };
+            match verb {
+                "down" | "up" => {
+                    if !extra.is_empty() {
+                        return Err(format!("bad fault event {tok:?}: trailing fields"));
+                    }
+                    let kind = if verb == "down" { FaultKind::Down } else { FaultKind::Up };
+                    events.push(FaultEvent::new(t_s, parse_node(target)?, kind));
+                }
+                "drain" => {
+                    if !extra.is_empty() {
+                        return Err(format!("bad fault event {tok:?}: trailing fields"));
+                    }
+                    events.push(FaultEvent::new(t_s, parse_node(target)?, FaultKind::Drain));
+                }
+                "preempt" => {
+                    if extra.len() > 1 {
+                        return Err(format!("bad fault event {tok:?}: trailing fields"));
+                    }
+                    let notice: f64 = match extra.first() {
+                        Some(n) => n
+                            .parse()
+                            .map_err(|_| format!("bad preemption notice {n:?} in {tok:?}"))?,
+                        None => DEFAULT_PREEMPT_NOTICE_S,
+                    };
+                    if !notice.is_finite() || notice <= 0.0 {
+                        return Err(format!(
+                            "preemption notice must be finite and > 0, got {notice}"
+                        ));
+                    }
+                    let node = parse_node(target)?;
+                    events.push(FaultEvent::new(t_s, node, FaultKind::Drain));
+                    events.push(FaultEvent::new(t_s + notice, node, FaultKind::Down));
+                }
+                "slow" => {
+                    if extra.is_empty() || extra.len() > 2 {
+                        return Err(format!(
+                            "bad fault event {tok:?}: expected slow@<t>:<node>:<factor>[:<cap_mhz>]"
+                        ));
+                    }
+                    let factor: f64 = extra[0]
+                        .parse()
+                        .map_err(|_| format!("bad slowdown factor {:?} in {tok:?}", extra[0]))?;
+                    if !factor.is_finite() || factor < 1.0 {
+                        return Err(format!(
+                            "slowdown factor must be finite and >= 1, got {factor}"
+                        ));
+                    }
+                    let cap_mhz: u32 = match extra.get(1) {
+                        Some(c) => c
+                            .parse()
+                            .map_err(|_| format!("bad clock cap {c:?} in {tok:?}"))?,
+                        None => u32::MAX,
+                    };
+                    if cap_mhz == 0 {
+                        return Err(format!("clock cap must be > 0 in {tok:?}"));
+                    }
+                    events.push(FaultEvent {
+                        t_s,
+                        node: parse_node(target)?,
+                        kind: FaultKind::Slow,
+                        factor,
+                        cap_mhz,
+                    });
+                }
+                "restore" => {
+                    if !extra.is_empty() {
+                        return Err(format!("bad fault event {tok:?}: trailing fields"));
+                    }
+                    events.push(FaultEvent::new(t_s, parse_node(target)?, FaultKind::Restore));
+                }
+                "rackdown" | "rackup" => {
+                    if !extra.is_empty() {
+                        return Err(format!("bad fault event {tok:?}: trailing fields"));
+                    }
+                    let (a, b) = target.split_once('-').ok_or_else(|| {
+                        format!("bad rack range {target:?} in {tok:?}: expected <a>-<b>")
+                    })?;
+                    let a: usize = a
+                        .parse()
+                        .map_err(|_| format!("bad rack range {target:?} in {tok:?}"))?;
+                    let b: usize = b
+                        .parse()
+                        .map_err(|_| format!("bad rack range {target:?} in {tok:?}"))?;
+                    if a > b {
+                        return Err(format!(
+                            "bad rack range {target:?} in {tok:?}: start exceeds end"
+                        ));
+                    }
+                    let kind = if verb == "rackdown" { FaultKind::Down } else { FaultKind::Up };
+                    for node in a..=b {
+                        events.push(FaultEvent::new(t_s, node, kind));
+                    }
+                }
+                _ => {
+                    return Err(format!(
+                        "bad fault event {tok:?}: unknown kind {verb:?} (expected down, up, \
+                         drain, preempt, slow, restore, rackdown or rackup)"
+                    ));
+                }
+            }
         }
         let mut plan = FaultPlan { events };
         plan.sort();
@@ -106,18 +284,30 @@ impl FaultPlan {
         self.events.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
     }
 
-    /// Check the schedule against a node count: every event targets a real
-    /// node, a node only goes down while up (and vice versa), and at least
-    /// one node stays alive at every instant (a fully dark cluster cannot
-    /// re-route its drained requests anywhere).
+    /// Check the schedule against a node count. Every event must target a
+    /// real node; the per-node state machine must stay consistent (a node
+    /// only goes down while up or draining, only recovers while down,
+    /// drains once per up-period, slows only while alive and not already
+    /// slow, restores only while slow); and at least one node stays alive
+    /// at every instant (a fully dark cluster cannot re-route its drained
+    /// requests anywhere). Straggler payloads are re-checked here so
+    /// programmatically built plans get the same errors as parsed ones.
     pub fn validate(&self, nodes: usize) -> Result<(), String> {
         let mut down = vec![false; nodes];
+        let mut draining = vec![false; nodes];
+        let mut slow = vec![false; nodes];
         let mut down_count = 0usize;
         for ev in &self.events {
             if ev.node >= nodes {
                 return Err(format!(
                     "fault targets node {} but the cluster has {nodes} nodes",
                     ev.node
+                ));
+            }
+            if !ev.t_s.is_finite() || ev.t_s <= 0.0 {
+                return Err(format!(
+                    "fault time must be finite and > 0, got {} (node {})",
+                    ev.t_s, ev.node
                 ));
             }
             match ev.kind {
@@ -132,6 +322,10 @@ impl FaultPlan {
                         ));
                     }
                     down[ev.node] = true;
+                    // Death clears the administrative and straggler state;
+                    // recovery brings the node back clean.
+                    draining[ev.node] = false;
+                    slow[ev.node] = false;
                     down_count += 1;
                 }
                 FaultKind::Up => {
@@ -144,21 +338,80 @@ impl FaultPlan {
                     down[ev.node] = false;
                     down_count -= 1;
                 }
+                FaultKind::Drain => {
+                    if down[ev.node] {
+                        return Err(format!(
+                            "node {} drained while down (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    if draining[ev.node] {
+                        return Err(format!(
+                            "node {} drained twice without going down (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    draining[ev.node] = true;
+                }
+                FaultKind::Slow => {
+                    if down[ev.node] {
+                        return Err(format!(
+                            "node {} slowed while down (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    if slow[ev.node] {
+                        return Err(format!(
+                            "node {} slowed twice without a restore (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    if !ev.factor.is_finite() || ev.factor < 1.0 {
+                        return Err(format!(
+                            "slowdown factor must be finite and >= 1, got {} (node {}, t={})",
+                            ev.factor, ev.node, ev.t_s
+                        ));
+                    }
+                    if ev.cap_mhz == 0 {
+                        return Err(format!(
+                            "straggler clock cap must be > 0 (node {}, t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    slow[ev.node] = true;
+                }
+                FaultKind::Restore => {
+                    if !slow[ev.node] {
+                        return Err(format!(
+                            "node {} restored while not degraded (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    slow[ev.node] = false;
+                }
             }
         }
         Ok(())
     }
 
-    /// Render back to the explicit `down@t:node,...` spelling.
+    /// Render back to the explicit event-list spelling. `preempt` and
+    /// `rackdown`/`rackup` spellings render as their expansions (the plan
+    /// only stores primitive events), so render → parse round-trips.
     pub fn render(&self) -> String {
         self.events
             .iter()
-            .map(|e| {
-                let k = match e.kind {
-                    FaultKind::Down => "down",
-                    FaultKind::Up => "up",
-                };
-                format!("{k}@{}:{}", e.t_s, e.node)
+            .map(|e| match e.kind {
+                FaultKind::Down => format!("down@{}:{}", e.t_s, e.node),
+                FaultKind::Up => format!("up@{}:{}", e.t_s, e.node),
+                FaultKind::Drain => format!("drain@{}:{}", e.t_s, e.node),
+                FaultKind::Slow => {
+                    if e.cap_mhz == u32::MAX {
+                        format!("slow@{}:{}:{}", e.t_s, e.node, e.factor)
+                    } else {
+                        format!("slow@{}:{}:{}:{}", e.t_s, e.node, e.factor, e.cap_mhz)
+                    }
+                }
+                FaultKind::Restore => format!("restore@{}:{}", e.t_s, e.node),
             })
             .collect::<Vec<_>>()
             .join(",")
@@ -176,6 +429,12 @@ pub enum FaultSpec {
     OneDown,
     /// The highest-index node fails at ⅓ and recovers at ⅔ of the trace.
     Flap,
+    /// Spot preemption of the highest-index node: drain notice at ⅓,
+    /// kill at ½, capacity back at ⅔.
+    Spot,
+    /// The highest-index node runs as a 2× straggler (thermally capped
+    /// near the ladder floor region) between ⅓ and ⅔ of the trace.
+    Straggler,
     /// An explicit event list (see [`FaultPlan::parse`]).
     Explicit(FaultPlan),
 }
@@ -188,6 +447,8 @@ impl FaultSpec {
             FaultSpec::None => "none".into(),
             FaultSpec::OneDown => "onedown".into(),
             FaultSpec::Flap => "flap".into(),
+            FaultSpec::Spot => "spot".into(),
+            FaultSpec::Straggler => "straggler".into(),
             FaultSpec::Explicit(p) => p.render(),
         }
     }
@@ -198,39 +459,50 @@ impl FaultSpec {
             "none" | "" => Ok(FaultSpec::None),
             "onedown" | "one-down" | "nodeloss" => Ok(FaultSpec::OneDown),
             "flap" => Ok(FaultSpec::Flap),
+            "spot" | "preempt" => Ok(FaultSpec::Spot),
+            "straggler" | "slow" => Ok(FaultSpec::Straggler),
             _ => FaultPlan::parse(s).map(FaultSpec::Explicit),
         }
     }
 
     /// Resolve to a concrete plan. Presets that would down the only node
     /// of a 1-node cluster resolve to the empty plan (there is nowhere to
-    /// re-route, so chaos is a no-op there by construction).
+    /// re-route, so chaos is a no-op there by construction); the
+    /// straggler preset stays active on one node — a slow node still
+    /// serves.
     pub fn plan(&self, nodes: usize, duration_s: f64) -> FaultPlan {
         let victim = nodes.saturating_sub(1);
         match self {
             FaultSpec::None => FaultPlan::default(),
             FaultSpec::OneDown if nodes >= 2 => FaultPlan {
-                events: vec![FaultEvent {
-                    t_s: duration_s / 3.0,
-                    node: victim,
-                    kind: FaultKind::Down,
-                }],
+                events: vec![FaultEvent::new(duration_s / 3.0, victim, FaultKind::Down)],
             },
             FaultSpec::Flap if nodes >= 2 => FaultPlan {
+                events: vec![
+                    FaultEvent::new(duration_s / 3.0, victim, FaultKind::Down),
+                    FaultEvent::new(duration_s * 2.0 / 3.0, victim, FaultKind::Up),
+                ],
+            },
+            FaultSpec::Spot if nodes >= 2 => FaultPlan {
+                events: vec![
+                    FaultEvent::new(duration_s / 3.0, victim, FaultKind::Drain),
+                    FaultEvent::new(duration_s / 2.0, victim, FaultKind::Down),
+                    FaultEvent::new(duration_s * 2.0 / 3.0, victim, FaultKind::Up),
+                ],
+            },
+            FaultSpec::Straggler => FaultPlan {
                 events: vec![
                     FaultEvent {
                         t_s: duration_s / 3.0,
                         node: victim,
-                        kind: FaultKind::Down,
+                        kind: FaultKind::Slow,
+                        factor: 2.0,
+                        cap_mhz: 600,
                     },
-                    FaultEvent {
-                        t_s: duration_s * 2.0 / 3.0,
-                        node: victim,
-                        kind: FaultKind::Up,
-                    },
+                    FaultEvent::new(duration_s * 2.0 / 3.0, victim, FaultKind::Restore),
                 ],
             },
-            FaultSpec::OneDown | FaultSpec::Flap => FaultPlan::default(),
+            FaultSpec::OneDown | FaultSpec::Flap | FaultSpec::Spot => FaultPlan::default(),
             FaultSpec::Explicit(p) => p.clone(),
         }
     }
@@ -264,6 +536,64 @@ mod tests {
         assert!(FaultPlan::parse("down@0:0").is_err());
         assert!(FaultPlan::parse("down@nan:0").is_err());
         assert!(FaultPlan::parse("down@40:x").is_err());
+        assert!(FaultPlan::parse("down@40:1:9").is_err());
+        assert!(FaultPlan::parse("40:1").is_err());
+    }
+
+    #[test]
+    fn preempt_expands_to_drain_plus_down() {
+        let plan = FaultPlan::parse("preempt@40:1:20").unwrap();
+        assert_eq!(plan.render(), "drain@40:1,down@60:1");
+        // Default notice window.
+        let plan = FaultPlan::parse("preempt@40:2").unwrap();
+        assert_eq!(plan.events[1].t_s, 40.0 + DEFAULT_PREEMPT_NOTICE_S);
+        assert_eq!(plan.events[0].kind, FaultKind::Drain);
+        assert_eq!(plan.events[1].kind, FaultKind::Down);
+        // Bad notice windows.
+        assert!(FaultPlan::parse("preempt@40:1:0").is_err());
+        assert!(FaultPlan::parse("preempt@40:1:-5").is_err());
+        assert!(FaultPlan::parse("preempt@40:1:nan").is_err());
+        assert!(FaultPlan::parse("preempt@40:1:20:9").is_err());
+    }
+
+    #[test]
+    fn rack_events_expand_to_node_ranges() {
+        let plan = FaultPlan::parse("rackdown@40:1-3,rackup@80:1-3").unwrap();
+        assert_eq!(
+            plan.render(),
+            "down@40:1,down@40:2,down@40:3,up@80:1,up@80:2,up@80:3"
+        );
+        plan.validate(5).unwrap();
+        // The whole rack counts against liveness.
+        assert!(FaultPlan::parse("rackdown@40:0-3").unwrap().validate(4).is_err());
+        // Degenerate single-node rack.
+        assert_eq!(FaultPlan::parse("rackdown@40:2-2").unwrap().events.len(), 1);
+        // Malformed ranges.
+        assert!(FaultPlan::parse("rackdown@40:3-1").is_err());
+        assert!(FaultPlan::parse("rackdown@40:3").is_err());
+        assert!(FaultPlan::parse("rackdown@40:a-b").is_err());
+    }
+
+    #[test]
+    fn straggler_grammar_round_trips_and_validates() {
+        let plan = FaultPlan::parse("slow@40:1:2.5:600,restore@80:1").unwrap();
+        assert_eq!(plan.events[0].kind, FaultKind::Slow);
+        assert_eq!(plan.events[0].factor, 2.5);
+        assert_eq!(plan.events[0].cap_mhz, 600);
+        assert_eq!(plan.render(), "slow@40:1:2.5:600,restore@80:1");
+        assert_eq!(FaultPlan::parse(&plan.render()).unwrap(), plan);
+        plan.validate(2).unwrap();
+        assert_eq!(plan.straggler_nodes(), vec![1]);
+        // Uncapped spelling omits the cap field on render.
+        let free = FaultPlan::parse("slow@40:0:3").unwrap();
+        assert_eq!(free.render(), "slow@40:0:3");
+        assert_eq!(free.events[0].cap_mhz, u32::MAX);
+        // Bad payloads.
+        assert!(FaultPlan::parse("slow@40:1").is_err());
+        assert!(FaultPlan::parse("slow@40:1:0.5").is_err());
+        assert!(FaultPlan::parse("slow@40:1:nan").is_err());
+        assert!(FaultPlan::parse("slow@40:1:2:0").is_err());
+        assert!(FaultPlan::parse("restore@40:1:2").is_err());
     }
 
     #[test]
@@ -274,6 +604,11 @@ mod tests {
         assert!(FaultPlan::parse("down@40:5").unwrap().validate(2).is_err());
         // Double down.
         assert!(FaultPlan::parse("down@40:1,down@50:1")
+            .unwrap()
+            .validate(3)
+            .is_err());
+        // Recovery preceding the failure (sorted order puts up first).
+        assert!(FaultPlan::parse("down@80:1,up@40:1")
             .unwrap()
             .validate(3)
             .is_err());
@@ -292,8 +627,64 @@ mod tests {
     }
 
     #[test]
+    fn validate_enforces_degradation_state_machine() {
+        // Drain → down → up is the canonical preemption cycle.
+        FaultPlan::parse("drain@40:1,down@60:1,up@80:1")
+            .unwrap()
+            .validate(2)
+            .unwrap();
+        // A second drain without an intervening down is a spec bug.
+        assert!(FaultPlan::parse("drain@40:1,drain@50:1")
+            .unwrap()
+            .validate(2)
+            .is_err());
+        // ... but drain → down → up → drain is fine (new up-period).
+        FaultPlan::parse("drain@40:1,down@50:1,up@60:1,drain@70:1")
+            .unwrap()
+            .validate(2)
+            .unwrap();
+        // Draining or slowing a dead node is rejected.
+        assert!(FaultPlan::parse("down@40:1,drain@50:1")
+            .unwrap()
+            .validate(3)
+            .is_err());
+        assert!(FaultPlan::parse("down@40:1,slow@50:1:2")
+            .unwrap()
+            .validate(3)
+            .is_err());
+        // Double slow / restore-without-slow are rejected.
+        assert!(FaultPlan::parse("slow@40:1:2,slow@50:1:3")
+            .unwrap()
+            .validate(2)
+            .is_err());
+        assert!(FaultPlan::parse("restore@40:1").unwrap().validate(2).is_err());
+        // Down clears the slow flag: a restore after recovery is stale.
+        assert!(FaultPlan::parse("slow@30:1:2,down@40:1,up@50:1,restore@60:1")
+            .unwrap()
+            .validate(3)
+            .is_err());
+        // Programmatic plans get payloads re-checked.
+        let bad = FaultPlan {
+            events: vec![FaultEvent {
+                t_s: 10.0,
+                node: 0,
+                kind: FaultKind::Slow,
+                factor: 0.25,
+                cap_mhz: u32::MAX,
+            }],
+        };
+        assert!(bad.validate(2).is_err());
+    }
+
+    #[test]
     fn spec_names_round_trip_through_parse() {
-        for spec in [FaultSpec::None, FaultSpec::OneDown, FaultSpec::Flap] {
+        for spec in [
+            FaultSpec::None,
+            FaultSpec::OneDown,
+            FaultSpec::Flap,
+            FaultSpec::Spot,
+            FaultSpec::Straggler,
+        ] {
             assert_eq!(FaultSpec::parse(&spec.name()).unwrap(), spec);
         }
         let explicit = FaultSpec::parse("down@40:1,up@80:1").unwrap();
@@ -311,9 +702,23 @@ mod tests {
         assert_eq!(f.events.len(), 2);
         assert!((f.events[1].t_s - 60.0).abs() < 1e-12);
         f.validate(2).unwrap();
-        // Presets are inert on a single node and for `none`.
+        // Spot: drain notice, kill, recovery — validates as a cycle.
+        let s = FaultSpec::Spot.plan(2, 90.0);
+        assert_eq!(
+            s.events.iter().map(|e| e.kind).collect::<Vec<_>>(),
+            vec![FaultKind::Drain, FaultKind::Down, FaultKind::Up]
+        );
+        s.validate(2).unwrap();
+        // Straggler: slow then restore, active even on one node.
+        let g = FaultSpec::Straggler.plan(1, 90.0);
+        assert_eq!(g.events[0].kind, FaultKind::Slow);
+        assert_eq!(g.events[0].factor, 2.0);
+        g.validate(1).unwrap();
+        assert_eq!(g.straggler_nodes(), vec![0]);
+        // Loss presets are inert on a single node and for `none`.
         assert!(FaultSpec::OneDown.plan(1, 90.0).is_empty());
         assert!(FaultSpec::Flap.plan(1, 90.0).is_empty());
+        assert!(FaultSpec::Spot.plan(1, 90.0).is_empty());
         assert!(FaultSpec::None.plan(4, 90.0).is_empty());
     }
 }

@@ -46,12 +46,14 @@
 //!   tested).
 
 pub mod balancer;
+pub mod capacity;
 pub mod disagg;
 pub mod events;
 pub mod faults;
 pub mod power;
 
 pub use balancer::{Balancer, LbPolicy, NodeState};
+pub use capacity::{CapacityConfig, ShedConfig};
 pub use disagg::{DisaggConfig, KvLinkModel, MigrationReport, NodeMigration, PoolRatio};
 pub use events::{run_cluster, run_cluster_recorded};
 pub use faults::{FaultEvent, FaultKind, FaultPlan, FaultSpec};
@@ -252,6 +254,12 @@ pub struct ClusterConfig {
     /// to the pre-disagg event loop). Requires `nodes >= 2` to actually
     /// split; a 1-node cluster degrades to colocated.
     pub disagg: Option<DisaggConfig>,
+    /// Endogenous autoscaler (`None` = fixed fleet, bit-identical to the
+    /// pre-capacity event loop).
+    pub capacity: Option<CapacityConfig>,
+    /// Graceful overload shedding at ingress (`None` = admit everything,
+    /// bit-identical to the pre-shed event loop).
+    pub shed: Option<ShedConfig>,
 }
 
 impl ClusterConfig {
@@ -268,6 +276,8 @@ impl ClusterConfig {
             faults: FaultPlan::default(),
             pool_ratio: PoolRatio::default(),
             disagg: None,
+            capacity: None,
+            shed: None,
         }
     }
 
@@ -307,6 +317,19 @@ impl ClusterConfig {
     /// `pool_ratio`, stream migration at prefill completion).
     pub fn with_disagg(mut self, disagg: DisaggConfig) -> ClusterConfig {
         self.disagg = Some(disagg);
+        self
+    }
+
+    /// Enable the endogenous capacity controller (validated against the
+    /// node count when the cluster runs).
+    pub fn with_capacity(mut self, capacity: CapacityConfig) -> ClusterConfig {
+        self.capacity = Some(capacity);
+        self
+    }
+
+    /// Enable graceful overload shedding at ingress.
+    pub fn with_shed(mut self, shed: ShedConfig) -> ClusterConfig {
+        self.shed = Some(shed);
         self
     }
 
@@ -381,6 +404,27 @@ pub struct ClusterResult {
     /// Discrete events processed across every node's loop (the cluster
     /// analogue of [`RunResult::events_processed`]; perf-bench metric).
     pub events_processed: u64,
+    /// Arrivals shed permanently by the overload policy after exhausting
+    /// their retries (0 when shedding is disabled). Conservation:
+    /// `completed + shed` equals the arrivals of a finished run.
+    pub shed: u64,
+    /// Shed-policy re-offers scheduled (an arrival deferred `k` times
+    /// before admission or shed contributes `k`).
+    pub shed_retries: u64,
+    /// Arrivals deferred because no node was routable at offer time
+    /// (re-offered at the next recovery/boot; 0 on fault-free runs).
+    pub deferred_arrivals: u64,
+    /// Warm-pool idle energy metered for capacity-parked nodes, joules
+    /// (already included in `total_energy_j`).
+    pub warm_energy_j: f64,
+    /// Cold nodes booted into service by the capacity controller.
+    pub capacity_provisions: u64,
+    /// Idle nodes parked by the capacity controller (beyond the initial
+    /// warm pool).
+    pub capacity_parks: u64,
+    /// Nodes the fault plan degraded (straggler `slow` events) at any
+    /// point, ascending.
+    pub straggler_nodes: Vec<usize>,
     /// Prefill→decode handoff accounting; present iff the run was
     /// disaggregated. (`assignment` tracks the node currently *owning*
     /// each request, so a migrated request counts at its decode home.)

@@ -399,6 +399,15 @@ pub struct Engine<'a, R: Recorder = NoopRecorder> {
     /// arbiter raises the cap, clamped GPUs return to their requested
     /// clock — tickless policies (Fixed) would otherwise ratchet down.
     requested_mhz: Vec<u32>,
+    /// Straggler clock cap (chaos `slow` events): composes with the
+    /// arbiter cap by min — a degraded node obeys whichever ceiling is
+    /// lower. `u32::MAX` = not degraded.
+    degraded_cap_mhz: u32,
+    /// Straggler step-time multiplier (chaos `slow` events): every
+    /// prefill/decode step takes this factor × its nominal time. 1.0 =
+    /// not degraded; `x * 1.0` is a bitwise identity for finite positive
+    /// step times, so the healthy path stays bit-exact.
+    perf_slowdown: f64,
     /// Prompt tokens queued or in prefill flight (O(1) balancer signal).
     outstanding_prompt_tok: u64,
     /// Recent decode-TBT tail (only when `opts.track_tbt_tail`).
@@ -566,6 +575,8 @@ impl<'a, R: Recorder> Engine<'a, R> {
             ttft_target_long: cfg.slo.ttft_long_s * cfg.prefill_margin,
             clock_cap_mhz: u32::MAX,
             requested_mhz,
+            degraded_cap_mhz: u32::MAX,
+            perf_slowdown: 1.0,
             outstanding_prompt_tok: 0,
             tbt_tail: opts
                 .track_tbt_tail
@@ -859,13 +870,14 @@ impl<'a, R: Recorder> Engine<'a, R> {
             "arbiter cap {cap_mhz} MHz off-ladder"
         );
         self.clock_cap_mhz = cap_mhz;
+        let eff = cap_mhz.min(self.degraded_cap_mhz);
         let before = if R::ENABLED {
             self.gpus[0].sm_clock()
         } else {
             0
         };
         for (g, gpu) in self.gpus.iter_mut().enumerate() {
-            let want = self.requested_mhz[g].min(cap_mhz);
+            let want = self.requested_mhz[g].min(eff);
             if gpu.sm_clock() != want {
                 gpu.set_app_clock(t, want);
             }
@@ -878,6 +890,61 @@ impl<'a, R: Recorder> Engine<'a, R> {
             }
         }
         self.policy.on_power_cap(cap_mhz);
+    }
+
+    /// Straggler onset (chaos `slow` events): every subsequent
+    /// prefill/decode step runs `factor`× slower, and the node's clocks
+    /// are pinned under `cap_mhz` (snapped down to the ladder grid;
+    /// `u32::MAX` = no thermal cap). The degraded cap composes with the
+    /// arbiter cap by min — the arbiter keeps granting watts, the node
+    /// just cannot use clocks above its thermal ceiling.
+    pub fn degrade(&mut self, t: f64, factor: f64, cap_mhz: u32) {
+        debug_assert!(factor.is_finite() && factor >= 1.0, "bad slowdown {factor}");
+        self.perf_slowdown = factor;
+        self.degraded_cap_mhz = if cap_mhz == u32::MAX {
+            u32::MAX
+        } else {
+            self.gpus[0].ladder.snap_down(cap_mhz as f64)
+        };
+        self.reclamp_clocks(t);
+    }
+
+    /// Straggler recovery (chaos `restore` events): lift the slowdown and
+    /// the thermal cap; clocks return to the policy's last requested
+    /// values under the arbiter cap alone.
+    pub fn restore_degrade(&mut self, t: f64) {
+        self.perf_slowdown = 1.0;
+        self.degraded_cap_mhz = u32::MAX;
+        self.reclamp_clocks(t);
+    }
+
+    /// Re-apply every GPU's requested clock under the current effective
+    /// ceiling (arbiter cap ∧ thermal cap), recording actual edges.
+    fn reclamp_clocks(&mut self, t: f64) {
+        let eff = self.clock_cap_mhz.min(self.degraded_cap_mhz);
+        let before = if R::ENABLED {
+            self.gpus[0].sm_clock()
+        } else {
+            0
+        };
+        for (g, gpu) in self.gpus.iter_mut().enumerate() {
+            let want = self.requested_mhz[g].min(eff);
+            if gpu.sm_clock() != want {
+                gpu.set_app_clock(t, want);
+            }
+        }
+        if R::ENABLED {
+            let after = self.gpus[0].sm_clock();
+            if after != before {
+                self.rec.clock_change(self.node_id, t, 0, after);
+                self.record_obs_sample(t, -1.0);
+            }
+        }
+    }
+
+    /// Current straggler step-time multiplier (1.0 = healthy).
+    pub fn perf_slowdown(&self) -> f64 {
+        self.perf_slowdown
     }
 
     // -- chaos hooks (node loss / recovery) -----------------------------------
@@ -1003,6 +1070,9 @@ impl<'a, R: Recorder> Engine<'a, R> {
     pub fn recover(&mut self, t: f64) {
         let init = self.policy.initial_clock_mhz();
         self.clock_cap_mhz = u32::MAX;
+        // A power cycle clears any straggler degradation with the caps.
+        self.degraded_cap_mhz = u32::MAX;
+        self.perf_slowdown = 1.0;
         for (g, gpu) in self.gpus.iter_mut().enumerate() {
             gpu.power_on(t);
             let mhz = init.unwrap_or(gpu.ladder.max_mhz);
@@ -1098,7 +1168,7 @@ impl<'a, R: Recorder> Engine<'a, R> {
     // -- helpers -------------------------------------------------------------
 
     fn set_worker_clock(&mut self, t: f64, first_gpu: usize, n: usize, mhz: u32) {
-        let clamped = mhz.min(self.clock_cap_mhz);
+        let clamped = mhz.min(self.clock_cap_mhz).min(self.degraded_cap_mhz);
         let before = if R::ENABLED {
             self.gpus[first_gpu].sm_clock()
         } else {
@@ -1285,7 +1355,9 @@ impl<'a, R: Recorder> Engine<'a, R> {
         }
         let mhz = self.prefill_clock(worker);
         let len = self.requests[job.req_idx].prompt_len;
-        let dt = self.perf.prefill_time(len as usize, mhz) * self.rng.noise(self.cfg.sim_noise);
+        let dt = self.perf.prefill_time(len as usize, mhz)
+            * self.rng.noise(self.cfg.sim_noise)
+            * self.perf_slowdown;
         let (g0, n) = (
             self.prefill_workers[worker].gpus[0],
             self.prefill_workers[worker].gpus.len(),
@@ -1425,8 +1497,9 @@ impl<'a, R: Recorder> Engine<'a, R> {
         let mhz = self.gpus[gpu].sm_clock();
         let util = self.perf.decode_util(batch);
         self.gpus[gpu].set_util(t, util);
-        let dt =
-            self.perf.decode_step_time(batch, avg_ctx, mhz) * self.rng.noise(self.cfg.sim_noise);
+        let dt = self.perf.decode_step_time(batch, avg_ctx, mhz)
+            * self.rng.noise(self.cfg.sim_noise)
+            * self.perf_slowdown;
         self.q.schedule(t + dt, Ev::DecodeRound { worker, seq });
     }
 

@@ -19,8 +19,9 @@ use greenllm::bench::matrix::TraceSpec;
 use greenllm::bench::{self, figures, tables};
 use greenllm::config::{Config, Method};
 use greenllm::coordinator::cluster::{
-    run_cluster, run_cluster_recorded, ArbiterStrategy, ClusterConfig, DisaggConfig, FaultPlan,
-    FaultSpec, KvLinkModel, LbPolicy, NodeMigration, NodeSpec, PoolRatio,
+    run_cluster, run_cluster_recorded, ArbiterStrategy, CapacityConfig, ClusterConfig,
+    DisaggConfig, FaultPlan, FaultSpec, KvLinkModel, LbPolicy, NodeMigration, NodeSpec, PoolRatio,
+    ShedConfig,
 };
 use greenllm::coordinator::engine::{run, RunOptions};
 use greenllm::metrics::Histogram;
@@ -28,6 +29,7 @@ use greenllm::obs::{self, FlightRecorder};
 use greenllm::server::{ServerConfig, ServerHandle};
 use greenllm::util::cli::Args;
 use greenllm::util::error::{anyhow, Result};
+use greenllm::util::fsx::ensure_writable;
 use greenllm::workload::alibaba::{self, ChatParams};
 use greenllm::workload::request::Trace;
 use greenllm::workload::synthetic;
@@ -272,6 +274,9 @@ fn validate_cmd(args: &Args, seed: u64) -> Result<()> {
     bands.min_energy_savings_pct = args.f64_or("min-savings", bands.min_energy_savings_pct)?;
     bands.max_extra_violations_pct =
         args.f64_or("max-extra-viol", bands.max_extra_violations_pct)?;
+    if let Some(path) = args.get("json") {
+        ensure_writable(path).map_err(|e| anyhow!(e))?;
+    }
     let rep = bench::validate::run_closure(part, model, duration, seed, &bands);
     bench::validate::print_report(&rep);
     if let Some(path) = args.get("json") {
@@ -438,6 +443,10 @@ fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
                 .map_err(|e| anyhow!("fault spec {:?} at {n} nodes: {e}", f.name()))?;
         }
     }
+    // Fail fast on unwritable artifact paths before the (long) sweep.
+    for p in [args.get("json"), args.get("md")].into_iter().flatten() {
+        ensure_writable(p).map_err(|e| anyhow!(e))?;
+    }
     matrix(&cfg, args.get("json"), args.get("md"));
     Ok(())
 }
@@ -457,6 +466,8 @@ struct ClusterSetup {
     pool_ratio: PoolRatio,
     disagg_ratio: Option<PoolRatio>,
     disagg_cfg: Option<DisaggConfig>,
+    capacity: Option<CapacityConfig>,
+    shed: Option<ShedConfig>,
 }
 
 impl ClusterSetup {
@@ -479,6 +490,12 @@ impl ClusterSetup {
         }
         if let Some(d) = self.disagg_cfg {
             ccfg = ccfg.with_disagg(d);
+        }
+        if let Some(c) = self.capacity {
+            ccfg = ccfg.with_capacity(c);
+        }
+        if let Some(s) = self.shed {
+            ccfg = ccfg.with_shed(s);
         }
         ccfg
     }
@@ -525,6 +542,28 @@ impl ClusterSetup {
                 self.nodes - r.prefill_count(self.nodes)
             ),
             None => "off".into(),
+        }
+    }
+
+    fn elasticity_label(&self) -> String {
+        match (&self.capacity, &self.shed) {
+            (None, None) => "off".into(),
+            (cap, shed) => {
+                let mut parts = Vec::new();
+                if let Some(c) = cap {
+                    parts.push(format!(
+                        "autoscale (warm {}, min-live {}, boot {:.0}s, {}..{} backlog)",
+                        c.warm, c.min_live, c.boot_s, c.down_backlog, c.up_backlog
+                    ));
+                }
+                if let Some(s) = shed {
+                    parts.push(format!(
+                        "shed (depth {}, {} retries, {:.1}s backoff)",
+                        s.queue_depth, s.max_retries, s.backoff_s
+                    ));
+                }
+                parts.join(" + ")
+            }
         }
     }
 
@@ -588,6 +627,52 @@ fn cluster_setup(args: &Args, duration: f64, seed: u64) -> Result<ClusterSetup> 
         prefill_method: Method::parse(&node_cfg.disagg.prefill_method),
         decode_method: Method::parse(&node_cfg.disagg.decode_method),
     });
+    // Elastic capacity: `--capacity` (or `[capacity] enabled = true`)
+    // turns the autoscaler on; `--capacity off` overrides an enabling
+    // config. Sub-knobs override the `[capacity]` section defaults.
+    // Validated here so a bad shape fails with a message, not a panic
+    // inside the event loop.
+    let cap_sec = &node_cfg.capacity;
+    let capacity_on = match args.get("capacity") {
+        Some("off") => false,
+        Some(_) => true,
+        None => args.flag("capacity") || cap_sec.enabled,
+    };
+    let capacity = if capacity_on {
+        let c = CapacityConfig {
+            warm: args.usize_or("warm-pool", cap_sec.warm)?,
+            min_live: args.usize_or("min-live", cap_sec.min_live)?,
+            boot_s: args.f64_or("boot-s", cap_sec.boot_s)?,
+            check_epoch_s: args.f64_or("capacity-epoch-s", cap_sec.check_epoch_s)?,
+            up_backlog: args.f64_or("up-backlog", cap_sec.up_backlog)?,
+            down_backlog: args.f64_or("down-backlog", cap_sec.down_backlog)?,
+            down_idle_epochs: args.u64_or("down-idle-epochs", cap_sec.down_idle_epochs as u64)?
+                as u32,
+            warm_idle_w: args.f64_or("warm-idle-w", cap_sec.warm_idle_w)?,
+        };
+        c.validate(nodes).map_err(|e| anyhow!(e))?;
+        Some(c)
+    } else {
+        None
+    };
+    // Overload shedding: same enable/override scheme as --capacity.
+    let shed_sec = &node_cfg.shed;
+    let shed_on = match args.get("shed") {
+        Some("off") => false,
+        Some(_) => true,
+        None => args.flag("shed") || shed_sec.enabled,
+    };
+    let shed = if shed_on {
+        let s = ShedConfig {
+            queue_depth: args.f64_or("shed-depth", shed_sec.queue_depth)?,
+            backoff_s: args.f64_or("shed-backoff-s", shed_sec.backoff_s)?,
+            max_retries: args.u64_or("shed-retries", shed_sec.max_retries as u64)? as u32,
+        };
+        s.validate().map_err(|e| anyhow!(e))?;
+        Some(s)
+    } else {
+        None
+    };
     Ok(ClusterSetup {
         node_cfg,
         nodes,
@@ -600,6 +685,8 @@ fn cluster_setup(args: &Args, duration: f64, seed: u64) -> Result<ClusterSetup> 
         pool_ratio,
         disagg_ratio,
         disagg_cfg,
+        capacity,
+        shed,
     })
 }
 
@@ -617,11 +704,12 @@ fn dist_line(label: &str, h: &Histogram) -> String {
 }
 
 fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
+    use greenllm::util::json::Json;
     let setup = cluster_setup(args, duration, seed)?;
     let nodes = setup.nodes;
     let trace = trace_from_args(args, duration, seed)?;
     println!(
-        "cluster: {nodes} nodes ({}), {} requests ({:.1} QPS aggregate), lb {}, cap {}, faults {}, disagg {}",
+        "cluster: {nodes} nodes ({}), {} requests ({:.1} QPS aggregate), lb {}, cap {}, faults {}, disagg {}, elasticity {}",
         setup.shape_label(),
         trace.requests.len(),
         trace.qps(),
@@ -629,8 +717,16 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
         setup.cap_label(),
         setup.fault_label(),
         setup.disagg_label(),
+        setup.elasticity_label(),
     );
     let trace_out = args.get("trace-out");
+    let json_out = args.get("json");
+    // Fail fast on unwritable artifact paths before the (long) runs.
+    for p in [trace_out, json_out].into_iter().flatten() {
+        ensure_writable(p).map_err(|e| anyhow!(e))?;
+    }
+    let arrived = trace.requests.len() as u64;
+    let mut method_rows: Vec<(String, Json)> = Vec::new();
     for method in [Method::DefaultNv, Method::GreenLlm] {
         let ccfg = setup.ccfg(method);
         // --trace-out records the GreenLLM pass (the paper's policy) and
@@ -668,6 +764,34 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
                 r.fault_events, r.rerouted, r.wasted_tokens
             );
         }
+        if !r.straggler_nodes.is_empty() {
+            println!("  stragglers: degraded nodes {:?}", r.straggler_nodes);
+        }
+        if r.shed > 0 || r.shed_retries > 0 || r.deferred_arrivals > 0 {
+            println!(
+                "  shed: {} requests shed | {} re-offers | {} deferred (no routable node)",
+                r.shed, r.shed_retries, r.deferred_arrivals
+            );
+        }
+        if r.capacity_provisions > 0 || r.capacity_parks > 0 || r.warm_energy_j > 0.0 {
+            println!(
+                "  capacity: {} provisions | {} parks | warm-pool idle {:.1} kJ",
+                r.capacity_provisions,
+                r.capacity_parks,
+                r.warm_energy_j / 1e3
+            );
+        }
+        // Counts are conserved under every knob combination: each arrival
+        // either completed or was shed. A finished run that violates this
+        // lost a request silently — make that a hard error, not a log line.
+        if r.completed + r.shed != arrived {
+            return Err(anyhow!(
+                "conservation violated: {} arrived but {} completed + {} shed",
+                arrived,
+                r.completed,
+                r.shed
+            ));
+        }
         if let Some(m) = &r.migration {
             println!(
                 "  migration: {} handoffs | {:.1} MB KV moved | {:.1} J transfer | {} relays",
@@ -704,12 +828,56 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
             dist_line("TTFT", &r.ttft_hist),
             dist_line("TBT-P95", &r.tbt_hist)
         );
+        if json_out.is_some() {
+            method_rows.push((
+                method.name().to_string(),
+                Json::obj([
+                    ("arrived", Json::Num(arrived as f64)),
+                    ("completed", Json::Num(r.completed as f64)),
+                    ("shed", Json::Num(r.shed as f64)),
+                    ("shed_retries", Json::Num(r.shed_retries as f64)),
+                    ("deferred_arrivals", Json::Num(r.deferred_arrivals as f64)),
+                    ("conservation_ok", Json::Bool(r.completed + r.shed == arrived)),
+                    ("generated_tokens", Json::Num(r.generated_tokens as f64)),
+                    ("total_energy_j", Json::Num(r.total_energy_j)),
+                    ("warm_energy_j", Json::Num(r.warm_energy_j)),
+                    ("energy_per_token_j", Json::Num(r.energy_per_token_j())),
+                    ("ttft_pass_rate", Json::Num(r.ttft_pass_rate)),
+                    ("tbt_pass_rate", Json::Num(r.tbt_pass_rate)),
+                    ("rerouted", Json::Num(r.rerouted as f64)),
+                    ("wasted_tokens", Json::Num(r.wasted_tokens as f64)),
+                    ("fault_events", Json::Num(r.fault_events as f64)),
+                    ("capacity_provisions", Json::Num(r.capacity_provisions as f64)),
+                    ("capacity_parks", Json::Num(r.capacity_parks as f64)),
+                    (
+                        "straggler_nodes",
+                        Json::Arr(
+                            r.straggler_nodes
+                                .iter()
+                                .map(|&n| Json::Num(n as f64))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ));
+        }
         if record_this {
             let path = trace_out.unwrap();
             obs::perfetto::write_trace(&frec.borrow(), path)
                 .map_err(|e| anyhow!("trace-out {path}: {e}"))?;
             println!("  trace: wrote {path}");
         }
+    }
+    if let Some(path) = json_out {
+        let doc = Json::obj([
+            ("nodes", Json::Num(nodes as f64)),
+            ("lb", Json::Str(setup.lb.name().to_string())),
+            ("faults", Json::Str(setup.fault_label())),
+            ("elasticity", Json::Str(setup.elasticity_label())),
+            ("methods", Json::obj(method_rows)),
+        ]);
+        std::fs::write(path, doc.dump()).map_err(|e| anyhow!("cluster json {path}: {e}"))?;
+        println!("json: wrote {path}");
     }
     Ok(())
 }
@@ -733,6 +901,10 @@ fn report_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
         setup.fault_label(),
         setup.disagg_label(),
     );
+    // Fail fast on unwritable artifact paths before the recorded run.
+    for p in [args.get("trace-out"), args.get("json")].into_iter().flatten() {
+        ensure_writable(p).map_err(|e| anyhow!(e))?;
+    }
     let frec = setup.recorder();
     let r = run_cluster_recorded(&ccfg, &trace, &Default::default(), &frec);
     let rec = frec.into_inner();
@@ -846,6 +1018,9 @@ fn bench_cmd(args: &Args) -> Result<()> {
              to measure/bless wall numbers"
         ));
     }
+    if let Some(path) = args.get("json") {
+        ensure_writable(path).map_err(|e| anyhow!(e))?;
+    }
     println!(
         "greenllm bench ({mode} mode, seed {}): single-node replay, \
          4-node cluster + faults, mini-matrix, 32-node sweep",
@@ -933,6 +1108,9 @@ fn bench_mem_cmd(args: &Args, quick: bool, mode: &str) -> Result<()> {
              (--json) but never compared. Drop --baseline/--max-regress, or \
              run the wall-time bench (no --mem) to gate"
         ));
+    }
+    if let Some(path) = args.get("json") {
+        ensure_writable(path).map_err(|e| anyhow!(e))?;
     }
     let Some(results) = perf::run_bench_mem(quick) else {
         return Err(anyhow!(
@@ -1029,16 +1207,30 @@ COMMANDS
               (--nodes N --lb rr|leastwork|jsq|phase|powergrant
                --node-spec dgx,eff,legacy|half|big --power-cap-w W
                --power-epoch-s S --arbiter demand|slo-pressure
-               --faults none|onedown|flap|\"down@40:1,up@80:1\"
+               --faults none|onedown|flap|spot|straggler|
+                        \"down@40:1,up@80:1,preempt@60:2:15,slow@30:3:2.0,
+                         rackdown@50:0-3\"
                --disagg off|P:D (prefill/decode pool split with explicit
                KV-transfer stream migration; link model via [disagg] TOML)
                --pool-ratio P:D (phase-balancer long-pool split)
+               --capacity [off] (endogenous autoscaler: boots cold nodes on
+               backlog, parks idle ones; --warm-pool N --min-live N
+               --boot-s S --capacity-epoch-s S --up-backlog F
+               --down-backlog F --down-idle-epochs N --warm-idle-w W;
+               defaults from [capacity] TOML)
+               --shed [off] (graceful overload shedding at ingress with
+               bounded retry/backoff; --shed-depth F --shed-backoff-s S
+               --shed-retries N; defaults from [shed] TOML;
+               completed + shed == arrived is enforced)
+               --json out.json (per-method conservation/energy/elasticity
+               counters — the chaos-smoke CI contract)
                --trace-out t.json (Perfetto trace of the GreenLLM pass)
                --trace ...)
   report      flight-recorder post-run analysis: run the configured method
               once with recording on, attribute every TTFT/TBT violation to
               a dominant cause (queueing-wait | low-clock-prefill |
-              migration-wire-delay | fault-reroute | decode-clock-undershoot)
+              migration-wire-delay | fault-reroute | decode-clock-undershoot |
+              admission-backoff)
               and print per-node tables + TTFT/TBT/power distributions
               (same deployment flags as cluster; --trace-out t.json
                --json report.json)

@@ -5,8 +5,11 @@
 //! The taxonomy is **total and deterministic** — every violation maps to
 //! exactly one cause, so the table always sums to the violation count:
 //!
-//! - **TTFT** (scored against the route-class target): `fault-reroute` if
-//!   any fault touched the request; otherwise the larger of queue-wait vs
+//! - **TTFT** (scored against the route-class target):
+//!   `admission-backoff` if the overload gate deferred the request before
+//!   it was ever admitted (the system was past its shed watermark — that
+//!   pressure, not clocks, is the story); else `fault-reroute` if any
+//!   fault touched the request; otherwise the larger of queue-wait vs
 //!   prefill-execution time decides `queueing-wait` vs `low-clock-prefill`
 //!   (ties go to queueing — the scheduler owns the tie). Migration wire
 //!   time never appears here because TTFT is anchored at the *sender's*
@@ -39,16 +42,20 @@ pub enum Cause {
     FaultReroute,
     /// Decode rounds ran too slow — the decode clock undershot.
     DecodeClockUndershoot,
+    /// The overload gate deferred the request with backoff before
+    /// admission — shed-policy pressure, not clocks, dominated.
+    AdmissionBackoff,
 }
 
 impl Cause {
     /// All causes, in table order.
-    pub const ALL: [Cause; 5] = [
+    pub const ALL: [Cause; 6] = [
         Cause::QueueingWait,
         Cause::LowClockPrefill,
         Cause::MigrationWireDelay,
         Cause::FaultReroute,
         Cause::DecodeClockUndershoot,
+        Cause::AdmissionBackoff,
     ];
 
     /// Stable kebab-case label (tables, JSON keys).
@@ -59,6 +66,7 @@ impl Cause {
             Cause::MigrationWireDelay => "migration-wire-delay",
             Cause::FaultReroute => "fault-reroute",
             Cause::DecodeClockUndershoot => "decode-clock-undershoot",
+            Cause::AdmissionBackoff => "admission-backoff",
         }
     }
 
@@ -99,7 +107,7 @@ pub struct Attribution {
     pub violations: Vec<Violation>,
     /// `counts[node][cause_idx]` violation counts (cause order =
     /// [`Cause::ALL`]).
-    pub counts: Vec<[u64; 5]>,
+    pub counts: Vec<[u64; 6]>,
     /// TTFT violations attributed.
     pub ttft_violations: u64,
     /// TBT violations attributed.
@@ -115,8 +123,8 @@ impl Attribution {
     }
 
     /// Per-cause totals across nodes, in [`Cause::ALL`] order.
-    pub fn by_cause(&self) -> [u64; 5] {
-        let mut out = [0u64; 5];
+    pub fn by_cause(&self) -> [u64; 6] {
+        let mut out = [0u64; 6];
         for row in &self.counts {
             for (o, c) in out.iter_mut().zip(row) {
                 *o += c;
@@ -195,7 +203,7 @@ pub fn attribute(rec: &FlightRecorder, targets: &SloTargets) -> Attribution {
     let nodes = rec.nodes().max(1);
     let mut out = Attribution {
         violations: Vec::new(),
-        counts: vec![[0u64; 5]; nodes],
+        counts: vec![[0u64; 6]; nodes],
         ttft_violations: 0,
         tbt_violations: 0,
         finished: 0,
@@ -220,7 +228,16 @@ pub fn attribute(rec: &FlightRecorder, targets: &SloTargets) -> Attribution {
         };
         let ttft_target = targets.ttft_for(scored.route_class());
         if ttft_s > ttft_target {
-            let (cause, node) = if r.faulted {
+            let (cause, node) = if rec.admission_retries(id) > 0 {
+                // The overload gate held this request back before it was
+                // admitted: it landed on a saturated system by
+                // construction, so the deferral dominates any later
+                // queue/clock story.
+                (
+                    Cause::AdmissionBackoff,
+                    r.last_node_of(SegKind::Queued).unwrap_or(0),
+                )
+            } else if r.faulted {
                 (Cause::FaultReroute, last_touched(r))
             } else {
                 let queued = r.time_in(SegKind::Queued);
@@ -377,6 +394,25 @@ mod tests {
         let a = attribute(&fr, &targets());
         assert_eq!(a.total(), 1);
         assert_eq!(a.violations[0].cause, Cause::DecodeClockUndershoot);
+    }
+
+    #[test]
+    fn retried_request_ttft_violation_is_admission_backoff() {
+        let mut fr = FlightRecorder::with_defaults(2);
+        // The overload gate deferred request 1 twice before admitting it.
+        fr.admission_retry(0.0, 1, 1);
+        fr.admission_retry(2.0, 1, 2);
+        fr.arrive(1, 4.0, 1, 100, 4);
+        fr.prefill_start(1, 4.5, 1, 0); // queue-dominated on its own
+        fr.prefill_done(1, 4.6, 1);
+        fr.first_token(1, 4.6, 1);
+        fr.finish(1, 4.8, 1, 0.6, 0.02);
+        let a = attribute(&fr, &targets());
+        assert_eq!(a.total(), 1);
+        assert_eq!(a.violations[0].cause, Cause::AdmissionBackoff);
+        assert_eq!(a.violations[0].node, 1);
+        assert_eq!(a.by_cause()[Cause::AdmissionBackoff.idx()], 1);
+        assert!(a.render_table().contains("admission-backoff"));
     }
 
     #[test]

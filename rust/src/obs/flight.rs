@@ -234,12 +234,18 @@ impl SeriesRing {
 }
 
 /// The live recorder: request records keyed by id, one telemetry ring per
-/// node, and a fault-transition log.
+/// node, a fault-transition log, and the elasticity side-ledgers
+/// (admission backoffs, permanent sheds, capacity transitions). Shed
+/// requests never reach a node, so they have no [`ReqRecord`] — only a
+/// ledger entry.
 #[derive(Debug, Clone)]
 pub struct FlightRecorder {
     reqs: BTreeMap<u64, ReqRecord>,
     series: Vec<SeriesRing>,
     faults: Vec<(f64, usize, bool)>,
+    admission_retries: BTreeMap<u64, u32>,
+    shed: Vec<(f64, u64)>,
+    capacity_log: Vec<(f64, usize, &'static str)>,
     series_cap: usize,
 }
 
@@ -251,6 +257,9 @@ impl FlightRecorder {
             reqs: BTreeMap::new(),
             series: (0..nodes).map(|_| SeriesRing::new(series_cap)).collect(),
             faults: Vec::new(),
+            admission_retries: BTreeMap::new(),
+            shed: Vec::new(),
+            capacity_log: Vec::new(),
             series_cap,
         }
     }
@@ -283,6 +292,24 @@ impl FlightRecorder {
     /// Fault transitions as `(t, node, up)`.
     pub fn faults(&self) -> &[(f64, usize, bool)] {
         &self.faults
+    }
+
+    /// How many times the overload gate deferred request `id` with
+    /// backoff before it was admitted (or shed). 0 for the common case.
+    pub fn admission_retries(&self, id: u64) -> u32 {
+        self.admission_retries.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Permanently shed requests as `(t, id)`, in shed order.
+    pub fn shed_requests(&self) -> &[(f64, u64)] {
+        &self.shed
+    }
+
+    /// Elastic-capacity transitions as `(t, node, what)`, where `what`
+    /// is `"drain"`, `"slow"`, `"restore"`, `"park"`, `"boot"` or
+    /// `"join"` — in event order.
+    pub fn capacity_log(&self) -> &[(f64, usize, &'static str)] {
+        &self.capacity_log
     }
 
     /// `(finished, aborted, open)` request counts — the "every arrival
@@ -469,6 +496,22 @@ impl Recorder for FlightRecorder {
         }
         self.series[node].push(s);
     }
+
+    fn admission_retry(&mut self, t: f64, id: u64, attempt: u32) {
+        debug_assert!(t.is_finite(), "non-finite retry time {t}");
+        let r = self.admission_retries.entry(id).or_insert(0);
+        *r = (*r).max(attempt);
+    }
+
+    fn shed(&mut self, t: f64, id: u64) {
+        debug_assert!(t.is_finite(), "non-finite shed time {t}");
+        self.shed.push((t, id));
+    }
+
+    fn capacity(&mut self, node: usize, t: f64, what: &'static str) {
+        debug_assert!(t.is_finite(), "non-finite capacity-transition time {t}");
+        self.capacity_log.push((t, node, what));
+    }
 }
 
 /// A `Copy` handle sharing one [`FlightRecorder`] between the cluster loop
@@ -516,6 +559,15 @@ impl Recorder for SharedRecorder<'_> {
     }
     fn sample(&mut self, node: usize, s: NodeSample) {
         self.0.borrow_mut().sample(node, s);
+    }
+    fn admission_retry(&mut self, t: f64, id: u64, attempt: u32) {
+        self.0.borrow_mut().admission_retry(t, id, attempt);
+    }
+    fn shed(&mut self, t: f64, id: u64) {
+        self.0.borrow_mut().shed(t, id);
+    }
+    fn capacity(&mut self, node: usize, t: f64, what: &'static str) {
+        self.0.borrow_mut().capacity(node, t, what);
     }
 }
 
@@ -613,6 +665,24 @@ mod tests {
         fr.arrive(0, 0.0, 1, 50, 2);
         assert!(fr.span_check(false).is_ok());
         assert!(fr.span_check(true).is_err());
+    }
+
+    #[test]
+    fn elasticity_ledgers_record_retries_sheds_and_transitions() {
+        let mut fr = FlightRecorder::with_defaults(2);
+        fr.admission_retry(1.0, 9, 1);
+        fr.admission_retry(3.0, 9, 2);
+        fr.shed(7.0, 9);
+        fr.capacity(1, 5.0, "drain");
+        fr.capacity(1, 6.0, "park");
+        assert_eq!(fr.admission_retries(9), 2);
+        assert_eq!(fr.admission_retries(8), 0);
+        assert_eq!(fr.shed_requests(), &[(7.0, 9)]);
+        assert_eq!(fr.capacity_log(), &[(5.0, 1, "drain"), (6.0, 1, "park")]);
+        // A shed request never reaches a node: no record, and the span
+        // invariants stay green.
+        assert!(fr.request(9).is_none());
+        fr.span_check(true).unwrap();
     }
 
     #[test]

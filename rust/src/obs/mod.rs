@@ -121,6 +121,18 @@ pub trait Recorder {
     /// A full telemetry sample for `node` (epoch or clock-change edge).
     #[inline]
     fn sample(&mut self, _node: usize, _s: NodeSample) {}
+    /// The overload gate deferred an arrival: re-offer `attempt`
+    /// (1-based) was scheduled with backoff.
+    #[inline]
+    fn admission_retry(&mut self, _t: f64, _id: u64, _attempt: u32) {}
+    /// The overload gate shed the request permanently (out of retries).
+    #[inline]
+    fn shed(&mut self, _t: f64, _id: u64) {}
+    /// An elastic-capacity transition on `node`: `"drain"` (spot notice),
+    /// `"slow"`/`"restore"` (straggler), `"park"`/`"boot"`/`"join"`
+    /// (capacity controller).
+    #[inline]
+    fn capacity(&mut self, _node: usize, _t: f64, _what: &'static str) {}
 }
 
 /// The default recorder: every hook is a no-op and `ENABLED == false`, so

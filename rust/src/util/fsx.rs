@@ -1,0 +1,55 @@
+//! Filesystem helpers for the CLI layer.
+
+use std::fs::OpenOptions;
+use std::path::Path;
+
+/// Probe that `path` can be created and written *now*, so commands that
+/// only write their artifact at the end (`--json`, `--trace-out`,
+/// `--md`) fail fast — before a multi-minute run — when the destination
+/// is a typo'd directory, a directory itself, or otherwise unwritable.
+///
+/// Non-destructive: an existing file is opened in append mode and left
+/// byte-identical; a file that existed only because of the probe is
+/// removed again.
+pub fn ensure_writable(path: &str) -> Result<(), String> {
+    let existed = Path::new(path).exists();
+    OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map(drop)
+        .map_err(|e| format!("output path {path:?} is not writable: {e}"))?;
+    if !existed {
+        let _ = std::fs::remove_file(path);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writable_paths_pass_and_the_probe_leaves_no_trace() {
+        let dir = std::env::temp_dir().join("greenllm_fsx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let fresh = dir.join("fresh.json");
+        let _ = std::fs::remove_file(&fresh);
+        ensure_writable(fresh.to_str().unwrap()).unwrap();
+        assert!(!fresh.exists(), "probe must not leave a file behind");
+        // An existing file stays byte-identical through the probe.
+        let kept = dir.join("kept.json");
+        std::fs::write(&kept, "precious").unwrap();
+        ensure_writable(kept.to_str().unwrap()).unwrap();
+        assert_eq!(std::fs::read_to_string(&kept).unwrap(), "precious");
+    }
+
+    #[test]
+    fn bad_targets_fail_with_the_path_in_the_error() {
+        // Missing parent directory.
+        let err = ensure_writable("no_such_dir_greenllm/out.json").unwrap_err();
+        assert!(err.contains("no_such_dir_greenllm"), "{err}");
+        // A directory is not a writable file target.
+        assert!(ensure_writable(std::env::temp_dir().to_str().unwrap()).is_err());
+    }
+}

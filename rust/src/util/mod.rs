@@ -7,6 +7,7 @@
 pub mod cli;
 pub mod count_alloc;
 pub mod error;
+pub mod fsx;
 pub mod json;
 pub mod polyfit;
 pub mod ptest;

@@ -6,8 +6,8 @@
 
 use greenllm::config::{Config, Method};
 use greenllm::coordinator::cluster::{
-    run_cluster, ArbiterStrategy, ClusterConfig, DisaggConfig, FaultPlan, FaultSpec, KvLinkModel,
-    LbPolicy, NodeSpec, PoolRatio,
+    run_cluster, ArbiterStrategy, CapacityConfig, ClusterConfig, DisaggConfig, FaultPlan,
+    FaultSpec, KvLinkModel, LbPolicy, NodeSpec, PoolRatio, ShedConfig,
 };
 use greenllm::coordinator::engine::{run, RunOptions};
 use greenllm::workload::alibaba::{generate, ChatParams};
@@ -867,6 +867,296 @@ fn recorded_run_bit_exact_with_recorder_off_property() {
             "recorder missed requests: {} records < {} completed",
             rec.requests().count(),
             on.completed
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// PR 9: elastic capacity under correlated failure — autoscaler, spot
+// preemption, stragglers, and graceful overload shedding.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn inert_elasticity_knobs_are_bit_exact_with_no_elasticity_layer() {
+    // The inert spellings of both new subsystems — a shed gate that never
+    // trips (infinite depth) and a capacity controller with nothing to
+    // park (warm 0, watermarks it can never cross) — must reproduce the
+    // pre-PR event loop bit-for-bit: the controller's check events fire
+    // but mutate nothing, and the gate admits every arrival untouched.
+    let trace = chat(10.0, 40.0, 19);
+    let base = ClusterConfig::new(3, LbPolicy::JoinShortestQueue, node_cfg(Method::GreenLlm, 7))
+        .with_faults(FaultSpec::Flap.plan(3, trace.duration_s));
+    let inert = base
+        .clone()
+        .with_capacity(CapacityConfig {
+            warm: 0,
+            up_backlog: f64::INFINITY,
+            down_backlog: 0.0,
+            ..CapacityConfig::default()
+        })
+        .with_shed(ShedConfig {
+            queue_depth: f64::INFINITY,
+            ..ShedConfig::default()
+        });
+    let a = run_cluster(&base, &trace, &RunOptions::default());
+    let b = run_cluster(&inert, &trace, &RunOptions::default());
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.assignment, b.assignment);
+    assert_eq!(a.rerouted, b.rerouted);
+    assert_eq!(b.shed, 0);
+    assert_eq!(b.shed_retries, 0);
+    assert_eq!(b.capacity_provisions, 0);
+    assert_eq!(b.capacity_parks, 0);
+    assert_eq!(b.warm_energy_j.to_bits(), 0f64.to_bits());
+    for (x, y) in a.per_node.iter().zip(&b.per_node) {
+        assert_eq!(x.events_processed, y.events_processed);
+        assert_eq!(x.total_energy_j.to_bits(), y.total_energy_j.to_bits());
+    }
+}
+
+#[test]
+fn spot_preemption_drains_before_the_kill_and_conserves() {
+    // The spot preset issues a drain notice, then the preemption, then a
+    // later recovery. Everything the victim was serving must finish
+    // somewhere: zero dropped requests, exact token totals.
+    let trace = chat(12.0, 60.0, 23);
+    let expect_tokens: u64 = trace.requests.iter().map(|r| r.output_len as u64).sum();
+    for nodes in [2, 3] {
+        let ccfg = ClusterConfig::new(
+            nodes,
+            LbPolicy::JoinShortestQueue,
+            node_cfg(Method::GreenLlm, 9),
+        )
+        .with_faults(FaultSpec::Spot.plan(nodes, trace.duration_s));
+        let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+        assert_eq!(
+            r.completed as usize,
+            trace.requests.len(),
+            "x{nodes}: dropped requests under spot preemption"
+        );
+        assert_eq!(r.generated_tokens, expect_tokens, "x{nodes}");
+        assert!(r.fault_events >= 2, "x{nodes}: drain + down must fire");
+    }
+}
+
+#[test]
+fn straggler_node_keeps_serving_and_is_reported() {
+    // A straggler is degraded, not dead: it must stay routable, keep
+    // completing requests, and be named in the run's straggler ledger.
+    let trace = chat(9.0, 60.0, 27);
+    let ccfg = ClusterConfig::new(3, LbPolicy::RoundRobin, node_cfg(Method::GreenLlm, 9))
+        .with_faults(FaultSpec::Straggler.plan(3, trace.duration_s));
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len());
+    assert!(
+        !r.straggler_nodes.is_empty(),
+        "straggler plan must report its victims"
+    );
+    for &n in &r.straggler_nodes {
+        assert!(
+            r.per_node[n].completed > 0,
+            "degraded node {n} stopped serving: {:?}",
+            r.assignment
+        );
+    }
+    assert_eq!(r.rerouted, 0, "degradation must not re-home anything");
+}
+
+#[test]
+fn capacity_controller_provisions_under_load_and_meters_warm_energy() {
+    // One warm spare on a 3-node cluster under heavy load: the backlog
+    // crosses the high watermark, the controller boots the spare, and the
+    // spare's parked time is metered as warm-pool energy. The spare must
+    // actually serve after joining.
+    let trace = chat(30.0, 60.0, 31);
+    let ccfg = ClusterConfig::new(
+        3,
+        LbPolicy::JoinShortestQueue,
+        node_cfg(Method::GreenLlm, 9),
+    )
+    .with_capacity(CapacityConfig {
+        warm: 1,
+        min_live: 1,
+        boot_s: 3.0,
+        check_epoch_s: 1.0,
+        up_backlog: 1.0,
+        down_backlog: 0.0,
+        down_idle_epochs: 3,
+        warm_idle_w: 350.0,
+    });
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len(), "dropped requests");
+    assert!(r.capacity_provisions >= 1, "spare never booted");
+    assert!(r.warm_energy_j > 0.0, "parked time must cost warm energy");
+    assert!(
+        r.per_node[2].completed > 0,
+        "booted spare never served: {:?}",
+        r.assignment
+    );
+    // Warm energy is part of the cluster total, not a side ledger.
+    let node_sum: f64 = r.per_node.iter().map(|n| n.total_energy_j).sum();
+    assert!(r.total_energy_j >= node_sum, "warm energy missing from total");
+}
+
+#[test]
+fn capacity_controller_parks_idle_nodes_with_hysteresis() {
+    // A trickle of load on 3 nodes: after the idle streak the controller
+    // parks surplus nodes (never below min_live) and their idle time
+    // accrues warm-pool energy until the horizon.
+    let trace = chat(1.0, 60.0, 37);
+    let ccfg = ClusterConfig::new(3, LbPolicy::JoinShortestQueue, node_cfg(Method::GreenLlm, 9))
+        .with_capacity(CapacityConfig {
+            warm: 0,
+            min_live: 1,
+            boot_s: 5.0,
+            check_epoch_s: 2.0,
+            up_backlog: 50.0,
+            down_backlog: 0.5,
+            down_idle_epochs: 2,
+            warm_idle_w: 350.0,
+        });
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed as usize, trace.requests.len(), "park lost work");
+    assert!(r.capacity_parks >= 1, "idle fleet never scaled down");
+    assert!(r.warm_energy_j > 0.0, "parked nodes must meter idle draw");
+}
+
+#[test]
+fn overload_shedding_is_bounded_and_counts_are_conserved() {
+    // Sustained overload on a small fleet with a shallow gate: some
+    // arrivals are deferred and retried, some shed permanently — but
+    // every arrival lands in exactly one terminal bucket.
+    let trace = chat(60.0, 25.0, 41);
+    let total = trace.requests.len() as u64;
+    let ccfg = ClusterConfig::new(
+        2,
+        LbPolicy::JoinShortestQueue,
+        node_cfg(Method::GreenLlm, 9),
+    )
+    .with_shed(ShedConfig {
+        queue_depth: 2.0,
+        backoff_s: 1.0,
+        max_retries: 2,
+    });
+    let r = run_cluster(&ccfg, &trace, &RunOptions::default());
+    assert_eq!(r.completed + r.shed, total, "an arrival vanished");
+    assert!(r.shed > 0, "gate never shed under 30 QPS/node");
+    assert!(r.shed_retries > 0, "shed without any re-offer attempts");
+    assert!(r.completed > 0, "gate shed everything");
+    assert_eq!(
+        r.assignment.iter().sum::<usize>() as u64,
+        r.completed,
+        "assignment must count only admitted requests"
+    );
+    let per: u64 = r.per_node.iter().map(|n| n.completed).sum();
+    assert_eq!(per, r.completed);
+}
+
+#[test]
+fn combined_churn_property_conserves_and_matches_scan_oracle() {
+    // The PR's headline property: spot preemption + stragglers +
+    // rack-correlated loss + power-cap churn + disaggregation + the
+    // autoscaler + the shed gate, over random balancers and arbiters —
+    // counts stay conserved (`completed + shed == arrived`, zero silent
+    // drops) and the O(log N) heap scheduler stays BIT-equal with the
+    // kept-verbatim linear-scan oracle, elasticity counters included.
+    use greenllm::coordinator::cluster::events::run_cluster_scan_oracle;
+    use greenllm::util::ptest::check;
+    use greenllm::util::rng::Pcg64;
+
+    let lbs = LbPolicy::all();
+    check("elastic_chaos_conservation", 10, |g: &mut Pcg64| {
+        let nodes = 3 + g.index(3); // 3..=5
+        let lb = lbs[g.index(lbs.len())];
+        let qps = 6.0 + g.f64() * 10.0;
+        let duration = 25.0 + g.f64() * 15.0;
+        let trace = chat(qps, duration, g.next_u64());
+        let total = trace.requests.len() as u64;
+        let expect_tokens: u64 = trace.requests.iter().map(|r| r.output_len as u64).sum();
+        let mut ccfg = ClusterConfig::new(nodes, lb, node_cfg(Method::GreenLlm, g.next_u64()));
+        // Chaos axis: spot churn, stragglers, or a rack-correlated loss.
+        let fault = match g.index(4) {
+            0 => FaultSpec::Spot.plan(nodes, duration),
+            1 => FaultSpec::Straggler.plan(nodes, duration),
+            2 => FaultPlan::parse("rackdown@12:0-1,rackup@24:0-1").unwrap(),
+            _ => FaultSpec::Flap.plan(nodes, duration),
+        };
+        ccfg = ccfg.with_faults(fault);
+        if g.chance(0.5) {
+            ccfg = ccfg.with_power_cap(nodes as f64 * (1800.0 + g.f64() * 1500.0), 0.5);
+            if g.chance(0.5) {
+                ccfg = ccfg.with_arbiter(ArbiterStrategy::SloPressure);
+            }
+        }
+        if g.chance(0.3) {
+            ccfg = ccfg
+                .with_pool_ratio(PoolRatio::parse("1:1").unwrap())
+                .with_disagg(DisaggConfig::default());
+        }
+        if g.chance(0.5) {
+            ccfg = ccfg.with_capacity(CapacityConfig {
+                warm: g.index(2), // 0 or 1; nodes >= 3 keeps min_live feasible
+                min_live: 1,
+                boot_s: 2.0 + g.f64() * 8.0,
+                check_epoch_s: 1.0 + g.f64() * 3.0,
+                up_backlog: 2.0 + g.f64() * 4.0,
+                down_backlog: 0.1 + g.f64() * 0.3,
+                down_idle_epochs: 2,
+                warm_idle_w: 350.0,
+            });
+        }
+        if g.chance(0.5) {
+            ccfg = ccfg.with_shed(ShedConfig {
+                queue_depth: 4.0 + g.f64() * 8.0,
+                backoff_s: 0.5 + g.f64() * 2.0,
+                max_retries: 1 + g.index(3) as u32,
+            });
+        }
+        let a = run_cluster(&ccfg, &trace, &RunOptions::default());
+        greenllm::prop_assert!(
+            a.completed + a.shed == total,
+            "count conservation broke: {} completed + {} shed != {total} \
+             ({lb:?} x{nodes})",
+            a.completed,
+            a.shed
+        );
+        greenllm::prop_assert!(
+            a.assignment.iter().sum::<usize>() as u64 == a.completed,
+            "assignment accounting broke ({lb:?} x{nodes})"
+        );
+        let per: u64 = a.per_node.iter().map(|n| n.completed).sum();
+        greenllm::prop_assert!(per == a.completed, "per-node completion accounting broke");
+        if a.shed == 0 {
+            greenllm::prop_assert!(
+                a.generated_tokens == expect_tokens,
+                "token conservation broke with nothing shed ({lb:?} x{nodes})"
+            );
+        } else {
+            greenllm::prop_assert!(
+                a.generated_tokens < expect_tokens,
+                "shed requests must not have generated their tokens"
+            );
+        }
+        let b = run_cluster_scan_oracle(&ccfg, &trace, &RunOptions::default());
+        greenllm::prop_assert!(
+            a.total_energy_j.to_bits() == b.total_energy_j.to_bits(),
+            "energy diverged from scan oracle under elastic chaos ({lb:?} x{nodes})"
+        );
+        greenllm::prop_assert!(
+            a.events_processed == b.events_processed && a.assignment == b.assignment,
+            "interleaving diverged from scan oracle under elastic chaos"
+        );
+        greenllm::prop_assert!(
+            a.shed == b.shed
+                && a.shed_retries == b.shed_retries
+                && a.deferred_arrivals == b.deferred_arrivals
+                && a.capacity_provisions == b.capacity_provisions
+                && a.capacity_parks == b.capacity_parks
+                && a.warm_energy_j.to_bits() == b.warm_energy_j.to_bits()
+                && a.straggler_nodes == b.straggler_nodes,
+            "elasticity counters diverged from scan oracle"
         );
         Ok(())
     });
