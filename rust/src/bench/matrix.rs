@@ -288,6 +288,11 @@ pub struct MatrixConfig {
     /// Fault-schedule axis (collapsed to its first entry at 1 node,
     /// where presets resolve to the empty plan anyway).
     pub faults: Vec<FaultSpec>,
+    /// Control-plane fault axis (`ctlnoise`/`ctlblackout`/... schedules;
+    /// see [`FaultPlan::parse`](crate::coordinator::cluster::FaultPlan::parse)).
+    /// Each entry is merged into the cell's fault plan — never collapsed,
+    /// since an explicit control schedule is meaningful even at 1 node.
+    pub ctl_faults: Vec<FaultSpec>,
     /// Power-arbiter strategy axis (collapsed to its first entry for
     /// uncapped cells, where no arbiter runs).
     pub arbiters: Vec<ArbiterStrategy>,
@@ -322,6 +327,7 @@ impl Default for MatrixConfig {
             power_caps_w: vec![0.0],
             shapes: vec!["uniform".into()],
             faults: vec![FaultSpec::None],
+            ctl_faults: vec![FaultSpec::None],
             arbiters: vec![ArbiterStrategy::DemandProportional],
             disaggs: vec!["off".into()],
         }
@@ -347,6 +353,8 @@ pub struct MatrixCell {
     pub shape: String,
     /// Fault schedule (resolved against nodes × duration at run time).
     pub fault: FaultSpec,
+    /// Control-plane fault schedule, merged into `fault`'s plan.
+    pub ctl_fault: FaultSpec,
     /// Power-arbiter strategy (only exercised when `power_cap_w > 0`).
     pub arbiter: ArbiterStrategy,
     /// Disaggregation: `"off"` or a `P:D` pool ratio.
@@ -382,27 +390,30 @@ impl MatrixConfig {
                     for &lb in lbs {
                         for shape in &self.shapes {
                             for fault in faults {
-                                for disagg in disaggs {
-                                    for &cap in &self.power_caps_w {
-                                        let arbiters: &[ArbiterStrategy] = if cap == 0.0 {
-                                            &self.arbiters[..self.arbiters.len().min(1)]
-                                        } else {
-                                            &self.arbiters
-                                        };
-                                        for &arbiter in arbiters {
-                                            for method in &self.methods {
-                                                cells.push(MatrixCell {
-                                                    trace: trace.clone(),
-                                                    method: *method,
-                                                    margin: *margin,
-                                                    nodes,
-                                                    lb,
-                                                    power_cap_w: cap,
-                                                    shape: shape.clone(),
-                                                    fault: fault.clone(),
-                                                    arbiter,
-                                                    disagg: disagg.clone(),
-                                                });
+                                for ctl_fault in &self.ctl_faults {
+                                    for disagg in disaggs {
+                                        for &cap in &self.power_caps_w {
+                                            let arbiters: &[ArbiterStrategy] = if cap == 0.0 {
+                                                &self.arbiters[..self.arbiters.len().min(1)]
+                                            } else {
+                                                &self.arbiters
+                                            };
+                                            for &arbiter in arbiters {
+                                                for method in &self.methods {
+                                                    cells.push(MatrixCell {
+                                                        trace: trace.clone(),
+                                                        method: *method,
+                                                        margin: *margin,
+                                                        nodes,
+                                                        lb,
+                                                        power_cap_w: cap,
+                                                        shape: shape.clone(),
+                                                        fault: fault.clone(),
+                                                        ctl_fault: ctl_fault.clone(),
+                                                        arbiter,
+                                                        disagg: disagg.clone(),
+                                                    });
+                                                }
                                             }
                                         }
                                     }
@@ -455,6 +466,8 @@ pub struct CellResult {
     pub shape: String,
     /// Fault-schedule label (`"none"` = no chaos).
     pub fault: String,
+    /// Control-plane fault-schedule label (`"none"` = clean control plane).
+    pub ctl_fault: String,
     /// Arbiter strategy name; "-" for uncapped cells.
     pub arbiter: String,
     /// Disaggregation spelling (`"off"` = colocated; single-node cells
@@ -496,6 +509,14 @@ pub struct CellResult {
     pub deferred_arrivals: u64,
     /// Nodes the fault plan degraded (straggler cells), ascending.
     pub straggler_nodes: Vec<usize>,
+    /// Supervisor engaged→fallback transitions across nodes (ctl cells).
+    pub supervisor_fallbacks: u64,
+    /// Supervisor probation→engaged re-engagements across nodes.
+    pub supervisor_reengages: u64,
+    /// Clock writes the control plane dropped outright (ctl cells).
+    pub ctl_dropped_writes: u64,
+    /// Clock writes the control plane applied late (ctl cells).
+    pub ctl_delayed_writes: u64,
     /// Highest measured cluster draw across arbiter epochs (capped cells).
     pub peak_power_w: Option<f64>,
     /// Migration ledger (disaggregated cells only).
@@ -516,13 +537,14 @@ pub struct CellResult {
 
 /// Grouping key for the defaultNV energy baseline: the full scenario
 /// coordinate minus the policy (trace, margin, nodes, lb, cap, shape,
-/// fault, arbiter, disagg).
+/// fault, ctl-fault, arbiter, disagg).
 type ScenarioKey = (
     String,
     u64,
     usize,
     String,
     u64,
+    String,
     String,
     String,
     String,
@@ -538,6 +560,7 @@ fn scenario_key(r: &CellResult) -> ScenarioKey {
         r.power_cap_w.to_bits(),
         r.shape.clone(),
         r.fault.clone(),
+        r.ctl_fault.clone(),
         r.arbiter.clone(),
         r.disagg.clone(),
     )
@@ -546,7 +569,10 @@ fn scenario_key(r: &CellResult) -> ScenarioKey {
 fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult {
     let specs = NodeSpec::parse_list(&cell.shape)
         .unwrap_or_else(|e| panic!("bad shape axis {:?}: {e}", cell.shape));
-    let fault_plan = cell.fault.plan(cell.nodes, cfg.duration_s);
+    let fault_plan = cell
+        .fault
+        .plan(cell.nodes, cfg.duration_s)
+        .merged(cell.ctl_fault.plan(cell.nodes, cfg.duration_s));
     let mut run_cfg = Config {
         model: cfg.model.clone(),
         method: cell.method,
@@ -568,6 +594,7 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
         power_cap_w: cell.power_cap_w,
         shape: cell.shape.clone(),
         fault: cell.fault.name(),
+        ctl_fault: cell.ctl_fault.name(),
         arbiter: if cell.power_cap_w > 0.0 {
             cell.arbiter.name().into()
         } else {
@@ -595,6 +622,10 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
         wasted_tokens: 0,
         deferred_arrivals: 0,
         straggler_nodes: Vec::new(),
+        supervisor_fallbacks: 0,
+        supervisor_reengages: 0,
+        ctl_dropped_writes: 0,
+        ctl_delayed_writes: 0,
         peak_power_w: None,
         migration: None,
         node_migration: Vec::new(),
@@ -675,6 +706,10 @@ fn run_cell(cfg: &MatrixConfig, cell: &MatrixCell, trace: &Trace) -> CellResult 
         wasted_tokens: r.wasted_tokens,
         deferred_arrivals: r.deferred_arrivals,
         straggler_nodes: r.straggler_nodes.clone(),
+        supervisor_fallbacks: r.supervisor_fallbacks,
+        supervisor_reengages: r.supervisor_reengages,
+        ctl_dropped_writes: r.ctl_dropped_writes,
+        ctl_delayed_writes: r.ctl_delayed_writes,
         peak_power_w: r.power.as_ref().map(|p| p.peak_measured_w),
         migration: r.migration,
         node_migration: r.node_migration.clone(),
@@ -754,6 +789,7 @@ pub fn render_table(results: &[CellResult]) -> Table {
         "LB",
         "Shape",
         "Fault",
+        "CtlFault",
         "Arb",
         "PD",
         "Cap(W)",
@@ -776,6 +812,7 @@ pub fn render_table(results: &[CellResult]) -> Table {
             r.lb.clone(),
             r.shape.clone(),
             r.fault.clone(),
+            r.ctl_fault.clone(),
             r.arbiter.clone(),
             if r.disagg == "off" {
                 "-".into()
@@ -820,12 +857,14 @@ pub fn render_markdown(cfg: &MatrixConfig, results: &[CellResult]) -> String {
         cfg.seed,
         results.len()
     ));
-    out.push_str("| Trace | Policy | Margin | Nodes | LB | Shape | Fault | Arb | PD | Cap (W) |");
+    out.push_str(
+        "| Trace | Policy | Margin | Nodes | LB | Shape | Fault | CtlFault | Arb | PD | Cap (W) |",
+    );
     out.push_str(" Energy (kJ) | J/tok | dEnergy (%) | TTFT (%) | TBT (%) | tok/s | Bal |\n");
-    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
     for r in results {
         out.push_str(&format!(
-            "| {} | {} | {:.2} | {} | {} | {} | {} | {} | {} | {} | {:.1} | {:.2} | {} | {:.1} | {:.1} | {:.0} | {} |\n",
+            "| {} | {} | {:.2} | {} | {} | {} | {} | {} | {} | {} | {} | {:.1} | {:.2} | {} | {:.1} | {:.1} | {:.0} | {} |\n",
             r.trace,
             r.method.name(),
             r.margin,
@@ -833,6 +872,7 @@ pub fn render_markdown(cfg: &MatrixConfig, results: &[CellResult]) -> String {
             r.lb,
             r.shape,
             r.fault,
+            r.ctl_fault,
             r.arbiter,
             if r.disagg == "off" { "-" } else { &r.disagg },
             if r.power_cap_w > 0.0 {
@@ -871,6 +911,8 @@ fn dist_json(h: &Histogram) -> Json {
 /// a `per_node` section (with each node's shape spec), capped cells a
 /// `power` section, and faulted cells a `chaos` section (re-routed
 /// requests, rolled-back tokens, deferred arrivals, straggler nodes).
+/// Cells with a control-plane fault schedule carry a `ctl` section
+/// (supervisor fallbacks/re-engagements, dropped/delayed clock writes).
 /// Every cell carries whole-run `ttft_s`
 /// and `tbt_p95_s` distribution summaries; disaggregated cells extend the
 /// `migration` section with a per-node attribution array.
@@ -890,6 +932,7 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
             m.insert("lb".to_string(), Json::Str(r.lb.clone()));
             m.insert("shape".to_string(), Json::Str(r.shape.clone()));
             m.insert("fault".to_string(), Json::Str(r.fault.clone()));
+            m.insert("ctl_fault".to_string(), Json::Str(r.ctl_fault.clone()));
             m.insert("arbiter".to_string(), Json::Str(r.arbiter.clone()));
             m.insert("disagg".to_string(), Json::Str(r.disagg.clone()));
             m.insert("total_energy_j".to_string(), Json::Num(r.total_energy_j));
@@ -971,6 +1014,30 @@ pub fn to_json(cfg: &MatrixConfig, results: &[CellResult]) -> Json {
                                     .map(|&n| Json::Num(n as f64))
                                     .collect(),
                             ),
+                        ),
+                    ]),
+                );
+            }
+            if r.ctl_fault != "none" {
+                m.insert(
+                    "ctl".to_string(),
+                    Json::obj([
+                        ("ctl_fault", Json::Str(r.ctl_fault.clone())),
+                        (
+                            "supervisor_fallbacks",
+                            Json::Num(r.supervisor_fallbacks as f64),
+                        ),
+                        (
+                            "supervisor_reengages",
+                            Json::Num(r.supervisor_reengages as f64),
+                        ),
+                        (
+                            "dropped_writes",
+                            Json::Num(r.ctl_dropped_writes as f64),
+                        ),
+                        (
+                            "delayed_writes",
+                            Json::Num(r.ctl_delayed_writes as f64),
                         ),
                     ]),
                 );
@@ -1320,6 +1387,57 @@ mod tests {
             .iter()
             .filter(|c| c.power_cap_w == 0.0)
             .all(|c| c.arbiter == ArbiterStrategy::DemandProportional));
+    }
+
+    #[test]
+    fn ctl_fault_axis_merges_into_cells_and_reports_counters() {
+        let cfg = MatrixConfig {
+            duration_s: 30.0,
+            traces: vec![TraceSpec::Alibaba { qps: 6.0 }],
+            methods: vec![Method::GreenLlm],
+            margins: vec![0.95],
+            nodes: vec![2],
+            lbs: vec![LbPolicy::JoinShortestQueue],
+            ctl_faults: vec![
+                FaultSpec::None,
+                FaultSpec::parse("ctlnoise@5:0:0.05:0.0:0.0").expect("ctl spec"),
+            ],
+            ..MatrixConfig::default()
+        };
+        let results = run_matrix(&cfg);
+        assert_eq!(results.len(), 2);
+        let trace = cfg.traces[0].generate(cfg.duration_s, cfg.seed);
+        for r in &results {
+            // Control-plane noise perturbs clocks, never request flow.
+            assert_eq!(r.completed as usize, trace.requests.len(), "{r:?}");
+        }
+        let clean = results.iter().find(|r| r.ctl_fault == "none").unwrap();
+        let noisy = results.iter().find(|r| r.ctl_fault != "none").unwrap();
+        assert_eq!(clean.ctl_delayed_writes + clean.ctl_dropped_writes, 0);
+        assert!(
+            noisy.ctl_delayed_writes > 0,
+            "50 ms actuation lag must delay GreenLLM's clock writes: {noisy:?}"
+        );
+        // The clean cell is bit-identical to a sweep without the axis.
+        let base = MatrixConfig {
+            ctl_faults: vec![FaultSpec::None],
+            ..cfg.clone()
+        };
+        let baseline = run_matrix(&base);
+        assert_eq!(
+            clean.total_energy_j.to_bits(),
+            baseline[0].total_energy_j.to_bits()
+        );
+        assert_eq!(clean.events_processed, baseline[0].events_processed);
+        // JSON: the ctl section rides on ctl-faulted cells only.
+        let parsed = Json::parse(&to_json(&cfg, &results).dump()).unwrap();
+        for c in parsed.get("cells").unwrap().as_arr().unwrap() {
+            let is_clean = c.get("ctl_fault").unwrap().as_str() == Some("none");
+            assert_eq!(c.get("ctl").is_none(), is_clean, "{c:?}");
+            if let Some(ctl) = c.get("ctl") {
+                assert!(ctl.get("delayed_writes").unwrap().as_f64().unwrap() > 0.0);
+            }
+        }
     }
 
     #[test]

@@ -252,6 +252,124 @@ pub fn print_report(rep: &ClosureReport) {
     );
 }
 
+/// One workload's GreenLLM savings with a clean control plane vs under
+/// mild control-plane stress (actuation noise + telemetry quantization,
+/// supervisor armed). Informational only — `greenllm validate
+/// --ctl-stress` prints the delta but never gates on it.
+#[derive(Debug, Clone)]
+pub struct CtlStressRow {
+    /// Workload label.
+    pub workload: String,
+    /// Savings vs defaultNV with a clean control plane, percent.
+    pub clean_savings_pct: f64,
+    /// Savings vs defaultNV under control stress, percent.
+    pub stressed_savings_pct: f64,
+    /// `stressed − clean`, percentage points (negative = stress costs
+    /// savings).
+    pub savings_delta_pp: f64,
+    /// Extra SLO violations the stressed GreenLLM adds over the clean
+    /// defaultNV baseline, percentage points (worst of TTFT/TBT).
+    pub stressed_extra_violations_pp: f64,
+    /// Supervisor fallback trips during the stressed run.
+    pub supervisor_fallbacks: u64,
+    /// Clock writes the control plane dropped during the stressed run.
+    pub ctl_dropped_writes: u64,
+    /// Clock writes the control plane delayed during the stressed run.
+    pub ctl_delayed_writes: u64,
+}
+
+/// The mild stress profile: every write lags 50 ms, 5% drop, 2% land one
+/// ladder step off, telemetry quantizes at 1 ms / 1 W, and the
+/// supervisor watches with its config defaults.
+fn ctl_stress_config(part: &str, model: &str, method: Method, seed: u64) -> Config {
+    let mut cfg = closure_config(part, model, method, seed);
+    cfg.ctl.supervisor = true;
+    cfg.ctl.noise = true;
+    cfg.ctl.delay_s = 0.05;
+    cfg.ctl.drop_prob = 0.05;
+    cfg.ctl.misstep_prob = 0.02;
+    cfg.ctl.quantize = 1.0;
+    cfg.validate()
+        .unwrap_or_else(|e| panic!("ctl-stress config invalid: {e}"));
+    cfg
+}
+
+/// Re-run the closure pair under mild control-plane stress and report
+/// how much of the savings survives a lossy actuation/sensing path.
+pub fn run_ctl_stress(part: &str, model: &str, duration_s: f64, seed: u64) -> Vec<CtlStressRow> {
+    let opts = RunOptions::default();
+    closure_workloads(duration_s, seed)
+        .iter()
+        .map(|trace| {
+            let nv = run(&closure_config(part, model, Method::DefaultNv, seed), trace, &opts);
+            let clean = run(&closure_config(part, model, Method::GreenLlm, seed), trace, &opts);
+            let stressed =
+                run(&ctl_stress_config(part, model, Method::GreenLlm, seed), trace, &opts);
+            let clean_savings = (1.0 - clean.total_energy_j / nv.total_energy_j) * 100.0;
+            let stressed_savings = (1.0 - stressed.total_energy_j / nv.total_energy_j) * 100.0;
+            let extra_ttft = pct(nv.slo.ttft_pass_rate()) - pct(stressed.slo.ttft_pass_rate());
+            let extra_tbt = pct(nv.slo.tbt_pass_rate()) - pct(stressed.slo.tbt_pass_rate());
+            CtlStressRow {
+                workload: trace.name.clone(),
+                clean_savings_pct: clean_savings,
+                stressed_savings_pct: stressed_savings,
+                savings_delta_pp: stressed_savings - clean_savings,
+                stressed_extra_violations_pp: extra_ttft.max(extra_tbt),
+                supervisor_fallbacks: stressed.supervisor_fallbacks,
+                ctl_dropped_writes: stressed.ctl_dropped_writes,
+                ctl_delayed_writes: stressed.ctl_delayed_writes,
+            }
+        })
+        .collect()
+}
+
+/// Print the informational control-stress table.
+pub fn print_ctl_stress(rows: &[CtlStressRow]) {
+    println!("== Control-plane stress (informational, never gating) ==");
+    println!("   profile: 50 ms actuation lag, 5% drops, 2% missteps, 1 ms/1 W telemetry quantize, supervisor armed");
+    for r in rows {
+        println!(
+            "   {:<22} savings {:>6.2}% -> {:>6.2}% ({:+.2} pp)   extra viol {:+.2} pp   \
+             {} fallbacks   writes {} dropped / {} delayed",
+            r.workload,
+            r.clean_savings_pct,
+            r.stressed_savings_pct,
+            r.savings_delta_pp,
+            r.stressed_extra_violations_pp,
+            r.supervisor_fallbacks,
+            r.ctl_dropped_writes,
+            r.ctl_delayed_writes,
+        );
+    }
+}
+
+/// The control-stress rows as JSON (merged under `ctl_stress` in the
+/// `--json` report when `--ctl-stress` is given).
+pub fn ctl_stress_json(rows: &[CtlStressRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj([
+                    ("workload", Json::Str(r.workload.clone())),
+                    ("clean_savings_pct", Json::Num(r.clean_savings_pct)),
+                    ("stressed_savings_pct", Json::Num(r.stressed_savings_pct)),
+                    ("savings_delta_pp", Json::Num(r.savings_delta_pp)),
+                    (
+                        "stressed_extra_violations_pp",
+                        Json::Num(r.stressed_extra_violations_pp),
+                    ),
+                    (
+                        "supervisor_fallbacks",
+                        Json::Num(r.supervisor_fallbacks as f64),
+                    ),
+                    ("ctl_dropped_writes", Json::Num(r.ctl_dropped_writes as f64)),
+                    ("ctl_delayed_writes", Json::Num(r.ctl_delayed_writes as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -310,6 +428,24 @@ mod tests {
             rows: Vec::new(),
         };
         assert!(!rep.pass(), "an empty suite must not report closure");
+    }
+
+    #[test]
+    fn ctl_stress_rows_report_noise_activity() {
+        let rows = run_ctl_stress("a100", "qwen3-14b", 30.0, 3);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            // With a 50 ms lag on every surviving write, the stressed run
+            // must show control-plane activity.
+            assert!(
+                r.ctl_dropped_writes + r.ctl_delayed_writes > 0,
+                "no ctl activity on {}",
+                r.workload
+            );
+            assert!(r.stressed_savings_pct.is_finite());
+        }
+        let j = ctl_stress_json(&rows);
+        assert_eq!(j.as_arr().map(<[Json]>::len), Some(2));
     }
 
     #[test]

@@ -402,6 +402,72 @@ impl Default for ShedSection {
     }
 }
 
+/// Control-plane robustness defaults: the faultable NVML-shaped boundary
+/// between governors and GPUs (`gpu::control::ControlPlane`) plus the
+/// fail-safe `GovernorSupervisor` watchdog. Everything here is inert by
+/// default — `noise = false` and `supervisor = false` reproduce the
+/// pre-control-plane loop bit-for-bit. Runtime fault verbs
+/// (`ctlnoise@…`/`ctlblackout@…`) can switch the noise knobs on mid-run
+/// regardless of `noise`, so the parameter ranges are always validated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CtlSection {
+    /// Wrap the node's DVFS policy in the fail-safe supervisor watchdog.
+    pub supervisor: bool,
+    /// Apply actuation/sensor noise from t = 0 (fault verbs can also turn
+    /// it on/off mid-run).
+    pub noise: bool,
+    /// Actuation latency: a clock write lands at `t + delay_s`; the old
+    /// clock keeps drawing power until then. 0 = instant.
+    pub delay_s: f64,
+    /// Probability a clock write is silently dropped.
+    pub drop_prob: f64,
+    /// Probability a clock write snaps to an adjacent ladder rung.
+    pub misstep_prob: f64,
+    /// Sensor quantization grid: watts for power samples, milliseconds
+    /// for latency samples. 0 = exact sensors.
+    pub quantize: f64,
+    /// Supervisor: busy seconds without decode telemetry before the
+    /// staleness detector trips.
+    pub stale_s: f64,
+    /// Supervisor: consecutive over-target TBT samples before the
+    /// breach-streak detector trips.
+    pub breach_streak: u32,
+    /// Supervisor: clock-direction reversals (amplitude >= 4 ladder
+    /// steps) tolerated inside `flap_window_s` before the flap detector
+    /// trips.
+    pub flap_budget: u32,
+    /// Supervisor: flap-detector observation window, seconds.
+    pub flap_window_s: f64,
+    /// Supervisor: minimum time pinned at the fallback clock after a
+    /// trip, seconds.
+    pub cooldown_s: f64,
+    /// Supervisor: clean probation time before the wrapped policy is
+    /// fully re-engaged, seconds.
+    pub probation_s: f64,
+    /// Clock pinned during fallback, MHz (0 = the ladder max).
+    pub fallback_mhz: u32,
+}
+
+impl Default for CtlSection {
+    fn default() -> Self {
+        CtlSection {
+            supervisor: false,
+            noise: false,
+            delay_s: 0.0,
+            drop_prob: 0.0,
+            misstep_prob: 0.0,
+            quantize: 0.0,
+            stale_s: 1.0,
+            breach_streak: 8,
+            flap_budget: 12,
+            flap_window_s: 2.0,
+            cooldown_s: 5.0,
+            probation_s: 3.0,
+            fallback_mhz: 0,
+        }
+    }
+}
+
 /// Flight-recorder observability defaults (`greenllm cluster
 /// --trace-out` and `greenllm report`). The recorder itself is opt-in
 /// per run; this section only shapes it when attached.
@@ -442,6 +508,9 @@ pub struct Config {
     pub capacity: CapacitySection,
     /// Overload-shedding defaults.
     pub shed: ShedSection,
+    /// Control-plane robustness defaults (actuation/sensor noise + the
+    /// fail-safe governor supervisor).
+    pub ctl: CtlSection,
     /// Flight-recorder observability defaults.
     pub obs: ObsSection,
     /// Simulated GPU hardware of this node (per-node in heterogeneous
@@ -473,6 +542,7 @@ impl Default for Config {
             disagg: DisaggSection::default(),
             capacity: CapacitySection::default(),
             shed: ShedSection::default(),
+            ctl: CtlSection::default(),
             obs: ObsSection::default(),
             gpu: GpuSpec::default(),
             closure: ClosureSection::default(),
@@ -542,6 +612,19 @@ impl Config {
                     | "shed.queue_depth"
                     | "shed.backoff_s"
                     | "shed.max_retries"
+                    | "ctl.supervisor"
+                    | "ctl.noise"
+                    | "ctl.delay_s"
+                    | "ctl.drop_prob"
+                    | "ctl.misstep_prob"
+                    | "ctl.quantize"
+                    | "ctl.stale_s"
+                    | "ctl.breach_streak"
+                    | "ctl.flap_budget"
+                    | "ctl.flap_window_s"
+                    | "ctl.cooldown_s"
+                    | "ctl.probation_s"
+                    | "ctl.fallback_mhz"
                     | "obs.series_cap"
                     | "gpu.power_scale"
                     | "gpu.max_clock_mhz"
@@ -703,6 +786,45 @@ impl Config {
         if let Some(v) = doc.i64("shed.max_retries") {
             c.shed.max_retries = v as u32;
         }
+        if let Some(v) = doc.bool("ctl.supervisor") {
+            c.ctl.supervisor = v;
+        }
+        if let Some(v) = doc.bool("ctl.noise") {
+            c.ctl.noise = v;
+        }
+        if let Some(v) = doc.f64("ctl.delay_s") {
+            c.ctl.delay_s = v;
+        }
+        if let Some(v) = doc.f64("ctl.drop_prob") {
+            c.ctl.drop_prob = v;
+        }
+        if let Some(v) = doc.f64("ctl.misstep_prob") {
+            c.ctl.misstep_prob = v;
+        }
+        if let Some(v) = doc.f64("ctl.quantize") {
+            c.ctl.quantize = v;
+        }
+        if let Some(v) = doc.f64("ctl.stale_s") {
+            c.ctl.stale_s = v;
+        }
+        if let Some(v) = doc.i64("ctl.breach_streak") {
+            c.ctl.breach_streak = v as u32;
+        }
+        if let Some(v) = doc.i64("ctl.flap_budget") {
+            c.ctl.flap_budget = v as u32;
+        }
+        if let Some(v) = doc.f64("ctl.flap_window_s") {
+            c.ctl.flap_window_s = v;
+        }
+        if let Some(v) = doc.f64("ctl.cooldown_s") {
+            c.ctl.cooldown_s = v;
+        }
+        if let Some(v) = doc.f64("ctl.probation_s") {
+            c.ctl.probation_s = v;
+        }
+        if let Some(v) = doc.i64("ctl.fallback_mhz") {
+            c.ctl.fallback_mhz = v as u32;
+        }
         if let Some(v) = doc.i64("obs.series_cap") {
             c.obs.series_cap = v as usize;
         }
@@ -840,6 +962,62 @@ impl Config {
                 grid.min_mhz, grid.max_mhz, grid.step_mhz
             ));
         }
+        // Control-plane knobs are validated even when inert: fault verbs
+        // (`ctlnoise@…`) can switch the noise path on mid-run, and the
+        // supervisor constants are read at policy build time.
+        for (key, p) in [
+            ("ctl.drop_prob", self.ctl.drop_prob),
+            ("ctl.misstep_prob", self.ctl.misstep_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("{key} must be in [0,1], got {p}"));
+            }
+        }
+        for (key, v) in [
+            ("ctl.delay_s", self.ctl.delay_s),
+            ("ctl.quantize", self.ctl.quantize),
+            ("ctl.stale_s", self.ctl.stale_s),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!("{key} must be finite and >= 0, got {v}"));
+            }
+        }
+        for (key, v) in [
+            ("ctl.flap_window_s", self.ctl.flap_window_s),
+            ("ctl.cooldown_s", self.ctl.cooldown_s),
+            ("ctl.probation_s", self.ctl.probation_s),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!("{key} must be finite and > 0, got {v}"));
+            }
+        }
+        if self.ctl.breach_streak == 0 || self.ctl.flap_budget == 0 {
+            return Err("ctl.breach_streak and ctl.flap_budget must be >= 1".into());
+        }
+        if self.ctl.fallback_mhz != 0 && !grid.contains(self.ctl.fallback_mhz) {
+            return Err(format!(
+                "ctl.fallback_mhz {} must be 0 (ladder max) or lie on the ladder",
+                self.ctl.fallback_mhz
+            ));
+        }
+        // Off-ladder clocks are impossible at the device boundary
+        // (`SimGpu::set_app_clock` debug-asserts), so the clocks a policy
+        // can be configured to request must sit on the grid too.
+        if !grid.contains(self.prefill_opt.idle_clock_mhz) {
+            return Err(format!(
+                "prefill_opt.idle_clock_mhz {} must lie on the ladder",
+                self.prefill_opt.idle_clock_mhz
+            ));
+        }
+        if let Method::Fixed(f) = self.method {
+            if !grid.contains(f) {
+                return Err(format!(
+                    "method fixed{f}: clock must lie on the {}\u{2013}{} MHz ladder \
+                     ({} MHz steps)",
+                    grid.min_mhz, grid.max_mhz, grid.step_mhz
+                ));
+            }
+        }
         if self.closure.min_energy_savings_pct < 0.0
             || self.closure.min_energy_savings_pct >= 100.0
             || self.closure.max_extra_violations_pct < 0.0
@@ -895,6 +1073,48 @@ mod tests {
         assert_eq!(c.decode_ctl.fine_step_mhz, 30);
         // Untouched defaults survive.
         assert_eq!(c.decode_ctl.fine_tick_s, 0.020);
+    }
+
+    #[test]
+    fn ctl_section_parses_and_validates() {
+        let doc = Document::parse(
+            r#"
+            [ctl]
+            supervisor = true
+            noise = true
+            delay_s = 0.05
+            drop_prob = 0.1
+            misstep_prob = 0.05
+            stale_s = 0.5
+            fallback_mhz = 1200
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_toml(&doc).unwrap();
+        assert!(c.ctl.supervisor && c.ctl.noise);
+        assert_eq!(c.ctl.delay_s, 0.05);
+        assert_eq!(c.ctl.drop_prob, 0.1);
+        assert_eq!(c.ctl.fallback_mhz, 1200);
+        // Untouched defaults survive.
+        assert_eq!(c.ctl.breach_streak, 8);
+        assert_eq!(c.ctl.cooldown_s, 5.0);
+        // Out-of-range knobs are rejected even while inert — fault verbs
+        // can switch the noise path on mid-run.
+        for bad in [
+            "[ctl]\ndrop_prob = 1.5\n",
+            "[ctl]\ndelay_s = -0.1\n",
+            "[ctl]\nfallback_mhz = 1000\n",
+            "[ctl]\nbreach_streak = 0\n",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(Config::from_toml(&doc).is_err(), "accepted: {bad}");
+        }
+        // The device boundary debug-asserts on-ladder clocks, so the
+        // config layer rejects off-ladder policy clocks up front.
+        let off = Document::parse("[prefill_opt]\nidle_clock_mhz = 1000\n").unwrap();
+        assert!(Config::from_toml(&off).is_err());
+        let off = Document::parse("method = \"fixed1000\"\n").unwrap();
+        assert!(Config::from_toml(&off).is_err());
     }
 
     #[test]

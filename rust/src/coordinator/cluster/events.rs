@@ -845,6 +845,36 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
                                 engines[fev.node].restore_degrade(t);
                                 crec.capacity(fev.node, t, "restore");
                             }
+                            FaultKind::CtlNoise => {
+                                // Control-plane degradation: clock writes
+                                // start lagging/dropping/misstepping and
+                                // telemetry quantizes. Routing, queues and
+                                // the selector key are all untouched — only
+                                // the actuation/sensing path gets noisy.
+                                engines[fev.node].ctl_noise_on(
+                                    fev.ctl_params[0],
+                                    fev.ctl_params[1],
+                                    fev.ctl_params[2],
+                                );
+                                crec.ctl(fev.node, t, "noise");
+                            }
+                            FaultKind::CtlQuiet => {
+                                engines[fev.node].ctl_noise_off();
+                                crec.ctl(fev.node, t, "quiet");
+                            }
+                            FaultKind::CtlBlackout => {
+                                // Telemetry blackout: the policy's view of
+                                // tail latency / pressure / power freezes at
+                                // this instant and per-token feedback stops
+                                // flowing. Ground-truth SLO accounting keeps
+                                // recording throughout.
+                                engines[fev.node].ctl_blackout_on();
+                                crec.ctl(fev.node, t, "blackout");
+                            }
+                            FaultKind::CtlSense => {
+                                engines[fev.node].ctl_blackout_off();
+                                crec.ctl(fev.node, t, "sense");
+                            }
                         }
                     }
                     ClusterEv::Capacity => {
@@ -1212,6 +1242,12 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
     let ttft_passes: u64 = per_node.iter().map(|r| r.slo.ttft_passes()).sum();
     let tbt_passes: u64 = per_node.iter().map(|r| r.slo.tbt_passes()).sum();
     let tbt_eligible: u64 = per_node.iter().map(|r| r.slo.tbt_eligible()).sum();
+    let supervisor_fallbacks: u64 = per_node.iter().map(|r| r.supervisor_fallbacks).sum();
+    let supervisor_reengages: u64 = per_node.iter().map(|r| r.supervisor_reengages).sum();
+    let ctl_dropped_writes: u64 = per_node.iter().map(|r| r.ctl_dropped_writes).sum();
+    let ctl_delayed_writes: u64 = per_node.iter().map(|r| r.ctl_delayed_writes).sum();
+    let ctl_missteps: u64 = per_node.iter().map(|r| r.ctl_missteps).sum();
+    let ctl_suppressed_samples: u64 = per_node.iter().map(|r| r.ctl_suppressed_samples).sum();
     ClusterResult {
         total_energy_j,
         generated_tokens,
@@ -1247,6 +1283,12 @@ fn run_cluster_impl<S: EngineSelector, R: Recorder + Clone>(
         capacity_provisions: provisions,
         capacity_parks: parks,
         straggler_nodes: ccfg.faults.straggler_nodes(),
+        supervisor_fallbacks,
+        supervisor_reengages,
+        ctl_dropped_writes,
+        ctl_delayed_writes,
+        ctl_missteps,
+        ctl_suppressed_samples,
         migration: (prefill_pool > 0).then_some(migration),
         node_migration: if prefill_pool > 0 {
             node_migration

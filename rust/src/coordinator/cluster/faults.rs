@@ -30,6 +30,18 @@
 //! * **Rack-correlated loss** (`rackdown@t:a-b` / `rackup@t:a-b`):
 //!   expands at parse time to per-node `down`/`up` events on the whole
 //!   inclusive node range — one switch or PDU takes out a node *group*.
+//! * **Control-plane noise** (`ctlnoise@t:n[:delay[:drop[:misstep]]]` /
+//!   `ctlquiet@t:n`): the node's *actuation path* degrades — DVFS writes
+//!   gain latency and are probabilistically dropped or snapped one
+//!   ladder rung off — while the node itself keeps serving at full
+//!   health. Composes freely with `slow` (a degraded node can also have
+//!   a flaky NVML daemon).
+//! * **Telemetry blackout** (`ctlblackout@t0-t1:n`, or `ctlblackout@t:n`
+//!   + `ctlsense@t:n`): the node's sensors freeze and event-driven
+//!   policy feedback is suppressed for the window — the failure mode the
+//!   [`GovernorSupervisor`](crate::dvfs::GovernorSupervisor) exists for.
+//!   The range spelling expands at parse time to the blackout/sense
+//!   primitive pair.
 //!
 //! Schedules come in two spellings, both deterministic:
 //! * **Presets** ([`FaultSpec`]): `none`, `onedown` (highest-index node
@@ -59,6 +71,13 @@
 /// Spot-preemption notice window used when `preempt@t:n` omits one, s.
 pub const DEFAULT_PREEMPT_NOTICE_S: f64 = 30.0;
 
+/// Actuation latency used when `ctlnoise@t:n` omits the delay field, s.
+pub const DEFAULT_CTL_DELAY_S: f64 = 0.05;
+/// Write-drop probability used when `ctlnoise@t:n` omits it.
+pub const DEFAULT_CTL_DROP_P: f64 = 0.1;
+/// Write-misstep probability used when `ctlnoise@t:n` omits it.
+pub const DEFAULT_CTL_MISSTEP_P: f64 = 0.05;
+
 /// Direction of one fault transition.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultKind {
@@ -74,6 +93,17 @@ pub enum FaultKind {
     Slow,
     /// Straggler recovery: slowdown and thermal cap lifted.
     Restore,
+    /// Control-plane noise onset: the node's DVFS writes gain latency
+    /// and are probabilistically dropped/misstepped (see
+    /// [`FaultEvent::ctl_params`]); sensor quantization arms.
+    CtlNoise,
+    /// Control-plane noise lifted: actuation is instant and exact again.
+    CtlQuiet,
+    /// Telemetry blackout onset: sensed values freeze, event-driven
+    /// policy feedback is suppressed.
+    CtlBlackout,
+    /// Telemetry blackout lifted: sensors come back live.
+    CtlSense,
 }
 
 /// One scheduled fault transition.
@@ -92,10 +122,14 @@ pub struct FaultEvent {
     /// Thermal clock cap in MHz ([`FaultKind::Slow`] only; `u32::MAX`
     /// = no cap). Snapped down to the node's ladder grid when applied.
     pub cap_mhz: u32,
+    /// Control-noise payload `[delay_s, drop_prob, misstep_prob]`
+    /// ([`FaultKind::CtlNoise`] only; zeros otherwise).
+    pub ctl_params: [f64; 3],
 }
 
 impl FaultEvent {
-    /// An event with no straggler payload (factor 1, uncapped).
+    /// An event with no straggler or control payload (factor 1, uncapped,
+    /// zero noise).
     pub fn new(t_s: f64, node: usize, kind: FaultKind) -> FaultEvent {
         FaultEvent {
             t_s,
@@ -103,6 +137,7 @@ impl FaultEvent {
             kind,
             factor: 1.0,
             cap_mhz: u32::MAX,
+            ctl_params: [0.0; 3],
         }
     }
 }
@@ -146,7 +181,15 @@ impl FaultPlan {
     /// * `slow@<t>:<node>:<factor>[:<cap_mhz>]` / `restore@<t>:<node>` —
     ///   straggler onset/recovery;
     /// * `rackdown@<t>:<a>-<b>` / `rackup@<t>:<a>-<b>` — expands to one
-    ///   down/up per node of the inclusive range (correlated rack loss).
+    ///   down/up per node of the inclusive range (correlated rack loss);
+    /// * `ctlnoise@<t>:<node>[:<delay_s>[:<drop_p>[:<misstep_p>]]]` /
+    ///   `ctlquiet@<t>:<node>` — control-plane actuation noise
+    ///   onset/recovery (defaults: 0.05 s delay, 0.1 drop, 0.05 misstep);
+    /// * `ctlblackout@<t0>-<t1>:<node>` — telemetry blackout over the
+    ///   window, expanding to a `ctlblackout` at `t0` and a `ctlsense`
+    ///   at `t1`; the single-time spellings `ctlblackout@<t>:<node>` /
+    ///   `ctlsense@<t>:<node>` schedule the primitives directly (a
+    ///   blackout with no later sense lasts to the end of the run).
     ///
     /// Events are sorted by time (stable, so equal-time events keep their
     /// spelled order; expansions keep ascending node order). An empty
@@ -159,6 +202,35 @@ impl FaultPlan {
             })?;
             let mut parts = rest.split(':');
             let t = parts.next().unwrap_or("");
+            // Window spelling: `ctlblackout@<t0>-<t1>:<node>` expands to
+            // the blackout/sense primitive pair before scalar-time parsing.
+            if verb == "ctlblackout" {
+                if let Some((a, b)) = t.split_once('-') {
+                    let t0: f64 = a
+                        .parse()
+                        .map_err(|_| format!("bad blackout window {t:?} in {tok:?}"))?;
+                    let t1: f64 = b
+                        .parse()
+                        .map_err(|_| format!("bad blackout window {t:?} in {tok:?}"))?;
+                    if !t0.is_finite() || !t1.is_finite() || t0 <= 0.0 || t1 <= t0 {
+                        return Err(format!(
+                            "blackout window must satisfy 0 < t0 < t1, got {t:?} in {tok:?}"
+                        ));
+                    }
+                    let target = parts
+                        .next()
+                        .ok_or_else(|| format!("bad fault event {tok:?}: missing ':<node>'"))?;
+                    if parts.next().is_some() {
+                        return Err(format!("bad fault event {tok:?}: trailing fields"));
+                    }
+                    let node: usize = target
+                        .parse()
+                        .map_err(|_| format!("bad fault node {target:?} in {tok:?}"))?;
+                    events.push(FaultEvent::new(t0, node, FaultKind::CtlBlackout));
+                    events.push(FaultEvent::new(t1, node, FaultKind::CtlSense));
+                    continue;
+                }
+            }
             let t_s: f64 = t
                 .parse()
                 .map_err(|_| format!("bad fault time {t:?} in {tok:?}"))?;
@@ -230,11 +302,9 @@ impl FaultPlan {
                         return Err(format!("clock cap must be > 0 in {tok:?}"));
                     }
                     events.push(FaultEvent {
-                        t_s,
-                        node: parse_node(target)?,
-                        kind: FaultKind::Slow,
                         factor,
                         cap_mhz,
+                        ..FaultEvent::new(t_s, parse_node(target)?, FaultKind::Slow)
                     });
                 }
                 "restore" => {
@@ -242,6 +312,64 @@ impl FaultPlan {
                         return Err(format!("bad fault event {tok:?}: trailing fields"));
                     }
                     events.push(FaultEvent::new(t_s, parse_node(target)?, FaultKind::Restore));
+                }
+                "ctlnoise" => {
+                    if extra.len() > 3 {
+                        return Err(format!(
+                            "bad fault event {tok:?}: expected \
+                             ctlnoise@<t>:<node>[:<delay_s>[:<drop_p>[:<misstep_p>]]]"
+                        ));
+                    }
+                    let defaults = [
+                        DEFAULT_CTL_DELAY_S,
+                        DEFAULT_CTL_DROP_P,
+                        DEFAULT_CTL_MISSTEP_P,
+                    ];
+                    let mut ctl_params = defaults;
+                    for (i, field) in extra.iter().enumerate() {
+                        ctl_params[i] = field.parse().map_err(|_| {
+                            format!("bad control-noise field {field:?} in {tok:?}")
+                        })?;
+                    }
+                    if !ctl_params[0].is_finite() || ctl_params[0] < 0.0 {
+                        return Err(format!(
+                            "actuation delay must be finite and >= 0, got {} in {tok:?}",
+                            ctl_params[0]
+                        ));
+                    }
+                    for p in &ctl_params[1..] {
+                        if !(0.0..=1.0).contains(p) {
+                            return Err(format!(
+                                "control-noise probability must be in [0, 1], got {p} in {tok:?}"
+                            ));
+                        }
+                    }
+                    events.push(FaultEvent {
+                        ctl_params,
+                        ..FaultEvent::new(t_s, parse_node(target)?, FaultKind::CtlNoise)
+                    });
+                }
+                "ctlquiet" => {
+                    if !extra.is_empty() {
+                        return Err(format!("bad fault event {tok:?}: trailing fields"));
+                    }
+                    events.push(FaultEvent::new(t_s, parse_node(target)?, FaultKind::CtlQuiet));
+                }
+                "ctlsense" => {
+                    if !extra.is_empty() {
+                        return Err(format!("bad fault event {tok:?}: trailing fields"));
+                    }
+                    events.push(FaultEvent::new(t_s, parse_node(target)?, FaultKind::CtlSense));
+                }
+                "ctlblackout" => {
+                    if !extra.is_empty() {
+                        return Err(format!("bad fault event {tok:?}: trailing fields"));
+                    }
+                    let node = parse_node(target)?;
+                    // `t` was already parsed above for the single-time
+                    // spelling; a `t0-t1` window fails that parse and is
+                    // handled here instead.
+                    events.push(FaultEvent::new(t_s, node, FaultKind::CtlBlackout));
                 }
                 "rackdown" | "rackup" => {
                     if !extra.is_empty() {
@@ -269,7 +397,8 @@ impl FaultPlan {
                 _ => {
                     return Err(format!(
                         "bad fault event {tok:?}: unknown kind {verb:?} (expected down, up, \
-                         drain, preempt, slow, restore, rackdown or rackup)"
+                         drain, preempt, slow, restore, rackdown, rackup, ctlnoise, ctlquiet, \
+                         ctlblackout or ctlsense)"
                     ));
                 }
             }
@@ -284,6 +413,17 @@ impl FaultPlan {
         self.events.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
     }
 
+    /// Merge another plan's events into this one, re-sorting by time
+    /// (stable, so equal-time events keep `self`-before-`other` order).
+    /// Used by the matrix `--ctl-faults` axis to compose a control-plane
+    /// schedule with a capacity fault schedule; the merged plan goes
+    /// through [`FaultPlan::validate`] like any other.
+    pub fn merged(mut self, other: FaultPlan) -> FaultPlan {
+        self.events.extend(other.events);
+        self.sort();
+        self
+    }
+
     /// Check the schedule against a node count. Every event must target a
     /// real node; the per-node state machine must stay consistent (a node
     /// only goes down while up or draining, only recovers while down,
@@ -296,6 +436,8 @@ impl FaultPlan {
         let mut down = vec![false; nodes];
         let mut draining = vec![false; nodes];
         let mut slow = vec![false; nodes];
+        let mut noisy = vec![false; nodes];
+        let mut dark = vec![false; nodes];
         let mut down_count = 0usize;
         for ev in &self.events {
             if ev.node >= nodes {
@@ -322,10 +464,14 @@ impl FaultPlan {
                         ));
                     }
                     down[ev.node] = true;
-                    // Death clears the administrative and straggler state;
-                    // recovery brings the node back clean.
+                    // Death clears the administrative, straggler and
+                    // control-plane state; recovery brings the node back
+                    // clean (the engine resets its control plane to the
+                    // config baseline at the power cycle).
                     draining[ev.node] = false;
                     slow[ev.node] = false;
+                    noisy[ev.node] = false;
+                    dark[ev.node] = false;
                     down_count += 1;
                 }
                 FaultKind::Up => {
@@ -389,6 +535,71 @@ impl FaultPlan {
                     }
                     slow[ev.node] = false;
                 }
+                FaultKind::CtlNoise => {
+                    if down[ev.node] {
+                        return Err(format!(
+                            "node {} control-noised while down (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    if noisy[ev.node] {
+                        return Err(format!(
+                            "node {} control-noised twice without a ctlquiet (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    let [delay, drop, misstep] = ev.ctl_params;
+                    if !delay.is_finite() || delay < 0.0 {
+                        return Err(format!(
+                            "actuation delay must be finite and >= 0, got {delay} \
+                             (node {}, t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    for p in [drop, misstep] {
+                        if !(0.0..=1.0).contains(&p) {
+                            return Err(format!(
+                                "control-noise probability must be in [0, 1], got {p} \
+                                 (node {}, t={})",
+                                ev.node, ev.t_s
+                            ));
+                        }
+                    }
+                    noisy[ev.node] = true;
+                }
+                FaultKind::CtlQuiet => {
+                    if !noisy[ev.node] {
+                        return Err(format!(
+                            "node {} ctlquiet while its control plane is clean (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    noisy[ev.node] = false;
+                }
+                FaultKind::CtlBlackout => {
+                    if down[ev.node] {
+                        return Err(format!(
+                            "node {} blacked out while down (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    if dark[ev.node] {
+                        return Err(format!(
+                            "node {} blacked out twice without a ctlsense (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    dark[ev.node] = true;
+                }
+                FaultKind::CtlSense => {
+                    if !dark[ev.node] {
+                        return Err(format!(
+                            "node {} ctlsense while its telemetry is live (t={})",
+                            ev.node, ev.t_s
+                        ));
+                    }
+                    dark[ev.node] = false;
+                }
             }
         }
         Ok(())
@@ -412,6 +623,13 @@ impl FaultPlan {
                     }
                 }
                 FaultKind::Restore => format!("restore@{}:{}", e.t_s, e.node),
+                FaultKind::CtlNoise => format!(
+                    "ctlnoise@{}:{}:{}:{}:{}",
+                    e.t_s, e.node, e.ctl_params[0], e.ctl_params[1], e.ctl_params[2]
+                ),
+                FaultKind::CtlQuiet => format!("ctlquiet@{}:{}", e.t_s, e.node),
+                FaultKind::CtlBlackout => format!("ctlblackout@{}:{}", e.t_s, e.node),
+                FaultKind::CtlSense => format!("ctlsense@{}:{}", e.t_s, e.node),
             })
             .collect::<Vec<_>>()
             .join(",")
@@ -493,11 +711,9 @@ impl FaultSpec {
             FaultSpec::Straggler => FaultPlan {
                 events: vec![
                     FaultEvent {
-                        t_s: duration_s / 3.0,
-                        node: victim,
-                        kind: FaultKind::Slow,
                         factor: 2.0,
                         cap_mhz: 600,
+                        ..FaultEvent::new(duration_s / 3.0, victim, FaultKind::Slow)
                     },
                     FaultEvent::new(duration_s * 2.0 / 3.0, victim, FaultKind::Restore),
                 ],
@@ -597,6 +813,98 @@ mod tests {
     }
 
     #[test]
+    fn ctl_noise_grammar_round_trips_and_validates() {
+        // Full spelling round-trips exactly.
+        let plan = FaultPlan::parse("ctlnoise@40:1:0.1:0.2:0.3,ctlquiet@80:1").unwrap();
+        assert_eq!(plan.events[0].kind, FaultKind::CtlNoise);
+        assert_eq!(plan.events[0].ctl_params, [0.1, 0.2, 0.3]);
+        assert_eq!(plan.render(), "ctlnoise@40:1:0.1:0.2:0.3,ctlquiet@80:1");
+        assert_eq!(FaultPlan::parse(&plan.render()).unwrap(), plan);
+        plan.validate(2).unwrap();
+        // Omitted fields take the documented defaults.
+        let d = FaultPlan::parse("ctlnoise@40:0").unwrap();
+        assert_eq!(
+            d.events[0].ctl_params,
+            [DEFAULT_CTL_DELAY_S, DEFAULT_CTL_DROP_P, DEFAULT_CTL_MISSTEP_P]
+        );
+        let partial = FaultPlan::parse("ctlnoise@40:0:0.2").unwrap();
+        assert_eq!(
+            partial.events[0].ctl_params,
+            [0.2, DEFAULT_CTL_DROP_P, DEFAULT_CTL_MISSTEP_P]
+        );
+        // Bad payloads.
+        assert!(FaultPlan::parse("ctlnoise@40:0:nan").is_err());
+        assert!(FaultPlan::parse("ctlnoise@40:0:-0.1").is_err());
+        assert!(FaultPlan::parse("ctlnoise@40:0:0.1:1.5").is_err());
+        assert!(FaultPlan::parse("ctlnoise@40:0:0.1:0.2:-1").is_err());
+        assert!(FaultPlan::parse("ctlnoise@40:0:1:2:3:4").is_err());
+        assert!(FaultPlan::parse("ctlquiet@40:0:9").is_err());
+    }
+
+    #[test]
+    fn ctl_blackout_window_expands_to_primitive_pair() {
+        let plan = FaultPlan::parse("ctlblackout@40-60:1").unwrap();
+        assert_eq!(plan.render(), "ctlblackout@40:1,ctlsense@60:1");
+        assert_eq!(FaultPlan::parse(&plan.render()).unwrap(), plan);
+        plan.validate(2).unwrap();
+        // Open-ended blackout (no sense until the end of the run).
+        let open = FaultPlan::parse("ctlblackout@40:2").unwrap();
+        assert_eq!(open.events.len(), 1);
+        open.validate(3).unwrap();
+        // Malformed windows.
+        assert!(FaultPlan::parse("ctlblackout@60-40:1").is_err());
+        assert!(FaultPlan::parse("ctlblackout@40-40:1").is_err());
+        assert!(FaultPlan::parse("ctlblackout@a-b:1").is_err());
+        assert!(FaultPlan::parse("ctlblackout@40-60:1:9").is_err());
+        assert!(FaultPlan::parse("ctlblackout@40-60").is_err());
+        assert!(FaultPlan::parse("ctlsense@40:1:9").is_err());
+    }
+
+    #[test]
+    fn validate_enforces_ctl_state_machine() {
+        // Strict on/off pairing per node.
+        assert!(FaultPlan::parse("ctlnoise@40:1,ctlnoise@50:1")
+            .unwrap()
+            .validate(2)
+            .is_err());
+        assert!(FaultPlan::parse("ctlquiet@40:1").unwrap().validate(2).is_err());
+        assert!(FaultPlan::parse("ctlblackout@40:1,ctlblackout@50:1")
+            .unwrap()
+            .validate(2)
+            .is_err());
+        assert!(FaultPlan::parse("ctlsense@40:1").unwrap().validate(2).is_err());
+        // Control faults on a dead node are rejected.
+        assert!(FaultPlan::parse("down@40:1,ctlnoise@50:1")
+            .unwrap()
+            .validate(3)
+            .is_err());
+        assert!(FaultPlan::parse("down@40:1,ctlblackout@50:1")
+            .unwrap()
+            .validate(3)
+            .is_err());
+        // Down clears both flags: the off verb after recovery is stale.
+        assert!(
+            FaultPlan::parse("ctlnoise@30:1,down@40:1,up@50:1,ctlquiet@60:1")
+                .unwrap()
+                .validate(3)
+                .is_err()
+        );
+        // Control faults compose with straggler state on one node.
+        FaultPlan::parse("slow@30:1:2:900,ctlnoise@40:1,ctlblackout@50-70:1,ctlquiet@80:1,restore@90:1")
+            .unwrap()
+            .validate(2)
+            .unwrap();
+        // Programmatic plans get payloads re-checked.
+        let bad = FaultPlan {
+            events: vec![FaultEvent {
+                ctl_params: [0.05, 2.0, 0.0],
+                ..FaultEvent::new(10.0, 0, FaultKind::CtlNoise)
+            }],
+        };
+        assert!(bad.validate(2).is_err());
+    }
+
+    #[test]
     fn validate_enforces_liveness_and_state() {
         let plan = FaultPlan::parse("down@40:1,up@80:1").unwrap();
         plan.validate(2).unwrap();
@@ -666,11 +974,8 @@ mod tests {
         // Programmatic plans get payloads re-checked.
         let bad = FaultPlan {
             events: vec![FaultEvent {
-                t_s: 10.0,
-                node: 0,
-                kind: FaultKind::Slow,
                 factor: 0.25,
-                cap_mhz: u32::MAX,
+                ..FaultEvent::new(10.0, 0, FaultKind::Slow)
             }],
         };
         assert!(bad.validate(2).is_err());

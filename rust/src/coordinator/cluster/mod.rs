@@ -425,6 +425,20 @@ pub struct ClusterResult {
     /// Nodes the fault plan degraded (straggler `slow` events) at any
     /// point, ascending.
     pub straggler_nodes: Vec<usize>,
+    /// Times any node's [`GovernorSupervisor`](crate::dvfs::GovernorSupervisor)
+    /// tripped to its pinned-clock fallback.
+    pub supervisor_fallbacks: u64,
+    /// Times a supervisor survived probation and re-engaged its inner
+    /// policy.
+    pub supervisor_reengages: u64,
+    /// Clock writes the control plane dropped (never reached a GPU).
+    pub ctl_dropped_writes: u64,
+    /// Clock writes that landed late through the actuation-latency path.
+    pub ctl_delayed_writes: u64,
+    /// Clock writes snapped to a neighboring ladder step by control noise.
+    pub ctl_missteps: u64,
+    /// Telemetry samples suppressed from policies during blackout windows.
+    pub ctl_suppressed_samples: u64,
     /// Prefill→decode handoff accounting; present iff the run was
     /// disaggregated. (`assignment` tracks the node currently *owning*
     /// each request, so a migrated request counts at its decode home.)

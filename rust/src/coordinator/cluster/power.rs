@@ -229,9 +229,12 @@ impl PowerArbiter {
                         } else if i < self.prefill_pool {
                             // Prefill nodes have no decode tail; their SLO
                             // is TTFT — weigh by prompt-backlog pressure.
-                            e.prefill_pressure().clamp(0.0, MAX_PRESSURE)
+                            // Read through the node's control plane: under
+                            // a telemetry blackout the arbiter sees the
+                            // frozen snapshot, not the live value.
+                            e.sensed_prefill_pressure().clamp(0.0, MAX_PRESSURE)
                         } else {
-                            (e.tbt_tail_p95() / self.tbt_target_s).clamp(0.0, MAX_PRESSURE)
+                            (e.sensed_tbt_tail_p95() / self.tbt_target_s).clamp(0.0, MAX_PRESSURE)
                         }
                     })
                     .collect(),
@@ -365,10 +368,15 @@ impl PowerArbiter {
             .iter_mut()
             .enumerate()
             .map(|(i, e)| {
+                // The energy meter itself is ground truth (it anchors the
+                // *next* epoch's delta exactly), but the per-epoch power
+                // reading the arbiter acts on goes through the node's
+                // sensing path — stuck or quantized under control faults,
+                // bit-identical to the raw value otherwise.
                 let now = e.energy_now_j(t);
                 let p = (now - self.last_energy_j[i]) / dt;
                 self.last_energy_j[i] = now;
-                p
+                e.ctl_sense_power(p)
             })
             .collect();
         self.last_t = t;

@@ -31,6 +31,7 @@ use crate::coordinator::policy::{self, DvfsPolicy};
 use crate::coordinator::router::Router;
 use crate::coordinator::telemetry::{ClockPlan, DecodeWorkerView, PoolView, TickSpec};
 use crate::dvfs::prefill_opt::PrefillJobView;
+use crate::gpu::control::{ControlPlane, WriteAction};
 use crate::gpu::device::SimGpu;
 use crate::gpu::freq::FreqLadder;
 use crate::gpu::perf::PerfModel;
@@ -107,6 +108,20 @@ pub struct RunResult {
     /// Fine-loop ticks across the decode pool (GreenLLM only; zero
     /// otherwise).
     pub fine_ticks: u64,
+    /// Times the governor supervisor failed safe to its pinned fallback
+    /// clock (zero when the supervisor is off).
+    pub supervisor_fallbacks: u64,
+    /// Times the supervisor handed control back to the wrapped policy
+    /// after a clean probation.
+    pub supervisor_reengages: u64,
+    /// Policy clock writes silently lost by the control plane.
+    pub ctl_dropped_writes: u64,
+    /// Policy clock writes deferred by actuation latency.
+    pub ctl_delayed_writes: u64,
+    /// Policy clock writes that landed one ladder rung off target.
+    pub ctl_missteps: u64,
+    /// Policy feedback deliveries suppressed by telemetry blackouts.
+    pub ctl_suppressed_samples: u64,
 }
 
 impl RunResult {
@@ -136,6 +151,14 @@ enum Ev {
     /// A policy-requested periodic callback (index into the tick specs).
     PolicyTick(usize),
     SampleTick,
+    /// A clock write deferred by control-plane actuation latency; lands
+    /// only if `seq` is still the worker's latest write ticket.
+    CtlApply {
+        first_gpu: usize,
+        n: usize,
+        mhz: u32,
+        seq: u64,
+    },
 }
 
 /// Request storage behind the engine's two modes (§Perf): replay *borrows*
@@ -432,6 +455,10 @@ pub struct Engine<'a, R: Recorder = NoopRecorder> {
     /// it reaches the energy totals at [`Engine::finalize`], not the
     /// arbiter's [`Engine::energy_now_j`] measurements.
     transfer_energy_j: f64,
+    /// Faultable actuation/sensing boundary between the policy layer and
+    /// the GPUs. Transparent (and RNG-silent) unless `[ctl]` noise is
+    /// configured or a `ctl*` fault verb arms it at runtime.
+    ctl: ControlPlane,
     /// Observability sink (zero-sized no-op by default).
     rec: R,
     /// This node's index in its cluster (0 for single-node runs); stamped
@@ -587,6 +614,7 @@ impl<'a, R: Recorder> Engine<'a, R> {
             migrate_out: false,
             migrations: Vec::new(),
             transfer_energy_j: 0.0,
+            ctl: ControlPlane::new(&cfg.ctl, cfg.seed, n_gpus),
             rec,
             node_id,
         }
@@ -663,6 +691,20 @@ impl<'a, R: Recorder> Engine<'a, R> {
                     self.q.schedule_in(0.2, Ev::SampleTick);
                 }
             }
+            Ev::CtlApply {
+                first_gpu,
+                n,
+                mhz,
+                seq,
+            } => {
+                // A newer write to the same worker supersedes this one;
+                // clamping happens at apply time against the *current*
+                // caps, so an arbiter or thermal ceiling imposed during
+                // the actuation latency still wins.
+                if self.ctl.write_is_current(first_gpu, seq) {
+                    self.apply_worker_clock(t, first_gpu, n, mhz);
+                }
+            }
         }
         true
     }
@@ -728,6 +770,12 @@ impl<'a, R: Recorder> Engine<'a, R> {
             band_switches: diag.band_switches,
             adaptations: diag.adaptations,
             fine_ticks: diag.fine_ticks,
+            supervisor_fallbacks: diag.supervisor_fallbacks,
+            supervisor_reengages: diag.supervisor_reengages,
+            ctl_dropped_writes: self.ctl.dropped_writes,
+            ctl_delayed_writes: self.ctl.delayed_writes,
+            ctl_missteps: self.ctl.missteps,
+            ctl_suppressed_samples: self.ctl.suppressed_samples,
         }
     }
 
@@ -1032,6 +1080,10 @@ impl<'a, R: Recorder> Engine<'a, R> {
             self.tbt_tail = Some(SlidingP95::new(TBT_TAIL_WINDOW));
         }
         self.global_tps = TpsWindow::new(0.2);
+        // A power cycle resets the control plane to its config baseline
+        // (runtime fault overlays cleared) and invalidates any in-flight
+        // delayed clock write — it must not land on the recovered node.
+        self.ctl.reset_to_config();
         for g in self.gpus.iter_mut() {
             g.power_off(t);
         }
@@ -1165,9 +1217,93 @@ impl<'a, R: Recorder> Engine<'a, R> {
         backlog_s / self.ttft_target_sm
     }
 
+    // -- control-plane fault hooks (`ctl*` chaos verbs) -----------------------
+
+    /// `ctlnoise` verb: degrade this node's actuation path — writes gain
+    /// `delay_s` of latency and are dropped / misstepped with the given
+    /// probabilities — and arm sensor quantization.
+    pub fn ctl_noise_on(&mut self, delay_s: f64, drop_prob: f64, misstep_prob: f64) {
+        self.ctl.noise_on(delay_s, drop_prob, misstep_prob);
+    }
+
+    /// `ctlquiet` verb: actuation returns to the ideal instant path (any
+    /// still-pending delayed write keeps its ticket and may yet land).
+    pub fn ctl_noise_off(&mut self) {
+        self.ctl.noise_off();
+    }
+
+    /// `ctlblackout` verb: telemetry goes dark — the cluster-facing
+    /// sensed values freeze at their current readings and event-driven
+    /// policy feedback (TBT, token, backlog callbacks) is suppressed
+    /// until [`Engine::ctl_blackout_off`]. The physics (queues, rounds,
+    /// energy) runs on untouched.
+    pub fn ctl_blackout_on(&mut self) {
+        let tail = self.tbt_tail_p95();
+        let pressure = self.prefill_pressure();
+        self.ctl.blackout_on(tail, pressure);
+    }
+
+    /// `ctlsense` verb: sensors come back; feedback flows again.
+    pub fn ctl_blackout_off(&mut self) {
+        self.ctl.blackout_off();
+    }
+
+    /// Is a telemetry blackout in force on this node right now?
+    pub fn ctl_blackout(&self) -> bool {
+        self.ctl.blackout()
+    }
+
+    /// Decode-tail P95 as the cluster control plane *senses* it: frozen
+    /// during blackouts, quantized under noise, bit-identical to
+    /// [`Engine::tbt_tail_p95`] otherwise. The power arbiter reads this.
+    pub fn sensed_tbt_tail_p95(&self) -> f64 {
+        self.ctl.sense_tail(self.tbt_tail_p95())
+    }
+
+    /// Prefill backlog pressure as sensed through the control plane
+    /// (see [`Engine::sensed_tbt_tail_p95`]; raw value:
+    /// [`Engine::prefill_pressure`]).
+    pub fn sensed_prefill_pressure(&self) -> f64 {
+        self.ctl.sense_pressure(self.prefill_pressure())
+    }
+
+    /// Route one arbiter power measurement (watts) through this node's
+    /// sensing path: stuck at its first in-blackout reading during a
+    /// blackout, gridded under noise, exact otherwise.
+    pub fn ctl_sense_power(&mut self, raw_w: f64) -> f64 {
+        self.ctl.sense_power(raw_w)
+    }
+
     // -- helpers -------------------------------------------------------------
 
+    /// Route one policy clock write through the control plane. With noise
+    /// off this is exactly the pre-control-plane apply; under noise the
+    /// write can be dropped, misstepped one rung, or deferred (the
+    /// deferred apply lands via [`Ev::CtlApply`] unless superseded).
     fn set_worker_clock(&mut self, t: f64, first_gpu: usize, n: usize, mhz: u32) {
+        let action = self
+            .ctl
+            .gate_write(t, first_gpu, mhz, &self.gpus[first_gpu].ladder);
+        match action {
+            WriteAction::Apply(mhz) => self.apply_worker_clock(t, first_gpu, n, mhz),
+            WriteAction::Drop => {}
+            WriteAction::Delay { mhz, apply_at, seq } => {
+                self.q.schedule(
+                    apply_at,
+                    Ev::CtlApply {
+                        first_gpu,
+                        n,
+                        mhz,
+                        seq,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Land a (gated) clock write on a worker's GPU span: record the
+    /// request pre-clamp, apply under the arbiter ∧ thermal ceiling.
+    fn apply_worker_clock(&mut self, t: f64, first_gpu: usize, n: usize, mhz: u32) {
         let clamped = mhz.min(self.clock_cap_mhz).min(self.degraded_cap_mhz);
         let before = if R::ENABLED {
             self.gpus[first_gpu].sm_clock()
@@ -1279,6 +1415,14 @@ impl<'a, R: Recorder> Engine<'a, R> {
         }
         self.view_scratch = view;
         self.plan_scratch = plan;
+        if R::ENABLED {
+            // Drain supervisor state transitions (fallback / probation /
+            // reengage) into the flight recorder with their original
+            // timestamps; empty for unsupervised policies.
+            for (tt, what) in self.policy.ctl_transitions() {
+                self.rec.ctl(self.node_id, tt, what);
+            }
+        }
     }
 
     // -- prefill -------------------------------------------------------------
@@ -1300,6 +1444,12 @@ impl<'a, R: Recorder> Engine<'a, R> {
         {
             self.dispatch_prefill(t, w);
         } else if self.policy.wants_backlog_updates() {
+            if self.ctl.blackout() {
+                // Telemetry dark: the backlog update never reaches the
+                // policy (the queue still grew — the physics is intact).
+                self.ctl.note_suppressed();
+                return;
+            }
             // Queue grew: let the policy react immediately for busy
             // workers too (clock applies to subsequent jobs).
             for w in workers {
@@ -1527,6 +1677,7 @@ impl<'a, R: Recorder> Engine<'a, R> {
             let arena = &mut self.arena;
             let policy = &mut self.policy;
             let tail = &mut self.tbt_tail;
+            let ctl = &mut self.ctl;
             let mut i = 0;
             while i < w.streams.len() {
                 let slot = arena.slot(w.streams[i]);
@@ -1540,7 +1691,14 @@ impl<'a, R: Recorder> Engine<'a, R> {
                 if arena.last_token_t[slot] == round_start {
                     steady += 1;
                 } else {
-                    policy.on_decode_tbt(worker, tbt); // fresh joiner
+                    if ctl.blackout() {
+                        ctl.note_suppressed();
+                    } else {
+                        policy.on_decode_tbt(worker, tbt); // fresh joiner
+                    }
+                    // The tail window is ground truth (it feeds SLO
+                    // attribution and the post-blackout sensed value);
+                    // only the policy's *view* of it goes dark.
                     if let Some(tt) = tail.as_mut() {
                         tt.record(tbt);
                     }
@@ -1558,11 +1716,18 @@ impl<'a, R: Recorder> Engine<'a, R> {
         }
         self.generated_tokens += emitted as u64;
         self.global_tps.record(t, emitted);
-        self.policy.on_decode_tbt_weighted(worker, t - round_start, steady);
+        if self.ctl.blackout() {
+            // Both end-of-round feedback deliveries are lost; the
+            // supervisor's staleness detector is what notices this.
+            self.ctl.note_suppressed();
+            self.ctl.note_suppressed();
+        } else {
+            self.policy.on_decode_tbt_weighted(worker, t - round_start, steady);
+            self.policy.on_decode_tokens(worker, t, emitted);
+        }
         if let Some(tt) = self.tbt_tail.as_mut() {
             tt.record_weighted(t - round_start, steady);
         }
-        self.policy.on_decode_tokens(worker, t, emitted);
         for s in finished.drain(..) {
             self.finish_stream(t, s);
         }
@@ -1983,6 +2148,98 @@ mod tests {
             e.gpus.iter().all(|g| g.sm_clock() == 1200),
             "clamped GPUs must return to the policy's requested clock"
         );
+    }
+
+    #[test]
+    fn supervisor_fallback_stays_under_straggler_cap() {
+        // Precedence: caps always win. A telemetry blackout on a busy
+        // node starves the supervisor's token feed, so it trips and pins
+        // its fallback clock (ladder max) — but the straggler thermal cap
+        // at 600 MHz must clamp that pin like any other policy request.
+        let mut c = cfg(Method::GreenLlm);
+        c.ctl.supervisor = true;
+        let opts = RunOptions::default();
+        let mut e: Engine = Engine::new(&c, &opts, "prec".into(), 60.0);
+        e.begin();
+        for i in 0..60u64 {
+            e.inject(
+                i as f64 * 0.1,
+                Request {
+                    id: i,
+                    arrival_s: i as f64 * 0.1,
+                    prompt_len: 300,
+                    output_len: 400,
+                },
+            );
+        }
+        e.degrade(0.0, 1.0, 600);
+        e.ctl_blackout_on();
+        while e.peek_time().map_or(false, |tt| tt < 30.0) {
+            assert!(e.step());
+            for g in &e.gpus {
+                assert!(
+                    g.sm_clock() <= 600,
+                    "thermal cap violated at t={}: {} MHz",
+                    e.now(),
+                    g.sm_clock()
+                );
+            }
+        }
+        assert!(e.ctl_blackout());
+        let r = e.finalize(30.0);
+        assert!(
+            r.supervisor_fallbacks >= 1,
+            "blackout on a busy pool must trip the supervisor"
+        );
+        assert!(
+            r.ctl_suppressed_samples > 0,
+            "blackout must have suppressed policy feedback"
+        );
+    }
+
+    #[test]
+    fn control_plane_defaults_keep_replay_bit_exact() {
+        // An armed-but-trivial control section (supervisor off, noise
+        // off, parameters set) must not perturb a replay by one bit.
+        let trace = tiny_trace(40, 5.0, 400, 30);
+        let base = run(&cfg(Method::GreenLlm), &trace, &RunOptions::default());
+        let mut c = cfg(Method::GreenLlm);
+        c.ctl.delay_s = 0.5;
+        c.ctl.drop_prob = 0.9;
+        c.ctl.misstep_prob = 0.9;
+        c.ctl.quantize = 50.0;
+        let armed = run(&c, &trace, &RunOptions::default());
+        assert_eq!(base.total_energy_j.to_bits(), armed.total_energy_j.to_bits());
+        assert_eq!(base.events_processed, armed.events_processed);
+        assert_eq!(
+            armed.ctl_dropped_writes + armed.ctl_delayed_writes + armed.ctl_missteps,
+            0
+        );
+    }
+
+    #[test]
+    fn ctl_noise_drops_and_delays_policy_writes() {
+        // With heavy actuation noise the control plane visibly interferes
+        // with the policy's writes, and the run still completes with
+        // exact token accounting (drop/delay only moves clocks, never
+        // tokens).
+        let trace = tiny_trace(30, 5.0, 400, 20);
+        let c = cfg(Method::GreenLlm);
+        let opts = RunOptions::default();
+        let mut e: Engine = Engine::new(&c, &opts, "noisy".into(), trace.duration_s);
+        e.begin();
+        e.ctl_noise_on(0.05, 0.3, 0.3);
+        for r in &trace.requests {
+            e.inject(r.arrival_s, r.clone());
+        }
+        while e.completed() < 30 {
+            assert!(e.step());
+        }
+        let r = e.finalize(trace.duration_s);
+        assert_eq!(r.completed, 30);
+        assert_eq!(r.generated_tokens, 30 * 20);
+        assert!(r.ctl_dropped_writes > 0, "no writes dropped");
+        assert!(r.ctl_delayed_writes > 0, "no writes delayed");
     }
 
     #[test]

@@ -54,6 +54,11 @@ pub struct PolicyDiagnostics {
     pub adaptations: u64,
     /// Fine-loop ticks across the decode pool.
     pub fine_ticks: u64,
+    /// Supervisor trips into the pinned fallback state (0 unless the
+    /// policy is wrapped by a `GovernorSupervisor`).
+    pub supervisor_fallbacks: u64,
+    /// Supervisor probation completions (wrapped policy re-engaged).
+    pub supervisor_reengages: u64,
 }
 
 /// A frequency governor: telemetry in → per-GPU clock decisions out.
@@ -146,19 +151,34 @@ pub trait DvfsPolicy {
     fn diagnostics(&self) -> PolicyDiagnostics {
         PolicyDiagnostics::default()
     }
+
+    /// Drain supervisor/control state transitions recorded since the last
+    /// poll (time, `"fallback"`/`"probation"`/`"reengage"`). The engine
+    /// forwards them to the flight recorder so attribution can build
+    /// `supervisor-fallback` windows. Default: none — only the
+    /// [`GovernorSupervisor`](crate::dvfs::supervisor::GovernorSupervisor)
+    /// decorator produces transitions.
+    fn ctl_transitions(&mut self) -> Vec<(f64, &'static str)> {
+        Vec::new()
+    }
 }
 
 /// Instantiate the policy for `cfg.method`. This is the single registry:
 /// new governors plug in here and become available to the engine, the CLI
 /// and the scenario matrix at once.
 pub fn build(cfg: &Config, perf: &PerfModel, power: &PowerModel) -> Box<dyn DvfsPolicy> {
-    match cfg.method {
+    let inner: Box<dyn DvfsPolicy> = match cfg.method {
         Method::GreenLlm => Box::new(GreenLlmPolicy::new(cfg, perf, power)),
         Method::DefaultNv | Method::PrefillSplit => Box::new(DefaultNvPolicy::new(cfg)),
         Method::Fixed(mhz) => Box::new(FixedPolicy { mhz }),
         Method::Throttle => Box::new(ThrottlePolicy::new(cfg, perf, power)),
         Method::Agft => Box::new(AgftPolicy::new(cfg)),
         Method::PiTbt => Box::new(PiTbtPolicy::new(cfg)),
+    };
+    if cfg.ctl.supervisor {
+        Box::new(crate::dvfs::supervisor::GovernorSupervisor::new(inner, cfg))
+    } else {
+        inner
     }
 }
 
@@ -316,6 +336,7 @@ impl DvfsPolicy for GreenLlmPolicy {
             band_switches: self.decode_ctls.iter().map(|c| c.band_switches).sum(),
             adaptations: self.decode_ctls.iter().map(|c| c.adaptations).sum(),
             fine_ticks: self.decode_ctls.iter().map(|c| c.fine_ticks).sum(),
+            ..Default::default()
         }
     }
 }
@@ -832,6 +853,20 @@ mod tests {
                 "PI-TBT"
             ]
         );
+    }
+
+    #[test]
+    fn supervised_build_wraps_transparently() {
+        let perf = PerfModel::new(ModelSpec::qwen3_14b());
+        let power = PowerModel::a100();
+        let mut c = cfg(Method::GreenLlm);
+        c.ctl.supervisor = true;
+        let mut p = build(&c, &perf, &power);
+        assert_eq!(p.name(), "GreenLLM", "wrapper passes the inner name");
+        assert_eq!(p.ticks().len(), 5, "4 GreenLLM ticks + 1 watch tick");
+        assert!(p.wants_prefill_jobs() && p.wants_backlog_updates());
+        assert!(p.ctl_transitions().is_empty());
+        assert_eq!(p.diagnostics().supervisor_fallbacks, 0);
     }
 
     #[test]

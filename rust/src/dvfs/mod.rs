@@ -12,13 +12,19 @@
 //! * [`decode_ctl`] — the dual-loop decode controller: coarse TPS band
 //!   selection with hysteresis + fine ±15 MHz TBT tracking every 20 ms +
 //!   6 s band adaptation (§3.3).
+//! * [`supervisor`] — the fail-safe watchdog that wraps any policy and
+//!   escalates to a pinned high clock when the wrapped controller
+//!   misbehaves (SLO-breach streaks, clock flapping, telemetry
+//!   staleness).
 
 pub mod decode_ctl;
 pub mod governor;
 pub mod prefill_opt;
 pub mod profiler;
+pub mod supervisor;
 
 pub use decode_ctl::DecodeController;
 pub use governor::DefaultNvGovernor;
 pub use prefill_opt::{PrefillJobView, PrefillOptimizer};
 pub use profiler::{BandTable, FittedModels, Profiler};
+pub use supervisor::GovernorSupervisor;

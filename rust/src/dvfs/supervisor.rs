@@ -1,0 +1,514 @@
+//! Fail-safe governor supervision: a watchdog wrapped around any
+//! [`DvfsPolicy`].
+//!
+//! A DVFS governor is itself a single point of failure: fed stale or
+//! blacked-out telemetry it can park a busy GPU at the ladder floor
+//! (GreenLLM's TPS-keyed coarse loop does exactly that when its token
+//! feed stops), and a mis-tuned learner can flap clocks hard enough to
+//! burn both energy and tail latency. [`GovernorSupervisor`] watches the
+//! wrapped policy from the outside and **fails safe**:
+//!
+//! * **Detectors** — (1) *breach streak*: `breach_streak` consecutive
+//!   decode TBT samples over the SLO target; (2) *flap*: more than
+//!   `flap_budget` large-amplitude clock-direction reversals (≥ 4 ladder
+//!   steps) within `flap_window_s`; (3) *staleness*: a busy decode pool
+//!   that has delivered no token feedback for `stale_s` seconds (the
+//!   signature of a telemetry blackout).
+//! * **Fallback** — on a trip the wrapped policy is taken offline and
+//!   every worker is pinned at `fallback_mhz` (ladder max by default):
+//!   the energy-oblivious-but-SLO-safe `defaultNV`-like posture.
+//! * **Hysteresis** — fallback holds for `cooldown_s`, then a
+//!   `probation_s` window re-engages the policy under watch; a trip
+//!   during probation falls straight back. Every transition is
+//!   timestamped and drained by the engine into the flight recorder
+//!   (`supervisor-fallback` attribution windows).
+//!
+//! The supervisor is transparent when it never trips: inner ticks, plans
+//! and feedback pass straight through, and it is only built at all when
+//! `ctl.supervisor` is set (`coordinator::policy::build`).
+
+use std::collections::VecDeque;
+
+use crate::config::Config;
+use crate::coordinator::policy::{DvfsPolicy, PolicyDiagnostics};
+use crate::coordinator::telemetry::{ClockPlan, PoolView, TickSpec};
+use crate::dvfs::prefill_opt::PrefillJobView;
+
+/// Supervisor watch-tick period, seconds.
+const SUP_TICK_S: f64 = 0.1;
+/// Ladder steps a clock move must span to count toward flap detection
+/// (GreenLLM's fine loop legitimately dithers ±1 step).
+const FLAP_AMP_STEPS: u32 = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum SupState {
+    /// The wrapped policy is in control.
+    Engaged,
+    /// Pinned at the fallback clock until the cooldown expires.
+    Fallback {
+        /// Earliest time probation may begin.
+        until: f64,
+    },
+    /// The policy is back in control but every detector re-trips
+    /// immediately; survives until `until` to fully re-engage.
+    Probation {
+        /// Time at which the policy is considered healthy again.
+        until: f64,
+    },
+}
+
+/// Watchdog decorator around any [`DvfsPolicy`]; see the module docs for
+/// the state machine.
+pub struct GovernorSupervisor {
+    inner: Box<dyn DvfsPolicy>,
+    inner_ticks: usize,
+    state: SupState,
+    tbt_target_s: f64,
+    stale_s: f64,
+    breach_streak: u32,
+    flap_budget: u32,
+    flap_window_s: f64,
+    cooldown_s: f64,
+    probation_s: f64,
+    fallback_mhz: u32,
+    flap_amp_mhz: u32,
+    breach_run: u32,
+    breach_pending: bool,
+    last_mhz: Vec<Option<u32>>,
+    last_dir: Vec<i8>,
+    reversals: VecDeque<f64>,
+    last_feedback_t: f64,
+    fallbacks: u64,
+    reengages: u64,
+    transitions: Vec<(f64, &'static str)>,
+}
+
+impl GovernorSupervisor {
+    /// Wrap `inner` with the watchdog configured by `cfg.ctl`.
+    pub fn new(inner: Box<dyn DvfsPolicy>, cfg: &Config) -> GovernorSupervisor {
+        let ladder = cfg.gpu.ladder();
+        let fallback_mhz = if cfg.ctl.fallback_mhz == 0 {
+            ladder.max_mhz
+        } else {
+            cfg.ctl.fallback_mhz.min(ladder.max_mhz)
+        };
+        let inner_ticks = inner.ticks().len();
+        GovernorSupervisor {
+            inner,
+            inner_ticks,
+            state: SupState::Engaged,
+            tbt_target_s: cfg.slo.tbt_p95_s,
+            stale_s: cfg.ctl.stale_s,
+            breach_streak: cfg.ctl.breach_streak,
+            flap_budget: cfg.ctl.flap_budget,
+            flap_window_s: cfg.ctl.flap_window_s,
+            cooldown_s: cfg.ctl.cooldown_s,
+            probation_s: cfg.ctl.probation_s,
+            fallback_mhz,
+            flap_amp_mhz: FLAP_AMP_STEPS * ladder.step_mhz,
+            breach_run: 0,
+            breach_pending: false,
+            last_mhz: Vec::new(),
+            last_dir: Vec::new(),
+            reversals: VecDeque::new(),
+            last_feedback_t: 0.0,
+            fallbacks: 0,
+            reengages: 0,
+            transitions: Vec::new(),
+        }
+    }
+
+    fn in_fallback(&self) -> bool {
+        matches!(self.state, SupState::Fallback { .. })
+    }
+
+    /// Take the policy offline and pin the fallback clock. No-op while
+    /// already in fallback.
+    fn trip(&mut self, now: f64) {
+        self.breach_pending = false;
+        if self.in_fallback() {
+            return;
+        }
+        self.state = SupState::Fallback {
+            until: now + self.cooldown_s,
+        };
+        self.fallbacks += 1;
+        self.transitions.push((now, "fallback"));
+        self.breach_run = 0;
+        self.reversals.clear();
+        self.last_dir.iter_mut().for_each(|d| *d = 0);
+        self.last_mhz.iter_mut().for_each(|m| *m = None);
+    }
+
+    /// Watch the inner policy's decode plan for large-amplitude
+    /// direction reversals; trips when the windowed count exceeds the
+    /// budget.
+    fn observe_plan(&mut self, now: f64, plan: &ClockPlan) {
+        if self.last_mhz.len() < plan.decode_mhz.len() {
+            self.last_mhz.resize(plan.decode_mhz.len(), None);
+            self.last_dir.resize(plan.decode_mhz.len(), 0);
+        }
+        for (w, m) in plan.decode_mhz.iter().enumerate() {
+            let Some(m) = *m else { continue };
+            if let Some(prev) = self.last_mhz[w] {
+                let delta = m as i64 - prev as i64;
+                if delta.unsigned_abs() >= self.flap_amp_mhz as u64 {
+                    let dir: i8 = if delta > 0 { 1 } else { -1 };
+                    if self.last_dir[w] == -dir {
+                        self.reversals.push_back(now);
+                    }
+                    self.last_dir[w] = dir;
+                }
+            }
+            self.last_mhz[w] = Some(m);
+        }
+        while let Some(&t0) = self.reversals.front() {
+            if now - t0 > self.flap_window_s {
+                self.reversals.pop_front();
+            } else {
+                break;
+            }
+        }
+        if self.reversals.len() as u32 > self.flap_budget {
+            self.trip(now);
+        }
+    }
+
+    fn note_tbt(&mut self, tbt_s: f64, count: u32) {
+        if tbt_s > self.tbt_target_s {
+            self.breach_run = self.breach_run.saturating_add(count);
+            if self.breach_run >= self.breach_streak {
+                self.breach_pending = true;
+            }
+        } else {
+            self.breach_run = 0;
+        }
+    }
+}
+
+impl DvfsPolicy for GovernorSupervisor {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn initial_clock_mhz(&self) -> Option<u32> {
+        self.inner.initial_clock_mhz()
+    }
+
+    fn ticks(&self) -> Vec<TickSpec> {
+        let mut specs = self.inner.ticks();
+        // The watch tick reads the decode view (busy check for the
+        // staleness detector); its index is `inner_ticks`.
+        specs.push(TickSpec::every(SUP_TICK_S));
+        specs
+    }
+
+    fn on_tick(&mut self, kind: usize, now: f64, view: &PoolView, plan: &mut ClockPlan) {
+        if kind < self.inner_ticks {
+            if !self.in_fallback() {
+                self.inner.on_tick(kind, now, view, plan);
+                self.observe_plan(now, plan);
+                if self.breach_pending {
+                    self.trip(now);
+                }
+                if self.in_fallback() {
+                    // The tripping plan must not land: pin it here too.
+                    plan.prefill_mhz.iter_mut().for_each(|m| *m = Some(self.fallback_mhz));
+                    plan.decode_mhz.iter_mut().for_each(|m| *m = Some(self.fallback_mhz));
+                }
+            }
+            return;
+        }
+        // Watch tick: advance the state machine first, then run the
+        // detectors (a probation that is already stale re-trips within
+        // this same tick — the policy never regains control during an
+        // ongoing blackout).
+        match self.state {
+            SupState::Fallback { until } if now >= until => {
+                self.state = SupState::Probation {
+                    until: now + self.probation_s,
+                };
+                self.transitions.push((now, "probation"));
+            }
+            SupState::Probation { until } if now >= until => {
+                self.state = SupState::Engaged;
+                self.reengages += 1;
+                self.transitions.push((now, "reengage"));
+            }
+            _ => {}
+        }
+        if !self.in_fallback() {
+            let busy = view.decode.iter().any(|d| d.batch > 0);
+            if !busy {
+                self.last_feedback_t = now;
+            } else if now - self.last_feedback_t > self.stale_s {
+                self.trip(now);
+            }
+            if self.breach_pending {
+                self.trip(now);
+            }
+        }
+        if self.in_fallback() {
+            plan.prefill_mhz.iter_mut().for_each(|m| *m = Some(self.fallback_mhz));
+            plan.decode_mhz.iter_mut().for_each(|m| *m = Some(self.fallback_mhz));
+        }
+    }
+
+    fn on_decode_tbt(&mut self, worker: usize, tbt_s: f64) {
+        self.note_tbt(tbt_s, 1);
+        self.inner.on_decode_tbt(worker, tbt_s);
+    }
+
+    fn on_decode_tbt_weighted(&mut self, worker: usize, tbt_s: f64, count: u32) {
+        self.note_tbt(tbt_s, count);
+        self.inner.on_decode_tbt_weighted(worker, tbt_s, count);
+    }
+
+    fn on_decode_tokens(&mut self, worker: usize, now: f64, tokens: u32) {
+        self.last_feedback_t = self.last_feedback_t.max(now);
+        self.inner.on_decode_tokens(worker, now, tokens);
+    }
+
+    fn wants_prefill_jobs(&self) -> bool {
+        self.inner.wants_prefill_jobs()
+    }
+
+    fn wants_backlog_updates(&self) -> bool {
+        self.inner.wants_backlog_updates()
+    }
+
+    fn on_prefill_dispatch(
+        &mut self,
+        now: f64,
+        worker: usize,
+        jobs: &[PrefillJobView],
+    ) -> Option<u32> {
+        let r = self.inner.on_prefill_dispatch(now, worker, jobs);
+        if self.in_fallback() {
+            Some(self.fallback_mhz)
+        } else {
+            r
+        }
+    }
+
+    fn on_prefill_idle(&mut self, now: f64, worker: usize) -> Option<u32> {
+        let r = self.inner.on_prefill_idle(now, worker);
+        if self.in_fallback() {
+            Some(self.fallback_mhz)
+        } else {
+            r
+        }
+    }
+
+    fn on_prefill_backlog(
+        &mut self,
+        now: f64,
+        worker: usize,
+        jobs: &[PrefillJobView],
+    ) -> Option<u32> {
+        let r = self.inner.on_prefill_backlog(now, worker, jobs);
+        if self.in_fallback() {
+            Some(self.fallback_mhz)
+        } else {
+            r
+        }
+    }
+
+    fn on_power_cap(&mut self, cap_mhz: u32) {
+        self.inner.on_power_cap(cap_mhz);
+    }
+
+    fn diagnostics(&self) -> PolicyDiagnostics {
+        let mut d = self.inner.diagnostics();
+        d.supervisor_fallbacks = self.fallbacks;
+        d.supervisor_reengages = self.reengages;
+        d
+    }
+
+    fn ctl_transitions(&mut self) -> Vec<(f64, &'static str)> {
+        std::mem::take(&mut self.transitions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::telemetry::DecodeWorkerView;
+
+    /// Inert inner policy whose tick emits a scripted decode clock.
+    struct Scripted {
+        clocks: Vec<u32>,
+        i: usize,
+    }
+
+    impl DvfsPolicy for Scripted {
+        fn name(&self) -> String {
+            "scripted".into()
+        }
+        fn ticks(&self) -> Vec<TickSpec> {
+            vec![TickSpec::every(0.05)]
+        }
+        fn on_tick(&mut self, _k: usize, _now: f64, _v: &PoolView, plan: &mut ClockPlan) {
+            if !self.clocks.is_empty() {
+                plan.decode_mhz[0] = Some(self.clocks[self.i % self.clocks.len()]);
+                self.i += 1;
+            }
+        }
+    }
+
+    fn sup(clocks: Vec<u32>, tweak: impl FnOnce(&mut Config)) -> GovernorSupervisor {
+        let mut cfg = Config {
+            sim_noise: 0.0,
+            ..Config::default()
+        };
+        cfg.ctl.supervisor = true;
+        tweak(&mut cfg);
+        GovernorSupervisor::new(Box::new(Scripted { clocks, i: 0 }), &cfg)
+    }
+
+    fn busy_view(now: f64) -> PoolView {
+        PoolView {
+            now,
+            prefill: Vec::new(),
+            decode: vec![DecodeWorkerView {
+                batch: 4,
+                avg_ctx: 400.0,
+            }],
+        }
+    }
+
+    fn tick(s: &mut GovernorSupervisor, kind: usize, now: f64, busy: bool) -> ClockPlan {
+        let mut plan = ClockPlan::default();
+        plan.reset(1, 1);
+        let mut v = busy_view(now);
+        if !busy {
+            v.decode[0].batch = 0;
+        }
+        s.on_tick(kind, now, &v, &mut plan);
+        plan
+    }
+
+    #[test]
+    fn staleness_trips_then_cooldown_probation_reengage() {
+        let mut s = sup(vec![900], |_| {});
+        // Busy but fed: no trip.
+        s.on_decode_tokens(0, 0.45, 32);
+        let p = tick(&mut s, 1, 0.5, true);
+        assert_eq!(s.diagnostics().supervisor_fallbacks, 0);
+        assert_eq!(p.decode_mhz[0], None, "engaged watch tick holds clocks");
+        // 1.2 s of busy silence (> stale_s = 1.0): trip and pin.
+        let p = tick(&mut s, 1, 1.7, true);
+        assert_eq!(s.diagnostics().supervisor_fallbacks, 1);
+        assert_eq!(p.decode_mhz[0], Some(1410));
+        assert_eq!(p.prefill_mhz[0], Some(1410));
+        // Inner ticks are swallowed during fallback.
+        let p = tick(&mut s, 0, 1.75, true);
+        assert_eq!(p.decode_mhz[0], None, "inner must be offline");
+        // Cooldown arithmetic: trip at 1.7 + cooldown 5.0 → probation
+        // opens at the first watch tick past 6.7 — not before.
+        let p = tick(&mut s, 1, 6.6, true);
+        assert_eq!(p.decode_mhz[0], Some(1410), "still inside cooldown");
+        // Feedback has resumed → probation, then re-engage after
+        // probation_s of clean running.
+        s.on_decode_tokens(0, 6.65, 32);
+        let p = tick(&mut s, 1, 6.8, true);
+        assert_eq!(p.decode_mhz[0], None, "probation returns control");
+        s.on_decode_tokens(0, 9.7, 32);
+        tick(&mut s, 1, 9.9, true);
+        let d = s.diagnostics();
+        assert_eq!(d.supervisor_fallbacks, 1);
+        assert_eq!(d.supervisor_reengages, 1);
+        assert_eq!(
+            s.ctl_transitions()
+                .iter()
+                .map(|(_, w)| *w)
+                .collect::<Vec<_>>(),
+            vec!["fallback", "probation", "reengage"]
+        );
+        assert!(s.ctl_transitions().is_empty(), "drain is destructive");
+    }
+
+    #[test]
+    fn ongoing_staleness_retrips_probation_within_the_same_tick() {
+        let mut s = sup(vec![900], |_| {});
+        tick(&mut s, 1, 1.7, true); // trip at 1.7
+        assert_eq!(s.diagnostics().supervisor_fallbacks, 1);
+        // Cooldown expires but the feed is still silent: probation opens
+        // and re-trips inside one watch tick — the pin never lifts.
+        let p = tick(&mut s, 1, 6.8, true);
+        assert_eq!(p.decode_mhz[0], Some(1410));
+        assert_eq!(s.diagnostics().supervisor_fallbacks, 2);
+        let kinds: Vec<&str> = s.ctl_transitions().iter().map(|(_, w)| *w).collect();
+        assert_eq!(kinds, vec!["fallback", "probation", "fallback"]);
+    }
+
+    #[test]
+    fn idle_pool_never_goes_stale() {
+        let mut s = sup(vec![900], |_| {});
+        for i in 0..100 {
+            tick(&mut s, 1, i as f64 * 0.1, false);
+        }
+        assert_eq!(s.diagnostics().supervisor_fallbacks, 0);
+    }
+
+    #[test]
+    fn breach_streak_boundary() {
+        let mut s = sup(vec![900], |c| c.ctl.breach_streak = 4);
+        // Target is slo.tbt_p95_s = 0.1. Three breaches + recovery: no trip.
+        for _ in 0..3 {
+            s.on_decode_tbt(0, 0.25);
+        }
+        s.on_decode_tbt(0, 0.05);
+        s.on_decode_tokens(0, 0.95, 8);
+        tick(&mut s, 1, 1.0, true);
+        assert_eq!(s.diagnostics().supervisor_fallbacks, 0);
+        // Four consecutive (weighted counts count): trip at the next tick.
+        s.on_decode_tbt_weighted(0, 0.25, 3);
+        s.on_decode_tbt(0, 0.25);
+        s.on_decode_tokens(0, 1.05, 8);
+        let p = tick(&mut s, 1, 1.1, true);
+        assert_eq!(s.diagnostics().supervisor_fallbacks, 1);
+        assert_eq!(p.decode_mhz[0], Some(1410));
+    }
+
+    #[test]
+    fn flap_budget_boundary() {
+        // Scripted inner flips 600↔1410 every inner tick: one reversal
+        // per tick after the first two. Budget 5 in a 10 s window →
+        // reversal 6 trips.
+        let mut s = sup(vec![600, 1410], |c| {
+            c.ctl.flap_budget = 5;
+            c.ctl.flap_window_s = 10.0;
+        });
+        for i in 0..7 {
+            s.on_decode_tokens(0, i as f64 * 0.05, 8);
+            tick(&mut s, 0, i as f64 * 0.05, true);
+        }
+        // 7 ticks → moves at ticks 1..=6 → 5 reversals (ticks 2..=6): at
+        // the budget, not over it.
+        assert_eq!(s.diagnostics().supervisor_fallbacks, 0);
+        s.on_decode_tokens(0, 0.35, 8);
+        let p = tick(&mut s, 0, 0.35, true);
+        assert_eq!(s.diagnostics().supervisor_fallbacks, 1, "budget + 1 trips");
+        assert_eq!(p.decode_mhz[0], Some(1410), "tripping plan is pinned");
+        // Small-amplitude dither (±1 step) never counts as flapping.
+        let mut fine = sup(vec![900, 915], |c| c.ctl.flap_budget = 1);
+        for i in 0..50 {
+            fine.on_decode_tokens(0, i as f64 * 0.05, 8);
+            tick(&mut fine, 0, i as f64 * 0.05, true);
+        }
+        assert_eq!(fine.diagnostics().supervisor_fallbacks, 0);
+    }
+
+    #[test]
+    fn fallback_overrides_prefill_callbacks_and_respects_custom_clock() {
+        let mut s = sup(vec![900], |c| c.ctl.fallback_mhz = 1200);
+        assert_eq!(s.on_prefill_idle(0.1, 0), None, "engaged: inner's answer");
+        tick(&mut s, 1, 1.7, true); // stale trip
+        assert_eq!(s.on_prefill_idle(1.8, 0), Some(1200));
+        assert_eq!(s.on_prefill_dispatch(1.9, 0, &[]), Some(1200));
+        assert_eq!(s.on_prefill_backlog(2.0, 0, &[]), Some(1200));
+        let p = tick(&mut s, 1, 2.1, true);
+        assert_eq!(p.decode_mhz[0], Some(1200));
+    }
+}

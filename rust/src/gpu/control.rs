@@ -1,0 +1,403 @@
+//! The faultable control-plane boundary between governors and GPUs.
+//!
+//! Real deployments drive DVFS through an NVML-shaped interface whose
+//! writes are neither instant nor reliable, and whose sensors are neither
+//! fresh nor exact (Maliakel et al., arXiv 2501.08219 measure both on
+//! A100/H100 parts; AGFT, arXiv 2508.01744, shows how sensitive feedback
+//! governors are to exactly this). [`ControlPlane`] models that boundary
+//! for one node:
+//!
+//! * **Actuation** — every policy clock write passes through
+//!   [`ControlPlane::gate_write`], which can silently drop it, snap it to
+//!   an adjacent ladder rung (misstep), or defer it by a configured
+//!   latency (the engine schedules the deferred apply; a newer write to
+//!   the same worker supersedes it via a per-GPU sequence number).
+//! * **Sensing** — the cluster power arbiter and supervisor read
+//!   telemetry through `sense_*` adapters that can quantize values or
+//!   freeze them at their blackout-entry snapshot while a scheduled
+//!   telemetry blackout is in force. Event-driven policy feedback
+//!   (TBT/token/backlog callbacks) is suppressed entirely during a
+//!   blackout — the engine counts each suppressed delivery here.
+//!
+//! With `noise` off and no blackout the plane is transparent: writes pass
+//! through untouched, senses return their raw argument, and the RNG is
+//! never consumed — the engine's behaviour is bit-exact with the
+//! pre-control-plane loop (property-tested in `cluster_invariants`).
+
+use crate::config::CtlSection;
+use crate::gpu::freq::FreqLadder;
+use crate::util::rng::Pcg64;
+
+/// What the control plane decided about one clock write.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WriteAction {
+    /// Apply this (possibly misstepped) clock now.
+    Apply(u32),
+    /// The write was silently lost.
+    Drop,
+    /// Apply `mhz` at `apply_at`; the engine must schedule it and check
+    /// `seq` against [`ControlPlane::write_is_current`] on delivery so a
+    /// newer write to the same worker supersedes the stale one.
+    Delay {
+        /// The clock to land (post-misstep), MHz.
+        mhz: u32,
+        /// Virtual time at which the write takes effect.
+        apply_at: f64,
+        /// Supersession ticket for this worker's write stream.
+        seq: u64,
+    },
+}
+
+/// Per-node faultable actuation/sensing boundary. Owned by the serving
+/// engine; the cluster fault layer toggles its runtime state through the
+/// `ctlnoise`/`ctlquiet`/`ctlblackout`/`ctlsense` verbs.
+#[derive(Debug, Clone)]
+pub struct ControlPlane {
+    /// Config baseline, restored on node recovery.
+    cfg: CtlSection,
+    noise: bool,
+    blackout: bool,
+    delay_s: f64,
+    drop_prob: f64,
+    misstep_prob: f64,
+    quantize: f64,
+    rng: Pcg64,
+    /// Monotone write ticket per first-GPU index; a delayed write applies
+    /// only if its ticket is still the latest for that worker.
+    seq: Vec<u64>,
+    frozen_tail_s: f64,
+    frozen_pressure: f64,
+    frozen_power_w: Option<f64>,
+    /// Writes silently dropped by the noise path.
+    pub dropped_writes: u64,
+    /// Writes deferred by actuation latency.
+    pub delayed_writes: u64,
+    /// Writes that landed on an adjacent ladder rung.
+    pub missteps: u64,
+    /// Policy feedback deliveries suppressed during blackouts.
+    pub suppressed_samples: u64,
+}
+
+impl ControlPlane {
+    /// A plane for a node with `gpus` GPUs, seeded deterministically.
+    pub fn new(cfg: &CtlSection, seed: u64, gpus: usize) -> ControlPlane {
+        ControlPlane {
+            noise: cfg.noise,
+            blackout: false,
+            delay_s: cfg.delay_s,
+            drop_prob: cfg.drop_prob,
+            misstep_prob: cfg.misstep_prob,
+            quantize: cfg.quantize,
+            cfg: cfg.clone(),
+            rng: Pcg64::new(seed, 0xC712),
+            seq: vec![0; gpus],
+            frozen_tail_s: 0.0,
+            frozen_pressure: 0.0,
+            frozen_power_w: None,
+            dropped_writes: 0,
+            delayed_writes: 0,
+            missteps: 0,
+            suppressed_samples: 0,
+        }
+    }
+
+    /// Is the actuation noise path active right now?
+    pub fn noise_active(&self) -> bool {
+        self.noise
+    }
+
+    /// Is a telemetry blackout in force right now?
+    pub fn blackout(&self) -> bool {
+        self.blackout
+    }
+
+    /// Gate one clock write for the worker span starting at `first_gpu`.
+    /// Always bumps the worker's write ticket (so any pending delayed
+    /// write is superseded), but consumes RNG only while noise is on.
+    pub fn gate_write(
+        &mut self,
+        t: f64,
+        first_gpu: usize,
+        mhz: u32,
+        ladder: &FreqLadder,
+    ) -> WriteAction {
+        self.seq[first_gpu] = self.seq[first_gpu].wrapping_add(1);
+        if !self.noise {
+            return WriteAction::Apply(mhz);
+        }
+        if self.drop_prob > 0.0 && self.rng.f64() < self.drop_prob {
+            self.dropped_writes += 1;
+            return WriteAction::Drop;
+        }
+        let mut out = mhz;
+        if self.misstep_prob > 0.0 && self.rng.f64() < self.misstep_prob {
+            let up = self.rng.f64() < 0.5;
+            out = ladder.step(mhz, up, ladder.min_mhz, ladder.max_mhz);
+            if out != mhz {
+                self.missteps += 1;
+            }
+        }
+        if self.delay_s > 0.0 {
+            self.delayed_writes += 1;
+            WriteAction::Delay {
+                mhz: out,
+                apply_at: t + self.delay_s,
+                seq: self.seq[first_gpu],
+            }
+        } else {
+            WriteAction::Apply(out)
+        }
+    }
+
+    /// Is a delayed write's ticket still the latest for its worker?
+    pub fn write_is_current(&self, first_gpu: usize, seq: u64) -> bool {
+        self.seq[first_gpu] == seq
+    }
+
+    /// Invalidate every in-flight delayed write (node failure: the queue
+    /// is rebuilt, pending applies must not land on the recovered node).
+    pub fn invalidate_pending(&mut self) {
+        for s in self.seq.iter_mut() {
+            *s = s.wrapping_add(1);
+        }
+    }
+
+    /// `ctlnoise` verb: switch actuation noise on with these parameters.
+    pub fn noise_on(&mut self, delay_s: f64, drop_prob: f64, misstep_prob: f64) {
+        self.noise = true;
+        self.delay_s = delay_s;
+        self.drop_prob = drop_prob;
+        self.misstep_prob = misstep_prob;
+    }
+
+    /// `ctlquiet` verb: actuation returns to the ideal instant path.
+    pub fn noise_off(&mut self) {
+        self.noise = false;
+    }
+
+    /// `ctlblackout` verb: freeze sensed telemetry at the values sampled
+    /// now and suppress event-driven policy feedback until
+    /// [`ControlPlane::blackout_off`].
+    pub fn blackout_on(&mut self, tail_s: f64, pressure: f64) {
+        self.blackout = true;
+        self.frozen_tail_s = tail_s;
+        self.frozen_pressure = pressure;
+        self.frozen_power_w = None;
+    }
+
+    /// `ctlsense` verb: sensors come back; feedback flows again.
+    pub fn blackout_off(&mut self) {
+        self.blackout = false;
+        self.frozen_power_w = None;
+    }
+
+    /// Node recovery: back to the config baseline (runtime verb overlays
+    /// cleared, cumulative counters kept).
+    pub fn reset_to_config(&mut self) {
+        self.noise = self.cfg.noise;
+        self.delay_s = self.cfg.delay_s;
+        self.drop_prob = self.cfg.drop_prob;
+        self.misstep_prob = self.cfg.misstep_prob;
+        self.blackout = false;
+        self.frozen_power_w = None;
+        self.invalidate_pending();
+    }
+
+    /// Count one policy feedback delivery suppressed by a blackout.
+    pub fn note_suppressed(&mut self) {
+        self.suppressed_samples += 1;
+    }
+
+    /// Sensed decode-tail P95 (seconds): frozen during blackouts,
+    /// quantized to the `quantize`-millisecond grid under noise, exact
+    /// otherwise.
+    pub fn sense_tail(&self, raw_s: f64) -> f64 {
+        if self.blackout {
+            self.frozen_tail_s
+        } else {
+            self.quantized(raw_s, self.quantize * 1e-3)
+        }
+    }
+
+    /// Sensed prefill backlog pressure (seconds of backlog): frozen
+    /// during blackouts, quantized like a latency sensor under noise.
+    pub fn sense_pressure(&self, raw: f64) -> f64 {
+        if self.blackout {
+            self.frozen_pressure
+        } else {
+            self.quantized(raw, self.quantize * 1e-3)
+        }
+    }
+
+    /// Sensed node power (watts): during a blackout the first reading is
+    /// frozen and repeated (a stuck sensor), otherwise quantized to the
+    /// `quantize`-watt grid under noise, exact without it.
+    pub fn sense_power(&mut self, raw_w: f64) -> f64 {
+        if self.blackout {
+            let q = self.quantized(raw_w, self.quantize);
+            *self.frozen_power_w.get_or_insert(q)
+        } else {
+            self.quantized(raw_w, self.quantize)
+        }
+    }
+
+    fn quantized(&self, v: f64, step: f64) -> f64 {
+        if self.noise && step > 0.0 {
+            (v / step).round() * step
+        } else {
+            v
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane(section: impl FnOnce(&mut CtlSection)) -> ControlPlane {
+        let mut s = CtlSection::default();
+        section(&mut s);
+        ControlPlane::new(&s, 7, 8)
+    }
+
+    #[test]
+    fn transparent_when_noise_off() {
+        let mut p = plane(|_| {});
+        let ladder = FreqLadder::a100();
+        for (i, mhz) in [900, 1410, 210, 615].into_iter().enumerate() {
+            assert_eq!(
+                p.gate_write(i as f64, 0, mhz, &ladder),
+                WriteAction::Apply(mhz)
+            );
+        }
+        assert_eq!(p.sense_tail(0.1234), 0.1234);
+        assert_eq!(p.sense_power(417.3), 417.3);
+        assert_eq!(p.dropped_writes + p.delayed_writes + p.missteps, 0);
+        // No RNG consumed: a twin plane that went through noise draws has
+        // diverged, the quiet one has not.
+        let mut q = plane(|_| {});
+        for (i, mhz) in [900, 1410, 210, 615].into_iter().enumerate() {
+            q.gate_write(i as f64, 0, mhz, &ladder);
+        }
+        assert_eq!(p.rng.next_u64(), q.rng.next_u64());
+    }
+
+    #[test]
+    fn zero_prob_noise_is_also_transparent() {
+        // noise=true with all-zero parameters must behave identically to
+        // noise=false (and consume no RNG) — the verbs can arm the path
+        // with trivial parameters.
+        let mut p = plane(|s| s.noise = true);
+        let ladder = FreqLadder::a100();
+        assert_eq!(p.gate_write(1.0, 2, 990, &ladder), WriteAction::Apply(990));
+        assert_eq!(p.sense_tail(0.05), 0.05);
+        let mut q = plane(|_| {});
+        q.gate_write(1.0, 2, 990, &ladder);
+        assert_eq!(p.rng.next_u64(), q.rng.next_u64());
+    }
+
+    #[test]
+    fn drops_and_delays_are_deterministic_per_seed() {
+        let run = || {
+            let mut p = plane(|s| {
+                s.noise = true;
+                s.delay_s = 0.05;
+                s.drop_prob = 0.3;
+                s.misstep_prob = 0.3;
+            });
+            let ladder = FreqLadder::a100();
+            (0..200)
+                .map(|i| p.gate_write(i as f64 * 0.02, i % 8, 900, &ladder))
+                .collect::<Vec<_>>()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b);
+        assert!(a.iter().any(|w| *w == WriteAction::Drop));
+        assert!(a
+            .iter()
+            .any(|w| matches!(w, WriteAction::Delay { mhz, .. } if *mhz != 900)));
+    }
+
+    #[test]
+    fn delayed_writes_land_on_ladder_at_t_plus_delay() {
+        let mut p = plane(|s| {
+            s.noise = true;
+            s.delay_s = 0.1;
+            s.misstep_prob = 1.0;
+        });
+        let ladder = FreqLadder::a100();
+        for i in 0..50 {
+            match p.gate_write(2.0, i % 8, 900, &ladder) {
+                WriteAction::Delay { mhz, apply_at, .. } => {
+                    assert!(ladder.contains(mhz), "off-ladder misstep {mhz}");
+                    assert!((mhz as i64 - 900i64).unsigned_abs() as u32 <= ladder.step_mhz);
+                    assert_eq!(apply_at, 2.1);
+                }
+                other => panic!("expected a delayed write, got {other:?}"),
+            }
+        }
+        assert_eq!(p.delayed_writes, 50);
+        assert!(p.missteps > 0);
+    }
+
+    #[test]
+    fn newer_write_supersedes_pending_delayed_write() {
+        let mut p = plane(|s| {
+            s.noise = true;
+            s.delay_s = 0.2;
+        });
+        let ladder = FreqLadder::a100();
+        let first = p.gate_write(1.0, 3, 600, &ladder);
+        let WriteAction::Delay { seq: s1, .. } = first else {
+            panic!("expected delay")
+        };
+        assert!(p.write_is_current(3, s1));
+        let WriteAction::Delay { seq: s2, .. } = p.gate_write(1.05, 3, 900, &ladder) else {
+            panic!("expected delay")
+        };
+        assert!(!p.write_is_current(3, s1), "stale write must be superseded");
+        assert!(p.write_is_current(3, s2));
+        // Other workers' tickets are untouched.
+        let WriteAction::Delay { seq: s0, .. } = p.gate_write(1.1, 0, 900, &ladder) else {
+            panic!("expected delay")
+        };
+        assert!(p.write_is_current(0, s0));
+        p.invalidate_pending();
+        assert!(!p.write_is_current(0, s0) && !p.write_is_current(3, s2));
+    }
+
+    #[test]
+    fn blackout_freezes_senses_and_reset_restores_config() {
+        let mut p = plane(|s| s.noise = true);
+        p.blackout_on(0.150, 2.5);
+        assert!(p.blackout());
+        assert_eq!(p.sense_tail(0.010), 0.150);
+        assert_eq!(p.sense_pressure(0.0), 2.5);
+        // Stuck power sensor: first in-blackout reading repeats.
+        assert_eq!(p.sense_power(400.0), 400.0);
+        assert_eq!(p.sense_power(900.0), 400.0);
+        p.blackout_off();
+        assert_eq!(p.sense_tail(0.010), 0.010);
+        assert_eq!(p.sense_power(900.0), 900.0);
+        // Recovery restores the config baseline (noise off here).
+        let mut q = plane(|_| {});
+        q.noise_on(0.1, 0.5, 0.5);
+        q.blackout_on(1.0, 1.0);
+        q.reset_to_config();
+        assert!(!q.noise_active() && !q.blackout());
+    }
+
+    #[test]
+    fn quantize_grids_power_and_latency_senses() {
+        let mut p = plane(|s| {
+            s.noise = true;
+            s.quantize = 25.0; // 25 W / 25 ms grids
+        });
+        assert_eq!(p.sense_power(417.3), 425.0);
+        assert_eq!(p.sense_tail(0.0171), 0.025);
+        assert_eq!(p.sense_pressure(0.004), 0.0);
+        // Quantization is part of the noise path: off → exact.
+        p.noise_off();
+        assert_eq!(p.sense_power(417.3), 417.3);
+    }
+}

@@ -91,8 +91,18 @@ impl SimGpu {
         self.off
     }
 
-    /// NVML-style application-clock set (snapped to the ladder).
+    /// NVML-style application-clock set. Every legitimate writer (the
+    /// policy layer, the power arbiter, the control-plane misstep path)
+    /// produces ladder clocks, so an off-ladder request here is a caller
+    /// bug, caught in debug builds; release builds still snap defensively.
     pub fn set_app_clock(&mut self, now: f64, mhz: u32) {
+        debug_assert!(
+            self.ladder.contains(mhz),
+            "off-ladder clock write: {mhz} MHz (ladder {}\u{2013}{} step {})",
+            self.ladder.min_mhz,
+            self.ladder.max_mhz,
+            self.ladder.step_mhz
+        );
         self.advance(now);
         let snapped = self.ladder.snap(mhz as f64);
         if snapped != self.freq_mhz {
@@ -176,12 +186,19 @@ mod tests {
     }
 
     #[test]
-    fn clock_snaps_to_ladder() {
+    fn on_ladder_clock_writes_land_exactly() {
         let mut g = SimGpu::new(0);
-        g.set_app_clock(0.0, 1000);
-        assert_eq!(g.sm_clock(), 1005);
-        g.set_app_clock(0.0, 100);
-        assert_eq!(g.sm_clock(), 210);
+        for mhz in [1005, 210, 1410, 615] {
+            g.set_app_clock(0.0, mhz);
+            assert_eq!(g.sm_clock(), mhz);
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "off-ladder clock write")]
+    fn off_ladder_clock_write_is_a_caller_bug() {
+        SimGpu::new(0).set_app_clock(0.0, 1000);
     }
 
     #[test]

@@ -6,12 +6,14 @@
 //! prefill latency and memory-bound decode latency (DESIGN.md §1).
 
 pub mod calibrate;
+pub mod control;
 pub mod device;
 pub mod freq;
 pub mod perf;
 pub mod power;
 
 pub use calibrate::{CalibratedPart, CalibrationTable};
+pub use control::{ControlPlane, WriteAction};
 pub use device::SimGpu;
 pub use freq::{ghz, FreqLadder};
 pub use perf::{GpuHardware, PerfModel};

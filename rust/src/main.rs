@@ -157,6 +157,12 @@ fn base_config(args: &Args, seed: u64) -> Result<Config> {
     }
     cfg.prefill_margin = args.f64_or("prefill-margin", cfg.prefill_margin)?;
     cfg.decode_margin = args.f64_or("decode-margin", cfg.decode_margin)?;
+    // --supervisor wraps whichever policy runs in the fail-safe watchdog
+    // ([ctl] supervisor = true); the flag only ever turns it ON so a
+    // config that enables it stays enabled.
+    if args.flag("supervisor") {
+        cfg.ctl.supervisor = true;
+    }
     cfg.seed = seed;
     cfg.validate().map_err(|e| anyhow!(e))?;
     Ok(cfg)
@@ -279,9 +285,26 @@ fn validate_cmd(args: &Args, seed: u64) -> Result<()> {
     }
     let rep = bench::validate::run_closure(part, model, duration, seed, &bands);
     bench::validate::print_report(&rep);
+    // --ctl-stress: informational re-run of the pair under mild
+    // control-plane noise with the supervisor armed. Never gates — the
+    // exit code below depends only on the clean closure bands.
+    let stress = if args.flag("ctl-stress") {
+        let rows = bench::validate::run_ctl_stress(part, model, duration, seed);
+        bench::validate::print_ctl_stress(&rows);
+        Some(rows)
+    } else {
+        None
+    };
     if let Some(path) = args.get("json") {
-        std::fs::write(path, rep.to_json().dump())
-            .map_err(|e| anyhow!("closure json {path}: {e}"))?;
+        use greenllm::util::json::Json;
+        let mut doc = rep.to_json();
+        if let (Json::Obj(map), Some(rows)) = (&mut doc, &stress) {
+            map.insert(
+                "ctl_stress".to_string(),
+                bench::validate::ctl_stress_json(rows),
+            );
+        }
+        std::fs::write(path, doc.dump()).map_err(|e| anyhow!("closure json {path}: {e}"))?;
         println!("json: wrote {path}");
     }
     if !rep.pass() {
@@ -379,6 +402,12 @@ fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
             .map(|s| FaultSpec::parse(s).map_err(|e| anyhow!(e)))
             .collect::<Result<Vec<_>>>()?;
     }
+    if let Some(spec) = args.get("ctl-faults") {
+        cfg.ctl_faults = spec
+            .split(';')
+            .map(|s| FaultSpec::parse(s).map_err(|e| anyhow!(e)))
+            .collect::<Result<Vec<_>>>()?;
+    }
     if let Some(spec) = args.get("arbiter") {
         cfg.arbiters = if spec == "all" {
             ArbiterStrategy::all()
@@ -419,18 +448,21 @@ fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
         || cfg.power_caps_w.is_empty()
         || cfg.shapes.is_empty()
         || cfg.faults.is_empty()
+        || cfg.ctl_faults.is_empty()
         || cfg.arbiters.is_empty()
         || cfg.disaggs.is_empty()
     {
         return Err(anyhow!(
             "matrix needs at least one trace, method, margin, node count, balancer, \
-             cap, shape, fault spec, arbiter and disagg entry"
+             cap, shape, fault spec, ctl-fault spec, arbiter and disagg entry"
         ));
     }
     // Validate every fault plan that will actually run against its node
     // count now, so a bad explicit schedule fails here with a message
     // instead of panicking inside a sweep worker thread. (At 1 node the
-    // fault axis collapses to its first entry, mirroring `cells()`.)
+    // fault axis collapses to its first entry, mirroring `cells()`; the
+    // ctl-fault axis never collapses, and each cell runs the MERGED
+    // capacity + control-plane plan, so validate every pairing.)
     for &n in &cfg.nodes {
         let active = if n == 1 {
             &cfg.faults[..cfg.faults.len().min(1)]
@@ -438,9 +470,18 @@ fn matrix_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
             &cfg.faults[..]
         };
         for f in active {
-            f.plan(n, duration)
-                .validate(n)
-                .map_err(|e| anyhow!("fault spec {:?} at {n} nodes: {e}", f.name()))?;
+            for c in &cfg.ctl_faults {
+                f.plan(n, duration)
+                    .merged(c.plan(n, duration))
+                    .validate(n)
+                    .map_err(|e| {
+                        anyhow!(
+                            "fault spec {:?} + ctl-fault spec {:?} at {n} nodes: {e}",
+                            f.name(),
+                            c.name()
+                        )
+                    })?;
+            }
         }
     }
     // Fail fast on unwritable artifact paths before the (long) sweep.
@@ -781,6 +822,24 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
                 r.warm_energy_j / 1e3
             );
         }
+        let ctl_active = r.supervisor_fallbacks
+            + r.supervisor_reengages
+            + r.ctl_dropped_writes
+            + r.ctl_delayed_writes
+            + r.ctl_missteps
+            + r.ctl_suppressed_samples
+            > 0;
+        if ctl_active {
+            println!(
+                "  ctl: {} fallbacks / {} reengages | writes {} dropped / {} delayed / {} missteps | {} suppressed samples",
+                r.supervisor_fallbacks,
+                r.supervisor_reengages,
+                r.ctl_dropped_writes,
+                r.ctl_delayed_writes,
+                r.ctl_missteps,
+                r.ctl_suppressed_samples,
+            );
+        }
         // Counts are conserved under every knob combination: each arrival
         // either completed or was shed. A finished run that violates this
         // lost a request silently — make that a hard error, not a log line.
@@ -857,6 +916,28 @@ fn cluster_cmd(args: &Args, duration: f64, seed: u64) -> Result<()> {
                                 .map(|&n| Json::Num(n as f64))
                                 .collect(),
                         ),
+                    ),
+                    // The ctl-chaos-smoke CI contract: supervisor and
+                    // control-plane counters, always present.
+                    (
+                        "ctl",
+                        Json::obj([
+                            (
+                                "supervisor_fallbacks",
+                                Json::Num(r.supervisor_fallbacks as f64),
+                            ),
+                            (
+                                "supervisor_reengages",
+                                Json::Num(r.supervisor_reengages as f64),
+                            ),
+                            ("dropped_writes", Json::Num(r.ctl_dropped_writes as f64)),
+                            ("delayed_writes", Json::Num(r.ctl_delayed_writes as f64)),
+                            ("missteps", Json::Num(r.ctl_missteps as f64)),
+                            (
+                                "suppressed_samples",
+                                Json::Num(r.ctl_suppressed_samples as f64),
+                            ),
+                        ]),
                     ),
                 ]),
             ));
@@ -1209,7 +1290,12 @@ COMMANDS
                --power-epoch-s S --arbiter demand|slo-pressure
                --faults none|onedown|flap|spot|straggler|
                         \"down@40:1,up@80:1,preempt@60:2:15,slow@30:3:2.0,
-                         rackdown@50:0-3\"
+                         rackdown@50:0-3,ctlnoise@40:1:0.05:0.1:0.05,
+                         ctlquiet@80:1,ctlblackout@50-70:1\"
+               --supervisor (wrap every node's policy in the fail-safe
+               watchdog: SLO-breach streaks, clock flapping and stale
+               telemetry trip a pinned high-clock fallback with
+               cooldown + probation re-engagement; [ctl] TOML tunes it)
                --disagg off|P:D (prefill/decode pool split with explicit
                KV-transfer stream migration; link model via [disagg] TOML)
                --pool-ratio P:D (phase-balancer long-pool split)
@@ -1223,14 +1309,17 @@ COMMANDS
                --shed-retries N; defaults from [shed] TOML;
                completed + shed == arrived is enforced)
                --json out.json (per-method conservation/energy/elasticity
-               counters — the chaos-smoke CI contract)
+               counters plus the ctl section with supervisor fallback and
+               dropped/delayed/misstepped-write counts — the chaos-smoke
+               and ctl-chaos-smoke CI contracts)
                --trace-out t.json (Perfetto trace of the GreenLLM pass)
                --trace ...)
   report      flight-recorder post-run analysis: run the configured method
               once with recording on, attribute every TTFT/TBT violation to
               a dominant cause (queueing-wait | low-clock-prefill |
               migration-wire-delay | fault-reroute | decode-clock-undershoot |
-              admission-backoff)
+              admission-backoff | stale-telemetry | actuation-lag |
+              supervisor-fallback)
               and print per-node tables + TTFT/TBT/power distributions
               (same deployment flags as cluster; --trace-out t.json
                --json report.json)
@@ -1242,10 +1331,13 @@ COMMANDS
                --margins 0.9,1.0 --nodes 1,2,4 --lb all|jsq,phase
                --power-cap-w 0,8000 --shapes uniform,dgx+eff+legacy
                --faults \"none;onedown;flap\" --arbiter all|demand,slo-pressure
+               --ctl-faults \"none;ctlnoise@40:1,ctlquiet@80:1;ctlblackout@50-70:0\"
                --disagg off,1:1,1:2,1:3,1:4
                --threads N --json out.json --md out.md;
-               the --faults axis separates entries with ';' because explicit
-               fault plans contain commas)
+               the --faults and --ctl-faults axes separate entries with ';'
+               because explicit fault plans contain commas; each cell runs
+               the merged capacity + control-plane plan, and cells with a
+               ctl schedule carry a `ctl` counter section in --json)
   bench       perf-gate harness: fixed-seed hot-path scenarios (incl. the
               32-node cluster sweep) reporting events/s, simulated tok/s
               and wall ms
@@ -1261,6 +1353,9 @@ COMMANDS
               exits non-zero on drift
               (--part a100|h100 --quick --json closure.json
                --min-savings 25 --max-extra-viol 3.5 --duration 240;
+               --ctl-stress re-runs the pair under mild control-plane
+               noise with the supervisor armed and prints the savings
+               delta — informational, never gating;
                see docs/VALIDATION.md)
   serve       end-to-end PJRT serving demo (needs `make artifacts`)
 

@@ -18,6 +18,16 @@
 //!   `migration-wire-delay` when the request's KV spent longer on the wire
 //!   than the TBT target (the delivery gap lands in the inter-token
 //!   stream); else `decode-clock-undershoot`.
+//! - **Control-plane overrides** (both SLOs, checked after the
+//!   admission/fault gates but before the generic clock causes): when the
+//!   violation's lifecycle window overlaps a recorded control-plane
+//!   condition on its attributed node, the condition wins —
+//!   `stale-telemetry` for a telemetry blackout window, `actuation-lag`
+//!   for an actuation-noise window, `supervisor-fallback` while a
+//!   [`GovernorSupervisor`](crate::dvfs::GovernorSupervisor) was pinned to
+//!   its fallback clock — in that priority order (a dark sensor explains
+//!   more than a lossy actuator, which explains more than the deliberate
+//!   fail-safe response to either).
 //!
 //! Node attribution follows the dominant segment: the queue/prefill node
 //! for TTFT causes, the decode node for TBT causes, the last-touched node
@@ -45,17 +55,29 @@ pub enum Cause {
     /// The overload gate deferred the request with backoff before
     /// admission — shed-policy pressure, not clocks, dominated.
     AdmissionBackoff,
+    /// The node's telemetry was dark (blackout window): the governor flew
+    /// blind through this request's lifecycle.
+    StaleTelemetry,
+    /// Control-plane actuation noise (lagged/dropped/misstepped clock
+    /// writes) was active on the node during the violation.
+    ActuationLag,
+    /// The node's supervisor was pinned to its fail-safe fallback clock —
+    /// a deliberate escalation, not a policy undershoot.
+    SupervisorFallback,
 }
 
 impl Cause {
     /// All causes, in table order.
-    pub const ALL: [Cause; 6] = [
+    pub const ALL: [Cause; 9] = [
         Cause::QueueingWait,
         Cause::LowClockPrefill,
         Cause::MigrationWireDelay,
         Cause::FaultReroute,
         Cause::DecodeClockUndershoot,
         Cause::AdmissionBackoff,
+        Cause::StaleTelemetry,
+        Cause::ActuationLag,
+        Cause::SupervisorFallback,
     ];
 
     /// Stable kebab-case label (tables, JSON keys).
@@ -67,6 +89,9 @@ impl Cause {
             Cause::FaultReroute => "fault-reroute",
             Cause::DecodeClockUndershoot => "decode-clock-undershoot",
             Cause::AdmissionBackoff => "admission-backoff",
+            Cause::StaleTelemetry => "stale-telemetry",
+            Cause::ActuationLag => "actuation-lag",
+            Cause::SupervisorFallback => "supervisor-fallback",
         }
     }
 
@@ -107,7 +132,7 @@ pub struct Attribution {
     pub violations: Vec<Violation>,
     /// `counts[node][cause_idx]` violation counts (cause order =
     /// [`Cause::ALL`]).
-    pub counts: Vec<[u64; 6]>,
+    pub counts: Vec<[u64; 9]>,
     /// TTFT violations attributed.
     pub ttft_violations: u64,
     /// TBT violations attributed.
@@ -123,8 +148,8 @@ impl Attribution {
     }
 
     /// Per-cause totals across nodes, in [`Cause::ALL`] order.
-    pub fn by_cause(&self) -> [u64; 6] {
-        let mut out = [0u64; 6];
+    pub fn by_cause(&self) -> [u64; 9] {
+        let mut out = [0u64; 9];
         for row in &self.counts {
             for (o, c) in out.iter_mut().zip(row) {
                 *o += c;
@@ -201,18 +226,21 @@ impl Attribution {
 /// exactly.
 pub fn attribute(rec: &FlightRecorder, targets: &SloTargets) -> Attribution {
     let nodes = rec.nodes().max(1);
+    let ctl = CtlWindows::build(rec, nodes);
     let mut out = Attribution {
         violations: Vec::new(),
-        counts: vec![[0u64; 6]; nodes],
+        counts: vec![[0u64; 9]; nodes],
         ttft_violations: 0,
         tbt_violations: 0,
         finished: 0,
     };
     for (&id, r) in rec.requests() {
-        let (ttft_s, tbt_p95_s) = match r.outcome {
+        let (finish_s, ttft_s, tbt_p95_s) = match r.outcome {
             ReqOutcome::Finished {
-                ttft_s, tbt_p95_s, ..
-            } => (ttft_s, tbt_p95_s),
+                t,
+                ttft_s,
+                tbt_p95_s,
+            } => (t, ttft_s, tbt_p95_s),
             _ => continue,
         };
         out.finished += 1;
@@ -240,35 +268,52 @@ pub fn attribute(rec: &FlightRecorder, targets: &SloTargets) -> Attribution {
             } else if r.faulted {
                 (Cause::FaultReroute, last_touched(r))
             } else {
-                let queued = r.time_in(SegKind::Queued);
-                let prefill = r.time_in(SegKind::Prefill);
-                if queued >= prefill {
-                    (
-                        Cause::QueueingWait,
-                        r.last_node_of(SegKind::Queued).unwrap_or(0),
-                    )
-                } else {
-                    (
-                        Cause::LowClockPrefill,
-                        r.last_node_of(SegKind::Prefill).unwrap_or(0),
-                    )
+                let tn = r
+                    .last_node_of(SegKind::Prefill)
+                    .or_else(|| r.last_node_of(SegKind::Queued))
+                    .unwrap_or(0);
+                // The TTFT story unfolds over [arrival, first token] on
+                // the queue/prefill node; a control-plane condition live
+                // anywhere in that window owns the violation.
+                match ctl.cause_in(tn, r.arrival_s, r.arrival_s + ttft_s) {
+                    Some(cause) => (cause, tn),
+                    None => {
+                        let queued = r.time_in(SegKind::Queued);
+                        let prefill = r.time_in(SegKind::Prefill);
+                        if queued >= prefill {
+                            (
+                                Cause::QueueingWait,
+                                r.last_node_of(SegKind::Queued).unwrap_or(0),
+                            )
+                        } else {
+                            (
+                                Cause::LowClockPrefill,
+                                r.last_node_of(SegKind::Prefill).unwrap_or(0),
+                            )
+                        }
+                    }
                 }
             };
             push(&mut out, id, ViolationKind::Ttft, cause, node, ttft_s - ttft_target);
         }
         if r.output_len >= 2 && tbt_p95_s > targets.tbt_p95_s {
+            let dn = r.last_node_of(SegKind::Decode).unwrap_or(0);
+            // Token gaps accrue from the first decode segment to the
+            // finish instant on the decode node.
+            let decode_t0 = r
+                .segs
+                .iter()
+                .find(|s| s.kind == SegKind::Decode)
+                .map(|s| s.t0)
+                .unwrap_or(r.arrival_s);
             let (cause, node) = if r.faulted {
                 (Cause::FaultReroute, last_touched(r))
+            } else if let Some(cause) = ctl.cause_in(dn, decode_t0, finish_s) {
+                (cause, dn)
             } else if r.time_in(SegKind::KvTransfer) > targets.tbt_p95_s {
-                (
-                    Cause::MigrationWireDelay,
-                    r.last_node_of(SegKind::Decode).unwrap_or(0),
-                )
+                (Cause::MigrationWireDelay, dn)
             } else {
-                (
-                    Cause::DecodeClockUndershoot,
-                    r.last_node_of(SegKind::Decode).unwrap_or(0),
-                )
+                (Cause::DecodeClockUndershoot, dn)
             };
             push(
                 &mut out,
@@ -281,6 +326,90 @@ pub fn attribute(rec: &FlightRecorder, targets: &SloTargets) -> Attribution {
         }
     }
     out
+}
+
+/// Per-node control-plane condition windows rebuilt from the recorder's
+/// `ctl` transition log. A window left open at run end extends to
+/// infinity (the condition was never cleared).
+struct CtlWindows {
+    /// Telemetry-blackout spans: `"blackout"` → `"sense"`.
+    blackout: Vec<Vec<(f64, f64)>>,
+    /// Actuation-noise spans: `"noise"` → `"quiet"`.
+    noise: Vec<Vec<(f64, f64)>>,
+    /// Supervisor pinned-fallback spans: `"fallback"` → `"probation"` or
+    /// `"reengage"` (a flap re-trip opens a fresh span).
+    fallback: Vec<Vec<(f64, f64)>>,
+}
+
+impl CtlWindows {
+    fn build(rec: &FlightRecorder, nodes: usize) -> Self {
+        let mut blackout = vec![Vec::new(); nodes];
+        let mut noise = vec![Vec::new(); nodes];
+        let mut fallback = vec![Vec::new(); nodes];
+        let mut open_b = vec![None; nodes];
+        let mut open_n = vec![None; nodes];
+        let mut open_f = vec![None; nodes];
+        for &(t, node, what) in rec.ctl_log() {
+            let n = node.min(nodes - 1);
+            match what {
+                "blackout" => open_b[n] = open_b[n].or(Some(t)),
+                "sense" => {
+                    if let Some(t0) = open_b[n].take() {
+                        blackout[n].push((t0, t));
+                    }
+                }
+                "noise" => open_n[n] = open_n[n].or(Some(t)),
+                "quiet" => {
+                    if let Some(t0) = open_n[n].take() {
+                        noise[n].push((t0, t));
+                    }
+                }
+                "fallback" => open_f[n] = open_f[n].or(Some(t)),
+                "probation" | "reengage" => {
+                    if let Some(t0) = open_f[n].take() {
+                        fallback[n].push((t0, t));
+                    }
+                }
+                _ => {}
+            }
+        }
+        for n in 0..nodes {
+            if let Some(t0) = open_b[n] {
+                blackout[n].push((t0, f64::INFINITY));
+            }
+            if let Some(t0) = open_n[n] {
+                noise[n].push((t0, f64::INFINITY));
+            }
+            if let Some(t0) = open_f[n] {
+                fallback[n].push((t0, f64::INFINITY));
+            }
+        }
+        CtlWindows {
+            blackout,
+            noise,
+            fallback,
+        }
+    }
+
+    fn hit(spans: &[(f64, f64)], a: f64, b: f64) -> bool {
+        spans.iter().any(|&(t0, t1)| t0 <= b && a <= t1)
+    }
+
+    /// The control-plane cause owning a violation whose lifecycle window
+    /// `[a, b]` ran on `node`, if any — blackout beats noise beats
+    /// fallback.
+    fn cause_in(&self, node: usize, a: f64, b: f64) -> Option<Cause> {
+        let n = node.min(self.blackout.len() - 1);
+        if CtlWindows::hit(&self.blackout[n], a, b) {
+            Some(Cause::StaleTelemetry)
+        } else if CtlWindows::hit(&self.noise[n], a, b) {
+            Some(Cause::ActuationLag)
+        } else if CtlWindows::hit(&self.fallback[n], a, b) {
+            Some(Cause::SupervisorFallback)
+        } else {
+            None
+        }
+    }
 }
 
 fn last_touched(r: &super::flight::ReqRecord) -> usize {
@@ -413,6 +542,40 @@ mod tests {
         assert_eq!(a.violations[0].node, 1);
         assert_eq!(a.by_cause()[Cause::AdmissionBackoff.idx()], 1);
         assert!(a.render_table().contains("admission-backoff"));
+    }
+
+    #[test]
+    fn ctl_windows_override_generic_clock_causes() {
+        let mut fr = FlightRecorder::with_defaults(2);
+        // Node 0 runs dark for the whole window; node 1 sees actuation
+        // noise early, then an uncleared supervisor fallback from t=4.
+        fr.ctl(0, 0.0, "blackout");
+        fr.ctl(0, 9.0, "sense");
+        fr.ctl(1, 0.0, "noise");
+        fr.ctl(1, 3.0, "quiet");
+        fr.ctl(1, 4.0, "fallback");
+        for (id, node, arrive, finish) in
+            [(1u64, 0usize, 0.0, 2.0), (2, 1, 0.5, 2.5), (3, 1, 5.0, 7.0)]
+        {
+            fr.arrive(node, arrive, id, 100, 8);
+            fr.prefill_start(node, arrive, id, 0);
+            fr.prefill_done(node, arrive + 0.1, id);
+            fr.first_token(node, arrive + 0.1, id);
+            fr.finish(node, finish, id, 0.1, 0.3); // TBT violation only
+        }
+        let a = attribute(&fr, &targets());
+        assert_eq!(a.total(), 3);
+        let causes: Vec<Cause> = a.violations.iter().map(|v| v.cause).collect();
+        assert_eq!(
+            causes,
+            vec![
+                Cause::StaleTelemetry,     // blackout window owns node 0
+                Cause::ActuationLag,       // decode [0.6, 2.5] overlaps noise
+                Cause::SupervisorFallback, // open fallback extends to run end
+            ]
+        );
+        assert_eq!(a.violations[0].node, 0);
+        assert!(a.render_table().contains("stale-telemetry"));
     }
 
     #[test]

@@ -246,6 +246,7 @@ pub struct FlightRecorder {
     admission_retries: BTreeMap<u64, u32>,
     shed: Vec<(f64, u64)>,
     capacity_log: Vec<(f64, usize, &'static str)>,
+    ctl_log: Vec<(f64, usize, &'static str)>,
     series_cap: usize,
 }
 
@@ -260,6 +261,7 @@ impl FlightRecorder {
             admission_retries: BTreeMap::new(),
             shed: Vec::new(),
             capacity_log: Vec::new(),
+            ctl_log: Vec::new(),
             series_cap,
         }
     }
@@ -310,6 +312,14 @@ impl FlightRecorder {
     /// `"join"` — in event order.
     pub fn capacity_log(&self) -> &[(f64, usize, &'static str)] {
         &self.capacity_log
+    }
+
+    /// Control-plane transitions as `(t, node, what)`, where `what` is
+    /// `"noise"`/`"quiet"` (actuation noise), `"blackout"`/`"sense"`
+    /// (telemetry blackout) or `"fallback"`/`"probation"`/`"reengage"`
+    /// (supervisor state machine) — in event order.
+    pub fn ctl_log(&self) -> &[(f64, usize, &'static str)] {
+        &self.ctl_log
     }
 
     /// `(finished, aborted, open)` request counts — the "every arrival
@@ -512,6 +522,11 @@ impl Recorder for FlightRecorder {
         debug_assert!(t.is_finite(), "non-finite capacity-transition time {t}");
         self.capacity_log.push((t, node, what));
     }
+
+    fn ctl(&mut self, node: usize, t: f64, what: &'static str) {
+        debug_assert!(t.is_finite(), "non-finite ctl-transition time {t}");
+        self.ctl_log.push((t, node, what));
+    }
 }
 
 /// A `Copy` handle sharing one [`FlightRecorder`] between the cluster loop
@@ -568,6 +583,9 @@ impl Recorder for SharedRecorder<'_> {
     }
     fn capacity(&mut self, node: usize, t: f64, what: &'static str) {
         self.0.borrow_mut().capacity(node, t, what);
+    }
+    fn ctl(&mut self, node: usize, t: f64, what: &'static str) {
+        self.0.borrow_mut().ctl(node, t, what);
     }
 }
 
@@ -675,10 +693,17 @@ mod tests {
         fr.shed(7.0, 9);
         fr.capacity(1, 5.0, "drain");
         fr.capacity(1, 6.0, "park");
+        fr.ctl(0, 4.0, "blackout");
+        fr.ctl(0, 4.5, "fallback");
+        fr.ctl(0, 8.0, "sense");
         assert_eq!(fr.admission_retries(9), 2);
         assert_eq!(fr.admission_retries(8), 0);
         assert_eq!(fr.shed_requests(), &[(7.0, 9)]);
         assert_eq!(fr.capacity_log(), &[(5.0, 1, "drain"), (6.0, 1, "park")]);
+        assert_eq!(
+            fr.ctl_log(),
+            &[(4.0, 0, "blackout"), (4.5, 0, "fallback"), (8.0, 0, "sense")]
+        );
         // A shed request never reaches a node: no record, and the span
         // invariants stay green.
         assert!(fr.request(9).is_none());

@@ -133,6 +133,12 @@ pub trait Recorder {
     /// (capacity controller).
     #[inline]
     fn capacity(&mut self, _node: usize, _t: f64, _what: &'static str) {}
+    /// A control-plane transition on `node`: `"noise"`/`"quiet"` (actuation
+    /// noise armed/cleared), `"blackout"`/`"sense"` (telemetry blackout
+    /// start/end), `"fallback"`/`"probation"`/`"reengage"` (supervisor
+    /// state machine).
+    #[inline]
+    fn ctl(&mut self, _node: usize, _t: f64, _what: &'static str) {}
 }
 
 /// The default recorder: every hook is a no-op and `ENABLED == false`, so
